@@ -1,0 +1,65 @@
+//! Quickstart: the core API in ~60 lines.
+//!
+//! Builds a ground metric, samples histograms, and compares the exact
+//! optimal transportation distance (network simplex) with the Sinkhorn
+//! distance at several λ — the paper's Definition 1 / Equation (2) pair.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sinkhorn_rs::prelude::*;
+
+fn main() {
+    // Ground metric: Euclidean distances on an 8x8 pixel grid (d = 64).
+    let grid = GridMetric::new(8, 8);
+    let metric = grid.cost_matrix();
+    println!(
+        "ground metric: {}x{} grid -> d = {} (median cost q50 = {:.3})",
+        8,
+        8,
+        metric.dim(),
+        metric.median_cost()
+    );
+
+    // Two random histograms on the simplex.
+    let mut rng = seeded_rng(7);
+    let r = Histogram::sample_uniform(64, &mut rng);
+    let c = Histogram::sample_uniform(64, &mut rng);
+
+    // Exact optimal transportation distance (the EMD baseline).
+    let plan = EmdSolver::new(&metric).solve(&r, &c).expect("solve");
+    println!(
+        "exact EMD: d_M(r,c) = {:.6}   ({} pivots, {} nonzeros in P*, dual gap {:.1e})",
+        plan.cost,
+        plan.stats.pivots,
+        plan.support_size(),
+        plan.dual_violation(&metric),
+    );
+
+    // Sinkhorn distances: smoothed, always >= the exact value, and
+    // converging to it as lambda grows (paper Fig. 3).
+    println!("\n{:>8} {:>12} {:>12} {:>8}", "lambda", "d_M^l(r,c)", "rel gap", "iters");
+    for lambda in [1.0, 3.0, 9.0, 27.0, 81.0] {
+        let engine = SinkhornEngine::new(&metric, lambda);
+        let out = engine.distance(&r, &c);
+        println!(
+            "{lambda:>8.1} {:>12.6} {:>11.1}% {:>8}",
+            out.value,
+            100.0 * (out.value - plan.cost) / plan.cost,
+            out.stats.iterations
+        );
+    }
+
+    // The alpha = 0 extreme: the Independence kernel r^T M c (Property 2).
+    let m2 = grid.squared_cost_matrix();
+    println!(
+        "\nindependence kernel d_{{M^2,0}}(r,c) = r'Mc = {:.6}",
+        independence_distance(&m2, &r, &c)
+    );
+
+    // Classical baselines for scale.
+    for d in ClassicalDistance::ALL {
+        println!("{:>18}: {:.6}", d.name(), d.eval(&r, &c));
+    }
+}

@@ -1,0 +1,46 @@
+//! The paper's §5.3 headline ("several orders of magnitude faster"):
+//! seconds-per-distance for the exact EMD solver vs Sinkhorn on the CPU
+//! vs the batched AOT/XLA runtime, over growing dimension (Figure 4),
+//! followed by the §5.4 empirical-complexity sweep (Figure 5).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example speed_comparison
+//! cargo run --release --example speed_comparison -- --quick
+//! ```
+
+use sinkhorn_rs::exp::{fig4, fig5};
+use sinkhorn_rs::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let artifact_dir = artifacts.join("manifest.json").exists().then_some(artifacts);
+    if artifact_dir.is_none() {
+        eprintln!("note: no artifacts/ — the XLA column will be skipped");
+    }
+
+    // --- Figure 4: wallclock per distance ---
+    let f4 = fig4::Fig4Config {
+        dims: if quick { vec![64, 128] } else { vec![64, 128, 256, 512] },
+        bench: if quick {
+            Bench { warmup: 0, max_samples: 3, budget_secs: 5.0 }
+        } else {
+            Bench { warmup: 1, max_samples: 9, budget_secs: 20.0 }
+        },
+        artifact_dir,
+        ..Default::default()
+    };
+    eprintln!("Figure 4 sweep over d = {:?} ...", f4.dims);
+    let pts = fig4::run(&f4);
+    println!("{}", fig4::render(&pts));
+
+    // --- Figure 5: iterations to converge ---
+    let f5 = fig5::Fig5Config {
+        dims: if quick { vec![64, 128] } else { vec![64, 128, 256, 512] },
+        trials: if quick { 3 } else { 8 },
+        ..Default::default()
+    };
+    eprintln!("Figure 5 sweep over d = {:?} ...", f5.dims);
+    let pts = fig5::run(&f5);
+    println!("{}", fig5::render(&pts));
+}

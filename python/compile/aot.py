@@ -1,0 +1,136 @@
+"""AOT lowering: JAX/Pallas Sinkhorn program -> HLO text artifacts.
+
+Build-time entry point (``make artifacts``). For each shape variant
+(d, n, iters, flavor) this lowers ``model.sinkhorn_batch`` with
+``jax.jit(...).lower(...)`` and converts the StableHLO module to an
+XlaComputation, dumping **HLO text** to ``artifacts/<name>.hlo.txt``.
+
+HLO *text* — not ``lowered.compile()`` nor serialized HloModuleProto — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the Rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Alongside the HLO files it writes ``artifacts/manifest.json`` so the Rust
+runtime can discover variants without any naming convention coupling::
+
+    {"version": 1, "dtype": "f32",
+     "variants": [{"name": ..., "file": ..., "d": ..., "n": ...,
+                   "iters": ..., "flavor": "pallas"|"xla"}, ...]}
+
+Flavors: ``pallas`` routes the inner products through the Layer-1 Pallas
+kernel in interpret mode (the faithful three-layer stack — interpret mode
+lowers the grid to HLO while-loops); ``xla`` emits the same math as plain
+dot ops, which XLA:CPU turns into tight GEMM loops. Both are validated
+against the same oracle; the runtime defaults to ``xla`` for the hot path
+and keeps ``pallas`` for parity checks (see DESIGN.md §1/§8).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default variant grid. d=400 is the 20x20 MNIST grid; powers of two cover
+# the Fig. 4/5 speed sweeps; n is the coordinator's batch-class ladder.
+DEFAULT_DS = (16, 64, 128, 144, 256, 400, 512)
+DEFAULT_NS = (1, 16, 64)
+DEFAULT_ITERS = (20,)
+# Pallas-flavored artifacts are emitted for a small parity subset: interpret
+# mode lowers each grid step as an HLO loop iteration, so big-d pallas
+# artifacts are slow to lower and only needed to prove the layers compose.
+PALLAS_PARITY = ((16, 1), (16, 16), (64, 16))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XLA HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(d: int, n: int, iters: int, flavor: str) -> str:
+    fn = model.make_batch_fn(d, n, iters, use_pallas=(flavor == "pallas"))
+    lowered = jax.jit(fn).lower(*model.example_args(d, n))
+    return to_hlo_text(lowered)
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, so `make` can skip stale-free runs."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--ds", type=int, nargs="*", default=list(DEFAULT_DS))
+    ap.add_argument("--ns", type=int, nargs="*", default=list(DEFAULT_NS))
+    ap.add_argument("--iters", type=int, nargs="*", default=list(DEFAULT_ITERS))
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="skip the pallas-flavor parity artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fingerprint = input_fingerprint()
+    want = {
+        "ds": args.ds, "ns": args.ns, "iters": args.iters,
+        "skip_pallas": args.skip_pallas,
+    }
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fingerprint and old.get("config") == want:
+            print(f"artifacts up to date ({manifest_path}); skipping")
+            return 0
+
+    variants = []
+    jobs = [(d, n, it, "xla") for d in args.ds for n in args.ns
+            for it in args.iters]
+    if not args.skip_pallas:
+        jobs += [(d, n, args.iters[0], "pallas") for (d, n) in PALLAS_PARITY]
+
+    for d, n, iters, flavor in jobs:
+        name = f"sinkhorn_d{d}_n{n}_it{iters}_{flavor}"
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        print(f"lowering {name} ...", flush=True)
+        text = lower_variant(d, n, iters, flavor)
+        with open(path, "w") as f:
+            f.write(text)
+        variants.append({
+            "name": name, "file": fname, "d": d, "n": n, "iters": iters,
+            "flavor": flavor, "bytes": len(text),
+        })
+        print(f"  wrote {len(text)} chars -> {path}")
+
+    with open(manifest_path, "w") as f:
+        json.dump({
+            "version": 1, "dtype": "f32", "fingerprint": fingerprint,
+            "config": want, "variants": variants,
+        }, f, indent=1)
+    print(f"wrote manifest with {len(variants)} variants -> {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

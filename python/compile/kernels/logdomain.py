@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernel for the log-domain (stabilized) Sinkhorn update.
+
+For large λ the dense kernel K = e^{−λM} underflows (f32 past λ·m ≈ 88)
+and Algorithm 1's ratios break down. The standard remedy iterates the
+dual variables f = log u, g = log v with log-sum-exp reductions::
+
+    g_j = log c_j − LSE_i(−λ m_ij + f_i)
+    f_i = log r_i − LSE_j(−λ m_ij + g_j)
+
+This module provides the tiled Pallas primitive for one such half-update:
+``lse_update(a, f, logb) = logb − LSE_rows(a + f)`` where ``a`` is the
+(−λM or −λMᵀ) matrix, ``f`` a (d, n) dual panel and ``logb`` the (d, n)
+log-marginals. The reduction runs over row tiles with the running-max
+streaming form of LSE, so the grid layout matches ``sinkhorn_step``'s and
+the same VMEM budget analysis applies (one (BD, BK) matrix tile + two
+(·, BN) panels resident).
+
+Like every kernel in this repo it executes with ``interpret=True``; the
+oracle is :func:`ref_lse_update` below (kept here because the ref module
+is import-shared with the dense path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sinkhorn_step import pick_block
+
+NEG_INF = -1e30  # safe stand-in for -inf inside f32 kernels
+
+
+def ref_lse_update(a, f, logb):
+    """Oracle: ``logb - logsumexp(a + f[:, None, :] over rows)``.
+
+    a: (d_out, d_in); f: (d_in, n); logb: (d_out, n) -> (d_out, n).
+    """
+    # scores[i, k, j] = a[i, k] + f[k, j]; LSE over k.
+    scores = a[:, :, None] + f[None, :, :]
+    lse = jax.scipy.special.logsumexp(scores, axis=1)
+    return logb - lse
+
+
+def _lse_kernel(a_ref, f_ref, logb_ref, o_ref, m_ref, s_ref, *, nk: int):
+    """Streaming-LSE grid step over the k (reduction) dimension.
+
+    Maintains per-(i, j) running max ``m`` and running scaled sum ``s``:
+    on each k tile, new_max = max(m, max_k(score)), s = s * exp(m - new_max)
+    + sum_k exp(score - new_max). Epilogue: o = logb - (new_max + log s).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    # scores: (bd, bk, bn)
+    scores = a_ref[...][:, :, None] + f_ref[...][None, :, :]
+    tile_max = jnp.max(scores, axis=1)
+    new_max = jnp.maximum(m_ref[...], tile_max)
+    correction = jnp.exp(m_ref[...] - new_max)
+    tile_sum = jnp.sum(jnp.exp(scores - new_max[:, None, :]), axis=1)
+    s_ref[...] = s_ref[...] * correction + tile_sum
+    m_ref[...] = new_max
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = logb_ref[...] - (m_ref[...] + jnp.log(s_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bn", "bk"))
+def lse_update(a, f, logb, bd: int = 0, bn: int = 0, bk: int = 0):
+    """One log-domain half-update as a Pallas kernel.
+
+    a: (d, d) = −λM (or its transpose); f: (d, n) duals;
+    logb: (d, n) log-marginals. Returns (d, n) float32.
+    """
+    d_out, d_in = a.shape
+    _, n = f.shape
+    bd = bd or pick_block(d_out, cap=64)
+    bn = bn or pick_block(n, cap=64)
+    bk = bk or pick_block(d_in, cap=64)
+    nk = d_in // bk
+    grid = (d_out // bd, n // bn, nk)
+    out, _, _ = pl.pallas_call(
+        functools.partial(_lse_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bd, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bd, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bd, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bd, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_out, n), jnp.float32),
+            jax.ShapeDtypeStruct((d_out, n), jnp.float32),  # running max
+            jax.ShapeDtypeStruct((d_out, n), jnp.float32),  # running sum
+        ],
+        interpret=True,
+    )(a, f, logb)
+    return out
+
+
+def sinkhorn_logdomain(m_mat, lam, r, c, *, iters: int, use_pallas: bool = True):
+    """Full log-domain Sinkhorn: returns (distances (n,), f, g).
+
+    Matches the dense path exactly in exact arithmetic but stays finite
+    at any λ. Empty bins (r or c == 0) carry −inf log-marginals and stay
+    inert (their duals remain at the NEG_INF floor).
+    """
+    d = m_mat.shape[0]
+    neg_a = -lam * m_mat
+    log_r = jnp.where(r > 0, jnp.log(jnp.maximum(r, 1e-38)), NEG_INF)
+    log_c = jnp.where(c > 0, jnp.log(jnp.maximum(c, 1e-38)), NEG_INF)
+    update = lse_update if use_pallas else ref_lse_update
+
+    # Mirror ref.sinkhorn_iterate exactly: v0 = 1/d (g0 = −log d), then
+    # alternate u-update / v-update, with a trailing u-update.
+    g = jnp.full_like(c, -jnp.log(jnp.float32(d)))
+    f = jnp.zeros_like(r)
+    for _ in range(int(iters)):
+        f = update(neg_a, g, log_r)
+        g = update(neg_a.T, f, log_c)
+    f = update(neg_a, g, log_r)
+
+    # d = sum_ij m_ij exp(f_i - lam m_ij + g_j) per column.
+    scores = neg_a[None, :, :] if False else None  # (avoid big temp; loop)
+    del scores
+    # Vectorized evaluation: exp(f[:,None,:] ... ) — build (d, d, n) once
+    # at test scale; production read-off happens in the dense artifact.
+    t = f[:, None, :] + neg_a[:, :, None] + g[None, :, :]
+    plan = jnp.exp(t)
+    dist = jnp.sum(plan * m_mat[:, :, None], axis=(0, 1))
+    return dist, f, g

@@ -1,0 +1,166 @@
+"""Layer-1 Pallas kernels for the Sinkhorn-Knopp hot loop.
+
+The per-iteration cost of Algorithm 1 (Cuturi, 2013) is entirely in two
+matrix products against the kernel matrix ``K = exp(-lam*M)``::
+
+    u = r / (K  v)
+    v = c / (K^T u)
+
+Both are instances of one primitive, ``scaled_ratio(a, x, b) = b / (a @ x)``,
+which this module implements as a tiled Pallas kernel, plus a fused
+``weighted_colsum(km, u, v) = sum(u * (km @ v), axis=0)`` used once at the
+end to read off the distances.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper targets 2013-era
+GPGPU vectorization; on TPU the natural formulation is a GEMM on the MXU.
+``a`` is tiled into (BD, BK) VMEM blocks, ``x``/``b`` into (BK, BN)/(BD, BN)
+panels; the grid is (rows, batch, reduction) with the reduction innermost so
+each output tile is accumulated in-place in VMEM and divided into ``b`` on
+the final reduction step — i.e. the elementwise ratio is *fused* into the
+matmul epilogue and never round-trips to HBM.
+
+Kernels are executed with ``interpret=True`` everywhere in this repo: the
+CPU PJRT plugin cannot run Mosaic custom-calls, so interpret mode is both
+the correctness path (pytest vs ``ref.py``) and what ``aot.py`` lowers into
+the artifacts. Real-TPU perf is estimated from the BlockSpec VMEM/MXU
+figures in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block-shape policy. 128 matches the MXU systolic-array edge; fall back to
+# smaller powers of two (still lane-aligned) for small or odd dimensions.
+_CANDIDATE_BLOCKS = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_block(dim: int, cap: int = 256) -> int:
+    """Largest candidate block size that divides ``dim`` (and is <= cap)."""
+    for b in _CANDIDATE_BLOCKS:
+        if b <= cap and dim % b == 0:
+            return b
+    return 1
+
+
+def _scaled_ratio_kernel(a_ref, x_ref, b_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step of ``o = b / (a @ x)``.
+
+    o_ref accumulates the partial dot products across the k (reduction)
+    dimension; on the last k step it is replaced by ``b / acc`` (guarded
+    against zero denominators so empty histogram bins stay inert).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        den = o_ref[...]
+        safe = jnp.where(den > 0.0, den, 1.0)
+        o_ref[...] = jnp.where(den > 0.0, b_ref[...] / safe, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bn", "bk"))
+def scaled_ratio(a, x, b, bd: int = 0, bn: int = 0, bk: int = 0):
+    """``b / (a @ x)`` as a Pallas kernel.
+
+    a: (d, d), x: (d, n), b: (d, n) -> (d, n) float32.
+
+    Block sizes default to the largest MXU-friendly divisors of (d, n, d).
+    """
+    d, d2 = a.shape
+    _, n = x.shape
+    bd = bd or pick_block(d)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(d2)
+    nk = d2 // bk
+    grid = (d // bd, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_scaled_ratio_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bd, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, n), jnp.float32),
+        interpret=True,
+    )(a, x, b)
+
+
+def _weighted_colsum_kernel(km_ref, u_ref, v_ref, o_ref, *, nk: int, nd: int):
+    """One (j, i, k) grid step of ``o_j = sum_i u_ij * (km @ v)_ij``.
+
+    Grid order puts the batch dimension outermost so each (1, BN) output
+    tile stays resident while the (i, k) reduction sweeps the matrix.
+    """
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(km_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.sum(u_ref[...] * part, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bn", "bk"))
+def weighted_colsum(km, u, v, bd: int = 0, bn: int = 0, bk: int = 0):
+    """``sum(u * (km @ v), axis=0)`` -> (1, n), the distance read-off.
+
+    km: (d, d) elementwise product K * M; u, v: (d, n).
+    """
+    d, d2 = km.shape
+    _, n = u.shape
+    bd = bd or pick_block(d)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(d2)
+    nk = d2 // bk
+    nd = d // bd
+    grid = (n // bn, nd, nk)
+    return pl.pallas_call(
+        functools.partial(_weighted_colsum_kernel, nk=nk, nd=nd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bk), lambda j, i, k: (i, k)),
+            pl.BlockSpec((bd, bn), lambda j, i, k: (i, j)),
+            pl.BlockSpec((bk, bn), lambda j, i, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, i, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=True,
+    )(km, u, v)
+
+
+def sinkhorn_step(k_mat, kt_mat, r, c, v):
+    """One full Sinkhorn-Knopp iteration built from the L1 primitive.
+
+    Returns (u, v_new). ``kt_mat`` is K^T, precomputed by the caller so the
+    transpose is materialized once per problem rather than once per step.
+    """
+    u = scaled_ratio(k_mat, v, r)
+    v_new = scaled_ratio(kt_mat, u, c)
+    return u, v_new
+
+
+def vmem_bytes(bd: int, bn: int, bk: int, bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one scaled_ratio grid step.
+
+    a-tile (bd, bk) + x-panel (bk, bn) + b/out panels (bd, bn) each,
+    double-buffered inputs (x2) as the Mosaic pipeliner would.
+    """
+    tiles = 2 * (bd * bk + bk * bn) + 2 * (bd * bn)
+    return tiles * bytes_per_el

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

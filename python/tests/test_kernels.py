@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-power-of-two dims that force
+1-wide blocks) and value scales; every case must match ``ref.py`` to
+float32 tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import sinkhorn_step as kern
+
+
+def _rand(rng, shape, scale):
+    return jnp.asarray(np.abs(rng.normal(size=shape)) * scale + 1e-6, jnp.float32)
+
+
+dims = st.sampled_from([1, 2, 3, 4, 7, 8, 12, 16, 20, 32, 48, 64, 100, 128])
+batches = st.sampled_from([1, 2, 3, 5, 8, 16, 32])
+scales = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+@settings(max_examples=40, deadline=None)
+@given(d=dims, n=batches, scale=scales, seed=st.integers(0, 2**31 - 1))
+def test_scaled_ratio_matches_ref(d, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (d, d), scale)
+    x = _rand(rng, (d, n), scale)
+    b = _rand(rng, (d, n), scale)
+    got = kern.scaled_ratio(a, x, b)
+    want = ref.scaled_ratio(a, x, b)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-30)
+
+
+@settings(max_examples=40, deadline=None)
+@given(d=dims, n=batches, scale=scales, seed=st.integers(0, 2**31 - 1))
+def test_weighted_colsum_matches_ref(d, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    km = _rand(rng, (d, d), scale)
+    u = _rand(rng, (d, n), 1.0)
+    v = _rand(rng, (d, n), 1.0)
+    got = kern.weighted_colsum(km, u, v)
+    want = jnp.sum(u * (km @ v), axis=0, keepdims=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-25)
+
+
+@pytest.mark.parametrize("d,bd,bk", [(32, 8, 16), (32, 32, 8), (64, 16, 64)])
+def test_explicit_block_shapes(d, bd, bk):
+    """Non-default BlockSpecs produce identical results (tiling is sound)."""
+    rng = np.random.default_rng(0)
+    a = _rand(rng, (d, d), 1.0)
+    x = _rand(rng, (d, 4), 1.0)
+    b = _rand(rng, (d, 4), 1.0)
+    got = kern.scaled_ratio(a, x, b, bd=bd, bn=4, bk=bk)
+    want = ref.scaled_ratio(a, x, b)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_zero_denominator_rows_are_inert():
+    """Rows whose K v product is exactly 0 must give 0, not inf/nan."""
+    d, n = 8, 3
+    a = jnp.zeros((d, d), jnp.float32)
+    x = jnp.ones((d, n), jnp.float32)
+    b = jnp.ones((d, n), jnp.float32)
+    got = kern.scaled_ratio(a, x, b)
+    assert np.all(np.isfinite(np.asarray(got)))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((d, n)))
+
+
+def test_sinkhorn_step_composes():
+    """The composed step matches one ref iteration end to end."""
+    rng = np.random.default_rng(7)
+    d, n = 24, 5
+    k_mat = _rand(rng, (d, d), 1.0)
+    r = _rand(rng, (d, n), 1.0)
+    c = _rand(rng, (d, n), 1.0)
+    v = _rand(rng, (d, n), 1.0)
+    u, v_new = kern.sinkhorn_step(k_mat, k_mat.T, r, c, v)
+    u_want = ref.scaled_ratio(k_mat, v, r)
+    v_want = ref.scaled_ratio(k_mat.T, u_want, c)
+    np.testing.assert_allclose(u, u_want, rtol=2e-5)
+    np.testing.assert_allclose(v_new, v_want, rtol=2e-5)
+
+
+def test_pick_block_divides():
+    for dim in [1, 2, 5, 16, 20, 100, 400, 512, 1000]:
+        b = kern.pick_block(dim)
+        assert dim % b == 0
+        assert b >= 1
+
+
+def test_vmem_budget_at_serving_shapes():
+    """Default blocks at the largest artifact shape fit a 16 MiB VMEM."""
+    d, n = 4096, 64
+    bd = kern.pick_block(d)
+    bn = kern.pick_block(n)
+    bk = kern.pick_block(d)
+    assert kern.vmem_bytes(bd, bn, bk) <= 16 * 1024 * 1024

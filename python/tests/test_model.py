@@ -1,0 +1,121 @@
+"""L2 correctness: the batched Sinkhorn model vs oracle + OT theory.
+
+Checks both flavors (pallas / xla) of the lowered program against the
+slow per-pair reference, plus the structural properties the paper proves:
+fixed-point marginals, symmetry, monotone convergence toward the exact
+transportation cost, and the independence-table limit as lam -> 0.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _hists(rng, d, n):
+    h = rng.gamma(1.0, 1.0, size=(d, n)).astype(np.float32) + 1e-6
+    return jnp.asarray(h / h.sum(axis=0, keepdims=True))
+
+
+def _metric(rng, d):
+    pts = rng.normal(size=(d, max(2, d // 10)))
+    m = np.linalg.norm(pts[:, None, :] - pts[None, :, :], axis=-1)
+    m /= np.median(m[m > 0])
+    return jnp.asarray(m, jnp.float32)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("d,n", [(16, 1), (16, 4), (32, 8)])
+def test_batch_matches_ref(d, n, use_pallas):
+    rng = np.random.default_rng(d * 1000 + n)
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, n), _hists(rng, d, n)
+    lam = jnp.float32(5.0)
+    got, err = model.sinkhorn_batch(m, lam, r, c, iters=50, use_pallas=use_pallas)
+    want, _ = ref.sinkhorn_distance(m, lam, r, c, 50)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    assert float(err) < 1e-3
+
+
+def test_batch_equals_per_pair():
+    """Batched solve == N independent single-pair solves (no cross-talk)."""
+    rng = np.random.default_rng(3)
+    d, n = 20, 6
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, n), _hists(rng, d, n)
+    lam = jnp.float32(8.0)
+    batched, _ = model.sinkhorn_batch(m, lam, r, c, iters=40, use_pallas=False)
+    for j in range(n):
+        single, _ = model.sinkhorn_batch(
+            m, lam, r[:, j:j + 1], c[:, j:j + 1], iters=40, use_pallas=False)
+        np.testing.assert_allclose(batched[j], single[0], rtol=1e-5)
+
+
+def test_fixed_point_marginals():
+    """After enough iterations diag(u) K diag(v) has marginals (r, c)."""
+    rng = np.random.default_rng(11)
+    d = 24
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, 1), _hists(rng, d, 1)
+    plan, _ = model.sinkhorn_plan(m, jnp.float32(6.0), r, c, iters=500)
+    np.testing.assert_allclose(plan.sum(axis=1), r[:, 0], atol=1e-5)
+    np.testing.assert_allclose(plan.sum(axis=0), c[:, 0], atol=1e-5)
+    assert np.all(np.asarray(plan) >= 0)
+
+
+def test_symmetry():
+    """d_M^lam(r, c) == d_M^lam(c, r) for symmetric M (Theorem 1)."""
+    rng = np.random.default_rng(5)
+    d = 16
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, 1), _hists(rng, d, 1)
+    lam = jnp.float32(7.0)
+    a, _ = model.sinkhorn_batch(m, lam, r, c, iters=300, use_pallas=False)
+    b, _ = model.sinkhorn_batch(m, lam, c, r, iters=300, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_monotone_in_lambda(seed):
+    """d_M^lam decreases (toward d_M) as lam grows — Fig. 3's premise."""
+    rng = np.random.default_rng(seed)
+    d = 12
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, 1), _hists(rng, d, 1)
+    prev = None
+    for lam in [1.0, 3.0, 9.0, 27.0]:
+        val, _ = model.sinkhorn_batch(
+            m, jnp.float32(lam), r, c, iters=800, use_pallas=False)
+        v = float(val[0])
+        if prev is not None:
+            assert v <= prev + 1e-5
+        prev = v
+
+
+def test_independence_limit():
+    """As lam -> 0, the plan tends to r c^T and the cost to r^T M c
+    (Property 2: the Independence kernel)."""
+    rng = np.random.default_rng(9)
+    d = 14
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, 1), _hists(rng, d, 1)
+    val, _ = model.sinkhorn_batch(
+        m, jnp.float32(1e-4), r, c, iters=200, use_pallas=False)
+    indep = float(r[:, 0] @ m @ c[:, 0])
+    np.testing.assert_allclose(float(val[0]), indep, rtol=1e-3)
+
+
+def test_plan_cost_equals_distance():
+    rng = np.random.default_rng(2)
+    d = 18
+    m = _metric(rng, d)
+    r, c = _hists(rng, d, 1), _hists(rng, d, 1)
+    lam = jnp.float32(5.0)
+    plan, dist = model.sinkhorn_plan(m, lam, r, c, iters=200)
+    val, _ = model.sinkhorn_batch(m, lam, r, c, iters=200, use_pallas=False)
+    np.testing.assert_allclose(float(dist), float(val[0]), rtol=1e-4)
+    np.testing.assert_allclose(float(jnp.sum(plan * m)), float(dist), rtol=1e-6)

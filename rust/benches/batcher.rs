@@ -1,0 +1,138 @@
+//! Coordinator micro-benchmarks: the cost of the batching layer itself.
+//!
+//! * `push/flush` throughput of the pure PendingBatcher (no threads);
+//! * end-to-end service overhead per query on the CPU backend (tiny d so
+//!   solve time is negligible and the plumbing dominates);
+//! * service throughput vs batch width on the XLA backend (the Fig. 4
+//!   "GPU" column, serving-shaped) — the batching ablation.
+//!
+//! Run via `cargo bench --bench batcher`.
+
+use sinkhorn_rs::coordinator::{
+    BatcherConfig, CoordinatorConfig, DistanceService, MetricId, PendingBatcher,
+    Query, ShapeClass,
+};
+use sinkhorn_rs::metric::RandomMetric;
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::util::bench::Bench;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let bench = Bench::default();
+
+    // --- pure batcher data structure ---
+    let t = bench.report("batcher_push_pop_1k", "classes=4 max_batch=64", || {
+        let mut b: PendingBatcher<u64> = PendingBatcher::new(BatcherConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(1),
+        });
+        let now = Instant::now();
+        let mut flushed = 0usize;
+        for i in 0..1000u64 {
+            let class = ShapeClass::new(MetricId((i % 4) as u32), 64, 9.0);
+            if let Some(ready) = b.push(class, i, now) {
+                flushed += ready.items.len();
+            }
+        }
+        flushed += b.drain(now).into_iter().map(|r| r.items.len()).sum::<usize>();
+        assert_eq!(flushed, 1000);
+        flushed
+    });
+    println!("  -> {:.0} ns per enqueue+flush", t.median_ns / 1000.0);
+
+    // --- service overhead per query (CPU backend, trivial work) ---
+    let svc = DistanceService::start(CoordinatorConfig {
+        artifact_dir: None,
+        batcher: BatcherConfig { max_batch: 32, max_delay: Duration::from_micros(200) },
+        cpu_iterations: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = seeded_rng(0);
+    let d = 8;
+    svc.register_metric(MetricId(0), RandomMetric::new(d).sample(&mut rng)).unwrap();
+    let queries: Vec<(Histogram, Histogram)> = (0..256)
+        .map(|_| {
+            (
+                Histogram::sample_uniform(d, &mut rng),
+                Histogram::sample_uniform(d, &mut rng),
+            )
+        })
+        .collect();
+    let t = bench.report("service_roundtrip_256", "cpu d=8 iters=1", || {
+        let rxs: Vec<_> = queries
+            .iter()
+            .map(|(r, c)| {
+                svc.submit(Query {
+                    metric: MetricId(0),
+                    lambda: 9.0,
+                    r: r.clone(),
+                    c: c.clone(),
+                })
+                .unwrap()
+            })
+            .collect();
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().distance).sum::<f64>()
+    });
+    println!("  -> {:.1} us per query (submit->response, incl. batching)", t.median_us() / 256.0);
+    svc.shutdown();
+
+    // --- batching ablation on the XLA backend ---
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let d = 64;
+        let mut rng = seeded_rng(1);
+        let metric = RandomMetric::new(d).sample(&mut rng);
+        let queries: Vec<(Histogram, Histogram)> = (0..64)
+            .map(|_| {
+                (
+                    Histogram::sample_uniform(d, &mut rng),
+                    Histogram::sample_uniform(d, &mut rng),
+                )
+            })
+            .collect();
+        for &max_batch in &[1usize, 4, 16, 64] {
+            let svc = DistanceService::start(CoordinatorConfig {
+                artifact_dir: Some(artifacts.clone()),
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_delay: Duration::from_millis(1),
+                },
+                ..Default::default()
+            })
+            .unwrap();
+            svc.register_metric(MetricId(0), metric.clone()).unwrap();
+            svc.warmup().unwrap();
+            let quick = Bench { warmup: 1, max_samples: 7, budget_secs: 20.0 };
+            let t = quick.report(
+                "service_xla_64queries",
+                &format!("d=64 max_batch={max_batch}"),
+                || {
+                    let rxs: Vec<_> = queries
+                        .iter()
+                        .map(|(r, c)| {
+                            svc.submit(Query {
+                                metric: MetricId(0),
+                                lambda: 9.0,
+                                r: r.clone(),
+                                c: c.clone(),
+                            })
+                            .unwrap()
+                        })
+                        .collect();
+                    rxs.into_iter()
+                        .map(|rx| rx.recv().unwrap().unwrap().distance)
+                        .sum::<f64>()
+                },
+            );
+            println!(
+                "  -> max_batch={max_batch}: {:.2} ms per 64 queries ({:.0} q/s)",
+                t.median_ms(),
+                64.0 / (t.median_ns / 1e9)
+            );
+            svc.shutdown();
+        }
+    } else {
+        eprintln!("no artifacts/: skipping the XLA ablation");
+    }
+}

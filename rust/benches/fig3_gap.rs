@@ -1,0 +1,32 @@
+//! Bench/reproduction driver for Figure 3: the relative gap
+//! (d_M^λ − d_M)/d_M between the Sinkhorn distance and the exact EMD,
+//! as a boxplot series over λ, plus the wallclock of both solvers on the
+//! digits workload.
+//!
+//! Run via `cargo bench --bench fig3_gap` (accepts BENCH_QUICK=1).
+
+use sinkhorn_rs::exp::fig3;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let config = fig3::Fig3Config {
+        grid: if quick { 8 } else { 12 },
+        pairs: if quick { 8 } else { 36 },
+        ..Default::default()
+    };
+    eprintln!(
+        "fig3_gap: grid={} (d={}), {} digit pairs, lambdas={:?}",
+        config.grid,
+        config.grid * config.grid,
+        config.pairs,
+        config.lambdas
+    );
+    let t0 = std::time::Instant::now();
+    let points = fig3::run(&config);
+    println!("{}", fig3::render(&points));
+    // Shape assertions (the figure's qualitative content).
+    assert!(points.windows(2).all(|w| w[1].gaps.median <= w[0].gaps.median + 1e-9),
+        "median gap must decrease with lambda");
+    assert!(points.iter().all(|p| p.gaps.min > -1e-9), "gap must be >= 0");
+    println!("fig3_gap total {:.1}s", t0.elapsed().as_secs_f64());
+}

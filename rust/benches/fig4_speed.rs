@@ -1,0 +1,57 @@
+//! Bench/reproduction driver for Figure 4: average computational time per
+//! distance vs dimension — exact EMD (network simplex) vs Sinkhorn CPU
+//! (λ = 1, 9) vs Sinkhorn on the batched XLA/PJRT runtime.
+//!
+//! Run via `cargo bench --bench fig4_speed` (BENCH_QUICK=1 shrinks dims;
+//! BENCH_FULL=1 extends to d=1024 like the paper's long tail).
+
+use sinkhorn_rs::exp::fig4;
+use sinkhorn_rs::util::bench::Bench;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let config = fig4::Fig4Config {
+        dims: if quick {
+            vec![32, 64, 128]
+        } else if full {
+            vec![64, 128, 256, 512, 1024]
+        } else {
+            vec![64, 128, 256, 512]
+        },
+        artifact_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
+        bench: if quick {
+            Bench { warmup: 0, max_samples: 3, budget_secs: 5.0 }
+        } else {
+            Bench { warmup: 1, max_samples: 9, budget_secs: 30.0 }
+        },
+        ..Default::default()
+    };
+    eprintln!("fig4_speed: dims={:?}", config.dims);
+    let t0 = std::time::Instant::now();
+    let points = fig4::run(&config);
+    println!("{}", fig4::render(&points));
+
+    // Shape assertion: Sinkhorn (lambda=9) beats exact EMD at every
+    // measured dimension, by a factor that grows with d.
+    let mut last_ratio = 0.0;
+    for &d in &config.dims {
+        let emd = points
+            .iter()
+            .find(|p| p.solver == "emd" && p.d == d && !p.over_cap)
+            .map(|p| p.seconds_per_distance);
+        let sk = points
+            .iter()
+            .find(|p| p.solver.starts_with("sinkhorn_cpu l=9") && p.d == d)
+            .map(|p| p.seconds_per_distance);
+        if let (Some(emd), Some(sk)) = (emd, sk) {
+            let ratio = emd / sk;
+            println!("d={d}: emd/sinkhorn(l=9) speed ratio = {ratio:.0}x");
+            assert!(ratio > 1.0, "sinkhorn must win at d={d}");
+            last_ratio = ratio;
+        }
+    }
+    assert!(last_ratio > 10.0, "expected >10x at the largest dim");
+    println!("fig4_speed total {:.1}s", t0.elapsed().as_secs_f64());
+}

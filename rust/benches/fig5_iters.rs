@@ -1,0 +1,42 @@
+//! Bench/reproduction driver for Figure 5: the number of Sinkhorn-Knopp
+//! iterations needed to reach ‖x − x'‖₂ ≤ 0.01, vs dimension, for a grid
+//! of λ — the paper's evidence that e^{−λM} diagonal dominance slows the
+//! fixed point and that a fixed iteration budget is the right call on
+//! parallel hardware.
+//!
+//! Run via `cargo bench --bench fig5_iters` (BENCH_QUICK=1 shrinks).
+
+use sinkhorn_rs::exp::fig5;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let config = fig5::Fig5Config {
+        dims: if quick { vec![32, 64] } else { vec![64, 128, 256, 512] },
+        trials: if quick { 3 } else { 8 },
+        ..Default::default()
+    };
+    eprintln!("fig5_iters: dims={:?} lambdas={:?}", config.dims, config.lambdas);
+    let t0 = std::time::Instant::now();
+    let points = fig5::run(&config);
+    println!("{}", fig5::render(&points));
+
+    // Shape: iterations grow monotonically with lambda at every d.
+    for &d in &config.dims {
+        let series: Vec<f64> = config
+            .lambdas
+            .iter()
+            .map(|&l| {
+                points
+                    .iter()
+                    .find(|p| p.d == d && (p.lambda - l).abs() < 1e-12)
+                    .unwrap()
+                    .mean_iterations
+            })
+            .collect();
+        assert!(
+            series.windows(2).all(|w| w[0] <= w[1] + 1e-9),
+            "iterations not monotone in lambda at d={d}: {series:?}"
+        );
+    }
+    println!("fig5_iters total {:.1}s", t0.elapsed().as_secs_f64());
+}

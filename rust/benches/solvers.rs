@@ -1,0 +1,106 @@
+//! Solver micro-benchmarks: the building blocks underneath the figures.
+//!
+//! * network simplex wallclock and pivot counts vs d;
+//! * Sinkhorn CPU per-iteration cost vs d (dense) and the log-domain
+//!   stabilized path's overhead factor;
+//! * independence-kernel fast path vs direct O(d²) evaluation;
+//! * the synthetic-digit renderer throughput.
+//!
+//! Run via `cargo bench --bench solvers`.
+
+use sinkhorn_rs::data::{DigitClass, DigitConfig, SyntheticDigits};
+use sinkhorn_rs::metric::{GridMetric, RandomMetric};
+use sinkhorn_rs::ot::EmdSolver;
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::{
+    independence_distance, IndependenceKernel, SinkhornConfig, SinkhornEngine,
+};
+use sinkhorn_rs::util::bench::Bench;
+
+fn main() {
+    let bench = Bench { warmup: 1, max_samples: 9, budget_secs: 15.0 };
+
+    // --- network simplex scaling ---
+    for &d in &[32usize, 64, 128, 256] {
+        let mut rng = seeded_rng(d as u64);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let solver = EmdSolver::new(&m);
+        let plan = solver.solve(&r, &c).unwrap();
+        bench.report(
+            "network_simplex",
+            &format!("d={d} pivots={} priced={}", plan.stats.pivots, plan.stats.arcs_priced),
+            || solver.solve(&r, &c).unwrap().cost,
+        );
+    }
+
+    // --- Sinkhorn per-iteration cost (fixed 20 iterations) ---
+    for &d in &[64usize, 256, 512] {
+        let mut rng = seeded_rng(d as u64 + 1);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let engine = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 20));
+        let t = bench.report("sinkhorn_cpu_20it", &format!("d={d}"), || {
+            engine.distance(&r, &c).value
+        });
+        println!(
+            "  -> {:.2} us per iteration (2 matvecs of d={d})",
+            t.median_us() / 20.0
+        );
+    }
+
+    // --- log-domain overhead factor ---
+    {
+        let d = 128;
+        let mut rng = seeded_rng(99);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let cfg = SinkhornConfig::fixed(9.0, 20);
+        let dense = SinkhornEngine::with_config(&m, cfg);
+        let td = bench.report("sinkhorn_dense", "d=128 20it", || dense.distance(&r, &c).value);
+        let tl = bench.report("sinkhorn_logdomain", "d=128 20it", || {
+            sinkhorn_rs::sinkhorn::log_domain::solve(
+                m.data(), d, 9.0, &cfg, r.values(), c.values(),
+            )
+            .value
+        });
+        println!(
+            "  -> log-domain costs {:.1}x the dense path (stability premium)",
+            tl.median_ns / td.median_ns
+        );
+    }
+
+    // --- independence kernel: direct vs Cholesky-prepared ---
+    {
+        let g = GridMetric::new(20, 20);
+        let m2 = g.squared_cost_matrix();
+        let kernel = IndependenceKernel::new(&m2).expect("EDM");
+        let mut rng = seeded_rng(5);
+        let r = Histogram::sample_uniform(400, &mut rng);
+        let c = Histogram::sample_uniform(400, &mut rng);
+        let td = bench.report("independence_direct", "d=400", || {
+            independence_distance(&m2, &r, &c)
+        });
+        let pr = kernel.prepare(&r);
+        let pc = kernel.prepare(&c);
+        let tf = bench.report("independence_prepared", "d=400", || {
+            kernel.distance(&pr, &pc)
+        });
+        println!(
+            "  -> appendix-remark speedup: {:.0}x after preprocessing",
+            td.median_ns / tf.median_ns
+        );
+    }
+
+    // --- digit rendering throughput ---
+    {
+        let gen = SyntheticDigits::new(DigitConfig::default());
+        let mut rng = seeded_rng(8);
+        bench.report("digit_render_20x20", "", || {
+            gen.sample(DigitClass(7), &mut rng).histogram.dim()
+        });
+    }
+}

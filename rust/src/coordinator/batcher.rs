@@ -1,0 +1,291 @@
+//! Dynamic batching queues — pure logic, no threads.
+//!
+//! Queries are grouped by [`ShapeClass`] (metric id, dimension, quantized
+//! λ): only queries sharing a class can share one vectorized execution,
+//! because the artifact signature fixes (d) and the kernel matrix
+//! K = e^{−λM} must be identical across the batch. A class flushes when
+//!
+//! * it reaches `max_batch` queued entries (size trigger), or
+//! * its oldest entry has waited `max_delay` (deadline trigger), or
+//! * the caller forces a drain (shutdown).
+//!
+//! The struct is deliberately thread-free so its invariants (no query
+//! dropped, duplicated or cross-class mixed; FIFO within a class) are
+//! directly property-testable.
+
+use super::MetricId;
+use crate::F;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batching parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Flush a class once this many queries are queued. Should match the
+    /// widest artifact batch width for the served dimension.
+    pub max_batch: usize,
+    /// Deadline: flush the class when its oldest query has waited this
+    /// long, even if the batch is not full.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// The routing key: queries in different classes never share a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    pub metric: MetricId,
+    pub d: usize,
+    /// λ quantized to its bit pattern (exact-match routing).
+    lambda_bits: u64,
+}
+
+impl ShapeClass {
+    pub fn new(metric: MetricId, d: usize, lambda: F) -> Self {
+        Self { metric, d, lambda_bits: lambda.to_bits() }
+    }
+
+    pub fn lambda(&self) -> F {
+        F::from_bits(self.lambda_bits)
+    }
+}
+
+/// One queued entry (generic payload so tests can use plain ints).
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+/// A batch ready for execution.
+#[derive(Debug)]
+pub struct ReadyBatch<T> {
+    pub class: ShapeClass,
+    pub items: Vec<T>,
+    /// Queue latency of the oldest member at flush time.
+    pub oldest_wait: Duration,
+}
+
+/// Per-class pending queues with size/deadline flush triggers.
+#[derive(Debug)]
+pub struct PendingBatcher<T> {
+    config: BatcherConfig,
+    queues: HashMap<ShapeClass, Vec<Entry<T>>>,
+    len: usize,
+}
+
+impl<T> PendingBatcher<T> {
+    pub fn new(config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= 1, "max_batch must be at least 1");
+        Self { config, queues: HashMap::new(), len: 0 }
+    }
+
+    /// Total queries currently queued across classes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of distinct classes with queued work.
+    pub fn class_count(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Enqueue one item; returns a full batch if the class hit the size
+    /// trigger.
+    pub fn push(&mut self, class: ShapeClass, item: T, now: Instant) -> Option<ReadyBatch<T>> {
+        let queue = self.queues.entry(class).or_default();
+        queue.push(Entry { item, enqueued: now });
+        self.len += 1;
+        if queue.len() >= self.config.max_batch {
+            return self.take(class, now);
+        }
+        None
+    }
+
+    /// Remove and return the batch for one class (None if empty).
+    fn take(&mut self, class: ShapeClass, now: Instant) -> Option<ReadyBatch<T>> {
+        let entries = self.queues.remove(&class)?;
+        if entries.is_empty() {
+            return None;
+        }
+        self.len -= entries.len();
+        let oldest = entries.iter().map(|e| e.enqueued).min().unwrap();
+        Some(ReadyBatch {
+            class,
+            items: entries.into_iter().map(|e| e.item).collect(),
+            oldest_wait: now.saturating_duration_since(oldest),
+        })
+    }
+
+    /// Flush every class whose oldest entry has exceeded the deadline.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<ReadyBatch<T>> {
+        let expired: Vec<ShapeClass> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .map(|e| now.saturating_duration_since(e.enqueued) >= self.config.max_delay)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|k| self.take(k, now))
+            .collect()
+    }
+
+    /// When the next deadline fires (None when idle). The service thread
+    /// uses this as its recv timeout.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|e| e.enqueued + self.config.max_delay)
+            .min()
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self, now: Instant) -> Vec<ReadyBatch<T>> {
+        let keys: Vec<ShapeClass> = self.queues.keys().copied().collect();
+        keys.into_iter().filter_map(|k| self.take(k, now)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::seeded_rng;
+
+    fn class(m: u32, d: usize, lam: F) -> ShapeClass {
+        ShapeClass::new(MetricId(m), d, lam)
+    }
+
+    fn cfg(max_batch: usize, ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_delay: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn size_trigger_flushes_exactly_full_batch() {
+        let mut b = PendingBatcher::new(cfg(3, 1000));
+        let t = Instant::now();
+        assert!(b.push(class(0, 16, 9.0), 1, t).is_none());
+        assert!(b.push(class(0, 16, 9.0), 2, t).is_none());
+        let ready = b.push(class(0, 16, 9.0), 3, t).expect("third fills");
+        assert_eq!(ready.items, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn classes_do_not_mix() {
+        let mut b = PendingBatcher::new(cfg(2, 1000));
+        let t = Instant::now();
+        assert!(b.push(class(0, 16, 9.0), 1, t).is_none());
+        assert!(b.push(class(0, 16, 1.0), 10, t).is_none()); // different λ
+        assert!(b.push(class(1, 16, 9.0), 20, t).is_none()); // different metric
+        assert!(b.push(class(0, 32, 9.0), 30, t).is_none()); // different d
+        assert_eq!(b.class_count(), 4);
+        let ready = b.push(class(0, 16, 9.0), 2, t).unwrap();
+        assert_eq!(ready.items, vec![1, 2]);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b = PendingBatcher::new(cfg(100, 5));
+        let t0 = Instant::now();
+        b.push(class(0, 16, 9.0), 1, t0);
+        b.push(class(0, 16, 1.0), 2, t0 + Duration::from_millis(3));
+        // At +4ms nothing has expired.
+        assert!(b.poll_expired(t0 + Duration::from_millis(4)).is_empty());
+        // At +6ms only the first class expired.
+        let ready = b.poll_expired(t0 + Duration::from_millis(6));
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].items, vec![1]);
+        assert!(ready[0].oldest_wait >= Duration::from_millis(5));
+        // At +9ms the second follows.
+        let ready = b.poll_expired(t0 + Duration::from_millis(9));
+        assert_eq!(ready[0].items, vec![2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn next_deadline_is_min_over_classes() {
+        let mut b = PendingBatcher::new(cfg(100, 10));
+        let t0 = Instant::now();
+        assert_eq!(b.next_deadline(), None);
+        b.push(class(0, 16, 1.0), 1, t0 + Duration::from_millis(5));
+        b.push(class(0, 16, 2.0), 2, t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn drain_returns_everything_once() {
+        let mut b = PendingBatcher::new(cfg(100, 1000));
+        let t = Instant::now();
+        for i in 0..10 {
+            b.push(class(i % 3, 16, 9.0), i, t);
+        }
+        let drained = b.drain(t);
+        let total: usize = drained.iter().map(|r| r.items.len()).sum();
+        assert_eq!(total, 10);
+        assert!(b.is_empty());
+        assert!(b.drain(t).is_empty());
+    }
+
+    /// Property sweep: random interleavings never drop, duplicate or
+    /// reorder items within a class.
+    #[test]
+    fn prop_conservation_and_fifo() {
+        for seed in 0..80u64 {
+            let mut rng = seeded_rng(seed);
+            let max_batch = rng.range_usize(1, 8);
+            let mut b: PendingBatcher<(u32, usize)> =
+                PendingBatcher::new(cfg(max_batch, 3));
+            let t0 = Instant::now();
+            let n_ops = rng.range_usize(1, 120);
+            let mut sent: HashMap<u32, Vec<usize>> = HashMap::new();
+            let mut received: HashMap<u32, Vec<usize>> = HashMap::new();
+            let collect = |ready: Vec<ReadyBatch<(u32, usize)>>,
+                               received: &mut HashMap<u32, Vec<usize>>| {
+                for batch in ready {
+                    assert!(batch.items.len() <= max_batch);
+                    for (cls, seq) in batch.items {
+                        received.entry(cls).or_default().push(seq);
+                    }
+                }
+            };
+            let mut now = t0;
+            for op in 0..n_ops {
+                now += Duration::from_micros(rng.range_usize(0, 2000) as u64);
+                if rng.bool(0.8) {
+                    let cls = rng.range_usize(0, 3) as u32;
+                    let seq = sent.entry(cls).or_default().len();
+                    sent.get_mut(&cls).unwrap().push(seq);
+                    let out =
+                        b.push(class(cls, 16, 9.0), (cls, seq), now);
+                    collect(out.into_iter().collect(), &mut received);
+                } else {
+                    let out = b.poll_expired(now);
+                    collect(out, &mut received);
+                }
+                let _ = op;
+            }
+            collect(b.drain(now), &mut received);
+            assert_eq!(b.len(), 0);
+            // Conservation + FIFO per class.
+            for (cls, seqs) in &sent {
+                let got = received.get(cls).cloned().unwrap_or_default();
+                assert_eq!(&got, seqs, "class {cls} (seed {seed})");
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Service observability: counters and latency aggregates.
+
+use std::time::Duration;
+
+/// Running statistics collected by the service thread.
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    pub queries: u64,
+    pub batches: u64,
+    pub xla_batches: u64,
+    pub cpu_batches: u64,
+    pub errors: u64,
+    /// Sum of batch sizes (for mean batch occupancy).
+    pub batched_queries: u64,
+    /// Latency accumulators (microseconds).
+    lat_sum_us: u128,
+    lat_max_us: u64,
+    /// Simple log2 histogram of latency in µs: bucket i = [2^i, 2^{i+1}).
+    lat_buckets: [u64; 32],
+}
+
+impl Stats {
+    pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
+        self.batches += 1;
+        self.batched_queries += size as u64;
+        if engine_is_xla {
+            self.xla_batches += 1;
+        } else {
+            self.cpu_batches += 1;
+        }
+    }
+
+    pub fn record_query_latency(&mut self, latency: Duration) {
+        self.queries += 1;
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        self.lat_sum_us += us as u128;
+        self.lat_max_us = self.lat_max_us.max(us);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.lat_buckets[bucket] += 1;
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            queries: self.queries,
+            batches: self.batches,
+            xla_batches: self.xla_batches,
+            cpu_batches: self.cpu_batches,
+            errors: self.errors,
+            mean_batch_size: if self.batches > 0 {
+                self.batched_queries as f64 / self.batches as f64
+            } else {
+                0.0
+            },
+            mean_latency_us: if self.queries > 0 {
+                (self.lat_sum_us / self.queries as u128) as u64
+            } else {
+                0
+            },
+            max_latency_us: self.lat_max_us,
+            p99_latency_us: self.quantile_us(0.99),
+            p50_latency_us: self.quantile_us(0.50),
+        }
+    }
+
+    /// Approximate quantile from the log2 histogram (upper bucket edge).
+    fn quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.lat_buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &count) in self.lat_buckets.iter().enumerate() {
+            seen += count;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.lat_max_us
+    }
+}
+
+/// Immutable snapshot returned to callers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StatsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub xla_batches: u64,
+    pub cpu_batches: u64,
+    pub errors: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_us: u64,
+    pub max_latency_us: u64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "queries={} batches={} (xla={}, cpu={}) errors={} mean_batch={:.2} \
+             lat_us(mean={}, p50~{}, p99~{}, max={})",
+            self.queries,
+            self.batches,
+            self.xla_batches,
+            self.cpu_batches,
+            self.errors,
+            self.mean_batch_size,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.max_latency_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let mut s = Stats::default();
+        s.record_batch(4, true);
+        s.record_batch(2, false);
+        let snap = s.snapshot();
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.xla_batches, 1);
+        assert_eq!(snap.cpu_batches, 1);
+        assert!((snap.mean_batch_size - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_quantiles_monotone() {
+        let mut s = Stats::default();
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            for _ in 0..10 {
+                s.record_query_latency(Duration::from_micros(us));
+            }
+        }
+        let snap = s.snapshot();
+        assert!(snap.p50_latency_us <= snap.p99_latency_us);
+        assert!(snap.p99_latency_us <= snap.max_latency_us * 2);
+        assert_eq!(snap.queries, 60);
+        assert!(snap.mean_latency_us > 0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let snap = Stats::default().snapshot();
+        assert_eq!(snap.queries, 0);
+        assert_eq!(snap.mean_batch_size, 0.0);
+        assert_eq!(snap.p99_latency_us, 0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Layer-3 coordinator: a batched Sinkhorn-distance *service*.
+//!
+//! The paper's §4.1 observation — Algorithm 1 "can be used as such to
+//! compute the distance between r and a family of histograms" and is
+//! therefore "amenable to large scale executions on parallel platforms" —
+//! is an invitation to build a serving system: individual distance
+//! queries are worth batching into one vectorized execution. This module
+//! is that system, shaped like a vLLM-style router:
+//!
+//! * [`Query`] — one distance request `(metric_id, λ, r, c)`;
+//! * [`batcher`] — pure dynamic-batching queues: requests are routed by
+//!   *shape class* (metric, λ, dimension) and flushed either when a class
+//!   fills the artifact's batch width or when the oldest request hits the
+//!   latency deadline;
+//! * [`service`] — the engine thread owning the PJRT runtime (or the CPU
+//!   fallback engine), the mpsc plumbing and graceful shutdown;
+//! * [`metrics`] — counters/latency snapshots for observability.
+//!
+//! Python never appears anywhere on this path: the engine executes
+//! AOT-compiled HLO through [`crate::runtime`].
+
+pub mod batcher;
+pub mod metrics;
+mod service;
+
+pub use batcher::{BatcherConfig, PendingBatcher, ShapeClass};
+pub use metrics::StatsSnapshot;
+pub use service::{DistanceService, ServiceError};
+
+use crate::simplex::Histogram;
+use crate::F;
+
+/// Identifier of a registered ground metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MetricId(pub u32);
+
+/// Which backend executed a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT XLA artifact via PJRT.
+    Xla,
+    /// Pure-Rust CPU engine (fallback / comparison).
+    Cpu,
+}
+
+/// One distance request.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Ground metric to use (must be registered first).
+    pub metric: MetricId,
+    /// Entropic regularization weight λ.
+    pub lambda: F,
+    /// Source histogram.
+    pub r: Histogram,
+    /// Target histogram.
+    pub c: Histogram,
+}
+
+/// Completed query result.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// The dual-Sinkhorn divergence d_M^λ(r, c).
+    pub distance: F,
+    /// Backend that served it.
+    pub engine: EngineKind,
+    /// How many queries shared the executed batch.
+    pub batch_size: usize,
+    /// Queue wait + execution, in microseconds.
+    pub latency_us: u64,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Where the AOT artifacts live; `None` forces the CPU backend.
+    pub artifact_dir: Option<std::path::PathBuf>,
+    /// Artifact flavor to serve with.
+    pub flavor: crate::runtime::Flavor,
+    /// Fall back to the CPU engine when no artifact matches a query's
+    /// dimension (otherwise such queries error).
+    pub cpu_fallback: bool,
+    /// Fixed iteration budget for CPU-backend solves (XLA artifacts carry
+    /// their own baked iteration count).
+    pub cpu_iterations: usize,
+    /// Dynamic batching parameters.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: Some(std::path::PathBuf::from("artifacts")),
+            flavor: crate::runtime::Flavor::Xla,
+            cpu_fallback: true,
+            cpu_iterations: 20,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// A CPU-only configuration (no artifacts needed) — used by tests and
+    /// as the baseline in the batching ablation bench.
+    pub fn cpu_only() -> Self {
+        Self { artifact_dir: None, ..Default::default() }
+    }
+}

@@ -1,0 +1,582 @@
+//! The service thread: mpsc front door, dynamic batching, engine dispatch.
+//!
+//! A single engine thread owns the PJRT runtime (PJRT handles are not
+//! `Sync`; message passing keeps the unsafe surface zero) plus the CPU
+//! fallback engines, and runs the batching loop:
+//!
+//! ```text
+//! clients --submit--> mpsc --> [route -> pending queues] --flush--> engine
+//!                                  ^ size trigger  ^ deadline trigger
+//! ```
+//!
+//! Responses travel back through per-query channels, so concurrent
+//! callers can block on their own result without coordinating.
+
+use super::batcher::{PendingBatcher, ReadyBatch, ShapeClass};
+use super::metrics::{Stats, StatsSnapshot};
+use super::{CoordinatorConfig, EngineKind, MetricId, Query, QueryResult};
+use crate::metric::CostMatrix;
+use crate::runtime::{RuntimeError, XlaRuntime};
+use crate::sinkhorn::{BatchSinkhorn, SinkhornConfig, SinkhornEngine};
+use crate::F;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Errors surfaced to clients.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum ServiceError {
+    #[error("metric {0:?} is not registered")]
+    UnknownMetric(MetricId),
+    #[error("histogram dimension {got} does not match metric dimension {want}")]
+    DimensionMismatch { got: usize, want: usize },
+    #[error("no artifact serves d={0} and CPU fallback is disabled")]
+    NoBackend(usize),
+    #[error("runtime failure: {0}")]
+    Runtime(String),
+    #[error("service is shut down")]
+    Stopped,
+}
+
+struct Job {
+    query: Query,
+    enqueued: Instant,
+    respond: Sender<Result<QueryResult, ServiceError>>,
+}
+
+enum Message {
+    Query(Job),
+    RegisterMetric(MetricId, CostMatrix, Sender<()>),
+    Stats(Sender<StatsSnapshot>),
+    /// Warm the XLA executable cache (compile all variants now).
+    Warmup(Sender<Result<usize, ServiceError>>),
+}
+
+/// Handle to a running distance service.
+///
+/// Cloning is intentionally not provided on the handle itself; use
+/// [`DistanceService::client`] to get cheap cloneable submitters.
+pub struct DistanceService {
+    tx: Sender<Message>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Cheap cloneable submission handle.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: Sender<Message>,
+}
+
+impl DistanceService {
+    /// Spawn the engine thread. Fails fast if the artifact directory is
+    /// configured but unusable.
+    ///
+    /// PJRT handles are not `Send`, so the [`XlaRuntime`] is constructed
+    /// *inside* the engine thread; the init outcome is reported back over
+    /// a one-shot channel before this returns.
+    pub fn start(config: CoordinatorConfig) -> Result<Self, ServiceError> {
+        let (tx, rx) = channel();
+        let (init_tx, init_rx) = channel::<Result<(), ServiceError>>();
+        let handle = std::thread::Builder::new()
+            .name("sinkhorn-engine".into())
+            .spawn(move || {
+                let runtime = match &config.artifact_dir {
+                    Some(dir) => match XlaRuntime::new(dir) {
+                        Ok(rt) => Some(rt),
+                        Err(e) => {
+                            let _ = init_tx
+                                .send(Err(ServiceError::Runtime(e.to_string())));
+                            return;
+                        }
+                    },
+                    None => None,
+                };
+                let _ = init_tx.send(Ok(()));
+                EngineThread::new(config, runtime, rx).run()
+            })
+            .expect("spawn engine thread");
+        match init_rx.recv() {
+            Ok(Ok(())) => Ok(Self { tx, handle: Some(handle) }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                Err(e)
+            }
+            Err(_) => Err(ServiceError::Stopped),
+        }
+    }
+
+    /// A cloneable submitter for concurrent client threads.
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient { tx: self.tx.clone() }
+    }
+
+    /// Register (or replace) a ground metric.
+    pub fn register_metric(&self, id: MetricId, metric: CostMatrix) -> Result<(), ServiceError> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(Message::RegisterMetric(id, metric, ack_tx))
+            .map_err(|_| ServiceError::Stopped)?;
+        ack_rx.recv().map_err(|_| ServiceError::Stopped)
+    }
+
+    /// Pre-compile all artifacts (returns how many were compiled).
+    pub fn warmup(&self) -> Result<usize, ServiceError> {
+        let (tx, rx) = channel();
+        self.tx.send(Message::Warmup(tx)).map_err(|_| ServiceError::Stopped)?;
+        rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// Async submit: returns a receiver for this query's result.
+    pub fn submit(&self, query: Query) -> Result<Receiver<Result<QueryResult, ServiceError>>, ServiceError> {
+        self.client().submit(query)
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn distance(&self, query: Query) -> Result<QueryResult, ServiceError> {
+        let rx = self.submit(query)?;
+        rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// Current statistics snapshot.
+    pub fn stats(&self) -> Result<StatsSnapshot, ServiceError> {
+        let (tx, rx) = channel();
+        self.tx.send(Message::Stats(tx)).map_err(|_| ServiceError::Stopped)?;
+        rx.recv().map_err(|_| ServiceError::Stopped)
+    }
+
+    /// Graceful shutdown: drains pending work, then joins the thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Dropping the sender disconnects the channel; the engine thread
+        // drains and exits.
+        let (tx, _rx) = channel();
+        let old = std::mem::replace(&mut self.tx, tx);
+        drop(old);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DistanceService {
+    fn drop(&mut self) {
+        if self.handle.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+impl ServiceClient {
+    /// Async submit: returns a receiver for this query's result.
+    pub fn submit(&self, query: Query) -> Result<Receiver<Result<QueryResult, ServiceError>>, ServiceError> {
+        let (tx, rx) = channel();
+        let job = Job { query, enqueued: Instant::now(), respond: tx };
+        self.tx.send(Message::Query(job)).map_err(|_| ServiceError::Stopped)?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn distance(&self, query: Query) -> Result<QueryResult, ServiceError> {
+        let rx = self.submit(query)?;
+        rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+}
+
+/// State owned by the engine thread.
+struct EngineThread {
+    config: CoordinatorConfig,
+    runtime: Option<XlaRuntime>,
+    rx: Receiver<Message>,
+    metrics: HashMap<MetricId, CostMatrix>,
+    cpu_engines: HashMap<(MetricId, u64), SinkhornEngine>,
+    pending: PendingBatcher<Job>,
+    stats: Stats,
+}
+
+impl EngineThread {
+    fn new(
+        config: CoordinatorConfig,
+        runtime: Option<XlaRuntime>,
+        rx: Receiver<Message>,
+    ) -> Self {
+        let pending = PendingBatcher::new(config.batcher);
+        Self {
+            config,
+            runtime,
+            rx,
+            metrics: HashMap::new(),
+            cpu_engines: HashMap::new(),
+            pending,
+            stats: Stats::default(),
+        }
+    }
+
+    fn run(mut self) {
+        const IDLE: Duration = Duration::from_millis(50);
+        loop {
+            let timeout = self
+                .pending
+                .next_deadline()
+                .map(|dl| dl.saturating_duration_since(Instant::now()))
+                .unwrap_or(IDLE);
+            match self.rx.recv_timeout(timeout) {
+                Ok(Message::Query(job)) => self.accept(job),
+                Ok(Message::RegisterMetric(id, m, ack)) => {
+                    self.metrics.insert(id, m);
+                    // Invalidate engines/buffers bound to the replaced metric.
+                    self.cpu_engines.retain(|(mid, _), _| *mid != id);
+                    if let Some(rt) = self.runtime.as_mut() {
+                        rt.invalidate_metric(id.0 as u64);
+                    }
+                    let _ = ack.send(());
+                }
+                Ok(Message::Stats(tx)) => {
+                    let _ = tx.send(self.stats.snapshot());
+                }
+                Ok(Message::Warmup(tx)) => {
+                    let res = match self.runtime.as_mut() {
+                        Some(rt) => rt
+                            .warmup(self.config.flavor)
+                            .map_err(|e| ServiceError::Runtime(e.to_string())),
+                        None => Ok(0),
+                    };
+                    let _ = tx.send(res);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Drain remaining work, then exit.
+                    for batch in self.pending.drain(Instant::now()) {
+                        self.execute(batch);
+                    }
+                    return;
+                }
+            }
+            for batch in self.pending.poll_expired(Instant::now()) {
+                self.execute(batch);
+            }
+        }
+    }
+
+    /// Validate and enqueue one query (or answer immediately on error).
+    fn accept(&mut self, job: Job) {
+        let metric = match self.metrics.get(&job.query.metric) {
+            Some(m) => m,
+            None => {
+                self.stats.errors += 1;
+                let _ = job
+                    .respond
+                    .send(Err(ServiceError::UnknownMetric(job.query.metric)));
+                return;
+            }
+        };
+        let d = metric.dim();
+        if job.query.r.dim() != d || job.query.c.dim() != d {
+            self.stats.errors += 1;
+            let got = if job.query.r.dim() != d { job.query.r.dim() } else { job.query.c.dim() };
+            let _ = job
+                .respond
+                .send(Err(ServiceError::DimensionMismatch { got, want: d }));
+            return;
+        }
+        let class = ShapeClass::new(job.query.metric, d, job.query.lambda);
+        if let Some(ready) = self.pending.push(class, job, Instant::now()) {
+            self.execute(ready);
+        }
+    }
+
+    /// Execute one ready batch on the best available backend.
+    fn execute(&mut self, batch: ReadyBatch<Job>) {
+        let class = batch.class;
+        let jobs = batch.items;
+        let size = jobs.len();
+        let metric = self.metrics[&class.metric].clone();
+        let lambda = class.lambda();
+
+        // Prefer the XLA runtime when it has an artifact for this d.
+        let use_xla = self
+            .runtime
+            .as_ref()
+            .map(|rt| rt.select(class.d, size, self.config.flavor).is_ok())
+            .unwrap_or(false);
+
+        if use_xla {
+            match self.execute_xla(&metric, class.metric, lambda, &jobs) {
+                Ok(dists) => {
+                    self.stats.record_batch(size, true);
+                    self.respond_all(jobs, dists, EngineKind::Xla, size);
+                    return;
+                }
+                Err(e) => {
+                    self.stats.errors += 1;
+                    if !self.config.cpu_fallback {
+                        let msg = e.to_string();
+                        for job in jobs {
+                            let _ = job
+                                .respond
+                                .send(Err(ServiceError::Runtime(msg.clone())));
+                        }
+                        return;
+                    }
+                    // fall through to CPU
+                }
+            }
+        } else if self.runtime.is_some() && !self.config.cpu_fallback {
+            for job in jobs {
+                let _ = job.respond.send(Err(ServiceError::NoBackend(class.d)));
+            }
+            return;
+        } else if self.runtime.is_none() && !self.config.cpu_fallback {
+            for job in jobs {
+                let _ = job.respond.send(Err(ServiceError::NoBackend(class.d)));
+            }
+            return;
+        }
+
+        // CPU fallback path: the vectorized batch engine (Algorithm 1's
+        // matrix form) when the dense kernel is usable, the scalar engine
+        // (with its log-domain auto-stabilization) otherwise.
+        let cfg = SinkhornConfig::fixed(lambda, self.config.cpu_iterations);
+        let engine = self
+            .cpu_engines
+            .entry((class.metric, lambda.to_bits()))
+            .or_insert_with(|| SinkhornEngine::with_config(&metric, cfg));
+        let dists: Vec<F> = if size > 1 && !engine.is_stabilized() {
+            let batch_engine = BatchSinkhorn::new(&metric, cfg);
+            let rs: Vec<&crate::simplex::Histogram> =
+                jobs.iter().map(|j| &j.query.r).collect();
+            let cs: Vec<crate::simplex::Histogram> =
+                jobs.iter().map(|j| j.query.c.clone()).collect();
+            batch_engine
+                .distances_paired(&rs, &cs)
+                .into_iter()
+                .map(|o| o.value)
+                .collect()
+        } else {
+            jobs.iter()
+                .map(|job| engine.distance(&job.query.r, &job.query.c).value)
+                .collect()
+        };
+        self.stats.record_batch(size, false);
+        self.respond_all(jobs, dists, EngineKind::Cpu, size);
+    }
+
+    fn execute_xla(
+        &mut self,
+        metric: &CostMatrix,
+        metric_id: MetricId,
+        lambda: F,
+        jobs: &[Job],
+    ) -> Result<Vec<F>, RuntimeError> {
+        let rt = self.runtime.as_mut().expect("xla path requires runtime");
+        let d = metric.dim();
+        let mut out = Vec::with_capacity(jobs.len());
+        let mut idx = 0;
+        while idx < jobs.len() {
+            let remaining = jobs.len() - idx;
+            let variant = rt.select(d, remaining, self.config.flavor)?;
+            let take = remaining.min(variant.n);
+            let r_cols: Vec<Vec<F>> = jobs[idx..idx + take]
+                .iter()
+                .map(|j| j.query.r.values().to_vec())
+                .collect();
+            let c_cols: Vec<Vec<F>> = jobs[idx..idx + take]
+                .iter()
+                .map(|j| j.query.c.values().to_vec())
+                .collect();
+            // The metric id keys the runtime's device-buffer cache:
+            // register_metric invalidates it on replacement.
+            let batch = rt.execute_keyed(
+                &variant,
+                metric,
+                Some(metric_id.0 as u64),
+                lambda,
+                &r_cols,
+                &c_cols,
+            )?;
+            out.extend(batch.distances);
+            idx += take;
+        }
+        Ok(out)
+    }
+
+    fn respond_all(
+        &mut self,
+        jobs: Vec<Job>,
+        dists: Vec<F>,
+        engine: EngineKind,
+        batch_size: usize,
+    ) {
+        debug_assert_eq!(jobs.len(), dists.len());
+        let now = Instant::now();
+        for (job, distance) in jobs.into_iter().zip(dists) {
+            let latency = now.saturating_duration_since(job.enqueued);
+            self.stats.record_query_latency(latency);
+            let _ = job.respond.send(Ok(QueryResult {
+                distance,
+                engine,
+                batch_size,
+                latency_us: latency.as_micros().min(u64::MAX as u128) as u64,
+            }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::batcher::BatcherConfig;
+    use crate::metric::RandomMetric;
+    use crate::simplex::{seeded_rng, Histogram};
+
+    fn cpu_service(max_batch: usize, delay_ms: u64) -> (DistanceService, CostMatrix) {
+        let mut config = CoordinatorConfig::cpu_only();
+        config.batcher = BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+        };
+        config.cpu_iterations = 200;
+        let svc = DistanceService::start(config).unwrap();
+        let mut rng = seeded_rng(0);
+        let m = RandomMetric::new(12).sample(&mut rng);
+        svc.register_metric(MetricId(0), m.clone()).unwrap();
+        (svc, m)
+    }
+
+    #[test]
+    fn cpu_backend_answers_correctly() {
+        let (svc, m) = cpu_service(4, 1);
+        let mut rng = seeded_rng(1);
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        let res = svc
+            .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: c.clone() })
+            .unwrap();
+        assert_eq!(res.engine, EngineKind::Cpu);
+        let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 200))
+            .distance(&r, &c)
+            .value;
+        assert!((res.distance - want).abs() < 1e-12);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_metric_is_rejected() {
+        let (svc, _m) = cpu_service(4, 1);
+        let mut rng = seeded_rng(2);
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let err = svc
+            .distance(Query { metric: MetricId(9), lambda: 9.0, r: r.clone(), c: r })
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownMetric(MetricId(9))));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dimension_mismatch_is_rejected() {
+        let (svc, _m) = cpu_service(4, 1);
+        let mut rng = seeded_rng(3);
+        let r = Histogram::sample_uniform(5, &mut rng);
+        let err = svc
+            .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: r })
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::DimensionMismatch { got: 5, want: 12 }));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_batches() {
+        let (svc, _m) = cpu_service(8, 50);
+        let mut rng = seeded_rng(4);
+        // Submit 8 queries of one class quickly: they should share a batch
+        // (size trigger), visible via batch_size on results.
+        let rxs: Vec<_> = (0..8)
+            .map(|_| {
+                let r = Histogram::sample_uniform(12, &mut rng);
+                let c = Histogram::sample_uniform(12, &mut rng);
+                svc.submit(Query { metric: MetricId(0), lambda: 9.0, r, c }).unwrap()
+            })
+            .collect();
+        let sizes: Vec<usize> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().batch_size)
+            .collect();
+        assert!(sizes.iter().all(|&s| s == 8), "batch sizes {sizes:?}");
+        let snap = svc.stats().unwrap();
+        assert_eq!(snap.queries, 8);
+        assert_eq!(snap.batches, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_serves_partial_batches() {
+        let (svc, _m) = cpu_service(1000, 5);
+        let mut rng = seeded_rng(5);
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        let t0 = Instant::now();
+        let res = svc
+            .distance(Query { metric: MetricId(0), lambda: 9.0, r, c })
+            .unwrap();
+        // Must have waited for the deadline, not the (huge) size trigger.
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert_eq!(res.batch_size, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let (svc, _m) = cpu_service(1000, 10_000); // deadline effectively never
+        let mut rng = seeded_rng(6);
+        let rxs: Vec<_> = (0..5)
+            .map(|_| {
+                let r = Histogram::sample_uniform(12, &mut rng);
+                let c = Histogram::sample_uniform(12, &mut rng);
+                svc.submit(Query { metric: MetricId(0), lambda: 3.0, r, c }).unwrap()
+            })
+            .collect();
+        svc.shutdown(); // must flush the queue before joining
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_conserve_results() {
+        let (svc, m) = cpu_service(16, 2);
+        let d = m.dim();
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let client = svc.client();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = seeded_rng(100 + t);
+                let mut vals = Vec::new();
+                for _ in 0..25 {
+                    let r = Histogram::sample_uniform(d, &mut rng);
+                    let c = Histogram::sample_uniform(d, &mut rng);
+                    let lambda = if rng.bool(0.5) { 9.0 } else { 3.0 };
+                    let res = client
+                        .distance(Query { metric: MetricId(0), lambda, r, c })
+                        .unwrap();
+                    vals.push(res.distance);
+                }
+                vals
+            }));
+        }
+        let mut total = 0;
+        for h in handles {
+            let vals = h.join().unwrap();
+            assert_eq!(vals.len(), 25);
+            assert!(vals.iter().all(|v| v.is_finite() && *v >= 0.0));
+            total += vals.len();
+        }
+        assert_eq!(total, 100);
+        let snap = svc.stats().unwrap();
+        assert_eq!(snap.queries, 100);
+        assert!(snap.batches <= 100);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,292 @@
+//! Synthetic digit dataset — the §5.1 MNIST substitute.
+//!
+//! The paper's classification study runs on MNIST 20×20 intensity images
+//! normalized into Σ₄₀₀ histograms. This environment has no network
+//! access, so we build the closest synthetic equivalent that exercises the
+//! identical code path (DESIGN.md §7): a procedural renderer that draws
+//! each digit class 0–9 as a fixed set of strokes on the unit square,
+//! rasterizes with a Gaussian pen onto a 20×20 grid, and perturbs each
+//! sample with random affine jitter (translation / rotation / scale),
+//! per-stroke endpoint noise and pixel noise. What the experiment needs is
+//! preserved: ten visually-overlapping classes on the *same pixel grid*
+//! whose confusions are spatially structured — exactly the regime where a
+//! ground metric over pixels should help.
+
+mod strokes;
+
+pub use strokes::DIGIT_STROKES;
+
+use crate::rng::Rng;
+use crate::simplex::Histogram;
+use crate::F;
+
+/// One of the ten digit classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DigitClass(pub usize);
+
+/// A labeled histogram sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub histogram: Histogram,
+    pub label: usize,
+}
+
+/// Generator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DigitConfig {
+    /// Grid side (paper: 20 → d = 400).
+    pub grid: usize,
+    /// Gaussian pen radius as a fraction of the grid side.
+    pub pen_sigma: F,
+    /// Max translation jitter (fraction of side).
+    pub translate: F,
+    /// Max rotation jitter (radians).
+    pub rotate: F,
+    /// Scale jitter: scale ~ U[1-s, 1+s].
+    pub scale: F,
+    /// Endpoint wobble per stroke point (fraction of side).
+    pub wobble: F,
+    /// Additive uniform pixel noise amplitude (fraction of peak).
+    pub pixel_noise: F,
+}
+
+impl Default for DigitConfig {
+    fn default() -> Self {
+        Self {
+            grid: 20,
+            pen_sigma: 0.045,
+            translate: 0.08,
+            rotate: 0.18,
+            scale: 0.12,
+            wobble: 0.02,
+            pixel_noise: 0.02,
+        }
+    }
+}
+
+/// The synthetic-digits dataset generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticDigits {
+    config: DigitConfig,
+}
+
+impl SyntheticDigits {
+    pub fn new(config: DigitConfig) -> Self {
+        assert!(config.grid >= 4, "grid too small to draw digits");
+        Self { config }
+    }
+
+    /// Default 20×20 generator (d = 400, like the paper's MNIST variant).
+    pub fn default_20x20() -> Self {
+        Self::new(DigitConfig::default())
+    }
+
+    /// Histogram dimension d = grid².
+    pub fn dim(&self) -> usize {
+        self.config.grid * self.config.grid
+    }
+
+    /// Grid side length.
+    pub fn grid(&self) -> usize {
+        self.config.grid
+    }
+
+    /// Render one sample of the given class.
+    pub fn sample(&self, class: DigitClass, rng: &mut Rng) -> Sample {
+        assert!(class.0 < 10, "digit classes are 0..10");
+        let g = self.config.grid;
+        let cfg = &self.config;
+
+        // Random affine jitter around the glyph center (0.5, 0.5).
+        let theta = rng.range_f64(-cfg.rotate, cfg.rotate);
+        let scale = 1.0 + rng.range_f64(-cfg.scale, cfg.scale);
+        let (tx, ty) = (
+            rng.range_f64(-cfg.translate, cfg.translate),
+            rng.range_f64(-cfg.translate, cfg.translate),
+        );
+        let (cos_t, sin_t) = (theta.cos(), theta.sin());
+        let jitter = |x: F, y: F, rng: &mut Rng| -> (F, F) {
+            let (xc, yc) = (x - 0.5, y - 0.5);
+            let xr = scale * (cos_t * xc - sin_t * yc) + 0.5 + tx;
+            let yr = scale * (sin_t * xc + cos_t * yc) + 0.5 + ty;
+            (
+                xr + rng.range_f64(-cfg.wobble, cfg.wobble),
+                yr + rng.range_f64(-cfg.wobble, cfg.wobble),
+            )
+        };
+
+        // Rasterize strokes with a Gaussian pen, sampling points densely
+        // along each polyline segment.
+        let mut img = vec![0.0; g * g];
+        let sigma = cfg.pen_sigma.max(1e-3);
+        // Work in pixel units: pen sigma in pixels.
+        let sigma_px = sigma * g as F;
+        let inv2s2 = 1.0 / (2.0 * sigma_px * sigma_px);
+        // Pixels within 3 sigma of the pen center receive ink.
+        let reach = (3.0 * sigma_px).ceil().max(1.0) as i64;
+        for stroke in DIGIT_STROKES[class.0] {
+            let pts: Vec<(F, F)> =
+                stroke.iter().map(|&(x, y)| jitter(x, y, rng)).collect();
+            for w in pts.windows(2) {
+                let (x0, y0) = w[0];
+                let (x1, y1) = w[1];
+                let seg_len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt();
+                let steps = ((seg_len * g as F * 2.0).ceil() as usize).max(1);
+                for s in 0..=steps {
+                    let t = s as F / steps as F;
+                    let px = (x0 + t * (x1 - x0)) * g as F;
+                    let py = (y0 + t * (y1 - y0)) * g as F;
+                    let (ix, iy) = (px.round() as i64, py.round() as i64);
+                    for dy in -reach..=reach {
+                        for dx in -reach..=reach {
+                            let (qx, qy) = (ix + dx, iy + dy);
+                            if qx < 0 || qy < 0 || qx >= g as i64 || qy >= g as i64 {
+                                continue;
+                            }
+                            let ddx = (qx as F + 0.5) - px;
+                            let ddy = (qy as F + 0.5) - py;
+                            let dist2 = ddx * ddx + ddy * ddy;
+                            let ink = (-dist2 * inv2s2).exp() / steps as F;
+                            img[(qy as usize) * g + qx as usize] += ink;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Pixel noise proportional to the ink peak, then normalize.
+        let peak = img.iter().cloned().fold(0.0, F::max).max(1e-12);
+        for v in &mut img {
+            *v += rng.f64() * cfg.pixel_noise * peak;
+        }
+        let histogram = Histogram::from_weights(&img)
+            .expect("rendered digit has positive mass");
+        Sample { histogram, label: class.0 }
+    }
+
+    /// Generate a balanced dataset of n samples (labels cycle 0..10).
+    pub fn dataset(&self, n: usize, rng: &mut Rng) -> Vec<Sample> {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(self.sample(DigitClass(i % 10), rng));
+        }
+        // Shuffle so folds don't align with the label cycle.
+        rng.shuffle(&mut out);
+        out
+    }
+
+    /// ASCII rendering (for docs/examples): rows of intensity glyphs.
+    pub fn ascii(&self, h: &Histogram) -> String {
+        let g = self.config.grid;
+        let ramp = [' ', '.', ':', '+', '*', '#', '@'];
+        let peak = h.values().iter().cloned().fold(0.0, F::max).max(1e-12);
+        let mut s = String::with_capacity(g * (g + 1));
+        for y in 0..g {
+            for x in 0..g {
+                let v = h.values()[y * g + x] / peak;
+                let idx = ((v * (ramp.len() - 1) as F).round() as usize)
+                    .min(ramp.len() - 1);
+                s.push(ramp[idx]);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::ClassicalDistance;
+    use crate::simplex::seeded_rng;
+
+    #[test]
+    fn samples_are_valid_histograms() {
+        let gen = SyntheticDigits::default_20x20();
+        let mut rng = seeded_rng(0);
+        for class in 0..10 {
+            let s = gen.sample(DigitClass(class), &mut rng);
+            assert_eq!(s.histogram.dim(), 400);
+            assert!(s.histogram.mass_error() < 1e-9);
+            assert_eq!(s.label, class);
+            // Ink should cover a nontrivial region.
+            let support = s.histogram.support_size();
+            assert!(support > 40, "class {class}: support {support}");
+        }
+    }
+
+    #[test]
+    fn dataset_is_balanced_and_shuffled() {
+        let gen = SyntheticDigits::default_20x20();
+        let mut rng = seeded_rng(1);
+        let ds = gen.dataset(50, &mut rng);
+        assert_eq!(ds.len(), 50);
+        for c in 0..10 {
+            assert_eq!(ds.iter().filter(|s| s.label == c).count(), 5);
+        }
+        let labels: Vec<usize> = ds.iter().map(|s| s.label).collect();
+        assert_ne!(labels, (0..50).map(|i| i % 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn within_class_closer_than_between_class() {
+        // The geometric sanity check that makes classification possible:
+        // average same-class distance < average cross-class distance.
+        let gen = SyntheticDigits::default_20x20();
+        let mut rng = seeded_rng(2);
+        let per_class = 4;
+        let samples: Vec<Sample> = (0..10)
+            .flat_map(|c| {
+                (0..per_class)
+                    .map(|_| gen.sample(DigitClass(c), &mut rng))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let (mut within, mut wn) = (0.0, 0usize);
+        let (mut between, mut bn) = (0.0, 0usize);
+        for i in 0..samples.len() {
+            for j in (i + 1)..samples.len() {
+                let d = ClassicalDistance::TotalVariation
+                    .eval(&samples[i].histogram, &samples[j].histogram);
+                if samples[i].label == samples[j].label {
+                    within += d;
+                    wn += 1;
+                } else {
+                    between += d;
+                    bn += 1;
+                }
+            }
+        }
+        let (within, between) = (within / wn as F, between / bn as F);
+        assert!(
+            within < between,
+            "within {within} should be < between {between}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = SyntheticDigits::default_20x20();
+        let a = gen.sample(DigitClass(3), &mut seeded_rng(9));
+        let b = gen.sample(DigitClass(3), &mut seeded_rng(9));
+        assert_eq!(a.histogram.values(), b.histogram.values());
+    }
+
+    #[test]
+    fn small_grids_work() {
+        let gen = SyntheticDigits::new(DigitConfig { grid: 8, ..Default::default() });
+        let mut rng = seeded_rng(4);
+        let s = gen.sample(DigitClass(7), &mut rng);
+        assert_eq!(s.histogram.dim(), 64);
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let gen = SyntheticDigits::default_20x20();
+        let mut rng = seeded_rng(5);
+        let s = gen.sample(DigitClass(0), &mut rng);
+        let art = gen.ascii(&s.histogram);
+        assert_eq!(art.lines().count(), 20);
+        assert!(art.contains('@') || art.contains('#'));
+    }
+}

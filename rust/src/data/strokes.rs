@@ -1,0 +1,149 @@
+//! Stroke templates for the ten digit classes.
+//!
+//! Each digit is a list of polylines with vertices in the unit square
+//! ((0,0) = top-left, y growing downward, matching image row order).
+//! Shapes are deliberately simple seven-segment-ish glyphs with curves
+//! approximated by short polylines; the jitter in [`super::SyntheticDigits`]
+//! supplies intra-class variability.
+
+use crate::F;
+
+/// Polyline vertex list type.
+pub type Stroke = &'static [(F, F)];
+
+/// `DIGIT_STROKES[c]` = the strokes of digit class `c`.
+pub static DIGIT_STROKES: [&[Stroke]; 10] = [
+    // 0: oval
+    &[&[
+        (0.50, 0.15),
+        (0.68, 0.20),
+        (0.75, 0.38),
+        (0.75, 0.62),
+        (0.68, 0.80),
+        (0.50, 0.85),
+        (0.32, 0.80),
+        (0.25, 0.62),
+        (0.25, 0.38),
+        (0.32, 0.20),
+        (0.50, 0.15),
+    ]],
+    // 1: vertical bar with a flag
+    &[
+        &[(0.38, 0.28), (0.52, 0.15), (0.52, 0.85)],
+        &[(0.38, 0.85), (0.66, 0.85)],
+    ],
+    // 2: top arc, diagonal, base
+    &[&[
+        (0.28, 0.30),
+        (0.35, 0.17),
+        (0.55, 0.13),
+        (0.70, 0.22),
+        (0.72, 0.38),
+        (0.55, 0.55),
+        (0.38, 0.68),
+        (0.27, 0.85),
+        (0.74, 0.85),
+    ]],
+    // 3: two stacked arcs
+    &[
+        &[(0.30, 0.20), (0.50, 0.13), (0.68, 0.22), (0.68, 0.38), (0.50, 0.48)],
+        &[(0.50, 0.48), (0.70, 0.57), (0.70, 0.75), (0.52, 0.86), (0.30, 0.79)],
+    ],
+    // 4: diagonal, horizontal, vertical
+    &[
+        &[(0.60, 0.15), (0.28, 0.60), (0.75, 0.60)],
+        &[(0.60, 0.15), (0.60, 0.85)],
+    ],
+    // 5: top bar, left stem, lower bowl
+    &[&[
+        (0.70, 0.15),
+        (0.32, 0.15),
+        (0.30, 0.45),
+        (0.55, 0.42),
+        (0.72, 0.55),
+        (0.72, 0.72),
+        (0.55, 0.85),
+        (0.30, 0.80),
+    ]],
+    // 6: descending curve with lower loop
+    &[&[
+        (0.66, 0.16),
+        (0.45, 0.22),
+        (0.32, 0.42),
+        (0.28, 0.62),
+        (0.38, 0.82),
+        (0.58, 0.85),
+        (0.70, 0.72),
+        (0.66, 0.56),
+        (0.48, 0.52),
+        (0.32, 0.60),
+    ]],
+    // 7: top bar and diagonal
+    &[&[(0.26, 0.16), (0.74, 0.16), (0.46, 0.85)]],
+    // 8: two loops
+    &[
+        &[
+            (0.50, 0.14),
+            (0.66, 0.20),
+            (0.66, 0.36),
+            (0.50, 0.46),
+            (0.34, 0.36),
+            (0.34, 0.20),
+            (0.50, 0.14),
+        ],
+        &[
+            (0.50, 0.46),
+            (0.70, 0.56),
+            (0.70, 0.74),
+            (0.50, 0.86),
+            (0.30, 0.74),
+            (0.30, 0.56),
+            (0.50, 0.46),
+        ],
+    ],
+    // 9: upper loop with descending tail
+    &[&[
+        (0.68, 0.40),
+        (0.52, 0.48),
+        (0.34, 0.42),
+        (0.30, 0.26),
+        (0.44, 0.14),
+        (0.62, 0.16),
+        (0.70, 0.30),
+        (0.68, 0.55),
+        (0.60, 0.75),
+        (0.44, 0.86),
+    ]],
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_classes_have_strokes_in_unit_square() {
+        for (c, strokes) in DIGIT_STROKES.iter().enumerate() {
+            assert!(!strokes.is_empty(), "class {c} has no strokes");
+            for stroke in *strokes {
+                assert!(stroke.len() >= 2, "class {c}: degenerate stroke");
+                for &(x, y) in *stroke {
+                    assert!((0.0..=1.0).contains(&x), "class {c}: x={x}");
+                    assert!((0.0..=1.0).contains(&y), "class {c}: y={y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn glyphs_are_pairwise_distinct() {
+        // Crude geometric distinctness: total vertex sets differ.
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                assert_ne!(
+                    DIGIT_STROKES[a], DIGIT_STROKES[b],
+                    "classes {a} and {b} share identical strokes"
+                );
+            }
+        }
+    }
+}

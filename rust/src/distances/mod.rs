@@ -1,0 +1,222 @@
+//! Classical (non-transportation) histogram distances and kernel builders.
+//!
+//! These are the Figure 2 baselines of §5.1.2: Hellinger, χ², Total
+//! Variation, squared Euclidean (the Gaussian kernel's exponent) and
+//! Mahalanobis — the distances the paper compares Sinkhorn against —
+//! plus the experimental plumbing around them: the `e^{-d/t}` kernel with
+//! its quantile-based bandwidth grid and the "add a sufficiently large
+//! diagonal term" PSD regularization.
+
+mod kernels;
+
+pub use kernels::{quantile_bandwidths, KernelBuilder, KernelMatrix};
+
+use crate::linalg::Matrix;
+use crate::simplex::Histogram;
+use crate::F;
+
+/// The classical distances of the paper's §5.1.2 evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClassicalDistance {
+    /// H(r,c) = sqrt( Σ (√r_i − √c_i)² ) (up to the customary 1/√2).
+    Hellinger,
+    /// χ²(r,c) = Σ (r_i − c_i)² / (r_i + c_i), with 0/0 := 0.
+    ChiSquare,
+    /// TV(r,c) = ½ Σ |r_i − c_i|.
+    TotalVariation,
+    /// ‖r − c‖₂² — the exponent of the Gaussian kernel.
+    SquaredEuclidean,
+}
+
+impl ClassicalDistance {
+    /// All Figure 2 classical baselines, in presentation order.
+    pub const ALL: [ClassicalDistance; 4] = [
+        ClassicalDistance::Hellinger,
+        ClassicalDistance::ChiSquare,
+        ClassicalDistance::TotalVariation,
+        ClassicalDistance::SquaredEuclidean,
+    ];
+
+    /// Display name used by harness tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClassicalDistance::Hellinger => "hellinger",
+            ClassicalDistance::ChiSquare => "chi2",
+            ClassicalDistance::TotalVariation => "total_variation",
+            ClassicalDistance::SquaredEuclidean => "sq_euclidean",
+        }
+    }
+
+    /// Evaluate the distance between two histograms.
+    pub fn eval(&self, r: &Histogram, c: &Histogram) -> F {
+        assert_eq!(r.dim(), c.dim(), "histogram dimensions differ");
+        let (a, b) = (r.values(), c.values());
+        match self {
+            ClassicalDistance::Hellinger => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = x.sqrt() - y.sqrt();
+                    d * d
+                })
+                .sum::<F>()
+                .sqrt(),
+            ClassicalDistance::ChiSquare => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let s = x + y;
+                    if s > 0.0 {
+                        (x - y) * (x - y) / s
+                    } else {
+                        0.0
+                    }
+                })
+                .sum(),
+            ClassicalDistance::TotalVariation => {
+                0.5 * a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).sum::<F>()
+            }
+            ClassicalDistance::SquaredEuclidean => {
+                a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum()
+            }
+        }
+    }
+}
+
+/// Mahalanobis-style quadratic form d(r,c) = (r−c)ᵀ W (r−c) for a PSD
+/// weight matrix W. §5.1.2 tries W = exp(−t·M∘M) and its inverse; the
+/// harness builds those via [`Matrix::map`].
+#[derive(Debug, Clone)]
+pub struct MahalanobisDistance {
+    weight: Matrix,
+}
+
+impl MahalanobisDistance {
+    pub fn new(weight: Matrix) -> Self {
+        assert_eq!(weight.rows(), weight.cols(), "weight must be square");
+        Self { weight }
+    }
+
+    /// The identity weight recovers squared Euclidean distance.
+    pub fn identity(d: usize) -> Self {
+        let mut w = Matrix::zeros(d, d);
+        for i in 0..d {
+            w.set(i, i, 1.0);
+        }
+        Self { weight: w }
+    }
+
+    pub fn eval(&self, r: &Histogram, c: &Histogram) -> F {
+        assert_eq!(r.dim(), self.weight.rows(), "dimension mismatch");
+        assert_eq!(r.dim(), c.dim(), "histogram dimensions differ");
+        let diff: Vec<F> =
+            r.values().iter().zip(c.values()).map(|(&x, &y)| x - y).collect();
+        let wd = self.weight.matvec(&diff);
+        crate::linalg::dot(&diff, &wd)
+    }
+}
+
+/// Pairwise distance matrix between two histogram collections (rows:
+/// `left`, cols: `right`), the raw material for every Gram matrix in the
+/// Figure 2 pipeline.
+pub fn pairwise(
+    dist: impl Fn(&Histogram, &Histogram) -> F + Sync,
+    left: &[Histogram],
+    right: &[Histogram],
+) -> Matrix {
+    let mut out = Matrix::zeros(left.len(), right.len());
+    for (i, r) in left.iter().enumerate() {
+        for (j, c) in right.iter().enumerate() {
+            out.set(i, j, dist(r, c));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::seeded_rng;
+
+    fn h(v: &[F]) -> Histogram {
+        Histogram::from_weights(v).unwrap()
+    }
+
+    #[test]
+    fn known_values() {
+        let r = h(&[1.0, 0.0]);
+        let c = h(&[0.0, 1.0]);
+        assert!((ClassicalDistance::Hellinger.eval(&r, &c) - (2.0 as F).sqrt()).abs() < 1e-12);
+        assert!((ClassicalDistance::ChiSquare.eval(&r, &c) - 2.0).abs() < 1e-12);
+        assert!((ClassicalDistance::TotalVariation.eval(&r, &c) - 1.0).abs() < 1e-12);
+        assert!((ClassicalDistance::SquaredEuclidean.eval(&r, &c) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_handles_joint_zeros() {
+        let r = h(&[1.0, 0.0, 0.0]);
+        let c = h(&[1.0, 0.0, 0.0]);
+        assert_eq!(ClassicalDistance::ChiSquare.eval(&r, &c), 0.0);
+    }
+
+    #[test]
+    fn mahalanobis_identity_is_sq_euclidean() {
+        let mut rng = seeded_rng(4);
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        let maha = MahalanobisDistance::identity(12);
+        let want = ClassicalDistance::SquaredEuclidean.eval(&r, &c);
+        assert!((maha.eval(&r, &c) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pairwise_shape_and_diagonal() {
+        let mut rng = seeded_rng(9);
+        let set: Vec<Histogram> =
+            (0..5).map(|_| Histogram::sample_uniform(8, &mut rng)).collect();
+        let m = pairwise(
+            |a, b| ClassicalDistance::Hellinger.eval(a, b),
+            &set,
+            &set,
+        );
+        assert_eq!((m.rows(), m.cols()), (5, 5));
+        for i in 0..5 {
+            assert_eq!(m.get(i, i), 0.0);
+            for j in 0..5 {
+                assert!((m.get(i, j) - m.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// All four classical distances are symmetric, non-negative and
+    /// satisfy the coincidence axiom on random histograms.
+    #[test]
+    fn prop_distance_axioms() {
+        for seed in 0..150u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(2, 40);
+            let r = Histogram::sample_uniform(d, &mut rng);
+            let c = Histogram::sample_uniform(d, &mut rng);
+            for dist in ClassicalDistance::ALL {
+                let rc = dist.eval(&r, &c);
+                let cr = dist.eval(&c, &r);
+                assert!(rc >= 0.0);
+                assert!((rc - cr).abs() < 1e-12);
+                assert!(dist.eval(&r, &r).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// TV is bounded by 1; Hellinger by sqrt(2).
+    #[test]
+    fn prop_known_bounds() {
+        for seed in 0..150u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(2, 40);
+            let r = Histogram::sample_dirichlet(d, 0.3, &mut rng);
+            let c = Histogram::sample_dirichlet(d, 0.3, &mut rng);
+            assert!(ClassicalDistance::TotalVariation.eval(&r, &c) <= 1.0 + 1e-12);
+            assert!(ClassicalDistance::Hellinger.eval(&r, &c) <= (2.0 as F).sqrt() + 1e-12);
+        }
+    }
+}

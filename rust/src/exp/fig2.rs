@@ -1,0 +1,444 @@
+//! Figure 2 — classification error of SVMs with e^{−d/t} kernels, for
+//! every candidate distance, as a function of training-set size.
+//!
+//! Protocol (paper §5.1.1, reproduced exactly, scaled per DESIGN.md §7):
+//!
+//! * dataset of N digit histograms on a g×g grid (paper: MNIST 20×20,
+//!   N ∈ {3,5,12,17,25}·10³; default here: synthetic digits, smaller N);
+//! * 4-fold cross validation with **1 fold train / 3 folds test**,
+//!   repeated R times (paper: 6 → 24 experiments; default 2 → 8);
+//! * kernel e^{−d/t}, t chosen per training fold by internal CV within
+//!   {1, q10, q20, q50} of observed training distances;
+//! * SVM regularization C chosen by internal 2-fold/2-repeat CV in
+//!   10^{−2:2:4}; indefinite Gram matrices repaired by a diagonal shift;
+//! * Sinkhorn λ ∈ {5,7,9,11}/q50(M) selected the same way, 20 fixed
+//!   iterations; Independence kernel exponent a ∈ {0.01, 0.1, 1}.
+
+use crate::data::{DigitConfig, SyntheticDigits};
+use crate::distances::{
+    pairwise, quantile_bandwidths, ClassicalDistance, KernelBuilder,
+    MahalanobisDistance,
+};
+use crate::linalg::Matrix;
+use crate::metric::GridMetric;
+use crate::simplex::{seeded_rng, Histogram};
+use crate::sinkhorn::{independence_distance, SinkhornConfig, SinkhornEngine};
+use crate::svm::{error_rate, stratified_folds, MulticlassSvm, SvmConfig};
+use crate::F;
+
+/// Which distances to evaluate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DistanceKind {
+    Classical(ClassicalDistance),
+    /// (r−c)ᵀ W (r−c) with W = exp(−M∘M) (a PSD Gaussian kernel on pixel
+    /// positions; the paper's non-competitive baseline).
+    Mahalanobis,
+    /// d_{M^a,0} = rᵀ M^a c with a selected in {0.01, 0.1, 1}.
+    Independence,
+    /// Exact optimal transportation distance (network simplex).
+    Emd,
+    /// Dual-Sinkhorn divergence, λ ∈ {5,7,9,11}/q50(M), 20 iterations.
+    Sinkhorn,
+}
+
+impl DistanceKind {
+    pub fn name(&self) -> String {
+        match self {
+            DistanceKind::Classical(c) => c.name().to_string(),
+            DistanceKind::Mahalanobis => "mahalanobis".into(),
+            DistanceKind::Independence => "independence".into(),
+            DistanceKind::Emd => "emd".into(),
+            DistanceKind::Sinkhorn => "sinkhorn".into(),
+        }
+    }
+
+    /// The full Figure 2 roster.
+    pub fn all() -> Vec<DistanceKind> {
+        let mut v: Vec<DistanceKind> = ClassicalDistance::ALL
+            .iter()
+            .map(|&c| DistanceKind::Classical(c))
+            .collect();
+        v.push(DistanceKind::Mahalanobis);
+        v.push(DistanceKind::Independence);
+        v.push(DistanceKind::Emd);
+        v.push(DistanceKind::Sinkhorn);
+        v
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    /// Digit grid side (paper: 20 → d=400).
+    pub grid: usize,
+    /// Dataset sizes to sweep (the figure's x axis).
+    pub ns: Vec<usize>,
+    pub folds: usize,
+    pub repeats: usize,
+    pub distances: Vec<DistanceKind>,
+    /// Fixed Sinkhorn iteration budget (paper: 20).
+    pub sinkhorn_iterations: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Self {
+            grid: 12,
+            ns: vec![40, 100, 200],
+            folds: 4,
+            repeats: 2,
+            distances: DistanceKind::all(),
+            sinkhorn_iterations: 20,
+            seed: 2013,
+        }
+    }
+}
+
+/// One figure point: a distance at a dataset size.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub distance: String,
+    pub n: usize,
+    pub mean_error: F,
+    pub std_error: F,
+    pub experiments: usize,
+}
+
+/// Parameterized variants of one distance: named full pairwise matrices.
+struct DistanceFamily {
+    #[allow(dead_code)]
+    name: String,
+    /// (param label, full n×n distance matrix).
+    variants: Vec<(String, Matrix)>,
+}
+
+/// Run the experiment.
+pub fn run(config: &Fig2Config) -> Vec<Fig2Point> {
+    let gen = SyntheticDigits::new(DigitConfig { grid: config.grid, ..Default::default() });
+    let metric = GridMetric::new(config.grid, config.grid).cost_matrix();
+    let q50 = metric.median_cost();
+    let mut out = Vec::new();
+
+    for &n in &config.ns {
+        // Accumulate errors across folds × repeats per distance.
+        let mut errors: Vec<Vec<F>> =
+            vec![Vec::new(); config.distances.len()];
+
+        for repeat in 0..config.repeats {
+            let mut rng =
+                seeded_rng(config.seed ^ (n as u64) << 24 ^ (repeat as u64) << 8);
+            let dataset = gen.dataset(n, &mut rng);
+            let histograms: Vec<Histogram> =
+                dataset.iter().map(|s| s.histogram.clone()).collect();
+            let labels: Vec<usize> = dataset.iter().map(|s| s.label).collect();
+
+            // Full pairwise matrices, one per (distance, param).
+            let families: Vec<DistanceFamily> = config
+                .distances
+                .iter()
+                .map(|kind| family(kind, &histograms, &metric, q50, config))
+                .collect();
+
+            let folds = stratified_folds(&labels, config.folds, &mut rng);
+            for f in 0..config.folds {
+                // 1 fold train, k-1 folds test.
+                let train: Vec<usize> =
+                    (0..n).filter(|&i| folds[i] == f).collect();
+                let test: Vec<usize> =
+                    (0..n).filter(|&i| folds[i] != f).collect();
+                for (k, fam) in families.iter().enumerate() {
+                    let err = evaluate_family(fam, &labels, &train, &test, &mut rng);
+                    errors[k].push(err);
+                }
+            }
+        }
+
+        for (k, kind) in config.distances.iter().enumerate() {
+            let (mean, std) = super::mean_std(&errors[k]);
+            out.push(Fig2Point {
+                distance: kind.name(),
+                n,
+                mean_error: mean,
+                std_error: std,
+                experiments: errors[k].len(),
+            });
+        }
+    }
+    out
+}
+
+/// Build the pairwise matrices for one distance kind.
+fn family(
+    kind: &DistanceKind,
+    hists: &[Histogram],
+    metric: &crate::metric::CostMatrix,
+    q50: F,
+    config: &Fig2Config,
+) -> DistanceFamily {
+    match kind {
+        DistanceKind::Classical(c) => DistanceFamily {
+            name: c.name().to_string(),
+            variants: vec![(
+                "".into(),
+                pairwise(|a, b| c.eval(a, b), hists, hists),
+            )],
+        },
+        DistanceKind::Mahalanobis => {
+            let d = metric.dim();
+            let mut w = Matrix::zeros(d, d);
+            for i in 0..d {
+                for j in 0..d {
+                    let m = metric.get(i, j);
+                    w.set(i, j, (-m * m).exp());
+                }
+            }
+            let maha = MahalanobisDistance::new(w);
+            DistanceFamily {
+                name: "mahalanobis".into(),
+                variants: vec![(
+                    "".into(),
+                    pairwise(|a, b| maha.eval(a, b), hists, hists),
+                )],
+            }
+        }
+        DistanceKind::Independence => {
+            // a in {0.01, 0.1, 1} over the *squared* grid EDM (Property 2
+            // requires a Euclidean distance matrix; (M^2)^a is one for
+            // a <= 1).
+            let m2 = metric.powf(2.0);
+            let variants = [0.01, 0.1, 1.0]
+                .iter()
+                .map(|&a| {
+                    let ma = m2.powf(a);
+                    (
+                        format!("a={a}"),
+                        pairwise(
+                            |r, c| independence_distance(&ma, r, c),
+                            hists,
+                            hists,
+                        ),
+                    )
+                })
+                .collect();
+            DistanceFamily { name: "independence".into(), variants }
+        }
+        DistanceKind::Emd => {
+            let solver = crate::ot::EmdSolver::new(metric);
+            DistanceFamily {
+                name: "emd".into(),
+                variants: vec![(
+                    "".into(),
+                    symmetric_pairwise(hists, |a, b| {
+                        solver.solve(a, b).expect("emd").cost
+                    }),
+                )],
+            }
+        }
+        DistanceKind::Sinkhorn => {
+            let variants = [5.0, 7.0, 9.0, 11.0]
+                .iter()
+                .map(|&lam_units| {
+                    let lambda = lam_units / q50;
+                    let engine = SinkhornEngine::with_config(
+                        metric,
+                        SinkhornConfig::fixed(lambda, config.sinkhorn_iterations),
+                    );
+                    (
+                        format!("l={lam_units}"),
+                        symmetric_pairwise(hists, |a, b| engine.distance(a, b).value),
+                    )
+                })
+                .collect();
+            DistanceFamily { name: "sinkhorn".into(), variants }
+        }
+    }
+}
+
+/// Pairwise matrix exploiting d(a,b) = d(b,a) (halves the expensive EMD /
+/// Sinkhorn work; also symmetrizes fixed-iteration Sinkhorn outputs).
+fn symmetric_pairwise(
+    hists: &[Histogram],
+    dist: impl Fn(&Histogram, &Histogram) -> F,
+) -> Matrix {
+    let n = hists.len();
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = dist(&hists[i], &hists[j]);
+            m.set(i, j, v);
+            m.set(j, i, v);
+        }
+    }
+    m
+}
+
+/// Evaluate one distance family on one outer fold: select (variant, t, C)
+/// by internal CV on the training fold, retrain, measure test error.
+fn evaluate_family(
+    fam: &DistanceFamily,
+    labels: &[usize],
+    train: &[usize],
+    test: &[usize],
+    rng: &mut crate::rng::Rng,
+) -> F {
+    let train_labels: Vec<usize> = train.iter().map(|&i| labels[i]).collect();
+
+    // --- model selection on the training fold ---
+    let mut best: Option<(F, usize, F, F)> = None; // (cv_err, variant, t, c)
+    for (vi, (_, dmat)) in fam.variants.iter().enumerate() {
+        // Bandwidth grid from observed training distances.
+        let mut observed = Vec::with_capacity(train.len() * train.len() / 2);
+        for (a, &i) in train.iter().enumerate() {
+            for &j in &train[a + 1..] {
+                observed.push(dmat.get(i, j));
+            }
+        }
+        if observed.is_empty() {
+            observed.push(1.0);
+        }
+        for t in quantile_bandwidths(&observed) {
+            for c in SvmConfig::c_grid() {
+                let cv = internal_cv_error(dmat, labels, train, t, c, rng);
+                if best.map(|(e, _, _, _)| cv < e).unwrap_or(true) {
+                    best = Some((cv, vi, t, c));
+                }
+            }
+        }
+    }
+    let (_, vi, t, c) = best.expect("at least one parameter combo");
+    let dmat = &fam.variants[vi].1;
+
+    // --- final train on the full training fold, evaluate on test ---
+    let kb = KernelBuilder::new(t);
+    let train_gram = kb.square_gram(&submatrix(dmat, train, train));
+    let svm = MulticlassSvm::train(
+        &train_gram,
+        &train_labels,
+        SvmConfig { c, ..Default::default() },
+    );
+    let test_rows = kb.cross_gram(&submatrix(dmat, test, train));
+    let preds = svm.predict_batch(&test_rows);
+    let truth: Vec<usize> = test.iter().map(|&i| labels[i]).collect();
+    error_rate(&preds, &truth)
+}
+
+/// Internal 2-fold / 2-repeat CV error of (t, C) on the training fold
+/// (the paper's §5.1.1 selection scheme).
+fn internal_cv_error(
+    dmat: &Matrix,
+    labels: &[usize],
+    train: &[usize],
+    t: F,
+    c: F,
+    rng: &mut crate::rng::Rng,
+) -> F {
+    let kb = KernelBuilder::new(t);
+    let train_labels: Vec<usize> = train.iter().map(|&i| labels[i]).collect();
+    let mut errs = Vec::with_capacity(4);
+    for _ in 0..2 {
+        let folds = stratified_folds(&train_labels, 2, rng);
+        for f in 0..2 {
+            let sub_tr: Vec<usize> = (0..train.len())
+                .filter(|&k| folds[k] == f)
+                .map(|k| train[k])
+                .collect();
+            let sub_te: Vec<usize> = (0..train.len())
+                .filter(|&k| folds[k] != f)
+                .map(|k| train[k])
+                .collect();
+            if sub_tr.is_empty() || sub_te.is_empty() {
+                continue;
+            }
+            let sub_tr_labels: Vec<usize> =
+                sub_tr.iter().map(|&i| labels[i]).collect();
+            // Internal folds can miss classes entirely at tiny scales.
+            let mut classes = sub_tr_labels.clone();
+            classes.sort_unstable();
+            classes.dedup();
+            if classes.len() < 2 {
+                continue;
+            }
+            let gram = kb.square_gram(&submatrix(dmat, &sub_tr, &sub_tr));
+            let svm = MulticlassSvm::train(
+                &gram,
+                &sub_tr_labels,
+                SvmConfig { c, ..Default::default() },
+            );
+            let rows = kb.cross_gram(&submatrix(dmat, &sub_te, &sub_tr));
+            let preds = svm.predict_batch(&rows);
+            let truth: Vec<usize> = sub_te.iter().map(|&i| labels[i]).collect();
+            errs.push(error_rate(&preds, &truth));
+        }
+    }
+    if errs.is_empty() {
+        1.0
+    } else {
+        errs.iter().sum::<F>() / errs.len() as F
+    }
+}
+
+/// Extract the (rows × cols) submatrix of a full pairwise matrix.
+fn submatrix(dmat: &Matrix, rows: &[usize], cols: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(rows.len(), cols.len());
+    for (a, &i) in rows.iter().enumerate() {
+        for (b, &j) in cols.iter().enumerate() {
+            out.set(a, b, dmat.get(i, j));
+        }
+    }
+    out
+}
+
+/// Render the figure as a table (rows grouped by N).
+pub fn render(points: &[Fig2Point]) -> String {
+    let mut t = super::Table::new(&["n", "distance", "test_error", "std", "runs"]);
+    for p in points {
+        t.row(&[
+            p.n.to_string(),
+            p.distance.clone(),
+            format!("{:.4}", p.mean_error),
+            format!("{:.4}", p.std_error),
+            p.experiments.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_protocol_runs_end_to_end() {
+        let config = Fig2Config {
+            grid: 8,
+            ns: vec![40],
+            folds: 4,
+            repeats: 1,
+            distances: vec![
+                DistanceKind::Classical(ClassicalDistance::TotalVariation),
+                DistanceKind::Sinkhorn,
+            ],
+            sinkhorn_iterations: 10,
+            seed: 1,
+        };
+        let pts = run(&config);
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert_eq!(p.experiments, 4);
+            assert!(p.mean_error >= 0.0 && p.mean_error <= 1.0);
+            // 10 classes, 10 train samples: anything clearly below the
+            // 90% chance line means the pipeline learns.
+            assert!(p.mean_error < 0.85, "{}: {}", p.distance, p.mean_error);
+        }
+        let s = render(&pts);
+        assert!(s.contains("sinkhorn"));
+    }
+
+    #[test]
+    fn submatrix_extracts() {
+        let m = Matrix::from_vec(3, 3, vec![0., 1., 2., 3., 4., 5., 6., 7., 8.]);
+        let s = submatrix(&m, &[2, 0], &[1]);
+        assert_eq!(s.data(), &[7., 1.]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Figure 3 — the gap (d_M^λ − d_M)/d_M between the Sinkhorn distance and
+//! the exact EMD, as λ grows.
+//!
+//! Paper §5.2: boxplots of the relative gap over pairs of distinct MNIST
+//! digits. The gap is non-negative (the entropy penalty can only add
+//! cost), decreases monotonically in λ, and plateaus around ~10% even at
+//! large λ — which the paper argues is fine, since closeness to the EMD
+//! is not the goal. We reproduce the distribution over synthetic-digit
+//! pairs (DESIGN.md §7), with the exact denominator from the network
+//! simplex.
+
+use crate::data::{DigitClass, SyntheticDigits};
+use crate::ot::EmdSolver;
+use crate::simplex::{seeded_rng, Histogram};
+use crate::sinkhorn::{SinkhornConfig, SinkhornEngine};
+use crate::F;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    /// Digit grid side (paper: 20 → d=400; default scaled to 12 → d=144
+    /// to keep the exact-EMD denominators tractable on one core).
+    pub grid: usize,
+    /// Number of distinct digit pairs (paper: 40²=1600).
+    pub pairs: usize,
+    pub lambdas: Vec<F>,
+    /// Convergence tolerance for the Sinkhorn side.
+    pub tolerance: F,
+    pub seed: u64,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Self {
+            grid: 12,
+            pairs: 36,
+            lambdas: vec![1.0, 2.0, 5.0, 9.0, 15.0, 25.0, 50.0],
+            tolerance: 1e-6,
+            seed: 11,
+        }
+    }
+}
+
+/// Boxplot of relative gaps at one λ.
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    pub lambda: F,
+    pub gaps: super::BoxStats,
+    pub samples: usize,
+}
+
+/// Run the study. λ values are interpreted in units of 1/q50(M) — i.e.
+/// the engine receives λ/median(M), matching §5.1.2's normalization.
+pub fn run(config: &Fig3Config) -> Vec<Fig3Point> {
+    let gen = SyntheticDigits::new(crate::data::DigitConfig {
+        grid: config.grid,
+        ..Default::default()
+    });
+    let metric = crate::metric::GridMetric::new(config.grid, config.grid).cost_matrix();
+    let q50 = metric.median_cost();
+    let mut rng = seeded_rng(config.seed);
+
+    // Distinct digit pairs (different random draws; labels may repeat as
+    // in the paper's random MNIST pairs).
+    let pairs: Vec<(Histogram, Histogram)> = (0..config.pairs)
+        .map(|k| {
+            let a = gen.sample(DigitClass(k % 10), &mut rng).histogram;
+            let b = gen.sample(DigitClass((k / 10 + k) % 10), &mut rng).histogram;
+            (a, b)
+        })
+        .collect();
+
+    // Exact denominators.
+    let solver = EmdSolver::new(&metric);
+    let exact: Vec<F> = pairs
+        .iter()
+        .map(|(a, b)| solver.solve(a, b).expect("emd solve").cost)
+        .collect();
+
+    let mut out = Vec::new();
+    for &lambda in &config.lambdas {
+        let engine = SinkhornEngine::with_config(
+            &metric,
+            SinkhornConfig {
+                lambda: lambda / q50,
+                tolerance: config.tolerance,
+                max_iterations: 500_000,
+                ..Default::default()
+            },
+        );
+        let gaps: Vec<F> = pairs
+            .iter()
+            .zip(&exact)
+            .map(|((a, b), &dm)| {
+                let dl = engine.distance(a, b).value;
+                (dl - dm) / dm
+            })
+            .collect();
+        out.push(Fig3Point {
+            lambda,
+            gaps: super::BoxStats::from(&gaps),
+            samples: gaps.len(),
+        });
+    }
+    out
+}
+
+/// Render the boxplot series.
+pub fn render(points: &[Fig3Point]) -> String {
+    let mut t = super::Table::new(&[
+        "lambda", "min", "q1", "median", "q3", "max", "samples",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{:.1}", p.lambda),
+            format!("{:.4}", p.gaps.min),
+            format!("{:.4}", p.gaps.q1),
+            format!("{:.4}", p.gaps.median),
+            format!("{:.4}", p.gaps.q3),
+            format!("{:.4}", p.gaps.max),
+            p.samples.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gap_is_positive_and_decreasing() {
+        let config = Fig3Config {
+            grid: 8,
+            pairs: 6,
+            lambdas: vec![1.0, 5.0, 25.0],
+            ..Default::default()
+        };
+        let pts = run(&config);
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert!(p.gaps.min > -1e-9, "gap went negative: {:?}", p.gaps);
+        }
+        // Median gap decreases with lambda (Fig. 3 shape).
+        assert!(pts[0].gaps.median > pts[1].gaps.median);
+        assert!(pts[1].gaps.median > pts[2].gaps.median);
+        let s = render(&pts);
+        assert!(s.contains("median"));
+    }
+}

@@ -1,0 +1,254 @@
+//! Figure 4 — wallclock per distance vs dimension: exact EMD solvers vs
+//! Sinkhorn (CPU) vs Sinkhorn (batched XLA/PJRT runtime).
+//!
+//! Paper §5.3: histograms uniform on Σ_d, ground metric from Gaussian
+//! points in R^{d/10} divided by its median, Sinkhorn run to tolerance
+//! 0.01 with λ ∈ {1, 9}. Our columns map to the paper's as:
+//!
+//! * `emd` — our transportation network simplex (the Rubner/FastEMD
+//!   algorithm family). Mirroring "Rubner's implementation cannot be run
+//!   for histograms larger than d=512", the harness records — but flags —
+//!   points past the `emd_cap`.
+//! * `sinkhorn_cpu λ` — Algorithm 1 on one CPU core (paper's single-core
+//!   matlab column).
+//! * `sinkhorn_xla λ` — the paper's GPGPU column, reinterpreted for this
+//!   stack: the batched AOT artifact executed through PJRT, amortized
+//!   over a full batch (per-distance time = batch time / batch size).
+
+use crate::metric::RandomMetric;
+use crate::ot::EmdSolver;
+use crate::runtime::{Flavor, XlaRuntime};
+use crate::simplex::{seeded_rng, Histogram};
+use crate::sinkhorn::{SinkhornConfig, SinkhornEngine};
+use crate::util::bench::Bench;
+use crate::F;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Fig4Config {
+    pub dims: Vec<usize>,
+    pub lambdas: Vec<F>,
+    pub tolerance: F,
+    /// Mirror of the "Rubner cannot run d>512" constraint.
+    pub emd_cap: usize,
+    /// Skip exact EMD entirely (for quick runs).
+    pub skip_emd: bool,
+    /// Artifact directory for the XLA column (None = skip the column).
+    pub artifact_dir: Option<std::path::PathBuf>,
+    pub seed: u64,
+    /// Timing harness parameters.
+    pub bench: Bench,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Self {
+            dims: vec![64, 128, 256, 512],
+            lambdas: vec![1.0, 9.0],
+            tolerance: 0.01,
+            emd_cap: 512,
+            skip_emd: false,
+            artifact_dir: Some(std::path::PathBuf::from("artifacts")),
+            seed: 7,
+            bench: Bench { warmup: 1, max_samples: 9, budget_secs: 20.0 },
+        }
+    }
+}
+
+/// One (solver, d) timing.
+#[derive(Debug, Clone)]
+pub struct Fig4Point {
+    pub solver: String,
+    pub d: usize,
+    /// Median seconds per single distance.
+    pub seconds_per_distance: F,
+    /// True when past the solver's practical cap (reported but flagged).
+    pub over_cap: bool,
+}
+
+/// Run the sweep.
+pub fn run(config: &Fig4Config) -> Vec<Fig4Point> {
+    let mut out = Vec::new();
+    let mut runtime = config
+        .artifact_dir
+        .as_ref()
+        .and_then(|dir| XlaRuntime::new(dir).ok());
+
+    for &d in &config.dims {
+        let mut rng = seeded_rng(config.seed ^ (d as u64) << 18);
+        let metric = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+
+        // --- exact EMD (network simplex) ---
+        if !config.skip_emd && d <= config.emd_cap {
+            let solver = EmdSolver::new(&metric);
+            let t = config.bench.time(|| solver.solve(&r, &c).unwrap().cost);
+            out.push(Fig4Point {
+                solver: "emd".into(),
+                d,
+                seconds_per_distance: t.median_ns / 1e9,
+                over_cap: false,
+            });
+        } else if !config.skip_emd {
+            out.push(Fig4Point {
+                solver: "emd".into(),
+                d,
+                seconds_per_distance: F::NAN,
+                over_cap: true,
+            });
+        }
+
+        // --- Sinkhorn CPU, convergence-driven (paper tolerance) ---
+        for &lambda in &config.lambdas {
+            let engine = SinkhornEngine::with_config(
+                &metric,
+                SinkhornConfig {
+                    lambda,
+                    tolerance: config.tolerance,
+                    max_iterations: 200_000,
+                    ..Default::default()
+                },
+            );
+            let t = config.bench.time(|| engine.distance(&r, &c).value);
+            out.push(Fig4Point {
+                solver: format!("sinkhorn_cpu l={lambda}"),
+                d,
+                seconds_per_distance: t.median_ns / 1e9,
+                over_cap: false,
+            });
+        }
+
+        // --- Sinkhorn CPU, vectorized batch (Algorithm 1 matrix form) ---
+        for &lambda in &config.lambdas {
+            let batch = 64usize;
+            let engine = crate::sinkhorn::BatchSinkhorn::new(
+                &metric,
+                SinkhornConfig {
+                    lambda,
+                    tolerance: config.tolerance,
+                    max_iterations: 200_000,
+                    ..Default::default()
+                },
+            );
+            let cs: Vec<Histogram> = (0..batch)
+                .map(|_| Histogram::sample_uniform(d, &mut rng))
+                .collect();
+            let t = config.bench.time(|| engine.distances(&r, &cs).len());
+            out.push(Fig4Point {
+                solver: format!("sinkhorn_cpu_batch l={lambda} (batch {batch})"),
+                d,
+                seconds_per_distance: t.median_ns / 1e9 / batch as F,
+                over_cap: false,
+            });
+        }
+
+        // --- Sinkhorn XLA batched (fixed 20 iterations, amortized) ---
+        if let Some(rt) = runtime.as_mut() {
+            for &lambda in &config.lambdas {
+                let Ok(variant) = rt.select(d, usize::MAX, Flavor::Xla) else {
+                    continue;
+                };
+                let batch = variant.n;
+                let cs: Vec<Histogram> = (0..batch)
+                    .map(|_| Histogram::sample_uniform(d, &mut rng))
+                    .collect();
+                let r_cols: Vec<Vec<F>> =
+                    (0..batch).map(|_| r.values().to_vec()).collect();
+                let c_cols: Vec<Vec<F>> =
+                    cs.iter().map(|h| h.values().to_vec()).collect();
+                // Compile outside the timed region (serving warm state).
+                rt.execute(&variant, &metric, lambda, &r_cols, &c_cols).unwrap();
+                let t = config.bench.time(|| {
+                    rt.execute(&variant, &metric, lambda, &r_cols, &c_cols)
+                        .unwrap()
+                        .distances
+                        .len()
+                });
+                out.push(Fig4Point {
+                    solver: format!("sinkhorn_xla l={lambda} (batch {batch})"),
+                    d,
+                    seconds_per_distance: t.median_ns / 1e9 / batch as F,
+                    over_cap: false,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Render the figure's series plus the §5.3 headline speedup ratios.
+pub fn render(points: &[Fig4Point]) -> String {
+    let mut t = super::Table::new(&["solver", "d", "sec/distance", "note"]);
+    for p in points {
+        t.row(&[
+            p.solver.clone(),
+            p.d.to_string(),
+            if p.seconds_per_distance.is_nan() {
+                "n/a".into()
+            } else {
+                format!("{:.3e}", p.seconds_per_distance)
+            },
+            if p.over_cap { "over solver cap".into() } else { String::new() },
+        ]);
+    }
+    let mut s = t.render();
+    // Headline ratio at the largest dimension where both ran.
+    let mut best: Option<(usize, F, F)> = None;
+    for p in points.iter().filter(|p| p.solver == "emd" && !p.over_cap) {
+        if let Some(q) = points.iter().find(|q| {
+            q.d == p.d && q.solver.starts_with("sinkhorn_cpu l=9")
+        }) {
+            if best.map(|(d, _, _)| p.d > d).unwrap_or(true) {
+                best = Some((p.d, p.seconds_per_distance, q.seconds_per_distance));
+            }
+        }
+    }
+    if let Some((d, emd, sk)) = best {
+        s.push_str(&format!(
+            "\nheadline: at d={d}, sinkhorn_cpu(l=9) is {:.0}x faster than exact EMD\n",
+            emd / sk
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_shapes() {
+        let config = Fig4Config {
+            dims: vec![16, 32],
+            lambdas: vec![9.0],
+            artifact_dir: None,
+            skip_emd: false,
+            bench: Bench { warmup: 0, max_samples: 3, budget_secs: 5.0 },
+            ..Default::default()
+        };
+        let pts = run(&config);
+        // 2 dims x (emd + 1 cpu lambda + 1 cpu batch lambda) = 6 rows.
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().all(|p| p.seconds_per_distance > 0.0));
+        let s = render(&pts);
+        assert!(s.contains("emd"));
+        assert!(s.contains("headline"));
+    }
+
+    #[test]
+    fn emd_cap_flags_large_dims() {
+        let config = Fig4Config {
+            dims: vec![32],
+            lambdas: vec![],
+            emd_cap: 16,
+            artifact_dir: None,
+            bench: Bench { warmup: 0, max_samples: 1, budget_secs: 1.0 },
+            ..Default::default()
+        };
+        let pts = run(&config);
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].over_cap);
+        assert!(pts[0].seconds_per_distance.is_nan());
+    }
+}

@@ -1,0 +1,149 @@
+//! Figure 5 — iterations to converge vs dimension, per λ.
+//!
+//! Paper §5.4: histograms sampled uniformly on Σ_d, random Gaussian-point
+//! ground metric (median-normalized), convergence when the change in the
+//! scaling iterate drops below 0.01 in Euclidean norm. As λ grows and
+//! e^{−λM} becomes diagonally dominant, the fixed point takes longer to
+//! reach — the plot the paper uses to justify a fixed iteration budget.
+
+use crate::metric::RandomMetric;
+use crate::simplex::{seeded_rng, Histogram};
+use crate::sinkhorn::{SinkhornConfig, SinkhornEngine};
+use crate::F;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Fig5Config {
+    pub dims: Vec<usize>,
+    pub lambdas: Vec<F>,
+    /// Random (r, c) pairs averaged per point.
+    pub trials: usize,
+    pub tolerance: F,
+    pub seed: u64,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Self {
+            dims: vec![64, 128, 256, 512],
+            lambdas: vec![1.0, 5.0, 9.0, 25.0, 50.0],
+            trials: 8,
+            tolerance: 0.01,
+            seed: 42,
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig5Point {
+    pub d: usize,
+    pub lambda: F,
+    pub mean_iterations: F,
+    pub std_iterations: F,
+    /// Fraction of trials that hit the iteration cap instead of the
+    /// tolerance (should be 0 at sane settings).
+    pub capped_fraction: F,
+}
+
+/// Run the sweep.
+pub fn run(config: &Fig5Config) -> Vec<Fig5Point> {
+    let mut out = Vec::new();
+    for &d in &config.dims {
+        let mut rng = seeded_rng(config.seed ^ (d as u64) << 20);
+        let metric = RandomMetric::new(d).sample(&mut rng);
+        // Pre-draw the histogram pairs so every lambda sees identical
+        // workloads (paired comparisons across the lambda grid).
+        let pairs: Vec<(Histogram, Histogram)> = (0..config.trials)
+            .map(|_| {
+                (
+                    Histogram::sample_uniform(d, &mut rng),
+                    Histogram::sample_uniform(d, &mut rng),
+                )
+            })
+            .collect();
+        for &lambda in &config.lambdas {
+            let engine = SinkhornEngine::with_config(
+                &metric,
+                SinkhornConfig {
+                    lambda,
+                    tolerance: config.tolerance,
+                    max_iterations: 200_000,
+                    ..Default::default()
+                },
+            );
+            let mut iters = Vec::with_capacity(pairs.len());
+            let mut capped = 0usize;
+            for (r, c) in &pairs {
+                let sk = engine.distance(r, c);
+                iters.push(sk.stats.iterations as F);
+                if !sk.stats.converged {
+                    capped += 1;
+                }
+            }
+            let (mean, std) = super::mean_std(&iters);
+            out.push(Fig5Point {
+                d,
+                lambda,
+                mean_iterations: mean,
+                std_iterations: std,
+                capped_fraction: capped as F / pairs.len() as F,
+            });
+        }
+    }
+    out
+}
+
+/// Render the paper's series as a table (one row per (d, λ)).
+pub fn render(points: &[Fig5Point]) -> String {
+    let mut t = super::Table::new(&["d", "lambda", "iterations", "std", "capped"]);
+    for p in points {
+        t.row(&[
+            p.d.to_string(),
+            format!("{:.1}", p.lambda),
+            format!("{:.1}", p.mean_iterations),
+            format!("{:.1}", p.std_iterations),
+            format!("{:.2}", p.capped_fraction),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iterations_increase_with_lambda() {
+        // The Figure 5 shape: more iterations for larger lambda.
+        let config = Fig5Config {
+            dims: vec![32],
+            lambdas: vec![1.0, 9.0, 50.0],
+            trials: 4,
+            ..Default::default()
+        };
+        let pts = run(&config);
+        assert_eq!(pts.len(), 3);
+        assert!(
+            pts[0].mean_iterations < pts[1].mean_iterations,
+            "{} !< {}",
+            pts[0].mean_iterations,
+            pts[1].mean_iterations
+        );
+        assert!(pts[1].mean_iterations < pts[2].mean_iterations);
+        assert!(pts.iter().all(|p| p.capped_fraction == 0.0));
+    }
+
+    #[test]
+    fn render_has_one_row_per_point() {
+        let config = Fig5Config {
+            dims: vec![16, 32],
+            lambdas: vec![1.0, 9.0],
+            trials: 2,
+            ..Default::default()
+        };
+        let pts = run(&config);
+        let s = render(&pts);
+        assert_eq!(s.lines().count(), 2 + pts.len());
+    }
+}

@@ -1,0 +1,120 @@
+//! Experiment harnesses — one module per paper figure.
+//!
+//! Each harness is a library function returning structured rows, shared by
+//! three consumers: the `repro` CLI (prints the paper's series), the
+//! criterion-style benches under `rust/benches/`, and the integration
+//! smoke tests. Scale parameters default to values sized for this
+//! single-core testbed; every harness accepts paper-scale overrides
+//! (see DESIGN.md §7 for the documented substitutions).
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+
+use crate::F;
+
+/// Fixed-width table printer used by all harnesses (stable, greppable).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (cell, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{cell:>w$}  ", w = w));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[F]) -> (F, F) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<F>() / xs.len() as F;
+    let var =
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<F>() / xs.len() as F;
+    (mean, var.sqrt())
+}
+
+/// Five-number boxplot summary (min, q1, median, q3, max).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxStats {
+    pub min: F,
+    pub q1: F,
+    pub median: F,
+    pub q3: F,
+    pub max: F,
+}
+
+impl BoxStats {
+    pub fn from(xs: &[F]) -> Self {
+        assert!(!xs.is_empty(), "boxplot of empty sample");
+        let q = |s: F| crate::linalg::quantile(xs, s);
+        Self { min: q(0.0), q1: q(0.25), median: q(0.5), q3: q(0.75), max: q(1.0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1.5".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0 / 3.0 as F).sqrt()).abs() < 1e-12);
+        let b = BoxStats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(b.median, 3.0);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 5.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! # sinkhorn-rs — Lightspeed Optimal Transportation Distances
+//!
+//! A production-grade reproduction of *Cuturi, "Sinkhorn Distances:
+//! Lightspeed Computation of Optimal Transportation Distances"* (2013),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — the Sinkhorn-Knopp fixed-point iteration
+//!   is written as a Pallas kernel inside a batched JAX program and
+//!   AOT-lowered to HLO text artifacts (`python/compile/`, `artifacts/`).
+//! * **Layer 3 (this crate)** — a Rust coordinator that loads the
+//!   artifacts through PJRT ([`runtime`]), routes and batches distance
+//!   queries ([`coordinator`]), and ships every substrate the paper's
+//!   evaluation needs: an exact EMD solver ([`ot`]), a pure-Rust Sinkhorn
+//!   engine ([`sinkhorn`]), classical histogram distances ([`distances`]),
+//!   a kernel SVM ([`svm`]), ground-metric builders ([`metric`]) and
+//!   workload generators ([`data`], [`simplex`]).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for measured reproductions of the paper's Figures 2–5.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sinkhorn_rs::prelude::*;
+//!
+//! // A ground metric over a 4x4 pixel grid and two random histograms.
+//! let m = GridMetric::new(4, 4).cost_matrix();
+//! let mut rng = seeded_rng(0);
+//! let r = Histogram::sample_uniform(16, &mut rng);
+//! let c = Histogram::sample_uniform(16, &mut rng);
+//!
+//! // Exact optimal transportation distance (network simplex)...
+//! let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+//! // ...and its entropically-smoothed Sinkhorn counterpart.
+//! let sk = SinkhornEngine::new(&m, 9.0).distance(&r, &c);
+//! assert!(sk.value >= exact - 1e-9);
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod distances;
+pub mod exp;
+pub mod linalg;
+pub mod metric;
+pub mod ot;
+pub mod rng;
+pub mod runtime;
+pub mod simplex;
+pub mod util;
+pub mod sinkhorn;
+pub mod svm;
+
+/// Crate-wide scalar type for host-side (exact) computation. The XLA/PJRT
+/// artifacts are f32; conversion happens at the [`runtime`] boundary.
+pub type F = f64;
+
+/// Convenience re-exports covering the public API surface.
+pub mod prelude {
+    pub use crate::coordinator::{
+        BatcherConfig, CoordinatorConfig, DistanceService, Query, QueryResult,
+    };
+    pub use crate::data::{DigitClass, SyntheticDigits};
+    pub use crate::distances::{ClassicalDistance, KernelBuilder};
+    pub use crate::metric::{CostMatrix, GridMetric, RandomMetric};
+    pub use crate::ot::{EmdSolver, TransportPlan};
+    pub use crate::rng::Rng;
+    pub use crate::simplex::{seeded_rng, Histogram};
+    pub use crate::sinkhorn::{
+        independence_distance, IndependenceKernel, SinkhornConfig, SinkhornEngine,
+    };
+    pub use crate::svm::{MulticlassSvm, SvmConfig};
+    pub use crate::F;
+}

@@ -1,0 +1,276 @@
+//! Small dense linear-algebra kernels shared by the SVM, the kernel
+//! builders and the CPU Sinkhorn engine.
+//!
+//! Deliberately BLAS-free (the crate is self-contained); the routines are
+//! written cache-consciously (row-major, contiguous inner loops, blocked
+//! GEMM) and profiled in the §Perf pass — see EXPERIMENTS.md.
+
+use crate::F;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<F>,
+}
+
+impl Matrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<F>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> F {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: F) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Contiguous view of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[F] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable contiguous view of row i.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [F] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Underlying row-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[F] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [F] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// y = self · x (matrix-vector product).
+    pub fn matvec(&self, x: &[F]) -> Vec<F> {
+        assert_eq!(x.len(), self.cols, "matvec shape mismatch");
+        let mut y = vec![0.0; self.rows];
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(F) -> F) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+/// Dot product with 4-way unrolled accumulation (keeps the dependency
+/// chain short enough for the CPU to pipeline; ~3x naive on long rows).
+#[inline]
+pub fn dot(a: &[F], b: &[F]) -> F {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// C = A · B, blocked over k for cache reuse. Shapes: (m,k)·(k,n)->(m,n).
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = a_row[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[kk * n..(kk + 1) * n];
+                for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// In-place Cholesky factorization A = L·Lᵀ of a symmetric positive
+/// definite matrix (lower triangle returned; upper left untouched).
+/// Returns `None` if the matrix is not numerically PD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            // s -= sum_k l[i,k] l[j,k]
+            let (li, lj) = (&l.data[i * n..i * n + j], &l.data[j * n..j * n + j]);
+            s -= dot(li, lj);
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l.data[i * n + j] = s.sqrt();
+            } else {
+                l.data[i * n + j] = s / l.data[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// s%-quantile (linear interpolation) of a slice; used for the paper's
+/// kernel-width grid {1, q10, q20, q50} and the metric median rescaling.
+pub fn quantile(values: &[F], s: F) -> F {
+    assert!(!values.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&s), "quantile level must be in [0,1]");
+    let mut v: Vec<F> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    let pos = s * (v.len() - 1) as F;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as F) * (v[hi] - v[lo])
+    }
+}
+
+/// Median shorthand (the paper's q50, used to normalize cost matrices).
+pub fn median(values: &[F]) -> F {
+    quantile(values, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_and_gemm_agree() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let x = vec![1., 0., -1.];
+        assert_eq!(a.matvec(&x), vec![-2., -2.]);
+        let b = Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let c = gemm(&a, &b);
+        assert_eq!(c.data(), &[4., 5., 10., 11.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = B B^T + I is SPD.
+        let b = Matrix::from_vec(3, 3, vec![1., 2., 0., 0., 1., 1., 1., 0., 1.]);
+        let mut a = gemm(&b, &b.transpose());
+        for i in 0..3 {
+            let v = a.get(i, i) + 1.0;
+            a.set(i, i, v);
+        }
+        let l = cholesky(&a).expect("SPD matrix must factor");
+        let rec = gemm(&l, &l.transpose());
+        for (x, y) in rec.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigenvalue -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn quantiles() {
+        let v = vec![3., 1., 2., 4.];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 4.0);
+        assert_eq!(median(&v), 2.5);
+    }
+
+    #[test]
+    fn prop_dot_matches_naive() {
+        for seed in 0..100u64 {
+            let mut rng = crate::simplex::seeded_rng(seed);
+            let n = rng.range_usize(0, 64);
+            let a: Vec<F> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            let b: Vec<F> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            let naive: F = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_quantile_is_monotone() {
+        for seed in 0..100u64 {
+            let mut rng = crate::simplex::seeded_rng(seed);
+            let n = rng.range_usize(1, 50);
+            let v: Vec<F> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            let s1 = rng.f64();
+            let s2 = rng.f64();
+            let (lo, hi) = if s1 <= s2 { (s1, s2) } else { (s2, s1) };
+            assert!(quantile(&v, lo) <= quantile(&v, hi) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! `repro` — the CLI launcher for the sinkhorn-rs reproduction.
+//!
+//! One subcommand per paper experiment plus service utilities:
+//!
+//! ```text
+//! repro mnist      [--grid G] [--ns a,b,c] [--repeats R] [--skip-emd]   Figure 2
+//! repro gap        [--grid G] [--pairs P] [--lambdas l1,l2,...]         Figure 3
+//! repro speed      [--dims d1,d2,...] [--skip-emd] [--no-xla]           Figure 4
+//! repro iterations [--dims d1,d2,...] [--lambdas ...] [--trials T]      Figure 5
+//! repro serve      [--queries N] [--batch B] [--delay-ms D]             service demo
+//! repro info                                                            artifact manifest
+//! ```
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) to keep the
+//! dependency set at the offline minimum.
+
+use sinkhorn_rs::exp::{ablation, fig2, fig3, fig4, fig5};
+use sinkhorn_rs::prelude::*;
+use sinkhorn_rs::runtime::XlaRuntime;
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let opts = match Opts::parse(&args[1..]) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "mnist" => cmd_mnist(&opts),
+        "gap" => cmd_gap(&opts),
+        "speed" => cmd_speed(&opts),
+        "iterations" => cmd_iterations(&opts),
+        "serve" => cmd_serve(&opts),
+        "ablation" => cmd_ablation(&opts),
+        "info" => cmd_info(&opts),
+        other => Err(format!("unknown subcommand '{other}'")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — Sinkhorn Distances (Cuturi 2013) reproduction CLI
+
+subcommands:
+  mnist        Figure 2: SVM test error per distance vs training size
+  gap          Figure 3: (d^l - d_M)/d_M boxplots vs lambda
+  speed        Figure 4: seconds/distance vs dimension, EMD vs Sinkhorn
+  iterations   Figure 5: Sinkhorn iterations to converge vs d, per lambda
+  serve        run the batched distance service on a synthetic query load
+  ablation     design-choice ablations (iteration budget, check stride)
+  info         print the AOT artifact manifest
+
+common flags: --seed S, --artifacts DIR (default ./artifacts)
+see each subcommand's section in DESIGN.md for scale flags
+";
+
+/// Parsed `--key value` options (plus bare `--flag` booleans).
+struct Opts {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Self, String> {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{a}'"))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                values.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { values, flags })
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("cannot parse --{name} '{v}'")),
+        }
+    }
+
+    fn list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.values.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<T>()
+                        .map_err(|_| format!("cannot parse --{name} item '{x}'"))
+                })
+                .collect(),
+        }
+    }
+
+    fn artifacts(&self) -> std::path::PathBuf {
+        std::path::PathBuf::from(
+            self.values
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".to_string()),
+        )
+    }
+}
+
+fn cmd_mnist(opts: &Opts) -> Result<(), String> {
+    let mut config = fig2::Fig2Config {
+        grid: opts.get("grid", 12usize)?,
+        ns: opts.list("ns", &[40usize, 100, 200])?,
+        folds: opts.get("folds", 4usize)?,
+        repeats: opts.get("repeats", 2usize)?,
+        sinkhorn_iterations: opts.get("iters", 20usize)?,
+        seed: opts.get("seed", 2013u64)?,
+        ..Default::default()
+    };
+    if opts.flag("skip-emd") {
+        config.distances.retain(|d| *d != fig2::DistanceKind::Emd);
+    }
+    eprintln!(
+        "fig2: grid={} (d={}), ns={:?}, {} folds x {} repeats, {} distances",
+        config.grid,
+        config.grid * config.grid,
+        config.ns,
+        config.folds,
+        config.repeats,
+        config.distances.len()
+    );
+    let points = fig2::run(&config);
+    print!("{}", fig2::render(&points));
+    Ok(())
+}
+
+fn cmd_gap(opts: &Opts) -> Result<(), String> {
+    let config = fig3::Fig3Config {
+        grid: opts.get("grid", 12usize)?,
+        pairs: opts.get("pairs", 36usize)?,
+        lambdas: opts.list("lambdas", &[1.0, 2.0, 5.0, 9.0, 15.0, 25.0, 50.0])?,
+        seed: opts.get("seed", 11u64)?,
+        ..Default::default()
+    };
+    eprintln!(
+        "fig3: grid={} (d={}), {} pairs, lambdas={:?}",
+        config.grid,
+        config.grid * config.grid,
+        config.pairs,
+        config.lambdas
+    );
+    let points = fig3::run(&config);
+    print!("{}", fig3::render(&points));
+    Ok(())
+}
+
+fn cmd_speed(opts: &Opts) -> Result<(), String> {
+    let config = fig4::Fig4Config {
+        dims: opts.list("dims", &[64usize, 128, 256, 512])?,
+        lambdas: opts.list("lambdas", &[1.0, 9.0])?,
+        emd_cap: opts.get("emd-cap", 512usize)?,
+        skip_emd: opts.flag("skip-emd"),
+        artifact_dir: if opts.flag("no-xla") {
+            None
+        } else {
+            Some(opts.artifacts())
+        },
+        seed: opts.get("seed", 7u64)?,
+        ..Default::default()
+    };
+    eprintln!("fig4: dims={:?}, lambdas={:?}", config.dims, config.lambdas);
+    let points = fig4::run(&config);
+    print!("{}", fig4::render(&points));
+    Ok(())
+}
+
+fn cmd_iterations(opts: &Opts) -> Result<(), String> {
+    let config = fig5::Fig5Config {
+        dims: opts.list("dims", &[64usize, 128, 256, 512])?,
+        lambdas: opts.list("lambdas", &[1.0, 5.0, 9.0, 25.0, 50.0])?,
+        trials: opts.get("trials", 8usize)?,
+        seed: opts.get("seed", 42u64)?,
+        ..Default::default()
+    };
+    eprintln!(
+        "fig5: dims={:?}, lambdas={:?}, trials={}",
+        config.dims, config.lambdas, config.trials
+    );
+    let points = fig5::run(&config);
+    print!("{}", fig5::render(&points));
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<(), String> {
+    use sinkhorn_rs::coordinator::{CoordinatorConfig, MetricId, Query};
+    let queries = opts.get("queries", 512usize)?;
+    let d = opts.get("d", 64usize)?;
+    let lambda = opts.get("lambda", 9.0f64)?;
+    let batch = opts.get("batch", 64usize)?;
+    let delay_ms = opts.get("delay-ms", 2u64)?;
+    let config = CoordinatorConfig {
+        artifact_dir: if opts.flag("no-xla") { None } else { Some(opts.artifacts()) },
+        batcher: sinkhorn_rs::coordinator::BatcherConfig {
+            max_batch: batch,
+            max_delay: std::time::Duration::from_millis(delay_ms),
+        },
+        ..Default::default()
+    };
+    let service = DistanceService::start(config).map_err(|e| e.to_string())?;
+    let mut rng = seeded_rng(opts.get("seed", 0u64)?);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    service
+        .register_metric(MetricId(0), metric)
+        .map_err(|e| e.to_string())?;
+    let compiled = service.warmup().map_err(|e| e.to_string())?;
+    eprintln!("serve: warmed {compiled} artifacts; issuing {queries} queries at d={d}");
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..queries)
+        .map(|_| {
+            let r = Histogram::sample_uniform(d, &mut rng);
+            let c = Histogram::sample_uniform(d, &mut rng);
+            service
+                .submit(Query { metric: MetricId(0), lambda, r, c })
+                .map_err(|e| e.to_string())
+        })
+        .collect::<Result<_, _>>()?;
+    let mut sum = 0.0;
+    for rx in rxs {
+        let res = rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?;
+        sum += res.distance;
+    }
+    let elapsed = t0.elapsed();
+    let stats = service.stats().map_err(|e| e.to_string())?;
+    println!(
+        "served {queries} queries in {:.3}s ({:.0} q/s); checksum {sum:.4}",
+        elapsed.as_secs_f64(),
+        queries as f64 / elapsed.as_secs_f64()
+    );
+    println!("stats: {stats}");
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_ablation(opts: &Opts) -> Result<(), String> {
+    let grid = opts.get("grid", 10usize)?;
+    let budgets = opts.list("budgets", &[1usize, 2, 5, 20, 100])?;
+    let strides = [1usize, 4, 16, usize::MAX];
+    let seed = opts.get("seed", 3u64)?;
+    eprintln!("ablation: grid={grid}, budgets={budgets:?}");
+    let b = ablation::iteration_budget(grid, 60, 30, &budgets, seed);
+    let s = ablation::check_stride(opts.get("d", 128usize)?, &strides, seed);
+    print!("{}", ablation::render(&b, &s));
+    Ok(())
+}
+
+fn cmd_info(opts: &Opts) -> Result<(), String> {
+    let rt = XlaRuntime::new(opts.artifacts()).map_err(|e| e.to_string())?;
+    println!("platform: {}", rt.platform());
+    println!(
+        "{:<40} {:>6} {:>6} {:>6} {:>8}",
+        "variant", "d", "n", "iters", "flavor"
+    );
+    for v in &rt.manifest().variants {
+        println!(
+            "{:<40} {:>6} {:>6} {:>6} {:>8}",
+            v.name,
+            v.d,
+            v.n,
+            v.iters,
+            v.flavor.as_str()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Ground cost matrices — the distance's *parameter* (paper §2.2).
+//!
+//! The ground metric M ∈ M (the cone of metric matrices: zero diagonal,
+//! symmetry, triangle inequalities) is what distinguishes transportation
+//! distances from every other divergence on the simplex. This module
+//! provides the paper's three constructions plus validation utilities:
+//!
+//! * [`GridMetric`] — Euclidean distances between pixel positions on an
+//!   H×W grid (the MNIST experiment's 400×400 matrix, §5.1.2);
+//! * [`RandomMetric`] — distances between d Gaussian points in R^{d/10},
+//!   median-normalized (the speed experiments' workload, §5.3);
+//! * element-wise powers M^a (Euclidean distance matrices stay Euclidean
+//!   for 0 < a < 1 — used by the Independence kernel, §5.1.2).
+
+mod validate;
+
+pub use validate::{is_metric_matrix, max_triangle_violation, MetricViolation};
+
+use crate::linalg::median;
+use crate::rng::Rng;
+use crate::F;
+
+/// A dense, symmetric, zero-diagonal cost matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostMatrix {
+    d: usize,
+    /// Row-major d×d buffer.
+    data: Vec<F>,
+}
+
+impl CostMatrix {
+    /// Build from a row-major buffer, checking basic shape sanity
+    /// (square, finite, non-negative). Metric-cone membership is *not*
+    /// enforced here — use [`is_metric_matrix`] when it matters.
+    pub fn from_rows(d: usize, data: Vec<F>) -> Self {
+        assert_eq!(data.len(), d * d, "cost matrix must be d*d");
+        assert!(
+            data.iter().all(|v| v.is_finite() && *v >= 0.0),
+            "cost entries must be finite and non-negative"
+        );
+        Self { d, data }
+    }
+
+    /// Dimension d (matrix is d×d).
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> F {
+        debug_assert!(i < self.d && j < self.d);
+        self.data[i * self.d + j]
+    }
+
+    /// Contiguous row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[F] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Row-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[F] {
+        &self.data
+    }
+
+    /// f32 copy for the XLA/PJRT boundary.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Elementwise power M^a. For Euclidean distance matrices and
+    /// 0 < a ≤ 1 the result is again a Euclidean distance matrix
+    /// (Berg et al., 1984 — footnote 1 of the paper).
+    pub fn powf(&self, a: F) -> CostMatrix {
+        CostMatrix {
+            d: self.d,
+            data: self.data.iter().map(|&v| v.powf(a)).collect(),
+        }
+    }
+
+    /// Divide by the median of the off-diagonal entries — the paper's
+    /// `M = M / median(M(:))` normalization (§5.3). No-op on an all-zero
+    /// matrix.
+    pub fn median_normalized(&self) -> CostMatrix {
+        let off: Vec<F> = (0..self.d)
+            .flat_map(|i| (0..self.d).filter(move |&j| j != i).map(move |j| self.get(i, j)))
+            .collect();
+        if off.is_empty() {
+            return self.clone();
+        }
+        let med = median(&off);
+        if med <= 0.0 {
+            return self.clone();
+        }
+        CostMatrix { d: self.d, data: self.data.iter().map(|&v| v / med).collect() }
+    }
+
+    /// Median of off-diagonal entries (the paper's q50(M), the unit for
+    /// the λ grid {5,7,9,11}/q50(M) in §5.1.2).
+    pub fn median_cost(&self) -> F {
+        let off: Vec<F> = (0..self.d)
+            .flat_map(|i| (0..self.d).filter(move |&j| j != i).map(move |j| self.get(i, j)))
+            .collect();
+        if off.is_empty() {
+            0.0
+        } else {
+            median(&off)
+        }
+    }
+
+    /// Largest entry (governs exp(-λM) underflow, see sinkhorn::log_domain).
+    pub fn max_cost(&self) -> F {
+        self.data.iter().cloned().fold(0.0, F::max)
+    }
+
+    /// The transportation cost of a full plan: ⟨P, M⟩.
+    pub fn plan_cost(&self, plan: &[F]) -> F {
+        assert_eq!(plan.len(), self.d * self.d, "plan must be d*d");
+        crate::linalg::dot(&self.data, plan)
+    }
+}
+
+/// Euclidean distances between the points of an H×W pixel grid: the
+/// natural ground metric for images (paper §5.1, d = H·W = 400 for MNIST).
+#[derive(Debug, Clone, Copy)]
+pub struct GridMetric {
+    height: usize,
+    width: usize,
+}
+
+impl GridMetric {
+    pub fn new(height: usize, width: usize) -> Self {
+        assert!(height > 0 && width > 0);
+        Self { height, width }
+    }
+
+    /// Histogram dimension d = H·W.
+    pub fn dim(&self) -> usize {
+        self.height * self.width
+    }
+
+    /// The d×d matrix of Euclidean distances between pixel centers
+    /// (row-major pixel order).
+    pub fn cost_matrix(&self) -> CostMatrix {
+        let d = self.dim();
+        let mut data = vec![0.0; d * d];
+        for a in 0..d {
+            let (ya, xa) = (a / self.width, a % self.width);
+            for b in 0..d {
+                let (yb, xb) = (b / self.width, b % self.width);
+                let dy = ya as F - yb as F;
+                let dx = xa as F - xb as F;
+                data[a * d + b] = (dy * dy + dx * dx).sqrt();
+            }
+        }
+        CostMatrix::from_rows(d, data)
+    }
+
+    /// Squared Euclidean distances — a *Euclidean distance matrix* in the
+    /// Dattorro sense (footnote 1), as required by Property 2 for the
+    /// Independence kernel to be negative definite.
+    pub fn squared_cost_matrix(&self) -> CostMatrix {
+        let m = self.cost_matrix();
+        CostMatrix { d: m.d, data: m.data.iter().map(|v| v * v).collect() }
+    }
+}
+
+/// The speed-benchmark workload of §5.3: d points drawn from a spherical
+/// Gaussian in dimension max(1, d/10), pairwise Euclidean distances,
+/// median-normalized "to obtain enough variability in the distance
+/// matrix".
+#[derive(Debug, Clone, Copy)]
+pub struct RandomMetric {
+    d: usize,
+}
+
+impl RandomMetric {
+    pub fn new(d: usize) -> Self {
+        assert!(d > 1);
+        Self { d }
+    }
+
+    /// Draw the cost matrix (deterministic in the RNG state).
+    pub fn sample(&self, rng: &mut Rng) -> CostMatrix {
+        let ambient = (self.d / 10).max(1);
+        let pts: Vec<Vec<F>> = (0..self.d)
+            .map(|_| (0..ambient).map(|_| rng.normal()).collect())
+            .collect();
+        let mut data = vec![0.0; self.d * self.d];
+        for i in 0..self.d {
+            for j in (i + 1)..self.d {
+                let dist: F = pts[i]
+                    .iter()
+                    .zip(&pts[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<F>()
+                    .sqrt();
+                data[i * self.d + j] = dist;
+                data[j * self.d + i] = dist;
+            }
+        }
+        CostMatrix::from_rows(self.d, data).median_normalized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::seeded_rng;
+
+    #[test]
+    fn grid_metric_basics() {
+        let g = GridMetric::new(2, 3);
+        let m = g.cost_matrix();
+        assert_eq!(m.dim(), 6);
+        // Pixel 0=(0,0), pixel 1=(0,1): distance 1.
+        assert_eq!(m.get(0, 1), 1.0);
+        // Pixel 0=(0,0), pixel 5=(1,2): sqrt(1+4).
+        assert!((m.get(0, 5) - (5.0 as F).sqrt()).abs() < 1e-12);
+        assert!(is_metric_matrix(&m, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn grid_metric_is_symmetric_zero_diag() {
+        let m = GridMetric::new(4, 4).cost_matrix();
+        for i in 0..16 {
+            assert_eq!(m.get(i, i), 0.0);
+            for j in 0..16 {
+                assert_eq!(m.get(i, j), m.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn random_metric_is_a_metric() {
+        let mut rng = seeded_rng(0);
+        let m = RandomMetric::new(30).sample(&mut rng);
+        assert!(is_metric_matrix(&m, 1e-9).is_ok());
+        // Median normalization: off-diagonal median == 1.
+        assert!((m.median_cost() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn powf_preserves_metric_for_small_exponents() {
+        // M^a for a in (0,1] keeps triangle inequalities (subadditivity of
+        // t -> t^a); checked numerically here, cited analytically in docs.
+        let mut rng = seeded_rng(1);
+        let m = RandomMetric::new(20).sample(&mut rng);
+        for &a in &[0.01, 0.1, 0.5, 1.0] {
+            assert!(
+                is_metric_matrix(&m.powf(a), 1e-9).is_ok(),
+                "M^{a} left the metric cone"
+            );
+        }
+    }
+
+    #[test]
+    fn median_normalized_idempotent_on_zero() {
+        let z = CostMatrix::from_rows(2, vec![0.0; 4]);
+        assert_eq!(z.median_normalized(), z);
+    }
+
+    #[test]
+    fn plan_cost_matches_manual() {
+        let m = CostMatrix::from_rows(2, vec![0., 1., 1., 0.]);
+        let plan = vec![0.5, 0.0, 0.25, 0.25];
+        assert!((m.plan_cost(&plan) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan_costs() {
+        CostMatrix::from_rows(2, vec![0.0, F::NAN, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Metric-cone membership checks (paper §2.2).
+//!
+//! d_M is a *distance* exactly when M lies in the cone
+//! M = {M ∈ R₊^{d×d} : m_ii = 0; m_ij ≤ m_ik + m_kj} (Avis, 1980).
+//! The harnesses validate their generated ground metrics through here, and
+//! `theory_invariants.rs` uses the checker to set up Theorem 1 tests.
+
+use super::CostMatrix;
+use crate::F;
+
+/// Why a matrix fails to be a metric matrix.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum MetricViolation {
+    #[error("diagonal entry m[{0},{0}] = {1} is nonzero")]
+    NonzeroDiagonal(usize, F),
+    #[error("asymmetry at ({0},{1}): {2} vs {3}")]
+    Asymmetric(usize, usize, F, F),
+    #[error("triangle violated: m[{i},{j}]={mij} > m[{i},{k}]+m[{k},{j}]={sum}")]
+    Triangle { i: usize, j: usize, k: usize, mij: F, sum: F },
+}
+
+/// Check membership of the metric cone up to tolerance `tol`.
+pub fn is_metric_matrix(m: &CostMatrix, tol: F) -> Result<(), MetricViolation> {
+    let d = m.dim();
+    for i in 0..d {
+        let mii = m.get(i, i);
+        if mii.abs() > tol {
+            return Err(MetricViolation::NonzeroDiagonal(i, mii));
+        }
+        for j in (i + 1)..d {
+            let (a, b) = (m.get(i, j), m.get(j, i));
+            if (a - b).abs() > tol {
+                return Err(MetricViolation::Asymmetric(i, j, a, b));
+            }
+        }
+    }
+    for k in 0..d {
+        let row_k = m.row(k);
+        for i in 0..d {
+            let mik = m.get(i, k);
+            let row_i = m.row(i);
+            for j in 0..d {
+                let sum = mik + row_k[j];
+                if row_i[j] > sum + tol {
+                    return Err(MetricViolation::Triangle {
+                        i,
+                        j,
+                        k,
+                        mij: row_i[j],
+                        sum,
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Largest triangle-inequality violation max_{ijk} (m_ij − m_ik − m_kj)₊.
+/// Zero for metric matrices; used to quantify how far squared-Euclidean
+/// costs (which are *not* metrics) sit outside the cone.
+pub fn max_triangle_violation(m: &CostMatrix) -> F {
+    let d = m.dim();
+    let mut worst: F = 0.0;
+    for k in 0..d {
+        let row_k = m.row(k);
+        for i in 0..d {
+            let mik = m.get(i, k);
+            let row_i = m.row(i);
+            for j in 0..d {
+                worst = worst.max(row_i[j] - mik - row_k[j]);
+            }
+        }
+    }
+    worst.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::GridMetric;
+
+    #[test]
+    fn accepts_grid_metric() {
+        let m = GridMetric::new(3, 3).cost_matrix();
+        assert_eq!(is_metric_matrix(&m, 1e-12), Ok(()));
+        assert_eq!(max_triangle_violation(&m), 0.0);
+    }
+
+    #[test]
+    fn detects_nonzero_diagonal() {
+        let m = CostMatrix::from_rows(2, vec![0.5, 1.0, 1.0, 0.0]);
+        assert!(matches!(
+            is_metric_matrix(&m, 1e-12),
+            Err(MetricViolation::NonzeroDiagonal(0, _))
+        ));
+    }
+
+    #[test]
+    fn detects_asymmetry() {
+        let m = CostMatrix::from_rows(2, vec![0.0, 1.0, 2.0, 0.0]);
+        assert!(matches!(
+            is_metric_matrix(&m, 1e-12),
+            Err(MetricViolation::Asymmetric(0, 1, _, _))
+        ));
+    }
+
+    #[test]
+    fn detects_triangle_violation() {
+        // m(0,2)=10 > m(0,1)+m(1,2)=2.
+        let m = CostMatrix::from_rows(
+            3,
+            vec![0., 1., 10., 1., 0., 1., 10., 1., 0.],
+        );
+        let err = is_metric_matrix(&m, 1e-12).unwrap_err();
+        assert!(matches!(err, MetricViolation::Triangle { .. }));
+        assert!((max_triangle_violation(&m) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squared_grid_distances_are_not_metric() {
+        // The classic fact motivating footnote 1: squared Euclidean
+        // distances violate the triangle inequality...
+        let m2 = GridMetric::new(1, 4).squared_cost_matrix();
+        assert!(is_metric_matrix(&m2, 1e-9).is_err());
+        assert!(max_triangle_violation(&m2) > 0.0);
+        // ...but their square root (the 0.5 power) is a metric again.
+        assert!(is_metric_matrix(&m2.powf(0.5), 1e-9).is_ok());
+    }
+}

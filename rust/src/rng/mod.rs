@@ -1,0 +1,235 @@
+//! Self-contained deterministic random number generation.
+//!
+//! The build is fully offline with a deliberately tiny dependency set, so
+//! instead of the `rand` crate this module provides a small, well-tested
+//! xoshiro256++ generator (Blackman & Vigna, 2019) with the handful of
+//! distributions the experiment harnesses need: uniform f64, integer
+//! ranges, Gaussians (Box–Muller) and Gamma variates (Marsaglia–Tsang).
+//!
+//! Every stochastic component in the crate threads one of these through
+//! explicitly — experiments are reproducible from a single seed.
+
+use crate::F;
+
+/// xoshiro256++ PRNG. 256-bit state, period 2^256 − 1, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    spare_normal: Option<F>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (the recommended seeding procedure, avoids
+    /// low-entropy states for small seeds).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()], spare_normal: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> F {
+        (self.next_u64() >> 11) as F * (1.0 / (1u64 << 53) as F)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: F, hi: F) -> F {
+        debug_assert!(lo < hi);
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply-shift; the tiny modulo bias (< 2^-64) is
+        // irrelevant for experiment sampling.
+        let x = self.next_u64() as u128;
+        ((x * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: F) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal (Box–Muller, caching the paired variate).
+    pub fn normal(&mut self) -> F {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        let radius = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(radius * theta.sin());
+        radius * theta.cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia & Tsang (2000), boosted for shape<1.
+    pub fn gamma(&mut self, shape: F) -> F {
+        if shape < 1.0 {
+            let u = self.f64().max(1e-300);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for parallel workloads).
+    pub fn fork(&mut self) -> Rng {
+        Rng::seed_from_u64(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform() {
+        let mut rng = Rng::seed_from_u64(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as F;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from_u64(11);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as F;
+        m2 /= n as F;
+        assert!(m1.abs() < 0.01, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var {m2}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Rng::seed_from_u64(13);
+        for &shape in &[0.5, 1.0, 4.0] {
+            let n = 30_000;
+            let mean: F = (0..n).map(|_| rng.gamma(shape)).sum::<F>() / n as F;
+            assert!(
+                (mean - shape).abs() < 0.05 * shape + 0.03,
+                "Gamma({shape}) mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::seed_from_u64(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut parent = Rng::seed_from_u64(1);
+        let mut a = parent.fork();
+        let mut b = parent.fork();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,228 @@
+//! Artifact manifest: discovery of the AOT-compiled HLO variants.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every lowered variant; this module parses it (with the in-tree JSON
+//! parser) and answers shape-class queries for the runtime and the
+//! coordinator's router.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Kernel flavor of an artifact (see aot.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Flavor {
+    /// Inner products lowered through the Pallas kernel (interpret mode).
+    Pallas,
+    /// Plain jnp contractions (XLA-fused GEMMs) — the serving default.
+    Xla,
+}
+
+impl Flavor {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Flavor::Pallas => "pallas",
+            Flavor::Xla => "xla",
+        }
+    }
+}
+
+/// One AOT-lowered program variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactVariant {
+    /// Unique name (also the HLO file stem).
+    pub name: String,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+    /// Histogram dimension d.
+    pub d: usize,
+    /// Batch width N.
+    pub n: usize,
+    /// Fixed iteration count baked into the program.
+    pub iters: usize,
+    /// Kernel flavor.
+    pub flavor: Flavor,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variants: Vec<ArtifactVariant>,
+    pub dir: PathBuf,
+}
+
+/// Manifest loading errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read manifest {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("cannot parse manifest: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("manifest field missing or malformed: {0}")]
+    Schema(&'static str),
+    #[error("unsupported manifest version {0}")]
+    Version(usize),
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError::Io(path.clone(), e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (directory is used to resolve file paths).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, ManifestError> {
+        let doc = Json::parse(text)?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or(ManifestError::Schema("version"))?;
+        if version != 1 {
+            return Err(ManifestError::Version(version));
+        }
+        let raw = doc
+            .get("variants")
+            .and_then(Json::as_array)
+            .ok_or(ManifestError::Schema("variants"))?;
+        let mut variants = Vec::with_capacity(raw.len());
+        for v in raw {
+            let name = v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::Schema("variant.name"))?
+                .to_string();
+            let file = v
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or(ManifestError::Schema("variant.file"))?;
+            let d = v
+                .get("d")
+                .and_then(Json::as_usize)
+                .ok_or(ManifestError::Schema("variant.d"))?;
+            let n = v
+                .get("n")
+                .and_then(Json::as_usize)
+                .ok_or(ManifestError::Schema("variant.n"))?;
+            let iters = v
+                .get("iters")
+                .and_then(Json::as_usize)
+                .ok_or(ManifestError::Schema("variant.iters"))?;
+            let flavor = match v.get("flavor").and_then(Json::as_str) {
+                Some("pallas") => Flavor::Pallas,
+                Some("xla") => Flavor::Xla,
+                _ => return Err(ManifestError::Schema("variant.flavor")),
+            };
+            variants.push(ArtifactVariant {
+                name,
+                path: dir.join(file),
+                d,
+                n,
+                iters,
+                flavor,
+            });
+        }
+        Ok(Self { variants, dir })
+    }
+
+    /// The distinct dimensions available for a flavor (sorted).
+    pub fn dims(&self, flavor: Flavor) -> Vec<usize> {
+        let mut ds: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.flavor == flavor)
+            .map(|v| v.d)
+            .collect();
+        ds.sort_unstable();
+        ds.dedup();
+        ds
+    }
+
+    /// Pick the variant for dimension `d` whose batch width best fits
+    /// `batch` (smallest n ≥ batch, else the largest available n).
+    pub fn select(&self, d: usize, batch: usize, flavor: Flavor) -> Option<&ArtifactVariant> {
+        let mut candidates: Vec<&ArtifactVariant> = self
+            .variants
+            .iter()
+            .filter(|v| v.d == d && v.flavor == flavor)
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        candidates.sort_by_key(|v| v.n);
+        candidates
+            .iter()
+            .find(|v| v.n >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "dtype": "f32", "fingerprint": "x", "config": {},
+        "variants": [
+            {"name": "a", "file": "a.hlo.txt", "d": 16, "n": 1, "iters": 20, "flavor": "xla"},
+            {"name": "b", "file": "b.hlo.txt", "d": 16, "n": 16, "iters": 20, "flavor": "xla"},
+            {"name": "c", "file": "c.hlo.txt", "d": 64, "n": 64, "iters": 20, "flavor": "xla"},
+            {"name": "p", "file": "p.hlo.txt", "d": 16, "n": 1, "iters": 20, "flavor": "pallas"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_selects() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.variants.len(), 4);
+        assert_eq!(m.dims(Flavor::Xla), vec![16, 64]);
+        assert_eq!(m.dims(Flavor::Pallas), vec![16]);
+        // batch 4 at d=16 -> n=16 variant (smallest n >= 4).
+        assert_eq!(m.select(16, 4, Flavor::Xla).unwrap().name, "b");
+        // batch 1 -> exact n=1.
+        assert_eq!(m.select(16, 1, Flavor::Xla).unwrap().name, "a");
+        // batch 100 at d=64 -> largest available (64).
+        assert_eq!(m.select(64, 100, Flavor::Xla).unwrap().name, "c");
+        // missing dimension.
+        assert!(m.select(128, 1, Flavor::Xla).is_none());
+        // path resolution.
+        assert_eq!(
+            m.variants[0].path,
+            PathBuf::from("/tmp/a/a.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn schema_errors() {
+        assert!(matches!(
+            Manifest::parse("{}", PathBuf::new()),
+            Err(ManifestError::Schema("version"))
+        ));
+        assert!(matches!(
+            Manifest::parse(r#"{"version": 2, "variants": []}"#, PathBuf::new()),
+            Err(ManifestError::Version(2))
+        ));
+        let bad = r#"{"version": 1, "variants": [{"name": "a"}]}"#;
+        assert!(matches!(
+            Manifest::parse(bad, PathBuf::new()),
+            Err(ManifestError::Schema("variant.file"))
+        ));
+    }
+
+    #[test]
+    fn real_manifest_loads() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(!m.variants.is_empty());
+            // The default aot grid always contains d=400 (the MNIST shape).
+            assert!(m.dims(Flavor::Xla).contains(&400));
+            for v in &m.variants {
+                assert!(v.path.exists(), "missing artifact {:?}", v.path);
+            }
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! XLA/PJRT execution runtime — loads and runs the AOT artifacts.
+//!
+//! This is the bottom of the Layer-3 stack: it wraps the `xla` crate's
+//! PJRT CPU client, discovers the HLO-text artifacts via the
+//! [`manifest`], compiles each variant **once** (lazily, cached), and
+//! executes batched Sinkhorn programs with zero Python anywhere near the
+//! call. Interchange is HLO *text* because the image's xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit-instruction-id serialized protos; the
+//! text parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! The artifact signature is
+//!   `f(M: f32[d,d], lam: f32[], R: f32[d,n], C: f32[d,n])
+//!      -> (dist: f32[n], err: f32[])`
+//! with `iters` fixed at lowering time.
+
+mod manifest;
+
+pub use manifest::{ArtifactVariant, Flavor, Manifest, ManifestError};
+
+use crate::metric::CostMatrix;
+use crate::F;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error(transparent)]
+    Manifest(#[from] ManifestError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("no artifact for d={d} flavor={flavor:?}; available dims: {available:?}")]
+    NoVariant { d: usize, flavor: Flavor, available: Vec<usize> },
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Result of one batched execution.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// d_M^λ(r_j, c_j) for each column pair, f64-widened.
+    pub distances: Vec<F>,
+    /// Max marginal violation reported by the program (diagnostic).
+    pub marginal_error: F,
+    /// Which artifact produced it.
+    pub variant: String,
+}
+
+/// PJRT-backed Sinkhorn executor with a compiled-executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Device-resident cost matrices, keyed by caller-provided id + d.
+    /// Staging M (d² floats) dominated per-call overhead before this
+    /// cache (see EXPERIMENTS.md §Perf).
+    metric_buffers: HashMap<(u64, usize), xla::PjRtBuffer>,
+    /// Cumulative executions per variant (observability).
+    exec_counts: HashMap<String, u64>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `artifact_dir`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            metric_buffers: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Platform string of the PJRT backend (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Executions performed per variant so far.
+    pub fn exec_counts(&self) -> &HashMap<String, u64> {
+        &self.exec_counts
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Select the best variant for (d, batch, flavor).
+    pub fn select(
+        &self,
+        d: usize,
+        batch: usize,
+        flavor: Flavor,
+    ) -> Result<ArtifactVariant, RuntimeError> {
+        self.manifest
+            .select(d, batch, flavor)
+            .cloned()
+            .ok_or_else(|| RuntimeError::NoVariant {
+                d,
+                flavor,
+                available: self.manifest.dims(flavor),
+            })
+    }
+
+    /// Compile (or fetch from cache) the executable for a variant.
+    fn executable(
+        &mut self,
+        variant: &ArtifactVariant,
+    ) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        if !self.cache.contains_key(&variant.name) {
+            let proto = xla::HloModuleProto::from_text_file(&variant.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(variant.name.clone(), exe);
+        }
+        Ok(&self.cache[&variant.name])
+    }
+
+    /// Pre-compile every variant of a flavor (warm start for serving).
+    pub fn warmup(&mut self, flavor: Flavor) -> Result<usize, RuntimeError> {
+        let variants: Vec<ArtifactVariant> = self
+            .manifest
+            .variants
+            .iter()
+            .filter(|v| v.flavor == flavor)
+            .cloned()
+            .collect();
+        let count = variants.len();
+        for v in &variants {
+            self.executable(v)?;
+        }
+        Ok(count)
+    }
+
+    /// Drop any device-resident buffer cached under `metric_key` (call
+    /// when the metric registered under a key is replaced).
+    pub fn invalidate_metric(&mut self, metric_key: u64) {
+        self.metric_buffers.retain(|(k, _), _| *k != metric_key);
+    }
+
+    /// Execute one batched Sinkhorn solve.
+    ///
+    /// `r_cols` / `c_cols` hold `batch ≤ variant.n` histograms as columns
+    /// in row-major (d, batch) order; they are padded to the variant's
+    /// batch width with uniform histograms (whose results are discarded).
+    pub fn execute(
+        &mut self,
+        variant: &ArtifactVariant,
+        metric: &CostMatrix,
+        lambda: F,
+        r_cols: &[Vec<F>],
+        c_cols: &[Vec<F>],
+    ) -> Result<BatchOutput, RuntimeError> {
+        self.execute_keyed(variant, metric, None, lambda, r_cols, c_cols)
+    }
+
+    /// [`Self::execute`] with a stable caller-assigned key for `metric`,
+    /// enabling the device-buffer cache: M (d² floats, the largest input
+    /// by far) is uploaded once per (key, d) instead of once per call.
+    /// The caller owns key semantics — reusing a key for a *different*
+    /// matrix without [`Self::invalidate_metric`] serves stale costs.
+    pub fn execute_keyed(
+        &mut self,
+        variant: &ArtifactVariant,
+        metric: &CostMatrix,
+        metric_key: Option<u64>,
+        lambda: F,
+        r_cols: &[Vec<F>],
+        c_cols: &[Vec<F>],
+    ) -> Result<BatchOutput, RuntimeError> {
+        let d = variant.d;
+        let n = variant.n;
+        if metric.dim() != d {
+            return Err(RuntimeError::Shape(format!(
+                "metric dim {} != artifact d {}",
+                metric.dim(),
+                d
+            )));
+        }
+        if r_cols.len() != c_cols.len() {
+            return Err(RuntimeError::Shape(format!(
+                "r batch {} != c batch {}",
+                r_cols.len(),
+                c_cols.len()
+            )));
+        }
+        let batch = r_cols.len();
+        if batch == 0 || batch > n {
+            return Err(RuntimeError::Shape(format!(
+                "batch {batch} out of range 1..={n}"
+            )));
+        }
+        for (k, (r, c)) in r_cols.iter().zip(c_cols).enumerate() {
+            if r.len() != d || c.len() != d {
+                return Err(RuntimeError::Shape(format!(
+                    "pair {k}: histogram dims ({}, {}) != d {d}",
+                    r.len(),
+                    c.len()
+                )));
+            }
+        }
+
+        // Stage inputs as device buffers. Histograms go in column-major
+        // logical layout (d, n) == row-major rows over d. The cost matrix
+        // — the dominant transfer at d² floats — is cached on device when
+        // the caller supplies a stable key.
+        let mut r_f32 = vec![1.0f32 / d as f32; d * n];
+        let mut c_f32 = vec![1.0f32 / d as f32; d * n];
+        for (j, (r, c)) in r_cols.iter().zip(c_cols).enumerate() {
+            for i in 0..d {
+                r_f32[i * n + j] = r[i] as f32;
+                c_f32[i * n + j] = c[i] as f32;
+            }
+        }
+
+        // Ensure the executable and (optionally) the cached metric buffer
+        // exist before taking shared borrows for the call itself.
+        self.executable(variant)?;
+        let cache_slot = metric_key.map(|k| (k, d));
+        if let Some(slot) = cache_slot {
+            if !self.metric_buffers.contains_key(&slot) {
+                let m_f32 = metric.to_f32();
+                let buf =
+                    self.client.buffer_from_host_buffer(&m_f32, &[d, d], None)?;
+                self.metric_buffers.insert(slot, buf);
+            }
+        }
+        let m_owned; // keeps an uncached upload alive through the call
+        let m_buf: &xla::PjRtBuffer = match cache_slot {
+            Some(slot) => &self.metric_buffers[&slot],
+            None => {
+                let m_f32 = metric.to_f32();
+                m_owned =
+                    self.client.buffer_from_host_buffer(&m_f32, &[d, d], None)?;
+                &m_owned
+            }
+        };
+        let lam_buf =
+            self.client.buffer_from_host_buffer(&[lambda as f32], &[], None)?;
+        let r_buf = self.client.buffer_from_host_buffer(&r_f32, &[d, n], None)?;
+        let c_buf = self.client.buffer_from_host_buffer(&c_f32, &[d, n], None)?;
+
+        let exe = &self.cache[&variant.name];
+        let result =
+            exe.execute_b::<&xla::PjRtBuffer>(&[m_buf, &lam_buf, &r_buf, &c_buf])?;
+        let out = result[0][0].to_literal_sync()?;
+        let (dist_lit, err_lit) = out.to_tuple2()?;
+        let dist32 = dist_lit.to_vec::<f32>()?;
+        let err = err_lit.to_vec::<f32>()?.first().copied().unwrap_or(f32::NAN);
+
+        *self.exec_counts.entry(variant.name.clone()).or_insert(0) += 1;
+
+        Ok(BatchOutput {
+            distances: dist32.iter().take(batch).map(|&x| x as F).collect(),
+            marginal_error: err as F,
+            variant: variant.name.clone(),
+        })
+    }
+
+    /// Convenience: solve r vs many targets with automatic variant choice,
+    /// chunking the batch across executions when it exceeds the widest
+    /// artifact.
+    pub fn distances(
+        &mut self,
+        metric: &CostMatrix,
+        lambda: F,
+        r: &crate::simplex::Histogram,
+        cs: &[crate::simplex::Histogram],
+        flavor: Flavor,
+    ) -> Result<Vec<F>, RuntimeError> {
+        let d = metric.dim();
+        let mut out = Vec::with_capacity(cs.len());
+        let mut idx = 0;
+        while idx < cs.len() {
+            let remaining = cs.len() - idx;
+            let variant = self.select(d, remaining, flavor)?;
+            let take = remaining.min(variant.n);
+            let r_cols: Vec<Vec<F>> =
+                (0..take).map(|_| r.values().to_vec()).collect();
+            let c_cols: Vec<Vec<F>> = cs[idx..idx + take]
+                .iter()
+                .map(|c| c.values().to_vec())
+                .collect();
+            let batch = self.execute(&variant, metric, lambda, &r_cols, &c_cols)?;
+            out.extend(batch.distances);
+            idx += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The runtime requires real artifacts + libxla_extension, so numeric
+    // coverage lives in `rust/tests/runtime_artifacts.rs` (integration).
+    // Here we only test pure logic.
+    use super::*;
+
+    #[test]
+    fn error_display() {
+        let e = RuntimeError::NoVariant { d: 7, flavor: Flavor::Xla, available: vec![16] };
+        let s = e.to_string();
+        assert!(s.contains("d=7"));
+        assert!(s.contains("[16]"));
+    }
+}

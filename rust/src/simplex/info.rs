@@ -1,0 +1,144 @@
+//! Information-theoretic measures over histograms and joint tables.
+//!
+//! These implement the quantities of the paper's §2.1/§3.1: entropy h(·),
+//! Kullback–Leibler divergence, the independence table rcᵀ and the
+//! identity KL(P ‖ rcᵀ) = h(r) + h(c) − h(P) = I(X;Y) that defines the
+//! entropic ball U_α(r, c).
+
+use crate::F;
+
+/// Shannon entropy −Σ p log p in nats, with 0·log 0 = 0.
+pub fn entropy(p: &[F]) -> F {
+    p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| -x * x.ln())
+        .sum()
+}
+
+/// KL(p ‖ q) = Σ p log(p/q), +∞ when supp(p) ⊄ supp(q).
+pub fn kl_divergence(p: &[F], q: &[F]) -> F {
+    assert_eq!(p.len(), q.len(), "KL arguments must have equal length");
+    let mut acc = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            if qi <= 0.0 {
+                return F::INFINITY;
+            }
+            acc += pi * (pi / qi).ln();
+        }
+    }
+    acc
+}
+
+/// The independence table rcᵀ flattened row-major: the max-entropy element
+/// of U(r, c) (Good, 1963), center of the KL ball in Figure 1.
+pub fn independence_table(r: &[F], c: &[F]) -> Vec<F> {
+    let mut table = Vec::with_capacity(r.len() * c.len());
+    for &ri in r {
+        for &cj in c {
+            table.push(ri * cj);
+        }
+    }
+    table
+}
+
+/// Mutual information I(X;Y) of a joint table P (row-major, rows = X) —
+/// equals KL(P ‖ rcᵀ) where (r, c) are P's marginals.
+pub fn mutual_information(p: &[F], d_rows: usize, d_cols: usize) -> F {
+    assert_eq!(p.len(), d_rows * d_cols, "table shape mismatch");
+    let mut r = vec![0.0; d_rows];
+    let mut c = vec![0.0; d_cols];
+    for i in 0..d_rows {
+        for j in 0..d_cols {
+            let pij = p[i * d_cols + j];
+            r[i] += pij;
+            c[j] += pij;
+        }
+    }
+    let mut acc = 0.0;
+    for i in 0..d_rows {
+        for j in 0..d_cols {
+            let pij = p[i * d_cols + j];
+            if pij > 0.0 {
+                acc += pij * (pij / (r[i] * c[j])).ln();
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::{seeded_rng, Histogram};
+
+    #[test]
+    fn entropy_edge_cases() {
+        assert_eq!(entropy(&[1.0, 0.0]), 0.0);
+        assert!((entropy(&[0.5, 0.5]) - (2.0 as F).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_of_identical_is_zero() {
+        let p = [0.2, 0.3, 0.5];
+        assert!(kl_divergence(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_infinite_outside_support() {
+        assert_eq!(kl_divergence(&[0.5, 0.5], &[1.0, 0.0]), F::INFINITY);
+    }
+
+    #[test]
+    fn independence_table_marginals_and_entropy() {
+        // h(rc^T) = h(r) + h(c): the inequality (1) of the paper is tight.
+        let r = [0.3, 0.7];
+        let c = [0.25, 0.25, 0.5];
+        let t = independence_table(&r, &c);
+        let row: F = t[..3].iter().sum();
+        assert!((row - r[0]).abs() < 1e-12);
+        assert!((entropy(&t) - (entropy(&r) + entropy(&c))).abs() < 1e-12);
+        // ...and its mutual information is exactly zero.
+        assert!(mutual_information(&t, 2, 3).abs() < 1e-12);
+    }
+
+    /// KL(P || rc^T) = h(r) + h(c) - h(P) for arbitrary joint tables
+    /// (the identity the Sinkhorn ball U_alpha is built on).
+    #[test]
+    fn prop_kl_entropy_identity() {
+        for seed in 0..200u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(2, 12);
+            // Random joint table with full support.
+            let p_h = Histogram::sample_dirichlet(d * d, 1.0, &mut rng);
+            let p = p_h.values();
+            let mut r = vec![0.0; d];
+            let mut c = vec![0.0; d];
+            for i in 0..d {
+                for j in 0..d {
+                    r[i] += p[i * d + j];
+                    c[j] += p[i * d + j];
+                }
+            }
+            let indep = independence_table(&r, &c);
+            let lhs = kl_divergence(p, &indep);
+            let rhs = entropy(&r) + entropy(&c) - entropy(p);
+            assert!((lhs - rhs).abs() < 1e-9, "identity violated: {lhs} vs {rhs}");
+            // Inequality (1): h(P) <= h(r) + h(c).
+            assert!(entropy(p) <= entropy(&r) + entropy(&c) + 1e-9);
+            // Mutual information agrees with the KL form.
+            assert!((mutual_information(p, d, d) - lhs).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_kl_nonnegative() {
+        for seed in 0..200u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(1, 30);
+            let p = Histogram::sample_uniform(d, &mut rng);
+            let q = Histogram::sample_dirichlet(d, 0.5, &mut rng).smooth(1e-6);
+            assert!(kl_divergence(p.values(), q.values()) >= -1e-12);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Probability-simplex primitives: histograms, information measures and
+//! uniform sampling.
+//!
+//! Everything in the paper lives on the simplex Σ_d = {x ∈ R₊^d : Σx = 1}:
+//! the histograms being compared, the transportation polytope's marginals,
+//! and the entropic quantities (h, KL, mutual information) that define the
+//! Sinkhorn ball U_α(r, c). This module is the shared foundation.
+
+mod info;
+mod sampling;
+
+pub use info::{entropy, independence_table, kl_divergence, mutual_information};
+pub use sampling::{sample_dirichlet, sample_uniform_simplex, seeded_rng};
+
+use crate::F;
+
+/// A probability histogram: a non-negative vector summing to one.
+///
+/// Invariants are enforced at construction: values are finite,
+/// non-negative, and normalized (to within an absolute drift of 1e-9,
+/// re-normalized on entry otherwise).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    values: Vec<F>,
+}
+
+/// Error raised when a vector cannot be interpreted as a histogram.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum HistogramError {
+    #[error("histogram must be non-empty")]
+    Empty,
+    #[error("histogram entries must be finite and non-negative (index {0}: {1})")]
+    Invalid(usize, F),
+    #[error("histogram must have positive total mass")]
+    ZeroMass,
+}
+
+impl Histogram {
+    /// Build a histogram from raw non-negative weights, normalizing them.
+    pub fn from_weights(weights: &[F]) -> Result<Self, HistogramError> {
+        if weights.is_empty() {
+            return Err(HistogramError::Empty);
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            if !w.is_finite() || w < 0.0 {
+                return Err(HistogramError::Invalid(i, w));
+            }
+        }
+        let total: F = weights.iter().sum();
+        if total <= 0.0 {
+            return Err(HistogramError::ZeroMass);
+        }
+        Ok(Self { values: weights.iter().map(|w| w / total).collect() })
+    }
+
+    /// The uniform histogram 1/d.
+    pub fn uniform(d: usize) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        Self { values: vec![1.0 / d as F; d] }
+    }
+
+    /// A point mass δ_i in dimension d.
+    pub fn dirac(d: usize, i: usize) -> Self {
+        assert!(i < d, "dirac index out of range");
+        let mut values = vec![0.0; d];
+        values[i] = 1.0;
+        Self { values }
+    }
+
+    /// Sample uniformly from the simplex (Smith & Tromble, 2004) — the
+    /// workload generator of the paper's §5.3/§5.4 speed experiments.
+    pub fn sample_uniform(d: usize, rng: &mut crate::rng::Rng) -> Self {
+        Self { values: sample_uniform_simplex(d, rng) }
+    }
+
+    /// Sample from a symmetric Dirichlet(α) — spikier (α<1) or flatter
+    /// (α>1) histograms than uniform-simplex sampling.
+    pub fn sample_dirichlet(d: usize, alpha: F, rng: &mut crate::rng::Rng) -> Self {
+        Self { values: sample_dirichlet(d, alpha, rng) }
+    }
+
+    /// Dimension d of the ambient simplex.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Histogram entries (guaranteed normalized, non-negative).
+    #[inline]
+    pub fn values(&self) -> &[F] {
+        &self.values
+    }
+
+    /// Shannon entropy h(r) in nats.
+    pub fn entropy(&self) -> F {
+        entropy(&self.values)
+    }
+
+    /// Number of strictly positive entries (the support size).
+    pub fn support_size(&self) -> usize {
+        self.values.iter().filter(|&&v| v > 0.0).count()
+    }
+
+    /// Indices of strictly positive entries — Algorithm 1 line 1 of the
+    /// paper drops zero-mass source bins before scaling.
+    pub fn support(&self) -> Vec<usize> {
+        (0..self.dim()).filter(|&i| self.values[i] > 0.0).collect()
+    }
+
+    /// Entries converted to f32 for the XLA/PJRT boundary.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Mix with the uniform histogram: (1-eps) r + eps/d. Used to give
+    /// full support to empirical histograms before entropic scaling.
+    pub fn smooth(&self, eps: F) -> Self {
+        let d = self.dim() as F;
+        let values =
+            self.values.iter().map(|&v| (1.0 - eps) * v + eps / d).collect();
+        Self { values }
+    }
+
+    /// Total-mass drift from 1 (diagnostic; should be ~1e-16).
+    pub fn mass_error(&self) -> F {
+        (self.values.iter().sum::<F>() - 1.0).abs()
+    }
+}
+
+impl AsRef<[F]> for Histogram {
+    fn as_ref(&self) -> &[F] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_weights_normalizes() {
+        let h = Histogram::from_weights(&[2.0, 2.0, 4.0]).unwrap();
+        assert_eq!(h.values(), &[0.25, 0.25, 0.5]);
+        assert!(h.mass_error() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert_eq!(Histogram::from_weights(&[]), Err(HistogramError::Empty));
+        assert_eq!(
+            Histogram::from_weights(&[0.0, 0.0]),
+            Err(HistogramError::ZeroMass)
+        );
+        assert!(matches!(
+            Histogram::from_weights(&[1.0, -0.5]),
+            Err(HistogramError::Invalid(1, _))
+        ));
+        assert!(matches!(
+            Histogram::from_weights(&[1.0, F::NAN]),
+            Err(HistogramError::Invalid(1, _))
+        ));
+    }
+
+    #[test]
+    fn uniform_and_dirac() {
+        let u = Histogram::uniform(4);
+        assert_eq!(u.values(), &[0.25; 4]);
+        assert!((u.entropy() - (4.0 as F).ln()).abs() < 1e-12);
+        let d = Histogram::dirac(3, 1);
+        assert_eq!(d.values(), &[0.0, 1.0, 0.0]);
+        assert_eq!(d.entropy(), 0.0);
+        assert_eq!(d.support(), vec![1]);
+        assert_eq!(d.support_size(), 1);
+    }
+
+    #[test]
+    fn smooth_gives_full_support() {
+        let d = Histogram::dirac(5, 0).smooth(0.1);
+        assert_eq!(d.support_size(), 5);
+        assert!(d.mass_error() < 1e-12);
+    }
+
+    // Property-style sweeps (in-tree harness; see DESIGN.md on the
+    // offline dependency policy).
+    #[test]
+    fn prop_sampled_histograms_are_valid() {
+        for seed in 0..200u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(1, 200);
+            let h = Histogram::sample_uniform(d, &mut rng);
+            assert_eq!(h.dim(), d);
+            assert!(h.mass_error() < 1e-9);
+            assert!(h.values().iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn prop_entropy_bounded_by_log_d() {
+        for seed in 0..200u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(1, 100);
+            let h = Histogram::sample_uniform(d, &mut rng);
+            let e = h.entropy();
+            assert!(e >= -1e-12);
+            assert!(e <= (d as F).ln() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_normalization_is_scale_invariant() {
+        for seed in 0..100u64 {
+            let mut rng = seeded_rng(seed);
+            let n = rng.range_usize(1, 50);
+            let w: Vec<F> = (0..n).map(|_| rng.range_f64(1e-6, 1e6)).collect();
+            let s = rng.range_f64(1e-3, 1e3);
+            let a = Histogram::from_weights(&w).unwrap();
+            let scaled: Vec<F> = w.iter().map(|x| x * s).collect();
+            let b = Histogram::from_weights(&scaled).unwrap();
+            for (x, y) in a.values().iter().zip(b.values()) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Sampling on the probability simplex.
+//!
+//! The paper's speed experiments (§5.3–§5.4) "generate points uniformly in
+//! the d-simplex (Smith and Tromble, 2004)". The exponential-spacings
+//! construction used here is the standard equivalent: d i.i.d. Exp(1)
+//! variables normalized by their sum are uniform on Σ_d (it is the
+//! continuous analogue of Smith & Tromble's sorted-uniform gaps and avoids
+//! the O(d log d) sort).
+
+use crate::rng::Rng;
+use crate::F;
+
+/// Deterministic RNG for reproducible experiments; every harness and test
+/// in this crate derives its randomness from a seed through here.
+pub fn seeded_rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+/// Draw one point uniformly at random from the simplex Σ_d.
+pub fn sample_uniform_simplex(d: usize, rng: &mut Rng) -> Vec<F> {
+    assert!(d > 0, "dimension must be positive");
+    let mut v: Vec<F> = (0..d)
+        .map(|_| {
+            // Inverse-CDF Exp(1); guard the log away from 0.
+            let u: F = rng.f64().max(1e-300);
+            -u.ln()
+        })
+        .collect();
+    let total: F = v.iter().sum();
+    for x in &mut v {
+        *x /= total;
+    }
+    v
+}
+
+/// Draw from a symmetric Dirichlet(alpha) via Gamma(alpha, 1)
+/// normalization — spikier (α<1) or flatter (α>1) than uniform sampling.
+pub fn sample_dirichlet(d: usize, alpha: F, rng: &mut Rng) -> Vec<F> {
+    assert!(d > 0, "dimension must be positive");
+    assert!(alpha > 0.0, "alpha must be positive");
+    let mut v: Vec<F> = (0..d).map(|_| rng.gamma(alpha)).collect();
+    let mut total: F = v.iter().sum();
+    if total <= 0.0 {
+        // Pathologically tiny alpha: fall back to a random dirac.
+        let i = rng.below(d);
+        v = vec![0.0; d];
+        v[i] = 1.0;
+        total = 1.0;
+    }
+    for x in &mut v {
+        *x /= total;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_simplex_moments() {
+        // Coordinates of a uniform simplex point have mean 1/d; spot-check
+        // the empirical mean over many draws.
+        let mut rng = seeded_rng(42);
+        let d = 10;
+        let trials = 4000;
+        let mut mean = vec![0.0; d];
+        for _ in 0..trials {
+            let v = sample_uniform_simplex(d, &mut rng);
+            for (m, x) in mean.iter_mut().zip(&v) {
+                *m += x / trials as F;
+            }
+        }
+        for m in &mean {
+            assert!((m - 0.1).abs() < 0.01, "biased coordinate mean {m}");
+        }
+    }
+
+    #[test]
+    fn uniform_simplex_second_moment() {
+        // E[x_i^2] = 2/(d(d+1)) under the flat Dirichlet.
+        let mut rng = seeded_rng(7);
+        let d = 5;
+        let trials = 20000;
+        let mut m2 = 0.0;
+        for _ in 0..trials {
+            let v = sample_uniform_simplex(d, &mut rng);
+            m2 += v[0] * v[0] / trials as F;
+        }
+        let want = 2.0 / (d as F * (d as F + 1.0));
+        assert!(
+            (m2 - want).abs() < 0.1 * want,
+            "E[x^2]: got {m2}, want {want}"
+        );
+    }
+
+    #[test]
+    fn dirichlet_concentration() {
+        // Large alpha concentrates near uniform; small alpha is spiky.
+        let mut rng = seeded_rng(3);
+        let flat = sample_dirichlet(20, 100.0, &mut rng);
+        let spiky = sample_dirichlet(20, 0.05, &mut rng);
+        let ent = |v: &[F]| crate::simplex::entropy(v);
+        assert!(ent(&flat) > ent(&spiky));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sample_uniform_simplex(8, &mut seeded_rng(5));
+        let b = sample_uniform_simplex(8, &mut seeded_rng(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_samples_normalized() {
+        let mut rng = seeded_rng(9);
+        for d in [1usize, 2, 7, 100] {
+            for _ in 0..20 {
+                let v = sample_uniform_simplex(d, &mut rng);
+                assert!((v.iter().sum::<F>() - 1.0).abs() < 1e-12);
+                assert!(v.iter().all(|&x| x >= 0.0));
+                let w = sample_dirichlet(d, 0.4, &mut rng);
+                assert!((w.iter().sum::<F>() - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! The *primal* Sinkhorn distance d_{M,α} (Definition 1), computed
+//! through the dual-Sinkhorn divergence by bisection on λ — exactly the
+//! scheme sketched in the paper's §4.2:
+//!
+//! > "d_{M,α} can be obtained by computing d_M^λ iteratively until the
+//! > entropy of the solution P^λ has reached an adequate value
+//! > h(r) + h(c) − α. Since the entropy of P^λ decreases monotonically
+//! > when λ increases, this search can be carried out by simple
+//! > bisection."
+//!
+//! The entropy target pins the KL-ball radius: KL(P^λ ‖ rcᵀ) = α at the
+//! active constraint. Two inactive regimes are detected and short-cut:
+//! α ≈ 0 (the independence table rcᵀ is the only feasible point) and α
+//! large enough that the unconstrained optimum already has enough entropy
+//! (d_{M,α} = d_M, Property 1).
+
+use super::{SinkhornConfig, SinkhornEngine};
+use crate::metric::CostMatrix;
+use crate::simplex::{entropy, Histogram};
+use crate::F;
+
+/// Bisection configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AlphaConfig {
+    /// λ search interval (log-bisected).
+    pub lambda_min: F,
+    pub lambda_max: F,
+    /// Stop when the entropy target is met within this tolerance (nats).
+    pub entropy_tolerance: F,
+    /// Max bisection steps.
+    pub max_steps: usize,
+    /// Inner fixed-point configuration template (λ is overridden).
+    pub inner: SinkhornConfig,
+}
+
+impl Default for AlphaConfig {
+    fn default() -> Self {
+        Self {
+            lambda_min: 1e-3,
+            lambda_max: 1e4,
+            entropy_tolerance: 1e-4,
+            max_steps: 60,
+            inner: SinkhornConfig {
+                lambda: 1.0, // overridden per probe
+                tolerance: 1e-10,
+                max_iterations: 100_000,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+/// Result of a d_{M,α} evaluation.
+#[derive(Debug, Clone)]
+pub struct AlphaOutput {
+    /// The Sinkhorn distance d_{M,α}(r, c).
+    pub value: F,
+    /// The dual weight λ(α) the bisection landed on (∞ for the exact-OT
+    /// regime shortcut, 0 for the independence regime).
+    pub lambda: F,
+    /// Entropy h(P) of the returned plan.
+    pub plan_entropy: F,
+    /// h(r) + h(c) − α, the entropy floor that was targeted.
+    pub entropy_target: F,
+    /// Bisection probes performed.
+    pub probes: usize,
+    /// True when the entropic constraint is inactive (α big: EMD regime).
+    pub unconstrained: bool,
+}
+
+/// Solver for the hard-constraint Sinkhorn distance.
+pub struct AlphaSinkhorn<'m> {
+    metric: &'m CostMatrix,
+    config: AlphaConfig,
+}
+
+impl<'m> AlphaSinkhorn<'m> {
+    pub fn new(metric: &'m CostMatrix) -> Self {
+        Self { metric, config: AlphaConfig::default() }
+    }
+
+    pub fn with_config(metric: &'m CostMatrix, config: AlphaConfig) -> Self {
+        Self { metric, config }
+    }
+
+    /// Evaluate d_{M,α}(r, c) for α ≥ 0 (nats of allowed mutual
+    /// information).
+    pub fn distance(&self, r: &Histogram, c: &Histogram, alpha: F) -> AlphaOutput {
+        assert!(alpha >= 0.0, "alpha must be non-negative");
+        let target = entropy(r.values()) + entropy(c.values()) - alpha;
+        let cfg = &self.config;
+
+        // α = 0 shortcut: U_0 = {rc^T}, d_{M,0} = r'Mc (Property 2).
+        if alpha <= 1e-12 {
+            let value = super::independence_distance(self.metric, r, c);
+            return AlphaOutput {
+                value,
+                lambda: 0.0,
+                plan_entropy: target, // h(rc^T) = h(r) + h(c)
+                entropy_target: target,
+                probes: 0,
+                unconstrained: false,
+            };
+        }
+
+        // Vacuous-constraint shortcut (Property 1): every P ∈ U(r,c) has
+        // h(P) ≥ max(h(r), h(c)) (conditioning reduces entropy), so when
+        // the floor sits at or below that bound the ball is all of U(r,c)
+        // and d_{M,α} = d_M exactly — solve with the network simplex.
+        if target <= entropy(r.values()).max(entropy(c.values())) + 1e-12 {
+            let plan = crate::ot::EmdSolver::new(self.metric)
+                .solve(r, c)
+                .expect("exact OT solve in unconstrained regime");
+            return AlphaOutput {
+                value: plan.cost,
+                lambda: F::INFINITY,
+                plan_entropy: plan.entropy(),
+                entropy_target: target,
+                probes: 0,
+                unconstrained: true,
+            };
+        }
+
+        let probe = |lambda: F, probes: &mut usize| -> (F, F) {
+            *probes += 1;
+            let engine = SinkhornEngine::with_config(
+                self.metric,
+                SinkhornConfig { lambda, ..cfg.inner },
+            );
+            let (plan, out) = engine.plan(r, c);
+            (entropy(&plan), out.value)
+        };
+
+        let mut probes = 0;
+        // Check the top of the interval first: if even λ_max keeps more
+        // entropy than required... it cannot (entropy decreases in λ), so
+        // instead: if the λ_max plan *still* violates (h < target is what
+        // we need to avoid; constraint wants h >= target), i.e. if
+        // h(λ_max) >= target, the constraint never binds within the
+        // interval -> unconstrained regime (≈ exact OT).
+        let (h_hi, v_hi) = probe(cfg.lambda_max, &mut probes);
+        if h_hi >= target {
+            return AlphaOutput {
+                value: v_hi,
+                lambda: cfg.lambda_max,
+                plan_entropy: h_hi,
+                entropy_target: target,
+                probes,
+                unconstrained: true,
+            };
+        }
+        let (h_lo, v_lo) = probe(cfg.lambda_min, &mut probes);
+        if h_lo <= target {
+            // Even the flattest plan we can produce is below the floor:
+            // α is so small that the optimum sits at the ball's boundary
+            // near rc^T; return the λ_min solution (best approximation).
+            return AlphaOutput {
+                value: v_lo,
+                lambda: cfg.lambda_min,
+                plan_entropy: h_lo,
+                entropy_target: target,
+                probes,
+                unconstrained: false,
+            };
+        }
+
+        // Bisect in log λ: h(λ) is decreasing, find h(λ*) = target.
+        let mut lo = cfg.lambda_min.ln();
+        let mut hi = cfg.lambda_max.ln();
+        let mut best = (cfg.lambda_min, h_lo, v_lo);
+        for _ in 0..cfg.max_steps {
+            let mid = 0.5 * (lo + hi);
+            let lambda = mid.exp();
+            let (h, v) = probe(lambda, &mut probes);
+            best = (lambda, h, v);
+            if (h - target).abs() <= cfg.entropy_tolerance {
+                break;
+            }
+            if h > target {
+                // Plan too smooth: the ball allows going further; raise λ.
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        // Guarantee feasibility: if the final probe undershot the entropy
+        // floor, step back to the feasible side.
+        let (mut lambda, mut h, mut v) = best;
+        if h < target - cfg.entropy_tolerance {
+            lambda = (lo.exp() + lambda) * 0.5;
+            let (h2, v2) = probe(lambda, &mut probes);
+            h = h2;
+            v = v2;
+        }
+        AlphaOutput {
+            value: v,
+            lambda,
+            plan_entropy: h,
+            entropy_target: target,
+            probes,
+            unconstrained: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::ot::EmdSolver;
+    use crate::simplex::seeded_rng;
+    use crate::sinkhorn::independence_distance;
+
+    fn setup(d: usize, seed: u64) -> (CostMatrix, Histogram, Histogram) {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        (m, r, c)
+    }
+
+    #[test]
+    fn alpha_zero_is_independence() {
+        let (m, r, c) = setup(10, 0);
+        let solver = AlphaSinkhorn::new(&m);
+        let out = solver.distance(&r, &c, 0.0);
+        let want = independence_distance(&m, &r, &c);
+        assert!((out.value - want).abs() < 1e-12);
+        assert_eq!(out.probes, 0);
+    }
+
+    #[test]
+    fn alpha_large_recovers_emd() {
+        let (m, r, c) = setup(10, 1);
+        let solver = AlphaSinkhorn::new(&m);
+        // alpha bigger than any possible mutual information: h(r)+h(c).
+        let alpha = entropy(r.values()) + entropy(c.values());
+        let out = solver.distance(&r, &c, alpha);
+        assert!(out.unconstrained);
+        assert_eq!(out.probes, 0, "vacuous constraint must shortcut");
+        let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+        assert!(
+            (out.value - exact).abs() / exact < 1e-9,
+            "unconstrained {} vs exact {exact}",
+            out.value
+        );
+    }
+
+    #[test]
+    fn entropy_constraint_is_active_and_met() {
+        let (m, r, c) = setup(12, 2);
+        let solver = AlphaSinkhorn::new(&m);
+        for alpha in [0.05, 0.2, 0.5] {
+            let out = solver.distance(&r, &c, alpha);
+            if out.unconstrained {
+                continue;
+            }
+            // Feasibility: h(P) >= target (within tolerance)...
+            assert!(
+                out.plan_entropy >= out.entropy_target - 2e-3,
+                "alpha={alpha}: entropy {} below target {}",
+                out.plan_entropy,
+                out.entropy_target
+            );
+            // ...and activity: the optimum rides the boundary.
+            assert!(
+                (out.plan_entropy - out.entropy_target).abs() < 2e-2,
+                "alpha={alpha}: constraint unexpectedly slack"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_alpha() {
+        // A bigger ball can only lower the minimum.
+        let (m, r, c) = setup(10, 3);
+        let solver = AlphaSinkhorn::new(&m);
+        let mut prev = F::INFINITY;
+        for alpha in [0.01, 0.05, 0.15, 0.4, 1.0] {
+            let out = solver.distance(&r, &c, alpha);
+            assert!(
+                out.value <= prev + 1e-6,
+                "d_(M,{alpha}) = {} rose above {prev}",
+                out.value
+            );
+            prev = out.value;
+        }
+    }
+
+    #[test]
+    fn theorem1_triangle_inequality_for_alpha() {
+        // The actual statement of Theorem 1 is about d_{M,alpha}.
+        let mut rng = seeded_rng(7);
+        let d = 8;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let solver = AlphaSinkhorn::new(&m);
+        for alpha in [0.1, 0.3] {
+            for seed in 0..3u64 {
+                let mut rng = seeded_rng(100 + seed);
+                let x = Histogram::sample_uniform(d, &mut rng);
+                let y = Histogram::sample_uniform(d, &mut rng);
+                let z = Histogram::sample_uniform(d, &mut rng);
+                let dxy = solver.distance(&x, &y, alpha).value;
+                let dyz = solver.distance(&y, &z, alpha).value;
+                let dxz = solver.distance(&x, &z, alpha).value;
+                assert!(
+                    dxz <= dxy + dyz + 1e-4,
+                    "alpha={alpha} seed={seed}: {dxz} > {dxy} + {dyz}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_between_emd_and_independence() {
+        let (m, r, c) = setup(10, 5);
+        let solver = AlphaSinkhorn::new(&m);
+        let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+        let indep = independence_distance(&m, &r, &c);
+        for alpha in [0.02, 0.1, 0.5, 2.0] {
+            let out = solver.distance(&r, &c, alpha);
+            assert!(out.value >= exact - 1e-6, "below EMD at alpha={alpha}");
+            assert!(out.value <= indep + 1e-6, "above r'Mc at alpha={alpha}");
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! The dense Sinkhorn-Knopp fixed-point engine (Algorithm 1).
+//!
+//! Hot-path layout decisions (see EXPERIMENTS.md §Perf for measurements):
+//!
+//! * `K` and `Kᵀ` are both materialized row-major once per (M, λ) bind, so
+//!   both matvecs in the iteration stream contiguously;
+//! * `K∘M` (needed only for the final cost read-off) is materialized
+//!   lazily, not in the loop;
+//! * the batch path walks N problems per row tile so `K` is read once per
+//!   iteration regardless of batch width (the vectorization the paper
+//!   credits for GPGPU speed, recreated in cache terms).
+
+use super::SinkhornConfig;
+use crate::linalg::dot;
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
+use crate::F;
+
+/// Result of a Sinkhorn solve.
+#[derive(Debug, Clone)]
+pub struct SinkhornOutput {
+    /// The dual-Sinkhorn divergence d_M^λ(r, c).
+    pub value: F,
+    /// Scaling vector u (support-aligned with r).
+    pub u: Vec<F>,
+    /// Scaling vector v (support-aligned with c).
+    pub v: Vec<F>,
+    /// Iteration statistics.
+    pub stats: SinkhornStats,
+}
+
+/// Per-solve statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SinkhornStats {
+    /// Fixed-point iterations executed.
+    pub iterations: usize,
+    /// Last observed ‖x − x'‖₂ (∞ if never checked).
+    pub last_delta: F,
+    /// Whether the tolerance was met before the iteration cap.
+    pub converged: bool,
+    /// Whether the log-domain stabilized path was used.
+    pub stabilized: bool,
+}
+
+/// Sinkhorn solver bound to a ground metric and a λ (precomputes K, Kᵀ).
+pub struct SinkhornEngine {
+    d: usize,
+    lambda: F,
+    config: SinkhornConfig,
+    /// K = exp(−λM), row-major.
+    k: Vec<F>,
+    /// Kᵀ, row-major (i.e. K column-major), for the second matvec.
+    kt: Vec<F>,
+    /// M, kept for the cost read-off and log-domain fallback.
+    m: Vec<F>,
+    /// True when exp(−λM) underflowed badly enough that the dense kernel
+    /// is unusable and solves are delegated to the log-domain path.
+    degenerate: bool,
+}
+
+impl SinkhornEngine {
+    /// Bind to a metric with λ and default (convergence-driven) config.
+    pub fn new(metric: &CostMatrix, lambda: F) -> Self {
+        Self::with_config(metric, SinkhornConfig::converged(lambda))
+    }
+
+    /// Bind with an explicit config.
+    pub fn with_config(metric: &CostMatrix, config: SinkhornConfig) -> Self {
+        let d = metric.dim();
+        let lambda = config.lambda;
+        assert!(lambda > 0.0, "lambda must be positive");
+        let mut k = vec![0.0; d * d];
+        for (out, &mij) in k.iter_mut().zip(metric.data()) {
+            *out = (-lambda * mij).exp();
+        }
+        let mut kt = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                kt[j * d + i] = k[i * d + j];
+            }
+        }
+        // The diagonal of K is always 1 (m_ii = 0), so row-level zero
+        // tests never fire; instead detect mass underflow: when the bulk
+        // of the *off-diagonal* kernel underflows to exactly zero, K is
+        // numerically diagonal, the dense fixed point collapses to a
+        // meaningless 0-cost answer, and solves must go through the
+        // log-domain path.
+        let off_diag = (d * d - d).max(1);
+        let zeros = (0..d)
+            .flat_map(|i| (0..d).filter(move |&j| j != i).map(move |j| (i, j)))
+            .filter(|&(i, j)| k[i * d + j] == 0.0)
+            .count();
+        let degenerate =
+            config.auto_stabilize && zeros as f64 > 0.5 * off_diag as f64;
+        Self { d, lambda, config, k, kt, m: metric.data().to_vec(), degenerate }
+    }
+
+    /// Problem dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The entropic weight λ.
+    pub fn lambda(&self) -> F {
+        self.lambda
+    }
+
+    /// Whether solves are being routed through the log-domain path.
+    pub fn is_stabilized(&self) -> bool {
+        self.degenerate
+    }
+
+    /// d_M^λ(r, c) for a single pair.
+    pub fn distance(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
+        assert_eq!(r.dim(), self.d, "source dimension mismatch");
+        assert_eq!(c.dim(), self.d, "target dimension mismatch");
+        if self.degenerate {
+            return super::log_domain::solve(
+                &self.m, self.d, self.lambda, &self.config, r.values(), c.values(),
+            );
+        }
+        self.solve_dense(r.values(), c.values())
+    }
+
+    /// Batched d_M^λ(r, c_j) for a family of targets (Algorithm 1's
+    /// vectorized form). Returns one output per target.
+    pub fn distances_batch(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
+        // Correct and simple: iterate the batch; the dense kernel K is hot
+        // in cache across consecutive solves. (A fully interleaved batch
+        // walk is what the XLA runtime path provides.)
+        cs.iter().map(|c| self.distance(r, c)).collect()
+    }
+
+    /// The full transport plan P^λ = diag(u) K diag(v) (dense d×d).
+    pub fn plan(&self, r: &Histogram, c: &Histogram) -> (Vec<F>, SinkhornOutput) {
+        let out = self.distance(r, c);
+        let mut p = vec![0.0; self.d * self.d];
+        if out.stats.stabilized {
+            // Reconstruct from scalings in log space for safety.
+            for i in 0..self.d {
+                let lu = out.u[i].max(1e-300).ln();
+                for j in 0..self.d {
+                    let lv = out.v[j].max(1e-300).ln();
+                    p[i * self.d + j] =
+                        (lu + lv - self.lambda * self.m[i * self.d + j]).exp();
+                }
+            }
+        } else {
+            for i in 0..self.d {
+                let ui = out.u[i];
+                let row = &self.k[i * self.d..(i + 1) * self.d];
+                let prow = &mut p[i * self.d..(i + 1) * self.d];
+                for j in 0..self.d {
+                    prow[j] = ui * row[j] * out.v[j];
+                }
+            }
+        }
+        (p, out)
+    }
+
+    fn solve_dense(&self, r: &[F], c: &[F]) -> SinkhornOutput {
+        let d = self.d;
+        let cfg = &self.config;
+        // x is the paper's iterate (x = 1./u); we track u directly and
+        // measure the stopping criterion on u (equivalent up to scaling).
+        let mut u = vec![1.0 / d as F; d];
+        let mut u_prev = vec![0.0; d];
+        let mut v = vec![0.0; d];
+        let mut stats = SinkhornStats { last_delta: F::INFINITY, ..Default::default() };
+
+        let mut iter = 0;
+        while iter < cfg.max_iterations {
+            iter += 1;
+            // v = c ./ (K' u)
+            kernel_ratio(&self.kt, &u, c, &mut v, d);
+            // u = r ./ (K v)
+            std::mem::swap(&mut u, &mut u_prev);
+            kernel_ratio(&self.k, &v, r, &mut u, d);
+
+            let check = cfg.check_every != usize::MAX && iter % cfg.check_every == 0;
+            if check {
+                let mut delta = 0.0;
+                for i in 0..d {
+                    let e = u[i] - u_prev[i];
+                    delta += e * e;
+                }
+                stats.last_delta = delta.sqrt();
+                if stats.last_delta <= cfg.tolerance {
+                    stats.converged = true;
+                    break;
+                }
+                if !stats.last_delta.is_finite() {
+                    // Underflow blow-up: retry in log domain.
+                    return super::log_domain::solve(
+                        &self.m, d, self.lambda, cfg, r, c,
+                    );
+                }
+            }
+        }
+        stats.iterations = iter;
+
+        // d = sum(u .* ((K .* M) v)) -- evaluated rowwise without
+        // materializing K∘M.
+        let mut value = 0.0;
+        for i in 0..d {
+            let krow = &self.k[i * d..(i + 1) * d];
+            let mrow = &self.m[i * d..(i + 1) * d];
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += krow[j] * mrow[j] * v[j];
+            }
+            value += u[i] * acc;
+        }
+        SinkhornOutput { value, u, v, stats }
+    }
+}
+
+/// out = num ./ (mat · x), guarding 0/0 -> 0 (zero-mass bins stay inert).
+#[inline]
+fn kernel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usize) {
+    for i in 0..d {
+        let den = dot(&mat[i * d..(i + 1) * d], x);
+        out[i] = if den > 0.0 { num[i] / den } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::{GridMetric, RandomMetric};
+    use crate::ot::EmdSolver;
+    use crate::simplex::seeded_rng;
+
+    fn setup(d: usize, seed: u64) -> (crate::metric::CostMatrix, Histogram, Histogram) {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        (m, r, c)
+    }
+
+    #[test]
+    fn marginals_at_convergence() {
+        let (m, r, c) = setup(24, 0);
+        let engine = SinkhornEngine::with_config(
+            &m,
+            SinkhornConfig { lambda: 8.0, tolerance: 1e-12, max_iterations: 50_000, ..Default::default() },
+        );
+        let (plan, out) = engine.plan(&r, &c);
+        assert!(out.stats.converged);
+        let d = 24;
+        for i in 0..d {
+            let row: F = plan[i * d..(i + 1) * d].iter().sum();
+            assert!((row - r.values()[i]).abs() < 1e-8, "row {i}");
+        }
+        for j in 0..d {
+            let col: F = (0..d).map(|i| plan[i * d + j]).sum();
+            assert!((col - c.values()[j]).abs() < 1e-6, "col {j}");
+        }
+    }
+
+    #[test]
+    fn upper_bounds_exact_emd() {
+        // d_M^lam >= d_M always (the entropy penalty only adds cost).
+        for seed in 0..5 {
+            let (m, r, c) = setup(16, seed);
+            let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+            let sk = SinkhornEngine::new(&m, 9.0).distance(&r, &c);
+            assert!(
+                sk.value >= exact - 1e-9,
+                "sinkhorn {} below exact {}",
+                sk.value,
+                exact
+            );
+        }
+    }
+
+    #[test]
+    fn converges_to_emd_as_lambda_grows() {
+        // The Fig. 3 phenomenon: relative gap decreases with lambda.
+        let (m, r, c) = setup(12, 3);
+        let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+        let mut prev_gap = F::INFINITY;
+        for &lam in &[1.0, 3.0, 9.0, 27.0, 81.0] {
+            let cfg = SinkhornConfig {
+                lambda: lam,
+                tolerance: 1e-10,
+                max_iterations: 200_000,
+                ..Default::default()
+            };
+            let sk = SinkhornEngine::with_config(&m, cfg).distance(&r, &c);
+            let gap = (sk.value - exact) / exact;
+            assert!(gap > -1e-6);
+            assert!(gap <= prev_gap + 1e-6, "gap not decreasing at lam={lam}");
+            prev_gap = gap;
+        }
+        assert!(prev_gap < 0.05, "gap at lambda=81 still {prev_gap}");
+    }
+
+    #[test]
+    fn fixed_budget_runs_exact_count() {
+        let (m, r, c) = setup(10, 4);
+        let engine = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 20));
+        let out = engine.distance(&r, &c);
+        assert_eq!(out.stats.iterations, 20);
+        assert!(!out.stats.converged);
+        assert!(out.value.is_finite());
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (m, r, _) = setup(14, 5);
+        let mut rng = seeded_rng(99);
+        let cs: Vec<Histogram> =
+            (0..6).map(|_| Histogram::sample_uniform(14, &mut rng)).collect();
+        let engine = SinkhornEngine::new(&m, 7.0);
+        let batch = engine.distances_batch(&r, &cs);
+        for (c, out) in cs.iter().zip(&batch) {
+            let single = engine.distance(&r, c);
+            assert!((single.value - out.value).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn auto_stabilizes_on_huge_lambda() {
+        // lambda*max(M) >> 700: dense K underflows to all-zero rows.
+        let (m, r, c) = setup(8, 6);
+        let engine = SinkhornEngine::new(&m, 5_000.0);
+        assert!(engine.is_stabilized());
+        let out = engine.distance(&r, &c);
+        assert!(out.stats.stabilized);
+        assert!(out.value.is_finite());
+        // At enormous lambda the value approaches the exact EMD.
+        let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+        assert!((out.value - exact) / exact < 0.02);
+    }
+
+    #[test]
+    fn supports_sparse_histograms() {
+        let m = GridMetric::new(3, 3).cost_matrix();
+        let r = Histogram::from_weights(&[1.0, 0., 0., 0., 0., 0., 0., 0., 1.0]).unwrap();
+        let c = Histogram::from_weights(&[0., 0., 1.0, 0., 0., 0., 1.0, 0., 0.]).unwrap();
+        let out = SinkhornEngine::new(&m, 9.0).distance(&r, &c);
+        assert!(out.value.is_finite());
+        assert!(out.value > 0.0);
+    }
+
+    /// Symmetry of the divergence for symmetric M.
+    #[test]
+    fn prop_symmetric() {
+        for seed in 0..16u64 {
+            let mut meta = seeded_rng(seed + 7777);
+            let d = meta.range_usize(3, 20);
+            let (m, r, c) = setup(d, seed);
+            let engine = SinkhornEngine::with_config(&m, SinkhornConfig {
+                lambda: 6.0, tolerance: 1e-10, max_iterations: 100_000,
+                ..Default::default()
+            });
+            let ab = engine.distance(&r, &c).value;
+            let ba = engine.distance(&c, &r).value;
+            assert!((ab - ba).abs() < 1e-6 * (1.0 + ab.abs()));
+        }
+    }
+
+    /// Non-negativity and finiteness across lambda regimes.
+    #[test]
+    fn prop_finite_nonnegative() {
+        for seed in 0..24u64 {
+            let mut meta = seeded_rng(seed + 13);
+            let lam = meta.range_f64(0.5, 60.0);
+            let (m, r, c) = setup(10, seed);
+            let out = SinkhornEngine::new(&m, lam).distance(&r, &c);
+            assert!(out.value.is_finite());
+            assert!(out.value >= -1e-12);
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! The Independence kernel — the α = 0 / λ → 0 extreme of the Sinkhorn
+//! family (Property 2).
+//!
+//! When the entropic ball shrinks to {rcᵀ}, the Sinkhorn distance has the
+//! closed form d_{M,0}(r,c) = rᵀ M c, which is a negative definite kernel
+//! whenever M is a Euclidean distance matrix, so e^{−t·rᵀMc} is a valid
+//! positive definite SVM kernel. The appendix's Remark also gives the fast
+//! evaluation scheme implemented here: with m_ij = ‖φ_i − φ_j‖²,
+//!
+//! ```text
+//! rᵀ M c = rᵀu + cᵀu − 2 (Lr)ᵀ(Lc),
+//! ```
+//!
+//! where u_i = ‖φ_i‖² and L is a Cholesky factor of the Gram matrix
+//! K = [⟨φ_i, φ_j⟩]. Preprocessing each histogram to (Lr, rᵀu) makes each
+//! subsequent distance evaluation O(rank) instead of O(d²).
+
+use crate::linalg::{cholesky, dot, Matrix};
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
+use crate::F;
+
+/// Direct O(d²) evaluation of d_{M,0}(r, c) = rᵀ M c.
+pub fn independence_distance(m: &CostMatrix, r: &Histogram, c: &Histogram) -> F {
+    let d = m.dim();
+    assert_eq!(r.dim(), d, "source dimension mismatch");
+    assert_eq!(c.dim(), d, "target dimension mismatch");
+    let mut acc = 0.0;
+    for (i, &ri) in r.values().iter().enumerate() {
+        if ri != 0.0 {
+            acc += ri * dot(m.row(i), c.values());
+        }
+    }
+    acc
+}
+
+/// Preprocessed representation of one histogram under an
+/// [`IndependenceKernel`]: the pair (L r, rᵀ u) of the appendix Remark.
+#[derive(Debug, Clone)]
+pub struct PreparedHistogram {
+    lr: Vec<F>,
+    ru: F,
+}
+
+/// The Independence kernel with the Cholesky speed-up.
+///
+/// Requires M to be (numerically) a Euclidean distance matrix: the implied
+/// Gram matrix K_ij = ½(u_i + u_j − m_ij) (anchored at point 0) must be
+/// PSD; a tiny diagonal jitter is applied to absorb roundoff.
+#[derive(Debug, Clone)]
+pub struct IndependenceKernel {
+    d: usize,
+    /// Cholesky factor of the anchored Gram matrix.
+    l: Matrix,
+    /// u_i = ‖φ_i‖² (with φ_0 at the origin).
+    u: Vec<F>,
+}
+
+/// Error for non-Euclidean cost matrices.
+#[derive(Debug, thiserror::Error)]
+#[error("cost matrix is not a Euclidean distance matrix (Gram matrix not PSD)")]
+pub struct NotEuclidean;
+
+impl IndependenceKernel {
+    /// Build the factorization from a squared-Euclidean cost matrix.
+    pub fn new(m: &CostMatrix) -> Result<Self, NotEuclidean> {
+        let d = m.dim();
+        // Anchor φ_0 = 0: u_i = m_{i,0}, K_ij = (u_i + u_j - m_ij) / 2.
+        let u: Vec<F> = (0..d).map(|i| m.get(i, 0)).collect();
+        let mut gram = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                gram.set(i, j, 0.5 * (u[i] + u[j] - m.get(i, j)));
+            }
+        }
+        // Jitter loop: absorb floating-point negativity only (scale-aware).
+        let scale: F = (0..d).map(|i| gram.get(i, i).abs()).fold(0.0, F::max).max(1e-30);
+        let mut jitter = 1e-12 * scale;
+        for _ in 0..20 {
+            if let Some(l) = cholesky(&gram) {
+                return Ok(Self { d, l, u });
+            }
+            for i in 0..d {
+                let v = gram.get(i, i) + jitter;
+                gram.set(i, i, v);
+            }
+            jitter *= 10.0;
+            if jitter > 1e-4 * scale {
+                break;
+            }
+        }
+        Err(NotEuclidean)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Preprocess one histogram: O(d²) once, O(d) per distance after.
+    pub fn prepare(&self, h: &Histogram) -> PreparedHistogram {
+        assert_eq!(h.dim(), self.d, "dimension mismatch");
+        // (L^T r): note rᵀKc = (Lᵀr)·(Lᵀc) for K = L Lᵀ.
+        let mut lr = vec![0.0; self.d];
+        for i in 0..self.d {
+            // L is lower triangular; (L^T r)_i = sum_{k>=i} L[k,i] r_k.
+            let mut acc = 0.0;
+            for k in i..self.d {
+                acc += self.l.get(k, i) * h.values()[k];
+            }
+            lr[i] = acc;
+        }
+        let ru = dot(&self.u, h.values());
+        PreparedHistogram { lr, ru }
+    }
+
+    /// d_{M,0}(r, c) from two prepared histograms in O(d).
+    pub fn distance(&self, r: &PreparedHistogram, c: &PreparedHistogram) -> F {
+        r.ru + c.ru - 2.0 * dot(&r.lr, &c.lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::GridMetric;
+    use crate::simplex::seeded_rng;
+
+    #[test]
+    fn direct_matches_manual() {
+        let m = CostMatrix::from_rows(2, vec![0., 2., 2., 0.]);
+        let r = Histogram::from_weights(&[1.0, 0.0]).unwrap();
+        let c = Histogram::from_weights(&[0.0, 1.0]).unwrap();
+        assert!((independence_distance(&m, &r, &c) - 2.0).abs() < 1e-12);
+        assert_eq!(independence_distance(&m, &r, &r), 0.0);
+    }
+
+    #[test]
+    fn cholesky_fastpath_matches_direct() {
+        // Squared grid distances are a genuine EDM.
+        let m = GridMetric::new(4, 4).squared_cost_matrix();
+        let kernel = IndependenceKernel::new(&m).expect("grid EDM must factor");
+        let mut rng = seeded_rng(17);
+        for _ in 0..10 {
+            let r = Histogram::sample_uniform(16, &mut rng);
+            let c = Histogram::sample_uniform(16, &mut rng);
+            let direct = independence_distance(&m, &r, &c);
+            let fast = kernel.distance(&kernel.prepare(&r), &kernel.prepare(&c));
+            assert!(
+                (direct - fast).abs() < 1e-9 * (1.0 + direct.abs()),
+                "direct {direct} vs fast {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn powered_edm_still_factors() {
+        // M^a for a in (0,1) remains an EDM (footnote 1) — the §5.1.2
+        // Independence-kernel configuration [m_ij^a], a in {0.01, 0.1, 1}.
+        let m = GridMetric::new(3, 3).squared_cost_matrix();
+        for &a in &[0.01, 0.1, 1.0] {
+            let ma = m.powf(a);
+            assert!(
+                IndependenceKernel::new(&ma).is_ok(),
+                "M^{a} should be an EDM"
+            );
+        }
+    }
+
+    #[test]
+    fn gram_psd_on_equal_norm_histograms() {
+        // e^{-t r^T M c} must be a PD kernel (Property 2): check the Gram
+        // matrix of a random sample has a Cholesky factorization.
+        let m = GridMetric::new(3, 3).squared_cost_matrix();
+        let mut rng = seeded_rng(23);
+        let hs: Vec<Histogram> =
+            (0..8).map(|_| Histogram::sample_uniform(9, &mut rng)).collect();
+        let t = 0.7;
+        let mut gram = Matrix::zeros(8, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let dij = independence_distance(&m, &hs[i], &hs[j]);
+                gram.set(i, j, (-t * dij).exp());
+            }
+        }
+        // Symmetrize roundoff then factor.
+        for i in 0..8 {
+            for j in 0..i {
+                let s = 0.5 * (gram.get(i, j) + gram.get(j, i));
+                gram.set(i, j, s);
+                gram.set(j, i, s);
+            }
+        }
+        // Allow a microscopic jitter for f64 roundoff.
+        for i in 0..8 {
+            gram.set(i, i, gram.get(i, i) + 1e-12);
+        }
+        assert!(cholesky(&gram).is_some(), "independence Gram not PSD");
+    }
+
+    /// Bilinearity and symmetry of r^T M c for symmetric M.
+    #[test]
+    fn prop_symmetric_form() {
+        let m = GridMetric::new(3, 3).cost_matrix();
+        for seed in 0..200u64 {
+            let mut rng = seeded_rng(seed);
+            let r = Histogram::sample_uniform(9, &mut rng);
+            let c = Histogram::sample_uniform(9, &mut rng);
+            let ab = independence_distance(&m, &r, &c);
+            let ba = independence_distance(&m, &c, &r);
+            assert!((ab - ba).abs() < 1e-12);
+            assert!(ab >= 0.0);
+        }
+    }
+}

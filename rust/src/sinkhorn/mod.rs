@@ -1,0 +1,78 @@
+//! Pure-Rust Sinkhorn engine — the paper's Algorithm 1 on the CPU.
+//!
+//! This is the "Sinkhorn CPU" series of Figure 4 and the reference
+//! implementation the XLA/PJRT path ([`crate::runtime`]) is validated
+//! against. Three execution modes:
+//!
+//! * [`SinkhornEngine::distance`] — single pair, with the paper's
+//!   convergence criterion ‖x − x'‖₂ ≤ tol or a fixed iteration budget;
+//! * [`SinkhornEngine::distances_batch`] — one source against a family
+//!   C = [c_1 … c_N], vectorized exactly like Algorithm 1's matrix form;
+//! * log-domain stabilized updates ([`log_domain`]) for large λ where
+//!   K = e^{−λM} underflows.
+//!
+//! The Independence kernel (Property 2: d_{M,0} = rᵀMc, the α = 0 extreme
+//! of the Sinkhorn family) lives in [`independence`].
+
+pub mod alpha;
+pub mod batch;
+mod engine;
+pub mod independence;
+pub mod log_domain;
+
+pub use alpha::{AlphaConfig, AlphaOutput, AlphaSinkhorn};
+pub use batch::BatchSinkhorn;
+pub use engine::{SinkhornEngine, SinkhornOutput, SinkhornStats};
+pub use independence::{independence_distance, IndependenceKernel};
+
+use crate::F;
+
+/// Configuration of the Sinkhorn-Knopp iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct SinkhornConfig {
+    /// Entropic weight λ of Equation (2); K = exp(−λM).
+    pub lambda: F,
+    /// Stop when ‖x − x'‖₂ ≤ tol (the paper uses 0.01 in §5.3–5.4).
+    pub tolerance: F,
+    /// Hard iteration cap. The paper's MNIST run fixes 20 iterations and
+    /// §5.4 recommends a fixed budget on parallel platforms.
+    pub max_iterations: usize,
+    /// Check the stopping criterion every `check_every` iterations (the
+    /// paper notes convergence tracking "can be costly on parallel
+    /// platforms"; on CPU a stride of 1 is fine, the runtime path uses a
+    /// fixed budget instead).
+    pub check_every: usize,
+    /// Switch to log-domain updates when exp(−λ·max(M)) would underflow.
+    pub auto_stabilize: bool,
+}
+
+impl Default for SinkhornConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 9.0,
+            tolerance: 0.01,
+            max_iterations: 10_000,
+            check_every: 1,
+            auto_stabilize: true,
+        }
+    }
+}
+
+impl SinkhornConfig {
+    /// Fixed-budget config (no convergence checks) — the serving-path
+    /// setting: exactly `n` iterations.
+    pub fn fixed(lambda: F, n: usize) -> Self {
+        Self {
+            lambda,
+            tolerance: 0.0,
+            max_iterations: n,
+            check_every: usize::MAX,
+            auto_stabilize: true,
+        }
+    }
+
+    /// Convergence-driven config with the paper's 0.01 tolerance.
+    pub fn converged(lambda: F) -> Self {
+        Self { lambda, ..Default::default() }
+    }
+}

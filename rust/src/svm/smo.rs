@@ -1,0 +1,240 @@
+//! Binary soft-margin SVM trained by Sequential Minimal Optimization.
+//!
+//! Working-set selection follows libsvm's first-order heuristic: the
+//! maximal-violating pair (i, j) over the KKT conditions, with an error
+//! cache updated incrementally after each two-variable analytic solve.
+//! Operates on a precomputed kernel (Gram) matrix.
+
+use super::SvmConfig;
+use crate::linalg::{dot, Matrix};
+use crate::F;
+
+/// Re-export alias so harness code can spell the config at the SMO level.
+pub type SmoConfig = SvmConfig;
+
+/// A trained binary machine: support coefficients and bias.
+#[derive(Debug, Clone)]
+pub struct BinarySvm {
+    /// alpha_i * y_i for every training point (zero off-support).
+    coef: Vec<F>,
+    bias: F,
+    /// Number of SMO pair updates performed.
+    pub iterations: usize,
+}
+
+impl BinarySvm {
+    /// Train on a precomputed kernel. `y` must be ±1.
+    pub fn train(kernel: &Matrix, y: &[F], config: SvmConfig) -> Self {
+        let n = y.len();
+        assert_eq!(kernel.rows(), n, "kernel/label size mismatch");
+        assert_eq!(kernel.cols(), n, "kernel must be square");
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        let c = config.c;
+        let tol = config.tolerance;
+
+        let mut alpha = vec![0.0; n];
+        // Gradient of the dual objective: grad_i = sum_j alpha_j y_i y_j K_ij - 1.
+        let mut grad = vec![-1.0; n];
+
+        let mut iterations = 0;
+        while iterations < config.max_iterations {
+            // --- Maximal violating pair (Keerthi et al. / libsvm WSS1). ---
+            // i = argmax_{t in I_up} -y_t grad_t ; j = argmin_{t in I_low}.
+            let mut gmax = F::NEG_INFINITY;
+            let mut gmin = F::INFINITY;
+            let mut i_sel = usize::MAX;
+            let mut j_sel = usize::MAX;
+            for t in 0..n {
+                let yt = y[t];
+                let at = alpha[t];
+                // I_up: can increase alpha_t*y_t direction.
+                let in_up = (yt > 0.0 && at < c) || (yt < 0.0 && at > 0.0);
+                // I_low: can decrease.
+                let in_low = (yt > 0.0 && at > 0.0) || (yt < 0.0 && at < c);
+                let v = -yt * grad[t];
+                if in_up && v > gmax {
+                    gmax = v;
+                    i_sel = t;
+                }
+                if in_low && v < gmin {
+                    gmin = v;
+                    j_sel = t;
+                }
+            }
+            if gmax - gmin < tol || i_sel == usize::MAX || j_sel == usize::MAX {
+                break; // KKT-optimal within tolerance
+            }
+            let (i, j) = (i_sel, j_sel);
+            iterations += 1;
+
+            // --- Analytic two-variable solve (libsvm update form). ---
+            let kii = kernel.get(i, i);
+            let kjj = kernel.get(j, j);
+            let kij = kernel.get(i, j);
+            let eta = (kii + kjj - 2.0 * kij).max(1e-12);
+            // delta along the feasible direction.
+            let delta = (gmax - gmin) / eta;
+            // Work in the alpha'_t = y_t alpha_t parameterization.
+            let (yi, yj) = (y[i], y[j]);
+            let mut dai = yi * delta; // change of alpha_i
+            #[allow(unused_assignments)]
+            let mut daj; // change of alpha_j (set below from dai)
+
+            // Clip to the box [0, C] jointly.
+            let ai_new = (alpha[i] + dai).clamp(0.0, c);
+            dai = ai_new - alpha[i];
+            daj = -yj * yi * dai;
+            let aj_new = (alpha[j] + daj).clamp(0.0, c);
+            let daj_clipped = aj_new - alpha[j];
+            if (daj_clipped - daj).abs() > 0.0 {
+                // j hit the box first; recompute i's step.
+                daj = daj_clipped;
+                dai = -yi * yj * daj;
+            }
+            if dai.abs() < 1e-16 && daj.abs() < 1e-16 {
+                break; // numerically stuck: treat as converged
+            }
+            alpha[i] += dai;
+            alpha[j] += daj;
+
+            // --- Incremental gradient update. ---
+            let ci = yi * dai;
+            let cj = yj * daj;
+            for t in 0..n {
+                grad[t] += y[t] * (ci * kernel.get(i, t) + cj * kernel.get(j, t));
+            }
+        }
+
+        // Bias from the free support vectors (average of y_t - w·x_t), or
+        // the KKT midpoint when none are strictly inside the box.
+        let coef: Vec<F> = alpha.iter().zip(y).map(|(&a, &yt)| a * yt).collect();
+        let mut bias_sum = 0.0;
+        let mut bias_cnt = 0usize;
+        for t in 0..n {
+            if alpha[t] > 1e-9 && alpha[t] < c - 1e-9 {
+                let wx = dot(&coef, kernel.row(t));
+                bias_sum += y[t] - wx;
+                bias_cnt += 1;
+            }
+        }
+        let bias = if bias_cnt > 0 {
+            bias_sum / bias_cnt as F
+        } else {
+            // Midpoint of the violating-pair bounds.
+            let mut up = F::INFINITY;
+            let mut lo = F::NEG_INFINITY;
+            for t in 0..n {
+                let wx = dot(&coef, kernel.row(t));
+                let margin = y[t] - wx;
+                if (y[t] > 0.0 && alpha[t] < c - 1e-9) || (y[t] < 0.0 && alpha[t] > 1e-9) {
+                    up = up.min(margin);
+                }
+                if (y[t] > 0.0 && alpha[t] > 1e-9) || (y[t] < 0.0 && alpha[t] < c - 1e-9) {
+                    lo = lo.max(margin);
+                }
+            }
+            if up.is_finite() && lo.is_finite() {
+                0.5 * (up + lo)
+            } else {
+                0.0
+            }
+        };
+
+        Self { coef, bias, iterations }
+    }
+
+    /// Decision value f(x) = Σ_t α_t y_t K(x_t, x) + b given the kernel
+    /// row of x against the training set this machine saw.
+    pub fn decision(&self, kernel_row: &[F]) -> F {
+        debug_assert_eq!(kernel_row.len(), self.coef.len());
+        dot(&self.coef, kernel_row) + self.bias
+    }
+
+    /// Number of support vectors (nonzero α).
+    pub fn support_count(&self) -> usize {
+        self.coef.iter().filter(|&&a| a.abs() > 1e-12).count()
+    }
+
+    /// The signed coefficients α_t y_t.
+    pub fn coefficients(&self) -> &[F] {
+        &self.coef
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear kernel on 1-D points as a transparent test bed.
+    fn linear_gram(pts: &[F]) -> Matrix {
+        let n = pts.len();
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k.set(i, j, pts[i] * pts[j]);
+            }
+        }
+        k
+    }
+
+    #[test]
+    fn separable_line() {
+        let pts: Vec<F> = vec![-2.0, -1.5, -1.0, 1.0, 1.5, 2.0];
+        let y: Vec<F> = vec![-1.0, -1.0, -1.0, 1.0, 1.0, 1.0];
+        let k = linear_gram(&pts);
+        let svm = BinarySvm::train(&k, &y, SvmConfig { c: 10.0, ..Default::default() });
+        for (i, &yi) in y.iter().enumerate() {
+            let f = svm.decision(k.row(i));
+            assert!(f * yi > 0.0, "point {i} misclassified (f={f})");
+        }
+        // Margin points should be the support vectors.
+        assert!(svm.support_count() <= 4);
+    }
+
+    #[test]
+    fn decision_is_affine_in_kernel_row() {
+        let pts: Vec<F> = vec![-1.0, 0.5, 2.0];
+        let y: Vec<F> = vec![-1.0, 1.0, 1.0];
+        let k = linear_gram(&pts);
+        let svm = BinarySvm::train(&k, &y, SvmConfig::default());
+        // f(x) for x=3 via kernel row = pts * 3.
+        let row: Vec<F> = pts.iter().map(|&p| 3.0 * p).collect();
+        let f3 = svm.decision(&row);
+        assert!(f3 > 0.0);
+    }
+
+    #[test]
+    fn box_constraint_is_respected() {
+        // Noisy overlapping labels force alphas to the C bound.
+        let pts: Vec<F> = vec![-1.0, -0.5, 0.5, 1.0, -0.4, 0.4];
+        let y: Vec<F> = vec![-1.0, -1.0, 1.0, 1.0, 1.0, -1.0]; // last two flipped
+        let k = linear_gram(&pts);
+        let c = 0.5;
+        let svm = BinarySvm::train(&k, &y, SvmConfig { c, ..Default::default() });
+        for (t, &coef) in svm.coefficients().iter().enumerate() {
+            assert!(
+                coef.abs() <= c + 1e-9,
+                "alpha[{t}] escaped the box: {coef}"
+            );
+        }
+    }
+
+    #[test]
+    fn dual_constraint_sum_alpha_y_zero() {
+        let pts: Vec<F> = vec![-2.0, -1.0, 0.2, 1.0, 2.0, 2.5];
+        let y: Vec<F> = vec![-1.0, -1.0, 1.0, 1.0, 1.0, 1.0];
+        let k = linear_gram(&pts);
+        let svm = BinarySvm::train(&k, &y, SvmConfig { c: 5.0, ..Default::default() });
+        let s: F = svm.coefficients().iter().sum();
+        assert!(s.abs() < 1e-8, "sum alpha_t y_t = {s}");
+    }
+
+    #[test]
+    fn terminates_on_degenerate_kernel() {
+        // All-zero kernel: nothing to learn, must not loop forever.
+        let k = Matrix::zeros(4, 4);
+        let y: Vec<F> = vec![1.0, 1.0, -1.0, -1.0];
+        let svm = BinarySvm::train(&k, &y, SvmConfig::default());
+        assert!(svm.iterations < 100);
+    }
+}

@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! The `benches/` targets are `harness = false` binaries that use this
+//! module to time closures with warm-up, repeat sampling, and robust
+//! summary statistics (median + MAD), printing one row per case in a
+//! stable machine-grepable format:
+//!
+//! ```text
+//! bench <name> median_ns=… mad_ns=… samples=… [key=value …]
+//! ```
+
+use std::time::Instant;
+
+/// Result of timing one case.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    pub samples: usize,
+}
+
+impl Timing {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// Warm-up executions before sampling.
+    pub warmup: usize,
+    /// Max sampling repetitions.
+    pub max_samples: usize,
+    /// Soft budget per case in seconds (sampling stops once exceeded).
+    pub budget_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 2, max_samples: 25, budget_secs: 3.0 }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive cases (e.g. exact EMD at large d).
+    pub fn quick() -> Self {
+        Self { warmup: 1, max_samples: 7, budget_secs: 10.0 }
+    }
+
+    /// Time `f`, which must return something observable (guards against
+    /// dead-code elimination via `std::hint::black_box`).
+    pub fn time<T>(&self, mut f: impl FnMut() -> T) -> Timing {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.max_samples);
+        let started = Instant::now();
+        while samples_ns.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if started.elapsed().as_secs_f64() > self.budget_secs && samples_ns.len() >= 3 {
+                break;
+            }
+        }
+        summarize(&samples_ns)
+    }
+
+    /// Time and print one row.
+    pub fn report<T>(&self, name: &str, extra: &str, f: impl FnMut() -> T) -> Timing {
+        let t = self.time(f);
+        println!(
+            "bench {name} median_ns={:.0} mad_ns={:.0} mean_ns={:.0} samples={} {extra}",
+            t.median_ns, t.mad_ns, t.mean_ns, t.samples
+        );
+        t
+    }
+}
+
+fn summarize(samples: &[f64]) -> Timing {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = v[v.len() / 2];
+    let mut dev: Vec<f64> = v.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = dev[dev.len() / 2];
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    Timing { median_ns: median, mad_ns: mad, mean_ns: mean, samples: v.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let b = Bench { warmup: 1, max_samples: 5, budget_secs: 1.0 };
+        let fast = b.time(|| 1 + 1);
+        let slow = b.time(|| {
+            // black_box the bound so the loop cannot be constant-folded.
+            let n = std::hint::black_box(200_000u64);
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(std::hint::black_box(i) * i);
+            }
+            acc
+        });
+        assert!(fast.median_ns >= 0.0);
+        assert!(slow.median_ns > fast.median_ns);
+        assert!(slow.samples >= 3);
+    }
+
+    #[test]
+    fn summary_statistics() {
+        let t = summarize(&[1.0, 2.0, 100.0]);
+        assert_eq!(t.median_ns, 2.0);
+        assert_eq!(t.mad_ns, 1.0);
+        assert!((t.mean_ns - 34.333).abs() < 0.01);
+    }
+
+    #[test]
+    fn budget_caps_samples() {
+        let b = Bench { warmup: 0, max_samples: 1000, budget_secs: 0.05 };
+        let t = b.time(|| std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(t.samples <= 5);
+    }
+}

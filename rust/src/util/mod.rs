@@ -1,0 +1,6 @@
+//! Small self-contained utilities (offline-build substitutes for common
+//! ecosystem crates): a JSON parser for the artifact manifest and a
+//! micro-benchmark timing harness used by the `benches/` targets.
+
+pub mod bench;
+pub mod json;

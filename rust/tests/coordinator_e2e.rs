@@ -1,0 +1,202 @@
+//! Integration: the full Layer-3 service over the real PJRT runtime —
+//! batched queries through the dynamic batcher, XLA execution, CPU
+//! fallback for unserved dimensions, and agreement with the direct
+//! engines.
+
+use sinkhorn_rs::coordinator::{
+    BatcherConfig, CoordinatorConfig, DistanceService, EngineKind, MetricId, Query,
+};
+use sinkhorn_rs::metric::RandomMetric;
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::{SinkhornConfig, SinkhornEngine};
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn service(dir: std::path::PathBuf, max_batch: usize, delay_ms: u64) -> DistanceService {
+    DistanceService::start(CoordinatorConfig {
+        artifact_dir: Some(dir),
+        batcher: BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+        },
+        ..Default::default()
+    })
+    .expect("service start")
+}
+
+#[test]
+fn xla_service_matches_cpu_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = service(dir, 16, 2);
+    let d = 64;
+    let mut rng = seeded_rng(0);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), metric.clone()).unwrap();
+
+    let engine = SinkhornEngine::with_config(&metric, SinkhornConfig::fixed(9.0, 20));
+    let queries: Vec<(Histogram, Histogram)> = (0..16)
+        .map(|_| {
+            (
+                Histogram::sample_uniform(d, &mut rng),
+                Histogram::sample_uniform(d, &mut rng),
+            )
+        })
+        .collect();
+    let rxs: Vec<_> = queries
+        .iter()
+        .map(|(r, c)| {
+            svc.submit(Query {
+                metric: MetricId(0),
+                lambda: 9.0,
+                r: r.clone(),
+                c: c.clone(),
+            })
+            .unwrap()
+        })
+        .collect();
+    for ((r, c), rx) in queries.iter().zip(rxs) {
+        let res = rx.recv().unwrap().unwrap();
+        assert_eq!(res.engine, EngineKind::Xla, "expected the XLA backend");
+        let want = engine.distance(r, c).value;
+        let rel = (res.distance - want).abs() / want.max(1e-12);
+        // f32 artifact vs f64 engine at 20 fixed iterations: ~1e-3 drift.
+        assert!(rel < 1e-2, "service {} vs engine {want}", res.distance);
+        assert!(res.batch_size >= 1);
+    }
+    let stats = svc.stats().unwrap();
+    assert_eq!(stats.queries, 16);
+    assert!(stats.xla_batches >= 1);
+    assert_eq!(stats.errors, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn unserved_dimension_falls_back_to_cpu() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = service(dir, 4, 1);
+    // d=23 has no artifact; cpu_fallback=true must still serve it.
+    let d = 23;
+    let mut rng = seeded_rng(1);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(1), metric.clone()).unwrap();
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let c = Histogram::sample_uniform(d, &mut rng);
+    let res = svc
+        .distance(Query { metric: MetricId(1), lambda: 9.0, r: r.clone(), c: c.clone() })
+        .unwrap();
+    assert_eq!(res.engine, EngineKind::Cpu);
+    let want = SinkhornEngine::with_config(&metric, SinkhornConfig::fixed(9.0, 20))
+        .distance(&r, &c)
+        .value;
+    assert!((res.distance - want).abs() < 1e-12);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_classes_route_correctly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = service(dir, 8, 2);
+    let mut rng = seeded_rng(2);
+    let m64 = RandomMetric::new(64).sample(&mut rng);
+    let m23 = RandomMetric::new(23).sample(&mut rng);
+    svc.register_metric(MetricId(0), m64).unwrap();
+    svc.register_metric(MetricId(1), m23).unwrap();
+
+    let mut rxs = Vec::new();
+    for k in 0..24 {
+        let (id, d) = if k % 2 == 0 { (MetricId(0), 64) } else { (MetricId(1), 23) };
+        let lambda = if k % 3 == 0 { 9.0 } else { 4.0 };
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        rxs.push((id, svc.submit(Query { metric: id, lambda, r, c }).unwrap()));
+    }
+    for (id, rx) in rxs {
+        let res = rx.recv().unwrap().unwrap();
+        let expect = if id == MetricId(0) { EngineKind::Xla } else { EngineKind::Cpu };
+        assert_eq!(res.engine, expect, "metric {id:?}");
+        assert!(res.distance.is_finite() && res.distance > 0.0);
+    }
+    let stats = svc.stats().unwrap();
+    assert_eq!(stats.queries, 24);
+    assert!(stats.xla_batches >= 1 && stats.cpu_batches >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn warmup_precompiles_all_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = service(dir, 4, 1);
+    let compiled = svc.warmup().unwrap();
+    assert!(compiled >= 3, "expected several xla variants, got {compiled}");
+    svc.shutdown();
+}
+
+#[test]
+fn bad_artifact_dir_fails_fast() {
+    let err = DistanceService::start(CoordinatorConfig {
+        artifact_dir: Some(std::path::PathBuf::from("/nonexistent/artifacts")),
+        ..Default::default()
+    })
+    .err()
+    .expect("must fail");
+    assert!(err.to_string().contains("runtime failure"));
+}
+
+#[test]
+fn throughput_improves_with_batching_on_xla() {
+    // Ablation guard: the whole point of the coordinator. Same 64
+    // queries, batch width 1 vs 16 — wide batching must not be slower.
+    // (On the CPU PJRT backend the win is modest; the assertion is
+    // deliberately loose to stay robust on a noisy shared core.)
+    let Some(dir) = artifacts_dir() else { return };
+    let d = 64;
+    let mut rng = seeded_rng(3);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    let queries: Vec<(Histogram, Histogram)> = (0..64)
+        .map(|_| {
+            (
+                Histogram::sample_uniform(d, &mut rng),
+                Histogram::sample_uniform(d, &mut rng),
+            )
+        })
+        .collect();
+
+    let mut timings = Vec::new();
+    for &batch in &[1usize, 16] {
+        let svc = service(dir.clone(), batch, 1);
+        svc.register_metric(MetricId(0), metric.clone()).unwrap();
+        svc.warmup().unwrap();
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = queries
+            .iter()
+            .map(|(r, c)| {
+                svc.submit(Query {
+                    metric: MetricId(0),
+                    lambda: 9.0,
+                    r: r.clone(),
+                    c: c.clone(),
+                })
+                .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        timings.push(t0.elapsed().as_secs_f64());
+        svc.shutdown();
+    }
+    eprintln!("batch=1: {:.3}s, batch=16: {:.3}s", timings[0], timings[1]);
+    assert!(
+        timings[1] < timings[0] * 1.5,
+        "batching regressed throughput: {timings:?}"
+    );
+}

@@ -1,0 +1,125 @@
+//! Integration: every figure harness runs end to end at smoke scale and
+//! reproduces the paper's qualitative *shape* (who wins, what is
+//! monotone) — the full-scale runs are recorded in EXPERIMENTS.md.
+
+use sinkhorn_rs::distances::ClassicalDistance;
+use sinkhorn_rs::exp::{fig2, fig3, fig4, fig5};
+use sinkhorn_rs::util::bench::Bench;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn fig2_smoke_sinkhorn_competitive() {
+    let config = fig2::Fig2Config {
+        grid: 8,
+        ns: vec![60],
+        folds: 4,
+        repeats: 1,
+        distances: vec![
+            fig2::DistanceKind::Classical(ClassicalDistance::SquaredEuclidean),
+            fig2::DistanceKind::Classical(ClassicalDistance::Hellinger),
+            fig2::DistanceKind::Independence,
+            fig2::DistanceKind::Sinkhorn,
+        ],
+        sinkhorn_iterations: 20,
+        seed: 99,
+    };
+    let pts = fig2::run(&config);
+    assert_eq!(pts.len(), 4);
+    let err_of = |name: &str| {
+        pts.iter().find(|p| p.distance == name).unwrap().mean_error
+    };
+    // Everyone beats 10-class chance by a wide margin.
+    for p in &pts {
+        assert!(p.mean_error < 0.6, "{}: {}", p.distance, p.mean_error);
+        assert_eq!(p.experiments, 4);
+    }
+    // The paper's headline ordering at smoke scale: Sinkhorn is at least
+    // competitive with the squared Euclidean baseline.
+    assert!(
+        err_of("sinkhorn") <= err_of("sq_euclidean") + 0.05,
+        "sinkhorn {} vs sq_euclidean {}",
+        err_of("sinkhorn"),
+        err_of("sq_euclidean")
+    );
+}
+
+#[test]
+fn fig3_smoke_gap_shrinks_with_lambda() {
+    let pts = fig3::run(&fig3::Fig3Config {
+        grid: 8,
+        pairs: 8,
+        lambdas: vec![1.0, 5.0, 25.0],
+        ..Default::default()
+    });
+    assert_eq!(pts.len(), 3);
+    assert!(pts[0].gaps.median > pts[2].gaps.median);
+    assert!(pts.iter().all(|p| p.gaps.min > -1e-9));
+    // Large-lambda plateau: median gap under 60% once lambda >= 25
+    // (paper: ~10% at paper scale; smoke scale is coarser).
+    assert!(pts[2].gaps.median < 0.6, "median {}", pts[2].gaps.median);
+}
+
+#[test]
+fn fig4_smoke_sinkhorn_beats_emd_and_grows_slower() {
+    let pts = fig4::run(&fig4::Fig4Config {
+        dims: vec![32, 64],
+        lambdas: vec![9.0],
+        artifact_dir: artifacts_dir(),
+        bench: Bench { warmup: 0, max_samples: 3, budget_secs: 10.0 },
+        ..Default::default()
+    });
+    let get = |solver_prefix: &str, d: usize| {
+        pts.iter()
+            .find(|p| p.solver.starts_with(solver_prefix) && p.d == d)
+            .map(|p| p.seconds_per_distance)
+    };
+    let emd64 = get("emd", 64).unwrap();
+    let sk64 = get("sinkhorn_cpu", 64).unwrap();
+    assert!(
+        sk64 < emd64,
+        "sinkhorn ({sk64}) should beat exact EMD ({emd64}) at d=64"
+    );
+    // Super-linear growth of the exact solver between d=32 and d=64.
+    let emd32 = get("emd", 32).unwrap();
+    assert!(emd64 > emd32, "emd did not grow with d");
+    if artifacts_dir().is_some() {
+        let xla64 = get("sinkhorn_xla", 64).expect("xla column present");
+        assert!(xla64.is_finite() && xla64 > 0.0);
+    }
+}
+
+#[test]
+fn fig5_smoke_iterations_grow_with_lambda() {
+    let pts = fig5::run(&fig5::Fig5Config {
+        dims: vec![32, 64],
+        lambdas: vec![1.0, 9.0, 50.0],
+        trials: 3,
+        ..Default::default()
+    });
+    assert_eq!(pts.len(), 6);
+    for &d in &[32usize, 64] {
+        let at = |lam: f64| {
+            pts.iter()
+                .find(|p| p.d == d && (p.lambda - lam).abs() < 1e-9)
+                .unwrap()
+                .mean_iterations
+        };
+        assert!(at(1.0) < at(9.0), "d={d}");
+        assert!(at(9.0) < at(50.0), "d={d}");
+    }
+}
+
+#[test]
+fn renders_are_nonempty() {
+    let f5 = fig5::run(&fig5::Fig5Config {
+        dims: vec![16],
+        lambdas: vec![1.0],
+        trials: 2,
+        ..Default::default()
+    });
+    assert!(fig5::render(&f5).contains("lambda"));
+}

@@ -1,0 +1,202 @@
+//! Integration: the AOT artifacts, loaded and executed through PJRT,
+//! agree numerically with the pure-Rust CPU engine — byte-level
+//! validation of the python→rust interchange.
+//!
+//! Requires `make artifacts` to have run (skips politely otherwise, so
+//! `cargo test` stays green on a fresh checkout).
+
+use sinkhorn_rs::metric::RandomMetric;
+use sinkhorn_rs::runtime::{Flavor, XlaRuntime};
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::{SinkhornConfig, SinkhornEngine};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_warmup_compiles_one() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    assert_eq!(rt.platform(), "cpu");
+    assert!(!rt.manifest().variants.is_empty());
+    let v = rt.select(16, 1, Flavor::Xla).expect("d=16 variant");
+    assert_eq!(v.d, 16);
+    // First execution compiles and caches.
+    let mut rng = seeded_rng(0);
+    let m = RandomMetric::new(16).sample(&mut rng);
+    let r = Histogram::sample_uniform(16, &mut rng);
+    let c = Histogram::sample_uniform(16, &mut rng);
+    let out = rt
+        .execute(&v, &m, 9.0, &[r.values().to_vec()], &[c.values().to_vec()])
+        .expect("execute");
+    assert_eq!(out.distances.len(), 1);
+    assert!(out.distances[0].is_finite() && out.distances[0] > 0.0);
+    assert!(out.marginal_error < 0.2, "marginal err {}", out.marginal_error);
+    assert_eq!(rt.cached_executables(), 1);
+    assert_eq!(rt.exec_counts()[&v.name], 1);
+}
+
+#[test]
+fn xla_matches_cpu_engine_across_dims_and_lambdas() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    for &d in &[16usize, 64] {
+        for &lambda in &[1.0f64, 5.0, 9.0] {
+            let mut rng = seeded_rng(d as u64 * 100 + lambda as u64);
+            let m = RandomMetric::new(d).sample(&mut rng);
+            let r = Histogram::sample_uniform(d, &mut rng);
+            let cs: Vec<Histogram> = (0..5)
+                .map(|_| Histogram::sample_uniform(d, &mut rng))
+                .collect();
+            let got = rt
+                .distances(&m, lambda, &r, &cs, Flavor::Xla)
+                .expect("xla distances");
+            // The artifacts bake 20 iterations; match the CPU engine.
+            let engine =
+                SinkhornEngine::with_config(&m, SinkhornConfig::fixed(lambda, 20));
+            for (c, &g) in cs.iter().zip(&got) {
+                let want = engine.distance(&r, c).value;
+                let rel = (g - want).abs() / want.max(1e-12);
+                // The artifact computes in f32 while the engine is f64;
+                // at a fixed 20 iterations the un-contracted transient
+                // amplifies rounding to the ~1e-3 level.
+                assert!(
+                    rel < 1e-2,
+                    "d={d} lambda={lambda}: xla {g} vs cpu {want} (rel {rel:.2e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_flavor_matches_xla_flavor() {
+    // The L1 Pallas kernel path (interpret mode) and the plain-XLA path
+    // are the same function: prove the layers compose on real artifacts.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    let d = 16;
+    if rt.select(d, 1, Flavor::Pallas).is_err() {
+        eprintln!("skipping: no pallas artifacts");
+        return;
+    }
+    let mut rng = seeded_rng(5);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let cs: Vec<Histogram> =
+        (0..3).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+    let a = rt.distances(&m, 7.0, &r, &cs, Flavor::Pallas).expect("pallas");
+    let b = rt.distances(&m, 7.0, &r, &cs, Flavor::Xla).expect("xla");
+    for (x, y) in a.iter().zip(&b) {
+        assert!(
+            (x - y).abs() < 1e-5 * (1.0 + y.abs()),
+            "pallas {x} vs xla {y}"
+        );
+    }
+}
+
+#[test]
+fn batching_is_equivalent_to_singles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    let d = 64;
+    let mut rng = seeded_rng(9);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let cs: Vec<Histogram> = (0..16)
+        .map(|_| Histogram::sample_uniform(d, &mut rng))
+        .collect();
+    let batched = rt.distances(&m, 9.0, &r, &cs, Flavor::Xla).expect("batched");
+    for (c, &want) in cs.iter().zip(&batched) {
+        let single = rt
+            .distances(&m, 9.0, &r, std::slice::from_ref(c), Flavor::Xla)
+            .expect("single")[0];
+        assert!(
+            (single - want).abs() < 1e-5 * (1.0 + want.abs()),
+            "batch cross-talk: {single} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn chunking_covers_oversized_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    let d = 16;
+    let widest = rt
+        .manifest()
+        .variants
+        .iter()
+        .filter(|v| v.d == d && v.flavor == Flavor::Xla)
+        .map(|v| v.n)
+        .max()
+        .unwrap();
+    let mut rng = seeded_rng(3);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let cs: Vec<Histogram> = (0..widest + 7)
+        .map(|_| Histogram::sample_uniform(d, &mut rng))
+        .collect();
+    let out = rt.distances(&m, 9.0, &r, &cs, Flavor::Xla).expect("chunked");
+    assert_eq!(out.len(), widest + 7);
+    assert!(out.iter().all(|v| v.is_finite() && *v > 0.0));
+}
+
+#[test]
+fn zero_mass_bins_are_tolerated() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    let d = 16;
+    let mut rng = seeded_rng(12);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    // Half the bins empty on each side.
+    let mut rw = vec![0.0; d];
+    let mut cw = vec![0.0; d];
+    for i in 0..d / 2 {
+        rw[i] = 1.0;
+        cw[d / 2 + i] = 1.0;
+    }
+    let r = Histogram::from_weights(&rw).unwrap();
+    let c = Histogram::from_weights(&cw).unwrap();
+    let got = rt
+        .distances(&m, 9.0, &r, &[c.clone()], Flavor::Xla)
+        .expect("sparse")[0];
+    assert!(got.is_finite() && got > 0.0);
+    let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 20))
+        .distance(&r, &c)
+        .value;
+    // f32 artifact vs f64 engine with extreme dynamic range (half the
+    // bins empty): allow 2% relative drift at 20 fixed iterations.
+    assert!((got - want).abs() / want < 2e-2, "{got} vs {want}");
+}
+
+#[test]
+fn shape_validation_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).expect("runtime");
+    let v = rt.select(16, 1, Flavor::Xla).unwrap();
+    let mut rng = seeded_rng(1);
+    let m_wrong = RandomMetric::new(32).sample(&mut rng);
+    let r = Histogram::sample_uniform(16, &mut rng);
+    let err = rt
+        .execute(&v, &m_wrong, 9.0, &[r.values().to_vec()], &[r.values().to_vec()])
+        .unwrap_err();
+    assert!(err.to_string().contains("metric dim"));
+    // Unknown dimension.
+    let e2 = rt.select(17, 1, Flavor::Xla).unwrap_err();
+    assert!(e2.to_string().contains("d=17"));
+    // Histogram of the wrong length inside the batch.
+    let m16 = RandomMetric::new(16).sample(&mut rng);
+    let bad = vec![0.5; 7];
+    let e3 = rt
+        .execute(&v, &m16, 9.0, &[bad], &[r.values().to_vec()])
+        .unwrap_err();
+    assert!(e3.to_string().contains("dims") || e3.to_string().contains("batch"));
+}

@@ -1,0 +1,221 @@
+//! The paper's theoretical claims, checked numerically across the whole
+//! stack: Theorem 1 (Sinkhorn distances are quasi-metrics), Lemma 1 (the
+//! gluing lemma with entropic constraint), Properties 1–2 (the λ→∞ and
+//! α=0 limits), and the duality bridge between d_{M,α} and d_M^λ.
+
+use sinkhorn_rs::metric::{is_metric_matrix, GridMetric, RandomMetric};
+use sinkhorn_rs::ot::EmdSolver;
+use sinkhorn_rs::simplex::{
+    entropy, independence_table, kl_divergence, seeded_rng, Histogram,
+};
+use sinkhorn_rs::sinkhorn::{
+    independence_distance, SinkhornConfig, SinkhornEngine,
+};
+use sinkhorn_rs::F;
+
+fn converged_engine(m: &sinkhorn_rs::metric::CostMatrix, lambda: F) -> SinkhornEngine {
+    SinkhornEngine::with_config(
+        m,
+        SinkhornConfig {
+            lambda,
+            tolerance: 1e-11,
+            max_iterations: 500_000,
+            ..Default::default()
+        },
+    )
+}
+
+/// Theorem 1: d_M^λ (the 1_{r≠c}-gated Sinkhorn distance) satisfies the
+/// triangle inequality for metric M. We verify on random triplets, for
+/// several λ, with the dual-Sinkhorn divergence standing in for d_{M,α}
+/// (they share optima by duality). The paper proves it for d_{M,α};
+/// numerically the inequality holds comfortably away from degeneracy.
+#[test]
+fn theorem1_triangle_inequality() {
+    for seed in 0..6u64 {
+        let mut rng = seeded_rng(seed);
+        let d = 10 + (seed as usize % 5);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        assert!(is_metric_matrix(&m, 1e-9).is_ok());
+        let x = Histogram::sample_uniform(d, &mut rng);
+        let y = Histogram::sample_uniform(d, &mut rng);
+        let z = Histogram::sample_uniform(d, &mut rng);
+        for lambda in [2.0, 9.0, 30.0] {
+            let engine = converged_engine(&m, lambda);
+            let dxy = engine.distance(&x, &y).value;
+            let dyz = engine.distance(&y, &z).value;
+            let dxz = engine.distance(&x, &z).value;
+            assert!(
+                dxz <= dxy + dyz + 1e-6,
+                "triangle violated (seed {seed}, lambda {lambda}): {dxz} > {dxy}+{dyz}"
+            );
+        }
+    }
+}
+
+/// Theorem 1 (symmetry half) on the digits workload.
+#[test]
+fn theorem1_symmetry_on_grid_metric() {
+    let m = GridMetric::new(4, 4).cost_matrix();
+    let mut rng = seeded_rng(7);
+    let engine = converged_engine(&m, 9.0);
+    for _ in 0..5 {
+        let r = Histogram::sample_uniform(16, &mut rng);
+        let c = Histogram::sample_uniform(16, &mut rng);
+        let ab = engine.distance(&r, &c).value;
+        let ba = engine.distance(&c, &r).value;
+        assert!((ab - ba).abs() < 1e-7 * (1.0 + ab));
+    }
+}
+
+/// Property 1: for λ large, d_M^λ → d_M (the exact transportation cost).
+#[test]
+fn property1_large_lambda_recovers_emd() {
+    let mut rng = seeded_rng(3);
+    let d = 12;
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let c = Histogram::sample_uniform(d, &mut rng);
+    let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+    let sk = converged_engine(&m, 300.0).distance(&r, &c).value;
+    let rel = (sk - exact) / exact;
+    assert!(rel >= -1e-9, "sinkhorn below exact: {rel}");
+    assert!(rel < 0.01, "lambda=300 should be within 1% of EMD, got {rel}");
+}
+
+/// Property 2: as λ→0 the divergence approaches the independence value
+/// rᵀMc, and the Cholesky fast path computes the same number.
+#[test]
+fn property2_small_lambda_recovers_independence_kernel() {
+    let g = GridMetric::new(3, 3);
+    let m2 = g.squared_cost_matrix();
+    let mut rng = seeded_rng(5);
+    let r = Histogram::sample_uniform(9, &mut rng);
+    let c = Histogram::sample_uniform(9, &mut rng);
+    let indep = independence_distance(&m2, &r, &c);
+    let sk = converged_engine(&m2, 1e-5).distance(&r, &c).value;
+    assert!(
+        (sk - indep).abs() / indep < 1e-3,
+        "lambda->0 limit: {sk} vs r'Mc {indep}"
+    );
+}
+
+/// Lemma 1 (gluing with entropic constraint): glue the optimal plans of
+/// (x,y) and (y,z); the composition S must lie in U(x,z) and satisfy
+/// KL(S ‖ xzᵀ) ≤ max KL of its factors (data-processing inequality).
+#[test]
+fn lemma1_gluing_preserves_entropy_bound() {
+    let mut rng = seeded_rng(9);
+    let d = 10;
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let x = Histogram::sample_uniform(d, &mut rng);
+    let y = Histogram::sample_uniform(d, &mut rng);
+    let z = Histogram::sample_uniform(d, &mut rng);
+    let engine = converged_engine(&m, 8.0);
+    let (p, _) = engine.plan(&x, &y);
+    let (q, _) = engine.plan(&y, &z);
+
+    // s_ik = sum_j p_ij q_jk / y_j.
+    let yv = y.values();
+    let mut s = vec![0.0; d * d];
+    for i in 0..d {
+        for k in 0..d {
+            let mut acc = 0.0;
+            for j in 0..d {
+                if yv[j] > 0.0 {
+                    acc += p[i * d + j] * q[j * d + k] / yv[j];
+                }
+            }
+            s[i * d + k] = acc;
+        }
+    }
+    // Marginals: S ∈ U(x, z).
+    for i in 0..d {
+        let row: F = s[i * d..(i + 1) * d].iter().sum();
+        assert!((row - x.values()[i]).abs() < 1e-6, "row {i}");
+    }
+    for k in 0..d {
+        let col: F = (0..d).map(|i| s[i * d + k]).sum();
+        assert!((col - z.values()[k]).abs() < 1e-6, "col {k}");
+    }
+    // Entropic constraint: KL(S||xz') <= max(KL(P||xy'), KL(Q||yz')).
+    let kl = |t: &[F], a: &Histogram, b: &Histogram| {
+        kl_divergence(t, &independence_table(a.values(), b.values()))
+    };
+    let kl_s = kl(&s, &x, &z);
+    let kl_p = kl(&p, &x, &y);
+    let kl_q = kl(&q, &y, &z);
+    assert!(
+        kl_s <= kl_p.max(kl_q) + 1e-6,
+        "gluing raised mutual information: {kl_s} > max({kl_p}, {kl_q})"
+    );
+}
+
+/// The entropic smoothing is monotone in λ (the Lagrangian duality
+/// picture of §4): the optimal plan's entropy h(P^λ) decreases and its
+/// transport cost ⟨P^λ, M⟩ = d_M^λ decreases toward d_M as λ grows.
+#[test]
+fn duality_monotonicity_in_lambda() {
+    let mut rng = seeded_rng(13);
+    let d = 10;
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let c = Histogram::sample_uniform(d, &mut rng);
+    let mut prev_entropy = F::INFINITY;
+    let mut prev_cost = F::INFINITY;
+    for lambda in [0.5, 2.0, 8.0, 32.0] {
+        let engine = converged_engine(&m, lambda);
+        let (plan, out) = engine.plan(&r, &c);
+        let h = entropy(&plan);
+        assert!(h <= prev_entropy + 1e-7, "entropy rose at lambda={lambda}");
+        assert!(
+            out.value <= prev_cost + 1e-7,
+            "d^lambda rose at lambda={lambda}: {} > {prev_cost}",
+            out.value
+        );
+        prev_entropy = h;
+        prev_cost = out.value;
+    }
+}
+
+/// h(P) ≥ (h(r)+h(c))/2 lower bound used in the proof of Property 1 is
+/// loose but correct; the tight upper bound h(P) ≤ h(r)+h(c) must hold
+/// for every plan the stack produces (exact or entropic).
+#[test]
+fn entropy_bounds_on_produced_plans() {
+    let mut rng = seeded_rng(17);
+    let d = 9;
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let c = Histogram::sample_uniform(d, &mut rng);
+    let bound = entropy(r.values()) + entropy(c.values());
+
+    // Entropic plan.
+    let (p, _) = converged_engine(&m, 6.0).plan(&r, &c);
+    assert!(entropy(&p) <= bound + 1e-8);
+
+    // Exact vertex plan — lower entropy than the smoothed one.
+    let exact = EmdSolver::new(&m).solve(&r, &c).unwrap();
+    let dense = exact.to_dense();
+    assert!(entropy(&dense) <= entropy(&p) + 1e-8);
+    // And the vertex support bound (≤ 2d-1) keeps entropy ≤ log(2d-1).
+    assert!(entropy(&dense) <= ((2 * d - 1) as F).ln() + 1e-9);
+}
+
+/// The dual-Sinkhorn divergence upper-bounds the exact distance at every
+/// λ (the Fig. 3 premise), on the digits ground metric.
+#[test]
+fn dual_sinkhorn_dominates_emd_on_grid() {
+    let m = GridMetric::new(4, 4).cost_matrix();
+    let mut rng = seeded_rng(21);
+    let solver = EmdSolver::new(&m);
+    for _ in 0..4 {
+        let r = Histogram::sample_uniform(16, &mut rng);
+        let c = Histogram::sample_uniform(16, &mut rng);
+        let exact = solver.solve(&r, &c).unwrap().cost;
+        for lambda in [1.0, 9.0, 40.0] {
+            let sk = converged_engine(&m, lambda).distance(&r, &c).value;
+            assert!(sk >= exact - 1e-8, "lambda={lambda}: {sk} < {exact}");
+        }
+    }
+}
