@@ -1,6 +1,6 @@
 //! The paper's §5.1 experiment, end to end: SVM classification of digit
 //! histograms under eight candidate distances (Figure 2), on the
-//! synthetic-digits substitute (DESIGN.md §7).
+//! synthetic-digits substitute (see README.md §Workloads).
 //!
 //! Prints a couple of rendered digits, then the full protocol's table:
 //! mean ± std test error per distance per training-set size.

@@ -32,6 +32,7 @@ fn main() {
         batcher: BatcherConfig {
             max_batch: 64,
             max_delay: Duration::from_millis(2),
+            ..BatcherConfig::default()
         },
         ..Default::default()
     })

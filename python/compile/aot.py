@@ -22,7 +22,7 @@ kernel in interpret mode (the faithful three-layer stack — interpret mode
 lowers the grid to HLO while-loops); ``xla`` emits the same math as plain
 dot ops, which XLA:CPU turns into tight GEMM loops. Both are validated
 against the same oracle; the runtime defaults to ``xla`` for the hot path
-and keeps ``pallas`` for parity checks (see DESIGN.md §1/§8).
+and keeps ``pallas`` for parity checks (see README.md §Architecture).
 """
 
 from __future__ import annotations

@@ -11,7 +11,7 @@ which this module implements as a tiled Pallas kernel, plus a fused
 ``weighted_colsum(km, u, v) = sum(u * (km @ v), axis=0)`` used once at the
 end to read off the distances.
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the paper targets 2013-era
+TPU mapping: the paper targets 2013-era
 GPGPU vectorization; on TPU the natural formulation is a GEMM on the MXU.
 ``a`` is tiled into (BD, BK) VMEM blocks, ``x``/``b`` into (BK, BN)/(BD, BN)
 panels; the grid is (rows, batch, reduction) with the reduction innermost so
@@ -22,8 +22,8 @@ matmul epilogue and never round-trips to HBM.
 Kernels are executed with ``interpret=True`` everywhere in this repo: the
 CPU PJRT plugin cannot run Mosaic custom-calls, so interpret mode is both
 the correctness path (pytest vs ``ref.py``) and what ``aot.py`` lowers into
-the artifacts. Real-TPU perf is estimated from the BlockSpec VMEM/MXU
-figures in EXPERIMENTS.md §Perf.
+the artifacts. Real-TPU perf would come from the BlockSpec VMEM/MXU
+sizing below, measured on actual hardware.
 """
 
 from __future__ import annotations

@@ -5,3 +5,24 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def _importable(name):
+    try:
+        __import__(name)
+        return True
+    except Exception:
+        return False
+
+
+# Every test module in this directory imports the JAX/Pallas stack at
+# collection time (three of them also need hypothesis). On runners
+# without those dependencies (e.g. the Rust-focused CI image) the
+# affected modules must *skip*, not error: ignoring them keeps collection
+# clean, and pytest's "no tests collected" exit code 5 is treated as
+# success by the CI job.
+collect_ignore = []
+if not all(_importable(m) for m in ("numpy", "jax")):
+    collect_ignore_glob = ["test_*.py"]
+elif not _importable("hypothesis"):
+    collect_ignore = ["test_kernels.py", "test_logdomain.py", "test_model.py"]

@@ -25,6 +25,7 @@ fn main() {
         let mut b: PendingBatcher<u64> = PendingBatcher::new(BatcherConfig {
             max_batch: 64,
             max_delay: Duration::from_millis(1),
+            ..BatcherConfig::default()
         });
         let now = Instant::now();
         let mut flushed = 0usize;
@@ -43,7 +44,11 @@ fn main() {
     // --- service overhead per query (CPU backend, trivial work) ---
     let svc = DistanceService::start(CoordinatorConfig {
         artifact_dir: None,
-        batcher: BatcherConfig { max_batch: 32, max_delay: Duration::from_micros(200) },
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_delay: Duration::from_micros(200),
+            ..BatcherConfig::default()
+        },
         cpu_iterations: 1,
         ..Default::default()
     })
@@ -97,6 +102,7 @@ fn main() {
                 batcher: BatcherConfig {
                     max_batch,
                     max_delay: Duration::from_millis(1),
+                    ..BatcherConfig::default()
                 },
                 ..Default::default()
             })

@@ -1,0 +1,290 @@
+//! Sharded thread-pool panel executor.
+//!
+//! A query panel [(r_1, c_1) … (r_N, c_N)] is split into contiguous,
+//! near-equal shards, one per worker. Each worker owns a *private*
+//! backend instance — its own K/Kᵀ copies — so the per-iteration kernel
+//! sweeps run from each core's cache with no sharing, no locks and no
+//! false sharing. Threads are `std::thread::scope` spawns per panel:
+//! spawn cost (~10 µs) is three orders of magnitude below a panel solve
+//! at serving sizes (d ≥ 64, 20+ iterations), and scoped lifetimes keep
+//! the whole structure borrow-checked rather than `Arc`-ed.
+//!
+//! Shard outputs are re-concatenated in shard order, so the result
+//! vector lines up with the input panel exactly like the single-threaded
+//! [`crate::sinkhorn::BatchSinkhorn::distances_paired`].
+
+use super::{BackendKind, SolverBackend};
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
+use crate::sinkhorn::{SinkhornConfig, SinkhornOutput};
+use std::time::{Duration, Instant};
+
+/// What one worker did for one panel (returned per solve call so the
+/// coordinator can feed its occupancy metrics incrementally).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardReport {
+    /// Worker index (stable across the executor's lifetime).
+    pub worker: usize,
+    /// Queries in this worker's shard.
+    pub queries: usize,
+    /// Wallclock the worker spent solving the shard.
+    pub busy: Duration,
+}
+
+/// Cumulative per-worker counters (also kept inside the executor for
+/// library users who don't run a coordinator).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Panels this worker participated in.
+    pub panels: u64,
+    /// Total queries solved.
+    pub queries: u64,
+    /// Total busy wallclock.
+    pub busy: Duration,
+}
+
+/// Thread-pool batch executor: `workers` backend instances of one
+/// [`BackendKind`], each bound to the same (M, λ).
+pub struct ShardedExecutor {
+    backends: Vec<Box<dyn SolverBackend>>,
+    kind: BackendKind,
+    stats: Vec<WorkerStats>,
+}
+
+impl ShardedExecutor {
+    /// Build `workers` private backend instances of `kind` (clamped to
+    /// at least one).
+    pub fn new(
+        metric: &CostMatrix,
+        config: SinkhornConfig,
+        kind: BackendKind,
+        workers: usize,
+    ) -> Self {
+        let workers = workers.max(1);
+        let backends = (0..workers).map(|_| kind.build(metric, config)).collect();
+        Self { backends, kind, stats: vec![WorkerStats::default(); workers] }
+    }
+
+    /// [`Self::new`] with the regime-appropriate default strategy
+    /// ([`BackendKind::auto`]).
+    pub fn auto(metric: &CostMatrix, config: SinkhornConfig, workers: usize) -> Self {
+        Self::new(metric, config, BackendKind::auto(metric, config.lambda), workers)
+    }
+
+    /// Number of worker slots (= private backend instances).
+    pub fn workers(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// The strategy every worker runs.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// Histogram dimension the executor is bound to.
+    pub fn dim(&self) -> usize {
+        self.backends[0].dim()
+    }
+
+    /// Cumulative per-worker counters.
+    pub fn stats(&self) -> &[WorkerStats] {
+        &self.stats
+    }
+
+    /// Solve one source against a panel of targets in parallel.
+    pub fn solve_panel(
+        &mut self,
+        r: &Histogram,
+        cs: &[Histogram],
+    ) -> (Vec<SinkhornOutput>, Vec<ShardReport>) {
+        let rs: Vec<&Histogram> = std::iter::repeat(r).take(cs.len()).collect();
+        self.solve_panel_paired(&rs, cs)
+    }
+
+    /// Solve a fully paired panel (r_j, c_j) in parallel. Outputs are in
+    /// input order; the reports describe each worker's shard.
+    pub fn solve_panel_paired(
+        &mut self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+    ) -> (Vec<SinkhornOutput>, Vec<ShardReport>) {
+        let n = cs.len();
+        assert_eq!(rs.len(), n, "paired panel size mismatch");
+        if n == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let shards = self.backends.len().min(n);
+        if shards == 1 {
+            // Degenerate pool (or single query): skip the spawn entirely.
+            let t0 = Instant::now();
+            let out = self.backends[0].solve_panel_paired(rs, cs);
+            let report = ShardReport { worker: 0, queries: out.len(), busy: t0.elapsed() };
+            self.stats[0].panels += 1;
+            self.stats[0].queries += report.queries as u64;
+            self.stats[0].busy += report.busy;
+            return (out, vec![report]);
+        }
+        // Contiguous near-equal ranges: the first n % shards shards take
+        // one extra query.
+        let base = n / shards;
+        let rem = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut lo = 0;
+        for w in 0..shards {
+            let len = base + usize::from(w < rem);
+            ranges.push(lo..lo + len);
+            lo += len;
+        }
+
+        let mut outputs = Vec::with_capacity(n);
+        let mut reports = Vec::with_capacity(shards);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards);
+            for (worker, (backend, range)) in
+                self.backends.iter_mut().zip(ranges).enumerate()
+            {
+                let rs_shard = &rs[range.clone()];
+                let cs_shard = &cs[range];
+                handles.push(scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let out = backend.solve_panel_paired(rs_shard, cs_shard);
+                    (worker, out, t0.elapsed())
+                }));
+            }
+            // Joining in spawn order concatenates shards back into the
+            // original panel order.
+            for handle in handles {
+                let (worker, out, busy) =
+                    handle.join().expect("executor worker panicked");
+                reports.push(ShardReport { worker, queries: out.len(), busy });
+                outputs.extend(out);
+            }
+        });
+        for report in &reports {
+            let slot = &mut self.stats[report.worker];
+            slot.panels += 1;
+            slot.queries += report.queries as u64;
+            slot.busy += report.busy;
+        }
+        (outputs, reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::simplex::seeded_rng;
+    use crate::sinkhorn::{BatchSinkhorn, SinkhornEngine};
+
+    fn panel(
+        d: usize,
+        n: usize,
+        seed: u64,
+    ) -> (CostMatrix, Histogram, Vec<Histogram>) {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let cs = (0..n).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        (m, r, cs)
+    }
+
+    #[test]
+    fn matches_sequential_batch_in_order() {
+        let (m, r, cs) = panel(16, 23, 0);
+        let cfg = SinkhornConfig::fixed(9.0, 25);
+        let sequential = BatchSinkhorn::new(&m, cfg).distances(&r, &cs);
+        for workers in [1usize, 2, 3, 8] {
+            let mut ex =
+                ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, workers);
+            let (got, reports) = ex.solve_panel(&r, &cs);
+            assert_eq!(got.len(), cs.len());
+            let total: usize = reports.iter().map(|s| s.queries).sum();
+            assert_eq!(total, cs.len(), "workers={workers}");
+            for (j, (a, b)) in got.iter().zip(&sequential).enumerate() {
+                assert!(
+                    (a.value - b.value).abs() < 1e-9 * (1.0 + b.value),
+                    "workers={workers} j={j}: {} vs {}",
+                    a.value,
+                    b.value
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paired_mode_matches_scalar_engine() {
+        let mut rng = seeded_rng(1);
+        let d = 12;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let cfg = SinkhornConfig::fixed(7.0, 30);
+        let rs: Vec<Histogram> =
+            (0..9).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let cs: Vec<Histogram> =
+            (0..9).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let r_refs: Vec<&Histogram> = rs.iter().collect();
+        let mut ex = ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, 4);
+        let (got, _) = ex.solve_panel_paired(&r_refs, &cs);
+        let engine = SinkhornEngine::with_config(&m, cfg);
+        for j in 0..9 {
+            let want = engine.distance(&rs[j], &cs[j]).value;
+            assert!(
+                (got[j].value - want).abs() < 1e-9 * (1.0 + want),
+                "j={j}: {} vs {want}",
+                got[j].value
+            );
+        }
+    }
+
+    #[test]
+    fn more_workers_than_queries_is_fine() {
+        let (m, r, cs) = panel(10, 3, 2);
+        let mut ex = ShardedExecutor::new(
+            &m,
+            SinkhornConfig::fixed(9.0, 10),
+            BackendKind::Dense,
+            16,
+        );
+        let (got, reports) = ex.solve_panel(&r, &cs);
+        assert_eq!(got.len(), 3);
+        assert_eq!(reports.len(), 3, "only 3 shards for 3 queries");
+        assert!(reports.iter().all(|s| s.queries == 1));
+    }
+
+    #[test]
+    fn empty_panel_is_fine() {
+        let (m, r, _) = panel(8, 0, 3);
+        let mut ex =
+            ShardedExecutor::new(&m, SinkhornConfig::fixed(9.0, 5), BackendKind::Dense, 4);
+        let (got, reports) = ex.solve_panel(&r, &[]);
+        assert!(got.is_empty());
+        assert!(reports.is_empty());
+    }
+
+    #[test]
+    fn cumulative_stats_accumulate() {
+        let (m, r, cs) = panel(10, 8, 4);
+        let mut ex = ShardedExecutor::new(
+            &m,
+            SinkhornConfig::fixed(9.0, 10),
+            BackendKind::Interleaved,
+            2,
+        );
+        ex.solve_panel(&r, &cs);
+        ex.solve_panel(&r, &cs);
+        let stats = ex.stats();
+        assert_eq!(stats.len(), 2);
+        let queries: u64 = stats.iter().map(|s| s.queries).sum();
+        assert_eq!(queries, 16);
+        assert!(stats.iter().all(|s| s.panels == 2));
+    }
+
+    #[test]
+    fn auto_picks_log_domain_on_underflow() {
+        let (m, r, cs) = panel(8, 4, 5);
+        let mut ex = ShardedExecutor::auto(&m, SinkhornConfig::converged(50_000.0), 2);
+        assert_eq!(ex.kind(), BackendKind::LogDomain);
+        let (got, _) = ex.solve_panel(&r, &cs);
+        assert!(got.iter().all(|o| o.value.is_finite() && o.value >= 0.0));
+    }
+}

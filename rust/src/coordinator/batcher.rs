@@ -22,16 +22,42 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
     /// Flush a class once this many queries are queued. Should match the
-    /// widest artifact batch width for the served dimension.
+    /// widest artifact batch width for the served dimension — or, with
+    /// [`Self::scale_with_workers`], the per-worker shard width.
     pub max_batch: usize,
     /// Deadline: flush the class when its oldest query has waited this
     /// long, even if the batch is not full.
     pub max_delay: Duration,
+    /// Interpret `max_batch` as a *per-worker* shard width: the service
+    /// multiplies the size trigger by its CPU executor's worker count,
+    /// so a full flush hands every worker one `max_batch`-wide shard.
+    /// Leave off (the default) when serving through fixed-width XLA
+    /// artifacts.
+    pub scale_with_workers: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_delay: Duration::from_millis(2) }
+        Self {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            scale_with_workers: false,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// The config the service actually runs: `max_batch` widened to feed
+    /// `workers` parallel shards when [`Self::scale_with_workers`] is on.
+    pub fn effective(self, workers: usize) -> BatcherConfig {
+        if self.scale_with_workers {
+            BatcherConfig {
+                max_batch: self.max_batch.saturating_mul(workers.max(1)),
+                ..self
+            }
+        } else {
+            self
+        }
     }
 }
 
@@ -170,7 +196,21 @@ mod tests {
     }
 
     fn cfg(max_batch: usize, ms: u64) -> BatcherConfig {
-        BatcherConfig { max_batch, max_delay: Duration::from_millis(ms) }
+        BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_millis(ms),
+            ..BatcherConfig::default()
+        }
+    }
+
+    #[test]
+    fn effective_scales_only_when_asked() {
+        let base = cfg(8, 1);
+        assert_eq!(base.effective(4).max_batch, 8);
+        let scaled = BatcherConfig { scale_with_workers: true, ..base };
+        assert_eq!(scaled.effective(4).max_batch, 32);
+        assert_eq!(scaled.effective(0).max_batch, 8, "workers clamp to 1");
+        assert_eq!(scaled.effective(1).max_batch, 8);
     }
 
     #[test]

@@ -17,9 +17,33 @@ pub struct Stats {
     lat_max_us: u64,
     /// Simple log2 histogram of latency in µs: bucket i = [2^i, 2^{i+1}).
     lat_buckets: [u64; 32],
+    /// Per-worker occupancy of the CPU panel executor (index = worker).
+    workers: Vec<WorkerSnapshot>,
+}
+
+/// Throughput/occupancy counters for one executor worker.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerSnapshot {
+    /// Panels (shards) this worker executed.
+    pub panels: u64,
+    /// Queries solved by this worker.
+    pub queries: u64,
+    /// Busy wallclock, microseconds.
+    pub busy_us: u64,
 }
 
 impl Stats {
+    /// Record one shard executed by `worker` (resizes the table to fit).
+    pub fn record_worker(&mut self, worker: usize, queries: usize, busy: Duration) {
+        if worker >= self.workers.len() {
+            self.workers.resize(worker + 1, WorkerSnapshot::default());
+        }
+        let slot = &mut self.workers[worker];
+        slot.panels += 1;
+        slot.queries += queries as u64;
+        slot.busy_us += busy.as_micros().min(u64::MAX as u128) as u64;
+    }
+
     pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
         self.batches += 1;
         self.batched_queries += size as u64;
@@ -59,6 +83,7 @@ impl Stats {
             max_latency_us: self.lat_max_us,
             p99_latency_us: self.quantile_us(0.99),
             p50_latency_us: self.quantile_us(0.50),
+            workers: self.workers.clone(),
         }
     }
 
@@ -81,7 +106,7 @@ impl Stats {
 }
 
 /// Immutable snapshot returned to callers.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StatsSnapshot {
     pub queries: u64,
     pub batches: u64,
@@ -93,6 +118,22 @@ pub struct StatsSnapshot {
     pub max_latency_us: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
+    /// Per-worker executor occupancy (empty until a CPU panel ran).
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+impl StatsSnapshot {
+    /// Mean worker occupancy: busy time of each worker relative to the
+    /// busiest one (1.0 = perfectly balanced pool). Zero when no CPU
+    /// panel has run yet.
+    pub fn worker_balance(&self) -> f64 {
+        let max = self.workers.iter().map(|w| w.busy_us).max().unwrap_or(0);
+        if max == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self.workers.iter().map(|w| w.busy_us).sum();
+        sum as f64 / (max as f64 * self.workers.len() as f64)
+    }
 }
 
 impl std::fmt::Display for StatsSnapshot {
@@ -111,7 +152,18 @@ impl std::fmt::Display for StatsSnapshot {
             self.p50_latency_us,
             self.p99_latency_us,
             self.max_latency_us
-        )
+        )?;
+        if !self.workers.is_empty() {
+            write!(f, " workers=[")?;
+            for (i, w) in self.workers.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{i}:q={} busy_us={}", w.queries, w.busy_us)?;
+            }
+            write!(f, "] balance={:.2}", self.worker_balance())?;
+        }
+        Ok(())
     }
 }
 
@@ -152,5 +204,27 @@ mod tests {
         assert_eq!(snap.queries, 0);
         assert_eq!(snap.mean_batch_size, 0.0);
         assert_eq!(snap.p99_latency_us, 0);
+        assert!(snap.workers.is_empty());
+        assert_eq!(snap.worker_balance(), 0.0);
+    }
+
+    #[test]
+    fn worker_accounting() {
+        let mut s = Stats::default();
+        s.record_worker(0, 4, Duration::from_micros(100));
+        s.record_worker(2, 2, Duration::from_micros(50));
+        s.record_worker(0, 4, Duration::from_micros(100));
+        let snap = s.snapshot();
+        assert_eq!(snap.workers.len(), 3);
+        assert_eq!(snap.workers[0].panels, 2);
+        assert_eq!(snap.workers[0].queries, 8);
+        assert_eq!(snap.workers[0].busy_us, 200);
+        assert_eq!(snap.workers[1], WorkerSnapshot::default());
+        assert_eq!(snap.workers[2].queries, 2);
+        // balance = (200 + 0 + 50) / (200 * 3)
+        assert!((snap.worker_balance() - 250.0 / 600.0).abs() < 1e-12);
+        let line = snap.to_string();
+        assert!(line.contains("workers=["));
+        assert!(line.contains("balance="));
     }
 }

@@ -12,9 +12,12 @@
 //!   *shape class* (metric, λ, dimension) and flushed either when a class
 //!   fills the artifact's batch width or when the oldest request hits the
 //!   latency deadline;
-//! * [`service`] — the engine thread owning the PJRT runtime (or the CPU
-//!   fallback engine), the mpsc plumbing and graceful shutdown;
-//! * [`metrics`] — counters/latency snapshots for observability.
+//! * [`service`] — the engine thread owning the PJRT runtime and the
+//!   CPU panel executors ([`crate::backend::ShardedExecutor`]: one
+//!   K/Kᵀ-bound solver instance per worker thread), the mpsc plumbing
+//!   and graceful shutdown;
+//! * [`metrics`] — counters/latency snapshots, including per-worker
+//!   executor occupancy.
 //!
 //! Python never appears anywhere on this path: the engine executes
 //! AOT-compiled HLO through [`crate::runtime`].
@@ -24,7 +27,7 @@ pub mod metrics;
 mod service;
 
 pub use batcher::{BatcherConfig, PendingBatcher, ShapeClass};
-pub use metrics::StatsSnapshot;
+pub use metrics::{StatsSnapshot, WorkerSnapshot};
 pub use service::{DistanceService, ServiceError};
 
 use crate::simplex::Histogram;
@@ -82,6 +85,20 @@ pub struct CoordinatorConfig {
     /// Fixed iteration budget for CPU-backend solves (XLA artifacts carry
     /// their own baked iteration count).
     pub cpu_iterations: usize,
+    /// Worker threads in the CPU panel executor. Each worker owns a
+    /// private K/Kᵀ-bound [`crate::backend::SolverBackend`] instance, so
+    /// panels shard across cores with zero kernel sharing. Defaults to
+    /// the machine's available parallelism; 1 recovers the old
+    /// single-threaded dispatch exactly. Note the memory trade:
+    /// executors are cached per (metric, λ) shape class and each holds
+    /// `cpu_workers` kernel copies (~3·d²·8 bytes per worker), so
+    /// λ-sweeping workloads on many-core hosts should bound this.
+    pub cpu_workers: usize,
+    /// Solve strategy for CPU panels. `None` (the default) picks per
+    /// shape class via [`crate::backend::BackendKind::auto`]: the
+    /// interleaved batch walk normally, log-domain when e^{−λM}
+    /// underflows.
+    pub cpu_backend: Option<crate::backend::BackendKind>,
     /// Dynamic batching parameters.
     pub batcher: BatcherConfig,
 }
@@ -93,6 +110,10 @@ impl Default for CoordinatorConfig {
             flavor: crate::runtime::Flavor::Xla,
             cpu_fallback: true,
             cpu_iterations: 20,
+            cpu_workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            cpu_backend: None,
             batcher: BatcherConfig::default(),
         }
     }

@@ -1,8 +1,10 @@
 //! The service thread: mpsc front door, dynamic batching, engine dispatch.
 //!
 //! A single engine thread owns the PJRT runtime (PJRT handles are not
-//! `Sync`; message passing keeps the unsafe surface zero) plus the CPU
-//! fallback engines, and runs the batching loop:
+//! `Sync`; message passing keeps the unsafe surface zero) plus one
+//! [`ShardedExecutor`] per CPU shape class — the thread-pool that fans
+//! each flushed panel out across `cpu_workers` private backend
+//! instances — and runs the batching loop:
 //!
 //! ```text
 //! clients --submit--> mpsc --> [route -> pending queues] --flush--> engine
@@ -15,9 +17,10 @@
 use super::batcher::{PendingBatcher, ReadyBatch, ShapeClass};
 use super::metrics::{Stats, StatsSnapshot};
 use super::{CoordinatorConfig, EngineKind, MetricId, Query, QueryResult};
+use crate::backend::ShardedExecutor;
 use crate::metric::CostMatrix;
 use crate::runtime::{RuntimeError, XlaRuntime};
-use crate::sinkhorn::{BatchSinkhorn, SinkhornConfig, SinkhornEngine};
+use crate::sinkhorn::SinkhornConfig;
 use crate::F;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -25,19 +28,35 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Errors surfaced to clients.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum ServiceError {
-    #[error("metric {0:?} is not registered")]
     UnknownMetric(MetricId),
-    #[error("histogram dimension {got} does not match metric dimension {want}")]
     DimensionMismatch { got: usize, want: usize },
-    #[error("no artifact serves d={0} and CPU fallback is disabled")]
     NoBackend(usize),
-    #[error("runtime failure: {0}")]
     Runtime(String),
-    #[error("service is shut down")]
     Stopped,
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::UnknownMetric(id) => {
+                write!(f, "metric {id:?} is not registered")
+            }
+            ServiceError::DimensionMismatch { got, want } => write!(
+                f,
+                "histogram dimension {got} does not match metric dimension {want}"
+            ),
+            ServiceError::NoBackend(d) => {
+                write!(f, "no artifact serves d={d} and CPU fallback is disabled")
+            }
+            ServiceError::Runtime(msg) => write!(f, "runtime failure: {msg}"),
+            ServiceError::Stopped => write!(f, "service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 struct Job {
     query: Query,
@@ -69,8 +88,13 @@ pub struct ServiceClient {
 }
 
 impl DistanceService {
-    /// Spawn the engine thread. Fails fast if the artifact directory is
-    /// configured but unusable.
+    /// Spawn the engine thread.
+    ///
+    /// When the artifact directory is configured but unusable (missing
+    /// manifest, or no PJRT backend linked into this build), behavior
+    /// follows `cpu_fallback`: with it on (the default) the service
+    /// starts CPU-only with a warning on stderr; with it off the error
+    /// is returned fast.
     ///
     /// PJRT handles are not `Send`, so the [`XlaRuntime`] is constructed
     /// *inside* the engine thread; the init outcome is reported back over
@@ -84,6 +108,13 @@ impl DistanceService {
                 let runtime = match &config.artifact_dir {
                     Some(dir) => match XlaRuntime::new(dir) {
                         Ok(rt) => Some(rt),
+                        Err(e) if config.cpu_fallback => {
+                            eprintln!(
+                                "sinkhorn-engine: XLA runtime unavailable \
+                                 ({e}); serving on the CPU backends"
+                            );
+                            None
+                        }
                         Err(e) => {
                             let _ = init_tx
                                 .send(Err(ServiceError::Runtime(e.to_string())));
@@ -192,7 +223,9 @@ struct EngineThread {
     runtime: Option<XlaRuntime>,
     rx: Receiver<Message>,
     metrics: HashMap<MetricId, CostMatrix>,
-    cpu_engines: HashMap<(MetricId, u64), SinkhornEngine>,
+    /// One sharded panel executor per (metric, λ) shape class; each holds
+    /// `config.cpu_workers` private K/Kᵀ-bound backend instances.
+    executors: HashMap<(MetricId, u64), ShardedExecutor>,
     pending: PendingBatcher<Job>,
     stats: Stats,
 }
@@ -203,13 +236,14 @@ impl EngineThread {
         runtime: Option<XlaRuntime>,
         rx: Receiver<Message>,
     ) -> Self {
-        let pending = PendingBatcher::new(config.batcher);
+        let pending =
+            PendingBatcher::new(config.batcher.effective(config.cpu_workers));
         Self {
             config,
             runtime,
             rx,
             metrics: HashMap::new(),
-            cpu_engines: HashMap::new(),
+            executors: HashMap::new(),
             pending,
             stats: Stats::default(),
         }
@@ -227,8 +261,8 @@ impl EngineThread {
                 Ok(Message::Query(job)) => self.accept(job),
                 Ok(Message::RegisterMetric(id, m, ack)) => {
                     self.metrics.insert(id, m);
-                    // Invalidate engines/buffers bound to the replaced metric.
-                    self.cpu_engines.retain(|(mid, _), _| *mid != id);
+                    // Invalidate executors/buffers bound to the replaced metric.
+                    self.executors.retain(|(mid, _), _| *mid != id);
                     if let Some(rt) = self.runtime.as_mut() {
                         rt.invalidate_metric(id.0 as u64);
                     }
@@ -336,30 +370,29 @@ impl EngineThread {
             return;
         }
 
-        // CPU fallback path: the vectorized batch engine (Algorithm 1's
-        // matrix form) when the dense kernel is usable, the scalar engine
-        // (with its log-domain auto-stabilization) otherwise.
+        // CPU path: the panel shards across the thread-pool executor for
+        // this shape class. Each worker owns a private backend instance
+        // (interleaved batch walk in the dense regime, log-domain when
+        // e^{−λM} underflows, or whatever `cpu_backend` pins).
         let cfg = SinkhornConfig::fixed(lambda, self.config.cpu_iterations);
-        let engine = self
-            .cpu_engines
+        let workers = self.config.cpu_workers;
+        let pinned = self.config.cpu_backend;
+        let executor = self
+            .executors
             .entry((class.metric, lambda.to_bits()))
-            .or_insert_with(|| SinkhornEngine::with_config(&metric, cfg));
-        let dists: Vec<F> = if size > 1 && !engine.is_stabilized() {
-            let batch_engine = BatchSinkhorn::new(&metric, cfg);
-            let rs: Vec<&crate::simplex::Histogram> =
-                jobs.iter().map(|j| &j.query.r).collect();
-            let cs: Vec<crate::simplex::Histogram> =
-                jobs.iter().map(|j| j.query.c.clone()).collect();
-            batch_engine
-                .distances_paired(&rs, &cs)
-                .into_iter()
-                .map(|o| o.value)
-                .collect()
-        } else {
-            jobs.iter()
-                .map(|job| engine.distance(&job.query.r, &job.query.c).value)
-                .collect()
-        };
+            .or_insert_with(|| match pinned {
+                Some(kind) => ShardedExecutor::new(&metric, cfg, kind, workers),
+                None => ShardedExecutor::auto(&metric, cfg, workers),
+            });
+        let rs: Vec<&crate::simplex::Histogram> =
+            jobs.iter().map(|j| &j.query.r).collect();
+        let cs: Vec<crate::simplex::Histogram> =
+            jobs.iter().map(|j| j.query.c.clone()).collect();
+        let (outputs, reports) = executor.solve_panel_paired(&rs, &cs);
+        let dists: Vec<F> = outputs.into_iter().map(|o| o.value).collect();
+        for report in &reports {
+            self.stats.record_worker(report.worker, report.queries, report.busy);
+        }
         self.stats.record_batch(size, false);
         self.respond_all(jobs, dists, EngineKind::Cpu, size);
     }
@@ -431,12 +464,14 @@ mod tests {
     use super::super::batcher::BatcherConfig;
     use crate::metric::RandomMetric;
     use crate::simplex::{seeded_rng, Histogram};
+    use crate::sinkhorn::SinkhornEngine;
 
     fn cpu_service(max_batch: usize, delay_ms: u64) -> (DistanceService, CostMatrix) {
         let mut config = CoordinatorConfig::cpu_only();
         config.batcher = BatcherConfig {
             max_batch,
             max_delay: Duration::from_millis(delay_ms),
+            ..BatcherConfig::default()
         };
         config.cpu_iterations = 200;
         let svc = DistanceService::start(config).unwrap();
@@ -577,6 +612,108 @@ mod tests {
         let snap = svc.stats().unwrap();
         assert_eq!(snap.queries, 100);
         assert!(snap.batches <= 100);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn worker_occupancy_is_recorded() {
+        let (svc, _m) = cpu_service(8, 50);
+        let mut rng = seeded_rng(7);
+        let rxs: Vec<_> = (0..8)
+            .map(|_| {
+                let r = Histogram::sample_uniform(12, &mut rng);
+                let c = Histogram::sample_uniform(12, &mut rng);
+                svc.submit(Query { metric: MetricId(0), lambda: 9.0, r, c }).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = svc.stats().unwrap();
+        assert!(!snap.workers.is_empty(), "executor workers must be tracked");
+        let solved: u64 = snap.workers.iter().map(|w| w.queries).sum();
+        assert_eq!(solved, 8, "every query attributed to a worker");
+        assert!(snap.workers.iter().any(|w| w.panels > 0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn worker_count_does_not_change_answers() {
+        let mut rng = seeded_rng(8);
+        let m = RandomMetric::new(12).sample(&mut rng);
+        let queries: Vec<(Histogram, Histogram)> = (0..12)
+            .map(|_| {
+                (
+                    Histogram::sample_uniform(12, &mut rng),
+                    Histogram::sample_uniform(12, &mut rng),
+                )
+            })
+            .collect();
+        let mut answers: Vec<Vec<F>> = Vec::new();
+        for workers in [1usize, 4] {
+            let mut config = CoordinatorConfig::cpu_only();
+            config.cpu_workers = workers;
+            config.batcher = BatcherConfig {
+                max_batch: 12,
+                max_delay: Duration::from_millis(50),
+                ..BatcherConfig::default()
+            };
+            let svc = DistanceService::start(config).unwrap();
+            svc.register_metric(MetricId(0), m.clone()).unwrap();
+            let rxs: Vec<_> = queries
+                .iter()
+                .map(|(r, c)| {
+                    svc.submit(Query {
+                        metric: MetricId(0),
+                        lambda: 9.0,
+                        r: r.clone(),
+                        c: c.clone(),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            answers.push(
+                rxs.into_iter()
+                    .map(|rx| rx.recv().unwrap().unwrap().distance)
+                    .collect(),
+            );
+            svc.shutdown();
+        }
+        for (a, b) in answers[0].iter().zip(&answers[1]) {
+            assert!((a - b).abs() < 1e-12, "sharding changed a result: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pinned_backend_is_honored() {
+        use crate::backend::BackendKind;
+        let mut config = CoordinatorConfig::cpu_only();
+        config.cpu_backend = Some(BackendKind::Greenkhorn);
+        config.cpu_iterations = 200;
+        config.batcher = BatcherConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(1),
+            ..BatcherConfig::default()
+        };
+        let svc = DistanceService::start(config).unwrap();
+        let mut rng = seeded_rng(9);
+        let m = RandomMetric::new(10).sample(&mut rng);
+        svc.register_metric(MetricId(0), m.clone()).unwrap();
+        let r = Histogram::sample_uniform(10, &mut rng);
+        let c = Histogram::sample_uniform(10, &mut rng);
+        let res = svc
+            .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: c.clone() })
+            .unwrap();
+        assert_eq!(res.engine, EngineKind::Cpu);
+        // Greenkhorn at a generous budget lands on the same fixed point.
+        let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 200))
+            .distance(&r, &c)
+            .value;
+        assert!(
+            (res.distance - want).abs() < 1e-4 * (1.0 + want),
+            "greenkhorn {} vs dense {want}",
+            res.distance
+        );
         svc.shutdown();
     }
 }

@@ -3,7 +3,7 @@
 //! The paper's classification study runs on MNIST 20×20 intensity images
 //! normalized into Σ₄₀₀ histograms. This environment has no network
 //! access, so we build the closest synthetic equivalent that exercises the
-//! identical code path (DESIGN.md §7): a procedural renderer that draws
+//! identical code path (see README.md §Workloads): a procedural renderer that draws
 //! each digit class 0–9 as a fixed set of strokes on the unit square,
 //! rasterizes with a Gaussian pen onto a 20×20 grid, and perturbs each
 //! sample with random affine jitter (translation / rotation / scale),

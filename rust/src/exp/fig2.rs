@@ -1,7 +1,7 @@
 //! Figure 2 — classification error of SVMs with e^{−d/t} kernels, for
 //! every candidate distance, as a function of training-set size.
 //!
-//! Protocol (paper §5.1.1, reproduced exactly, scaled per DESIGN.md §7):
+//! Protocol (paper §5.1.1, reproduced exactly at reduced default scale):
 //!
 //! * dataset of N digit histograms on a g×g grid (paper: MNIST 20×20,
 //!   N ∈ {3,5,12,17,25}·10³; default here: synthetic digits, smaller N);

@@ -6,8 +6,8 @@
 //! cost), decreases monotonically in λ, and plateaus around ~10% even at
 //! large λ — which the paper argues is fine, since closeness to the EMD
 //! is not the goal. We reproduce the distribution over synthetic-digit
-//! pairs (DESIGN.md §7), with the exact denominator from the network
-//! simplex.
+//! pairs (the MNIST substitute, see [`crate::data`]), with the exact
+//! denominator from the network simplex.
 
 use crate::data::{DigitClass, SyntheticDigits};
 use crate::ot::EmdSolver;

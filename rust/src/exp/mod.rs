@@ -5,7 +5,7 @@
 //! criterion-style benches under `rust/benches/`, and the integration
 //! smoke tests. Scale parameters default to values sized for this
 //! single-core testbed; every harness accepts paper-scale overrides
-//! (see DESIGN.md §7 for the documented substitutions).
+//! (see README.md §Experiments for the documented substitutions).
 
 pub mod ablation;
 pub mod fig2;

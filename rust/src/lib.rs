@@ -9,14 +9,16 @@
 //!   AOT-lowered to HLO text artifacts (`python/compile/`, `artifacts/`).
 //! * **Layer 3 (this crate)** — a Rust coordinator that loads the
 //!   artifacts through PJRT ([`runtime`]), routes and batches distance
-//!   queries ([`coordinator`]), and ships every substrate the paper's
-//!   evaluation needs: an exact EMD solver ([`ot`]), a pure-Rust Sinkhorn
-//!   engine ([`sinkhorn`]), classical histogram distances ([`distances`]),
-//!   a kernel SVM ([`svm`]), ground-metric builders ([`metric`]) and
-//!   workload generators ([`data`], [`simplex`]).
+//!   queries ([`coordinator`]), executes panels across a sharded
+//!   thread-pool of pluggable solver strategies ([`backend`]), and ships
+//!   every substrate the paper's evaluation needs: an exact EMD solver
+//!   ([`ot`]), a pure-Rust Sinkhorn engine ([`sinkhorn`]), classical
+//!   histogram distances ([`distances`]), a kernel SVM ([`svm`]),
+//!   ground-metric builders ([`metric`]) and workload generators
+//!   ([`data`], [`simplex`]).
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index, and
-//! `EXPERIMENTS.md` for measured reproductions of the paper's Figures 2–5.
+//! See `README.md` for the build, test and CI instructions and the
+//! system inventory.
 //!
 //! ## Quickstart
 //!
@@ -36,6 +38,15 @@
 //! assert!(sk.value >= exact - 1e-9);
 //! ```
 
+// Index-arithmetic-heavy numeric kernels: explicit `for i in 0..d` loops
+// over row-major buffers are the house style (they mirror the paper's
+// matrix notation), so the iterator-translation lint stays off.
+#![allow(clippy::needless_range_loop)]
+// Channel-of-channels plumbing (per-query response channels) is the
+// coordinator's core pattern; the nested types are intentional.
+#![allow(clippy::type_complexity)]
+
+pub mod backend;
 pub mod coordinator;
 pub mod data;
 pub mod distances;
@@ -56,6 +67,7 @@ pub type F = f64;
 
 /// Convenience re-exports covering the public API surface.
 pub mod prelude {
+    pub use crate::backend::{BackendKind, ShardedExecutor, SolverBackend};
     pub use crate::coordinator::{
         BatcherConfig, CoordinatorConfig, DistanceService, Query, QueryResult,
     };

@@ -3,7 +3,7 @@
 //!
 //! Deliberately BLAS-free (the crate is self-contained); the routines are
 //! written cache-consciously (row-major, contiguous inner loops, blocked
-//! GEMM) and profiled in the §Perf pass — see EXPERIMENTS.md.
+//! GEMM) and profiled with the in-tree bench harness.
 
 use crate::F;
 

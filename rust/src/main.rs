@@ -7,7 +7,7 @@
 //! repro gap        [--grid G] [--pairs P] [--lambdas l1,l2,...]         Figure 3
 //! repro speed      [--dims d1,d2,...] [--skip-emd] [--no-xla]           Figure 4
 //! repro iterations [--dims d1,d2,...] [--lambdas ...] [--trials T]      Figure 5
-//! repro serve      [--queries N] [--batch B] [--delay-ms D]             service demo
+//! repro serve      [--queries N] [--batch B] [--delay-ms D] [--workers W] [--backend NAME]   service demo
 //! repro info                                                            artifact manifest
 //! ```
 //!
@@ -66,7 +66,7 @@ subcommands:
   info         print the AOT artifact manifest
 
 common flags: --seed S, --artifacts DIR (default ./artifacts)
-see each subcommand's section in DESIGN.md for scale flags
+see README.md for build instructions and per-subcommand scale flags
 ";
 
 /// Parsed `--key value` options (plus bare `--flag` booleans).
@@ -221,17 +221,32 @@ fn cmd_iterations(opts: &Opts) -> Result<(), String> {
 }
 
 fn cmd_serve(opts: &Opts) -> Result<(), String> {
+    use sinkhorn_rs::backend::BackendKind;
     use sinkhorn_rs::coordinator::{CoordinatorConfig, MetricId, Query};
     let queries = opts.get("queries", 512usize)?;
     let d = opts.get("d", 64usize)?;
     let lambda = opts.get("lambda", 9.0f64)?;
     let batch = opts.get("batch", 64usize)?;
     let delay_ms = opts.get("delay-ms", 2u64)?;
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let workers = opts.get("workers", default_workers)?;
+    let backend = match opts.values.get("backend") {
+        None => None,
+        Some(name) => Some(
+            BackendKind::parse(name)
+                .ok_or_else(|| format!("unknown --backend '{name}'"))?,
+        ),
+    };
     let config = CoordinatorConfig {
         artifact_dir: if opts.flag("no-xla") { None } else { Some(opts.artifacts()) },
+        cpu_workers: workers,
+        cpu_backend: backend,
         batcher: sinkhorn_rs::coordinator::BatcherConfig {
             max_batch: batch,
             max_delay: std::time::Duration::from_millis(delay_ms),
+            scale_with_workers: opts.flag("scale-batch"),
         },
         ..Default::default()
     };

@@ -9,15 +9,31 @@ use super::CostMatrix;
 use crate::F;
 
 /// Why a matrix fails to be a metric matrix.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum MetricViolation {
-    #[error("diagonal entry m[{0},{0}] = {1} is nonzero")]
     NonzeroDiagonal(usize, F),
-    #[error("asymmetry at ({0},{1}): {2} vs {3}")]
     Asymmetric(usize, usize, F, F),
-    #[error("triangle violated: m[{i},{j}]={mij} > m[{i},{k}]+m[{k},{j}]={sum}")]
     Triangle { i: usize, j: usize, k: usize, mij: F, sum: F },
 }
+
+impl std::fmt::Display for MetricViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricViolation::NonzeroDiagonal(i, v) => {
+                write!(f, "diagonal entry m[{i},{i}] = {v} is nonzero")
+            }
+            MetricViolation::Asymmetric(i, j, a, b) => {
+                write!(f, "asymmetry at ({i},{j}): {a} vs {b}")
+            }
+            MetricViolation::Triangle { i, j, k, mij, sum } => write!(
+                f,
+                "triangle violated: m[{i},{j}]={mij} > m[{i},{k}]+m[{k},{j}]={sum}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MetricViolation {}
 
 /// Check membership of the metric cone up to tolerance `tol`.
 pub fn is_metric_matrix(m: &CostMatrix, tol: F) -> Result<(), MetricViolation> {

@@ -23,13 +23,27 @@ use crate::simplex::Histogram;
 use crate::F;
 
 /// Errors from the exact solver.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum OtError {
-    #[error("histogram dimension {0} does not match cost matrix dimension {1}")]
     DimensionMismatch(usize, usize),
-    #[error("network simplex exceeded the pivot limit ({0})")]
     PivotLimit(usize),
 }
+
+impl std::fmt::Display for OtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OtError::DimensionMismatch(got, want) => write!(
+                f,
+                "histogram dimension {got} does not match cost matrix dimension {want}"
+            ),
+            OtError::PivotLimit(limit) => {
+                write!(f, "network simplex exceeded the pivot limit ({limit})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OtError {}
 
 /// An optimal (or feasible) transportation plan in sparse triplet form.
 ///

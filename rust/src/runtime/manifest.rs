@@ -51,16 +51,43 @@ pub struct Manifest {
 }
 
 /// Manifest loading errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read manifest {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("cannot parse manifest: {0}")]
-    Parse(#[from] crate::util::json::JsonError),
-    #[error("manifest field missing or malformed: {0}")]
+    Parse(crate::util::json::JsonError),
     Schema(&'static str),
-    #[error("unsupported manifest version {0}")]
     Version(usize),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => {
+                write!(f, "cannot read manifest {}: {e}", path.display())
+            }
+            ManifestError::Parse(e) => write!(f, "cannot parse manifest: {e}"),
+            ManifestError::Schema(field) => {
+                write!(f, "manifest field missing or malformed: {field}")
+            }
+            ManifestError::Version(v) => write!(f, "unsupported manifest version {v}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            ManifestError::Parse(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ManifestError::Parse(e)
+    }
 }
 
 impl Manifest {

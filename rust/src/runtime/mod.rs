@@ -1,12 +1,15 @@
 //! XLA/PJRT execution runtime — loads and runs the AOT artifacts.
 //!
-//! This is the bottom of the Layer-3 stack: it wraps the `xla` crate's
-//! PJRT CPU client, discovers the HLO-text artifacts via the
-//! [`manifest`], compiles each variant **once** (lazily, cached), and
-//! executes batched Sinkhorn programs with zero Python anywhere near the
-//! call. Interchange is HLO *text* because the image's xla_extension
-//! 0.5.1 rejects jax ≥ 0.5's 64-bit-instruction-id serialized protos; the
-//! text parser reassigns ids (see `python/compile/aot.py`).
+//! This is the bottom of the Layer-3 stack: it wraps a PJRT CPU client
+//! (through the [`pjrt`] binding surface), discovers the HLO-text
+//! artifacts via the [`manifest`], compiles each variant **once**
+//! (lazily, cached), and executes batched Sinkhorn programs with zero
+//! Python anywhere near the call. Interchange is HLO *text* because
+//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-instruction-id
+//! serialized protos; the text parser reassigns ids (see
+//! `python/compile/aot.py`). Builds without the native library use the
+//! in-tree [`pjrt`] shim, which fails client construction cleanly so the
+//! coordinator serves everything on the CPU engines.
 //!
 //! The artifact signature is
 //!   `f(M: f32[d,d], lam: f32[], R: f32[d,n], C: f32[d,n])
@@ -14,8 +17,16 @@
 //! with `iters` fixed at lowering time.
 
 mod manifest;
+pub mod pjrt;
 
 pub use manifest::{ArtifactVariant, Flavor, Manifest, ManifestError};
+
+// The PJRT binding layer. `runtime::pjrt` mirrors the `xla` crate's API
+// surface one-to-one so a vendored xla_extension build can be swapped in
+// by changing this single alias; by default it is the in-tree no-backend
+// shim (every client construction fails cleanly and the coordinator
+// falls back to the CPU engines).
+use self::pjrt as xla;
 
 use crate::metric::CostMatrix;
 use crate::F;
@@ -23,16 +34,41 @@ use std::collections::HashMap;
 use std::path::Path;
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error(transparent)]
-    Manifest(#[from] ManifestError),
-    #[error("xla error: {0}")]
+    Manifest(ManifestError),
     Xla(String),
-    #[error("no artifact for d={d} flavor={flavor:?}; available dims: {available:?}")]
     NoVariant { d: usize, flavor: Flavor, available: Vec<usize> },
-    #[error("shape mismatch: {0}")]
     Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Manifest(e) => write!(f, "{e}"),
+            RuntimeError::Xla(msg) => write!(f, "xla error: {msg}"),
+            RuntimeError::NoVariant { d, flavor, available } => write!(
+                f,
+                "no artifact for d={d} flavor={flavor:?}; available dims: {available:?}"
+            ),
+            RuntimeError::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Manifest(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {
@@ -59,7 +95,7 @@ pub struct XlaRuntime {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Device-resident cost matrices, keyed by caller-provided id + d.
     /// Staging M (d² floats) dominated per-call overhead before this
-    /// cache (see EXPERIMENTS.md §Perf).
+    /// cache was added.
     metric_buffers: HashMap<(u64, usize), xla::PjRtBuffer>,
     /// Cumulative executions per variant (observability).
     exec_counts: HashMap<String, u64>,

@@ -25,15 +25,29 @@ pub struct Histogram {
 }
 
 /// Error raised when a vector cannot be interpreted as a histogram.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum HistogramError {
-    #[error("histogram must be non-empty")]
     Empty,
-    #[error("histogram entries must be finite and non-negative (index {0}: {1})")]
     Invalid(usize, F),
-    #[error("histogram must have positive total mass")]
     ZeroMass,
 }
+
+impl std::fmt::Display for HistogramError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HistogramError::Empty => write!(f, "histogram must be non-empty"),
+            HistogramError::Invalid(i, v) => write!(
+                f,
+                "histogram entries must be finite and non-negative (index {i}: {v})"
+            ),
+            HistogramError::ZeroMass => {
+                write!(f, "histogram must have positive total mass")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HistogramError {}
 
 impl Histogram {
     /// Build a histogram from raw non-negative weights, normalizing them.
@@ -180,7 +194,7 @@ mod tests {
         assert!(d.mass_error() < 1e-12);
     }
 
-    // Property-style sweeps (in-tree harness; see DESIGN.md on the
+    // Property-style sweeps (in-tree harness; see README.md on the
     // offline dependency policy).
     #[test]
     fn prop_sampled_histograms_are_valid() {

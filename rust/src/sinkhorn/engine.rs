@@ -1,6 +1,6 @@
 //! The dense Sinkhorn-Knopp fixed-point engine (Algorithm 1).
 //!
-//! Hot-path layout decisions (see EXPERIMENTS.md §Perf for measurements):
+//! Hot-path layout decisions (measured by `cargo bench --bench solvers`):
 //!
 //! * `K` and `Kᵀ` are both materialized row-major once per (M, λ) bind, so
 //!   both matvecs in the iteration stream contiguously;
@@ -85,13 +85,8 @@ impl SinkhornEngine {
         // numerically diagonal, the dense fixed point collapses to a
         // meaningless 0-cost answer, and solves must go through the
         // log-domain path.
-        let off_diag = (d * d - d).max(1);
-        let zeros = (0..d)
-            .flat_map(|i| (0..d).filter(move |&j| j != i).map(move |j| (i, j)))
-            .filter(|&(i, j)| k[i * d + j] == 0.0)
-            .count();
-        let degenerate =
-            config.auto_stabilize && zeros as f64 > 0.5 * off_diag as f64;
+        let degenerate = config.auto_stabilize
+            && super::degenerate_off_diagonal(k.iter().copied(), d);
         Self { d, lambda, config, k, kt, m: metric.data().to_vec(), degenerate }
     }
 

@@ -57,9 +57,16 @@ pub struct IndependenceKernel {
 }
 
 /// Error for non-Euclidean cost matrices.
-#[derive(Debug, thiserror::Error)]
-#[error("cost matrix is not a Euclidean distance matrix (Gram matrix not PSD)")]
+#[derive(Debug, Clone)]
 pub struct NotEuclidean;
+
+impl std::fmt::Display for NotEuclidean {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cost matrix is not a Euclidean distance matrix (Gram matrix not PSD)")
+    }
+}
+
+impl std::error::Error for NotEuclidean {}
 
 impl IndependenceKernel {
     /// Build the factorization from a squared-Euclidean cost matrix.

@@ -58,6 +58,27 @@ impl Default for SinkhornConfig {
     }
 }
 
+/// True when K = e^{−λM} underflows badly enough that the dense fixed
+/// point collapses: more than half of the *off-diagonal* kernel is
+/// exactly zero (the diagonal is always 1 since m_ii = 0). This single
+/// predicate is the routing criterion shared by [`SinkhornEngine`]'s
+/// auto-stabilization, the Greenkhorn backend, and the backend router.
+pub fn dense_kernel_degenerate(metric: &crate::metric::CostMatrix, lambda: F) -> bool {
+    let d = metric.dim();
+    degenerate_off_diagonal(metric.data().iter().map(|&mij| (-lambda * mij).exp()), d)
+}
+
+/// The same criterion over an already materialized row-major kernel
+/// (spares callers that hold K a second O(d²) exp pass).
+pub(crate) fn degenerate_off_diagonal(k: impl Iterator<Item = F>, d: usize) -> bool {
+    let off_diag = (d * d - d).max(1);
+    let zeros = k
+        .enumerate()
+        .filter(|&(idx, v)| idx / d != idx % d && v == 0.0)
+        .count();
+    zeros as f64 > 0.5 * off_diag as f64
+}
+
 impl SinkhornConfig {
     /// Fixed-budget config (no convergence checks) — the serving-path
     /// setting: exactly `n` iterations.

@@ -21,12 +21,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("JSON parse error at byte {offset}: {message}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
     pub offset: usize,
     pub message: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a complete JSON document (trailing whitespace allowed).

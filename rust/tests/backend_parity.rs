@@ -1,0 +1,216 @@
+//! Backend parity: every solve path — dense engine, log-domain
+//! stabilized, interleaved batch, and the sharded thread-pool executor —
+//! computes the *same* d_M^λ, to 1e-9, across seeded random simplex
+//! pairs. At matched fixed iteration budgets all paths run the identical
+//! fixed-point recursion, so disagreement beyond float accumulation
+//! noise means a real bug (wrong transpose, column cross-talk, shard
+//! mis-assembly, …).
+
+use sinkhorn_rs::backend::{
+    dense_kernel_degenerate, BackendKind, GreenkhornBackend, ShardedExecutor,
+    SolverBackend,
+};
+use sinkhorn_rs::metric::{CostMatrix, RandomMetric};
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::{SinkhornConfig, SinkhornEngine};
+use sinkhorn_rs::F;
+
+const TOL: F = 1e-9;
+
+fn workload(d: usize, n: usize, seed: u64) -> (CostMatrix, Vec<Histogram>, Vec<Histogram>) {
+    let mut rng = seeded_rng(seed);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let rs = (0..n).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+    let cs = (0..n).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+    (m, rs, cs)
+}
+
+fn assert_close(a: F, b: F, what: &str) {
+    assert!(
+        (a - b).abs() <= TOL * (1.0 + b.abs()),
+        "{what}: {a} vs {b} (diff {:.3e})",
+        (a - b).abs()
+    );
+}
+
+/// Dense vs log-domain vs interleaved batch vs thread-pool executor at a
+/// matched fixed budget, across seeds, dims and λ.
+#[test]
+fn all_paths_agree_on_fixed_budget() {
+    for seed in 0..6u64 {
+        let d = 8 + 2 * (seed as usize % 4);
+        let (m, rs, cs) = workload(d, 7, seed);
+        for &lambda in &[3.0, 9.0] {
+            // 300 iterations: fully converged at these (d, λ), and every
+            // path executes exactly the same recursion depth.
+            let cfg = SinkhornConfig::fixed(lambda, 300);
+            let dense = SinkhornEngine::with_config(&m, cfg);
+            let log = BackendKind::LogDomain.build(&m, cfg);
+            let inter = BackendKind::Interleaved.build(&m, cfg);
+            let mut pool =
+                ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, 3);
+
+            let r_refs: Vec<&Histogram> = rs.iter().collect();
+            let inter_panel = inter.solve_panel_paired(&r_refs, &cs);
+            let (pool_panel, reports) = pool.solve_panel_paired(&r_refs, &cs);
+            assert_eq!(pool_panel.len(), cs.len());
+            assert!(reports.len() > 1, "panel of 7 must shard across workers");
+
+            for j in 0..cs.len() {
+                let want = dense.distance(&rs[j], &cs[j]).value;
+                let ctx = format!("seed={seed} d={d} lambda={lambda} j={j}");
+                assert_close(
+                    log.solve_pair(&rs[j], &cs[j]).value,
+                    want,
+                    &format!("log-domain vs dense ({ctx})"),
+                );
+                assert_close(
+                    inter_panel[j].value,
+                    want,
+                    &format!("interleaved vs dense ({ctx})"),
+                );
+                assert_close(
+                    pool_panel[j].value,
+                    want,
+                    &format!("executor vs dense ({ctx})"),
+                );
+            }
+        }
+    }
+}
+
+/// The underflow-degenerate regime: λ·max(M) far beyond e^x range, where
+/// the dense kernel is numerically diagonal. The dense engine
+/// auto-stabilizes, the log-domain backend is exact by construction, and
+/// the executor's auto router must pick the log-domain strategy — all
+/// three paths still agree to 1e-9. (The raw interleaved walk is
+/// excluded by design: its kernel is unusable here, which is exactly why
+/// the router exists.)
+#[test]
+fn degenerate_lambda_paths_agree() {
+    let lambda = 20_000.0;
+    for seed in 0..4u64 {
+        let (m, rs, cs) = workload(8, 4, 100 + seed);
+        assert!(
+            dense_kernel_degenerate(&m, lambda),
+            "seed {seed}: workload must underflow at lambda={lambda}"
+        );
+        let cfg = SinkhornConfig::fixed(lambda, 400);
+        let dense = SinkhornEngine::with_config(&m, cfg);
+        assert!(dense.is_stabilized());
+        let log = BackendKind::LogDomain.build(&m, cfg);
+        let mut pool = ShardedExecutor::auto(&m, cfg, 2);
+        assert_eq!(pool.kind(), BackendKind::LogDomain);
+
+        let r_refs: Vec<&Histogram> = rs.iter().collect();
+        let (pool_panel, _) = pool.solve_panel_paired(&r_refs, &cs);
+        for j in 0..cs.len() {
+            let want = dense.distance(&rs[j], &cs[j]).value;
+            assert!(want.is_finite() && want >= 0.0);
+            let out = dense.distance(&rs[j], &cs[j]);
+            assert!(out.stats.stabilized, "dense path must have stabilized");
+            assert_close(
+                log.solve_pair(&rs[j], &cs[j]).value,
+                want,
+                &format!("log-domain vs stabilized dense (seed={seed} j={j})"),
+            );
+            assert_close(
+                pool_panel[j].value,
+                want,
+                &format!("executor vs stabilized dense (seed={seed} j={j})"),
+            );
+        }
+    }
+}
+
+/// Sharding is invisible: for every backend kind, the executor's panel
+/// equals the same backend run sequentially, element by element.
+#[test]
+fn executor_is_transparent_for_every_kind() {
+    let (m, rs, cs) = workload(10, 13, 7);
+    let r_refs: Vec<&Histogram> = rs.iter().collect();
+    let cfg = SinkhornConfig::fixed(6.0, 120);
+    for kind in [
+        BackendKind::Dense,
+        BackendKind::LogDomain,
+        BackendKind::Interleaved,
+        BackendKind::Greenkhorn,
+        BackendKind::Exact,
+    ] {
+        let sequential = kind.build(&m, cfg).solve_panel_paired(&r_refs, &cs);
+        let mut pool = ShardedExecutor::new(&m, cfg, kind, 4);
+        let (sharded, reports) = pool.solve_panel_paired(&r_refs, &cs);
+        assert_eq!(sharded.len(), sequential.len(), "{kind}");
+        let attributed: usize = reports.iter().map(|s| s.queries).sum();
+        assert_eq!(attributed, cs.len(), "{kind}: shard accounting");
+        for (j, (a, b)) in sharded.iter().zip(&sequential).enumerate() {
+            assert!(
+                (a.value - b.value).abs() <= TOL * (1.0 + b.value.abs()),
+                "{kind} j={j}: sharded {} vs sequential {}",
+                a.value,
+                b.value
+            );
+        }
+    }
+}
+
+/// Convergence-driven (tolerance) configs land every backend on the same
+/// fixed point; Greenkhorn takes a different route (greedy coordinate
+/// updates) so it gets a looser — but still tight — band.
+#[test]
+fn converged_paths_agree() {
+    let tight = SinkhornConfig {
+        lambda: 7.0,
+        tolerance: 1e-12,
+        max_iterations: 300_000,
+        ..SinkhornConfig::converged(7.0)
+    };
+    for seed in 0..4u64 {
+        let (m, rs, cs) = workload(12, 3, 200 + seed);
+        let dense = SinkhornEngine::with_config(&m, tight);
+        let log = BackendKind::LogDomain.build(&m, tight);
+        let green = GreenkhornBackend::new(&m, tight);
+        for j in 0..cs.len() {
+            let want = dense.distance(&rs[j], &cs[j]).value;
+            let lg = log.solve_pair(&rs[j], &cs[j]).value;
+            assert!(
+                (lg - want).abs() <= 1e-8 * (1.0 + want),
+                "seed={seed} j={j}: log-domain {lg} vs dense {want}"
+            );
+            let gk = green.solve_pair(&rs[j], &cs[j]).value;
+            assert!(
+                (gk - want).abs() <= 1e-6 * (1.0 + want),
+                "seed={seed} j={j}: greenkhorn {gk} vs dense {want}"
+            );
+        }
+    }
+}
+
+/// Greenkhorn parity against the dense engine on spiky (Dirichlet)
+/// histograms — the workload the greedy rule is meant to like.
+#[test]
+fn greenkhorn_parity_on_spiky_histograms() {
+    let mut rng = seeded_rng(31);
+    let d = 14;
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let cfg = SinkhornConfig {
+        lambda: 9.0,
+        tolerance: 1e-11,
+        max_iterations: 300_000,
+        ..SinkhornConfig::converged(9.0)
+    };
+    let dense = SinkhornEngine::with_config(&m, cfg);
+    let green = GreenkhornBackend::new(&m, cfg);
+    for _ in 0..5 {
+        let r = Histogram::sample_dirichlet(d, 0.3, &mut rng);
+        let c = Histogram::sample_dirichlet(d, 0.3, &mut rng);
+        let want = dense.distance(&r, &c).value;
+        let out = green.solve_pair(&r, &c);
+        assert!(out.stats.converged, "greenkhorn must converge");
+        assert!(
+            (out.value - want).abs() <= 1e-6 * (1.0 + want),
+            "greenkhorn {} vs dense {want}",
+            out.value
+        );
+    }
+}

@@ -13,12 +13,17 @@ use std::time::Duration;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
+    if !dir.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts (run `make artifacts`)");
-        None
+        return None;
     }
+    // Artifacts may exist while the build has no PJRT backend linked
+    // (the default runtime::pjrt shim): skip politely rather than panic.
+    if let Err(e) = sinkhorn_rs::runtime::XlaRuntime::new(&dir) {
+        eprintln!("skipping: XLA runtime unavailable ({e})");
+        return None;
+    }
+    Some(dir)
 }
 
 fn service(dir: std::path::PathBuf, max_batch: usize, delay_ms: u64) -> DistanceService {
@@ -27,6 +32,7 @@ fn service(dir: std::path::PathBuf, max_batch: usize, delay_ms: u64) -> Distance
         batcher: BatcherConfig {
             max_batch,
             max_delay: Duration::from_millis(delay_ms),
+            ..BatcherConfig::default()
         },
         ..Default::default()
     })
@@ -141,14 +147,39 @@ fn warmup_precompiles_all_variants() {
 }
 
 #[test]
-fn bad_artifact_dir_fails_fast() {
+fn bad_artifact_dir_fails_fast_without_cpu_fallback() {
     let err = DistanceService::start(CoordinatorConfig {
         artifact_dir: Some(std::path::PathBuf::from("/nonexistent/artifacts")),
+        cpu_fallback: false,
         ..Default::default()
     })
     .err()
     .expect("must fail");
     assert!(err.to_string().contains("runtime failure"));
+}
+
+#[test]
+fn bad_artifact_dir_falls_back_to_cpu_by_default() {
+    // With cpu_fallback on (the default), an unusable artifact dir — or a
+    // build whose runtime::pjrt shim has no backend — must not prevent
+    // serving: the coordinator warns and runs CPU-only.
+    let svc = DistanceService::start(CoordinatorConfig {
+        artifact_dir: Some(std::path::PathBuf::from("/nonexistent/artifacts")),
+        ..Default::default()
+    })
+    .expect("service must start CPU-only");
+    let mut rng = seeded_rng(77);
+    let d = 10;
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), metric).unwrap();
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let c = Histogram::sample_uniform(d, &mut rng);
+    let res = svc
+        .distance(Query { metric: MetricId(0), lambda: 9.0, r, c })
+        .unwrap();
+    assert_eq!(res.engine, EngineKind::Cpu);
+    assert!(res.distance.is_finite() && res.distance > 0.0);
+    svc.shutdown();
 }
 
 #[test]

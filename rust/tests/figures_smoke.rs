@@ -1,6 +1,6 @@
 //! Integration: every figure harness runs end to end at smoke scale and
 //! reproduces the paper's qualitative *shape* (who wins, what is
-//! monotone) — the full-scale runs are recorded in EXPERIMENTS.md.
+//! monotone) — full-scale runs go through the `repro` CLI.
 
 use sinkhorn_rs::distances::ClassicalDistance;
 use sinkhorn_rs::exp::{fig2, fig3, fig4, fig5};

@@ -12,12 +12,17 @@ use sinkhorn_rs::sinkhorn::{SinkhornConfig, SinkhornEngine};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
+    if !dir.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts (run `make artifacts`)");
-        None
+        return None;
     }
+    // Artifacts may exist while the build has no PJRT backend linked
+    // (the default runtime::pjrt shim): skip politely rather than panic.
+    if let Err(e) = XlaRuntime::new(&dir) {
+        eprintln!("skipping: XLA runtime unavailable ({e})");
+        return None;
+    }
+    Some(dir)
 }
 
 #[test]
