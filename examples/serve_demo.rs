@@ -14,9 +14,10 @@
 
 use sinkhorn_rs::coordinator::{
     BatcherConfig, CoordinatorConfig, DistanceService, EngineKind, MetricId, Query,
+    WarmStartConfig,
 };
 use sinkhorn_rs::prelude::*;
-use sinkhorn_rs::sinkhorn::SinkhornConfig;
+use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -27,6 +28,9 @@ fn main() {
     }
 
     // Start the service with a 64-wide batcher and a 2 ms deadline.
+    // CPU-served shape classes get convergence control: per-worker
+    // warm-start stores (repeated query pairs re-converge in a couple of
+    // iterations) and geometric ε-scaling for cold high-λ solves.
     let service = DistanceService::start(CoordinatorConfig {
         artifact_dir: Some(artifact_dir),
         batcher: BatcherConfig {
@@ -34,6 +38,8 @@ fn main() {
             max_delay: Duration::from_millis(2),
             ..BatcherConfig::default()
         },
+        warm_start: Some(WarmStartConfig::default()),
+        anneal: LambdaSchedule::geometric(1.0),
         ..Default::default()
     })
     .expect("service start");
@@ -106,6 +112,29 @@ fn main() {
         served.distance,
         direct.value,
         (served.distance - direct.value).abs() / direct.value
+    );
+
+    // Warm-start demonstration: replay one CPU-served query (d=100 has no
+    // artifact) — the repeats hit the per-worker warm-start stores.
+    let r100 = Histogram::sample_uniform(100, &mut rng);
+    let c100 = Histogram::sample_uniform(100, &mut rng);
+    for _ in 0..4 {
+        service
+            .distance(Query {
+                metric: MetricId(1),
+                lambda: 9.0,
+                r: r100.clone(),
+                c: c100.clone(),
+            })
+            .unwrap();
+    }
+    let stats = service.stats().unwrap();
+    println!(
+        "warm-start stores after replaying one CPU query 4x: \
+         {} hits / {} misses (rate {:.2})",
+        stats.warm_hits,
+        stats.warm_misses,
+        stats.warm_hit_rate()
     );
     service.shutdown();
 }

@@ -1,0 +1,117 @@
+"""Freeze ``ref.py`` oracle outputs into golden JSON fixtures for Rust.
+
+Regenerates ``rust/tests/fixtures/ref_cases.json``: a handful of small,
+deeply converged Sinkhorn problems whose distances the Rust solvers
+(``log_domain::solve``, ``SinkhornEngine``) must reproduce to 1e-9. The
+cases are solved far past convergence so the recorded value is the fixed
+point itself, not an iteration-order-dependent stopping state — the Rust
+engine updates (v, u) per iteration while ``ref.py`` updates (u, v), so
+only the fixed point is comparable at that precision.
+
+Deterministic: histograms and ground metrics come from a seeded legacy
+``numpy.random.RandomState`` (bit-stable across NumPy versions). Run from
+anywhere::
+
+    python python/compile/kernels/gen_fixtures.py
+
+and commit the refreshed fixture if the oracle intentionally changed.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+
+try:
+    # The oracle runs on jax.numpy when JAX is present; fixtures must be
+    # full f64 (JAX defaults to f32), so flip x64 on before ref.py loads.
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+except ImportError:  # pragma: no cover - NumPy fallback is f64 already
+    pass
+
+_HERE = pathlib.Path(__file__).resolve()
+_SPEC = importlib.util.spec_from_file_location("sinkhorn_ref", _HERE.parent / "ref.py")
+ref = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(ref)
+
+FIXTURE_PATH = _HERE.parents[3] / "rust" / "tests" / "fixtures" / "ref_cases.json"
+
+# (name, d, lambda, zero_bins): kept small so the deep solves are instant
+# and the JSON stays reviewable.
+CASES = [
+    ("d3_lam2_uniformish", 3, 2.0, 0),
+    ("d4_lam5", 4, 5.0, 0),
+    ("d6_lam9", 6, 9.0, 0),
+    ("d8_lam9_sparse", 8, 9.0, 2),
+    ("d5_lam30_stiff", 5, 30.0, 0),
+    ("d8_lam14", 8, 14.0, 1),
+]
+
+ITERS = 6000
+# The fixture asserts 1e-9 agreement; require the oracle itself to have
+# settled two orders tighter than that.
+SETTLE_TOL = 1e-11
+
+
+def metric(rng: np.random.RandomState, d: int) -> np.ndarray:
+    """Symmetric zero-diagonal L1 ground metric over random planar points."""
+    pts = rng.rand(d, 2)
+    m = np.abs(pts[:, None, :] - pts[None, :, :]).sum(axis=-1)
+    np.fill_diagonal(m, 0.0)
+    return m
+
+
+def histogram(rng: np.random.RandomState, d: int, zeros: int) -> np.ndarray:
+    w = rng.dirichlet(np.ones(d))
+    for _ in range(zeros):
+        w[rng.randint(d)] = 0.0
+    if w.sum() <= 0.0:
+        w = np.ones(d)
+    return w / w.sum()
+
+
+def main() -> None:
+    rng = np.random.RandomState(2013)
+    cases = []
+    for name, d, lam, zeros in CASES:
+        m = metric(rng, d)
+        r = histogram(rng, d, zeros)
+        c = histogram(rng, d, zeros)
+        dist_half, err_half = ref.sinkhorn_distance(
+            m, lam, r[:, None], c[:, None], ITERS // 2
+        )
+        dist, err = ref.sinkhorn_distance(m, lam, r[:, None], c[:, None], ITERS)
+        settle = abs(float(dist[0]) - float(dist_half[0]))
+        assert settle < SETTLE_TOL, f"{name}: oracle not settled ({settle:.3e})"
+        cases.append(
+            {
+                "name": name,
+                "d": d,
+                "lambda": lam,
+                "iterations": ITERS,
+                "m": [float(x) for x in m.ravel()],
+                "r": [float(x) for x in r],
+                "c": [float(x) for x in c],
+                "distance": float(dist[0]),
+                "marginal_err": float(err),
+                "settle": settle,
+            }
+        )
+    doc = {
+        "version": 1,
+        "generator": "python/compile/kernels/gen_fixtures.py",
+        "oracle": "python/compile/kernels/ref.py sinkhorn_distance (f64)",
+        "cases": cases,
+    }
+    FIXTURE_PATH.parent.mkdir(parents=True, exist_ok=True)
+    FIXTURE_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {len(cases)} cases to {FIXTURE_PATH}")
+
+
+if __name__ == "__main__":
+    main()

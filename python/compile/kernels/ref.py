@@ -17,11 +17,20 @@ All functions are batched: ``r`` and ``c`` are (d, N) column stacks, so one
 call evaluates N independent regularized-transport problems (the paper's
 "compute the distance between r and a family of histograms C" vectorized
 form, Section 4.1).
+
+When JAX is unavailable the module falls back to NumPy (the two APIs are
+interchangeable for the operations used here). This keeps the oracle — and
+``gen_fixtures.py``, which freezes its outputs into the golden fixtures the
+Rust tests assert against — runnable on JAX-less machines, in full f64
+precision (JAX would need ``jax_enable_x64``).
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+try:
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - the JAX-less fixture-gen path
+    import numpy as jnp  # type: ignore[no-redef]
 
 
 def scaled_ratio(a, x, b):

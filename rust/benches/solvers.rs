@@ -5,6 +5,9 @@
 //!   stabilized path's overhead factor;
 //! * sequential vs sharded-thread-pool panel execution (the PR1
 //!   multi-core claim; writes `BENCH_PR1.json` at the crate root);
+//! * cold vs warm-started repeated-query panels and fixed-λ vs ε-scaled
+//!   cold solves (the PR2 convergence-control claim; writes
+//!   `BENCH_PR2.json` at the crate root);
 //! * Greenkhorn greedy updates vs full Sinkhorn sweeps;
 //! * independence-kernel fast path vs direct O(d²) evaluation;
 //! * the synthetic-digit renderer throughput.
@@ -17,12 +20,13 @@ use sinkhorn_rs::metric::{GridMetric, RandomMetric};
 use sinkhorn_rs::ot::EmdSolver;
 use sinkhorn_rs::simplex::{seeded_rng, Histogram};
 use sinkhorn_rs::sinkhorn::{
-    independence_distance, BatchSinkhorn, IndependenceKernel, SinkhornConfig,
-    SinkhornEngine,
+    independence_distance, log_domain, BatchSinkhorn, IndependenceKernel,
+    LambdaSchedule, SinkhornConfig, SinkhornEngine,
 };
 use sinkhorn_rs::util::bench::Bench;
 use sinkhorn_rs::util::json::Json;
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 fn main() {
     let bench = Bench { warmup: 1, max_samples: 9, budget_secs: 15.0 };
@@ -155,6 +159,132 @@ fn main() {
                 panic!("{msg}");
             }
             eprintln!("WARNING: {msg}");
+        }
+    }
+
+    // --- cold vs warm repeated-query panel + ε-scaling (the PR2 claim) ---
+    {
+        let d = 64;
+        let panel = 32;
+        let mut rng = seeded_rng(2024);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let rs_owned: Vec<Histogram> =
+            (0..panel).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let cs: Vec<Histogram> =
+            (0..panel).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let rs: Vec<&Histogram> = rs_owned.iter().collect();
+        let cfg = SinkhornConfig {
+            lambda: 9.0,
+            tolerance: 1e-8,
+            max_iterations: 50_000,
+            ..Default::default()
+        };
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut ex = ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, workers)
+            .with_warm_store(0, 9.0, 1024);
+
+        // Pass 1 populates the per-worker stores (all misses = cold);
+        // pass 2 replays the identical query panel (all hits = warm).
+        let t0 = Instant::now();
+        let (cold_out, cold_reports) = ex.solve_panel_paired(&rs, &cs);
+        let cold_wall = t0.elapsed();
+        let t1 = Instant::now();
+        let (warm_out, warm_reports) = ex.solve_panel_paired(&rs, &cs);
+        let warm_wall = t1.elapsed();
+
+        let cold_iters: usize = cold_out.iter().map(|o| o.stats.iterations).sum();
+        let warm_iters: usize = warm_out.iter().map(|o| o.stats.iterations).sum();
+        let hits: usize = warm_reports.iter().map(|s| s.warm_hits).sum();
+        let misses: usize = cold_reports.iter().map(|s| s.warm_misses).sum();
+        println!(
+            "cold_vs_warm_panel       d={d} n={panel} lambda=9 tol=1e-8: \
+             cold {cold_iters} iters ({:.1} ms), warm {warm_iters} iters \
+             ({:.1} ms), {hits}/{panel} hits",
+            cold_wall.as_secs_f64() * 1e3,
+            warm_wall.as_secs_f64() * 1e3,
+        );
+        // Deterministic, not timing-based: warm-started repeats must need
+        // strictly fewer iterations than the cold pass on the same panel.
+        assert_eq!(misses, panel, "pass 1 must be all-cold");
+        assert_eq!(hits, panel, "pass 2 must be all-warm");
+        assert!(
+            warm_iters < cold_iters,
+            "warm pass took {warm_iters} iterations vs cold {cold_iters}"
+        );
+
+        // ε-scaling on a slow-mixing (high-λ) cold solve, log-domain path.
+        let lam_hi = 60.0;
+        let hi_cfg = SinkhornConfig {
+            lambda: lam_hi,
+            tolerance: 1e-8,
+            max_iterations: 200_000,
+            ..Default::default()
+        };
+        let r0 = &rs_owned[0];
+        let c0 = &cs[0];
+        let cold_hi =
+            log_domain::solve(m.data(), d, lam_hi, &hi_cfg, r0.values(), c0.values());
+        let anneal_cfg =
+            SinkhornConfig { schedule: LambdaSchedule::geometric(2.0), ..hi_cfg };
+        let annealed = log_domain::solve(
+            m.data(), d, lam_hi, &anneal_cfg, r0.values(), c0.values(),
+        );
+        println!(
+            "anneal_high_lambda       d={d} lambda={lam_hi}: fixed {} iters, \
+             geometric(2.0) {} iters (values {:.6} / {:.6})",
+            cold_hi.stats.iterations,
+            annealed.stats.iterations,
+            cold_hi.value,
+            annealed.value,
+        );
+
+        let mut doc = BTreeMap::new();
+        let mut set = |k: &str, v: Json| {
+            doc.insert(k.to_string(), v);
+        };
+        set("bench", Json::String("cold_vs_warm_panel".into()));
+        set("status", Json::String("measured".into()));
+        set("d", Json::Number(d as f64));
+        set("panel", Json::Number(panel as f64));
+        set("lambda", Json::Number(9.0));
+        set("tolerance", Json::Number(1e-8));
+        set("workers", Json::Number(workers as f64));
+        set("backend", Json::String(BackendKind::Interleaved.as_str().into()));
+        set("cold_iterations", Json::Number(cold_iters as f64));
+        set("warm_iterations", Json::Number(warm_iters as f64));
+        set("warm_hits", Json::Number(hits as f64));
+        set("cold_wall_ns", Json::Number(cold_wall.as_nanos() as f64));
+        set("warm_wall_ns", Json::Number(warm_wall.as_nanos() as f64));
+        set(
+            "iteration_ratio",
+            Json::Number(cold_iters as f64 / warm_iters.max(1) as f64),
+        );
+        set("anneal_lambda", Json::Number(lam_hi));
+        set(
+            "anneal_fixed_iterations",
+            Json::Number(cold_hi.stats.iterations as f64),
+        );
+        set(
+            "anneal_scheduled_iterations",
+            Json::Number(annealed.stats.iterations as f64),
+        );
+        set(
+            "note",
+            Json::String(
+                "written by `cargo bench --bench solvers`; cold/warm = two \
+                 passes of the same query panel through a ShardedExecutor \
+                 with per-worker warm-start stores; anneal = log-domain \
+                 solve at high lambda, fixed vs geometric(2.0) schedule"
+                    .into(),
+            ),
+        );
+        drop(set);
+        let rendered = format!("{}\n", Json::Object(doc));
+        match std::fs::write("BENCH_PR2.json", &rendered) {
+            Ok(()) => println!("  -> recorded BENCH_PR2.json"),
+            Err(e) => eprintln!("  -> could not write BENCH_PR2.json: {e}"),
         }
     }
 

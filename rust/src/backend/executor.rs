@@ -16,7 +16,11 @@
 use super::{BackendKind, SolverBackend};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
-use crate::sinkhorn::{SinkhornConfig, SinkhornOutput};
+use crate::sinkhorn::{
+    fingerprint_pair, ScalingInit, SinkhornConfig, SinkhornOutput, WarmKey,
+    WarmStartStore,
+};
+use crate::F;
 use std::time::{Duration, Instant};
 
 /// What one worker did for one panel (returned per solve call so the
@@ -29,6 +33,11 @@ pub struct ShardReport {
     pub queries: usize,
     /// Wallclock the worker spent solving the shard.
     pub busy: Duration,
+    /// Queries seeded from the worker's warm-start store (0 when the
+    /// executor runs without one).
+    pub warm_hits: usize,
+    /// Queries that missed the warm-start store (0 without one).
+    pub warm_misses: usize,
 }
 
 /// Cumulative per-worker counters (also kept inside the executor for
@@ -41,6 +50,18 @@ pub struct WorkerStats {
     pub queries: u64,
     /// Total busy wallclock.
     pub busy: Duration,
+    /// Total warm-start store hits.
+    pub warm_hits: u64,
+    /// Total warm-start store misses.
+    pub warm_misses: u64,
+}
+
+/// Per-worker warm-start state: shared-nothing stores, one per worker,
+/// all keyed in the same `(metric, λ)` namespace.
+struct WarmShards {
+    stores: Vec<WarmStartStore>,
+    metric_key: u64,
+    lambda_bits: u64,
 }
 
 /// Thread-pool batch executor: `workers` backend instances of one
@@ -49,6 +70,7 @@ pub struct ShardedExecutor {
     backends: Vec<Box<dyn SolverBackend>>,
     kind: BackendKind,
     stats: Vec<WorkerStats>,
+    warm: Option<WarmShards>,
 }
 
 impl ShardedExecutor {
@@ -62,7 +84,31 @@ impl ShardedExecutor {
     ) -> Self {
         let workers = workers.max(1);
         let backends = (0..workers).map(|_| kind.build(metric, config)).collect();
-        Self { backends, kind, stats: vec![WorkerStats::default(); workers] }
+        Self { backends, kind, stats: vec![WorkerStats::default(); workers], warm: None }
+    }
+
+    /// Attach a per-worker [`WarmStartStore`] (capacity entries each):
+    /// every solve first consults its worker's store by
+    /// `(metric_key, λ, query fingerprint)` and every *converged* solve
+    /// deposits its scalings back. `metric_key` namespaces the keys (the
+    /// coordinator passes its `MetricId`; standalone users can pass 0).
+    pub fn with_warm_store(mut self, metric_key: u64, lambda: F, capacity: usize) -> Self {
+        let stores =
+            (0..self.backends.len()).map(|_| WarmStartStore::new(capacity)).collect();
+        self.warm = Some(WarmShards {
+            stores,
+            metric_key,
+            lambda_bits: lambda.to_bits(),
+        });
+        self
+    }
+
+    /// Total entries cached across all per-worker warm-start stores.
+    pub fn warm_entries(&self) -> usize {
+        self.warm
+            .as_ref()
+            .map(|w| w.stores.iter().map(|s| s.len()).sum())
+            .unwrap_or(0)
     }
 
     /// [`Self::new`] with the regime-appropriate default strategy
@@ -114,14 +160,25 @@ impl ShardedExecutor {
             return (Vec::new(), Vec::new());
         }
         let shards = self.backends.len().min(n);
+        let key_ns = self.warm.as_ref().map(|w| (w.metric_key, w.lambda_bits));
         if shards == 1 {
             // Degenerate pool (or single query): skip the spawn entirely.
             let t0 = Instant::now();
-            let out = self.backends[0].solve_panel_paired(rs, cs);
-            let report = ShardReport { worker: 0, queries: out.len(), busy: t0.elapsed() };
+            let store = self.warm.as_mut().map(|w| &mut w.stores[0]);
+            let (out, hits, misses) =
+                run_shard(&*self.backends[0], store, key_ns, rs, cs);
+            let report = ShardReport {
+                worker: 0,
+                queries: out.len(),
+                busy: t0.elapsed(),
+                warm_hits: hits,
+                warm_misses: misses,
+            };
             self.stats[0].panels += 1;
             self.stats[0].queries += report.queries as u64;
             self.stats[0].busy += report.busy;
+            self.stats[0].warm_hits += hits as u64;
+            self.stats[0].warm_misses += misses as u64;
             return (out, vec![report]);
         }
         // Contiguous near-equal ranges: the first n % shards shards take
@@ -135,28 +192,45 @@ impl ShardedExecutor {
             ranges.push(lo..lo + len);
             lo += len;
         }
+        // One optional store handle per worker, aligned with `backends`
+        // (split borrows: stores and backends are disjoint fields).
+        let stores: Vec<Option<&mut WarmStartStore>> = match self.warm.as_mut() {
+            Some(w) => w.stores.iter_mut().map(Some).collect(),
+            None => (0..self.backends.len()).map(|_| None).collect(),
+        };
 
         let mut outputs = Vec::with_capacity(n);
         let mut reports = Vec::with_capacity(shards);
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(shards);
-            for (worker, (backend, range)) in
-                self.backends.iter_mut().zip(ranges).enumerate()
+            for (worker, ((backend, store), range)) in self
+                .backends
+                .iter_mut()
+                .zip(stores)
+                .zip(ranges)
+                .enumerate()
             {
                 let rs_shard = &rs[range.clone()];
                 let cs_shard = &cs[range];
                 handles.push(scope.spawn(move || {
                     let t0 = Instant::now();
-                    let out = backend.solve_panel_paired(rs_shard, cs_shard);
-                    (worker, out, t0.elapsed())
+                    let (out, hits, misses) =
+                        run_shard(&**backend, store, key_ns, rs_shard, cs_shard);
+                    (worker, out, hits, misses, t0.elapsed())
                 }));
             }
             // Joining in spawn order concatenates shards back into the
             // original panel order.
             for handle in handles {
-                let (worker, out, busy) =
+                let (worker, out, warm_hits, warm_misses, busy) =
                     handle.join().expect("executor worker panicked");
-                reports.push(ShardReport { worker, queries: out.len(), busy });
+                reports.push(ShardReport {
+                    worker,
+                    queries: out.len(),
+                    busy,
+                    warm_hits,
+                    warm_misses,
+                });
                 outputs.extend(out);
             }
         });
@@ -165,9 +239,45 @@ impl ShardedExecutor {
             slot.panels += 1;
             slot.queries += report.queries as u64;
             slot.busy += report.busy;
+            slot.warm_hits += report.warm_hits as u64;
+            slot.warm_misses += report.warm_misses as u64;
         }
         (outputs, reports)
     }
+}
+
+/// Solve one worker's shard, consulting (and refilling) its warm-start
+/// store when one is attached. Returns (outputs, hits, misses).
+fn run_shard(
+    backend: &dyn SolverBackend,
+    store: Option<&mut WarmStartStore>,
+    key_ns: Option<(u64, u64)>,
+    rs: &[&Histogram],
+    cs: &[Histogram],
+) -> (Vec<SinkhornOutput>, usize, usize) {
+    let (store, (metric_key, lambda_bits)) = match (store, key_ns) {
+        (Some(store), Some(ns)) if backend.warm_startable() => (store, ns),
+        _ => return (backend.solve_panel_paired(rs, cs), 0, 0),
+    };
+    let keys: Vec<WarmKey> = rs
+        .iter()
+        .zip(cs)
+        .map(|(r, c)| WarmKey {
+            metric: metric_key,
+            lambda_bits,
+            fingerprint: fingerprint_pair(r, c),
+        })
+        .collect();
+    let inits: Vec<Option<ScalingInit>> = keys.iter().map(|k| store.get(k)).collect();
+    let hits = inits.iter().filter(|i| i.is_some()).count();
+    let misses = inits.len() - hits;
+    let out = backend.solve_panel_paired_init(rs, cs, &inits);
+    for (key, o) in keys.into_iter().zip(&out) {
+        if o.stats.converged && o.value.is_finite() {
+            store.insert(key, ScalingInit::from_output(o));
+        }
+    }
+    (out, hits, misses)
 }
 
 #[cfg(test)]
@@ -277,6 +387,61 @@ mod tests {
         let queries: u64 = stats.iter().map(|s| s.queries).sum();
         assert_eq!(queries, 16);
         assert!(stats.iter().all(|s| s.panels == 2));
+    }
+
+    #[test]
+    fn warm_store_hits_on_repeat_and_cuts_iterations() {
+        let (m, r, cs) = panel(16, 12, 6);
+        let cfg = SinkhornConfig {
+            lambda: 9.0,
+            tolerance: 1e-9,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let mut ex = ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, 3)
+            .with_warm_store(7, 9.0, 256);
+        let (cold, cold_reports) = ex.solve_panel(&r, &cs);
+        assert!(cold.iter().all(|o| o.stats.converged));
+        assert_eq!(cold_reports.iter().map(|s| s.warm_misses).sum::<usize>(), 12);
+        assert_eq!(cold_reports.iter().map(|s| s.warm_hits).sum::<usize>(), 0);
+        assert_eq!(ex.warm_entries(), 12);
+
+        // Identical panel again: every query hits its worker's store.
+        let (warm, warm_reports) = ex.solve_panel(&r, &cs);
+        assert_eq!(warm_reports.iter().map(|s| s.warm_hits).sum::<usize>(), 12);
+        assert_eq!(warm_reports.iter().map(|s| s.warm_misses).sum::<usize>(), 0);
+        let cold_iters: usize = cold.iter().map(|o| o.stats.iterations).sum();
+        let warm_iters: usize = warm.iter().map(|o| o.stats.iterations).sum();
+        assert!(
+            warm_iters < cold_iters,
+            "warm pass took {warm_iters} iterations vs cold {cold_iters}"
+        );
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a.value - b.value).abs() < 1e-7 * (1.0 + b.value));
+        }
+        // Cumulative per-worker stats carry the same counts.
+        let stats = ex.stats();
+        assert_eq!(stats.iter().map(|s| s.warm_hits).sum::<u64>(), 12);
+        assert_eq!(stats.iter().map(|s| s.warm_misses).sum::<u64>(), 12);
+    }
+
+    #[test]
+    fn warm_store_capacity_is_bounded() {
+        let (m, r, _) = panel(10, 0, 7);
+        let mut rng = seeded_rng(70);
+        let cfg = SinkhornConfig {
+            lambda: 7.0,
+            tolerance: 1e-8,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let mut ex = ShardedExecutor::new(&m, cfg, BackendKind::Dense, 1)
+            .with_warm_store(0, 7.0, 4);
+        for _ in 0..10 {
+            let c = Histogram::sample_uniform(10, &mut rng);
+            ex.solve_panel(&r, std::slice::from_ref(&c));
+        }
+        assert!(ex.warm_entries() <= 4, "LRU bound violated: {}", ex.warm_entries());
     }
 
     #[test]

@@ -22,7 +22,9 @@
 use super::{BackendKind, SolverBackend};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
-use crate::sinkhorn::{log_domain, SinkhornConfig, SinkhornOutput, SinkhornStats};
+use crate::sinkhorn::{
+    log_domain, ScalingInit, SinkhornConfig, SinkhornOutput, SinkhornStats,
+};
 use crate::F;
 
 /// Greedy-scaling solver bound to (M, λ); precomputes K and Kᵀ.
@@ -62,13 +64,31 @@ impl GreenkhornBackend {
         self.degenerate
     }
 
-    fn solve_greedy(&self, r: &[F], c: &[F]) -> SinkhornOutput {
+    fn solve_greedy(&self, r: &[F], c: &[F], init: Option<&ScalingInit>) -> SinkhornOutput {
         let d = self.d;
         let cfg = &self.config;
 
-        // Scalings and incrementally maintained products.
-        let mut u = vec![1.0 / d as F; d];
-        let mut v = vec![1.0 / d as F; d];
+        // Scalings: a warm start seeds both sides; a cold start runs the
+        // ε-scaling prefix (in the dense scaling domain, like the engine)
+        // and derives v from the carried u against the final kernel.
+        let (mut u, mut v, prefix) = match init {
+            Some(seed) => {
+                assert_eq!(seed.u.len(), d, "warm-start dimension mismatch");
+                assert_eq!(seed.v.len(), d, "warm-start dimension mismatch");
+                (seed.u.clone(), seed.v.clone(), 0)
+            }
+            None => {
+                let mut u = vec![1.0 / d as F; d];
+                let prefix = crate::sinkhorn::dense_anneal_prefix(
+                    &self.m, d, cfg.lambda, &cfg.schedule, r, c, &mut u,
+                );
+                let mut v = vec![1.0 / d as F; d];
+                if prefix > 0 {
+                    crate::sinkhorn::kernel_ratio(&self.kt, &u, c, &mut v, d);
+                }
+                (u, v, prefix)
+            }
+        };
         // kv[i] = (K v)_i, ktu[j] = (Kᵀ u)_j.
         let mut kv = vec![0.0; d];
         let mut ktu = vec![0.0; d];
@@ -153,8 +173,10 @@ impl GreenkhornBackend {
             }
         }
         // Report in sweep units so iteration counts compare across
-        // backends (d greedy updates ≈ one full Sinkhorn iteration).
-        stats.iterations = updates.div_euclid(d.max(1))
+        // backends (d greedy updates ≈ one full Sinkhorn iteration); the
+        // anneal prefix already runs in full-iteration units.
+        stats.iterations = prefix
+            + updates.div_euclid(d.max(1))
             + usize::from(updates % d.max(1) != 0);
 
         // d = sum_i u_i * ((K ∘ M) v)_i — same read-off as the engine.
@@ -182,19 +204,29 @@ impl SolverBackend for GreenkhornBackend {
     }
 
     fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
+        self.solve_pair_init(r, c, None)
+    }
+
+    fn solve_pair_init(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: Option<&ScalingInit>,
+    ) -> SinkhornOutput {
         assert_eq!(r.dim(), self.d, "source dimension mismatch");
         assert_eq!(c.dim(), self.d, "target dimension mismatch");
         if self.degenerate {
-            return log_domain::solve(
+            return log_domain::solve_init(
                 &self.m,
                 self.d,
                 self.config.lambda,
                 &self.config,
                 r.values(),
                 c.values(),
+                init,
             );
         }
-        self.solve_greedy(r.values(), c.values())
+        self.solve_greedy(r.values(), c.values(), init)
     }
 }
 
@@ -306,6 +338,44 @@ mod tests {
             .solve_pair(&r, &c);
         assert!(out.stats.iterations <= 15);
         assert!(out.value.is_finite());
+    }
+
+    #[test]
+    fn warm_start_agrees_and_saves_sweeps() {
+        let mut rng = seeded_rng(9);
+        let d = 10;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let backend = GreenkhornBackend::new(&m, tight(7.0));
+        let cold = backend.solve_pair(&r, &c);
+        assert!(cold.stats.converged);
+        let seed = ScalingInit::from_output(&cold);
+        let warm = backend.solve_pair_init(&r, &c, Some(&seed));
+        assert!(warm.stats.converged);
+        assert!((warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value));
+        assert!(warm.stats.iterations <= cold.stats.iterations);
+    }
+
+    #[test]
+    fn annealed_matches_cold() {
+        use crate::sinkhorn::LambdaSchedule;
+        let mut rng = seeded_rng(10);
+        let d = 10;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let cold = GreenkhornBackend::new(&m, tight(10.0)).solve_pair(&r, &c);
+        let annealed_cfg =
+            SinkhornConfig { schedule: LambdaSchedule::geometric(1.0), ..tight(10.0) };
+        let annealed = GreenkhornBackend::new(&m, annealed_cfg).solve_pair(&r, &c);
+        assert!(annealed.stats.converged);
+        assert!(
+            (annealed.value - cold.value).abs() < 1e-7 * (1.0 + cold.value),
+            "annealed {} vs cold {}",
+            annealed.value,
+            cold.value
+        );
     }
 
     #[test]

@@ -27,8 +27,8 @@ use crate::metric::CostMatrix;
 use crate::ot::EmdSolver;
 use crate::simplex::Histogram;
 use crate::sinkhorn::{
-    log_domain, BatchSinkhorn, SinkhornConfig, SinkhornEngine, SinkhornOutput,
-    SinkhornStats,
+    log_domain, BatchSinkhorn, ScalingInit, SinkhornConfig, SinkhornEngine,
+    SinkhornOutput, SinkhornStats,
 };
 use crate::F;
 
@@ -54,6 +54,30 @@ pub trait SolverBackend: Send {
     /// remain programming errors and may assert.
     fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput;
 
+    /// Whether this strategy actually consumes initial scalings. The
+    /// [`ShardedExecutor`] skips warm-store lookups and inserts entirely
+    /// for backends that do not (e.g. the exact simplex, whose
+    /// `solve_pair_init` default discards the seed) — otherwise every
+    /// repeat query would pay fingerprint/clone/insert costs and report a
+    /// healthy hit rate with zero effect on iteration counts.
+    fn warm_startable(&self) -> bool {
+        true
+    }
+
+    /// [`Self::solve_pair`] seeded with an initial scaling pair (a warm
+    /// start from a [`crate::sinkhorn::WarmStartStore`]). The default
+    /// ignores the seed — correct for any backend, since a warm start
+    /// only accelerates convergence, never changes the fixed point.
+    fn solve_pair_init(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: Option<&ScalingInit>,
+    ) -> SinkhornOutput {
+        let _ = init;
+        self.solve_pair(r, c)
+    }
+
     /// One source against a panel of targets C = [c_1 … c_N]
     /// (Algorithm 1's vectorized form). Default: per-pair loop.
     fn solve_panel(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
@@ -68,6 +92,26 @@ pub trait SolverBackend: Send {
     ) -> Vec<SinkhornOutput> {
         assert_eq!(rs.len(), cs.len(), "paired panel size mismatch");
         rs.iter().zip(cs).map(|(r, c)| self.solve_pair(r, c)).collect()
+    }
+
+    /// [`Self::solve_panel_paired`] with per-query warm starts:
+    /// `inits[j]` seeds pair j (an empty slice means all-cold).
+    fn solve_panel_paired_init(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[Option<ScalingInit>],
+    ) -> Vec<SinkhornOutput> {
+        if inits.is_empty() {
+            return self.solve_panel_paired(rs, cs);
+        }
+        assert_eq!(rs.len(), cs.len(), "paired panel size mismatch");
+        assert_eq!(inits.len(), cs.len(), "warm-start slice size mismatch");
+        rs.iter()
+            .zip(cs)
+            .zip(inits)
+            .map(|((r, c), init)| self.solve_pair_init(r, c, init.as_ref()))
+            .collect()
     }
 }
 
@@ -183,6 +227,15 @@ impl SolverBackend for DenseBackend {
     fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
         self.engine.distance(r, c)
     }
+
+    fn solve_pair_init(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: Option<&ScalingInit>,
+    ) -> SinkhornOutput {
+        self.engine.distance_init(r, c, init)
+    }
 }
 
 /// Log-domain stabilized updates behind the trait — numerically exact at
@@ -210,15 +263,25 @@ impl SolverBackend for LogDomainBackend {
     }
 
     fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
+        self.solve_pair_init(r, c, None)
+    }
+
+    fn solve_pair_init(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: Option<&ScalingInit>,
+    ) -> SinkhornOutput {
         assert_eq!(r.dim(), self.d, "source dimension mismatch");
         assert_eq!(c.dim(), self.d, "target dimension mismatch");
-        log_domain::solve(
+        log_domain::solve_init(
             &self.m,
             self.d,
             self.config.lambda,
             &self.config,
             r.values(),
             c.values(),
+            init,
         )
     }
 }
@@ -249,6 +312,21 @@ impl SolverBackend for InterleavedBackend {
         out.pop().expect("one output per target")
     }
 
+    fn solve_pair_init(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: Option<&ScalingInit>,
+    ) -> SinkhornOutput {
+        let inits = [init.cloned()];
+        let mut out = self.batch.distances_paired_init(
+            &[r],
+            std::slice::from_ref(c),
+            &inits,
+        );
+        out.pop().expect("one output per target")
+    }
+
     fn solve_panel(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
         self.batch.distances(r, cs)
     }
@@ -259,6 +337,15 @@ impl SolverBackend for InterleavedBackend {
         cs: &[Histogram],
     ) -> Vec<SinkhornOutput> {
         self.batch.distances_paired(rs, cs)
+    }
+
+    fn solve_panel_paired_init(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[Option<ScalingInit>],
+    ) -> Vec<SinkhornOutput> {
+        self.batch.distances_paired_init(rs, cs, inits)
     }
 }
 
@@ -293,6 +380,11 @@ impl SolverBackend for ExactBackend {
 
     fn dim(&self) -> usize {
         self.metric.dim()
+    }
+
+    fn warm_startable(&self) -> bool {
+        // The simplex solves from scratch; scaling seeds mean nothing.
+        false
     }
 
     fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {

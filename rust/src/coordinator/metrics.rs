@@ -30,11 +30,22 @@ pub struct WorkerSnapshot {
     pub queries: u64,
     /// Busy wallclock, microseconds.
     pub busy_us: u64,
+    /// Warm-start store hits (0 unless warm-start serving is on).
+    pub warm_hits: u64,
+    /// Warm-start store misses (0 unless warm-start serving is on).
+    pub warm_misses: u64,
 }
 
 impl Stats {
     /// Record one shard executed by `worker` (resizes the table to fit).
-    pub fn record_worker(&mut self, worker: usize, queries: usize, busy: Duration) {
+    pub fn record_worker(
+        &mut self,
+        worker: usize,
+        queries: usize,
+        busy: Duration,
+        warm_hits: usize,
+        warm_misses: usize,
+    ) {
         if worker >= self.workers.len() {
             self.workers.resize(worker + 1, WorkerSnapshot::default());
         }
@@ -42,6 +53,8 @@ impl Stats {
         slot.panels += 1;
         slot.queries += queries as u64;
         slot.busy_us += busy.as_micros().min(u64::MAX as u128) as u64;
+        slot.warm_hits += warm_hits as u64;
+        slot.warm_misses += warm_misses as u64;
     }
 
     pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
@@ -83,6 +96,8 @@ impl Stats {
             max_latency_us: self.lat_max_us,
             p99_latency_us: self.quantile_us(0.99),
             p50_latency_us: self.quantile_us(0.50),
+            warm_hits: self.workers.iter().map(|w| w.warm_hits).sum(),
+            warm_misses: self.workers.iter().map(|w| w.warm_misses).sum(),
             workers: self.workers.clone(),
         }
     }
@@ -118,11 +133,25 @@ pub struct StatsSnapshot {
     pub max_latency_us: u64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
+    /// Total warm-start store hits across workers (0 unless warm-start
+    /// serving is on).
+    pub warm_hits: u64,
+    /// Total warm-start store misses across workers.
+    pub warm_misses: u64,
     /// Per-worker executor occupancy (empty until a CPU panel ran).
     pub workers: Vec<WorkerSnapshot>,
 }
 
 impl StatsSnapshot {
+    /// Warm-start hit rate in [0, 1]; 0.0 before any lookup happened.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_hits + self.warm_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.warm_hits as f64 / total as f64
+    }
+
     /// Mean worker occupancy: busy time of each worker relative to the
     /// busiest one (1.0 = perfectly balanced pool). Zero when no CPU
     /// panel has run yet.
@@ -162,6 +191,15 @@ impl std::fmt::Display for StatsSnapshot {
                 write!(f, "{i}:q={} busy_us={}", w.queries, w.busy_us)?;
             }
             write!(f, "] balance={:.2}", self.worker_balance())?;
+        }
+        if self.warm_hits + self.warm_misses > 0 {
+            write!(
+                f,
+                " warm(hits={}, misses={}, rate={:.2})",
+                self.warm_hits,
+                self.warm_misses,
+                self.warm_hit_rate()
+            )?;
         }
         Ok(())
     }
@@ -211,9 +249,9 @@ mod tests {
     #[test]
     fn worker_accounting() {
         let mut s = Stats::default();
-        s.record_worker(0, 4, Duration::from_micros(100));
-        s.record_worker(2, 2, Duration::from_micros(50));
-        s.record_worker(0, 4, Duration::from_micros(100));
+        s.record_worker(0, 4, Duration::from_micros(100), 0, 4);
+        s.record_worker(2, 2, Duration::from_micros(50), 1, 1);
+        s.record_worker(0, 4, Duration::from_micros(100), 3, 1);
         let snap = s.snapshot();
         assert_eq!(snap.workers.len(), 3);
         assert_eq!(snap.workers[0].panels, 2);
@@ -221,10 +259,26 @@ mod tests {
         assert_eq!(snap.workers[0].busy_us, 200);
         assert_eq!(snap.workers[1], WorkerSnapshot::default());
         assert_eq!(snap.workers[2].queries, 2);
+        assert_eq!(snap.workers[0].warm_hits, 3);
+        assert_eq!(snap.workers[0].warm_misses, 5);
+        assert_eq!(snap.warm_hits, 4);
+        assert_eq!(snap.warm_misses, 6);
+        assert!((snap.warm_hit_rate() - 0.4).abs() < 1e-12);
         // balance = (200 + 0 + 50) / (200 * 3)
         assert!((snap.worker_balance() - 250.0 / 600.0).abs() < 1e-12);
         let line = snap.to_string();
         assert!(line.contains("workers=["));
         assert!(line.contains("balance="));
+        assert!(line.contains("warm(hits=4, misses=6"));
+    }
+
+    #[test]
+    fn warm_counters_absent_without_lookups() {
+        let mut s = Stats::default();
+        s.record_worker(0, 2, Duration::from_micros(10), 0, 0);
+        let snap = s.snapshot();
+        assert_eq!(snap.warm_hits + snap.warm_misses, 0);
+        assert_eq!(snap.warm_hit_rate(), 0.0);
+        assert!(!snap.to_string().contains("warm("));
     }
 }

@@ -31,6 +31,7 @@ pub use metrics::{StatsSnapshot, WorkerSnapshot};
 pub use service::{DistanceService, ServiceError};
 
 use crate::simplex::Histogram;
+use crate::sinkhorn::LambdaSchedule;
 use crate::F;
 
 /// Identifier of a registered ground metric.
@@ -99,8 +100,53 @@ pub struct CoordinatorConfig {
     /// interleaved batch walk normally, log-domain when e^{−λM}
     /// underflows.
     pub cpu_backend: Option<crate::backend::BackendKind>,
+    /// Warm-start serving: when set, every CPU executor attaches one
+    /// [`crate::sinkhorn::WarmStartStore`] per worker, keyed by
+    /// `(MetricId, λ, query fingerprint)`, and CPU solves switch from the
+    /// fixed `cpu_iterations` budget to convergence-checked mode, capped
+    /// by the warm-start config's own `max_iterations` (not
+    /// `cpu_iterations`, whose fixed-budget default of 20 could never
+    /// converge — and only converged solves populate the stores).
+    /// `None` (the default) serves exactly as before.
+    pub warm_start: Option<WarmStartConfig>,
+    /// ε-scaling schedule threaded into every CPU solve config. With the
+    /// default [`LambdaSchedule::Fixed`] nothing anneals; a
+    /// [`LambdaSchedule::Geometric`] accelerates cold solves in high-λ
+    /// (slow-mixing) shape classes. Warm-started solves skip the anneal
+    /// prefix automatically. Note the prefix runs *in addition to*
+    /// `cpu_iterations` (stats report the true total): in fixed-budget
+    /// serving a schedule adds up to stages×stage_iterations per cold
+    /// solve, so it pays off in convergence-checked (warm-start) mode or
+    /// high-λ classes, not on tight fixed budgets. Malformed schedules
+    /// (λ₀ ≤ 0 or factor ≤ 1) are rejected by `DistanceService::start`.
+    pub anneal: LambdaSchedule,
     /// Dynamic batching parameters.
     pub batcher: BatcherConfig,
+}
+
+/// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
+///
+/// Only *converged* solves are cached, so warm-start mode carries its
+/// own convergence iteration cap instead of borrowing `cpu_iterations`
+/// (whose fixed-budget serving default of 20 could never converge — the
+/// stores would silently stay empty forever).
+#[derive(Debug, Clone, Copy)]
+pub struct WarmStartConfig {
+    /// LRU capacity (entries) of each per-worker store. One entry holds
+    /// two d-vectors, so memory is ~2·d·8 bytes per entry per worker.
+    pub capacity: usize,
+    /// Convergence tolerance (‖Δu‖₂) for warm-start-mode CPU solves.
+    pub tolerance: F,
+    /// Iteration cap for warm-start-mode CPU solves. Size it for cold
+    /// convergence (thousands); warm hits terminate in a few iterations
+    /// regardless.
+    pub max_iterations: usize,
+}
+
+impl Default for WarmStartConfig {
+    fn default() -> Self {
+        Self { capacity: 4096, tolerance: 1e-8, max_iterations: 10_000 }
+    }
 }
 
 impl Default for CoordinatorConfig {
@@ -114,6 +160,8 @@ impl Default for CoordinatorConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             cpu_backend: None,
+            warm_start: None,
+            anneal: LambdaSchedule::Fixed,
             batcher: BatcherConfig::default(),
         }
     }

@@ -33,6 +33,7 @@ pub enum ServiceError {
     UnknownMetric(MetricId),
     DimensionMismatch { got: usize, want: usize },
     NoBackend(usize),
+    InvalidConfig(String),
     Runtime(String),
     Stopped,
 }
@@ -42,6 +43,9 @@ impl std::fmt::Display for ServiceError {
         match self {
             ServiceError::UnknownMetric(id) => {
                 write!(f, "metric {id:?} is not registered")
+            }
+            ServiceError::InvalidConfig(msg) => {
+                write!(f, "invalid coordinator config: {msg}")
             }
             ServiceError::DimensionMismatch { got, want } => write!(
                 f,
@@ -100,6 +104,21 @@ impl DistanceService {
     /// *inside* the engine thread; the init outcome is reported back over
     /// a one-shot channel before this returns.
     pub fn start(config: CoordinatorConfig) -> Result<Self, ServiceError> {
+        // Fail fast on a malformed anneal schedule: the schedule is only
+        // consulted inside the engine thread at the first cold CPU solve,
+        // where its asserts would kill the thread (and with it every
+        // in-flight query) long after startup looked healthy.
+        if let crate::sinkhorn::LambdaSchedule::Geometric { lambda0, factor, .. } =
+            config.anneal
+        {
+            if lambda0 <= 0.0 || !lambda0.is_finite() || factor <= 1.0 || !factor.is_finite()
+            {
+                return Err(ServiceError::InvalidConfig(format!(
+                    "anneal schedule needs lambda0 > 0 and factor > 1 \
+                     (got lambda0={lambda0}, factor={factor})"
+                )));
+            }
+        }
         let (tx, rx) = channel();
         let (init_tx, init_rx) = channel::<Result<(), ServiceError>>();
         let handle = std::thread::Builder::new()
@@ -373,16 +392,36 @@ impl EngineThread {
         // CPU path: the panel shards across the thread-pool executor for
         // this shape class. Each worker owns a private backend instance
         // (interleaved batch walk in the dense regime, log-domain when
-        // e^{−λM} underflows, or whatever `cpu_backend` pins).
-        let cfg = SinkhornConfig::fixed(lambda, self.config.cpu_iterations);
+        // e^{−λM} underflows, or whatever `cpu_backend` pins) — plus, in
+        // warm-start mode, a private store of converged scalings.
+        let mut cfg = SinkhornConfig::fixed(lambda, self.config.cpu_iterations);
+        cfg.schedule = self.config.anneal;
+        if let Some(ws) = self.config.warm_start {
+            // Convergence-checked under the warm-start config's own cap:
+            // warm hits terminate in a handful of iterations, and cold
+            // solves get enough headroom to actually converge (only
+            // converged solves populate the stores).
+            cfg.tolerance = ws.tolerance;
+            cfg.max_iterations = ws.max_iterations;
+            cfg.check_every = 1;
+        }
         let workers = self.config.cpu_workers;
         let pinned = self.config.cpu_backend;
+        let warm = self.config.warm_start;
         let executor = self
             .executors
             .entry((class.metric, lambda.to_bits()))
-            .or_insert_with(|| match pinned {
-                Some(kind) => ShardedExecutor::new(&metric, cfg, kind, workers),
-                None => ShardedExecutor::auto(&metric, cfg, workers),
+            .or_insert_with(|| {
+                let ex = match pinned {
+                    Some(kind) => ShardedExecutor::new(&metric, cfg, kind, workers),
+                    None => ShardedExecutor::auto(&metric, cfg, workers),
+                };
+                match warm {
+                    Some(ws) => {
+                        ex.with_warm_store(class.metric.0 as u64, lambda, ws.capacity)
+                    }
+                    None => ex,
+                }
             });
         let rs: Vec<&crate::simplex::Histogram> =
             jobs.iter().map(|j| &j.query.r).collect();
@@ -391,7 +430,13 @@ impl EngineThread {
         let (outputs, reports) = executor.solve_panel_paired(&rs, &cs);
         let dists: Vec<F> = outputs.into_iter().map(|o| o.value).collect();
         for report in &reports {
-            self.stats.record_worker(report.worker, report.queries, report.busy);
+            self.stats.record_worker(
+                report.worker,
+                report.queries,
+                report.busy,
+                report.warm_hits,
+                report.warm_misses,
+            );
         }
         self.stats.record_batch(size, false);
         self.respond_all(jobs, dists, EngineKind::Cpu, size);
@@ -682,6 +727,64 @@ mod tests {
         for (a, b) in answers[0].iter().zip(&answers[1]) {
             assert!((a - b).abs() < 1e-12, "sharding changed a result: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn malformed_anneal_schedule_is_rejected_at_start() {
+        use crate::sinkhorn::LambdaSchedule;
+        for schedule in [
+            LambdaSchedule::Geometric { lambda0: 0.0, factor: 3.0, stage_iterations: 30 },
+            LambdaSchedule::Geometric { lambda0: 1.0, factor: 1.0, stage_iterations: 30 },
+            LambdaSchedule::Geometric { lambda0: -2.0, factor: 0.5, stage_iterations: 1 },
+        ] {
+            let mut config = CoordinatorConfig::cpu_only();
+            config.anneal = schedule;
+            let err = DistanceService::start(config).unwrap_err();
+            assert!(
+                matches!(err, ServiceError::InvalidConfig(_)),
+                "expected InvalidConfig, got {err}"
+            );
+        }
+        // A well-formed schedule still starts.
+        let mut config = CoordinatorConfig::cpu_only();
+        config.anneal = LambdaSchedule::geometric(1.0);
+        DistanceService::start(config).unwrap().shutdown();
+    }
+
+    #[test]
+    fn warm_start_serving_hits_on_repeats() {
+        use super::super::WarmStartConfig;
+        let mut config = CoordinatorConfig::cpu_only();
+        config.warm_start = Some(WarmStartConfig {
+            capacity: 64,
+            tolerance: 1e-9,
+            ..WarmStartConfig::default()
+        });
+        config.cpu_workers = 2;
+        config.batcher = BatcherConfig {
+            max_batch: 1,
+            max_delay: Duration::from_millis(1),
+            ..BatcherConfig::default()
+        };
+        let svc = DistanceService::start(config).unwrap();
+        let mut rng = seeded_rng(11);
+        let m = RandomMetric::new(12).sample(&mut rng);
+        svc.register_metric(MetricId(0), m.clone()).unwrap();
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        let query = Query { metric: MetricId(0), lambda: 9.0, r, c };
+        // Sequential identical queries: the first misses and populates,
+        // the repeats hit.
+        let first = svc.distance(query.clone()).unwrap();
+        let second = svc.distance(query.clone()).unwrap();
+        let third = svc.distance(query).unwrap();
+        assert!((second.distance - first.distance).abs() < 1e-7 * (1.0 + first.distance));
+        assert!((third.distance - first.distance).abs() < 1e-7 * (1.0 + first.distance));
+        let snap = svc.stats().unwrap();
+        assert!(snap.warm_misses >= 1, "first query must miss: {snap}");
+        assert!(snap.warm_hits >= 1, "repeats must hit: {snap}");
+        assert!(snap.to_string().contains("warm("));
+        svc.shutdown();
     }
 
     #[test]

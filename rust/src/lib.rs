@@ -70,6 +70,7 @@ pub mod prelude {
     pub use crate::backend::{BackendKind, ShardedExecutor, SolverBackend};
     pub use crate::coordinator::{
         BatcherConfig, CoordinatorConfig, DistanceService, Query, QueryResult,
+        WarmStartConfig,
     };
     pub use crate::data::{DigitClass, SyntheticDigits};
     pub use crate::distances::{ClassicalDistance, KernelBuilder};
@@ -78,7 +79,8 @@ pub mod prelude {
     pub use crate::rng::Rng;
     pub use crate::simplex::{seeded_rng, Histogram};
     pub use crate::sinkhorn::{
-        independence_distance, IndependenceKernel, SinkhornConfig, SinkhornEngine,
+        independence_distance, IndependenceKernel, LambdaSchedule, ScalingInit,
+        SinkhornConfig, SinkhornEngine, WarmStartStore,
     };
     pub use crate::svm::{MulticlassSvm, SvmConfig};
     pub use crate::F;

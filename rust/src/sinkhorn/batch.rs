@@ -14,7 +14,7 @@
 //! Layout: U, V are (d, N) row-major panels so the inner loop runs
 //! contiguously over the batch dimension.
 
-use super::{SinkhornConfig, SinkhornOutput, SinkhornStats};
+use super::{panel_ratio, ScalingInit, SinkhornConfig, SinkhornOutput, SinkhornStats};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::F;
@@ -64,12 +64,31 @@ impl BatchSinkhorn {
         rs: &[&Histogram],
         cs: &[Histogram],
     ) -> Vec<SinkhornOutput> {
+        self.distances_paired_init(rs, cs, &[])
+    }
+
+    /// [`Self::distances_paired`] with a per-column warm start: `inits[j]`
+    /// seeds column j's scaling (None starts that column uniform). Pass an
+    /// empty slice for an all-cold panel. The ε-scaling prefix runs only
+    /// when every column is cold — warm columns are already (near) fixed
+    /// points at λ★ and annealing them would discard exactly the structure
+    /// the warm start carries.
+    pub fn distances_paired_init(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[Option<ScalingInit>],
+    ) -> Vec<SinkhornOutput> {
         let d = self.d;
         let n = cs.len();
         assert_eq!(rs.len(), n, "paired batch size mismatch");
         if n == 0 {
             return Vec::new();
         }
+        assert!(
+            inits.is_empty() || inits.len() == n,
+            "warm-start slice size mismatch"
+        );
         for (k, (r, c)) in rs.iter().zip(cs).enumerate() {
             assert_eq!(r.dim(), d, "pair {k}: source dimension mismatch");
             assert_eq!(c.dim(), d, "pair {k}: target dimension mismatch");
@@ -87,6 +106,30 @@ impl BatchSinkhorn {
 
         let cfg = &self.config;
         let mut u = vec![1.0 / d as F; d * n];
+        let mut any_warm = false;
+        for (j, seed) in inits.iter().enumerate() {
+            if let Some(seed) = seed {
+                assert_eq!(seed.u.len(), d, "pair {j}: warm-start dimension mismatch");
+                any_warm = true;
+                for i in 0..d {
+                    u[i * n + j] = seed.u[i];
+                }
+            }
+        }
+        let prefix = if any_warm {
+            0
+        } else {
+            super::anneal_prefix_panel(
+                &self.m,
+                d,
+                self.config.lambda,
+                &self.config.schedule,
+                &r_panel,
+                &c_panel,
+                &mut u,
+                n,
+            )
+        };
         let mut u_prev = vec![0.0; d * n];
         let mut v = vec![0.0; d * n];
         let mut stats = SinkhornStats { last_delta: F::INFINITY, ..Default::default() };
@@ -119,7 +162,7 @@ impl BatchSinkhorn {
                 }
             }
         }
-        stats.iterations = iter;
+        stats.iterations = prefix + iter;
 
         // Distances: d_j = sum_i u_ij * ((K∘M) v)_ij, fused rowwise.
         let mut dist = vec![0.0; n];
@@ -153,31 +196,7 @@ impl BatchSinkhorn {
             })
             .collect()
     }
-}
 
-/// out = num ./ (mat · x) over (d, n) panels: one pass over `mat` updates
-/// every batch column (the K-traffic amortization).
-#[inline]
-fn panel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usize, n: usize) {
-    // out = mat · x, accumulated row by row over x's rows.
-    for i in 0..d {
-        let mrow = &mat[i * d..(i + 1) * d];
-        let orow = &mut out[i * n..(i + 1) * n];
-        orow.iter_mut().for_each(|o| *o = 0.0);
-        for (kk, &mik) in mrow.iter().enumerate() {
-            if mik == 0.0 {
-                continue;
-            }
-            let xrow = &x[kk * n..(kk + 1) * n];
-            for (o, &xv) in orow.iter_mut().zip(xrow) {
-                *o += mik * xv;
-            }
-        }
-        let nrow = &num[i * n..(i + 1) * n];
-        for (o, &nv) in orow.iter_mut().zip(nrow) {
-            *o = if *o > 0.0 { nv / *o } else { 0.0 };
-        }
-    }
 }
 
 #[cfg(test)]
@@ -259,6 +278,69 @@ mod tests {
             for (got_c, want_c) in col.iter().zip(c.values()) {
                 assert!((got_c - want_c).abs() < 1e-5);
             }
+        }
+    }
+
+    #[test]
+    fn warm_inits_cut_panel_iterations() {
+        let mut rng = seeded_rng(21);
+        let d = 16;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let cfg = SinkhornConfig {
+            lambda: 9.0,
+            tolerance: 1e-9,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let batch = BatchSinkhorn::new(&m, cfg);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let cs: Vec<Histogram> =
+            (0..4).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let r_refs: Vec<&Histogram> = (0..4).map(|_| &r).collect();
+        let cold = batch.distances_paired(&r_refs, &cs);
+        assert!(cold[0].stats.converged);
+        let inits: Vec<Option<crate::sinkhorn::ScalingInit>> =
+            cold.iter().map(|o| Some(crate::sinkhorn::ScalingInit::from_output(o))).collect();
+        let warm = batch.distances_paired_init(&r_refs, &cs, &inits);
+        assert!(warm[0].stats.converged);
+        assert!(
+            warm[0].stats.iterations < cold[0].stats.iterations,
+            "warm panel took {} iterations vs cold {}",
+            warm[0].stats.iterations,
+            cold[0].stats.iterations
+        );
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a.value - b.value).abs() < 1e-7 * (1.0 + b.value));
+        }
+    }
+
+    #[test]
+    fn annealed_panel_matches_cold_panel() {
+        use crate::sinkhorn::LambdaSchedule;
+        let mut rng = seeded_rng(22);
+        let d = 12;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let base = SinkhornConfig {
+            lambda: 14.0,
+            tolerance: 1e-9,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let cs: Vec<Histogram> =
+            (0..3).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let cold = BatchSinkhorn::new(&m, base).distances(&r, &cs);
+        let annealed_cfg =
+            SinkhornConfig { schedule: LambdaSchedule::geometric(1.5), ..base };
+        let annealed = BatchSinkhorn::new(&m, annealed_cfg).distances(&r, &cs);
+        assert!(annealed[0].stats.converged);
+        for (a, b) in annealed.iter().zip(&cold) {
+            assert!(
+                (a.value - b.value).abs() < 1e-7 * (1.0 + b.value),
+                "annealed {} vs cold {}",
+                a.value,
+                b.value
+            );
         }
     }
 

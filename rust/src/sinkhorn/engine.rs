@@ -10,8 +10,7 @@
 //!   iteration regardless of batch width (the vectorization the paper
 //!   credits for GPGPU speed, recreated in cache terms).
 
-use super::SinkhornConfig;
-use crate::linalg::dot;
+use super::{kernel_ratio, ScalingInit, SinkhornConfig};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::F;
@@ -107,23 +106,52 @@ impl SinkhornEngine {
 
     /// d_M^λ(r, c) for a single pair.
     pub fn distance(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
+        self.distance_init(r, c, None)
+    }
+
+    /// d_M^λ(r, c) seeded with an initial scaling pair (a warm start).
+    /// `None` starts cold: from the uniform scaling, through the
+    /// ε-scaling prefix when the config carries a
+    /// [`super::LambdaSchedule::Geometric`] schedule. A warm start skips
+    /// the anneal prefix — it is already (near) a fixed point at λ.
+    pub fn distance_init(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: Option<&ScalingInit>,
+    ) -> SinkhornOutput {
         assert_eq!(r.dim(), self.d, "source dimension mismatch");
         assert_eq!(c.dim(), self.d, "target dimension mismatch");
         if self.degenerate {
-            return super::log_domain::solve(
-                &self.m, self.d, self.lambda, &self.config, r.values(), c.values(),
+            return super::log_domain::solve_init(
+                &self.m, self.d, self.lambda, &self.config, r.values(), c.values(), init,
             );
         }
-        self.solve_dense(r.values(), c.values())
+        self.solve_dense(r.values(), c.values(), init)
     }
 
     /// Batched d_M^λ(r, c_j) for a family of targets (Algorithm 1's
     /// vectorized form). Returns one output per target.
+    ///
+    /// The batch shares more than a cache-hot K: every member has the same
+    /// source r, so each converged solve's row scaling u is carried as the
+    /// next target's warm start (the fixed point is unique up to a scalar,
+    /// so the carried seed changes only the iteration count, not the
+    /// limit). The carry applies in convergence-checked mode; fixed-budget
+    /// configs stay cold so their results remain bit-identical to
+    /// [`Self::distance`].
     pub fn distances_batch(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
-        // Correct and simple: iterate the batch; the dense kernel K is hot
-        // in cache across consecutive solves. (A fully interleaved batch
-        // walk is what the XLA runtime path provides.)
-        cs.iter().map(|c| self.distance(r, c)).collect()
+        let reuse = self.config.check_every != usize::MAX;
+        let mut carry: Option<ScalingInit> = None;
+        cs.iter()
+            .map(|c| {
+                let out = self.distance_init(r, c, carry.as_ref());
+                if reuse && out.stats.converged {
+                    carry = Some(ScalingInit::from_output(&out));
+                }
+                out
+            })
+            .collect()
     }
 
     /// The full transport plan P^λ = diag(u) K diag(v) (dense d×d).
@@ -153,12 +181,27 @@ impl SinkhornEngine {
         (p, out)
     }
 
-    fn solve_dense(&self, r: &[F], c: &[F]) -> SinkhornOutput {
+    fn solve_dense(&self, r: &[F], c: &[F], init: Option<&ScalingInit>) -> SinkhornOutput {
         let d = self.d;
         let cfg = &self.config;
         // x is the paper's iterate (x = 1./u); we track u directly and
         // measure the stopping criterion on u (equivalent up to scaling).
-        let mut u = vec![1.0 / d as F; d];
+        // The column scaling v is recomputed from u at the top of every
+        // iteration, so only u needs seeding.
+        let mut u = match init {
+            Some(seed) => {
+                assert_eq!(seed.u.len(), d, "warm-start dimension mismatch");
+                seed.u.clone()
+            }
+            None => vec![1.0 / d as F; d],
+        };
+        let prefix = if init.is_none() {
+            super::dense_anneal_prefix(
+                &self.m, d, self.lambda, &cfg.schedule, r, c, &mut u,
+            )
+        } else {
+            0
+        };
         let mut u_prev = vec![0.0; d];
         let mut v = vec![0.0; d];
         let mut stats = SinkhornStats { last_delta: F::INFINITY, ..Default::default() };
@@ -186,13 +229,13 @@ impl SinkhornEngine {
                 }
                 if !stats.last_delta.is_finite() {
                     // Underflow blow-up: retry in log domain.
-                    return super::log_domain::solve(
-                        &self.m, d, self.lambda, cfg, r, c,
+                    return super::log_domain::solve_init(
+                        &self.m, d, self.lambda, cfg, r, c, init,
                     );
                 }
             }
         }
-        stats.iterations = iter;
+        stats.iterations = prefix + iter;
 
         // d = sum(u .* ((K .* M) v)) -- evaluated rowwise without
         // materializing K∘M.
@@ -207,15 +250,6 @@ impl SinkhornEngine {
             value += u[i] * acc;
         }
         SinkhornOutput { value, u, v, stats }
-    }
-}
-
-/// out = num ./ (mat · x), guarding 0/0 -> 0 (zero-mass bins stay inert).
-#[inline]
-fn kernel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usize) {
-    for i in 0..d {
-        let den = dot(&mat[i * d..(i + 1) * d], x);
-        out[i] = if den > 0.0 { num[i] / den } else { 0.0 };
     }
 }
 
@@ -304,16 +338,123 @@ mod tests {
 
     #[test]
     fn batch_matches_single() {
+        // Convergence-checked mode: the batch warm-carries the row scaling
+        // across targets, so agreement is to the converged fixed point
+        // (not bit-identical stopping states). Tight tolerance makes the
+        // fixed point sharp.
         let (m, r, _) = setup(14, 5);
         let mut rng = seeded_rng(99);
         let cs: Vec<Histogram> =
             (0..6).map(|_| Histogram::sample_uniform(14, &mut rng)).collect();
-        let engine = SinkhornEngine::new(&m, 7.0);
+        let engine = SinkhornEngine::with_config(
+            &m,
+            SinkhornConfig {
+                lambda: 7.0,
+                tolerance: 1e-11,
+                max_iterations: 200_000,
+                ..Default::default()
+            },
+        );
         let batch = engine.distances_batch(&r, &cs);
         for (c, out) in cs.iter().zip(&batch) {
             let single = engine.distance(&r, c);
-            assert!((single.value - out.value).abs() < 1e-12);
+            assert!(
+                (single.value - out.value).abs() < 1e-7 * (1.0 + single.value.abs()),
+                "batch {} vs single {}",
+                out.value,
+                single.value
+            );
         }
+    }
+
+    #[test]
+    fn fixed_budget_batch_is_bit_identical_to_single() {
+        // Fixed-budget configs must not warm-carry: the serving path
+        // depends on batch == one-by-one exactly.
+        let (m, r, _) = setup(12, 15);
+        let mut rng = seeded_rng(101);
+        let cs: Vec<Histogram> =
+            (0..5).map(|_| Histogram::sample_uniform(12, &mut rng)).collect();
+        let engine = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 25));
+        let batch = engine.distances_batch(&r, &cs);
+        for (c, out) in cs.iter().zip(&batch) {
+            let single = engine.distance(&r, c);
+            assert!((single.value - out.value).abs() < 1e-15);
+            assert_eq!(out.stats.iterations, 25);
+        }
+    }
+
+    #[test]
+    fn batch_warm_carry_cuts_iterations_on_repeats() {
+        // Three identical targets: solves 2 and 3 start at solve 1's
+        // fixed point and must converge almost immediately.
+        let (m, r, c) = setup(16, 16);
+        let engine = SinkhornEngine::with_config(
+            &m,
+            SinkhornConfig {
+                lambda: 9.0,
+                tolerance: 1e-10,
+                max_iterations: 200_000,
+                ..Default::default()
+            },
+        );
+        let batch = engine.distances_batch(&r, &[c.clone(), c.clone(), c]);
+        assert!(batch.iter().all(|o| o.stats.converged));
+        assert!(
+            batch[1].stats.iterations < batch[0].stats.iterations,
+            "warm-carried repeat took {} iterations vs cold {}",
+            batch[1].stats.iterations,
+            batch[0].stats.iterations
+        );
+        assert!(batch[2].stats.iterations < batch[0].stats.iterations);
+        for out in &batch[1..] {
+            assert!((out.value - batch[0].value).abs() < 1e-7 * (1.0 + batch[0].value));
+        }
+    }
+
+    #[test]
+    fn warm_start_matches_cold_value() {
+        let (m, r, c) = setup(14, 17);
+        let engine = SinkhornEngine::with_config(
+            &m,
+            SinkhornConfig {
+                lambda: 8.0,
+                tolerance: 1e-10,
+                max_iterations: 200_000,
+                ..Default::default()
+            },
+        );
+        let cold = engine.distance(&r, &c);
+        assert!(cold.stats.converged);
+        let warm = engine.distance_init(&r, &c, Some(&ScalingInit::from_output(&cold)));
+        assert!(warm.stats.converged);
+        assert!((warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()));
+        assert!(warm.stats.iterations <= cold.stats.iterations);
+    }
+
+    #[test]
+    fn annealed_schedule_matches_fixed_schedule() {
+        use crate::sinkhorn::LambdaSchedule;
+        let (m, r, c) = setup(12, 18);
+        let base = SinkhornConfig {
+            lambda: 12.0,
+            tolerance: 1e-10,
+            max_iterations: 200_000,
+            ..Default::default()
+        };
+        let cold = SinkhornEngine::with_config(&m, base).distance(&r, &c);
+        let annealed_cfg =
+            SinkhornConfig { schedule: LambdaSchedule::geometric(1.0), ..base };
+        let engine = SinkhornEngine::with_config(&m, annealed_cfg);
+        assert!(!engine.is_stabilized());
+        let annealed = engine.distance(&r, &c);
+        assert!(annealed.stats.converged);
+        assert!(
+            (annealed.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()),
+            "annealed {} vs cold {}",
+            annealed.value,
+            cold.value
+        );
     }
 
     #[test]

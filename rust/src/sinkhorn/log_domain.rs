@@ -15,7 +15,7 @@
 //! The engine ([`super::SinkhornEngine`]) auto-routes here when it detects
 //! underflow; it is also the reference for large-λ Fig. 3 points.
 
-use super::{SinkhornConfig, SinkhornOutput, SinkhornStats};
+use super::{LambdaSchedule, ScalingInit, SinkhornConfig, SinkhornOutput, SinkhornStats};
 use crate::F;
 
 /// Solve one pair in the log domain. `m` is the row-major cost matrix.
@@ -27,14 +27,48 @@ pub fn solve(
     r: &[F],
     c: &[F],
 ) -> SinkhornOutput {
+    solve_init(m, d, lambda, cfg, r, c, None)
+}
+
+/// [`solve`] seeded with an initial scaling pair. A warm start enters as
+/// potentials f = log u (the g side is recomputed from f at the top of
+/// every iteration) and skips the ε-scaling prefix; a cold start runs the
+/// prefix when the config carries a [`LambdaSchedule::Geometric`].
+pub fn solve_init(
+    m: &[F],
+    d: usize,
+    lambda: F,
+    cfg: &SinkhornConfig,
+    r: &[F],
+    c: &[F],
+    init: Option<&ScalingInit>,
+) -> SinkhornOutput {
     let neg = F::NEG_INFINITY;
     let log_r: Vec<F> = r.iter().map(|&x| if x > 0.0 { x.ln() } else { neg }).collect();
     let log_c: Vec<F> = c.iter().map(|&x| if x > 0.0 { x.ln() } else { neg }).collect();
 
-    // f = log u, g = log v; init u = 1/d.
-    let mut f = vec![-(d as F).ln(); d];
-    let mut f_prev = vec![0.0; d];
+    // f = log u, g = log v; init u = 1/d (or the warm start's potential).
+    // Only the f side of a warm start matters: g is recomputed from f at
+    // the top of every iteration before it is ever read.
+    let mut f;
+    let prefix;
+    match init {
+        Some(seed) => {
+            assert_eq!(seed.u.len(), d, "warm-start dimension mismatch");
+            f = seed
+                .u
+                .iter()
+                .map(|&x| if x > 0.0 { x.ln() } else { neg })
+                .collect();
+            prefix = 0;
+        }
+        None => {
+            f = vec![-(d as F).ln(); d];
+            prefix = anneal_prefix_log(m, d, lambda, &cfg.schedule, &log_r, &log_c, &mut f);
+        }
+    }
     let mut g = vec![0.0; d];
+    let mut f_prev = vec![0.0; d];
     // Scratch for LSE rows.
     let mut buf = vec![0.0; d];
 
@@ -47,22 +81,9 @@ pub fn solve(
     let mut iter = 0;
     while iter < cfg.max_iterations {
         iter += 1;
-        // g_j = log c_j - LSE_i(-lam m_ij + f_i)   (column reduction)
-        for j in 0..d {
-            for (i, b) in buf.iter_mut().enumerate() {
-                *b = -lambda * m[i * d + j] + f[i];
-            }
-            g[j] = if log_c[j] == neg { neg } else { log_c[j] - lse(&buf) };
-        }
-        // f_i = log r_i - LSE_j(-lam m_ij + g_j)   (row reduction)
+        update_g(m, d, lambda, &f, &log_c, &mut g, &mut buf);
         std::mem::swap(&mut f, &mut f_prev);
-        for i in 0..d {
-            let row = &m[i * d..(i + 1) * d];
-            for (j, b) in buf.iter_mut().enumerate() {
-                *b = -lambda * row[j] + g[j];
-            }
-            f[i] = if log_r[i] == neg { neg } else { log_r[i] - lse(&buf) };
-        }
+        update_f(m, d, lambda, &g, &log_r, &mut f, &mut buf);
 
         let check = cfg.check_every != usize::MAX && iter % cfg.check_every == 0;
         if check {
@@ -80,7 +101,7 @@ pub fn solve(
             }
         }
     }
-    stats.iterations = iter;
+    stats.iterations = prefix + iter;
 
     // d = sum_ij m_ij * exp(f_i - lam m_ij + g_j).
     let mut value = 0.0;
@@ -103,6 +124,88 @@ pub fn solve(
         u: f.iter().map(|&x| exp0(x)).collect(),
         v: g.iter().map(|&x| exp0(x)).collect(),
         stats,
+    }
+}
+
+/// Run the ε-scaling prefix in the log domain: a few LSE iterations at
+/// each stage λ_s, with the potential transferred between stages by
+/// fixing the dual α = f/λ — in log space `f ← (f − max f)·ratio` (the
+/// max-subtraction mirrors [`super::transfer_panel`]'s renormalization
+/// and keeps the carried potential centered). Evolves `f` in place and
+/// returns the iterations consumed; `f` comes back at the λ★ scale.
+fn anneal_prefix_log(
+    m: &[F],
+    d: usize,
+    lambda_star: F,
+    schedule: &LambdaSchedule,
+    log_r: &[F],
+    log_c: &[F],
+    f: &mut [F],
+) -> usize {
+    let stages = schedule.prefix_stages(lambda_star);
+    if stages.is_empty() {
+        return 0;
+    }
+    let per_stage = schedule.stage_iterations();
+    let mut g = vec![0.0; d];
+    let mut buf = vec![0.0; d];
+    let mut prev: Option<F> = None;
+    let mut iters = 0;
+    for &lam_s in &stages {
+        if let Some(lp) = prev {
+            transfer_potential(f, lam_s / lp);
+        }
+        for _ in 0..per_stage {
+            update_g(m, d, lam_s, f, log_c, &mut g, &mut buf);
+            update_f(m, d, lam_s, &g, log_r, f, &mut buf);
+        }
+        iters += per_stage;
+        prev = Some(lam_s);
+    }
+    if let Some(lp) = prev {
+        transfer_potential(f, lambda_star / lp);
+    }
+    iters
+}
+
+/// One g half-iteration: g_j = log c_j − LSE_i(−λ m_ij + f_i) (column
+/// reduction). Shared by the main loop and the ε-scaling prefix so the
+/// update rule lives in exactly one place.
+#[inline]
+fn update_g(m: &[F], d: usize, lambda: F, f: &[F], log_c: &[F], g: &mut [F], buf: &mut [F]) {
+    let neg = F::NEG_INFINITY;
+    for j in 0..d {
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = -lambda * m[i * d + j] + f[i];
+        }
+        g[j] = if log_c[j] == neg { neg } else { log_c[j] - lse(buf) };
+    }
+}
+
+/// One f half-iteration: f_i = log r_i − LSE_j(−λ m_ij + g_j) (row
+/// reduction).
+#[inline]
+fn update_f(m: &[F], d: usize, lambda: F, g: &[F], log_r: &[F], f: &mut [F], buf: &mut [F]) {
+    let neg = F::NEG_INFINITY;
+    for i in 0..d {
+        let row = &m[i * d..(i + 1) * d];
+        for (j, b) in buf.iter_mut().enumerate() {
+            *b = -lambda * row[j] + g[j];
+        }
+        f[i] = if log_r[i] == neg { neg } else { log_r[i] - lse(buf) };
+    }
+}
+
+/// Log-space scaling transfer: `f ← (f − max f)·ratio`, −∞ staying −∞.
+fn transfer_potential(f: &mut [F], ratio: F) {
+    let mx = f.iter().cloned().filter(|x| x.is_finite()).fold(F::NEG_INFINITY, F::max);
+    if !mx.is_finite() {
+        return;
+    }
+    for x in f.iter_mut() {
+        if x.is_finite() {
+            *x = (*x - mx) * ratio;
+        }
     }
 }
 
@@ -178,6 +281,57 @@ mod tests {
         assert!(out.value > 0.0);
         assert_eq!(out.u[2], 0.0);
         assert_eq!(out.v[0], 0.0);
+    }
+
+    #[test]
+    fn warm_start_agrees_and_converges_faster() {
+        let mut rng = seeded_rng(31);
+        let d = 12;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let cfg = SinkhornConfig {
+            lambda: 40.0,
+            tolerance: 1e-10,
+            max_iterations: 200_000,
+            ..Default::default()
+        };
+        let cold = solve(m.data(), d, 40.0, &cfg, r.values(), c.values());
+        assert!(cold.stats.converged);
+        let seed = ScalingInit::from_output(&cold);
+        let warm =
+            solve_init(m.data(), d, 40.0, &cfg, r.values(), c.values(), Some(&seed));
+        assert!(warm.stats.converged);
+        assert!((warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value));
+        assert!(warm.stats.iterations < cold.stats.iterations);
+    }
+
+    #[test]
+    fn annealed_agrees_with_cold_at_high_lambda() {
+        let mut rng = seeded_rng(32);
+        let d = 10;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let base = SinkhornConfig {
+            lambda: 80.0,
+            tolerance: 1e-10,
+            max_iterations: 200_000,
+            ..Default::default()
+        };
+        let cold = solve(m.data(), d, 80.0, &base, r.values(), c.values());
+        assert!(cold.stats.converged);
+        let annealed_cfg =
+            SinkhornConfig { schedule: LambdaSchedule::geometric(2.0), ..base };
+        let annealed =
+            solve(m.data(), d, 80.0, &annealed_cfg, r.values(), c.values());
+        assert!(annealed.stats.converged);
+        assert!(
+            (annealed.value - cold.value).abs() < 1e-7 * (1.0 + cold.value),
+            "annealed {} vs cold {}",
+            annealed.value,
+            cold.value
+        );
     }
 
     #[test]

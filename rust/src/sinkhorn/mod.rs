@@ -19,11 +19,13 @@ pub mod batch;
 mod engine;
 pub mod independence;
 pub mod log_domain;
+pub mod warm;
 
 pub use alpha::{AlphaConfig, AlphaOutput, AlphaSinkhorn};
 pub use batch::BatchSinkhorn;
 pub use engine::{SinkhornEngine, SinkhornOutput, SinkhornStats};
 pub use independence::{independence_distance, IndependenceKernel};
+pub use warm::{fingerprint_pair, WarmCounters, WarmKey, WarmStartStore};
 
 use crate::F;
 
@@ -44,6 +46,10 @@ pub struct SinkhornConfig {
     pub check_every: usize,
     /// Switch to log-domain updates when exp(−λ·max(M)) would underflow.
     pub auto_stabilize: bool,
+    /// ε-scaling schedule: anneal λ upward through prefix stages before
+    /// the main loop runs at [`Self::lambda`]. [`LambdaSchedule::Fixed`]
+    /// (the default) recovers the classic single-λ iteration exactly.
+    pub schedule: LambdaSchedule,
 }
 
 impl Default for SinkhornConfig {
@@ -54,8 +60,233 @@ impl Default for SinkhornConfig {
             max_iterations: 10_000,
             check_every: 1,
             auto_stabilize: true,
+            schedule: LambdaSchedule::Fixed,
         }
     }
+}
+
+/// ε-scaling (λ-annealing) schedule.
+///
+/// Sinkhorn's fixed point mixes slowly at large λ (the kernel K = e^{−λM}
+/// is nearly diagonal, so mass moves one neighborhood per iteration).
+/// ε-scaling solves a short sequence of *easier* problems first: a few
+/// iterations at λ₀, then λ₀·factor, …, carrying the scaling across
+/// stages, until the target λ★ is reached and the normal convergence
+/// loop finishes the job. The carried scaling is transferred between
+/// stages by fixing the dual potentials α = log(u)/λ, i.e.
+/// `u ← u^(λ_next/λ_prev)` (renormalized so the stopping criterion keeps
+/// its scale), the standard transfer in Peyré & Cuturi §4.2.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum LambdaSchedule {
+    /// No annealing: run every iteration at the target λ.
+    #[default]
+    Fixed,
+    /// Geometric annealing λ₀ → λ★: prefix stages at
+    /// λ₀, λ₀·factor, λ₀·factor², … (strictly below λ★), each running
+    /// `stage_iterations` fixed-point iterations.
+    Geometric {
+        /// First (smallest) stage λ. Must be positive.
+        lambda0: F,
+        /// Multiplicative step between stages. Must exceed 1.
+        factor: F,
+        /// Fixed-point iterations spent per prefix stage.
+        stage_iterations: usize,
+    },
+}
+
+impl LambdaSchedule {
+    /// A geometric schedule with the usual ×3 step and a 30-iteration
+    /// stage budget.
+    pub fn geometric(lambda0: F) -> Self {
+        LambdaSchedule::Geometric { lambda0, factor: 3.0, stage_iterations: 30 }
+    }
+
+    /// The prefix stage λ values for a target λ★ (strictly increasing,
+    /// all `< lambda_star`; empty for [`Self::Fixed`] or when λ₀ ≥ λ★).
+    pub fn prefix_stages(&self, lambda_star: F) -> Vec<F> {
+        match *self {
+            LambdaSchedule::Fixed => Vec::new(),
+            LambdaSchedule::Geometric { lambda0, factor, .. } => {
+                assert!(lambda0 > 0.0, "schedule lambda0 must be positive");
+                assert!(factor > 1.0, "schedule factor must exceed 1");
+                let mut stages = Vec::new();
+                let mut lam = lambda0;
+                // 64 stages spans 1e30+ of dynamic range at factor ≈ 3;
+                // the cap only guards against pathological factors.
+                while lam < lambda_star && stages.len() < 64 {
+                    stages.push(lam);
+                    lam *= factor;
+                }
+                stages
+            }
+        }
+    }
+
+    /// Iterations spent per prefix stage (0 for [`Self::Fixed`]).
+    pub fn stage_iterations(&self) -> usize {
+        match *self {
+            LambdaSchedule::Fixed => 0,
+            LambdaSchedule::Geometric { stage_iterations, .. } => stage_iterations,
+        }
+    }
+}
+
+/// An initial scaling pair (u, v) seeding a solve — typically a previous
+/// converged solution served from a [`WarmStartStore`]. Dense solvers use
+/// it directly; the log-domain path converts to potentials (f, g) =
+/// (log u, log v) with zero-mass bins mapping to −∞.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingInit {
+    /// Row scaling (support-aligned with r).
+    pub u: Vec<F>,
+    /// Column scaling (support-aligned with c).
+    pub v: Vec<F>,
+}
+
+impl ScalingInit {
+    /// Capture a solve's converged scalings as a future warm start.
+    pub fn from_output(out: &SinkhornOutput) -> Self {
+        Self { u: out.u.clone(), v: out.v.clone() }
+    }
+
+    /// Log-domain potentials (f, g) = (log u, log v); zeros map to −∞.
+    pub fn potentials(&self) -> (Vec<F>, Vec<F>) {
+        let ln0 = |x: &F| if *x > 0.0 { x.ln() } else { F::NEG_INFINITY };
+        (self.u.iter().map(ln0).collect(), self.v.iter().map(ln0).collect())
+    }
+}
+
+/// out = num ./ (mat · x), guarding 0/0 -> 0 (zero-mass bins stay inert).
+/// Shared by the dense engine, the anneal prefix and the Greenkhorn
+/// backend's derived-scaling setup.
+#[inline]
+pub(crate) fn kernel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usize) {
+    for i in 0..d {
+        let den = crate::linalg::dot(&mat[i * d..(i + 1) * d], x);
+        out[i] = if den > 0.0 { num[i] / den } else { 0.0 };
+    }
+}
+
+/// out = num ./ (mat · x) over (d, n) column-stacked, row-major panels:
+/// one pass over `mat` updates every column (the K-traffic amortization
+/// of [`BatchSinkhorn`]). n = 1 is exactly [`kernel_ratio`] up to
+/// accumulation order.
+#[inline]
+pub(crate) fn panel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usize, n: usize) {
+    // out = mat · x, accumulated row by row over x's rows.
+    for i in 0..d {
+        let mrow = &mat[i * d..(i + 1) * d];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.iter_mut().for_each(|o| *o = 0.0);
+        for (kk, &mik) in mrow.iter().enumerate() {
+            if mik == 0.0 {
+                continue;
+            }
+            let xrow = &x[kk * n..(kk + 1) * n];
+            for (o, &xv) in orow.iter_mut().zip(xrow) {
+                *o += mik * xv;
+            }
+        }
+        let nrow = &num[i * n..(i + 1) * n];
+        for (o, &nv) in orow.iter_mut().zip(nrow) {
+            *o = if *o > 0.0 { nv / *o } else { 0.0 };
+        }
+    }
+}
+
+/// Column-wise transfer of a (d, n) scaling panel from λ_prev to
+/// λ_next = ratio·λ_prev by fixing the dual potential α = log(u)/λ:
+/// `u_j ← (u_j/max u_j)^ratio` per column. The max-normalization first
+/// keeps every entry in [0, 1] (no overflow at ratio > 1) and re-anchors
+/// the scale so the absolute ‖Δu‖ stopping criterion stays meaningful;
+/// it is free because (s·u, v/s) describes the same transport plan for
+/// any s > 0.
+pub(crate) fn transfer_panel(u: &mut [F], d: usize, n: usize, ratio: F) {
+    for j in 0..n {
+        let mut mx = 0.0;
+        for i in 0..d {
+            let x = u[i * n + j];
+            if x.is_finite() {
+                mx = F::max(mx, x);
+            }
+        }
+        if mx <= 0.0 {
+            continue;
+        }
+        for i in 0..d {
+            let scaled = u[i * n + j] / mx;
+            u[i * n + j] = if scaled > 0.0 { scaled.powf(ratio) } else { 0.0 };
+        }
+    }
+}
+
+/// Run the ε-scaling prefix of `schedule` toward λ★ over a (d, n)
+/// column-stacked scaling panel, evolving `u` in place (the column
+/// scaling v is recomputed from u at the top of every Sinkhorn
+/// iteration, so only u needs carrying). Returns the fixed-point
+/// iterations consumed; `u` comes back expressed at the λ★ scale, ready
+/// to seed the main loop. Stage kernels are rematerialized per call
+/// (O(stages·d²) exp — about one extra iteration-equivalent per stage,
+/// amortized across all n columns on the batch path); cold solves are
+/// exactly where that cost is repaid by the shorter main loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn anneal_prefix_panel(
+    m: &[F],
+    d: usize,
+    lambda_star: F,
+    schedule: &LambdaSchedule,
+    r_panel: &[F],
+    c_panel: &[F],
+    u: &mut [F],
+    n: usize,
+) -> usize {
+    let stages = schedule.prefix_stages(lambda_star);
+    if stages.is_empty() {
+        return 0;
+    }
+    let per_stage = schedule.stage_iterations();
+    let mut k = vec![0.0; d * d];
+    let mut kt = vec![0.0; d * d];
+    let mut v = vec![0.0; d * n];
+    let mut prev: Option<F> = None;
+    let mut iters = 0;
+    for &lam_s in &stages {
+        if let Some(lp) = prev {
+            transfer_panel(u, d, n, lam_s / lp);
+        }
+        for (out, &mij) in k.iter_mut().zip(m) {
+            *out = (-lam_s * mij).exp();
+        }
+        for i in 0..d {
+            for j in 0..d {
+                kt[j * d + i] = k[i * d + j];
+            }
+        }
+        for _ in 0..per_stage {
+            panel_ratio(&kt, u, c_panel, &mut v, d, n);
+            panel_ratio(&k, &v, r_panel, u, d, n);
+        }
+        iters += per_stage;
+        prev = Some(lam_s);
+    }
+    if let Some(lp) = prev {
+        transfer_panel(u, d, n, lambda_star / lp);
+    }
+    iters
+}
+
+/// Scalar (single-pair) form of [`anneal_prefix_panel`]: a d-vector is a
+/// (d, 1) panel with the same memory layout.
+pub(crate) fn dense_anneal_prefix(
+    m: &[F],
+    d: usize,
+    lambda_star: F,
+    schedule: &LambdaSchedule,
+    r: &[F],
+    c: &[F],
+    u: &mut [F],
+) -> usize {
+    anneal_prefix_panel(m, d, lambda_star, schedule, r, c, u, 1)
 }
 
 /// True when K = e^{−λM} underflows badly enough that the dense fixed
@@ -89,11 +320,71 @@ impl SinkhornConfig {
             max_iterations: n,
             check_every: usize::MAX,
             auto_stabilize: true,
+            schedule: LambdaSchedule::Fixed,
         }
     }
 
     /// Convergence-driven config with the paper's 0.01 tolerance.
     pub fn converged(lambda: F) -> Self {
         Self { lambda, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod schedule_tests {
+    use super::*;
+
+    #[test]
+    fn fixed_has_no_prefix() {
+        assert!(LambdaSchedule::Fixed.prefix_stages(100.0).is_empty());
+        assert_eq!(LambdaSchedule::Fixed.stage_iterations(), 0);
+    }
+
+    #[test]
+    fn geometric_stages_stay_below_target() {
+        let s = LambdaSchedule::geometric(1.0);
+        assert_eq!(s.prefix_stages(20.0), vec![1.0, 3.0, 9.0]);
+        assert_eq!(s.prefix_stages(9.5), vec![1.0, 3.0, 9.0]);
+        assert_eq!(s.prefix_stages(1.0), Vec::<F>::new(), "λ₀ ≥ λ★ is a no-op");
+        assert_eq!(s.prefix_stages(0.5), Vec::<F>::new());
+        assert_eq!(s.stage_iterations(), 30);
+    }
+
+    #[test]
+    fn transfer_panel_normalizes_and_preserves_zeros() {
+        let mut u = vec![4.0, 2.0, 0.0];
+        transfer_panel(&mut u, 3, 1, 2.0);
+        assert!((u[0] - 1.0).abs() < 1e-15, "max normalizes to 1");
+        assert!((u[1] - 0.25).abs() < 1e-15, "(2/4)^2");
+        assert_eq!(u[2], 0.0, "zero-mass scaling stays zero");
+        // All-zero column is left untouched (nothing to anchor on).
+        let mut z = vec![0.0, 0.0];
+        transfer_panel(&mut z, 2, 1, 3.0);
+        assert_eq!(z, vec![0.0, 0.0]);
+        // Columns transfer independently: (d=2, n=2) row-major panel
+        // [[2, 0], [1, 8]] -> col 0 = [1, 0.25], col 1 = [0, 1].
+        let mut p = vec![2.0, 0.0, 1.0, 8.0];
+        transfer_panel(&mut p, 2, 2, 2.0);
+        assert!((p[0] - 1.0).abs() < 1e-15);
+        assert!((p[2] - 0.25).abs() < 1e-15);
+        assert_eq!(p[1], 0.0);
+        assert!((p[3] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dense_prefix_counts_iterations() {
+        // Tiny symmetric metric; just exercise the bookkeeping.
+        let m = vec![0.0, 1.0, 1.0, 0.0];
+        let r = [0.5, 0.5];
+        let c = [0.25, 0.75];
+        let mut u = vec![0.5, 0.5];
+        let schedule = LambdaSchedule::geometric(1.0);
+        let iters = dense_anneal_prefix(&m, 2, 9.0, &schedule, &r, &c, &mut u);
+        assert_eq!(iters, 60, "two stages (λ=1, 3) x 30 iterations");
+        assert!(u.iter().all(|x| x.is_finite() && *x > 0.0));
+        let none = dense_anneal_prefix(
+            &m, 2, 9.0, &LambdaSchedule::Fixed, &r, &c, &mut u,
+        );
+        assert_eq!(none, 0);
     }
 }

@@ -1,0 +1,260 @@
+//! Warm-start store: an LRU cache of converged Sinkhorn scalings.
+//!
+//! Cuturi's fixed point amortizes beautifully across related problems: a
+//! serving system sees the same (metric, λ) classes over and over, and
+//! repeated or near-repeated query histograms re-converge in a handful of
+//! iterations when seeded with a previously converged scaling pair
+//! (Altschuler et al. 2017 bound iteration count by how far the initial
+//! scalings sit from feasibility — a cached fixed point sits at distance
+//! ~0). This module provides the cache:
+//!
+//! * [`WarmKey`] — `(metric key, λ bits, query fingerprint)`: exact-match
+//!   identity of a solve. The fingerprint hashes the raw f64 bits of both
+//!   histograms, so only bit-identical (r, c) pairs hit.
+//! * [`WarmStartStore`] — a bounded LRU map from [`WarmKey`] to
+//!   [`ScalingInit`] with hit/miss/insert/evict counters, built on
+//!   `HashMap` + `BTreeMap` recency stamps (the crate is dependency-free).
+//!
+//! The [`crate::backend::ShardedExecutor`] owns one store per worker
+//! (shared-nothing, like the kernel matrices), and the coordinator
+//! surfaces the counters through `coordinator::metrics`.
+
+use super::ScalingInit;
+use crate::simplex::Histogram;
+use crate::F;
+use std::collections::{BTreeMap, HashMap};
+
+/// Cache identity of one solve: which metric, which λ, which (r, c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WarmKey {
+    /// Caller-chosen metric namespace (the coordinator uses `MetricId.0`;
+    /// standalone executors pass any stable value, e.g. 0).
+    pub metric: u64,
+    /// λ quantized to its bit pattern (same exact-match routing as
+    /// `coordinator::ShapeClass`).
+    pub lambda_bits: u64,
+    /// Fingerprint of the (r, c) histogram pair ([`fingerprint_pair`]).
+    pub fingerprint: u64,
+}
+
+impl WarmKey {
+    /// Key for a query against `metric` at `lambda`.
+    pub fn new(metric: u64, lambda: F, r: &Histogram, c: &Histogram) -> Self {
+        Self {
+            metric,
+            lambda_bits: lambda.to_bits(),
+            fingerprint: fingerprint_pair(r, c),
+        }
+    }
+}
+
+/// FNV-1a over the dimension and raw f64 bits of both histograms.
+/// Bit-exact: two pairs collide only if every weight is identical (or in
+/// the astronomically unlikely 64-bit hash collision).
+pub fn fingerprint_pair(r: &Histogram, c: &Histogram) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |word: u64| {
+        for byte in word.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(r.dim() as u64);
+    for &x in r.values() {
+        eat(x.to_bits());
+    }
+    eat(c.dim() as u64);
+    for &x in c.values() {
+        eat(x.to_bits());
+    }
+    h
+}
+
+/// Cumulative counters of one store.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+/// Bounded LRU cache of converged scaling pairs.
+#[derive(Debug)]
+pub struct WarmStartStore {
+    capacity: usize,
+    /// Key -> (cached scalings, recency stamp).
+    entries: HashMap<WarmKey, (ScalingInit, u64)>,
+    /// Recency stamp -> key; the smallest stamp is the LRU victim.
+    order: BTreeMap<u64, WarmKey>,
+    clock: u64,
+    counters: WarmCounters,
+}
+
+impl WarmStartStore {
+    /// A store holding at most `capacity` entries (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            entries: HashMap::new(),
+            order: BTreeMap::new(),
+            clock: 0,
+            counters: WarmCounters::default(),
+        }
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Maximum entries the store retains.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Cumulative hit/miss/insert/evict counters.
+    pub fn counters(&self) -> WarmCounters {
+        self.counters
+    }
+
+    fn touch(&mut self, key: WarmKey) {
+        self.clock += 1;
+        let stamp = self.clock;
+        if let Some((_, old)) = self.entries.get_mut(&key) {
+            self.order.remove(old);
+            *old = stamp;
+            self.order.insert(stamp, key);
+        }
+    }
+
+    /// Look up the cached scalings for `key`, counting a hit or a miss
+    /// and refreshing recency on a hit.
+    pub fn get(&mut self, key: &WarmKey) -> Option<ScalingInit> {
+        match self.entries.get(key) {
+            Some((init, _)) => {
+                let init = init.clone();
+                self.counters.hits += 1;
+                self.touch(*key);
+                Some(init)
+            }
+            None => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a converged scaling pair, evicting the least
+    /// recently used entry when full.
+    pub fn insert(&mut self, key: WarmKey, init: ScalingInit) {
+        self.clock += 1;
+        let stamp = self.clock;
+        if let Some((slot, old)) = self.entries.get_mut(&key) {
+            *slot = init;
+            self.order.remove(old);
+            *old = stamp;
+            self.order.insert(stamp, key);
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            if let Some((&victim_stamp, &victim)) = self.order.iter().next() {
+                self.order.remove(&victim_stamp);
+                self.entries.remove(&victim);
+                self.counters.evictions += 1;
+            }
+        }
+        self.entries.insert(key, (init, stamp));
+        self.order.insert(stamp, key);
+        self.counters.insertions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::seeded_rng;
+
+    fn init(tag: F, d: usize) -> ScalingInit {
+        ScalingInit { u: vec![tag; d], v: vec![tag + 0.5; d] }
+    }
+
+    fn key(fp: u64) -> WarmKey {
+        WarmKey { metric: 0, lambda_bits: (9.0 as F).to_bits(), fingerprint: fp }
+    }
+
+    #[test]
+    fn fingerprint_is_bit_exact() {
+        let mut rng = seeded_rng(0);
+        let a = Histogram::sample_uniform(8, &mut rng);
+        let b = Histogram::sample_uniform(8, &mut rng);
+        assert_eq!(fingerprint_pair(&a, &b), fingerprint_pair(&a, &b));
+        assert_ne!(fingerprint_pair(&a, &b), fingerprint_pair(&b, &a));
+        let c = Histogram::sample_uniform(9, &mut rng);
+        assert_ne!(fingerprint_pair(&a, &b), fingerprint_pair(&a, &c));
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let mut store = WarmStartStore::new(8);
+        assert!(store.get(&key(1)).is_none());
+        store.insert(key(1), init(1.0, 4));
+        let got = store.get(&key(1)).expect("cached");
+        assert_eq!(got.u, vec![1.0; 4]);
+        let c = store.counters();
+        assert_eq!((c.hits, c.misses, c.insertions, c.evictions), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut store = WarmStartStore::new(2);
+        store.insert(key(1), init(1.0, 2));
+        store.insert(key(2), init(2.0, 2));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(store.get(&key(1)).is_some());
+        store.insert(key(3), init(3.0, 2));
+        assert_eq!(store.len(), 2);
+        assert!(store.get(&key(2)).is_none(), "2 was evicted");
+        assert!(store.get(&key(1)).is_some());
+        assert!(store.get(&key(3)).is_some());
+        assert_eq!(store.counters().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut store = WarmStartStore::new(2);
+        store.insert(key(1), init(1.0, 2));
+        store.insert(key(1), init(9.0, 2));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get(&key(1)).unwrap().u, vec![9.0; 2]);
+        store.insert(key(2), init(2.0, 2));
+        store.insert(key(3), init(3.0, 2));
+        // Recency order before the last insert was [1 (refreshed by the
+        // get), 2], so 1 is the LRU victim.
+        assert!(store.get(&key(1)).is_none());
+        assert!(store.get(&key(2)).is_some());
+        assert!(store.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn capacity_clamps_to_one() {
+        let mut store = WarmStartStore::new(0);
+        assert_eq!(store.capacity(), 1);
+        store.insert(key(1), init(1.0, 1));
+        store.insert(key(2), init(2.0, 1));
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn potentials_map_zeros_to_neg_infinity() {
+        let s = ScalingInit { u: vec![1.0, 0.0], v: vec![0.5, 2.0] };
+        let (f, g) = s.potentials();
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[1], F::NEG_INFINITY);
+        assert!((g[1] - (2.0 as F).ln()).abs() < 1e-15);
+    }
+}

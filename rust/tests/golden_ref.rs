@@ -1,0 +1,147 @@
+//! Golden-fixture parity: the Rust solvers vs the Python oracle.
+//!
+//! `rust/tests/fixtures/ref_cases.json` freezes deeply converged outputs
+//! of `python/compile/kernels/ref.py` (the same oracle the Pallas kernels
+//! are validated against), so the Rust CPU paths and the Python/Pallas
+//! stack cannot silently diverge: both sides must land on the same fixed
+//! point to 1e-9. Regenerate with
+//! `python python/compile/kernels/gen_fixtures.py` if the oracle
+//! intentionally changes.
+//!
+//! The fixtures record *fixed points* (solved far past convergence), not
+//! stopping states: the oracle updates (u, v) per iteration while the
+//! Rust engine updates (v, u), so intermediate iterates differ by design
+//! and only the limit is comparable at this precision.
+
+use sinkhorn_rs::metric::CostMatrix;
+use sinkhorn_rs::simplex::Histogram;
+use sinkhorn_rs::sinkhorn::{log_domain, LambdaSchedule, SinkhornConfig, SinkhornEngine};
+use sinkhorn_rs::util::json::Json;
+use sinkhorn_rs::F;
+
+const FIXTURES: &str = include_str!("fixtures/ref_cases.json");
+const TOL: F = 1e-9;
+
+struct Case {
+    name: String,
+    d: usize,
+    lambda: F,
+    m: Vec<F>,
+    r: Vec<F>,
+    c: Vec<F>,
+    distance: F,
+}
+
+fn load_cases() -> Vec<Case> {
+    let doc = Json::parse(FIXTURES).expect("fixture JSON parses");
+    assert_eq!(doc.get("version").and_then(Json::as_usize), Some(1));
+    let cases = doc.get("cases").and_then(Json::as_array).expect("cases array");
+    assert!(cases.len() >= 5, "expected a meaningful fixture set");
+    cases
+        .iter()
+        .map(|case| {
+            let nums = |key: &str| -> Vec<F> {
+                case.get(key)
+                    .and_then(Json::as_array)
+                    .unwrap_or_else(|| panic!("field {key}"))
+                    .iter()
+                    .map(|x| x.as_f64().expect("numeric entry"))
+                    .collect()
+            };
+            let d = case.get("d").and_then(Json::as_usize).expect("d");
+            let c = Case {
+                name: case
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .expect("name")
+                    .to_string(),
+                d,
+                lambda: case.get("lambda").and_then(Json::as_f64).expect("lambda"),
+                m: nums("m"),
+                r: nums("r"),
+                c: nums("c"),
+                distance: case.get("distance").and_then(Json::as_f64).expect("distance"),
+            };
+            assert_eq!(c.m.len(), d * d, "{}: matrix shape", c.name);
+            assert_eq!(c.r.len(), d, "{}: r shape", c.name);
+            assert_eq!(c.c.len(), d, "{}: c shape", c.name);
+            c
+        })
+        .collect()
+}
+
+fn tight(lambda: F) -> SinkhornConfig {
+    SinkhornConfig {
+        lambda,
+        tolerance: 1e-13,
+        max_iterations: 200_000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn log_domain_matches_python_oracle() {
+    for case in load_cases() {
+        let out = log_domain::solve(
+            &case.m,
+            case.d,
+            case.lambda,
+            &tight(case.lambda),
+            &case.r,
+            &case.c,
+        );
+        assert!(out.stats.converged, "{}: log-domain did not converge", case.name);
+        assert!(
+            (out.value - case.distance).abs() < TOL,
+            "{}: log-domain {} vs oracle {} (dev {:.3e})",
+            case.name,
+            out.value,
+            case.distance,
+            (out.value - case.distance).abs()
+        );
+    }
+}
+
+#[test]
+fn dense_engine_matches_python_oracle() {
+    for case in load_cases() {
+        let metric = CostMatrix::from_rows(case.d, case.m.clone());
+        let r = Histogram::from_weights(&case.r).unwrap();
+        let c = Histogram::from_weights(&case.c).unwrap();
+        let engine = SinkhornEngine::with_config(&metric, tight(case.lambda));
+        let out = engine.distance(&r, &c);
+        assert!(out.stats.converged, "{}: engine did not converge", case.name);
+        assert!(
+            (out.value - case.distance).abs() < TOL,
+            "{}: engine {} vs oracle {} (dev {:.3e})",
+            case.name,
+            out.value,
+            case.distance,
+            (out.value - case.distance).abs()
+        );
+    }
+}
+
+#[test]
+fn annealed_log_domain_matches_python_oracle() {
+    // The ε-scaling path must land on the same fixed point as the
+    // straight iteration — tied here to an *external* reference, not just
+    // to another in-crate solver.
+    for case in load_cases() {
+        let cfg = SinkhornConfig {
+            schedule: LambdaSchedule::geometric(0.5),
+            ..tight(case.lambda)
+        };
+        let out =
+            log_domain::solve(&case.m, case.d, case.lambda, &cfg, &case.r, &case.c);
+        assert!(out.stats.converged, "{}: annealed did not converge", case.name);
+        assert!(
+            (out.value - case.distance).abs() < TOL,
+            "{}: annealed {} vs oracle {} (dev {:.3e})",
+            case.name,
+            out.value,
+            case.distance,
+            (out.value - case.distance).abs()
+        );
+    }
+}

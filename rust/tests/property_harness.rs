@@ -1,0 +1,275 @@
+//! Randomized property harness over every `BackendKind`.
+//!
+//! Zero-dependency property testing built on the in-tree xoshiro RNG:
+//! each seeded case samples a random ground metric, λ and histogram pair
+//! (uniform / spiky Dirichlet / sparse with zero-mass bins), then asserts
+//! the invariants every solve strategy must share:
+//!
+//! * **feasibility** — the implied transport plan's marginals match
+//!   (r, c) to 1e-7 at convergence;
+//! * **symmetry** — d(r, c) = d(c, r) for the (symmetric) metrics;
+//! * **non-negativity / finiteness** of the reported distance, and the
+//!   paper's d_M^λ ≥ d_M lower bound against the exact network simplex;
+//! * **monotone objective** — Sinkhorn and Greenkhorn updates are exact
+//!   block-coordinate ascent on the concave entropic dual, so the convex
+//!   dual-descent objective Φ(u, v) = (uᵀKv − r·log u − c·log v)/λ is
+//!   monotone non-increasing along every trajectory (the raw transport
+//!   cost read-off is *not* monotone — it typically climbs toward the
+//!   fixed point from a cold start — which is why the harness tracks Φ);
+//! * **warm-start / ε-scaling transparency** — seeding a solve with a
+//!   cached scaling or annealing λ through a geometric schedule changes
+//!   iteration counts, never the fixed point (agreement to 1e-7, with
+//!   warm starts never taking more iterations than cold).
+//!
+//! Case count: 200 in release (what CI runs), trimmed in debug builds so
+//! plain `cargo test` stays fast — debug-mode Sinkhorn over the full
+//! sample is ~an order of magnitude slower for no extra coverage.
+
+use sinkhorn_rs::backend::{BackendKind, SolverBackend};
+use sinkhorn_rs::metric::{CostMatrix, RandomMetric};
+use sinkhorn_rs::ot::EmdSolver;
+use sinkhorn_rs::rng::Rng;
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::{LambdaSchedule, ScalingInit, SinkhornConfig};
+use sinkhorn_rs::F;
+
+#[cfg(not(debug_assertions))]
+const CASES: u64 = 200;
+#[cfg(debug_assertions)]
+const CASES: u64 = 32;
+
+/// The iterative scaling strategies (Exact is covered separately: it has
+/// no iteration trajectory or λ).
+const SCALING_KINDS: [BackendKind; 4] = [
+    BackendKind::Dense,
+    BackendKind::LogDomain,
+    BackendKind::Interleaved,
+    BackendKind::Greenkhorn,
+];
+
+struct Case {
+    m: CostMatrix,
+    r: Histogram,
+    c: Histogram,
+    lambda: F,
+    d: usize,
+}
+
+fn sample_histogram(d: usize, rng: &mut Rng) -> Histogram {
+    let h = if rng.bool(0.3) {
+        Histogram::sample_dirichlet(d, 0.3, rng)
+    } else {
+        Histogram::sample_uniform(d, rng)
+    };
+    if rng.bool(0.2) && d > 2 {
+        // Sparse variant: knock out one bin (zero-mass bins exercise the
+        // solvers' 0/0 guards and the −∞ potentials).
+        let mut w = h.values().to_vec();
+        w[rng.below(d)] = 0.0;
+        if w.iter().filter(|&&x| x > 0.0).count() >= 2 {
+            return Histogram::from_weights(&w).expect("renormalizable");
+        }
+    }
+    h
+}
+
+fn sample_case(seed: u64) -> Case {
+    let mut rng = seeded_rng(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let d = rng.range_usize(3, 15);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let lambda = rng.range_f64(2.0, 20.0);
+    let r = sample_histogram(d, &mut rng);
+    let c = sample_histogram(d, &mut rng);
+    Case { m, r, c, lambda, d }
+}
+
+fn tight(lambda: F) -> SinkhornConfig {
+    SinkhornConfig {
+        lambda,
+        tolerance: 1e-9,
+        max_iterations: 200_000,
+        ..Default::default()
+    }
+}
+
+/// The implied plan P = diag(u) K diag(v), densely reconstructed.
+fn plan_of(case: &Case, u: &[F], v: &[F]) -> Vec<F> {
+    let d = case.d;
+    let mut p = vec![0.0; d * d];
+    for i in 0..d {
+        for j in 0..d {
+            p[i * d + j] = u[i] * (-case.lambda * case.m.get(i, j)).exp() * v[j];
+        }
+    }
+    p
+}
+
+/// Convex dual-descent objective Φ(u, v) = (uᵀKv − r·log u − c·log v)/λ.
+/// Every Sinkhorn row/column rescale and every Greenkhorn coordinate
+/// rescale is an exact minimization of Φ in that block, so Φ is monotone
+/// non-increasing along all trajectories. Zero-mass terms (r_i = 0)
+/// contribute nothing by convention.
+fn dual_descent_objective(case: &Case, u: &[F], v: &[F]) -> F {
+    let d = case.d;
+    let mut mass = 0.0;
+    for i in 0..d {
+        for j in 0..d {
+            mass += u[i] * (-case.lambda * case.m.get(i, j)).exp() * v[j];
+        }
+    }
+    let mut dual = 0.0;
+    for i in 0..d {
+        if case.r.values()[i] > 0.0 {
+            dual += case.r.values()[i] * u[i].max(1e-300).ln();
+        }
+    }
+    for j in 0..d {
+        if case.c.values()[j] > 0.0 {
+            dual += case.c.values()[j] * v[j].max(1e-300).ln();
+        }
+    }
+    (mass - dual) / case.lambda
+}
+
+#[test]
+fn prop_feasibility_symmetry_nonnegativity() {
+    for seed in 0..CASES {
+        let case = sample_case(seed);
+        let exact = EmdSolver::new(&case.m)
+            .solve(&case.r, &case.c)
+            .expect("exact solve")
+            .cost;
+        for kind in SCALING_KINDS {
+            let backend = kind.build(&case.m, tight(case.lambda));
+            let out = backend.solve_pair(&case.r, &case.c);
+            assert!(out.stats.converged, "seed {seed} {kind}: did not converge");
+            assert!(out.value.is_finite(), "seed {seed} {kind}: non-finite value");
+            assert!(out.value >= -1e-12, "seed {seed} {kind}: negative {}", out.value);
+            assert!(
+                out.value >= exact - 1e-6,
+                "seed {seed} {kind}: {} below exact EMD {exact}",
+                out.value
+            );
+
+            // Transport-plan marginal feasibility to 1e-7.
+            let p = plan_of(&case, &out.u, &out.v);
+            for i in 0..case.d {
+                let row: F = p[i * case.d..(i + 1) * case.d].iter().sum();
+                assert!(
+                    (row - case.r.values()[i]).abs() < 1e-7,
+                    "seed {seed} {kind}: row {i} marginal off by {:.3e}",
+                    (row - case.r.values()[i]).abs()
+                );
+            }
+            for j in 0..case.d {
+                let col: F = (0..case.d).map(|i| p[i * case.d + j]).sum();
+                assert!(
+                    (col - case.c.values()[j]).abs() < 1e-7,
+                    "seed {seed} {kind}: col {j} marginal off by {:.3e}",
+                    (col - case.c.values()[j]).abs()
+                );
+            }
+
+            // Symmetry: the metric is symmetric, so d(r, c) = d(c, r).
+            let flipped = backend.solve_pair(&case.c, &case.r);
+            assert!(
+                (flipped.value - out.value).abs() < 1e-7 * (1.0 + out.value.abs()),
+                "seed {seed} {kind}: asymmetric {} vs {}",
+                out.value,
+                flipped.value
+            );
+        }
+
+        // The exact backend shares the symmetry/non-negativity contract
+        // (its feasibility is checked on the simplex plan directly).
+        let exact_backend = BackendKind::Exact.build(&case.m, tight(case.lambda));
+        let fwd = exact_backend.solve_pair(&case.r, &case.c);
+        let bwd = exact_backend.solve_pair(&case.c, &case.r);
+        assert!(fwd.value >= -1e-12 && fwd.value.is_finite());
+        assert!((fwd.value - bwd.value).abs() < 1e-7 * (1.0 + fwd.value.abs()));
+        let plan = EmdSolver::new(&case.m).solve(&case.r, &case.c).unwrap();
+        for (got, want) in plan.row_marginal().iter().zip(case.r.values()) {
+            assert!((got - want).abs() < 1e-7, "seed {seed} exact: row marginal");
+        }
+        for (got, want) in plan.col_marginal().iter().zip(case.c.values()) {
+            assert!((got - want).abs() < 1e-7, "seed {seed} exact: col marginal");
+        }
+    }
+}
+
+#[test]
+fn prop_warm_and_annealed_agree_with_cold() {
+    for seed in 0..CASES {
+        let case = sample_case(seed);
+        for kind in SCALING_KINDS {
+            let backend = kind.build(&case.m, tight(case.lambda));
+            let cold = backend.solve_pair(&case.r, &case.c);
+            assert!(cold.stats.converged, "seed {seed} {kind}: cold not converged");
+
+            // Warm start from the cold fixed point: same value, and never
+            // more iterations than the cold solve took.
+            let seed_scaling = ScalingInit::from_output(&cold);
+            let warm = backend.solve_pair_init(&case.r, &case.c, Some(&seed_scaling));
+            assert!(warm.stats.converged, "seed {seed} {kind}: warm not converged");
+            assert!(
+                (warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()),
+                "seed {seed} {kind}: warm {} vs cold {}",
+                warm.value,
+                cold.value
+            );
+            assert!(
+                warm.stats.iterations <= cold.stats.iterations,
+                "seed {seed} {kind}: warm took {} iterations vs cold {}",
+                warm.stats.iterations,
+                cold.stats.iterations
+            );
+
+            // ε-scaling: annealing λ changes the path, not the answer.
+            let annealed_cfg = SinkhornConfig {
+                schedule: LambdaSchedule::geometric(1.0),
+                ..tight(case.lambda)
+            };
+            let annealed = kind
+                .build(&case.m, annealed_cfg)
+                .solve_pair(&case.r, &case.c);
+            assert!(
+                annealed.stats.converged,
+                "seed {seed} {kind}: annealed not converged"
+            );
+            assert!(
+                (annealed.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()),
+                "seed {seed} {kind}: annealed {} vs cold {}",
+                annealed.value,
+                cold.value
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dual_objective_monotone_across_iterations() {
+    // Trajectory probing re-solves at growing fixed budgets (deterministic
+    // solvers retrace the same path), so sample every 4th case.
+    const BUDGETS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+    for seed in (0..CASES).step_by(4) {
+        let case = sample_case(seed);
+        for kind in SCALING_KINDS {
+            let mut prev: Option<F> = None;
+            for &budget in &BUDGETS {
+                let backend =
+                    kind.build(&case.m, SinkhornConfig::fixed(case.lambda, budget));
+                let out = backend.solve_pair(&case.r, &case.c);
+                let phi = dual_descent_objective(&case, &out.u, &out.v);
+                assert!(phi.is_finite(), "seed {seed} {kind}: Φ not finite");
+                if let Some(prev_phi) = prev {
+                    assert!(
+                        phi <= prev_phi + 1e-9 * (1.0 + prev_phi.abs()),
+                        "seed {seed} {kind}: Φ rose from {prev_phi} to {phi} \
+                         at budget {budget}"
+                    );
+                }
+                prev = Some(phi);
+            }
+        }
+    }
+}
