@@ -52,10 +52,36 @@ CASES = [
     ("d8_lam14", 8, 14.0, 1),
 ]
 
+# Truncated-kernel case (name, d, lambda, threshold): the oracle solves
+# against the *threshold-truncated* Gibbs kernel using the exact rule of
+# Rust's linalg::SparseKernel::build — drop K_ij unless
+# K_ij > min(threshold · rowmax_i, exp(-lambda · 0.9 · median(M_offdiag)))
+# (strict >; rowmax_i = exp(-lambda·min_j m_ij) = 1 for zero-diagonal
+# metrics; 0.9 is TRUNCATION_SAFE_RADIUS). Appended after CASES so the
+# seeded RNG stream — and therefore every existing fixture — is
+# unchanged.
+TRUNCATED_CASE = ("d12_lam12_truncated", 12, 12.0, 1e-4)
+
 ITERS = 6000
 # The fixture asserts 1e-9 agreement; require the oracle itself to have
 # settled two orders tighter than that.
 SETTLE_TOL = 1e-11
+
+
+def truncate_kernel(m: np.ndarray, lam: float, thr: float) -> np.ndarray:
+    """Rust SparseKernel::build's kept set, as a masked dense kernel."""
+    d = m.shape[0]
+    off = m[~np.eye(d, dtype=bool)]
+    radius_cut = np.exp(-lam * 0.9 * float(np.median(off)))
+    k = np.exp(-lam * m)
+    rowmax = np.exp(-lam * m.min(axis=1, keepdims=True))
+    cut = np.minimum(thr * rowmax, radius_cut)
+    # Guard the fixture against platform exp() ulp differences: no
+    # kernel entry may sit so close to the cut that a 1-ulp shift flips
+    # its membership (which would move the fixed point by ~threshold).
+    gap = np.abs(k - cut) / cut
+    assert gap.min() > 1e-9, f"entry within {gap.min():.2e} of the truncation cut"
+    return np.where(k > cut, k, 0.0)
 
 
 def metric(rng: np.random.RandomState, d: int) -> np.ndarray:
@@ -102,6 +128,44 @@ def main() -> None:
                 "settle": settle,
             }
         )
+    name, d, lam, thr = TRUNCATED_CASE
+    m = metric(rng, d)
+    r = histogram(rng, d, 0)
+    c = histogram(rng, d, 0)
+    kt = truncate_kernel(m, lam, thr)
+    assert 0 < (kt > 0).sum() < d * d, "fixture truncation must actually bite"
+    u_half, v_half = ref.sinkhorn_iterate(kt, r[:, None], c[:, None], ITERS // 2)
+    dist_half = float((u_half * ((kt * m) @ v_half)).sum())
+    u, v = ref.sinkhorn_iterate(kt, r[:, None], c[:, None], ITERS)
+    dist = float((u * ((kt * m) @ v)).sum())
+    settle = abs(dist - dist_half)
+    assert settle < SETTLE_TOL, f"{name}: truncated oracle not settled ({settle:.3e})"
+    marginal_err = max(
+        float(np.abs(u * (kt @ v) - r[:, None]).max()),
+        float(np.abs(v * (kt.T @ u) - c[:, None]).max()),
+    )
+    # A settled distance is not enough: an *infeasible* truncated support
+    # (no plan with marginals (r, c) on the kept entries) collapses the
+    # scalings and the collapsed state also "settles". Only a marginal-
+    # feasible fixed point is a valid fixture.
+    assert marginal_err < 1e-7, f"{name}: truncated support infeasible ({marginal_err:.3e})"
+    cases.append(
+        {
+            "name": name,
+            "d": d,
+            "lambda": lam,
+            "iterations": ITERS,
+            "kernel": "truncated",
+            "threshold": thr,
+            "m": [float(x) for x in m.ravel()],
+            "r": [float(x) for x in r],
+            "c": [float(x) for x in c],
+            "distance": dist,
+            "marginal_err": marginal_err,
+            "settle": settle,
+        }
+    )
+
     doc = {
         "version": 1,
         "generator": "python/compile/kernels/gen_fixtures.py",

@@ -14,6 +14,7 @@
 //! [`crate::sinkhorn::BatchSinkhorn::distances_paired`].
 
 use super::{BackendKind, SolverBackend};
+use crate::linalg::KernelStats;
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::sinkhorn::{
@@ -25,7 +26,7 @@ use std::time::{Duration, Instant};
 
 /// What one worker did for one panel (returned per solve call so the
 /// coordinator can feed its occupancy metrics incrementally).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ShardReport {
     /// Worker index (stable across the executor's lifetime).
     pub worker: usize,
@@ -38,6 +39,10 @@ pub struct ShardReport {
     pub warm_hits: usize,
     /// Queries that missed the warm-start store (0 without one).
     pub warm_misses: usize,
+    /// Structure of the kernel operator this worker's backend iterates
+    /// with (achieved nnz / rank / mass loss — identical across a pool's
+    /// workers, carried per report so consumers need no executor handle).
+    pub kernel: KernelStats,
 }
 
 /// Cumulative per-worker counters (also kept inside the executor for
@@ -111,10 +116,28 @@ impl ShardedExecutor {
             .unwrap_or(0)
     }
 
-    /// [`Self::new`] with the regime-appropriate default strategy
-    /// ([`BackendKind::auto`]).
+    /// [`Self::new`] with the regime-appropriate default strategy,
+    /// honoring the config's kernel-policy intent: the underflow regime
+    /// always goes log-domain; otherwise an explicit
+    /// [`crate::linalg::KernelPolicy::Dense`] pins the exact interleaved
+    /// walk (so opting into exactness can never be silently overridden
+    /// by sparsity routing), explicit Truncated/LowRank policies route
+    /// to their structured backends, and
+    /// [`crate::linalg::KernelPolicy::Auto`] defers to
+    /// [`BackendKind::auto`]'s d·λ rule.
     pub fn auto(metric: &CostMatrix, config: SinkhornConfig, workers: usize) -> Self {
-        Self::new(metric, config, BackendKind::auto(metric, config.lambda), workers)
+        use crate::linalg::KernelPolicy;
+        let kind = if super::dense_kernel_degenerate(metric, config.lambda) {
+            BackendKind::LogDomain
+        } else {
+            match config.kernel {
+                KernelPolicy::Dense => BackendKind::Interleaved,
+                KernelPolicy::Truncated { .. } => BackendKind::Truncated,
+                KernelPolicy::LowRank { .. } => BackendKind::LowRank,
+                KernelPolicy::Auto => BackendKind::auto(metric, config.lambda),
+            }
+        };
+        Self::new(metric, config, kind, workers)
     }
 
     /// Number of worker slots (= private backend instances).
@@ -130,6 +153,12 @@ impl ShardedExecutor {
     /// Histogram dimension the executor is bound to.
     pub fn dim(&self) -> usize {
         self.backends[0].dim()
+    }
+
+    /// Structure report of the kernel operator the workers iterate with
+    /// (every worker holds an identical private instance).
+    pub fn kernel_stats(&self) -> KernelStats {
+        self.backends[0].kernel_stats()
     }
 
     /// Cumulative per-worker counters.
@@ -161,6 +190,7 @@ impl ShardedExecutor {
         }
         let shards = self.backends.len().min(n);
         let key_ns = self.warm.as_ref().map(|w| (w.metric_key, w.lambda_bits));
+        let kernel = self.kernel_stats();
         if shards == 1 {
             // Degenerate pool (or single query): skip the spawn entirely.
             let t0 = Instant::now();
@@ -173,6 +203,7 @@ impl ShardedExecutor {
                 busy: t0.elapsed(),
                 warm_hits: hits,
                 warm_misses: misses,
+                kernel,
             };
             self.stats[0].panels += 1;
             self.stats[0].queries += report.queries as u64;
@@ -230,6 +261,7 @@ impl ShardedExecutor {
                     busy,
                     warm_hits,
                     warm_misses,
+                    kernel,
                 });
                 outputs.extend(out);
             }
@@ -442,6 +474,46 @@ mod tests {
             ex.solve_panel(&r, std::slice::from_ref(&c));
         }
         assert!(ex.warm_entries() <= 4, "LRU bound violated: {}", ex.warm_entries());
+    }
+
+    #[test]
+    fn reports_carry_kernel_structure() {
+        let (m, r, cs) = panel(16, 6, 9);
+        // λ=30 on a median-normalized metric: plenty below the default
+        // truncation threshold.
+        let mut ex = ShardedExecutor::new(
+            &m,
+            SinkhornConfig::fixed(30.0, 10),
+            BackendKind::Truncated,
+            3,
+        );
+        let stats = ex.kernel_stats();
+        assert!(stats.nnz < 16 * 16, "truncated executor must hold a sparse kernel");
+        let (_, reports) = ex.solve_panel(&r, &cs);
+        assert!(reports.iter().all(|s| s.kernel == stats));
+        // A dense executor reports the dense structure.
+        let mut dense =
+            ShardedExecutor::new(&m, SinkhornConfig::fixed(9.0, 10), BackendKind::Dense, 2);
+        let (_, dreports) = dense.solve_panel(&r, &cs);
+        assert!(dreports.iter().all(|s| s.kernel.nnz == 16 * 16 && s.kernel.mass_loss == 0.0));
+    }
+
+    #[test]
+    fn auto_respects_kernel_policy_intent() {
+        use crate::linalg::KernelPolicy;
+        let (m, _, _) = panel(12, 0, 10);
+        // Explicit structured policies route to their backends…
+        let mut cfg = SinkhornConfig::fixed(9.0, 10);
+        cfg.kernel = KernelPolicy::Truncated { threshold: 1e-6 };
+        assert_eq!(ShardedExecutor::auto(&m, cfg, 1).kind(), BackendKind::Truncated);
+        cfg.kernel = KernelPolicy::LowRank { max_rank: 0, tolerance: 1e-9 };
+        assert_eq!(ShardedExecutor::auto(&m, cfg, 1).kind(), BackendKind::LowRank);
+        // …while the default Dense policy pins the exact walk (and Auto
+        // defers to the d·λ rule, which stays dense at 12·9).
+        cfg.kernel = KernelPolicy::Dense;
+        assert_eq!(ShardedExecutor::auto(&m, cfg, 1).kind(), BackendKind::Interleaved);
+        cfg.kernel = KernelPolicy::Auto;
+        assert_eq!(ShardedExecutor::auto(&m, cfg, 1).kind(), BackendKind::Interleaved);
     }
 
     #[test]

@@ -79,8 +79,19 @@ impl GreenkhornBackend {
             }
             None => {
                 let mut u = vec![1.0 / d as F; d];
+                // Always a dense prefix: the greedy loop's incremental
+                // K·v / Kᵀ·u caches are dense, so the prefix must
+                // iterate the same kernel (the policy knob is ignored
+                // here, as documented on `SinkhornConfig::kernel`).
                 let prefix = crate::sinkhorn::dense_anneal_prefix(
-                    &self.m, d, cfg.lambda, &cfg.schedule, r, c, &mut u,
+                    &self.m,
+                    d,
+                    cfg.lambda,
+                    &cfg.schedule,
+                    crate::linalg::KernelPolicy::Dense,
+                    r,
+                    c,
+                    &mut u,
                 );
                 let mut v = vec![1.0 / d as F; d];
                 if prefix > 0 {

@@ -23,6 +23,7 @@ mod greenkhorn;
 pub use executor::{ShardReport, ShardedExecutor, WorkerStats};
 pub use greenkhorn::GreenkhornBackend;
 
+use crate::linalg::{KernelPolicy, KernelStats};
 use crate::metric::CostMatrix;
 use crate::ot::EmdSolver;
 use crate::simplex::Histogram;
@@ -62,6 +63,15 @@ pub trait SolverBackend: Send {
     /// healthy hit rate with zero effect on iteration counts.
     fn warm_startable(&self) -> bool {
         true
+    }
+
+    /// Structure report of the kernel operator this backend iterates
+    /// with: nnz (the per-iteration flop proxy), factorization rank and
+    /// the kernel mass the approximation discarded. Backends without a
+    /// materialized kernel (log-domain, exact) report the implicit
+    /// dense structure.
+    fn kernel_stats(&self) -> KernelStats {
+        KernelStats::dense(self.dim())
     }
 
     /// [`Self::solve_pair`] seeded with an initial scaling pair (a warm
@@ -129,6 +139,16 @@ pub enum BackendKind {
     Interleaved,
     /// Greedy row/column scaling ([`GreenkhornBackend`]).
     Greenkhorn,
+    /// Interleaved batch walk over a threshold-truncated CSR Gibbs
+    /// kernel ([`crate::linalg::SparseKernel`]): strictly fewer
+    /// streamed entries per iteration once e^{−λM} has enough
+    /// negligible mass, at a documented per-row mass-loss cost. Dense-
+    /// representable regime only (like [`BackendKind::Interleaved`]).
+    Truncated,
+    /// Interleaved batch walk over a pivoted-Cholesky low-rank kernel
+    /// ([`crate::linalg::LowRankKernel`]): O(d·rank) per apply, the
+    /// profitable structure at small λ where K is smooth.
+    LowRank,
     /// Exact EMD via the transportation network simplex ([`EmdSolver`]);
     /// ignores λ.
     Exact,
@@ -142,6 +162,8 @@ impl BackendKind {
             BackendKind::LogDomain => "log_domain",
             BackendKind::Interleaved => "interleaved",
             BackendKind::Greenkhorn => "greenkhorn",
+            BackendKind::Truncated => "truncated",
+            BackendKind::LowRank => "low_rank",
             BackendKind::Exact => "exact",
         }
     }
@@ -153,17 +175,41 @@ impl BackendKind {
             "log_domain" => Some(BackendKind::LogDomain),
             "interleaved" => Some(BackendKind::Interleaved),
             "greenkhorn" => Some(BackendKind::Greenkhorn),
+            "truncated" => Some(BackendKind::Truncated),
+            "low_rank" => Some(BackendKind::LowRank),
             "exact" => Some(BackendKind::Exact),
             _ => None,
         }
     }
 
-    /// The serving default for (M, λ): the interleaved batch walk when
-    /// the dense kernel is representable, the log-domain path when
-    /// e^{−λM} underflows (the Fig. 5 "diagonally dominant" regime).
+    /// The serving default for (M, λ): the log-domain path when e^{−λM}
+    /// underflows (the Fig. 5 "diagonally dominant" regime), the
+    /// truncated-kernel walk once d·λ crosses the sparsity-profitable
+    /// threshold ([`crate::linalg::kernel::AUTO_SPARSITY_DLAMBDA`] —
+    /// past it the kernel has enough sub-threshold entries that CSR
+    /// streaming beats the dense sweep), and the dense interleaved
+    /// batch walk otherwise.
+    ///
+    /// Policy-*blind* by construction: this router sees only (M, λ), so
+    /// it cannot distinguish a deliberate `KernelPolicy::Dense` from
+    /// the `SinkhornConfig` default. Callers with exactness intent
+    /// should route through [`ShardedExecutor::auto`], which honors the
+    /// config's policy (an explicit Dense pins the exact walk), or pick
+    /// the kind themselves.
     pub fn auto(metric: &CostMatrix, lambda: F) -> BackendKind {
         if dense_kernel_degenerate(metric, lambda) {
             BackendKind::LogDomain
+        } else if metric.dim() as F * lambda
+            >= crate::linalg::kernel::AUTO_SPARSITY_DLAMBDA
+            && lambda * metric.median_cost()
+                >= crate::linalg::kernel::AUTO_SPARSITY_LAMBDA_MEDIAN
+        {
+            // Both gates matter: d·λ says the CSR overhead amortizes,
+            // λ·median(M) says the default threshold actually drops
+            // entries on this metric's scale (d·λ alone would route a
+            // costs-≪-1/λ metric to a "sparse" kernel keeping all d²
+            // entries).
+            BackendKind::Truncated
         } else {
             BackendKind::Interleaved
         }
@@ -182,6 +228,12 @@ impl BackendKind {
                 Box::new(InterleavedBackend::new(metric, config))
             }
             BackendKind::Greenkhorn => Box::new(GreenkhornBackend::new(metric, config)),
+            BackendKind::Truncated => {
+                Box::new(InterleavedBackend::truncated(metric, config))
+            }
+            BackendKind::LowRank => {
+                Box::new(InterleavedBackend::low_rank(metric, config))
+            }
             BackendKind::Exact => Box::new(ExactBackend::new(metric)),
         }
     }
@@ -236,6 +288,10 @@ impl SolverBackend for DenseBackend {
     ) -> SinkhornOutput {
         self.engine.distance_init(r, c, init)
     }
+
+    fn kernel_stats(&self) -> KernelStats {
+        self.engine.kernel_stats()
+    }
 }
 
 /// Log-domain stabilized updates behind the trait — numerically exact at
@@ -287,20 +343,58 @@ impl SolverBackend for LogDomainBackend {
 }
 
 /// [`BatchSinkhorn`] behind the trait: the genuinely interleaved panel
-/// walk (one pass over K per iteration updates all columns).
+/// walk (one pass over the kernel operator per iteration updates all
+/// columns). One struct serves three [`BackendKind`]s — the classic
+/// dense-policy [`BackendKind::Interleaved`] plus the structured
+/// [`BackendKind::Truncated`] / [`BackendKind::LowRank`] flavors, which
+/// differ only in the [`KernelPolicy`] their constructors force.
 pub struct InterleavedBackend {
     batch: BatchSinkhorn,
+    kind: BackendKind,
 }
 
 impl InterleavedBackend {
+    /// The classic interleaved walk over whatever kernel the config's
+    /// policy builds (dense by default).
     pub fn new(metric: &CostMatrix, config: SinkhornConfig) -> Self {
-        Self { batch: BatchSinkhorn::new(metric, config) }
+        Self {
+            batch: BatchSinkhorn::new(metric, config),
+            kind: BackendKind::Interleaved,
+        }
+    }
+
+    /// Truncated-CSR construction: keeps an explicit
+    /// [`KernelPolicy::Truncated`] from the config, defaults the
+    /// threshold otherwise — requesting this *kind* is the explicit ask
+    /// for truncation (policy-respecting routing lives in
+    /// [`ShardedExecutor::auto`]).
+    pub fn truncated(metric: &CostMatrix, mut config: SinkhornConfig) -> Self {
+        if !matches!(config.kernel, KernelPolicy::Truncated { .. }) {
+            config.kernel = KernelPolicy::truncated_default();
+        }
+        Self {
+            batch: BatchSinkhorn::new(metric, config),
+            kind: BackendKind::Truncated,
+        }
+    }
+
+    /// Low-rank construction: keeps an explicit
+    /// [`KernelPolicy::LowRank`] from the config, defaults the trace
+    /// tolerance otherwise.
+    pub fn low_rank(metric: &CostMatrix, mut config: SinkhornConfig) -> Self {
+        if !matches!(config.kernel, KernelPolicy::LowRank { .. }) {
+            config.kernel = KernelPolicy::low_rank_default();
+        }
+        Self {
+            batch: BatchSinkhorn::new(metric, config),
+            kind: BackendKind::LowRank,
+        }
     }
 }
 
 impl SolverBackend for InterleavedBackend {
     fn kind(&self) -> BackendKind {
-        BackendKind::Interleaved
+        self.kind
     }
 
     fn dim(&self) -> usize {
@@ -346,6 +440,10 @@ impl SolverBackend for InterleavedBackend {
         inits: &[Option<ScalingInit>],
     ) -> Vec<SinkhornOutput> {
         self.batch.distances_paired_init(rs, cs, inits)
+    }
+
+    fn kernel_stats(&self) -> KernelStats {
+        self.batch.kernel_stats()
     }
 }
 
@@ -444,6 +542,8 @@ mod tests {
             BackendKind::LogDomain,
             BackendKind::Interleaved,
             BackendKind::Greenkhorn,
+            BackendKind::Truncated,
+            BackendKind::LowRank,
             BackendKind::Exact,
         ] {
             assert_eq!(BackendKind::parse(kind.as_str()), Some(kind));
@@ -460,6 +560,8 @@ mod tests {
             BackendKind::LogDomain,
             BackendKind::Interleaved,
             BackendKind::Greenkhorn,
+            BackendKind::Truncated,
+            BackendKind::LowRank,
             BackendKind::Exact,
         ] {
             let backend = kind.build(&m, cfg);
@@ -471,7 +573,37 @@ mod tests {
                 "{kind}: bad value {}",
                 out.value
             );
+            let stats = backend.kernel_stats();
+            assert_eq!(stats.dim, 10, "{kind}: kernel stats dim");
+            assert!(stats.nnz > 0 && stats.rank > 0, "{kind}: empty kernel stats");
         }
+    }
+
+    #[test]
+    fn structured_backends_report_structure() {
+        let (m, _, _) = workload(12, 11);
+        // High λ: plenty of sub-threshold kernel entries to truncate.
+        let trunc = BackendKind::Truncated.build(&m, SinkhornConfig::fixed(30.0, 10));
+        let ts = trunc.kernel_stats();
+        assert!(ts.nnz < 12 * 12, "default threshold must truncate at λ=30");
+        assert!(ts.mass_loss > 0.0 && ts.mass_loss < 1e-3);
+        // Low λ with an explicitly loose trace tolerance: the kernel
+        // factors well below full rank (the e^{−λ‖·‖} eigen-tail decays
+        // polynomially, so the near-exact default tolerance would keep
+        // full rank — compression is an accuracy trade the policy makes
+        // explicit).
+        let mut lr_cfg = SinkhornConfig::fixed(0.05, 10);
+        lr_cfg.kernel =
+            crate::linalg::KernelPolicy::LowRank { max_rank: 0, tolerance: 3e-2 };
+        let lr = BackendKind::LowRank.build(&m, lr_cfg);
+        let ls = lr.kernel_stats();
+        assert!(ls.rank < 12, "tiny λ + loose tolerance must compress: {ls:?}");
+        assert!(ls.mass_loss > 0.0 && ls.nnz < 2 * 12 * 12);
+        // An explicit policy in the config is honored, not overridden.
+        let mut cfg = SinkhornConfig::fixed(30.0, 10);
+        cfg.kernel = crate::linalg::KernelPolicy::Truncated { threshold: 0.0 };
+        let exact = BackendKind::Truncated.build(&m, cfg);
+        assert_eq!(exact.kernel_stats().mass_loss, 0.0);
     }
 
     #[test]
@@ -493,6 +625,23 @@ mod tests {
         let (m, _, _) = workload(8, 2);
         assert_eq!(BackendKind::auto(&m, 9.0), BackendKind::Interleaved);
         assert_eq!(BackendKind::auto(&m, 50_000.0), BackendKind::LogDomain);
+        // d·λ past the sparsity threshold, but still representable:
+        // truncation wins. A bounded metric (max 1) keeps λ·max(M) far
+        // below the e^x underflow edge, so the regime is deterministic:
+        // 16 · 300 = 4800 ≥ 4096 with zero kernel underflow.
+        let d = 16;
+        let mut data = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                if i != j {
+                    let gap = (i as F - j as F).abs() / (d - 1) as F;
+                    data[i * d + j] = 0.1 + 0.9 * gap;
+                }
+            }
+        }
+        let bounded = CostMatrix::from_rows(d, data);
+        assert!(!dense_kernel_degenerate(&bounded, 300.0));
+        assert_eq!(BackendKind::auto(&bounded, 300.0), BackendKind::Truncated);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Service observability: counters and latency aggregates.
 
+use crate::linalg::KernelStats;
 use std::time::Duration;
 
 /// Running statistics collected by the service thread.
@@ -19,6 +20,11 @@ pub struct Stats {
     lat_buckets: [u64; 32],
     /// Per-worker occupancy of the CPU panel executor (index = worker).
     workers: Vec<WorkerSnapshot>,
+    /// Kernel structure of the most recently used CPU executor, with
+    /// `mass_loss` tracked as the worst observed across executors (shape
+    /// classes can differ; the gauge reports the latest structure and
+    /// the worst accuracy concession).
+    kernel: Option<KernelStats>,
 }
 
 /// Throughput/occupancy counters for one executor worker.
@@ -55,6 +61,26 @@ impl Stats {
         slot.busy_us += busy.as_micros().min(u64::MAX as u128) as u64;
         slot.warm_hits += warm_hits as u64;
         slot.warm_misses += warm_misses as u64;
+    }
+
+    /// Record the kernel structure of the executor that just served a
+    /// CPU batch (achieved nnz / rank / mass loss). Both accuracy
+    /// concessions — mass loss and the Frobenius budget — are kept
+    /// sticky-max across shape classes; the structural fields report
+    /// the latest executor.
+    pub fn record_kernel(&mut self, stats: KernelStats) {
+        let (worst_loss, worst_frob) = match self.kernel {
+            Some(prev) => (
+                prev.mass_loss.max(stats.mass_loss),
+                prev.frobenius_budget.max(stats.frobenius_budget),
+            ),
+            None => (stats.mass_loss, stats.frobenius_budget),
+        };
+        self.kernel = Some(KernelStats {
+            mass_loss: worst_loss,
+            frobenius_budget: worst_frob,
+            ..stats
+        });
     }
 
     pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
@@ -99,6 +125,7 @@ impl Stats {
             warm_hits: self.workers.iter().map(|w| w.warm_hits).sum(),
             warm_misses: self.workers.iter().map(|w| w.warm_misses).sum(),
             workers: self.workers.clone(),
+            kernel: self.kernel,
         }
     }
 
@@ -140,6 +167,10 @@ pub struct StatsSnapshot {
     pub warm_misses: u64,
     /// Per-worker executor occupancy (empty until a CPU panel ran).
     pub workers: Vec<WorkerSnapshot>,
+    /// Kernel structure of the most recent CPU executor (None until a
+    /// CPU panel ran): achieved nnz / rank, with `mass_loss` the worst
+    /// observed across shape classes.
+    pub kernel: Option<KernelStats>,
 }
 
 impl StatsSnapshot {
@@ -199,6 +230,16 @@ impl std::fmt::Display for StatsSnapshot {
                 self.warm_hits,
                 self.warm_misses,
                 self.warm_hit_rate()
+            )?;
+        }
+        if let Some(k) = &self.kernel {
+            write!(
+                f,
+                " kernel(nnz={}, density={:.3}, rank={}, mass_loss={:.2e})",
+                k.nnz,
+                k.density(),
+                k.rank,
+                k.mass_loss
             )?;
         }
         Ok(())
@@ -270,6 +311,27 @@ mod tests {
         assert!(line.contains("workers=["));
         assert!(line.contains("balance="));
         assert!(line.contains("warm(hits=4, misses=6"));
+    }
+
+    #[test]
+    fn kernel_gauge_tracks_structure_and_worst_loss() {
+        let mut s = Stats::default();
+        assert!(s.snapshot().kernel.is_none());
+        assert!(!s.snapshot().to_string().contains("kernel("));
+        s.record_kernel(KernelStats {
+            dim: 8,
+            nnz: 20,
+            rank: 8,
+            mass_loss: 1e-5,
+            frobenius_budget: 1e-6,
+        });
+        s.record_kernel(KernelStats::dense(8));
+        let snap = s.snapshot();
+        let k = snap.kernel.expect("gauge populated");
+        assert_eq!(k.nnz, 64, "latest structure wins");
+        assert!((k.mass_loss - 1e-5).abs() < 1e-18, "worst loss is sticky");
+        assert!((k.frobenius_budget - 1e-6).abs() < 1e-18, "worst budget is sticky");
+        assert!(snap.to_string().contains("kernel(nnz=64"));
     }
 
     #[test]

@@ -109,6 +109,31 @@ pub struct CoordinatorConfig {
     /// converge — and only converged solves populate the stores).
     /// `None` (the default) serves exactly as before.
     pub warm_start: Option<WarmStartConfig>,
+    /// Kernel materialization policy threaded into every CPU solve
+    /// config ([`crate::linalg::KernelPolicy`]): auto-resolved per
+    /// shape class (the default — dense normally, truncated once d·λ
+    /// crosses the sparsity-profitable threshold), or pinned to dense /
+    /// threshold-truncated CSR / pivoted-Cholesky low-rank. An explicit
+    /// `Dense` is an exactness guarantee: the auto router then never
+    /// swaps in an approximate kernel. This is the serving layer's
+    /// per-worker kernel memory knob — each executor worker owns one
+    /// private kernel instance (dense: ~2·d²·8 bytes; truncated:
+    /// ~2·nnz·8 + index bytes), so total kernel memory per shape class
+    /// is `cpu_workers × kernel`; [`crate::linalg::KernelPolicy::capped`]
+    /// picks a best-effort policy for an explicit byte budget (see its
+    /// docs for why truncation cannot squeeze arbitrarily). Caveat for
+    /// approximate kernels in *fixed-budget* serving (no `warm_start`):
+    /// a truncated support that admits no plan for some (r, c) is
+    /// numerically indistinguishable from ordinary unconverged mixing
+    /// at tiny budgets, so such pairs are served best-effort (runaway
+    /// divergence is still probed and rescued); prefer warm-start
+    /// (convergence-checked) serving with non-dense policies — there
+    /// the rescue contract is total and infeasible pairs always come
+    /// back log-domain-exact. Orthogonal to
+    /// `cpu_backend`: the policy shapes the operator inside whichever
+    /// backend runs (and `BackendKind::auto` independently routes high
+    /// d·λ classes to the truncated backend).
+    pub kernel: crate::linalg::KernelPolicy,
     /// ε-scaling schedule threaded into every CPU solve config. With the
     /// default [`LambdaSchedule::Fixed`] nothing anneals; a
     /// [`LambdaSchedule::Geometric`] accelerates cold solves in high-λ
@@ -160,6 +185,7 @@ impl Default for CoordinatorConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             cpu_backend: None,
+            kernel: crate::linalg::KernelPolicy::Auto,
             warm_start: None,
             anneal: LambdaSchedule::Fixed,
             batcher: BatcherConfig::default(),

@@ -119,6 +119,27 @@ impl DistanceService {
                 )));
             }
         }
+        // Same fail-fast treatment for the kernel policy: its parameter
+        // asserts otherwise fire inside the engine thread at the first
+        // cold CPU solve (KernelPolicy::build), killing every in-flight
+        // query long after startup looked healthy.
+        match config.kernel {
+            crate::linalg::KernelPolicy::Truncated { threshold } => {
+                if !(threshold >= 0.0 && threshold < 1.0) {
+                    return Err(ServiceError::InvalidConfig(format!(
+                        "truncation threshold must be in [0, 1) (got {threshold})"
+                    )));
+                }
+            }
+            crate::linalg::KernelPolicy::LowRank { tolerance, .. } => {
+                if !(tolerance >= 0.0 && tolerance.is_finite()) {
+                    return Err(ServiceError::InvalidConfig(format!(
+                        "low-rank tolerance must be finite and >= 0 (got {tolerance})"
+                    )));
+                }
+            }
+            crate::linalg::KernelPolicy::Dense | crate::linalg::KernelPolicy::Auto => {}
+        }
         let (tx, rx) = channel();
         let (init_tx, init_rx) = channel::<Result<(), ServiceError>>();
         let handle = std::thread::Builder::new()
@@ -396,6 +417,7 @@ impl EngineThread {
         // warm-start mode, a private store of converged scalings.
         let mut cfg = SinkhornConfig::fixed(lambda, self.config.cpu_iterations);
         cfg.schedule = self.config.anneal;
+        cfg.kernel = self.config.kernel;
         if let Some(ws) = self.config.warm_start {
             // Convergence-checked under the warm-start config's own cap:
             // warm hits terminate in a handful of iterations, and cold
@@ -429,6 +451,11 @@ impl EngineThread {
             jobs.iter().map(|j| j.query.c.clone()).collect();
         let (outputs, reports) = executor.solve_panel_paired(&rs, &cs);
         let dists: Vec<F> = outputs.into_iter().map(|o| o.value).collect();
+        // Kernel structure rides on the shard reports (identical across
+        // a pool's workers — one record per batch is enough).
+        if let Some(report) = reports.first() {
+            self.stats.record_kernel(report.kernel);
+        }
         for report in &reports {
             self.stats.record_worker(
                 report.worker,
@@ -784,6 +811,68 @@ mod tests {
         assert!(snap.warm_misses >= 1, "first query must miss: {snap}");
         assert!(snap.warm_hits >= 1, "repeats must hit: {snap}");
         assert!(snap.to_string().contains("warm("));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn malformed_kernel_policy_is_rejected_at_start() {
+        use crate::linalg::KernelPolicy;
+        for policy in [
+            KernelPolicy::Truncated { threshold: 1.0 },
+            KernelPolicy::Truncated { threshold: -0.1 },
+            KernelPolicy::Truncated { threshold: F::NAN },
+            KernelPolicy::LowRank { max_rank: 0, tolerance: -1.0 },
+            KernelPolicy::LowRank { max_rank: 0, tolerance: F::INFINITY },
+        ] {
+            let mut config = CoordinatorConfig::cpu_only();
+            config.kernel = policy;
+            let err = DistanceService::start(config).unwrap_err();
+            assert!(
+                matches!(err, ServiceError::InvalidConfig(_)),
+                "expected InvalidConfig for {policy:?}, got {err}"
+            );
+        }
+        // Well-formed policies still start.
+        let mut config = CoordinatorConfig::cpu_only();
+        config.kernel = KernelPolicy::Truncated { threshold: 1e-6 };
+        DistanceService::start(config).unwrap().shutdown();
+    }
+
+    #[test]
+    fn kernel_policy_is_threaded_and_reported() {
+        use crate::linalg::KernelPolicy;
+        let mut config = CoordinatorConfig::cpu_only();
+        config.kernel = KernelPolicy::Truncated { threshold: 1e-6 };
+        config.cpu_iterations = 200;
+        config.batcher = BatcherConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(1),
+            ..BatcherConfig::default()
+        };
+        let svc = DistanceService::start(config).unwrap();
+        let mut rng = seeded_rng(12);
+        let m = RandomMetric::new(12).sample(&mut rng);
+        svc.register_metric(MetricId(0), m.clone()).unwrap();
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        // λ=30 puts plenty of kernel mass under the threshold without
+        // approaching the underflow (log-domain) regime.
+        let res = svc
+            .distance(Query { metric: MetricId(0), lambda: 30.0, r: r.clone(), c: c.clone() })
+            .unwrap();
+        assert_eq!(res.engine, EngineKind::Cpu);
+        let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(30.0, 200))
+            .distance(&r, &c)
+            .value;
+        assert!(
+            (res.distance - want).abs() < 1e-3 * (1.0 + want),
+            "truncated serving {} vs dense {want}",
+            res.distance
+        );
+        let snap = svc.stats().unwrap();
+        let kernel = snap.kernel.expect("kernel gauge after a CPU batch");
+        assert!(kernel.nnz < 12 * 12, "policy must reach the executor: {kernel:?}");
+        assert!(snap.to_string().contains("kernel(nnz="));
         svc.shutdown();
     }
 

@@ -74,6 +74,7 @@ pub mod prelude {
     };
     pub use crate::data::{DigitClass, SyntheticDigits};
     pub use crate::distances::{ClassicalDistance, KernelBuilder};
+    pub use crate::linalg::{KernelOp, KernelPolicy, KernelStats};
     pub use crate::metric::{CostMatrix, GridMetric, RandomMetric};
     pub use crate::ot::{EmdSolver, TransportPlan};
     pub use crate::rng::Rng;

@@ -1,0 +1,1079 @@
+//! Kernel operators — the Gibbs kernel K = e^{−λM} as a *linear
+//! operator* rather than a dense matrix.
+//!
+//! Every Sinkhorn iteration only ever needs K through four operations:
+//! `K·x`, `Kᵀ·x`, their panel (column-stacked) forms, and the final
+//! transport-cost read-off Σ u_i K_ij m_ij v_j. The [`KernelOp`] trait
+//! captures exactly that contract, which frees the solvers from the
+//! dense `d×d` representation and unlocks the two structures the
+//! literature exploits at scale:
+//!
+//! * [`SparseKernel`] — CSR truncation. At serving-scale λ most entries
+//!   of e^{−λM} are negligibly small (Altschuler, Weed & Rigollet 2017
+//!   reach near-linear time on exactly this observation); entries below
+//!   `threshold`·(row max) are dropped, with the per-row relative
+//!   dropped mass tracked and reported as [`KernelOp::mass_loss`].
+//! * [`LowRankKernel`] — a pivoted-Cholesky factorization K ≈ L·Lᵀ
+//!   (Motamed 2020 style): rank grows greedily on the largest residual
+//!   diagonal until the trace residual falls below a tolerance, so the
+//!   per-iteration cost drops from O(d²) to O(d·rank).
+//!
+//! [`DenseKernel`] wraps the classic row-major K/Kᵀ pair at zero cost —
+//! its `apply*` loops are bit-identical to the historical solver inner
+//! loops, so rewiring the engines through the trait changed no numbers.
+//! [`KernelPolicy`] is the construction-side knob threaded through
+//! `SinkhornConfig` → `CoordinatorConfig` → `ShardedExecutor`.
+
+use super::{dot, pivoted_cholesky, Matrix};
+use crate::F;
+
+/// Default relative truncation threshold for [`KernelPolicy::Truncated`]
+/// when a backend forces truncation without an explicit policy
+/// (entries below threshold·row-max are dropped; the row max is 1 for
+/// any zero-diagonal metric).
+pub const DEFAULT_TRUNCATION_THRESHOLD: F = 1e-6;
+
+/// Default relative trace tolerance for [`KernelPolicy::LowRank`]: rank
+/// grows until the pivoted-Cholesky trace residual drops below
+/// tolerance·trace(K).
+pub const DEFAULT_LOWRANK_TOLERANCE: F = 1e-9;
+
+/// Safety radius of the truncation cut, in units of the median
+/// off-diagonal ground cost: whatever the value threshold asks, entries
+/// with m_ij ≤ radius·median(M) are always kept. Without this floor a
+/// fixed value threshold at serving-scale λ reduces e^{−λM} to its
+/// diagonal — the off-diagonal mass is negligible *as mass* but
+/// load-bearing *as transport routes*, and a route-free kernel makes
+/// every r ≠ c infeasible. Below the median radius the kept entry count
+/// stays strictly under half the dense count.
+pub const TRUNCATION_SAFE_RADIUS: F = 0.9;
+
+/// `d·λ` above which [`KernelPolicy::Auto`] (and `BackendKind::auto`)
+/// consider truncation profitable: past this product the kernel has
+/// enough sub-threshold entries that CSR streaming beats the dense
+/// sweep. Calibrated on the paper's λ-quantile workloads (λ ∈ {50, 100}
+/// at d ≥ 128 sit well above; the d ≤ 64, λ ≤ 20 bench grid well
+/// below). Applied together with [`AUTO_SPARSITY_LAMBDA_MEDIAN`] — the
+/// d·λ product alone is metric-scale-blind.
+pub const AUTO_SPARSITY_DLAMBDA: F = 4096.0;
+
+/// `λ·median(M)` above which truncation actually bites: past this
+/// point the default value threshold falls below the safety-radius cut
+/// e^{−λ·0.9·median}, so the truncated kernel reaches its full
+/// ~30–45% density. Below it (e.g. a metric with costs ≪ 1/λ) the
+/// default threshold drops little or nothing and CSR streaming would
+/// only add index overhead, so the auto router stays dense. The value
+/// is ln(1e-6⁻¹)/0.9 ≈ 15.3, rounded up.
+pub const AUTO_SPARSITY_LAMBDA_MEDIAN: F = 16.0;
+
+/// Structure report of a kernel operator: what one worker actually holds
+/// and streams per iteration. Flows through `ShardReport` and the
+/// coordinator metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelStats {
+    /// Histogram dimension d the operator acts on.
+    pub dim: usize,
+    /// Entries streamed by one `apply` (d² dense, stored entries for
+    /// CSR, 2·d·rank for a factored kernel) — the per-iteration flop
+    /// proxy: one iteration costs ~2·nnz multiply-adds per solve pass.
+    pub nnz: usize,
+    /// Factorization rank (d for unfactored kernels).
+    pub rank: usize,
+    /// Worst-case per-row relative kernel mass discarded by the
+    /// approximation (0 for the dense kernel): truncation reports the
+    /// max over rows of dropped/total row mass, the low-rank kernel its
+    /// relative trace residual.
+    pub mass_loss: F,
+    /// Upper bound on ‖K − K̃‖_F (0 when exact).
+    pub frobenius_budget: F,
+}
+
+impl KernelStats {
+    /// The stats of an exact dense kernel of dimension d.
+    pub fn dense(d: usize) -> Self {
+        Self { dim: d, nnz: d * d, rank: d, mass_loss: 0.0, frobenius_budget: 0.0 }
+    }
+
+    /// Fraction of the dense entry count this operator streams per
+    /// apply (1.0 = no savings).
+    pub fn density(&self) -> F {
+        if self.dim == 0 {
+            return 1.0;
+        }
+        self.nnz as F / (self.dim * self.dim) as F
+    }
+}
+
+/// How solvers materialize the Gibbs kernel K = e^{−λM}. `Copy` so it
+/// threads through `SinkhornConfig` like every other solver knob.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum KernelPolicy {
+    /// Full dense K and Kᵀ (the classic path; exact).
+    #[default]
+    Dense,
+    /// CSR truncation: drop entries below `threshold`·(row max).
+    /// `threshold = 0` keeps every representable entry and reproduces
+    /// the dense iteration bit-for-bit.
+    Truncated {
+        /// Relative drop threshold in [0, 1).
+        threshold: F,
+    },
+    /// Pivoted-Cholesky factorization K ≈ L·Lᵀ. Rank grows until the
+    /// trace residual falls below `tolerance`·trace(K) or `max_rank`
+    /// columns (0 = uncapped) are built; `tolerance = 0` with an
+    /// uncapped rank factors to numerical full rank, reproducing the
+    /// dense kernel to machine precision.
+    LowRank {
+        /// Hard rank cap (0 = up to d).
+        max_rank: usize,
+        /// Relative trace-residual stopping tolerance.
+        tolerance: F,
+    },
+    /// Resolve per (d, λ): truncated once d·λ crosses
+    /// [`AUTO_SPARSITY_DLAMBDA`], dense otherwise.
+    Auto,
+}
+
+impl KernelPolicy {
+    /// Truncation at the default threshold.
+    pub fn truncated_default() -> Self {
+        KernelPolicy::Truncated { threshold: DEFAULT_TRUNCATION_THRESHOLD }
+    }
+
+    /// Low-rank factorization at the default trace tolerance, uncapped.
+    pub fn low_rank_default() -> Self {
+        KernelPolicy::LowRank { max_rank: 0, tolerance: DEFAULT_LOWRANK_TOLERANCE }
+    }
+
+    /// Pick the representation for a `max_bytes`-per-worker budget at
+    /// dimension d: dense when the classic K/Kᵀ pair (2·d²·8 bytes)
+    /// fits, default truncation otherwise. Each `ShardedExecutor`
+    /// worker owns one kernel instance, so the executor footprint is
+    /// `workers × kernel`. Best-effort, not a hard cap: truncation
+    /// shrinks the kernel to its achieved nnz (~30–45% of d² on the
+    /// benchmark metrics — [`TRUNCATION_SAFE_RADIUS`] deliberately
+    /// keeps every below-median-radius entry, so no threshold can
+    /// squeeze an arbitrary budget); check the executor's
+    /// `kernel_stats().nnz` when the budget is strict.
+    pub fn capped(d: usize, max_bytes: usize) -> Self {
+        let dense_bytes = 2 * d * d * std::mem::size_of::<F>();
+        if dense_bytes <= max_bytes {
+            KernelPolicy::Dense
+        } else {
+            Self::truncated_default()
+        }
+    }
+
+    /// Collapse [`KernelPolicy::Auto`] to a concrete policy for the
+    /// row-major d×d ground metric `m` at λ; concrete policies return
+    /// themselves. Truncation is picked only when it is both *worth
+    /// amortizing* (d·λ ≥ [`AUTO_SPARSITY_DLAMBDA`]) and *actually
+    /// sparse on this metric's scale*
+    /// (λ·median(M) ≥ [`AUTO_SPARSITY_LAMBDA_MEDIAN`]).
+    pub fn resolve(&self, m: &[F], d: usize, lambda: F) -> KernelPolicy {
+        match *self {
+            KernelPolicy::Auto => {
+                if d as F * lambda >= AUTO_SPARSITY_DLAMBDA
+                    && lambda * median_off_diagonal(m, d)
+                        >= AUTO_SPARSITY_LAMBDA_MEDIAN
+                {
+                    Self::truncated_default()
+                } else {
+                    KernelPolicy::Dense
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Build the operator for K = e^{−λM} over the row-major d×d ground
+    /// metric `m`. A low-rank factorization that achieves rank 0 (K
+    /// numerically indefinite from entry one — only possible on a
+    /// non-PSD kernel) falls back to the dense operator rather than
+    /// returning an unusable zero operator.
+    pub fn build(&self, m: &[F], d: usize, lambda: F) -> Box<dyn KernelOp> {
+        assert_eq!(m.len(), d * d, "kernel build: metric/shape mismatch");
+        assert!(lambda > 0.0, "kernel build: lambda must be positive");
+        match self.resolve(m, d, lambda) {
+            KernelPolicy::Dense => Box::new(DenseKernel::build(m, d, lambda)),
+            KernelPolicy::Truncated { threshold } => {
+                assert!(
+                    (0.0..1.0).contains(&threshold),
+                    "truncation threshold must be in [0, 1)"
+                );
+                Box::new(SparseKernel::build(m, d, lambda, threshold))
+            }
+            KernelPolicy::LowRank { max_rank, tolerance } => {
+                assert!(tolerance >= 0.0, "low-rank tolerance must be >= 0");
+                match LowRankKernel::build(m, d, lambda, max_rank, tolerance) {
+                    Some(k) => Box::new(k),
+                    None => Box::new(DenseKernel::build(m, d, lambda)),
+                }
+            }
+            KernelPolicy::Auto => unreachable!("resolve() returns concrete policies"),
+        }
+    }
+}
+
+/// The Gibbs kernel as a linear operator: everything a Sinkhorn-family
+/// solver needs from K = e^{−λM}, without committing to a dense d×d
+/// representation. Panels are (d, n) row-major column stacks, matching
+/// the batch solvers' layout.
+pub trait KernelOp: Send + Sync {
+    /// Histogram dimension d (operators are square).
+    fn dim(&self) -> usize;
+
+    /// out = K·x.
+    fn apply(&self, x: &[F], out: &mut [F]);
+
+    /// out = Kᵀ·x.
+    fn apply_transpose(&self, x: &[F], out: &mut [F]);
+
+    /// Panel form of [`Self::apply`]: X and OUT are (d, n) row-major.
+    fn apply_panel(&self, x: &[F], out: &mut [F], n: usize);
+
+    /// Panel form of [`Self::apply_transpose`].
+    fn apply_transpose_panel(&self, x: &[F], out: &mut [F], n: usize);
+
+    /// Materialize row i of K̃ into `out` (length d). Cold path: used by
+    /// plan reconstruction and the default cost read-offs, never inside
+    /// the iteration.
+    fn write_row(&self, i: usize, out: &mut [F]);
+
+    /// Entries streamed by one apply (see [`KernelStats::nnz`]).
+    fn nnz(&self) -> usize;
+
+    /// Factorization rank (d for unfactored kernels).
+    fn rank(&self) -> usize;
+
+    /// Worst-case per-row relative kernel mass the approximation
+    /// discards (0 when exact). Tests widen their marginal-feasibility
+    /// tolerances by this amount.
+    fn mass_loss(&self) -> F;
+
+    /// Upper bound on ‖K − K̃‖_F (0 when exact).
+    fn frobenius_budget(&self) -> F;
+
+    /// Row sums K·1 (the row marginals of the unscaled kernel).
+    fn row_sums(&self) -> Vec<F> {
+        let d = self.dim();
+        let ones = vec![1.0; d];
+        let mut out = vec![0.0; d];
+        self.apply(&ones, &mut out);
+        out
+    }
+
+    /// Column sums Kᵀ·1.
+    fn col_sums(&self) -> Vec<F> {
+        let d = self.dim();
+        let ones = vec![1.0; d];
+        let mut out = vec![0.0; d];
+        self.apply_transpose(&ones, &mut out);
+        out
+    }
+
+    /// The transport-cost read-off Σ_ij u_i K̃_ij m_ij v_j against the
+    /// row-major ground metric `m`, evaluated over this operator's
+    /// support without materializing K∘M.
+    fn transport_cost(&self, u: &[F], m: &[F], v: &[F]) -> F {
+        let d = self.dim();
+        let mut krow = vec![0.0; d];
+        let mut value = 0.0;
+        for i in 0..d {
+            self.write_row(i, &mut krow);
+            let mrow = &m[i * d..(i + 1) * d];
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += krow[j] * mrow[j] * v[j];
+            }
+            value += u[i] * acc;
+        }
+        value
+    }
+
+    /// Panel form of [`Self::transport_cost`]: U, V are (d, n) panels,
+    /// `out` receives the n per-column costs.
+    fn transport_cost_panel(&self, u: &[F], m: &[F], v: &[F], n: usize, out: &mut [F]) {
+        let d = self.dim();
+        let mut krow = vec![0.0; d];
+        let mut row_acc = vec![0.0; n];
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..d {
+            self.write_row(i, &mut krow);
+            let mrow = &m[i * d..(i + 1) * d];
+            row_acc.iter_mut().for_each(|x| *x = 0.0);
+            for kk in 0..d {
+                let w = krow[kk] * mrow[kk];
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = &v[kk * n..(kk + 1) * n];
+                for (acc, &vj) in row_acc.iter_mut().zip(vrow) {
+                    *acc += w * vj;
+                }
+            }
+            let urow = &u[i * n..(i + 1) * n];
+            for j in 0..n {
+                out[j] += urow[j] * row_acc[j];
+            }
+        }
+    }
+
+    /// Dense d×d reconstruction of K̃ (diagnostics and tests only).
+    fn materialize(&self) -> Matrix {
+        let d = self.dim();
+        let mut out = Matrix::zeros(d, d);
+        for i in 0..d {
+            self.write_row(i, out.row_mut(i));
+        }
+        out
+    }
+
+    /// The structure report.
+    fn stats(&self) -> KernelStats {
+        KernelStats {
+            dim: self.dim(),
+            nnz: self.nnz(),
+            rank: self.rank(),
+            mass_loss: self.mass_loss(),
+            frobenius_budget: self.frobenius_budget(),
+        }
+    }
+}
+
+/// Median off-diagonal ground cost of a row-major d×d metric — the
+/// scale the truncation safety radius and the Auto profitability rule
+/// are expressed in (0 when there is no off-diagonal).
+fn median_off_diagonal(m: &[F], d: usize) -> F {
+    let off: Vec<F> = (0..d)
+        .flat_map(|i| (0..d).filter(move |&j| j != i).map(move |j| m[i * d + j]))
+        .collect();
+    if off.is_empty() {
+        0.0
+    } else {
+        super::median(&off)
+    }
+}
+
+/// The exact dense kernel: K and Kᵀ both row-major, as every solver
+/// held them before the trait existed. The apply loops reproduce the
+/// historical inner loops bit-for-bit (scalar applies accumulate with
+/// the unrolled [`dot`], panel applies stream K row-major skipping
+/// exact zeros), so this wrapper is numerically invisible.
+pub struct DenseKernel {
+    d: usize,
+    /// K = exp(−λM), row-major.
+    k: Vec<F>,
+    /// Kᵀ row-major (K column-major), for contiguous transpose sweeps.
+    kt: Vec<F>,
+}
+
+impl DenseKernel {
+    /// Materialize K = e^{−λM} and its transpose.
+    pub fn build(m: &[F], d: usize, lambda: F) -> Self {
+        let mut k = vec![0.0; d * d];
+        for (out, &mij) in k.iter_mut().zip(m) {
+            *out = (-lambda * mij).exp();
+        }
+        let mut kt = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                kt[j * d + i] = k[i * d + j];
+            }
+        }
+        Self { d, k, kt }
+    }
+
+    /// Row-major K (tests and the degenerate-kernel probe).
+    pub fn data(&self) -> &[F] {
+        &self.k
+    }
+}
+
+/// out = mat·x over a row-major (d, d) buffer: one [`dot`] per row.
+fn dense_apply(mat: &[F], d: usize, x: &[F], out: &mut [F]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(&mat[i * d..(i + 1) * d], x);
+    }
+}
+
+/// Panel out = mat·X, accumulated row by row over X's rows (the cache
+/// pattern the interleaved batch walk is built on).
+fn dense_apply_panel(mat: &[F], d: usize, x: &[F], out: &mut [F], n: usize) {
+    for i in 0..d {
+        let mrow = &mat[i * d..(i + 1) * d];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.iter_mut().for_each(|o| *o = 0.0);
+        for (kk, &mik) in mrow.iter().enumerate() {
+            if mik == 0.0 {
+                continue;
+            }
+            let xrow = &x[kk * n..(kk + 1) * n];
+            for (o, &xv) in orow.iter_mut().zip(xrow) {
+                *o += mik * xv;
+            }
+        }
+    }
+}
+
+impl KernelOp for DenseKernel {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[F], out: &mut [F]) {
+        dense_apply(&self.k, self.d, x, out);
+    }
+
+    fn apply_transpose(&self, x: &[F], out: &mut [F]) {
+        dense_apply(&self.kt, self.d, x, out);
+    }
+
+    fn apply_panel(&self, x: &[F], out: &mut [F], n: usize) {
+        dense_apply_panel(&self.k, self.d, x, out, n);
+    }
+
+    fn apply_transpose_panel(&self, x: &[F], out: &mut [F], n: usize) {
+        dense_apply_panel(&self.kt, self.d, x, out, n);
+    }
+
+    fn write_row(&self, i: usize, out: &mut [F]) {
+        out.copy_from_slice(&self.k[i * self.d..(i + 1) * self.d]);
+    }
+
+    fn nnz(&self) -> usize {
+        self.d * self.d
+    }
+
+    fn rank(&self) -> usize {
+        self.d
+    }
+
+    fn mass_loss(&self) -> F {
+        0.0
+    }
+
+    fn frobenius_budget(&self) -> F {
+        0.0
+    }
+
+    fn transport_cost(&self, u: &[F], m: &[F], v: &[F]) -> F {
+        let d = self.d;
+        let mut value = 0.0;
+        for i in 0..d {
+            let krow = &self.k[i * d..(i + 1) * d];
+            let mrow = &m[i * d..(i + 1) * d];
+            let mut acc = 0.0;
+            for j in 0..d {
+                acc += krow[j] * mrow[j] * v[j];
+            }
+            value += u[i] * acc;
+        }
+        value
+    }
+}
+
+/// CSR truncation of the Gibbs kernel: entries K_ij ≤ threshold·(row
+/// max) are dropped at build time, and every solver pass streams only
+/// the survivors. The per-row relative dropped mass is tracked so
+/// downstream accuracy claims can be widened by exactly what was
+/// discarded.
+pub struct SparseKernel {
+    d: usize,
+    /// CSR row offsets (d + 1 entries).
+    row_ptr: Vec<usize>,
+    /// Column index per stored entry.
+    cols: Vec<usize>,
+    /// Kernel value per stored entry.
+    vals: Vec<F>,
+    /// The relative threshold the kernel was built with.
+    threshold: F,
+    /// max over rows of dropped/total row mass.
+    mass_loss: F,
+    /// sqrt(Σ dropped²) — exact ‖K − K̃‖_F.
+    frobenius: F,
+}
+
+impl SparseKernel {
+    /// Threshold-truncate K = e^{−λM}. `threshold` is relative to each
+    /// row's largest entry (1 for zero-diagonal metrics); `threshold =
+    /// 0` keeps every positive entry, reproducing the dense iteration
+    /// bit-for-bit (dense sweeps skip exact zeros too).
+    ///
+    /// The cut is floored at e^{−λ·[`TRUNCATION_SAFE_RADIUS`]·median(M)}:
+    /// entries inside the safety radius survive any threshold, so the
+    /// kernel keeps every bin's transport-carrying neighborhood at
+    /// arbitrarily large λ (where the *entire* off-diagonal falls below
+    /// any fixed value threshold) while the kept count stays strictly
+    /// below half the dense count once the radius binds.
+    pub fn build(m: &[F], d: usize, lambda: F, threshold: F) -> Self {
+        // Median off-diagonal ground cost, for the safety-radius floor.
+        // λ-independent, so the O(d² log d) sort is redundant across the
+        // anneal prefix's per-stage rebuilds — tolerated because builds
+        // are amortized over full solves and the builder API stays
+        // (m, d, λ, threshold); cache it here if stage builds ever show
+        // up in a profile. (median = 0, e.g. d = 1, degenerates the
+        // floor to e⁰ = 1 ≥ every entry, leaving the plain threshold.)
+        let radius_cut =
+            (-lambda * TRUNCATION_SAFE_RADIUS * median_off_diagonal(m, d)).exp();
+        let mut row_ptr = Vec::with_capacity(d + 1);
+        row_ptr.push(0);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut mass_loss: F = 0.0;
+        let mut frob2: F = 0.0;
+        for i in 0..d {
+            let mrow = &m[i * d..(i + 1) * d];
+            // Row max of e^{−λm} is e^{−λ·min(m)} — no second exp pass.
+            let mmin = mrow.iter().cloned().fold(F::INFINITY, F::min);
+            let cut = F::min(threshold * (-lambda * mmin).exp(), radius_cut);
+            let mut kept: F = 0.0;
+            let mut dropped: F = 0.0;
+            for (j, &mij) in mrow.iter().enumerate() {
+                let v = (-lambda * mij).exp();
+                if v > cut {
+                    cols.push(j);
+                    vals.push(v);
+                    kept += v;
+                } else {
+                    dropped += v;
+                    frob2 += v * v;
+                }
+            }
+            row_ptr.push(cols.len());
+            let total = kept + dropped;
+            if total > 0.0 {
+                mass_loss = mass_loss.max(dropped / total);
+            }
+        }
+        Self { d, row_ptr, cols, vals, threshold, mass_loss, frobenius: frob2.sqrt() }
+    }
+
+    /// The relative threshold this kernel was truncated at.
+    pub fn threshold(&self) -> F {
+        self.threshold
+    }
+}
+
+impl KernelOp for SparseKernel {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[F], out: &mut [F]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[p] * x[self.cols[p]];
+            }
+            *o = acc;
+        }
+    }
+
+    fn apply_transpose(&self, x: &[F], out: &mut [F]) {
+        // Scatter over rows: for fixed output j the contributions
+        // arrive in ascending i, the same order a dense Kᵀ row sweep
+        // accumulates them.
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..self.d {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                out[self.cols[p]] += self.vals[p] * xi;
+            }
+        }
+    }
+
+    fn apply_panel(&self, x: &[F], out: &mut [F], n: usize) {
+        for i in 0..self.d {
+            let orow = &mut out[i * n..(i + 1) * n];
+            orow.iter_mut().for_each(|o| *o = 0.0);
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.vals[p];
+                let xrow = &x[self.cols[p] * n..(self.cols[p] + 1) * n];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += v * xv;
+                }
+            }
+        }
+    }
+
+    fn apply_transpose_panel(&self, x: &[F], out: &mut [F], n: usize) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..self.d {
+            let xrow = &x[i * n..(i + 1) * n];
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let v = self.vals[p];
+                let orow = &mut out[self.cols[p] * n..(self.cols[p] + 1) * n];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += v * xv;
+                }
+            }
+        }
+    }
+
+    fn write_row(&self, i: usize, out: &mut [F]) {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+            out[self.cols[p]] = self.vals[p];
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    fn rank(&self) -> usize {
+        self.d
+    }
+
+    fn mass_loss(&self) -> F {
+        self.mass_loss
+    }
+
+    fn frobenius_budget(&self) -> F {
+        self.frobenius
+    }
+
+    fn transport_cost(&self, u: &[F], m: &[F], v: &[F]) -> F {
+        let d = self.d;
+        let mut value = 0.0;
+        for i in 0..d {
+            let mrow = &m[i * d..(i + 1) * d];
+            let mut acc = 0.0;
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[p];
+                acc += self.vals[p] * mrow[j] * v[j];
+            }
+            value += u[i] * acc;
+        }
+        value
+    }
+
+    fn transport_cost_panel(&self, u: &[F], m: &[F], v: &[F], n: usize, out: &mut [F]) {
+        let d = self.d;
+        let mut row_acc = vec![0.0; n];
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..d {
+            let mrow = &m[i * d..(i + 1) * d];
+            row_acc.iter_mut().for_each(|x| *x = 0.0);
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[p];
+                let w = self.vals[p] * mrow[j];
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = &v[j * n..(j + 1) * n];
+                for (acc, &vj) in row_acc.iter_mut().zip(vrow) {
+                    *acc += w * vj;
+                }
+            }
+            let urow = &u[i * n..(i + 1) * n];
+            for j in 0..n {
+                out[j] += urow[j] * row_acc[j];
+            }
+        }
+    }
+}
+
+/// Pivoted-Cholesky low-rank kernel K ≈ L·Lᵀ (L is d×rank, row-major).
+/// Applies cost 2·d·rank multiply-adds instead of d². Only meaningful
+/// for symmetric PSD kernels — e^{−λ‖·‖} Gibbs kernels over Euclidean
+/// point clouds qualify (completely monotone radial functions are PD by
+/// Schoenberg's theorem); an indefinite kernel simply stops the
+/// factorization early and reports the larger residual.
+///
+/// The transport-cost read-off stays at the default `write_row`-based
+/// O(d²·rank) (amortized over the panel width): it fuses with the
+/// dense, unstructured M, so no factored shortcut exists without
+/// caching a dense K∘M — a once-per-solve cost of a few dozen
+/// iteration-equivalents, versus the per-iteration saving the
+/// factorization buys hundreds of times per solve.
+pub struct LowRankKernel {
+    d: usize,
+    rank: usize,
+    /// L, row-major d×rank.
+    l: Vec<F>,
+    /// Trace residual trace(K − LLᵀ), clamped ≥ 0.
+    residual: F,
+    /// residual / trace(K): the relative spectral mass discarded.
+    rel_residual: F,
+}
+
+impl LowRankKernel {
+    /// Factor K = e^{−λM}. Returns `None` when not even one pivot is
+    /// positive (the caller falls back to the dense kernel). The d×d
+    /// kernel is materialized transiently for the factorization — the
+    /// saving is in what the solver *holds and streams per iteration*,
+    /// not in build-time memory.
+    pub fn build(m: &[F], d: usize, lambda: F, max_rank: usize, tolerance: F) -> Option<Self> {
+        let mut k = Matrix::zeros(d, d);
+        for i in 0..d {
+            let mrow = &m[i * d..(i + 1) * d];
+            let krow = k.row_mut(i);
+            for (out, &mij) in krow.iter_mut().zip(mrow) {
+                *out = (-lambda * mij).exp();
+            }
+        }
+        let trace: F = (0..d).map(|i| k.get(i, i)).sum();
+        let (l, residual) = pivoted_cholesky(&k, max_rank, tolerance * trace);
+        let rank = l.cols();
+        if rank == 0 {
+            return None;
+        }
+        let rel = if trace > 0.0 { residual / trace } else { 0.0 };
+        Some(Self { d, rank, l: l.data().to_vec(), residual, rel_residual: rel })
+    }
+
+    /// t = Lᵀ·x (length rank).
+    fn project(&self, x: &[F], t: &mut [F]) {
+        t.iter_mut().for_each(|v| *v = 0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let lrow = &self.l[i * self.rank..(i + 1) * self.rank];
+            for (tv, &lv) in t.iter_mut().zip(lrow) {
+                *tv += lv * xi;
+            }
+        }
+    }
+}
+
+impl KernelOp for LowRankKernel {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[F], out: &mut [F]) {
+        // out = L (Lᵀ x): two O(d·rank) passes.
+        let mut t = vec![0.0; self.rank];
+        self.project(x, &mut t);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = dot(&self.l[i * self.rank..(i + 1) * self.rank], &t);
+        }
+    }
+
+    fn apply_transpose(&self, x: &[F], out: &mut [F]) {
+        // L·Lᵀ is symmetric by construction.
+        self.apply(x, out);
+    }
+
+    fn apply_panel(&self, x: &[F], out: &mut [F], n: usize) {
+        // T = Lᵀ·X (rank, n), OUT = L·T.
+        let mut t = vec![0.0; self.rank * n];
+        for i in 0..self.d {
+            let lrow = &self.l[i * self.rank..(i + 1) * self.rank];
+            let xrow = &x[i * n..(i + 1) * n];
+            for (kk, &lv) in lrow.iter().enumerate() {
+                if lv == 0.0 {
+                    continue;
+                }
+                let trow = &mut t[kk * n..(kk + 1) * n];
+                for (tv, &xv) in trow.iter_mut().zip(xrow) {
+                    *tv += lv * xv;
+                }
+            }
+        }
+        for i in 0..self.d {
+            let lrow = &self.l[i * self.rank..(i + 1) * self.rank];
+            let orow = &mut out[i * n..(i + 1) * n];
+            orow.iter_mut().for_each(|o| *o = 0.0);
+            for (kk, &lv) in lrow.iter().enumerate() {
+                if lv == 0.0 {
+                    continue;
+                }
+                let trow = &t[kk * n..(kk + 1) * n];
+                for (o, &tv) in orow.iter_mut().zip(trow) {
+                    *o += lv * tv;
+                }
+            }
+        }
+    }
+
+    fn apply_transpose_panel(&self, x: &[F], out: &mut [F], n: usize) {
+        self.apply_panel(x, out, n);
+    }
+
+    fn write_row(&self, i: usize, out: &mut [F]) {
+        let lrow = &self.l[i * self.rank..(i + 1) * self.rank];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(lrow, &self.l[j * self.rank..(j + 1) * self.rank]);
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        // One apply streams L twice (project + expand).
+        2 * self.d * self.rank
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn mass_loss(&self) -> F {
+        self.rel_residual
+    }
+
+    fn frobenius_budget(&self) -> F {
+        // For PSD K the residual K − LLᵀ is itself PSD (a Schur
+        // complement), so ‖K − LLᵀ‖_F ≤ trace(K − LLᵀ).
+        self.residual
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::simplex::seeded_rng;
+
+    fn gibbs(d: usize, lambda: F, seed: u64) -> (Vec<F>, usize, F) {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        (m.data().to_vec(), d, lambda)
+    }
+
+    fn rand_vec(d: usize, seed: u64) -> Vec<F> {
+        let mut rng = seeded_rng(seed);
+        (0..d).map(|_| rng.range_f64(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn dense_kernel_matches_manual_matvec() {
+        let (m, d, lam) = gibbs(9, 7.0, 0);
+        let k = DenseKernel::build(&m, d, lam);
+        let x = rand_vec(d, 1);
+        let mut out = vec![0.0; d];
+        k.apply(&x, &mut out);
+        for i in 0..d {
+            let want: F =
+                (0..d).map(|j| (-lam * m[i * d + j]).exp() * x[j]).sum();
+            assert!((out[i] - want).abs() < 1e-12);
+        }
+        let mut tout = vec![0.0; d];
+        k.apply_transpose(&x, &mut tout);
+        for j in 0..d {
+            let want: F =
+                (0..d).map(|i| (-lam * m[i * d + j]).exp() * x[i]).sum();
+            assert!((tout[j] - want).abs() < 1e-12);
+        }
+        assert_eq!(k.stats(), KernelStats::dense(d));
+    }
+
+    #[test]
+    fn zero_threshold_truncation_is_exactly_dense() {
+        let (m, d, lam) = gibbs(10, 9.0, 2);
+        let dense = DenseKernel::build(&m, d, lam);
+        let sparse = SparseKernel::build(&m, d, lam, 0.0);
+        assert_eq!(sparse.mass_loss(), 0.0);
+        assert_eq!(sparse.frobenius_budget(), 0.0);
+        let x = rand_vec(d, 3);
+        let (mut a, mut b) = (vec![0.0; d], vec![0.0; d]);
+        dense.apply(&x, &mut a);
+        sparse.apply(&x, &mut b);
+        for (av, bv) in a.iter().zip(&b) {
+            assert!((av - bv).abs() < 1e-14);
+        }
+        // Panel applies are bit-identical: same values added in the
+        // same order per output slot.
+        let n = 3;
+        let xp = rand_vec(d * n, 4);
+        let (mut ap, mut bp) = (vec![0.0; d * n], vec![0.0; d * n]);
+        dense.apply_panel(&xp, &mut ap, n);
+        sparse.apply_panel(&xp, &mut bp, n);
+        assert_eq!(ap, bp);
+        dense.apply_transpose_panel(&xp, &mut ap, n);
+        sparse.apply_transpose_panel(&xp, &mut bp, n);
+        assert_eq!(ap, bp);
+    }
+
+    #[test]
+    fn truncation_drops_mass_and_reports_it() {
+        let (m, d, lam) = gibbs(16, 20.0, 5);
+        let sparse = SparseKernel::build(&m, d, lam, 1e-3);
+        assert!(sparse.nnz() < d * d, "high λ must truncate something");
+        assert!(sparse.mass_loss() > 0.0);
+        assert!(sparse.frobenius_budget() > 0.0);
+        // The dropped mass is bounded by the threshold times the row
+        // width (each dropped entry is below threshold·rowmax and the
+        // row total is at least the diagonal 1).
+        assert!(sparse.mass_loss() <= 1e-3 * d as F);
+        // Row sums match the dense row sums up to the dropped mass.
+        let dense = DenseKernel::build(&m, d, lam);
+        for (s, ds) in sparse.row_sums().iter().zip(dense.row_sums()) {
+            assert!(*s <= ds + 1e-15);
+            assert!((ds - s) / ds <= sparse.mass_loss() + 1e-15);
+        }
+    }
+
+    #[test]
+    fn low_rank_full_tolerance_zero_reconstructs() {
+        let (m, d, lam) = gibbs(12, 6.0, 7);
+        let lr = LowRankKernel::build(&m, d, lam, 0, 0.0).expect("PD kernel");
+        assert!(lr.rank() <= d);
+        let dense = DenseKernel::build(&m, d, lam);
+        let rec = lr.materialize();
+        for i in 0..d {
+            for j in 0..d {
+                let want = dense.data()[i * d + j];
+                assert!(
+                    (rec.get(i, j) - want).abs() < 1e-10,
+                    "({i},{j}): {} vs {want}",
+                    rec.get(i, j)
+                );
+            }
+        }
+        let x = rand_vec(d, 8);
+        let (mut a, mut b) = (vec![0.0; d], vec![0.0; d]);
+        dense.apply(&x, &mut a);
+        lr.apply(&x, &mut b);
+        for (av, bv) in a.iter().zip(&b) {
+            assert!((av - bv).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn low_rank_truncates_at_low_lambda() {
+        // λ → 0 sends K toward the all-ones matrix. The e^{−λ‖·‖}
+        // kernel's eigen-tail decays only polynomially (it is not
+        // smooth at 0), so genuine compression needs a loose trace
+        // tolerance — at 3% the rank collapses to a handful of columns.
+        let (m, d, _) = gibbs(24, 1.0, 9);
+        let lr = LowRankKernel::build(&m, d, 0.05, 0, 3e-2).expect("PD kernel");
+        assert!(lr.rank() < d / 3, "rank {} not small at tiny λ", lr.rank());
+        assert!(lr.nnz() < d * d);
+        // The reported budgets bound the reconstruction error.
+        let dense = DenseKernel::build(&m, d, 0.05);
+        let rec = lr.materialize();
+        let mut frob2 = 0.0;
+        for i in 0..d {
+            for j in 0..d {
+                let e = rec.get(i, j) - dense.data()[i * d + j];
+                frob2 += e * e;
+            }
+        }
+        assert!(frob2.sqrt() <= lr.frobenius_budget() + 1e-9);
+    }
+
+    #[test]
+    fn panel_applies_match_scalar_applies() {
+        let (m, d, lam) = gibbs(11, 12.0, 10);
+        let ops: Vec<Box<dyn KernelOp>> = vec![
+            Box::new(DenseKernel::build(&m, d, lam)),
+            Box::new(SparseKernel::build(&m, d, lam, 1e-4)),
+            Box::new(LowRankKernel::build(&m, d, lam, 0, 1e-12).unwrap()),
+        ];
+        let n = 4;
+        let xp = rand_vec(d * n, 11);
+        for op in &ops {
+            let mut panel = vec![0.0; d * n];
+            op.apply_panel(&xp, &mut panel, n);
+            let mut tpanel = vec![0.0; d * n];
+            op.apply_transpose_panel(&xp, &mut tpanel, n);
+            for j in 0..n {
+                let col: Vec<F> = (0..d).map(|i| xp[i * n + j]).collect();
+                let mut want = vec![0.0; d];
+                op.apply(&col, &mut want);
+                for i in 0..d {
+                    assert!((panel[i * n + j] - want[i]).abs() < 1e-12);
+                }
+                op.apply_transpose(&col, &mut want);
+                for i in 0..d {
+                    assert!((tpanel[i * n + j] - want[i]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transport_cost_matches_dense_readoff() {
+        let (m, d, lam) = gibbs(10, 8.0, 12);
+        let u = rand_vec(d, 13);
+        let v = rand_vec(d, 14);
+        let dense = DenseKernel::build(&m, d, lam);
+        let want = dense.transport_cost(&u, &m, &v);
+        let sparse = SparseKernel::build(&m, d, lam, 0.0);
+        assert!((sparse.transport_cost(&u, &m, &v) - want).abs() < 1e-12);
+        let lr = LowRankKernel::build(&m, d, lam, 0, 0.0).unwrap();
+        assert!((lr.transport_cost(&u, &m, &v) - want).abs() < 1e-9);
+        // Panel read-off, column 0 of a width-2 panel.
+        let n = 2;
+        let mut up = vec![0.0; d * n];
+        let mut vp = vec![0.0; d * n];
+        for i in 0..d {
+            up[i * n] = u[i];
+            vp[i * n] = v[i];
+            up[i * n + 1] = v[i];
+            vp[i * n + 1] = u[i];
+        }
+        let mut out = vec![0.0; n];
+        sparse.transport_cost_panel(&up, &m, &vp, n, &mut out);
+        assert!((out[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_resolution_and_capping() {
+        let (m_small, _, _) = gibbs(16, 9.0, 20);
+        assert_eq!(
+            KernelPolicy::Auto.resolve(&m_small, 16, 9.0),
+            KernelPolicy::Dense,
+            "d·λ = 144 is below the amortization gate"
+        );
+        let mut rng = seeded_rng(21);
+        let m_big = RandomMetric::new(128).sample(&mut rng);
+        assert_eq!(
+            KernelPolicy::Auto.resolve(m_big.data(), 128, 50.0),
+            KernelPolicy::truncated_default(),
+            "median-normalized metric at d·λ = 6400, λ·median = 50"
+        );
+        // Metric-scale awareness: shrink every cost by 1000× — the same
+        // (d, λ) now keeps every kernel entry above any threshold, so
+        // Auto must stay dense instead of paying CSR overhead for zero
+        // sparsity.
+        let m_tiny: Vec<F> = m_big.data().iter().map(|&x| x * 1e-3).collect();
+        assert_eq!(
+            KernelPolicy::Auto.resolve(&m_tiny, 128, 50.0),
+            KernelPolicy::Dense,
+            "λ·median = 0.05: nothing to truncate"
+        );
+        assert_eq!(
+            KernelPolicy::Dense.resolve(&m_small, 4096, 1e6),
+            KernelPolicy::Dense,
+            "concrete policies resolve to themselves"
+        );
+        // 2·16²·8 = 4096 bytes: dense fits exactly.
+        assert_eq!(KernelPolicy::capped(16, 4096), KernelPolicy::Dense);
+        assert_eq!(KernelPolicy::capped(16, 4095), KernelPolicy::truncated_default());
+    }
+
+    #[test]
+    fn policy_build_dispatches() {
+        let (m, d, lam) = gibbs(8, 9.0, 15);
+        assert_eq!(KernelPolicy::Dense.build(&m, d, lam).nnz(), d * d);
+        let t = KernelPolicy::Truncated { threshold: 1e-2 }.build(&m, d, lam);
+        assert!(t.nnz() <= d * d);
+        let lr = KernelPolicy::LowRank { max_rank: 3, tolerance: 0.0 }.build(&m, d, lam);
+        assert!(lr.rank() <= 3);
+        // Auto at small d·λ is dense.
+        assert_eq!(KernelPolicy::Auto.build(&m, d, lam).nnz(), d * d);
+    }
+
+    #[test]
+    fn row_and_col_sums_agree_for_symmetric_kernels() {
+        let (m, d, lam) = gibbs(9, 5.0, 16);
+        for op in [
+            KernelPolicy::Dense.build(&m, d, lam),
+            KernelPolicy::Truncated { threshold: 1e-3 }.build(&m, d, lam),
+            KernelPolicy::low_rank_default().build(&m, d, lam),
+        ] {
+            let rows = op.row_sums();
+            let cols = op.col_sums();
+            for (r, c) in rows.iter().zip(&cols) {
+                assert!((r - c).abs() < 1e-9, "symmetric M ⇒ symmetric K̃");
+            }
+        }
+    }
+}

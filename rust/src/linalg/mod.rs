@@ -5,6 +5,12 @@
 //! written cache-consciously (row-major, contiguous inner loops, blocked
 //! GEMM) and profiled with the in-tree bench harness.
 
+pub mod kernel;
+
+pub use kernel::{
+    DenseKernel, KernelOp, KernelPolicy, KernelStats, LowRankKernel, SparseKernel,
+};
+
 use crate::F;
 
 /// Row-major dense matrix.
@@ -177,6 +183,63 @@ pub fn cholesky(a: &Matrix) -> Option<Matrix> {
     Some(l)
 }
 
+/// Pivoted (rank-revealing) Cholesky: greedily factor a symmetric PSD
+/// matrix A ≈ L·Lᵀ with L n×r, pivoting on the largest residual
+/// diagonal. Stops when the residual trace drops to `tol` (absolute),
+/// when the best pivot goes non-positive (numerical indefiniteness), or
+/// after `max_rank` columns (0 = unbounded). Returns (L in the original
+/// row order, residual trace trace(A − LLᵀ) clamped ≥ 0). With `tol = 0`
+/// and an uncapped rank a PD matrix factors to numerical full rank —
+/// the same limit [`cholesky`] computes, reached pivot-first.
+pub fn pivoted_cholesky(a: &Matrix, max_rank: usize, tol: F) -> (Matrix, F) {
+    assert_eq!(a.rows(), a.cols(), "pivoted_cholesky needs a square matrix");
+    let n = a.rows();
+    let rmax = if max_rank == 0 { n } else { max_rank.min(n) };
+    let mut l = Matrix::zeros(n, rmax);
+    let mut diag: Vec<F> = (0..n).map(|i| a.get(i, i)).collect();
+    // order[..k] are the chosen pivots, order[k..] the remaining rows.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rank = 0;
+    let mut lp = vec![0.0; rmax];
+    for k in 0..rmax {
+        let rem: F = order[k..].iter().map(|&i| diag[i].max(0.0)).sum();
+        if rem <= tol {
+            break;
+        }
+        let (mut best_t, mut best_val) = (k, F::NEG_INFINITY);
+        for (t, &i) in order.iter().enumerate().skip(k) {
+            if diag[i] > best_val {
+                best_val = diag[i];
+                best_t = t;
+            }
+        }
+        if best_val <= 0.0 {
+            break;
+        }
+        order.swap(k, best_t);
+        let p = order[k];
+        let piv = best_val.sqrt();
+        l.set(p, k, piv);
+        lp[..k].copy_from_slice(&l.row(p)[..k]);
+        for t in (k + 1)..n {
+            let i = order[t];
+            let s = a.get(p, i) - dot(&l.row(i)[..k], &lp[..k]);
+            let lik = s / piv;
+            l.set(i, k, lik);
+            diag[i] -= lik * lik;
+        }
+        diag[p] = 0.0;
+        rank = k + 1;
+    }
+    let residual: F = order[rank..].iter().map(|&i| diag[i].max(0.0)).sum();
+    // Trim L to the achieved rank.
+    let mut trimmed = Matrix::zeros(n, rank);
+    for i in 0..n {
+        trimmed.row_mut(i).copy_from_slice(&l.row(i)[..rank]);
+    }
+    (trimmed, residual)
+}
+
 /// s%-quantile (linear interpolation) of a slice; used for the paper's
 /// kernel-width grid {1, q10, q20, q50} and the metric median rescaling.
 pub fn quantile(values: &[F], s: F) -> F {
@@ -239,6 +302,47 @@ mod tests {
     fn cholesky_rejects_indefinite() {
         let a = Matrix::from_vec(2, 2, vec![1., 2., 2., 1.]); // eigenvalue -1
         assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn pivoted_cholesky_full_rank_reconstructs() {
+        let b = Matrix::from_vec(3, 3, vec![1., 2., 0., 0., 1., 1., 1., 0., 1.]);
+        let mut a = gemm(&b, &b.transpose());
+        for i in 0..3 {
+            let v = a.get(i, i) + 1.0;
+            a.set(i, i, v);
+        }
+        let (l, residual) = pivoted_cholesky(&a, 0, 0.0);
+        assert_eq!(l.cols(), 3);
+        assert!(residual < 1e-12);
+        let rec = gemm(&l, &l.transpose());
+        for (x, y) in rec.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn pivoted_cholesky_detects_low_rank() {
+        // A = b·bᵀ is exactly rank 1.
+        let b = Matrix::from_vec(4, 1, vec![1., 2., -1., 0.5]);
+        let a = gemm(&b, &b.transpose());
+        let (l, residual) = pivoted_cholesky(&a, 0, 1e-12);
+        assert_eq!(l.cols(), 1, "rank-1 matrix must factor with one pivot");
+        assert!(residual < 1e-12);
+        let rec = gemm(&l, &l.transpose());
+        for (x, y) in rec.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        // A rank cap is honored even when the tolerance is not yet met.
+        let spd = {
+            let c = Matrix::from_vec(4, 4, vec![
+                2., 1., 0., 0., 1., 2., 1., 0., 0., 1., 2., 1., 0., 0., 1., 2.,
+            ]);
+            gemm(&c, &c.transpose())
+        };
+        let (l2, res2) = pivoted_cholesky(&spd, 2, 0.0);
+        assert_eq!(l2.cols(), 2);
+        assert!(res2 > 0.0, "capped factorization must report leftovers");
     }
 
     #[test]

@@ -14,18 +14,22 @@
 //! Layout: U, V are (d, N) row-major panels so the inner loop runs
 //! contiguously over the batch dimension.
 
-use super::{panel_ratio, ScalingInit, SinkhornConfig, SinkhornOutput, SinkhornStats};
+use super::{
+    op_panel_ratio, op_panel_ratio_transpose, ScalingInit, SinkhornConfig,
+    SinkhornOutput, SinkhornStats,
+};
+use crate::linalg::{KernelOp, KernelStats};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::F;
 
-/// Batched solver bound to (M, λ); precomputes K and Kᵀ like the scalar
-/// engine but iterates whole panels.
+/// Batched solver bound to (M, λ); holds the Gibbs kernel behind the
+/// [`KernelOp`] interface (dense by default, truncated CSR or low-rank
+/// under the config's kernel policy) and iterates whole panels.
 pub struct BatchSinkhorn {
     d: usize,
     config: SinkhornConfig,
-    k: Vec<F>,
-    kt: Vec<F>,
+    kernel: Box<dyn KernelOp>,
     m: Vec<F>,
 }
 
@@ -33,21 +37,17 @@ impl BatchSinkhorn {
     pub fn new(metric: &CostMatrix, config: SinkhornConfig) -> Self {
         let d = metric.dim();
         assert!(config.lambda > 0.0, "lambda must be positive");
-        let mut k = vec![0.0; d * d];
-        for (out, &mij) in k.iter_mut().zip(metric.data()) {
-            *out = (-config.lambda * mij).exp();
-        }
-        let mut kt = vec![0.0; d * d];
-        for i in 0..d {
-            for j in 0..d {
-                kt[j * d + i] = k[i * d + j];
-            }
-        }
-        Self { d, config, k, kt, m: metric.data().to_vec() }
+        let kernel = config.kernel.build(metric.data(), d, config.lambda);
+        Self { d, config, kernel, m: metric.data().to_vec() }
     }
 
     pub fn dim(&self) -> usize {
         self.d
+    }
+
+    /// Structure report of the kernel operator the panels iterate with.
+    pub fn kernel_stats(&self) -> KernelStats {
+        self.kernel.stats()
     }
 
     /// Solve r vs every column of `cs` in one interleaved iteration.
@@ -124,6 +124,7 @@ impl BatchSinkhorn {
                 d,
                 self.config.lambda,
                 &self.config.schedule,
+                self.config.kernel,
                 &r_panel,
                 &c_panel,
                 &mut u,
@@ -134,15 +135,28 @@ impl BatchSinkhorn {
         let mut v = vec![0.0; d * n];
         let mut stats = SinkhornStats { last_delta: F::INFINITY, ..Default::default() };
 
+        let approx =
+            self.kernel.mass_loss() > 0.0 || self.kernel.frobenius_budget() > 0.0;
+        let convergence_mode = cfg.check_every != usize::MAX;
         let mut iter = 0;
+        let mut diverged = false;
         while iter < cfg.max_iterations {
             iter += 1;
-            panel_ratio(&self.kt, &u, &c_panel, &mut v, d, n);
+            op_panel_ratio_transpose(&*self.kernel, &u, &c_panel, &mut v, n);
             std::mem::swap(&mut u, &mut u_prev);
-            panel_ratio(&self.k, &v, &r_panel, &mut u, d, n);
+            op_panel_ratio(&*self.kernel, &v, &r_panel, &mut u, n);
 
-            let check = cfg.check_every != usize::MAX && iter % cfg.check_every == 0;
-            if check {
+            let check = convergence_mode && iter % cfg.check_every == 0;
+            // Approximate kernels also get a sparse divergence probe in
+            // *fixed-budget* mode (where no convergence check ever
+            // runs): an infeasible truncated support makes the scalings
+            // grow geometrically, and without the probe a long budget
+            // would ride the runaway into overflow-collapse and serve
+            // it. The probe never stops early on a small delta, so
+            // healthy fixed-budget runs stay bit-identical.
+            let probe =
+                !convergence_mode && approx && cfg.auto_stabilize && iter % 32 == 0;
+            if check || probe {
                 // Max over columns of the per-column delta norm: the batch
                 // stops when its *slowest* member meets the tolerance
                 // (paper's criterion applied per problem).
@@ -155,44 +169,84 @@ impl BatchSinkhorn {
                     }
                     worst = F::max(worst, acc);
                 }
-                stats.last_delta = worst.sqrt();
-                if stats.last_delta <= cfg.tolerance {
-                    stats.converged = true;
+                let delta = worst.sqrt();
+                if check {
+                    stats.last_delta = delta;
+                    if delta <= cfg.tolerance {
+                        stats.converged = true;
+                        break;
+                    }
+                }
+                if !delta.is_finite() || delta > 1e130 {
+                    // Blow-up: either dense-kernel underflow or — on a
+                    // truncated kernel — a genuinely *infeasible* sparse
+                    // support (no plan with marginals (r, c) exists on
+                    // the kept entries, so the scalings run away).
+                    // Iterating further only poisons the panel.
+                    diverged = true;
                     break;
                 }
             }
         }
         stats.iterations = prefix + iter;
 
-        // Distances: d_j = sum_i u_ij * ((K∘M) v)_ij, fused rowwise.
+        // Distances: d_j = sum_i u_ij * ((K∘M) v)_ij, fused over the
+        // operator's support.
         let mut dist = vec![0.0; n];
-        let mut row_acc = vec![0.0; n];
-        for i in 0..d {
-            let krow = &self.k[i * d..(i + 1) * d];
-            let mrow = &self.m[i * d..(i + 1) * d];
-            row_acc.iter_mut().for_each(|x| *x = 0.0);
-            for kk in 0..d {
-                let w = krow[kk] * mrow[kk];
-                if w == 0.0 {
-                    continue;
-                }
-                let vrow = &v[kk * n..(kk + 1) * n];
-                for (acc, &vj) in row_acc.iter_mut().zip(vrow) {
-                    *acc += w * vj;
-                }
-            }
-            let urow = &u[i * n..(i + 1) * n];
-            for j in 0..n {
-                dist[j] += urow[j] * row_acc[j];
-            }
-        }
+        self.kernel.transport_cost_panel(&u, &self.m, &v, n, &mut dist);
 
+        // Divergence rescue, mirroring the scalar engine's log-domain
+        // retry on underflow blow-up. An approximate kernel (truncated /
+        // low-rank) can make the transport problem infeasible on its
+        // support, where the fixed point does not exist: the whole panel
+        // is re-solved exactly when the iteration diverged or — for
+        // approximate kernels in convergence mode — failed to converge;
+        // individually poisoned columns are rescued per column in any
+        // mode. A column is poisoned when a scaling went non-finite or
+        // *vanished on a positive-mass bin* — at any genuine scaling
+        // state u_i > 0 wherever r_i > 0 (and v likewise), while a
+        // disconnected truncated support zeroes the cut-off bins and the
+        // stalled state even passes the ‖Δu‖ check. Gated on
+        // `auto_stabilize` like every other dense→log rescue.
+        let rescue_all = cfg.auto_stabilize
+            && (diverged || (approx && convergence_mode && !stats.converged));
+        let column_bad = |j: usize, value: F| -> bool {
+            if !value.is_finite() {
+                return true;
+            }
+            for i in 0..d {
+                let (ui, vi) = (u[i * n + j], v[i * n + j]);
+                if !ui.is_finite() || !vi.is_finite() {
+                    return true;
+                }
+                if (ui == 0.0 && rs[j].values()[i] > 0.0)
+                    || (vi == 0.0 && cs[j].values()[i] > 0.0)
+                {
+                    return true;
+                }
+            }
+            false
+        };
         (0..n)
-            .map(|j| SinkhornOutput {
-                value: dist[j],
-                u: (0..d).map(|i| u[i * n + j]).collect(),
-                v: (0..d).map(|i| v[i * n + j]).collect(),
-                stats,
+            .map(|j| {
+                if cfg.auto_stabilize && (rescue_all || column_bad(j, dist[j])) {
+                    let init = inits.get(j).and_then(|i| i.as_ref());
+                    return super::log_domain::solve_init(
+                        &self.m,
+                        d,
+                        self.config.lambda,
+                        cfg,
+                        rs[j].values(),
+                        cs[j].values(),
+                        init,
+                    );
+                }
+                SinkhornOutput {
+                    value: dist[j],
+                    u: (0..d).map(|i| u[i * n + j]).collect(),
+                    v: (0..d).map(|i| v[i * n + j]).collect(),
+                    stats,
+                }
             })
             .collect()
     }

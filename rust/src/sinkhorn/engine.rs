@@ -2,15 +2,19 @@
 //!
 //! Hot-path layout decisions (measured by `cargo bench --bench solvers`):
 //!
-//! * `K` and `Kᵀ` are both materialized row-major once per (M, λ) bind, so
-//!   both matvecs in the iteration stream contiguously;
+//! * the Gibbs kernel is held behind the [`KernelOp`] interface, built
+//!   once per (M, λ) bind by the config's kernel policy — the default
+//!   dense operator materializes `K` and `Kᵀ` row-major so both matvecs
+//!   in the iteration stream contiguously; truncated/low-rank operators
+//!   trade exactness for fewer streamed entries;
 //! * `K∘M` (needed only for the final cost read-off) is materialized
 //!   lazily, not in the loop;
 //! * the batch path walks N problems per row tile so `K` is read once per
 //!   iteration regardless of batch width (the vectorization the paper
 //!   credits for GPGPU speed, recreated in cache terms).
 
-use super::{kernel_ratio, ScalingInit, SinkhornConfig};
+use super::{op_ratio, op_ratio_transpose, ScalingInit, SinkhornConfig};
+use crate::linalg::{KernelOp, KernelStats};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::F;
@@ -41,15 +45,15 @@ pub struct SinkhornStats {
     pub stabilized: bool,
 }
 
-/// Sinkhorn solver bound to a ground metric and a λ (precomputes K, Kᵀ).
+/// Sinkhorn solver bound to a ground metric and a λ (holds the Gibbs
+/// kernel as a [`KernelOp`] built by the config's
+/// [`crate::linalg::KernelPolicy`] — dense by default).
 pub struct SinkhornEngine {
     d: usize,
     lambda: F,
     config: SinkhornConfig,
-    /// K = exp(−λM), row-major.
-    k: Vec<F>,
-    /// Kᵀ, row-major (i.e. K column-major), for the second matvec.
-    kt: Vec<F>,
+    /// K̃ ≈ exp(−λM) behind the operator interface.
+    kernel: Box<dyn KernelOp>,
     /// M, kept for the cost read-off and log-domain fallback.
     m: Vec<F>,
     /// True when exp(−λM) underflowed badly enough that the dense kernel
@@ -68,25 +72,32 @@ impl SinkhornEngine {
         let d = metric.dim();
         let lambda = config.lambda;
         assert!(lambda > 0.0, "lambda must be positive");
-        let mut k = vec![0.0; d * d];
-        for (out, &mij) in k.iter_mut().zip(metric.data()) {
-            *out = (-lambda * mij).exp();
-        }
-        let mut kt = vec![0.0; d * d];
-        for i in 0..d {
-            for j in 0..d {
-                kt[j * d + i] = k[i * d + j];
-            }
-        }
         // The diagonal of K is always 1 (m_ii = 0), so row-level zero
         // tests never fire; instead detect mass underflow: when the bulk
         // of the *off-diagonal* kernel underflows to exactly zero, K is
         // numerically diagonal, the dense fixed point collapses to a
         // meaningless 0-cost answer, and solves must go through the
-        // log-domain path.
-        let degenerate = config.auto_stabilize
-            && super::degenerate_off_diagonal(k.iter().copied(), d);
-        Self { d, lambda, config, k, kt, m: metric.data().to_vec(), degenerate }
+        // log-domain path. With the (default) dense policy the built
+        // kernel itself feeds the check, sparing a second O(d²) exp
+        // pass; structured policies don't materialize the full kernel,
+        // so they pay the one-off probe.
+        // Resolve once; a concrete policy re-resolves to itself, so the
+        // build below never repeats the Auto-gate median computation.
+        let resolved = config.kernel.resolve(metric.data(), d, lambda);
+        let (kernel, degenerate): (Box<dyn KernelOp>, bool) = match resolved {
+            crate::linalg::KernelPolicy::Dense => {
+                let dense =
+                    crate::linalg::DenseKernel::build(metric.data(), d, lambda);
+                let degenerate = config.auto_stabilize
+                    && super::degenerate_off_diagonal(dense.data().iter().copied(), d);
+                (Box::new(dense), degenerate)
+            }
+            _ => (
+                resolved.build(metric.data(), d, lambda),
+                config.auto_stabilize && super::dense_kernel_degenerate(metric, lambda),
+            ),
+        };
+        Self { d, lambda, config, kernel, m: metric.data().to_vec(), degenerate }
     }
 
     /// Problem dimension.
@@ -102,6 +113,12 @@ impl SinkhornEngine {
     /// Whether solves are being routed through the log-domain path.
     pub fn is_stabilized(&self) -> bool {
         self.degenerate
+    }
+
+    /// Structure report of the kernel operator this engine iterates
+    /// with (nnz / rank / mass loss).
+    pub fn kernel_stats(&self) -> KernelStats {
+        self.kernel.stats()
     }
 
     /// d_M^λ(r, c) for a single pair.
@@ -169,12 +186,13 @@ impl SinkhornEngine {
                 }
             }
         } else {
+            let mut krow = vec![0.0; self.d];
             for i in 0..self.d {
                 let ui = out.u[i];
-                let row = &self.k[i * self.d..(i + 1) * self.d];
+                self.kernel.write_row(i, &mut krow);
                 let prow = &mut p[i * self.d..(i + 1) * self.d];
                 for j in 0..self.d {
-                    prow[j] = ui * row[j] * out.v[j];
+                    prow[j] = ui * krow[j] * out.v[j];
                 }
             }
         }
@@ -197,7 +215,7 @@ impl SinkhornEngine {
         };
         let prefix = if init.is_none() {
             super::dense_anneal_prefix(
-                &self.m, d, self.lambda, &cfg.schedule, r, c, &mut u,
+                &self.m, d, self.lambda, &cfg.schedule, cfg.kernel, r, c, &mut u,
             )
         } else {
             0
@@ -206,48 +224,78 @@ impl SinkhornEngine {
         let mut v = vec![0.0; d];
         let mut stats = SinkhornStats { last_delta: F::INFINITY, ..Default::default() };
 
+        let approx = self.kernel.mass_loss() > 0.0
+            || self.kernel.frobenius_budget() > 0.0;
+        let convergence_mode = cfg.check_every != usize::MAX;
         let mut iter = 0;
         while iter < cfg.max_iterations {
             iter += 1;
             // v = c ./ (K' u)
-            kernel_ratio(&self.kt, &u, c, &mut v, d);
+            op_ratio_transpose(&*self.kernel, &u, c, &mut v);
             // u = r ./ (K v)
             std::mem::swap(&mut u, &mut u_prev);
-            kernel_ratio(&self.k, &v, r, &mut u, d);
+            op_ratio(&*self.kernel, &v, r, &mut u);
 
-            let check = cfg.check_every != usize::MAX && iter % cfg.check_every == 0;
-            if check {
-                let mut delta = 0.0;
+            let check = convergence_mode && iter % cfg.check_every == 0;
+            // Approximate kernels get a sparse divergence probe in
+            // fixed-budget mode too (see the batch path): it never
+            // stops early on a small delta, so healthy fixed-budget
+            // runs stay bit-identical.
+            let probe =
+                !convergence_mode && approx && cfg.auto_stabilize && iter % 32 == 0;
+            if check || probe {
+                let mut acc = 0.0;
                 for i in 0..d {
                     let e = u[i] - u_prev[i];
-                    delta += e * e;
+                    acc += e * e;
                 }
-                stats.last_delta = delta.sqrt();
-                if stats.last_delta <= cfg.tolerance {
-                    stats.converged = true;
+                let delta = acc.sqrt();
+                if check {
+                    stats.last_delta = delta;
+                    if delta <= cfg.tolerance {
+                        stats.converged = true;
+                        break;
+                    }
+                }
+                if !delta.is_finite() || delta > 1e130 {
+                    // Blow-up: dense-kernel underflow, or an infeasible
+                    // truncated support — retry in log domain (same
+                    // auto_stabilize gate as the batch path; with the
+                    // gate off the diverged state is the caller's).
+                    if cfg.auto_stabilize {
+                        return super::log_domain::solve_init(
+                            &self.m, d, self.lambda, cfg, r, c, init,
+                        );
+                    }
                     break;
-                }
-                if !stats.last_delta.is_finite() {
-                    // Underflow blow-up: retry in log domain.
-                    return super::log_domain::solve_init(
-                        &self.m, d, self.lambda, cfg, r, c, init,
-                    );
                 }
             }
         }
         stats.iterations = prefix + iter;
 
-        // d = sum(u .* ((K .* M) v)) -- evaluated rowwise without
-        // materializing K∘M.
-        let mut value = 0.0;
-        for i in 0..d {
-            let krow = &self.k[i * d..(i + 1) * d];
-            let mrow = &self.m[i * d..(i + 1) * d];
-            let mut acc = 0.0;
-            for j in 0..d {
-                acc += krow[j] * mrow[j] * v[j];
-            }
-            value += u[i] * acc;
+        // d = sum(u .* ((K .* M) v)) -- evaluated over the operator's
+        // support without materializing K∘M.
+        let value = self.kernel.transport_cost(&u, &self.m, &v);
+
+        // Same rescue contract as the batch path: an approximate kernel
+        // (truncated / low-rank policy) can make the problem infeasible
+        // on its support — the scalings diverge, or the cut-off bins
+        // collapse to zero while still carrying mass (a stalled state
+        // that even passes the ‖Δu‖ check) — and the exact log-domain
+        // solve takes over. At any genuine scaling state u_i > 0
+        // wherever r_i > 0, and v likewise; dense solves only hit this
+        // via the non-finite guards.
+        let poisoned = !value.is_finite()
+            || u.iter().any(|x| !x.is_finite())
+            || v.iter().any(|x| !x.is_finite())
+            || u.iter().zip(r).any(|(&ui, &ri)| ui == 0.0 && ri > 0.0)
+            || v.iter().zip(c).any(|(&vi, &ci)| vi == 0.0 && ci > 0.0);
+        if cfg.auto_stabilize
+            && (poisoned || (approx && convergence_mode && !stats.converged))
+        {
+            return super::log_domain::solve_init(
+                &self.m, d, self.lambda, cfg, r, c, init,
+            );
         }
         SinkhornOutput { value, u, v, stats }
     }

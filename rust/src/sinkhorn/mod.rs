@@ -27,6 +27,7 @@ pub use engine::{SinkhornEngine, SinkhornOutput, SinkhornStats};
 pub use independence::{independence_distance, IndependenceKernel};
 pub use warm::{fingerprint_pair, WarmCounters, WarmKey, WarmStartStore};
 
+use crate::linalg::{KernelOp, KernelPolicy};
 use crate::F;
 
 /// Configuration of the Sinkhorn-Knopp iteration.
@@ -50,6 +51,14 @@ pub struct SinkhornConfig {
     /// the main loop runs at [`Self::lambda`]. [`LambdaSchedule::Fixed`]
     /// (the default) recovers the classic single-λ iteration exactly.
     pub schedule: LambdaSchedule,
+    /// How the Gibbs kernel K = e^{−λM} is materialized: dense (the
+    /// default, exact), threshold-truncated CSR, a pivoted-Cholesky
+    /// low-rank factorization, or auto-resolved per (d, λ). See
+    /// [`crate::linalg::KernelPolicy`]. Honored by the dense engine and
+    /// the batch solver (and the backends built on them); the
+    /// log-domain path never materializes K and Greenkhorn's
+    /// incremental caches are inherently dense, so both ignore it.
+    pub kernel: KernelPolicy,
 }
 
 impl Default for SinkhornConfig {
@@ -61,6 +70,7 @@ impl Default for SinkhornConfig {
             check_every: 1,
             auto_stabilize: true,
             schedule: LambdaSchedule::Fixed,
+            kernel: KernelPolicy::Dense,
         }
     }
 }
@@ -167,31 +177,60 @@ pub(crate) fn kernel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usiz
     }
 }
 
-/// out = num ./ (mat · x) over (d, n) column-stacked, row-major panels:
-/// one pass over `mat` updates every column (the K-traffic amortization
-/// of [`BatchSinkhorn`]). n = 1 is exactly [`kernel_ratio`] up to
-/// accumulation order.
+/// Turn an applied denominator into the Sinkhorn ratio in place:
+/// out[i] = num[i] / out[i], guarding 0/0 → 0 (and any non-positive
+/// denominator, which only arises from approximate kernels) so
+/// zero-mass bins stay inert.
 #[inline]
-pub(crate) fn panel_ratio(mat: &[F], x: &[F], num: &[F], out: &mut [F], d: usize, n: usize) {
-    // out = mat · x, accumulated row by row over x's rows.
-    for i in 0..d {
-        let mrow = &mat[i * d..(i + 1) * d];
-        let orow = &mut out[i * n..(i + 1) * n];
-        orow.iter_mut().for_each(|o| *o = 0.0);
-        for (kk, &mik) in mrow.iter().enumerate() {
-            if mik == 0.0 {
-                continue;
-            }
-            let xrow = &x[kk * n..(kk + 1) * n];
-            for (o, &xv) in orow.iter_mut().zip(xrow) {
-                *o += mik * xv;
-            }
-        }
-        let nrow = &num[i * n..(i + 1) * n];
-        for (o, &nv) in orow.iter_mut().zip(nrow) {
-            *o = if *o > 0.0 { nv / *o } else { 0.0 };
-        }
+fn ratio_in_place(num: &[F], out: &mut [F]) {
+    for (o, &nv) in out.iter_mut().zip(num) {
+        *o = if *o > 0.0 { nv / *o } else { 0.0 };
     }
+}
+
+/// out = num ./ (K̃ · x) through a [`KernelOp`]. With the dense operator
+/// this is exactly [`kernel_ratio`] (same [`crate::linalg::dot`]
+/// accumulation).
+#[inline]
+pub(crate) fn op_ratio(op: &dyn KernelOp, x: &[F], num: &[F], out: &mut [F]) {
+    op.apply(x, out);
+    ratio_in_place(num, out);
+}
+
+/// out = num ./ (K̃ᵀ · x) through a [`KernelOp`].
+#[inline]
+pub(crate) fn op_ratio_transpose(op: &dyn KernelOp, x: &[F], num: &[F], out: &mut [F]) {
+    op.apply_transpose(x, out);
+    ratio_in_place(num, out);
+}
+
+/// Panel form of [`op_ratio`] over (d, n) column stacks: one pass over
+/// the operator updates every column (the K-traffic amortization of
+/// [`BatchSinkhorn`]). The dense operator reproduces the historical
+/// `panel_ratio` accumulation bit-for-bit.
+#[inline]
+pub(crate) fn op_panel_ratio(
+    op: &dyn KernelOp,
+    x: &[F],
+    num: &[F],
+    out: &mut [F],
+    n: usize,
+) {
+    op.apply_panel(x, out, n);
+    ratio_in_place(num, out);
+}
+
+/// Panel form of [`op_ratio_transpose`].
+#[inline]
+pub(crate) fn op_panel_ratio_transpose(
+    op: &dyn KernelOp,
+    x: &[F],
+    num: &[F],
+    out: &mut [F],
+    n: usize,
+) {
+    op.apply_transpose_panel(x, out, n);
+    ratio_in_place(num, out);
 }
 
 /// Column-wise transfer of a (d, n) scaling panel from λ_prev to
@@ -225,9 +264,14 @@ pub(crate) fn transfer_panel(u: &mut [F], d: usize, n: usize, ratio: F) {
 /// scaling v is recomputed from u at the top of every Sinkhorn
 /// iteration, so only u needs carrying). Returns the fixed-point
 /// iterations consumed; `u` comes back expressed at the λ★ scale, ready
-/// to seed the main loop. Stage kernels are rematerialized per call
-/// (O(stages·d²) exp — about one extra iteration-equivalent per stage,
-/// amortized across all n columns on the batch path); cold solves are
+/// to seed the main loop.
+///
+/// Each stage λ_s builds its *own* kernel operator through `policy` —
+/// K = e^{−λ_s·M} depends on the stage λ, so reusing the λ★ operator
+/// (or the previous stage's) would iterate against the wrong kernel and
+/// silently corrupt the carried scaling. The per-call rebuild is
+/// O(stages·build) — about one extra iteration-equivalent per stage,
+/// amortized across all n columns on the batch path; cold solves are
 /// exactly where that cost is repaid by the shorter main loop.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn anneal_prefix_panel(
@@ -235,6 +279,7 @@ pub(crate) fn anneal_prefix_panel(
     d: usize,
     lambda_star: F,
     schedule: &LambdaSchedule,
+    policy: KernelPolicy,
     r_panel: &[F],
     c_panel: &[F],
     u: &mut [F],
@@ -245,8 +290,6 @@ pub(crate) fn anneal_prefix_panel(
         return 0;
     }
     let per_stage = schedule.stage_iterations();
-    let mut k = vec![0.0; d * d];
-    let mut kt = vec![0.0; d * d];
     let mut v = vec![0.0; d * n];
     let mut prev: Option<F> = None;
     let mut iters = 0;
@@ -254,17 +297,10 @@ pub(crate) fn anneal_prefix_panel(
         if let Some(lp) = prev {
             transfer_panel(u, d, n, lam_s / lp);
         }
-        for (out, &mij) in k.iter_mut().zip(m) {
-            *out = (-lam_s * mij).exp();
-        }
-        for i in 0..d {
-            for j in 0..d {
-                kt[j * d + i] = k[i * d + j];
-            }
-        }
+        let stage_kernel = policy.build(m, d, lam_s);
         for _ in 0..per_stage {
-            panel_ratio(&kt, u, c_panel, &mut v, d, n);
-            panel_ratio(&k, &v, r_panel, u, d, n);
+            op_panel_ratio_transpose(&*stage_kernel, u, c_panel, &mut v, n);
+            op_panel_ratio(&*stage_kernel, &v, r_panel, u, n);
         }
         iters += per_stage;
         prev = Some(lam_s);
@@ -277,16 +313,18 @@ pub(crate) fn anneal_prefix_panel(
 
 /// Scalar (single-pair) form of [`anneal_prefix_panel`]: a d-vector is a
 /// (d, 1) panel with the same memory layout.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn dense_anneal_prefix(
     m: &[F],
     d: usize,
     lambda_star: F,
     schedule: &LambdaSchedule,
+    policy: KernelPolicy,
     r: &[F],
     c: &[F],
     u: &mut [F],
 ) -> usize {
-    anneal_prefix_panel(m, d, lambda_star, schedule, r, c, u, 1)
+    anneal_prefix_panel(m, d, lambda_star, schedule, policy, r, c, u, 1)
 }
 
 /// True when K = e^{−λM} underflows badly enough that the dense fixed
@@ -321,6 +359,7 @@ impl SinkhornConfig {
             check_every: usize::MAX,
             auto_stabilize: true,
             schedule: LambdaSchedule::Fixed,
+            kernel: KernelPolicy::Dense,
         }
     }
 
@@ -379,11 +418,13 @@ mod schedule_tests {
         let c = [0.25, 0.75];
         let mut u = vec![0.5, 0.5];
         let schedule = LambdaSchedule::geometric(1.0);
-        let iters = dense_anneal_prefix(&m, 2, 9.0, &schedule, &r, &c, &mut u);
+        let iters = dense_anneal_prefix(
+            &m, 2, 9.0, &schedule, KernelPolicy::Dense, &r, &c, &mut u,
+        );
         assert_eq!(iters, 60, "two stages (λ=1, 3) x 30 iterations");
         assert!(u.iter().all(|x| x.is_finite() && *x > 0.0));
         let none = dense_anneal_prefix(
-            &m, 2, 9.0, &LambdaSchedule::Fixed, &r, &c, &mut u,
+            &m, 2, 9.0, &LambdaSchedule::Fixed, KernelPolicy::Dense, &r, &c, &mut u,
         );
         assert_eq!(none, 0);
     }

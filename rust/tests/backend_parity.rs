@@ -10,9 +10,10 @@ use sinkhorn_rs::backend::{
     dense_kernel_degenerate, BackendKind, GreenkhornBackend, ShardedExecutor,
     SolverBackend,
 };
+use sinkhorn_rs::linalg::KernelPolicy;
 use sinkhorn_rs::metric::{CostMatrix, RandomMetric};
 use sinkhorn_rs::simplex::{seeded_rng, Histogram};
-use sinkhorn_rs::sinkhorn::{SinkhornConfig, SinkhornEngine};
+use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig, SinkhornEngine};
 use sinkhorn_rs::F;
 
 const TOL: F = 1e-9;
@@ -181,6 +182,107 @@ fn converged_paths_agree() {
             assert!(
                 (gk - want).abs() <= 1e-6 * (1.0 + want),
                 "seed={seed} j={j}: greenkhorn {gk} vs dense {want}"
+            );
+        }
+    }
+}
+
+/// Degenerate-parameter parity: truncation threshold 0 keeps every
+/// representable kernel entry and rank-d/tolerance-0 pivoted Cholesky
+/// factors to numerical full rank, so both structured backends must
+/// reproduce the dense interleaved walk to 1e-12 at a matched fixed
+/// budget — any divergence beyond float noise means the structured
+/// operator is not the identity-parameter limit it claims to be.
+#[test]
+fn zero_truncation_and_full_rank_reproduce_dense() {
+    const DTOL: F = 1e-12;
+    for seed in 0..4u64 {
+        let d = 8 + 2 * (seed as usize % 3);
+        let (m, rs, cs) = workload(d, 5, 300 + seed);
+        for &lambda in &[3.0, 9.0] {
+            let base = SinkhornConfig::fixed(lambda, 200);
+            let dense = BackendKind::Interleaved.build(&m, base);
+
+            let mut trunc_cfg = base;
+            trunc_cfg.kernel = KernelPolicy::Truncated { threshold: 0.0 };
+            let trunc = BackendKind::Truncated.build(&m, trunc_cfg);
+            assert_eq!(trunc.kernel_stats().mass_loss, 0.0);
+
+            let mut lr_cfg = base;
+            lr_cfg.kernel = KernelPolicy::LowRank { max_rank: 0, tolerance: 0.0 };
+            let lowrank = BackendKind::LowRank.build(&m, lr_cfg);
+            assert_eq!(lowrank.kernel_stats().rank, d, "PD kernel factors fully");
+
+            let r_refs: Vec<&Histogram> = rs.iter().collect();
+            let want = dense.solve_panel_paired(&r_refs, &cs);
+            let got_t = trunc.solve_panel_paired(&r_refs, &cs);
+            let got_l = lowrank.solve_panel_paired(&r_refs, &cs);
+            for j in 0..cs.len() {
+                let ctx = format!("seed={seed} d={d} lambda={lambda} j={j}");
+                assert!(
+                    (got_t[j].value - want[j].value).abs()
+                        <= DTOL * (1.0 + want[j].value.abs()),
+                    "truncated(0) vs dense ({ctx}): {} vs {}",
+                    got_t[j].value,
+                    want[j].value
+                );
+                assert!(
+                    (got_l[j].value - want[j].value).abs()
+                        <= DTOL * (1.0 + want[j].value.abs()),
+                    "low-rank(full) vs dense ({ctx}): {} vs {}",
+                    got_l[j].value,
+                    want[j].value
+                );
+            }
+        }
+    }
+}
+
+/// The same degenerate parity *under ε-scaling*: with a Geometric
+/// schedule every anneal stage runs at its own λ_s, so the structured
+/// paths must rebuild their kernel per stage exactly like the dense
+/// prefix does. A stale-kernel bug (reusing the λ★ operator — or any
+/// single stage's — across the prefix) shifts the carried scaling and
+/// the fixed-budget outcome by ~1e-3, which this 1e-12 gate cannot miss.
+#[test]
+fn structured_parity_survives_geometric_schedule() {
+    const DTOL: F = 1e-12;
+    for seed in 0..4u64 {
+        let d = 10;
+        let (m, rs, cs) = workload(d, 4, 400 + seed);
+        // Fixed budget keeps the whole trajectory comparable (a
+        // convergence check would hide prefix differences behind the
+        // shared fixed point).
+        let mut base = SinkhornConfig::fixed(9.0, 120);
+        base.schedule = LambdaSchedule::geometric(1.0);
+        let dense = BackendKind::Interleaved.build(&m, base);
+
+        let mut trunc_cfg = base;
+        trunc_cfg.kernel = KernelPolicy::Truncated { threshold: 0.0 };
+        let trunc = BackendKind::Truncated.build(&m, trunc_cfg);
+
+        let mut lr_cfg = base;
+        lr_cfg.kernel = KernelPolicy::LowRank { max_rank: 0, tolerance: 0.0 };
+        let lowrank = BackendKind::LowRank.build(&m, lr_cfg);
+
+        let r_refs: Vec<&Histogram> = rs.iter().collect();
+        let want = dense.solve_panel_paired(&r_refs, &cs);
+        let got_t = trunc.solve_panel_paired(&r_refs, &cs);
+        let got_l = lowrank.solve_panel_paired(&r_refs, &cs);
+        for j in 0..cs.len() {
+            assert!(
+                (got_t[j].value - want[j].value).abs()
+                    <= DTOL * (1.0 + want[j].value.abs()),
+                "seed={seed} j={j}: annealed truncated(0) {} vs dense {}",
+                got_t[j].value,
+                want[j].value
+            );
+            assert!(
+                (got_l[j].value - want[j].value).abs()
+                    <= DTOL * (1.0 + want[j].value.abs()),
+                "seed={seed} j={j}: annealed low-rank(full) {} vs dense {}",
+                got_l[j].value,
+                want[j].value
             );
         }
     }

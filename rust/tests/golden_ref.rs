@@ -13,6 +13,8 @@
 //! Rust engine updates (v, u), so intermediate iterates differ by design
 //! and only the limit is comparable at this precision.
 
+use sinkhorn_rs::backend::{BackendKind, SolverBackend};
+use sinkhorn_rs::linalg::KernelPolicy;
 use sinkhorn_rs::metric::CostMatrix;
 use sinkhorn_rs::simplex::Histogram;
 use sinkhorn_rs::sinkhorn::{log_domain, LambdaSchedule, SinkhornConfig, SinkhornEngine};
@@ -30,6 +32,11 @@ struct Case {
     r: Vec<F>,
     c: Vec<F>,
     distance: F,
+    /// `Some(threshold)` for cases the oracle solved against the
+    /// threshold-truncated kernel (`"kernel": "truncated"`); the dense
+    /// oracle tests skip these — their fixed point is the *truncated*
+    /// kernel's, pinned by `truncated_backend_matches_python_oracle`.
+    truncated: Option<F>,
 }
 
 fn load_cases() -> Vec<Case> {
@@ -49,6 +56,15 @@ fn load_cases() -> Vec<Case> {
                     .collect()
             };
             let d = case.get("d").and_then(Json::as_usize).expect("d");
+            let truncated = match case.get("kernel").and_then(Json::as_str) {
+                Some("truncated") => Some(
+                    case.get("threshold")
+                        .and_then(Json::as_f64)
+                        .expect("truncated case carries its threshold"),
+                ),
+                Some(other) => panic!("unknown fixture kernel flavor {other:?}"),
+                None => None,
+            };
             let c = Case {
                 name: case
                     .get("name")
@@ -61,6 +77,7 @@ fn load_cases() -> Vec<Case> {
                 r: nums("r"),
                 c: nums("c"),
                 distance: case.get("distance").and_then(Json::as_f64).expect("distance"),
+                truncated,
             };
             assert_eq!(c.m.len(), d * d, "{}: matrix shape", c.name);
             assert_eq!(c.r.len(), d, "{}: r shape", c.name);
@@ -81,7 +98,8 @@ fn tight(lambda: F) -> SinkhornConfig {
 
 #[test]
 fn log_domain_matches_python_oracle() {
-    for case in load_cases() {
+    let cases = load_cases();
+    for case in cases.iter().filter(|c| c.truncated.is_none()) {
         let out = log_domain::solve(
             &case.m,
             case.d,
@@ -104,7 +122,8 @@ fn log_domain_matches_python_oracle() {
 
 #[test]
 fn dense_engine_matches_python_oracle() {
-    for case in load_cases() {
+    let cases = load_cases();
+    for case in cases.iter().filter(|c| c.truncated.is_none()) {
         let metric = CostMatrix::from_rows(case.d, case.m.clone());
         let r = Histogram::from_weights(&case.r).unwrap();
         let c = Histogram::from_weights(&case.c).unwrap();
@@ -127,7 +146,8 @@ fn annealed_log_domain_matches_python_oracle() {
     // The ε-scaling path must land on the same fixed point as the
     // straight iteration — tied here to an *external* reference, not just
     // to another in-crate solver.
-    for case in load_cases() {
+    let cases = load_cases();
+    for case in cases.iter().filter(|c| c.truncated.is_none()) {
         let cfg = SinkhornConfig {
             schedule: LambdaSchedule::geometric(0.5),
             ..tight(case.lambda)
@@ -138,6 +158,53 @@ fn annealed_log_domain_matches_python_oracle() {
         assert!(
             (out.value - case.distance).abs() < TOL,
             "{}: annealed {} vs oracle {} (dev {:.3e})",
+            case.name,
+            out.value,
+            case.distance,
+            (out.value - case.distance).abs()
+        );
+    }
+}
+
+#[test]
+fn truncated_backend_matches_python_oracle() {
+    // The truncated fixture freezes the fixed point of the *threshold-
+    // truncated* kernel (the oracle applies the exact SparseKernel::build
+    // rule, safety radius included), so the Rust truncated backend must
+    // reproduce it to the same 1e-9 the dense oracle tests pin. The
+    // generator certifies the case marginal-feasible on the kept support
+    // — the solve must come back from the structured fast path, not the
+    // log-domain rescue.
+    let cases: Vec<Case> =
+        load_cases().into_iter().filter(|c| c.truncated.is_some()).collect();
+    assert!(!cases.is_empty(), "fixture set must carry a truncated case");
+    for case in cases {
+        let threshold = case.truncated.expect("filtered on truncated");
+        let metric = CostMatrix::from_rows(case.d, case.m.clone());
+        let cfg = SinkhornConfig {
+            kernel: KernelPolicy::Truncated { threshold },
+            ..tight(case.lambda)
+        };
+        let backend = BackendKind::Truncated.build(&metric, cfg);
+        let stats = backend.kernel_stats();
+        assert!(
+            stats.nnz < case.d * case.d,
+            "{}: fixture truncation must bite (nnz {})",
+            case.name,
+            stats.nnz
+        );
+        let r = Histogram::from_weights(&case.r).unwrap();
+        let c = Histogram::from_weights(&case.c).unwrap();
+        let out = backend.solve_pair(&r, &c);
+        assert!(out.stats.converged, "{}: did not converge", case.name);
+        assert!(
+            !out.stats.stabilized,
+            "{}: feasible truncated case must not need the rescue",
+            case.name
+        );
+        assert!(
+            (out.value - case.distance).abs() < TOL,
+            "{}: truncated {} vs oracle {} (dev {:.3e})",
             case.name,
             out.value,
             case.distance,
