@@ -5,16 +5,21 @@
 //! Four concurrent client threads issue randomized queries against two
 //! registered ground metrics and two λ values (four shape classes); the
 //! dynamic batcher coalesces them into vectorized executions. The demo
-//! prints per-class routing, latency and batch-occupancy statistics, and
-//! cross-checks a sample of results against the CPU engine.
+//! prints per-class routing, latency and batch-occupancy statistics,
+//! cross-checks a sample of results against the CPU engine, and finishes
+//! with the retrieval path: a clustered corpus is ingested
+//! (`register_corpus`) and served top-k queries through the pruned
+//! bound-then-refine cascade, with prune/recall statistics.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo
+//! # or, without artifacts (CPU-only serving, same request path):
+//! cargo run --release --example serve_demo
 //! ```
 
 use sinkhorn_rs::coordinator::{
-    BatcherConfig, CoordinatorConfig, DistanceService, EngineKind, MetricId, Query,
-    WarmStartConfig,
+    BatcherConfig, CoordinatorConfig, CorpusId, DistanceService, EngineKind,
+    MetricId, Query, RetrievalQuery, WarmStartConfig,
 };
 use sinkhorn_rs::prelude::*;
 use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig};
@@ -22,17 +27,22 @@ use std::time::{Duration, Instant};
 
 fn main() {
     let artifact_dir = std::path::PathBuf::from("artifacts");
-    if !artifact_dir.join("manifest.json").exists() {
-        eprintln!("no artifacts/ found — run `make artifacts` first");
-        std::process::exit(1);
+    let artifacts = artifact_dir.join("manifest.json").exists();
+    if !artifacts {
+        eprintln!(
+            "no artifacts/ found (run `make artifacts` for the XLA path) — \
+             serving CPU-only"
+        );
     }
 
     // Start the service with a 64-wide batcher and a 2 ms deadline.
     // CPU-served shape classes get convergence control: per-worker
     // warm-start stores (repeated query pairs re-converge in a couple of
     // iterations) and geometric ε-scaling for cold high-λ solves.
+    // Retrieval probes every 4th corpus query against brute force so the
+    // recall gauge is live.
     let service = DistanceService::start(CoordinatorConfig {
-        artifact_dir: Some(artifact_dir),
+        artifact_dir: artifacts.then_some(artifact_dir),
         batcher: BatcherConfig {
             max_batch: 64,
             max_delay: Duration::from_millis(2),
@@ -40,6 +50,7 @@ fn main() {
         },
         warm_start: Some(WarmStartConfig::default()),
         anneal: LambdaSchedule::geometric(1.0),
+        retrieval_probe_every: 4,
         ..Default::default()
     })
     .expect("service start");
@@ -135,6 +146,45 @@ fn main() {
         stats.warm_hits,
         stats.warm_misses,
         stats.warm_hit_rate()
+    );
+
+    // Retrieval: ingest a clustered corpus against the 100-dim metric
+    // and serve top-k queries through the pruned cascade.
+    let d = 100;
+    let gen = ClusteredCorpus::new(d, 6, 25, 0.12);
+    let (corpus, protos) = gen.generate(&mut rng);
+    let indexed = service
+        .register_corpus(CorpusId(0), MetricId(1), 9.0, corpus)
+        .expect("corpus registration");
+    println!("\nindexed a {indexed}-entry clustered corpus (d={d}, λ=9)");
+    for (qi, proto) in protos.iter().take(4).enumerate() {
+        let q = gen.mixture_at(proto, 0.12, &mut rng);
+        let out = service
+            .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q, k: 5 })
+            .expect("retrieval query");
+        let near: Vec<usize> = out.hits.iter().map(|h| h.entry).collect();
+        println!(
+            "query near cluster {qi}: top-5 {near:?} (best d^λ {:.4}), solved \
+             {} / pruned {} ({:.0}% pruned{}), {} µs",
+            out.hits.first().map(|h| h.distance).unwrap_or(f64::NAN),
+            out.report.solved,
+            out.report.pruned,
+            100.0 * out.report.pruned_fraction(),
+            out.report
+                .probe
+                .map(|p| format!(", recall probe {}/{}", p.matched, p.k))
+                .unwrap_or_default(),
+            out.latency_us,
+        );
+    }
+    let stats = service.stats().unwrap();
+    println!(
+        "\nretrieval gauges: {} queries, pruned fraction {:.2}, recall {:.3} \
+         over {} probe(s)",
+        stats.retrievals,
+        stats.retrieval_pruned_fraction(),
+        stats.recall(),
+        stats.recall_probes,
     );
     service.shutdown();
 }

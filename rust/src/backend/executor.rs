@@ -212,17 +212,7 @@ impl ShardedExecutor {
             self.stats[0].warm_misses += misses as u64;
             return (out, vec![report]);
         }
-        // Contiguous near-equal ranges: the first n % shards shards take
-        // one extra query.
-        let base = n / shards;
-        let rem = n % shards;
-        let mut ranges = Vec::with_capacity(shards);
-        let mut lo = 0;
-        for w in 0..shards {
-            let len = base + usize::from(w < rem);
-            ranges.push(lo..lo + len);
-            lo += len;
-        }
+        let ranges = shard_ranges(n, shards);
         // One optional store handle per worker, aligned with `backends`
         // (split borrows: stores and backends are disjoint fields).
         let stores: Vec<Option<&mut WarmStartStore>> = match self.warm.as_mut() {
@@ -276,6 +266,101 @@ impl ShardedExecutor {
         }
         (outputs, reports)
     }
+
+    /// Panel re-rank entry point: a fully paired panel with **explicit
+    /// caller-managed warm starts** — `inits[j]` seeds pair j (an empty
+    /// slice delegates to [`Self::solve_panel_paired`]). The retrieval
+    /// refine stage uses this to seed solves from its per-corpus-entry
+    /// cache; since the caller owns the seeding policy, the executor's
+    /// own per-worker warm stores are bypassed entirely (reports carry
+    /// zero warm hits/misses) rather than double-counted.
+    pub fn solve_panel_paired_init(
+        &mut self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[Option<ScalingInit>],
+    ) -> (Vec<SinkhornOutput>, Vec<ShardReport>) {
+        if inits.is_empty() {
+            return self.solve_panel_paired(rs, cs);
+        }
+        let n = cs.len();
+        assert_eq!(rs.len(), n, "paired panel size mismatch");
+        assert_eq!(inits.len(), n, "warm-start slice size mismatch");
+        let kernel = self.kernel_stats();
+        let shards = self.backends.len().min(n);
+        if shards <= 1 {
+            let t0 = Instant::now();
+            let out = self.backends[0].solve_panel_paired_init(rs, cs, inits);
+            let report = ShardReport {
+                worker: 0,
+                queries: out.len(),
+                busy: t0.elapsed(),
+                warm_hits: 0,
+                warm_misses: 0,
+                kernel,
+            };
+            self.stats[0].panels += 1;
+            self.stats[0].queries += report.queries as u64;
+            self.stats[0].busy += report.busy;
+            return (out, vec![report]);
+        }
+        let ranges = shard_ranges(n, shards);
+        let mut outputs = Vec::with_capacity(n);
+        let mut reports = Vec::with_capacity(shards);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards);
+            for (worker, (backend, range)) in
+                self.backends.iter_mut().zip(ranges).enumerate()
+            {
+                let rs_shard = &rs[range.clone()];
+                let cs_shard = &cs[range.clone()];
+                let inits_shard = &inits[range];
+                handles.push(scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let out =
+                        backend.solve_panel_paired_init(rs_shard, cs_shard, inits_shard);
+                    (worker, out, t0.elapsed())
+                }));
+            }
+            // Joining in spawn order concatenates shards back into the
+            // original panel order.
+            for handle in handles {
+                let (worker, out, busy) =
+                    handle.join().expect("executor worker panicked");
+                reports.push(ShardReport {
+                    worker,
+                    queries: out.len(),
+                    busy,
+                    warm_hits: 0,
+                    warm_misses: 0,
+                    kernel,
+                });
+                outputs.extend(out);
+            }
+        });
+        for report in &reports {
+            let slot = &mut self.stats[report.worker];
+            slot.panels += 1;
+            slot.queries += report.queries as u64;
+            slot.busy += report.busy;
+        }
+        (outputs, reports)
+    }
+}
+
+/// Contiguous near-equal shard ranges: the first n % shards shards take
+/// one extra query.
+fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    let base = n / shards;
+    let rem = n % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for w in 0..shards {
+        let len = base + usize::from(w < rem);
+        ranges.push(lo..lo + len);
+        lo += len;
+    }
+    ranges
 }
 
 /// Solve one worker's shard, consulting (and refilling) its warm-start
@@ -496,6 +581,42 @@ mod tests {
             ShardedExecutor::new(&m, SinkhornConfig::fixed(9.0, 10), BackendKind::Dense, 2);
         let (_, dreports) = dense.solve_panel(&r, &cs);
         assert!(dreports.iter().all(|s| s.kernel.nnz == 16 * 16 && s.kernel.mass_loss == 0.0));
+    }
+
+    #[test]
+    fn explicit_inits_shard_correctly_and_bypass_warm_stores() {
+        let (m, r, cs) = panel(14, 9, 11);
+        let cfg = SinkhornConfig {
+            lambda: 9.0,
+            tolerance: 1e-9,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let mut ex = ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, 3)
+            .with_warm_store(0, 9.0, 64);
+        let rs: Vec<&Histogram> = cs.iter().map(|_| &r).collect();
+        // Cold pass through the explicit-init entry point (all None).
+        let inits: Vec<Option<ScalingInit>> = vec![None; cs.len()];
+        let (cold, reports) = ex.solve_panel_paired_init(&rs, &cs, &inits);
+        assert_eq!(cold.len(), cs.len());
+        assert_eq!(reports.iter().map(|s| s.queries).sum::<usize>(), cs.len());
+        // Caller-managed seeding bypasses the executor's own stores.
+        assert_eq!(reports.iter().map(|s| s.warm_hits + s.warm_misses).sum::<usize>(), 0);
+        assert_eq!(ex.warm_entries(), 0);
+        // Seeding every pair with its own converged scalings re-converges
+        // in strictly fewer iterations to the same values.
+        let seeds: Vec<Option<ScalingInit>> =
+            cold.iter().map(|o| Some(ScalingInit::from_output(o))).collect();
+        let (warm, _) = ex.solve_panel_paired_init(&rs, &cs, &seeds);
+        let cold_iters: usize = cold.iter().map(|o| o.stats.iterations).sum();
+        let warm_iters: usize = warm.iter().map(|o| o.stats.iterations).sum();
+        assert!(warm_iters < cold_iters, "{warm_iters} vs {cold_iters}");
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a.value - b.value).abs() < 1e-7 * (1.0 + b.value));
+        }
+        // An empty init slice delegates to the store-managed path.
+        let (_, delegated) = ex.solve_panel_paired_init(&rs, &cs, &[]);
+        assert_eq!(delegated.iter().map(|s| s.warm_misses).sum::<usize>(), cs.len());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Service observability: counters and latency aggregates.
 
 use crate::linalg::KernelStats;
+use crate::retrieval::RetrievalReport;
 use std::time::Duration;
 
 /// Running statistics collected by the service thread.
@@ -25,6 +26,22 @@ pub struct Stats {
     /// classes can differ; the gauge reports the latest structure and
     /// the worst accuracy concession).
     kernel: Option<KernelStats>,
+    /// Retrieval gauges: cumulative over every `retrieve` call.
+    pub retrievals: u64,
+    /// Corpus candidates considered across retrievals.
+    pub retrieval_candidates: u64,
+    /// Candidates actually solved by the refine stage.
+    pub retrieval_solved: u64,
+    /// Candidates discarded on their lower bound alone.
+    pub retrieval_pruned: u64,
+    /// Refine solves rescued through the exact log-domain path.
+    pub retrieval_rescued: u64,
+    /// Brute-force recall probes executed.
+    pub recall_probes: u64,
+    /// Pruned-top-k entries the probes confirmed.
+    pub recall_matched: u64,
+    /// Entries the probes compared (Σ effective k).
+    pub recall_expected: u64,
 }
 
 /// Throughput/occupancy counters for one executor worker.
@@ -83,6 +100,20 @@ impl Stats {
         });
     }
 
+    /// Fold one retrieval query's report into the gauges.
+    pub fn record_retrieval(&mut self, report: &RetrievalReport) {
+        self.retrievals += 1;
+        self.retrieval_candidates += report.corpus as u64;
+        self.retrieval_solved += report.solved as u64;
+        self.retrieval_pruned += report.pruned as u64;
+        self.retrieval_rescued += report.rescued as u64;
+        if let Some(probe) = report.probe {
+            self.recall_probes += 1;
+            self.recall_matched += probe.matched as u64;
+            self.recall_expected += probe.k as u64;
+        }
+    }
+
     pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
         self.batches += 1;
         self.batched_queries += size as u64;
@@ -126,6 +157,14 @@ impl Stats {
             warm_misses: self.workers.iter().map(|w| w.warm_misses).sum(),
             workers: self.workers.clone(),
             kernel: self.kernel,
+            retrievals: self.retrievals,
+            retrieval_candidates: self.retrieval_candidates,
+            retrieval_solved: self.retrieval_solved,
+            retrieval_pruned: self.retrieval_pruned,
+            retrieval_rescued: self.retrieval_rescued,
+            recall_probes: self.recall_probes,
+            recall_matched: self.recall_matched,
+            recall_expected: self.recall_expected,
         }
     }
 
@@ -171,9 +210,44 @@ pub struct StatsSnapshot {
     /// CPU panel ran): achieved nnz / rank, with `mass_loss` the worst
     /// observed across shape classes.
     pub kernel: Option<KernelStats>,
+    /// Retrieval queries served.
+    pub retrievals: u64,
+    /// Corpus candidates considered across retrievals.
+    pub retrieval_candidates: u64,
+    /// Candidates solved by the refine stage.
+    pub retrieval_solved: u64,
+    /// Candidates pruned on their lower bound alone.
+    pub retrieval_pruned: u64,
+    /// Refine solves rescued through the exact log-domain path.
+    pub retrieval_rescued: u64,
+    /// Brute-force recall probes executed.
+    pub recall_probes: u64,
+    /// Pruned-top-k entries the probes confirmed.
+    pub recall_matched: u64,
+    /// Entries the probes compared.
+    pub recall_expected: u64,
 }
 
 impl StatsSnapshot {
+    /// Fraction of all considered corpus candidates that were discarded
+    /// without a solve (0.0 before any retrieval ran).
+    pub fn retrieval_pruned_fraction(&self) -> f64 {
+        if self.retrieval_candidates == 0 {
+            return 0.0;
+        }
+        self.retrieval_pruned as f64 / self.retrieval_candidates as f64
+    }
+
+    /// Probed recall of the pruned search in [0, 1] (vacuously 1.0
+    /// before any probe ran — pruning is exact by construction and the
+    /// probes exist to audit that claim in production).
+    pub fn recall(&self) -> f64 {
+        if self.recall_expected == 0 {
+            return 1.0;
+        }
+        self.recall_matched as f64 / self.recall_expected as f64
+    }
+
     /// Warm-start hit rate in [0, 1]; 0.0 before any lookup happened.
     pub fn warm_hit_rate(&self) -> f64 {
         let total = self.warm_hits + self.warm_misses;
@@ -240,6 +314,25 @@ impl std::fmt::Display for StatsSnapshot {
                 k.density(),
                 k.rank,
                 k.mass_loss
+            )?;
+        }
+        if self.retrievals > 0 {
+            write!(
+                f,
+                " retrieval(queries={}, solved={}, pruned={}, fraction={:.2}, rescued={})",
+                self.retrievals,
+                self.retrieval_solved,
+                self.retrieval_pruned,
+                self.retrieval_pruned_fraction(),
+                self.retrieval_rescued
+            )?;
+        }
+        if self.recall_probes > 0 {
+            write!(
+                f,
+                " recall(probes={}, rate={:.3})",
+                self.recall_probes,
+                self.recall()
             )?;
         }
         Ok(())
@@ -332,6 +425,46 @@ mod tests {
         assert!((k.mass_loss - 1e-5).abs() < 1e-18, "worst loss is sticky");
         assert!((k.frobenius_budget - 1e-6).abs() < 1e-18, "worst budget is sticky");
         assert!(snap.to_string().contains("kernel(nnz=64"));
+    }
+
+    #[test]
+    fn retrieval_gauges_accumulate_and_render() {
+        use crate::retrieval::{ProbeOutcome, RetrievalReport};
+        let mut s = Stats::default();
+        let snap = s.snapshot();
+        assert_eq!(snap.retrieval_pruned_fraction(), 0.0);
+        assert_eq!(snap.recall(), 1.0, "vacuous recall before any probe");
+        assert!(!snap.to_string().contains("retrieval("));
+        let report = RetrievalReport {
+            corpus: 200,
+            k: 10,
+            solved: 40,
+            pruned: 160,
+            panels: 4,
+            rescued: 3,
+            failed: 0,
+            warm_seeded: 0,
+            iterations: 1234,
+            pruned_mass: 20,
+            pruned_centroid: 40,
+            pruned_projection: 100,
+            threshold: 0.5,
+            probe: Some(ProbeOutcome { matched: 10, k: 10 }),
+        };
+        s.record_retrieval(&report);
+        s.record_retrieval(&RetrievalReport { probe: None, ..report });
+        let snap = s.snapshot();
+        assert_eq!(snap.retrievals, 2);
+        assert_eq!(snap.retrieval_candidates, 400);
+        assert_eq!(snap.retrieval_solved, 80);
+        assert_eq!(snap.retrieval_pruned, 320);
+        assert_eq!(snap.retrieval_rescued, 6);
+        assert!((snap.retrieval_pruned_fraction() - 0.8).abs() < 1e-12);
+        assert_eq!(snap.recall_probes, 1);
+        assert!((snap.recall() - 1.0).abs() < 1e-12);
+        let line = snap.to_string();
+        assert!(line.contains("retrieval(queries=2"));
+        assert!(line.contains("recall(probes=1"));
     }
 
     #[test]

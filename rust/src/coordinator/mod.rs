@@ -38,6 +38,32 @@ use crate::F;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct MetricId(pub u32);
 
+/// Identifier of a registered retrieval corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CorpusId(pub u32);
+
+/// One top-k retrieval request against a registered corpus.
+#[derive(Debug, Clone)]
+pub struct RetrievalQuery {
+    /// Corpus to search (must be registered first).
+    pub corpus: CorpusId,
+    /// Query histogram.
+    pub r: Histogram,
+    /// Neighbors requested (clamped to the corpus size).
+    pub k: usize,
+}
+
+/// Completed retrieval result.
+#[derive(Debug, Clone)]
+pub struct RetrievalOutcome {
+    /// The top-k neighbors in ascending (distance, entry) order.
+    pub hits: Vec<crate::retrieval::Hit>,
+    /// What the query cost and what the bound cascade pruned.
+    pub report: crate::retrieval::RetrievalReport,
+    /// Queue wait + search, in microseconds.
+    pub latency_us: u64,
+}
+
 /// Which backend executed a query.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
@@ -147,6 +173,19 @@ pub struct CoordinatorConfig {
     pub anneal: LambdaSchedule,
     /// Dynamic batching parameters.
     pub batcher: BatcherConfig,
+    /// Retrieval recall probing: every N-th `retrieve` call per corpus
+    /// additionally runs the brute-force search and compares, feeding
+    /// the `recall_probes` / `recall_matched` gauges (0 = never; probes
+    /// solve the whole corpus, so treat this as a sampled audit, not a
+    /// steady-state setting). The rest of the retrieval refine stage is
+    /// derived from the serving config it rides: `cpu_workers` executor
+    /// workers, `cpu_backend` pinning, the `kernel` policy, the `anneal`
+    /// schedule, the batcher's effective `max_batch` as the refine panel
+    /// width, and the warm-start tolerance/iteration cap when
+    /// `warm_start` is set (1e-9 / 10k otherwise — retrieval always
+    /// re-ranks in convergence-checked mode so the truncated-kernel
+    /// rescue contract stays total).
+    pub retrieval_probe_every: u64,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -189,6 +228,7 @@ impl Default for CoordinatorConfig {
             warm_start: None,
             anneal: LambdaSchedule::Fixed,
             batcher: BatcherConfig::default(),
+            retrieval_probe_every: 0,
         }
     }
 }

@@ -16,10 +16,15 @@
 
 use super::batcher::{PendingBatcher, ReadyBatch, ShapeClass};
 use super::metrics::{Stats, StatsSnapshot};
-use super::{CoordinatorConfig, EngineKind, MetricId, Query, QueryResult};
+use super::{
+    CoordinatorConfig, CorpusId, EngineKind, MetricId, Query, QueryResult,
+    RetrievalOutcome, RetrievalQuery,
+};
 use crate::backend::ShardedExecutor;
 use crate::metric::CostMatrix;
+use crate::retrieval::{CorpusIndex, RetrievalConfig, RetrievalError, RetrievalService};
 use crate::runtime::{RuntimeError, XlaRuntime};
+use crate::simplex::Histogram;
 use crate::sinkhorn::SinkhornConfig;
 use crate::F;
 use std::collections::HashMap;
@@ -31,6 +36,7 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone)]
 pub enum ServiceError {
     UnknownMetric(MetricId),
+    UnknownCorpus(CorpusId),
     DimensionMismatch { got: usize, want: usize },
     NoBackend(usize),
     InvalidConfig(String),
@@ -43,6 +49,9 @@ impl std::fmt::Display for ServiceError {
         match self {
             ServiceError::UnknownMetric(id) => {
                 write!(f, "metric {id:?} is not registered")
+            }
+            ServiceError::UnknownCorpus(id) => {
+                write!(f, "corpus {id:?} is not registered")
             }
             ServiceError::InvalidConfig(msg) => {
                 write!(f, "invalid coordinator config: {msg}")
@@ -71,6 +80,21 @@ struct Job {
 enum Message {
     Query(Job),
     RegisterMetric(MetricId, CostMatrix, Sender<()>),
+    /// Build a retrieval index + service over `entries` against a
+    /// registered metric at the given serving λ; acks the corpus size.
+    RegisterCorpus {
+        id: CorpusId,
+        metric: MetricId,
+        lambda: F,
+        entries: Vec<Histogram>,
+        ack: Sender<Result<usize, ServiceError>>,
+    },
+    /// Pruned top-k search against a registered corpus.
+    Retrieve {
+        query: RetrievalQuery,
+        enqueued: Instant,
+        respond: Sender<Result<RetrievalOutcome, ServiceError>>,
+    },
     Stats(Sender<StatsSnapshot>),
     /// Warm the XLA executable cache (compile all variants now).
     Warmup(Sender<Result<usize, ServiceError>>),
@@ -191,6 +215,55 @@ impl DistanceService {
         ack_rx.recv().map_err(|_| ServiceError::Stopped)
     }
 
+    /// Register (or replace) a retrieval corpus bound to a registered
+    /// metric at a fixed serving λ. The engine thread ingests, validates
+    /// and indexes `entries` (per-entry projection CDFs, centroid
+    /// coordinates, warm-scaling cache) and stands up a pruned top-k
+    /// [`crate::retrieval::RetrievalService`] whose refine stage shares
+    /// the service's CPU serving knobs (workers, backend pinning, kernel
+    /// policy, anneal schedule — see
+    /// [`CoordinatorConfig::retrieval_probe_every`] for the full
+    /// derivation). Returns the indexed corpus size.
+    ///
+    /// Re-registering the corpus's metric drops the corpus (its
+    /// precomputed statistics would silently describe the old metric).
+    ///
+    /// Latency contract: corpus ingestion and every [`Self::retrieve`]
+    /// search execute *inline on the engine thread* (the index and its
+    /// executor are engine-owned state, like the distance executors).
+    /// While one runs, pending distance queries wait — their batcher
+    /// deadline can be overshot by the duration of the search (or of a
+    /// recall probe, which brute-forces the whole corpus). Bound corpus
+    /// sizes and probe rates accordingly; moving the search walk onto
+    /// its own thread is an open ROADMAP item.
+    pub fn register_corpus(
+        &self,
+        id: CorpusId,
+        metric: MetricId,
+        lambda: F,
+        entries: Vec<Histogram>,
+    ) -> Result<usize, ServiceError> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(Message::RegisterCorpus { id, metric, lambda, entries, ack: ack_tx })
+            .map_err(|_| ServiceError::Stopped)?;
+        ack_rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// Async top-k retrieval: returns a receiver for the outcome.
+    pub fn submit_retrieval(
+        &self,
+        query: RetrievalQuery,
+    ) -> Result<Receiver<Result<RetrievalOutcome, ServiceError>>, ServiceError> {
+        self.client().submit_retrieval(query)
+    }
+
+    /// Blocking top-k retrieval convenience wrapper.
+    pub fn retrieve(&self, query: RetrievalQuery) -> Result<RetrievalOutcome, ServiceError> {
+        let rx = self.submit_retrieval(query)?;
+        rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
     /// Pre-compile all artifacts (returns how many were compiled).
     pub fn warmup(&self) -> Result<usize, ServiceError> {
         let (tx, rx) = channel();
@@ -255,6 +328,24 @@ impl ServiceClient {
         let rx = self.submit(query)?;
         rx.recv().map_err(|_| ServiceError::Stopped)?
     }
+
+    /// Async top-k retrieval: returns a receiver for the outcome.
+    pub fn submit_retrieval(
+        &self,
+        query: RetrievalQuery,
+    ) -> Result<Receiver<Result<RetrievalOutcome, ServiceError>>, ServiceError> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Message::Retrieve { query, enqueued: Instant::now(), respond: tx })
+            .map_err(|_| ServiceError::Stopped)?;
+        Ok(rx)
+    }
+
+    /// Blocking top-k retrieval convenience wrapper.
+    pub fn retrieve(&self, query: RetrievalQuery) -> Result<RetrievalOutcome, ServiceError> {
+        let rx = self.submit_retrieval(query)?;
+        rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
 }
 
 /// State owned by the engine thread.
@@ -266,6 +357,9 @@ struct EngineThread {
     /// One sharded panel executor per (metric, λ) shape class; each holds
     /// `config.cpu_workers` private K/Kᵀ-bound backend instances.
     executors: HashMap<(MetricId, u64), ShardedExecutor>,
+    /// One pruned-search service per registered corpus, remembering the
+    /// metric it indexed so metric replacement can invalidate it.
+    corpora: HashMap<CorpusId, (MetricId, RetrievalService)>,
     pending: PendingBatcher<Job>,
     stats: Stats,
 }
@@ -284,6 +378,7 @@ impl EngineThread {
             rx,
             metrics: HashMap::new(),
             executors: HashMap::new(),
+            corpora: HashMap::new(),
             pending,
             stats: Stats::default(),
         }
@@ -301,12 +396,21 @@ impl EngineThread {
                 Ok(Message::Query(job)) => self.accept(job),
                 Ok(Message::RegisterMetric(id, m, ack)) => {
                     self.metrics.insert(id, m);
-                    // Invalidate executors/buffers bound to the replaced metric.
+                    // Invalidate executors/buffers/corpora bound to the
+                    // replaced metric (a corpus's precomputed statistics
+                    // describe the metric they were built against).
                     self.executors.retain(|(mid, _), _| *mid != id);
+                    self.corpora.retain(|_, (mid, _)| *mid != id);
                     if let Some(rt) = self.runtime.as_mut() {
                         rt.invalidate_metric(id.0 as u64);
                     }
                     let _ = ack.send(());
+                }
+                Ok(Message::RegisterCorpus { id, metric, lambda, entries, ack }) => {
+                    let _ = ack.send(self.register_corpus(id, metric, lambda, entries));
+                }
+                Ok(Message::Retrieve { query, enqueued, respond }) => {
+                    let _ = respond.send(self.retrieve(query, enqueued));
                 }
                 Ok(Message::Stats(tx)) => {
                     let _ = tx.send(self.stats.snapshot());
@@ -331,6 +435,84 @@ impl EngineThread {
             }
             for batch in self.pending.poll_expired(Instant::now()) {
                 self.execute(batch);
+            }
+        }
+    }
+
+    /// The refine-stage configuration a corpus search runs with, derived
+    /// from the serving config (documented on
+    /// [`CoordinatorConfig::retrieval_probe_every`]).
+    fn retrieval_config(&self, lambda: F) -> RetrievalConfig {
+        let mut rc = RetrievalConfig::serving(lambda);
+        rc.workers = self.config.cpu_workers;
+        rc.backend = self.config.cpu_backend;
+        rc.panel = self
+            .config
+            .batcher
+            .effective(self.config.cpu_workers)
+            .max_batch;
+        rc.probe_every = self.config.retrieval_probe_every;
+        rc.sinkhorn.kernel = self.config.kernel;
+        rc.sinkhorn.schedule = self.config.anneal;
+        if let Some(ws) = self.config.warm_start {
+            rc.sinkhorn.tolerance = ws.tolerance;
+            rc.sinkhorn.max_iterations = ws.max_iterations;
+        }
+        rc
+    }
+
+    /// Build and install one corpus index + search service.
+    fn register_corpus(
+        &mut self,
+        id: CorpusId,
+        metric_id: MetricId,
+        lambda: F,
+        entries: Vec<Histogram>,
+    ) -> Result<usize, ServiceError> {
+        let metric = self
+            .metrics
+            .get(&metric_id)
+            .ok_or(ServiceError::UnknownMetric(metric_id))?;
+        if !(lambda > 0.0 && lambda.is_finite()) {
+            return Err(ServiceError::InvalidConfig(format!(
+                "corpus serving lambda must be positive and finite (got {lambda})"
+            )));
+        }
+        let index = CorpusIndex::from_histograms(
+            metric,
+            entries,
+            CorpusIndex::DEFAULT_ANCHORS,
+        )
+        .map_err(retrieval_error)?;
+        let size = index.len();
+        let service = RetrievalService::new(index, self.retrieval_config(lambda));
+        self.corpora.insert(id, (metric_id, service));
+        Ok(size)
+    }
+
+    /// Run one pruned top-k search and fold its report into the gauges.
+    fn retrieve(
+        &mut self,
+        query: RetrievalQuery,
+        enqueued: Instant,
+    ) -> Result<RetrievalOutcome, ServiceError> {
+        let (_, service) = self
+            .corpora
+            .get_mut(&query.corpus)
+            .ok_or(ServiceError::UnknownCorpus(query.corpus))?;
+        match service.top_k(&query.r, query.k) {
+            Ok((hits, report)) => {
+                self.stats.record_retrieval(&report);
+                let latency = Instant::now().saturating_duration_since(enqueued);
+                Ok(RetrievalOutcome {
+                    hits,
+                    report,
+                    latency_us: latency.as_micros().min(u64::MAX as u128) as u64,
+                })
+            }
+            Err(e) => {
+                self.stats.errors += 1;
+                Err(retrieval_error(e))
             }
         }
     }
@@ -527,6 +709,17 @@ impl EngineThread {
                 latency_us: latency.as_micros().min(u64::MAX as u128) as u64,
             }));
         }
+    }
+}
+
+/// Map index/search errors onto the client-facing error surface.
+fn retrieval_error(e: RetrievalError) -> ServiceError {
+    match e {
+        RetrievalError::QueryDimensionMismatch { got, want }
+        | RetrievalError::DimensionMismatch { got, want, .. } => {
+            ServiceError::DimensionMismatch { got, want }
+        }
+        other => ServiceError::InvalidConfig(other.to_string()),
     }
 }
 
@@ -811,6 +1004,93 @@ mod tests {
         assert!(snap.warm_misses >= 1, "first query must miss: {snap}");
         assert!(snap.warm_hits >= 1, "repeats must hit: {snap}");
         assert!(snap.to_string().contains("warm("));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn corpus_registration_validates_and_retrieval_matches_brute_force() {
+        let mut config = CoordinatorConfig::cpu_only();
+        config.cpu_workers = 2;
+        config.retrieval_probe_every = 2; // probe the second query
+        let svc = DistanceService::start(config).unwrap();
+        let mut rng = seeded_rng(21);
+        let d = 12;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        svc.register_metric(MetricId(0), m.clone()).unwrap();
+        let entries: Vec<Histogram> =
+            (0..30).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+
+        // Unknown metric / bad lambda / bad dimensions are rejected.
+        let err = svc
+            .register_corpus(CorpusId(0), MetricId(9), 9.0, entries.clone())
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownMetric(MetricId(9))));
+        let err = svc
+            .register_corpus(CorpusId(0), MetricId(0), -1.0, entries.clone())
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidConfig(_)));
+        let mut bad = entries.clone();
+        bad[3] = Histogram::uniform(5);
+        let err = svc.register_corpus(CorpusId(0), MetricId(0), 9.0, bad).unwrap_err();
+        assert!(matches!(err, ServiceError::DimensionMismatch { got: 5, want: 12 }));
+
+        // A clean registration serves exact pruned top-k.
+        let size = svc
+            .register_corpus(CorpusId(0), MetricId(0), 9.0, entries.clone())
+            .unwrap();
+        assert_eq!(size, 30);
+        let q = Histogram::sample_uniform(d, &mut rng);
+        let out = svc
+            .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q.clone(), k: 5 })
+            .unwrap();
+        assert_eq!(out.hits.len(), 5);
+        assert_eq!(out.report.solved + out.report.pruned, 30);
+        // Oracle: a standalone retrieval service over the same corpus.
+        let index =
+            crate::retrieval::CorpusIndex::from_histograms(&m, entries, 4).unwrap();
+        let mut oracle = crate::retrieval::RetrievalService::new(
+            index,
+            crate::retrieval::RetrievalConfig::serving(9.0),
+        );
+        let brute = oracle.brute_force(&q, 5).unwrap();
+        for (a, b) in out.hits.iter().zip(&brute) {
+            assert_eq!(a.entry, b.entry);
+            assert!((a.distance - b.distance).abs() < 1e-7 * (1.0 + b.distance));
+        }
+        // Second query trips the recall probe; gauges accumulate.
+        let out2 = svc
+            .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q, k: 5 })
+            .unwrap();
+        let probe = out2.report.probe.expect("second query must probe");
+        assert_eq!(probe.matched, probe.k);
+        let snap = svc.stats().unwrap();
+        assert_eq!(snap.retrievals, 2);
+        assert_eq!(snap.retrieval_candidates, 60);
+        assert_eq!(snap.recall_probes, 1);
+        assert!((snap.recall() - 1.0).abs() < 1e-12);
+        assert!(snap.to_string().contains("retrieval(queries=2"));
+
+        // Unknown corpus errors; metric replacement drops the corpus.
+        let err = svc
+            .retrieve(RetrievalQuery {
+                corpus: CorpusId(7),
+                r: Histogram::uniform(d),
+                k: 1,
+            })
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownCorpus(CorpusId(7))));
+        svc.register_metric(MetricId(0), m).unwrap();
+        let err = svc
+            .retrieve(RetrievalQuery {
+                corpus: CorpusId(0),
+                r: Histogram::uniform(d),
+                k: 1,
+            })
+            .unwrap_err();
+        assert!(
+            matches!(err, ServiceError::UnknownCorpus(CorpusId(0))),
+            "metric replacement must invalidate dependent corpora"
+        );
         svc.shutdown();
     }
 

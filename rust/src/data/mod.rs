@@ -194,11 +194,108 @@ impl SyntheticDigits {
     }
 }
 
+/// Clustered histogram corpus generator — the retrieval subsystem's
+/// synthetic workload (and the one shared by its bench, tests and the
+/// serve_demo example, so the cluster recipe cannot drift between
+/// them). Each cluster is a spiky Dirichlet prototype; each entry mixes
+/// the prototype with fresh Dirichlet noise:
+/// `entry = (1 − mix)·prototype + mix·noise`. Small `mix` gives the
+/// near/far structure a bound cascade prunes on; `mix = 1.0`
+/// degenerates to a fully unstructured corpus.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusteredCorpus {
+    /// Histogram dimension d.
+    pub dim: usize,
+    /// Number of cluster prototypes.
+    pub clusters: usize,
+    /// Entries generated per cluster.
+    pub per_cluster: usize,
+    /// Noise mixture weight in [0, 1].
+    pub mix: F,
+    /// Dirichlet α of the prototypes (< 1 ⇒ spiky, well-separated).
+    pub proto_alpha: F,
+    /// Dirichlet α of the per-entry noise.
+    pub noise_alpha: F,
+}
+
+impl ClusteredCorpus {
+    /// The standard recipe: Dirichlet(0.3) prototypes, Dirichlet(1.0)
+    /// noise.
+    pub fn new(dim: usize, clusters: usize, per_cluster: usize, mix: F) -> Self {
+        Self { dim, clusters, per_cluster, mix, proto_alpha: 0.3, noise_alpha: 1.0 }
+    }
+
+    /// One prototype/noise mixture at an explicit mixing weight (also
+    /// how queries "near" a prototype are drawn).
+    pub fn mixture_at(&self, proto: &Histogram, mix: F, rng: &mut Rng) -> Histogram {
+        let noise = Histogram::sample_dirichlet(proto.dim(), self.noise_alpha, rng);
+        let w: Vec<F> = proto
+            .values()
+            .iter()
+            .zip(noise.values())
+            .map(|(a, b)| (1.0 - mix) * a + mix * b)
+            .collect();
+        Histogram::from_weights(&w).expect("mixture of histograms has positive mass")
+    }
+
+    /// Draw (corpus, prototypes): `clusters × per_cluster` entries in
+    /// cluster-major order (entry i belongs to cluster i / per_cluster).
+    pub fn generate(&self, rng: &mut Rng) -> (Vec<Histogram>, Vec<Histogram>) {
+        let protos: Vec<Histogram> = (0..self.clusters)
+            .map(|_| Histogram::sample_dirichlet(self.dim, self.proto_alpha, rng))
+            .collect();
+        let mut corpus = Vec::with_capacity(self.clusters * self.per_cluster);
+        for p in &protos {
+            for _ in 0..self.per_cluster {
+                corpus.push(self.mixture_at(p, self.mix, rng));
+            }
+        }
+        (corpus, protos)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::distances::ClassicalDistance;
     use crate::simplex::seeded_rng;
+
+    #[test]
+    fn clustered_corpus_shapes_and_structure() {
+        let gen = ClusteredCorpus::new(16, 4, 5, 0.1);
+        let mut rng = seeded_rng(9);
+        let (corpus, protos) = gen.generate(&mut rng);
+        assert_eq!(corpus.len(), 20);
+        assert_eq!(protos.len(), 4);
+        assert!(corpus.iter().all(|h| h.dim() == 16 && h.mass_error() < 1e-9));
+        // At mix 0.1 an entry sits far closer (in TV) to its own
+        // prototype than to the others' — the structure retrieval prunes
+        // on.
+        let tv = |a: &Histogram, b: &Histogram| -> F {
+            0.5 * a
+                .values()
+                .iter()
+                .zip(b.values())
+                .map(|(x, y)| (x - y).abs())
+                .sum::<F>()
+        };
+        for (i, h) in corpus.iter().enumerate() {
+            let own = tv(h, &protos[i / 5]);
+            let best_other = protos
+                .iter()
+                .enumerate()
+                .filter(|(c, _)| *c != i / 5)
+                .map(|(_, p)| tv(h, p))
+                .fold(F::INFINITY, F::min);
+            assert!(own < best_other, "entry {i}: own {own} vs other {best_other}");
+        }
+        // mixture_at at mix 1.0 ignores the prototype entirely (pure
+        // noise), at 0.0 reproduces it.
+        let exact = gen.mixture_at(&protos[0], 0.0, &mut rng);
+        for (a, b) in exact.values().iter().zip(protos[0].values()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
 
     #[test]
     fn samples_are_valid_histograms() {

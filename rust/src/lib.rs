@@ -10,7 +10,9 @@
 //! * **Layer 3 (this crate)** — a Rust coordinator that loads the
 //!   artifacts through PJRT ([`runtime`]), routes and batches distance
 //!   queries ([`coordinator`]), executes panels across a sharded
-//!   thread-pool of pluggable solver strategies ([`backend`]), and ships
+//!   thread-pool of pluggable solver strategies ([`backend`]), answers
+//!   corpus-scale top-k queries through a pruned bound-then-refine
+//!   cascade ([`retrieval`]), and ships
 //!   every substrate the paper's evaluation needs: an exact EMD solver
 //!   ([`ot`]), a pure-Rust Sinkhorn engine ([`sinkhorn`]), classical
 //!   histogram distances ([`distances`]), a kernel SVM ([`svm`]),
@@ -54,6 +56,7 @@ pub mod exp;
 pub mod linalg;
 pub mod metric;
 pub mod ot;
+pub mod retrieval;
 pub mod rng;
 pub mod runtime;
 pub mod simplex;
@@ -72,11 +75,14 @@ pub mod prelude {
         BatcherConfig, CoordinatorConfig, DistanceService, Query, QueryResult,
         WarmStartConfig,
     };
-    pub use crate::data::{DigitClass, SyntheticDigits};
+    pub use crate::data::{ClusteredCorpus, DigitClass, SyntheticDigits};
     pub use crate::distances::{ClassicalDistance, KernelBuilder};
     pub use crate::linalg::{KernelOp, KernelPolicy, KernelStats};
     pub use crate::metric::{CostMatrix, GridMetric, RandomMetric};
     pub use crate::ot::{EmdSolver, TransportPlan};
+    pub use crate::retrieval::{
+        BoundCascade, CorpusIndex, RetrievalConfig, RetrievalService,
+    };
     pub use crate::rng::Rng;
     pub use crate::simplex::{seeded_rng, Histogram};
     pub use crate::sinkhorn::{

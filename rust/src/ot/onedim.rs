@@ -4,10 +4,26 @@
 //! optimal transportation distance has the classical CDF form
 //! d(r,c) = Σ_k |R_k − C_k| · (x_{k+1} − x_k) (Levina & Bickel, 2001 link
 //! the EMD to the Mallows distance). With unit-spaced bins this is just
-//! the ℓ₁ norm of the CDF difference. It serves as an *independent oracle*
-//! for the network simplex in tests, and as a fast O(d) path for line
-//! metrics.
+//! the ℓ₁ norm of the CDF difference. It serves three roles:
+//!
+//! * an *independent oracle* for the network simplex in tests;
+//! * a fast O(d) path for genuine line metrics;
+//! * an **admissible lower bound** on any transportation distance, via
+//!   anchor projection ([`projection_lower_bound`]): project every bin
+//!   onto the line through x_i = m_{a,i}; the reverse triangle
+//!   inequality gives |x_i − x_j| ≤ m_ij, so the closed-form 1-D cost of
+//!   the projected histograms can never exceed d_M — and since the
+//!   served d_M^λ is the cost of a feasible plan, d_M ≤ d_M^λ extends
+//!   the bound to the whole Sinkhorn family. The retrieval cascade
+//!   ([`crate::retrieval`]) prunes corpus candidates on exactly this
+//!   contract.
+//!
+//! [`quantile_transport`] is the general form: exact 1-D transport
+//! between two weighted point sets with *different* supports and support
+//! sizes (the merged-CDF integral ∫|F_r − F_c| dx).
 
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
 use crate::F;
 
 /// Exact EMD between histograms on unit-spaced line bins (m_ij = |i−j|).
@@ -35,6 +51,87 @@ pub fn emd_1d_positions(r: &[F], c: &[F], x: &[F]) -> F {
         total += cum.abs() * (x[k + 1] - x[k]);
     }
     total
+}
+
+/// Exact 1-D optimal transport between two weighted point sets on the
+/// line — the quantile-transport (Mallows) form ∫|F_r − F_c| dx over the
+/// merged support.
+///
+/// Unlike [`emd_1d_positions`] the two sides may have **different
+/// supports and different support sizes**: `(r, xr)` and `(c, xc)` are
+/// weight/position pairs, each with positions sorted ascending (asserted
+/// in debug builds). Weights must be non-negative with equal total mass
+/// (both sides normalized histograms in the intended use); the result is
+/// the exact 1-D transportation cost under m(x, y) = |x − y|.
+///
+/// Degenerate cases: two point masses cost |xr − xc|; identical weighted
+/// supports cost 0; an empty side is a programming error (asserted).
+pub fn quantile_transport(r: &[F], xr: &[F], c: &[F], xc: &[F]) -> F {
+    assert_eq!(r.len(), xr.len(), "source weights/positions length mismatch");
+    assert_eq!(c.len(), xc.len(), "target weights/positions length mismatch");
+    assert!(!r.is_empty() && !c.is_empty(), "point sets must be non-empty");
+    debug_assert!(xr.windows(2).all(|w| w[0] <= w[1]), "source positions sorted");
+    debug_assert!(xc.windows(2).all(|w| w[0] <= w[1]), "target positions sorted");
+    debug_assert!(
+        (r.iter().sum::<F>() - c.iter().sum::<F>()).abs() < 1e-9,
+        "transport needs equal total mass"
+    );
+    // Merge-walk the two sorted supports, integrating |F_r − F_c| over
+    // each gap between consecutive breakpoints.
+    let (mut i, mut j) = (0usize, 0usize);
+    let (mut fr, mut fc) = (0.0, 0.0);
+    let mut prev: Option<F> = None;
+    let mut total = 0.0;
+    while i < xr.len() || j < xc.len() {
+        let x = match (xr.get(i), xc.get(j)) {
+            (Some(&a), Some(&b)) => a.min(b),
+            (Some(&a), None) => a,
+            (None, Some(&b)) => b,
+            (None, None) => unreachable!(),
+        };
+        if let Some(p) = prev {
+            total += (fr - fc).abs() * (x - p);
+        }
+        while i < xr.len() && xr[i] <= x {
+            fr += r[i];
+            i += 1;
+        }
+        while j < xc.len() && xc[j] <= x {
+            fc += c[j];
+            j += 1;
+        }
+        prev = Some(x);
+    }
+    total
+}
+
+/// Admissible lower bound on d_M(r, c) — and therefore on the served
+/// d_M^λ(r, c) for every λ, since d_M ≤ d_M^λ — from a 1-D anchor
+/// projection, in O(d log d) (O(d) when the caller pre-sorts, as the
+/// retrieval index does).
+///
+/// Project bin i to x_i = m_{anchor,i}. By the reverse triangle
+/// inequality |x_i − x_j| = |m_{a,i} − m_{a,j}| ≤ m_ij, so every
+/// feasible plan P satisfies ⟨P, M⟩ ≥ Σ P_ij|x_i − x_j| ≥ the 1-D
+/// optimum computed here. Different anchors give different (incomparable)
+/// bounds; taking the max over a small anchor set tightens it.
+pub fn projection_lower_bound(
+    m: &CostMatrix,
+    anchor: usize,
+    r: &Histogram,
+    c: &Histogram,
+) -> F {
+    let d = m.dim();
+    assert!(anchor < d, "anchor out of range");
+    assert_eq!(r.dim(), d, "source dimension mismatch");
+    assert_eq!(c.dim(), d, "target dimension mismatch");
+    let mut perm: Vec<usize> = (0..d).collect();
+    let row = m.row(anchor);
+    perm.sort_by(|&a, &b| row[a].total_cmp(&row[b]).then(a.cmp(&b)));
+    let x: Vec<F> = perm.iter().map(|&i| row[i]).collect();
+    let rs: Vec<F> = perm.iter().map(|&i| r.values()[i]).collect();
+    let cs: Vec<F> = perm.iter().map(|&i| c.values()[i]).collect();
+    emd_1d_positions(&rs, &cs, &x)
 }
 
 #[cfg(test)]
@@ -86,6 +183,109 @@ mod tests {
             assert!((ab - ba).abs() < 1e-12);
             assert!(emd_1d(r.values(), r.values()).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn quantile_transport_point_masses_and_degenerates() {
+        // Two point masses cost their separation, regardless of support
+        // sizes being 1 vs 1.
+        assert!((quantile_transport(&[1.0], &[0.0], &[1.0], &[3.5]) - 3.5).abs() < 1e-12);
+        // Identical weighted supports cost zero.
+        let w = [0.25, 0.75];
+        let x = [1.0, 4.0];
+        assert_eq!(quantile_transport(&w, &x, &w, &x), 0.0);
+        // Coincident positions with different weight splits still cost 0
+        // only when the CDFs agree everywhere; here they differ on [1,4).
+        let v = [0.75, 0.25];
+        assert!((quantile_transport(&w, &x, &v, &x) - 0.5 * 3.0).abs() < 1e-12);
+        // A point mass against a two-point split: 0.5·|2−0| + 0.5·|2−4|.
+        assert!(
+            (quantile_transport(&[1.0], &[2.0], &[0.5, 0.5], &[0.0, 4.0]) - 2.0).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn quantile_transport_unequal_support_sizes_match_padded_form() {
+        // (r over 3 points) vs (c over 5 points): pad both onto the
+        // merged support and check against emd_1d_positions.
+        let xr = [0.0, 1.0, 2.5];
+        let r = [0.2, 0.5, 0.3];
+        let xc = [0.5, 1.0, 1.5, 2.0, 3.0];
+        let c = [0.1, 0.2, 0.3, 0.2, 0.2];
+        let got = quantile_transport(&r, &xr, &c, &xc);
+        // Merged support, histograms padded with zeros.
+        let merged = [0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0];
+        let rp = [0.2, 0.0, 0.5, 0.0, 0.0, 0.3, 0.0];
+        let cp = [0.0, 0.1, 0.2, 0.3, 0.2, 0.0, 0.2];
+        let want = emd_1d_positions(&rp, &cp, &merged);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn quantile_transport_generalizes_shared_support_form() {
+        for seed in 0..50u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(2, 32);
+            let r = Histogram::sample_uniform(d, &mut rng);
+            let c = Histogram::sample_uniform(d, &mut rng);
+            let mut x: Vec<F> = (0..d).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            x.sort_by(F::total_cmp);
+            let a = emd_1d_positions(r.values(), c.values(), &x);
+            let b = quantile_transport(r.values(), &x, c.values(), &x);
+            assert!((a - b).abs() < 1e-12, "seed={seed}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn projection_bound_is_admissible_and_exact_on_line_metrics() {
+        use crate::metric::RandomMetric;
+        use crate::ot::EmdSolver;
+        for seed in 0..30u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(3, 20);
+            let m = RandomMetric::new(d).sample(&mut rng);
+            let r = Histogram::sample_uniform(d, &mut rng);
+            let c = Histogram::sample_uniform(d, &mut rng);
+            let exact = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
+            for anchor in [0, d / 2, d - 1] {
+                let bound = projection_lower_bound(&m, anchor, &r, &c);
+                assert!(
+                    bound <= exact + 1e-9,
+                    "seed={seed} anchor={anchor}: {bound} > d_M {exact}"
+                );
+                assert!(bound >= 0.0);
+            }
+            // Point-mass degenerate: bound equals the exact cost m_ij
+            // when the anchor is one of the two occupied bins.
+            let i = rng.range_usize(0, d);
+            let mut j = rng.range_usize(0, d);
+            if j == i {
+                j = (j + 1) % d;
+            }
+            let di = Histogram::dirac(d, i);
+            let dj = Histogram::dirac(d, j);
+            let b = projection_lower_bound(&m, i, &di, &dj);
+            assert!((b - m.get(i, j)).abs() < 1e-12);
+        }
+        // A genuine line metric: the anchor-0 projection recovers the
+        // full 1-D optimum (positions m_{0,i} = |x_0 − x_i| reproduce the
+        // line up to reflection, which 1-D transport cannot see).
+        let d = 12;
+        let mut rng = seeded_rng(99);
+        let x: Vec<F> = (0..d).map(|i| i as F).collect();
+        let mut data = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                data[i * d + j] = (x[i] - x[j]).abs();
+            }
+        }
+        let m = CostMatrix::from_rows(d, data);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let want = emd_1d(r.values(), c.values());
+        let got = projection_lower_bound(&m, 0, &r, &c);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
     }
 
     /// TV lower bound: EMD >= TV on unit-spaced bins (moving mass at

@@ -1,0 +1,183 @@
+//! The admissible lower-bound cascade that prices corpus candidates.
+//!
+//! Every tier lower-bounds the *exact* transportation distance d_M, and
+//! therefore the served entropic distance d_M^λ for **every** λ: the
+//! dual-Sinkhorn divergence is the cost ⟨P^λ, M⟩ of a feasible plan, so
+//! d_M ≤ d_M^λ. That single inequality is the cascade's admissibility
+//! contract — a candidate whose bound exceeds the current k-th best
+//! served distance can be discarded without a solve, and the pruned
+//! top-k provably equals the brute-force top-k (locked down by
+//! `rust/tests/retrieval_exactness.rs`).
+//!
+//! Tiers, cheapest first (all O(d) per candidate after the
+//! [`CorpusIndex`] precomputation):
+//!
+//! 1. [`BoundTier::Mass`] — ½‖q − c‖₁ · min_{i≠j} m_ij: the TV
+//!    discrepancy must move somewhere, and nowhere is cheaper than the
+//!    smallest off-diagonal cost.
+//! 2. [`BoundTier::Centroid`] — ‖Lᵀq − Lᵀc‖² − 2·jitter through the
+//!    negative-type embedding of
+//!    [`crate::sinkhorn::IndependenceKernel`] (Jensen: no coupling can
+//!    beat the squared distance between embedded barycenters).
+//!    Skipped when the metric does not factor.
+//! 3. [`BoundTier::Projection`] — the max over anchor axes of the 1-D
+//!    quantile-transport cost of the projected histograms
+//!    ([`crate::ot::onedim::projection_lower_bound`], served from the
+//!    index's cached sorted CDFs).
+//!
+//! The cascade evaluates tiers cheapest-first and keeps the running max;
+//! the *pruning* decision against the k-th-best served distance lives in
+//! [`super::RetrievalService`], which prices all candidates before any τ
+//! exists and then sweeps them in ascending bound order.
+
+use super::{CorpusIndex, QueryPrep};
+use crate::simplex::Histogram;
+use crate::F;
+
+/// Which cascade tier produced (or decided) a bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundTier {
+    /// Trivial TV × min-cost bound.
+    Mass,
+    /// Embedded-barycenter (Jensen) bound.
+    Centroid,
+    /// 1-D anchor-projection quantile-transport bound.
+    Projection,
+}
+
+/// A priced candidate: the best (largest) admissible lower bound the
+/// cascade reached and the tier that supplied it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundValue {
+    /// max over the tiers — still a valid lower bound on the served
+    /// d_M^λ.
+    pub value: F,
+    /// The tier achieving [`Self::value`].
+    pub tier: BoundTier,
+}
+
+/// The tiered lower-bound evaluator. Stateless; one instance prices
+/// every (query, candidate) pair of a retrieval service.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoundCascade;
+
+impl BoundCascade {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Price candidate `entry` against the prepared query: the max over
+    /// every available tier, with the tier that supplied it (per-tier
+    /// prune attribution in the search report).
+    pub fn evaluate(
+        &self,
+        index: &CorpusIndex,
+        prep: &QueryPrep,
+        query: &Histogram,
+        entry: usize,
+    ) -> BoundValue {
+        let mut best = BoundValue {
+            value: index.mass_bound(query, entry),
+            tier: BoundTier::Mass,
+        };
+        if let Some(centroid) = index.centroid_bound(prep, entry) {
+            if centroid > best.value {
+                best = BoundValue { value: centroid, tier: BoundTier::Centroid };
+            }
+        }
+        let projection = index.projection_bound(prep, entry);
+        if projection > best.value {
+            best = BoundValue { value: projection, tier: BoundTier::Projection };
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::ot::EmdSolver;
+    use crate::simplex::seeded_rng;
+    use crate::sinkhorn::{SinkhornConfig, SinkhornEngine};
+
+    #[test]
+    fn prop_cascade_is_admissible_for_exact_and_entropic_distances() {
+        let cascade = BoundCascade::new();
+        for seed in 0..25u64 {
+            let mut rng = seeded_rng(seed);
+            let d = rng.range_usize(3, 20);
+            let m = RandomMetric::new(d).sample(&mut rng);
+            let entries: Vec<Histogram> =
+                (0..6).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+            let index =
+                CorpusIndex::from_histograms(&m, entries.clone(), 4).unwrap();
+            let q = Histogram::sample_uniform(d, &mut rng);
+            let prep = index.prepare(&q);
+            let solver = EmdSolver::new(&m);
+            for (e, c) in entries.iter().enumerate() {
+                let bound = cascade.evaluate(&index, &prep, &q, e);
+                let exact = solver.solve(&q, c).unwrap().cost;
+                assert!(
+                    bound.value <= exact + 1e-9,
+                    "seed={seed} entry={e} tier={:?}: bound {} > d_M {exact}",
+                    bound.tier,
+                    bound.value
+                );
+                // λ enters only through d^λ ≥ d_M: the same bound must
+                // stay below the served entropic distance at any λ.
+                for &lambda in &[3.0, 30.0] {
+                    let served = SinkhornEngine::with_config(
+                        &m,
+                        SinkhornConfig {
+                            lambda,
+                            tolerance: 1e-10,
+                            max_iterations: 100_000,
+                            ..Default::default()
+                        },
+                    )
+                    .distance(&q, c)
+                    .value;
+                    assert!(
+                        bound.value <= served + 1e-8,
+                        "seed={seed} entry={e} λ={lambda}: bound {} > d^λ {served}",
+                        bound.value
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evaluation_is_the_max_of_the_tiers() {
+        let mut rng = seeded_rng(7);
+        let d = 16;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let entries: Vec<Histogram> =
+            (0..4).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let index = CorpusIndex::from_histograms(&m, entries.clone(), 4).unwrap();
+        let q = Histogram::sample_uniform(d, &mut rng);
+        let prep = index.prepare(&q);
+        let cascade = BoundCascade::new();
+        for e in 0..entries.len() {
+            let full = cascade.evaluate(&index, &prep, &q, e);
+            // The bound is the max of the individual tiers, and the
+            // reported tier is the one achieving it.
+            let mass = index.mass_bound(&q, e);
+            let centroid = index.centroid_bound(&prep, e).unwrap_or(0.0);
+            let projection = index.projection_bound(&prep, e);
+            let max = mass.max(centroid).max(projection);
+            assert!((full.value - max).abs() < 1e-15);
+            let tier_value = match full.tier {
+                BoundTier::Mass => mass,
+                BoundTier::Centroid => centroid,
+                BoundTier::Projection => projection,
+            };
+            assert!((tier_value - full.value).abs() < 1e-15);
+            // A self-query prices to (numerically) zero at every tier.
+            let self_prep = index.prepare(&entries[e]);
+            let zero = cascade.evaluate(&index, &self_prep, &entries[e], e);
+            assert!(zero.value < 1e-10, "self bound {}", zero.value);
+        }
+    }
+}

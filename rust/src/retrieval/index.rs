@@ -1,0 +1,551 @@
+//! The corpus side of retrieval: ingestion, validation, normalization
+//! and per-entry precomputation.
+//!
+//! A [`CorpusIndex`] binds a histogram corpus to one ground metric and
+//! precomputes everything the [`super::BoundCascade`] needs to price a
+//! candidate in O(d) at query time:
+//!
+//! * **anchor axes** — a small farthest-point-sampled anchor set; for
+//!   each anchor a the bins are projected to x_i = m_{a,i} (reverse
+//!   triangle inequality: |x_i − x_j| ≤ m_ij), the projection sorted
+//!   once, and every entry's sorted CDF cached, so the 1-D
+//!   quantile-transport bound of [`crate::ot::onedim`] costs one
+//!   CDF-difference sweep per anchor;
+//! * **centroid coordinates** — when the metric is of negative type
+//!   (plain and squared Euclidean distance matrices both are), the
+//!   [`crate::sinkhorn::IndependenceKernel`] embedding is factored once
+//!   and each entry's embedded barycenter Lᵀc cached, so the Jensen
+//!   centroid bound costs one d-vector difference;
+//! * **warm scalings** — a [`WarmStartStore`] keyed *by corpus entry*:
+//!   the refine stage deposits every converged scaling pair back, so a
+//!   later query against the same entry starts from the previous fixed
+//!   point (warm starts change the path, never the fixed point — the
+//!   refine stage runs convergence-checked, so served values are
+//!   unaffected).
+//!
+//! Memory: per entry, `anchors`·(d−1) CDF values plus (when the
+//! embedding factors) d centroid coordinates — ~5·d·8 bytes at the
+//! default 4 anchors. Corpus sharding across executors for larger-than-
+//! RAM indexes is an open ROADMAP item.
+
+use super::RetrievalError;
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
+use crate::sinkhorn::{
+    IndependenceKernel, PreparedHistogram, ScalingInit, SinkhornOutput, WarmCounters,
+    WarmKey, WarmStartStore,
+};
+use crate::F;
+
+/// One 1-D projection axis: an anchor bin, the sort permutation of the
+/// projected positions m_{a,·}, and the gaps between consecutive sorted
+/// positions (the weights of the CDF-difference sum).
+struct AnchorAxis {
+    /// Anchor bin index (kept for reporting).
+    anchor: usize,
+    /// Bin order sorted by projected position.
+    perm: Vec<usize>,
+    /// x_{(k+1)} − x_{(k)} for the sorted positions, length d − 1.
+    gaps: Vec<F>,
+}
+
+/// Per-entry centroid-bound state: the factored embedding plus every
+/// entry's prepared (barycenter) coordinates.
+struct CentroidSpace {
+    kernel: IndependenceKernel,
+    prepared: Vec<PreparedHistogram>,
+}
+
+/// Query-side precomputation: the query's sorted CDF per anchor axis and
+/// (when the embedding exists) its prepared coordinates. Built once per
+/// query by [`CorpusIndex::prepare`], then shared across every corpus
+/// candidate the cascade prices.
+pub struct QueryPrep {
+    /// Per anchor: prefix sums of the permuted query, length d − 1.
+    cdfs: Vec<Vec<F>>,
+    /// Prepared embedding coordinates (None when the metric did not
+    /// factor as negative type).
+    prepared: Option<PreparedHistogram>,
+}
+
+/// A validated, normalized histogram corpus bound to one ground metric,
+/// with the per-entry statistics the bound cascade prices candidates
+/// from and a per-entry warm-start cache for the refine stage.
+pub struct CorpusIndex {
+    metric: CostMatrix,
+    entries: Vec<Histogram>,
+    /// min_{i≠j} m_ij — the unit cost of the trivial mass/TV bound.
+    min_off_diagonal: F,
+    axes: Vec<AnchorAxis>,
+    /// Per anchor: flattened (entries × (d−1)) sorted-CDF table.
+    cdfs: Vec<Vec<F>>,
+    centroid: Option<CentroidSpace>,
+    warm: WarmStartStore,
+}
+
+impl CorpusIndex {
+    /// Default number of 1-D projection anchors.
+    pub const DEFAULT_ANCHORS: usize = 4;
+
+    /// Build an index over already-validated histograms (each histogram
+    /// is normalized by construction). `anchors` caps the projection
+    /// anchor set (clamped to [1, d]; [`Self::DEFAULT_ANCHORS`] is the
+    /// usual choice).
+    pub fn from_histograms(
+        metric: &CostMatrix,
+        entries: Vec<Histogram>,
+        anchors: usize,
+    ) -> Result<Self, RetrievalError> {
+        if entries.is_empty() {
+            return Err(RetrievalError::EmptyCorpus);
+        }
+        let d = metric.dim();
+        for (i, h) in entries.iter().enumerate() {
+            if h.dim() != d {
+                return Err(RetrievalError::DimensionMismatch {
+                    entry: i,
+                    got: h.dim(),
+                    want: d,
+                });
+            }
+        }
+        let min_off_diagonal = min_off_diagonal(metric);
+        let axes = select_axes(metric, anchors.clamp(1, d));
+        let mut cdfs = Vec::with_capacity(axes.len());
+        for axis in &axes {
+            let mut table = Vec::with_capacity(entries.len() * d.saturating_sub(1));
+            for h in &entries {
+                push_sorted_cdf(&mut table, h.values(), &axis.perm);
+            }
+            cdfs.push(table);
+        }
+        let centroid = IndependenceKernel::new(metric).ok().map(|kernel| {
+            let prepared = entries.iter().map(|h| kernel.prepare(h)).collect();
+            CentroidSpace { kernel, prepared }
+        });
+        let capacity = entries.len();
+        Ok(Self {
+            metric: metric.clone(),
+            entries,
+            min_off_diagonal,
+            axes,
+            cdfs,
+            centroid,
+            warm: WarmStartStore::new(capacity),
+        })
+    }
+
+    /// Ingest raw non-negative weight rows: each row is validated and
+    /// normalized onto the simplex ([`Histogram::from_weights`]) before
+    /// indexing.
+    pub fn from_weights(
+        metric: &CostMatrix,
+        rows: &[Vec<F>],
+        anchors: usize,
+    ) -> Result<Self, RetrievalError> {
+        let entries = rows
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                Histogram::from_weights(row)
+                    .map_err(|source| RetrievalError::BadEntry { entry: i, source })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Self::from_histograms(metric, entries, anchors)
+    }
+
+    /// Corpus size.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Histogram dimension d shared by the metric and every entry.
+    pub fn dim(&self) -> usize {
+        self.metric.dim()
+    }
+
+    /// The bound ground metric.
+    pub fn metric(&self) -> &CostMatrix {
+        &self.metric
+    }
+
+    /// Corpus entry i.
+    pub fn entry(&self, i: usize) -> &Histogram {
+        &self.entries[i]
+    }
+
+    /// All corpus entries, in ingestion order.
+    pub fn entries(&self) -> &[Histogram] {
+        &self.entries
+    }
+
+    /// The selected projection anchor bins. Empty when the ground cost
+    /// violates the triangle inequality (e.g. squared-Euclidean
+    /// matrices): the projection bound would be inadmissible there, so
+    /// the tier is disabled rather than allowed to prune true
+    /// neighbors.
+    pub fn anchors(&self) -> Vec<usize> {
+        self.axes.iter().map(|a| a.anchor).collect()
+    }
+
+    /// Whether the centroid (negative-type embedding) bound is available
+    /// for this metric.
+    pub fn has_centroid_space(&self) -> bool {
+        self.centroid.is_some()
+    }
+
+    /// Precompute the query-side statistics shared across all candidate
+    /// bound evaluations.
+    pub fn prepare(&self, query: &Histogram) -> QueryPrep {
+        assert_eq!(query.dim(), self.dim(), "query dimension mismatch");
+        let cdfs = self
+            .axes
+            .iter()
+            .map(|axis| {
+                let mut cdf = Vec::with_capacity(self.dim().saturating_sub(1));
+                push_sorted_cdf(&mut cdf, query.values(), &axis.perm);
+                cdf
+            })
+            .collect();
+        let prepared =
+            self.centroid.as_ref().map(|space| space.kernel.prepare(query));
+        QueryPrep { cdfs, prepared }
+    }
+
+    /// Trivial mass bound: moving the TV discrepancy anywhere costs at
+    /// least min_{i≠j} m_ij per unit mass, so
+    /// d_M ≥ ½‖q − c‖₁ · min_off_diagonal.
+    pub fn mass_bound(&self, query: &Histogram, entry: usize) -> F {
+        if self.min_off_diagonal <= 0.0 {
+            return 0.0;
+        }
+        let tv: F = query
+            .values()
+            .iter()
+            .zip(self.entries[entry].values())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        0.5 * tv * self.min_off_diagonal
+    }
+
+    /// Centroid bound ‖Lᵀq − Lᵀc‖² − 2·jitter (see
+    /// [`IndependenceKernel::centroid_gap`]); `None` when the metric did
+    /// not factor as negative type.
+    pub fn centroid_bound(&self, prep: &QueryPrep, entry: usize) -> Option<F> {
+        let space = self.centroid.as_ref()?;
+        let q = prep.prepared.as_ref()?;
+        Some(space.kernel.centroid_gap(q, &space.prepared[entry]))
+    }
+
+    /// 1-D quantile-transport projection bound: the max over anchor axes
+    /// of Σ_k |Q_k − C_k|·gap_k against the cached sorted CDFs (the
+    /// closed form of [`crate::ot::onedim::projection_lower_bound`],
+    /// amortized through the index precomputation).
+    pub fn projection_bound(&self, prep: &QueryPrep, entry: usize) -> F {
+        let width = self.dim().saturating_sub(1);
+        let mut best = 0.0;
+        for (axis_idx, axis) in self.axes.iter().enumerate() {
+            let q = &prep.cdfs[axis_idx];
+            let c = &self.cdfs[axis_idx][entry * width..(entry + 1) * width];
+            let mut acc = 0.0;
+            for k in 0..width {
+                acc += (q[k] - c[k]).abs() * axis.gaps[k];
+            }
+            best = F::max(best, acc);
+        }
+        best
+    }
+
+    /// Fetch the cached converged scalings for corpus entry `entry` at
+    /// the given λ (entry-keyed: a previous query's fixed point against
+    /// the same entry seeds the next solve).
+    pub fn warm_init(&mut self, lambda: F, entry: usize) -> Option<ScalingInit> {
+        self.warm.get(&entry_key(lambda, entry))
+    }
+
+    /// Deposit a refine-stage solve back into the per-entry cache (only
+    /// converged, finite solves are kept).
+    pub fn warm_deposit(&mut self, lambda: F, entry: usize, out: &SinkhornOutput) {
+        if out.stats.converged && out.value.is_finite() {
+            self.warm.insert(entry_key(lambda, entry), ScalingInit::from_output(out));
+        }
+    }
+
+    /// Cumulative hit/miss/insert/evict counters of the per-entry warm
+    /// cache.
+    pub fn warm_counters(&self) -> WarmCounters {
+        self.warm.counters()
+    }
+}
+
+/// Warm-cache key for one corpus entry at one λ (the [`WarmKey`]
+/// fingerprint slot carries the entry id — the corpus is the namespace,
+/// so the usual query-pair fingerprint is deliberately not used).
+fn entry_key(lambda: F, entry: usize) -> WarmKey {
+    WarmKey { metric: 0, lambda_bits: lambda.to_bits(), fingerprint: entry as u64 }
+}
+
+/// min_{i≠j} m_ij (0 for d = 1).
+fn min_off_diagonal(metric: &CostMatrix) -> F {
+    let d = metric.dim();
+    let mut min = F::INFINITY;
+    for i in 0..d {
+        for j in 0..d {
+            if i != j {
+                min = F::min(min, metric.get(i, j));
+            }
+        }
+    }
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+/// Anchor admissibility for the projection bound: the bound relies on
+/// the *reverse triangle inequality* |m_{a,i} − m_{a,j}| ≤ m_ij, which
+/// holds for genuine metrics but fails for non-metric ground costs the
+/// crate also serves (squared-Euclidean matrices, footnote 1 of the
+/// paper, violate it: on a line at 0,1,2 the anchor-0 projection spreads
+/// bins 1 and 2 by 3 > m_12 = 1). An inadmissible anchor would inflate
+/// the "lower" bound past d_M and silently prune true neighbors, so
+/// such anchors are dropped at build time — the projection tier degrades
+/// to the surviving anchors (or to nothing), exactly like the centroid
+/// tier is guarded by factorization success. The tiny relative tolerance
+/// admits float-noise-level violations, which the search's
+/// `bound_slack` already absorbs.
+fn anchor_admissible(metric: &CostMatrix, anchor: usize) -> bool {
+    let d = metric.dim();
+    let row = metric.row(anchor);
+    for i in 0..d {
+        for j in (i + 1)..d {
+            let mij = metric.get(i, j);
+            if (row[i] - row[j]).abs() > mij + 1e-12 * (1.0 + mij) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Farthest-point anchor selection: start from the most peripheral bin
+/// (largest metric row sum), then greedily add the bin farthest from the
+/// chosen set. Stops early when every remaining bin is metrically
+/// indistinct from the chosen set (duplicate anchors add no information).
+/// Anchors failing the [`anchor_admissible`] reverse-triangle check are
+/// discarded.
+fn select_axes(metric: &CostMatrix, anchors: usize) -> Vec<AnchorAxis> {
+    let d = metric.dim();
+    let mut chosen: Vec<usize> = Vec::with_capacity(anchors);
+    let first = (0..d)
+        .max_by(|&a, &b| {
+            let sa: F = metric.row(a).iter().sum();
+            let sb: F = metric.row(b).iter().sum();
+            sa.total_cmp(&sb).then(b.cmp(&a))
+        })
+        .unwrap_or(0);
+    chosen.push(first);
+    while chosen.len() < anchors {
+        let (next, gap) = (0..d)
+            .map(|i| {
+                let dist = chosen
+                    .iter()
+                    .map(|&a| metric.get(a, i))
+                    .fold(F::INFINITY, F::min);
+                (i, dist)
+            })
+            .max_by(|a, b| a.1.total_cmp(&b.1).then(b.0.cmp(&a.0)))
+            .unwrap_or((0, 0.0));
+        if gap <= 0.0 {
+            break;
+        }
+        chosen.push(next);
+    }
+    chosen
+        .into_iter()
+        .filter(|&anchor| anchor_admissible(metric, anchor))
+        .map(|anchor| {
+            let row = metric.row(anchor);
+            let mut perm: Vec<usize> = (0..d).collect();
+            perm.sort_by(|&a, &b| row[a].total_cmp(&row[b]).then(a.cmp(&b)));
+            let gaps = perm
+                .windows(2)
+                .map(|w| row[w[1]] - row[w[0]])
+                .collect();
+            AnchorAxis { anchor, perm, gaps }
+        })
+        .collect()
+}
+
+/// Append the permuted prefix sums of `values` (all but the final 1.0)
+/// to `table`.
+fn push_sorted_cdf(table: &mut Vec<F>, values: &[F], perm: &[usize]) {
+    let mut acc = 0.0;
+    for &i in &perm[..perm.len().saturating_sub(1)] {
+        acc += values[i];
+        table.push(acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::ot::onedim::projection_lower_bound;
+    use crate::simplex::seeded_rng;
+
+    fn corpus(d: usize, n: usize, seed: u64) -> (CostMatrix, Vec<Histogram>) {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let entries =
+            (0..n).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        (m, entries)
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let (m, entries) = corpus(12, 20, 0);
+        let index = CorpusIndex::from_histograms(&m, entries, 4).unwrap();
+        assert_eq!(index.len(), 20);
+        assert_eq!(index.dim(), 12);
+        assert_eq!(index.anchors().len(), 4);
+        assert!(index.has_centroid_space(), "Euclidean metric must embed");
+        // Anchors are distinct.
+        let mut a = index.anchors();
+        a.sort_unstable();
+        a.dedup();
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let (m, mut entries) = corpus(12, 4, 1);
+        assert!(matches!(
+            CorpusIndex::from_histograms(&m, Vec::new(), 4),
+            Err(RetrievalError::EmptyCorpus)
+        ));
+        entries[2] = Histogram::uniform(9);
+        assert!(matches!(
+            CorpusIndex::from_histograms(&m, entries, 4),
+            Err(RetrievalError::DimensionMismatch { entry: 2, got: 9, want: 12 })
+        ));
+        let rows = vec![vec![1.0, 2.0], vec![-1.0, 1.0]];
+        let m2 = CostMatrix::from_rows(2, vec![0.0, 1.0, 1.0, 0.0]);
+        assert!(matches!(
+            CorpusIndex::from_weights(&m2, &rows, 2),
+            Err(RetrievalError::BadEntry { entry: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn from_weights_normalizes() {
+        let m = CostMatrix::from_rows(2, vec![0.0, 1.0, 1.0, 0.0]);
+        let index =
+            CorpusIndex::from_weights(&m, &[vec![2.0, 2.0], vec![1.0, 3.0]], 2)
+                .unwrap();
+        assert_eq!(index.entry(0).values(), &[0.5, 0.5]);
+        assert_eq!(index.entry(1).values(), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn cached_projection_bound_matches_uncached_helper() {
+        let (m, entries) = corpus(16, 12, 2);
+        let index = CorpusIndex::from_histograms(&m, entries.clone(), 3).unwrap();
+        let mut rng = seeded_rng(20);
+        let q = Histogram::sample_uniform(16, &mut rng);
+        let prep = index.prepare(&q);
+        for e in 0..entries.len() {
+            let cached = index.projection_bound(&prep, e);
+            let direct = index
+                .anchors()
+                .iter()
+                .map(|&a| projection_lower_bound(&m, a, &q, &entries[e]))
+                .fold(0.0, F::max);
+            assert!(
+                (cached - direct).abs() < 1e-12,
+                "entry {e}: cached {cached} vs direct {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_cache_round_trips_per_entry() {
+        let (m, entries) = corpus(8, 3, 3);
+        let mut index = CorpusIndex::from_histograms(&m, entries, 2).unwrap();
+        assert!(index.warm_init(9.0, 1).is_none());
+        let out = SinkhornOutput {
+            value: 1.0,
+            u: vec![1.0; 8],
+            v: vec![2.0; 8],
+            stats: crate::sinkhorn::SinkhornStats {
+                converged: true,
+                ..Default::default()
+            },
+        };
+        index.warm_deposit(9.0, 1, &out);
+        let init = index.warm_init(9.0, 1).expect("cached");
+        assert_eq!(init.u, vec![1.0; 8]);
+        // Different λ or entry misses; unconverged solves are not kept.
+        assert!(index.warm_init(3.0, 1).is_none());
+        assert!(index.warm_init(9.0, 0).is_none());
+        let bad = SinkhornOutput {
+            stats: crate::sinkhorn::SinkhornStats::default(),
+            ..out
+        };
+        index.warm_deposit(9.0, 2, &bad);
+        assert!(index.warm_init(9.0, 2).is_none());
+        assert!(index.warm_counters().hits >= 1);
+    }
+
+    #[test]
+    fn non_metric_costs_disable_the_projection_tier() {
+        // Squared-Euclidean costs violate the triangle inequality, so
+        // every projection anchor must be rejected — an admissible index
+        // still builds (mass + centroid tiers), it just never offers an
+        // inflated projection "lower" bound.
+        use crate::metric::GridMetric;
+        let m = GridMetric::new(3, 3).squared_cost_matrix();
+        let mut rng = seeded_rng(40);
+        let entries: Vec<Histogram> =
+            (0..8).map(|_| Histogram::sample_uniform(9, &mut rng)).collect();
+        let index = CorpusIndex::from_histograms(&m, entries.clone(), 4).unwrap();
+        // Farthest-point selection picks the four grid corners here, and
+        // every corner projection violates the reverse triangle on
+        // squared costs (desk-computed; the center anchor would pass the
+        // pairwise check but is never selected), so the tier empties.
+        assert!(index.anchors().is_empty(), "no admissible anchor on squared costs");
+        assert!(index.has_centroid_space(), "squared EDM still embeds");
+        let q = Histogram::sample_uniform(9, &mut rng);
+        let prep = index.prepare(&q);
+        // The surviving tiers stay admissible against the exact optimum.
+        use crate::ot::EmdSolver;
+        let solver = EmdSolver::new(&m);
+        for (e, c) in entries.iter().enumerate() {
+            assert_eq!(index.projection_bound(&prep, e), 0.0);
+            let exact = solver.solve(&q, c).unwrap().cost;
+            let centroid = index.centroid_bound(&prep, e).unwrap();
+            assert!(centroid <= exact + 1e-9, "entry {e}: {centroid} > {exact}");
+            assert!(index.mass_bound(&q, e) <= exact + 1e-9);
+        }
+        // A genuine metric keeps its full anchor set.
+        let plain = GridMetric::new(3, 3).cost_matrix();
+        let index = CorpusIndex::from_histograms(&plain, entries, 4).unwrap();
+        assert_eq!(index.anchors().len(), 4);
+    }
+
+    #[test]
+    fn single_bin_corpus_degenerates_gracefully() {
+        let m = CostMatrix::from_rows(1, vec![0.0]);
+        let index =
+            CorpusIndex::from_histograms(&m, vec![Histogram::uniform(1)], 4).unwrap();
+        let q = Histogram::uniform(1);
+        let prep = index.prepare(&q);
+        assert_eq!(index.mass_bound(&q, 0), 0.0);
+        assert_eq!(index.projection_bound(&prep, 0), 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Corpus-scale retrieval: pruned top-k Sinkhorn search.
+//!
+//! The paper's headline result is *retrieval* — Sinkhorn distances
+//! beating classical OT and L2 on MNIST kNN — and a serving system asks
+//! the retrieval question, not the pairwise one: *which of these corpus
+//! histograms is closest to this query?* Answering it by brute force
+//! costs one regularized solve per corpus entry; this module implements
+//! the standard accelerator, a **bound-then-refine cascade** (Peyré &
+//! Cuturi, *Computational Optimal Transport*, nearest-neighbor pruning
+//! with 1-D projection / independence bounds):
+//!
+//! * [`CorpusIndex`] ingests, validates and normalizes the corpus and
+//!   precomputes per-entry statistics (sorted projection CDFs, embedded
+//!   barycenters, a per-entry warm-start cache);
+//! * [`BoundCascade`] prices each candidate with cheap **admissible
+//!   lower bounds** on d_M — and every bound on d_M also lower-bounds
+//!   the served d_M^λ, because the entropic optimum is a feasible plan
+//!   (d_M ≤ d_M^λ for every λ);
+//! * [`RetrievalService`] keeps a top-k max-heap of served distances and
+//!   prunes every candidate whose bound exceeds the running k-th best,
+//!   re-ranking the survivors in panels through the
+//!   [`crate::backend::ShardedExecutor`] so the refine stage rides the
+//!   parallel workers, warm starts and kernel policies of PRs 1–3.
+//!
+//! Pruning is **exact**: the pruned top-k equals the brute-force top-k
+//! (same distances, same order modulo ties) — locked down across kernel
+//! policies, including truncated kernels where the rescue gate fires, by
+//! `rust/tests/retrieval_exactness.rs`.
+//!
+//! The coordinator exposes the whole pipeline as a service API
+//! (`DistanceService::register_corpus` / `retrieve`) with prune-fraction
+//! and recall gauges in its stats snapshot.
+
+mod bounds;
+mod index;
+mod search;
+
+pub use bounds::{BoundCascade, BoundTier, BoundValue};
+pub use index::{CorpusIndex, QueryPrep};
+pub use search::{
+    Hit, ProbeOutcome, RetrievalConfig, RetrievalReport, RetrievalService,
+};
+
+use crate::simplex::HistogramError;
+use crate::F;
+
+/// Check two top-k result lists for equivalence under the subsystem's
+/// exactness contract: same distances position by position (relative
+/// tolerance `tol`), and the same entry *sets* except across tie
+/// boundaries — an entry appearing on only one side must tie, within
+/// `tol`, with an entry appearing only on the other side, i.e. the two
+/// sides may disagree solely about which member of a tied group made
+/// the cut. Returns the first violation as an error string.
+///
+/// This is the single comparator behind the exactness test suite, the
+/// retrieval bench's hard assert and external audits — one contract, no
+/// drift.
+pub fn topk_equivalent(got: &[Hit], want: &[Hit], tol: F) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("result sizes differ: {} vs {}", got.len(), want.len()));
+    }
+    for (pos, (a, b)) in got.iter().zip(want).enumerate() {
+        if !(a.distance.is_finite() && b.distance.is_finite()) {
+            return Err(format!(
+                "pos {pos}: non-finite distance ({} vs {})",
+                a.distance, b.distance
+            ));
+        }
+        if (a.distance - b.distance).abs() > tol * (1.0 + b.distance.abs()) {
+            return Err(format!(
+                "pos {pos}: distance {} vs {}",
+                a.distance, b.distance
+            ));
+        }
+    }
+    let got_set: std::collections::HashSet<usize> =
+        got.iter().map(|h| h.entry).collect();
+    let want_set: std::collections::HashSet<usize> =
+        want.iter().map(|h| h.entry).collect();
+    for (side, only, other, other_set) in [
+        ("left", got, want, &want_set),
+        ("right", want, got, &got_set),
+    ] {
+        for h in only.iter().filter(|h| !other_set.contains(&h.entry)) {
+            let tied = other.iter().any(|w| {
+                !only.iter().any(|x| x.entry == w.entry)
+                    && (w.distance - h.distance).abs()
+                        <= tol * (1.0 + w.distance.abs())
+            });
+            if !tied {
+                return Err(format!(
+                    "{side}-only entry {} (d={}) has no tie partner on the \
+                     other side",
+                    h.entry, h.distance
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Errors raised while building or querying a retrieval index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RetrievalError {
+    /// The corpus had no entries.
+    EmptyCorpus,
+    /// Corpus entry `entry` does not live on the metric's simplex.
+    DimensionMismatch { entry: usize, got: usize, want: usize },
+    /// Corpus row `entry` could not be normalized into a histogram.
+    BadEntry { entry: usize, source: HistogramError },
+    /// The query histogram does not live on the metric's simplex.
+    QueryDimensionMismatch { got: usize, want: usize },
+}
+
+impl std::fmt::Display for RetrievalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RetrievalError::EmptyCorpus => {
+                write!(f, "retrieval corpus must be non-empty")
+            }
+            RetrievalError::DimensionMismatch { entry, got, want } => write!(
+                f,
+                "corpus entry {entry} has dimension {got}, metric expects {want}"
+            ),
+            RetrievalError::BadEntry { entry, source } => {
+                write!(f, "corpus entry {entry} is not a histogram: {source}")
+            }
+            RetrievalError::QueryDimensionMismatch { got, want } => write!(
+                f,
+                "query histogram has dimension {got}, corpus expects {want}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RetrievalError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RetrievalError::BadEntry { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hit(entry: usize, distance: F) -> Hit {
+        Hit { entry, distance, rescued: false }
+    }
+
+    #[test]
+    fn topk_equivalence_contract() {
+        let a = [hit(3, 0.10), hit(7, 0.20), hit(1, 0.30)];
+        // Identical lists agree.
+        assert!(topk_equivalent(&a, &a, 1e-9).is_ok());
+        // A tie swap at the cut (entry 9 vs 1 at the same distance) is
+        // tolerated in both directions.
+        let b = [hit(3, 0.10), hit(7, 0.20), hit(9, 0.30)];
+        assert!(topk_equivalent(&a, &b, 1e-9).is_ok());
+        assert!(topk_equivalent(&b, &a, 1e-9).is_ok());
+        // A one-side-only entry without a tie partner is a violation,
+        // even when every positional distance agrees: 8@0.20 (left only)
+        // has no counterpart among the right-only entries (9@0.30).
+        let c = [hit(3, 0.10), hit(8, 0.20), hit(1, 0.30)];
+        let c2 = [hit(3, 0.10), hit(1, 0.20), hit(9, 0.30)];
+        assert!(topk_equivalent(&c, &c2, 1e-9).is_err());
+        // …as is a positional distance mismatch or a size mismatch.
+        let d = [hit(3, 0.10), hit(7, 0.21), hit(1, 0.30)];
+        assert!(topk_equivalent(&a, &d, 1e-9).is_err());
+        assert!(topk_equivalent(&a, &a[..2], 1e-9).is_err());
+        // Non-finite distances never pass.
+        let e = [hit(3, 0.10), hit(7, 0.20), hit(1, F::NAN)];
+        assert!(topk_equivalent(&e, &e, 1e-9).is_err());
+    }
+}

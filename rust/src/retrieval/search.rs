@@ -1,0 +1,635 @@
+//! Bound-then-refine top-k search over a [`CorpusIndex`].
+//!
+//! The query pipeline:
+//!
+//! 1. **price** every candidate with the [`BoundCascade`] (O(n·d));
+//! 2. **seed** — solve the k candidates with the smallest bounds through
+//!    the [`ShardedExecutor`] to establish the running k-th-best served
+//!    distance τ (a top-k max-heap);
+//! 3. **sweep** the remaining candidates in ascending bound order,
+//!    re-ranking survivors in executor-wide panels; the first candidate
+//!    whose lower bound exceeds τ (plus the admissibility slack) ends
+//!    the walk — every candidate behind it is pruned without a solve,
+//!    because bounds only grow along the walk and τ only shrinks.
+//!
+//! The refine stage rides the whole PR 1–3 substrate: panels shard
+//! across the executor's workers, the kernel policy shapes each worker's
+//! operator (truncated/low-rank panels route through the existing
+//! rescue gate, so an infeasible-on-support pair always comes back
+//! log-domain-exact rather than collapsed), and converged scalings are
+//! deposited into the index's per-entry warm cache to seed future
+//! queries.
+
+use super::{BoundCascade, BoundTier, CorpusIndex, RetrievalError};
+use crate::backend::{BackendKind, ShardedExecutor};
+use crate::simplex::Histogram;
+use crate::sinkhorn::{ScalingInit, SinkhornConfig, SinkhornOutput};
+use crate::F;
+use std::collections::BinaryHeap;
+
+/// Refine/search knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RetrievalConfig {
+    /// Solve configuration of the refine stage. Convergence-checked
+    /// mode is strongly recommended (and is what
+    /// [`Self::serving`] builds): it makes the truncated-kernel rescue
+    /// contract total, so served distances are trustworthy at any
+    /// kernel policy.
+    pub sinkhorn: SinkhornConfig,
+    /// Worker threads of the refine executor (each owning a private
+    /// kernel-bound backend). 0 = available parallelism.
+    pub workers: usize,
+    /// Pinned refine backend; `None` routes like the coordinator
+    /// ([`ShardedExecutor::auto`] — kernel-policy aware, log-domain on
+    /// underflow).
+    pub backend: Option<BackendKind>,
+    /// Refine panel width (queries per executor dispatch). 0 = auto
+    /// (4 shards per worker).
+    pub panel: usize,
+    /// Admissibility slack: a candidate is pruned only when its bound
+    /// exceeds τ + slack·(1 + τ), absorbing solver-tolerance-level
+    /// noise in the served distances the bounds are compared against.
+    /// [`RetrievalService::new`] floors the effective slack at 10× the
+    /// refine tolerance — the bounds are exact but τ is a *solved*
+    /// value, so the slack must dominate the solver's own noise no
+    /// matter how the tolerance is configured.
+    pub bound_slack: F,
+    /// Run a brute-force recall probe every N-th query (0 = never): the
+    /// pruned top-k is recomputed without pruning and compared, and the
+    /// outcome lands in the report / coordinator recall gauges.
+    pub probe_every: u64,
+    /// Seed refine solves from the index's per-entry warm cache and
+    /// deposit converged scalings back.
+    pub warm_start: bool,
+}
+
+impl RetrievalConfig {
+    /// Serving defaults at `lambda`: convergence-checked refine
+    /// (tolerance 1e-9, 10k-iteration cap), auto kernel policy, auto
+    /// backend, warm starts on, probes off.
+    pub fn serving(lambda: F) -> Self {
+        Self {
+            sinkhorn: SinkhornConfig {
+                lambda,
+                tolerance: 1e-9,
+                max_iterations: 10_000,
+                check_every: 1,
+                auto_stabilize: true,
+                schedule: crate::sinkhorn::LambdaSchedule::Fixed,
+                kernel: crate::linalg::KernelPolicy::Auto,
+            },
+            workers: 0,
+            backend: None,
+            panel: 0,
+            bound_slack: 1e-9,
+            probe_every: 0,
+            warm_start: true,
+        }
+    }
+}
+
+/// One retrieved neighbor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    /// Corpus entry index.
+    pub entry: usize,
+    /// Served distance d_M^λ(query, entry).
+    pub distance: F,
+    /// Whether the solve was *rerouted* through the exact log-domain
+    /// path (truncated-support infeasibility or divergence — never a
+    /// collapsed-column read-off). Always `false` when the refine class
+    /// itself runs on the log-domain backend: there every solve is
+    /// log-domain by design and nothing was rescued.
+    pub rescued: bool,
+}
+
+/// Outcome of one brute-force recall probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeOutcome {
+    /// Pruned-result entries confirmed by the brute-force top-k.
+    pub matched: usize,
+    /// Entries compared (the effective k).
+    pub k: usize,
+}
+
+/// What one query cost and what the cascade saved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetrievalReport {
+    /// Corpus size at query time.
+    pub corpus: usize,
+    /// Effective k (requested k clamped to the corpus size).
+    pub k: usize,
+    /// Candidates solved (seed + sweep panels).
+    pub solved: usize,
+    /// Candidates discarded on their lower bound alone.
+    pub pruned: usize,
+    /// Executor panel dispatches.
+    pub panels: usize,
+    /// Solves that went through the exact log-domain rescue.
+    pub rescued: usize,
+    /// Solves that came back non-finite (excluded from the top-k).
+    pub failed: usize,
+    /// Refine solves seeded from the per-entry warm cache.
+    pub warm_seeded: usize,
+    /// Total refine fixed-point iterations.
+    pub iterations: usize,
+    /// Pruned candidates whose deciding bound was the mass tier.
+    pub pruned_mass: usize,
+    /// … the centroid tier.
+    pub pruned_centroid: usize,
+    /// … the projection tier.
+    pub pruned_projection: usize,
+    /// Final pruning threshold τ (the k-th best served distance).
+    pub threshold: F,
+    /// Recall-probe outcome, when one ran.
+    pub probe: Option<ProbeOutcome>,
+}
+
+impl RetrievalReport {
+    /// An empty report for a corpus of `n` entries and effective `k`.
+    fn empty(corpus: usize, k: usize) -> Self {
+        Self {
+            corpus,
+            k,
+            solved: 0,
+            pruned: 0,
+            panels: 0,
+            rescued: 0,
+            failed: 0,
+            warm_seeded: 0,
+            iterations: 0,
+            pruned_mass: 0,
+            pruned_centroid: 0,
+            pruned_projection: 0,
+            threshold: F::INFINITY,
+            probe: None,
+        }
+    }
+
+    /// Fraction of the corpus discarded without a solve.
+    pub fn pruned_fraction(&self) -> f64 {
+        if self.corpus == 0 {
+            return 0.0;
+        }
+        self.pruned as f64 / self.corpus as f64
+    }
+}
+
+/// Max-heap item ordered by (distance, entry) so the canonical ascending
+/// (distance, entry) order pops last.
+#[derive(Debug, PartialEq)]
+struct HeapItem {
+    distance: F,
+    entry: usize,
+    rescued: bool,
+}
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.distance
+            .total_cmp(&other.distance)
+            .then(self.entry.cmp(&other.entry))
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Pruned top-k retrieval over one corpus: the cascade prices, the
+/// executor refines.
+pub struct RetrievalService {
+    index: CorpusIndex,
+    cascade: BoundCascade,
+    executor: ShardedExecutor,
+    config: RetrievalConfig,
+    queries: u64,
+}
+
+impl RetrievalService {
+    /// Bind a retrieval service to an index. The refine executor is
+    /// built from the config: `workers` private backend instances of
+    /// the pinned kind, or the policy-aware auto route.
+    pub fn new(index: CorpusIndex, config: RetrievalConfig) -> Self {
+        let mut config = config;
+        // Served distances carry convergence noise on the order of the
+        // refine tolerance; a slack below it could prune a candidate
+        // whose solved value would have landed just inside τ. (A
+        // fixed-budget config has tolerance 0 and keeps its slack.)
+        config.bound_slack = config.bound_slack.max(10.0 * config.sinkhorn.tolerance);
+        let workers = if config.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            config.workers
+        };
+        let executor = match config.backend {
+            Some(kind) => {
+                ShardedExecutor::new(index.metric(), config.sinkhorn, kind, workers)
+            }
+            None => ShardedExecutor::auto(index.metric(), config.sinkhorn, workers),
+        };
+        Self { index, cascade: BoundCascade::new(), executor, config, queries: 0 }
+    }
+
+    /// The indexed corpus.
+    pub fn index(&self) -> &CorpusIndex {
+        &self.index
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &RetrievalConfig {
+        &self.config
+    }
+
+    /// The strategy the refine executor runs.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.executor.kind()
+    }
+
+    /// Effective refine panel width.
+    fn panel_width(&self) -> usize {
+        if self.config.panel > 0 {
+            self.config.panel
+        } else {
+            (self.executor.workers() * 4).max(8)
+        }
+    }
+
+    /// Pruned top-k: identical results to [`Self::brute_force`] (same
+    /// distances, same order modulo ties), at a fraction of the solves.
+    /// Hits come back in ascending (distance, entry) order.
+    pub fn top_k(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<(Vec<Hit>, RetrievalReport), RetrievalError> {
+        if query.dim() != self.index.dim() {
+            return Err(RetrievalError::QueryDimensionMismatch {
+                got: query.dim(),
+                want: self.index.dim(),
+            });
+        }
+        self.queries += 1;
+        let n = self.index.len();
+        let k = k.min(n);
+        let mut report = RetrievalReport::empty(n, k);
+        if k == 0 {
+            return Ok((Vec::new(), report));
+        }
+
+        // Price every candidate and walk in ascending bound order.
+        let prep = self.index.prepare(query);
+        let bounds: Vec<super::BoundValue> = (0..n)
+            .map(|e| self.cascade.evaluate(&self.index, &prep, query, e))
+            .collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            bounds[a].value.total_cmp(&bounds[b].value).then(a.cmp(&b))
+        });
+
+        let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+        let panel_width = self.panel_width();
+
+        // Seed: the k most promising candidates establish τ.
+        let mut cursor = 0;
+        while cursor < k {
+            let take = (k - cursor).min(panel_width);
+            let batch = &order[cursor..cursor + take];
+            self.solve_into(query, batch, &mut heap, k, &mut report);
+            cursor += take;
+        }
+        let mut tau = kth_best(&heap, k);
+
+        // Sweep: bounds ascend, τ descends — the first bound past
+        // τ + slack prunes the entire tail.
+        let mut batch = Vec::with_capacity(panel_width);
+        while cursor < n {
+            let slack = self.config.bound_slack * (1.0 + tau.abs());
+            let e = order[cursor];
+            if bounds[e].value > tau + slack {
+                break;
+            }
+            batch.push(e);
+            cursor += 1;
+            if batch.len() == panel_width || cursor == n {
+                self.solve_into(query, &batch, &mut heap, k, &mut report);
+                tau = kth_best(&heap, k);
+                batch.clear();
+            }
+        }
+        if !batch.is_empty() {
+            self.solve_into(query, &batch, &mut heap, k, &mut report);
+            tau = kth_best(&heap, k);
+        }
+        for &e in &order[cursor..] {
+            report.pruned += 1;
+            match bounds[e].tier {
+                BoundTier::Mass => report.pruned_mass += 1,
+                BoundTier::Centroid => report.pruned_centroid += 1,
+                BoundTier::Projection => report.pruned_projection += 1,
+            }
+        }
+        report.threshold = tau;
+
+        let mut hits: Vec<Hit> = heap
+            .into_sorted_vec()
+            .into_iter()
+            .map(|item| Hit {
+                entry: item.entry,
+                distance: item.distance,
+                rescued: item.rescued,
+            })
+            .collect();
+        hits.truncate(k);
+
+        if self.config.probe_every > 0 && self.queries % self.config.probe_every == 0
+        {
+            let brute = self.brute_force(query, k)?;
+            let brute_set: std::collections::HashSet<usize> =
+                brute.iter().map(|h| h.entry).collect();
+            let hit_set: std::collections::HashSet<usize> =
+                hits.iter().map(|h| h.entry).collect();
+            // Tie-aware matching, mirroring the exactness contract
+            // ("identical modulo ties", see [`super::topk_equivalent`]):
+            // a pruned-only hit also counts as confirmed when it ties —
+            // within the same slack that guards pruning — with a
+            // *brute-force-only* hit, so a k-th/(k+1)-th tie flipping
+            // between the two walks is not flagged as a recall miss,
+            // while a genuinely wrong entry (whose distance merely
+            // resembles some shared neighbor's) still is.
+            let matched = hits
+                .iter()
+                .filter(|h| {
+                    brute_set.contains(&h.entry)
+                        || brute.iter().any(|b| {
+                            !hit_set.contains(&b.entry)
+                                && (b.distance - h.distance).abs()
+                                    <= self.config.bound_slack
+                                        * (1.0 + b.distance.abs())
+                        })
+                })
+                .count();
+            report.probe = Some(ProbeOutcome { matched, k: hits.len() });
+        }
+        Ok((hits, report))
+    }
+
+    /// Brute-force top-k: every corpus entry solved (still in executor
+    /// panels), no pruning. The oracle the pruned path is held to.
+    pub fn brute_force(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<Vec<Hit>, RetrievalError> {
+        if query.dim() != self.index.dim() {
+            return Err(RetrievalError::QueryDimensionMismatch {
+                got: query.dim(),
+                want: self.index.dim(),
+            });
+        }
+        let n = self.index.len();
+        let k = k.min(n);
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        let mut report = RetrievalReport::empty(n, k);
+        let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+        let panel_width = self.panel_width();
+        let all: Vec<usize> = (0..n).collect();
+        for batch in all.chunks(panel_width) {
+            self.solve_into(query, batch, &mut heap, k, &mut report);
+        }
+        let mut hits: Vec<Hit> = heap
+            .into_sorted_vec()
+            .into_iter()
+            .map(|item| Hit {
+                entry: item.entry,
+                distance: item.distance,
+                rescued: item.rescued,
+            })
+            .collect();
+        hits.truncate(k);
+        Ok(hits)
+    }
+
+    /// Solve query vs the given corpus entries as one executor panel and
+    /// fold the outcomes into the top-k heap.
+    fn solve_into(
+        &mut self,
+        query: &Histogram,
+        entries: &[usize],
+        heap: &mut BinaryHeap<HeapItem>,
+        k: usize,
+        report: &mut RetrievalReport,
+    ) {
+        if entries.is_empty() {
+            return;
+        }
+        let lambda = self.config.sinkhorn.lambda;
+        let inits: Vec<Option<ScalingInit>> = if self.config.warm_start {
+            entries.iter().map(|&e| self.index.warm_init(lambda, e)).collect()
+        } else {
+            vec![None; entries.len()]
+        };
+        report.warm_seeded += inits.iter().filter(|i| i.is_some()).count();
+        // The clone is the price of the SolverBackend panel signature
+        // (`cs: &[Histogram]`, owned histograms, fixed since PR 1):
+        // borrowing would ripple `&[&Histogram]` through every backend
+        // and test. O(panel·d) copies per dispatch against O(iters·d²)
+        // solve work per column keeps this far below the profile line.
+        let cs: Vec<Histogram> =
+            entries.iter().map(|&e| self.index.entry(e).clone()).collect();
+        let rs: Vec<&Histogram> = entries.iter().map(|_| query).collect();
+        let (outputs, _reports) =
+            self.executor.solve_panel_paired_init(&rs, &cs, &inits);
+        report.panels += 1;
+        report.solved += outputs.len();
+        for (&e, out) in entries.iter().zip(&outputs) {
+            self.fold_output(e, out, heap, k, report, lambda);
+        }
+    }
+
+    fn fold_output(
+        &mut self,
+        entry: usize,
+        out: &SinkhornOutput,
+        heap: &mut BinaryHeap<HeapItem>,
+        k: usize,
+        report: &mut RetrievalReport,
+        lambda: F,
+    ) {
+        report.iterations += out.stats.iterations;
+        // `stabilized` is set by *every* log-domain solve; it means
+        // "rescued" only when the class's own backend is not log-domain
+        // (a log-domain-pinned or underflow-routed class would otherwise
+        // report a meaningless 100% rescue rate).
+        let rescued = out.stats.stabilized
+            && self.executor.kind() != BackendKind::LogDomain;
+        if rescued {
+            report.rescued += 1;
+        }
+        if self.config.warm_start {
+            self.index.warm_deposit(lambda, entry, out);
+        }
+        if !out.value.is_finite() {
+            report.failed += 1;
+            return;
+        }
+        heap.push(HeapItem { distance: out.value, entry, rescued });
+        if heap.len() > k {
+            heap.pop();
+        }
+    }
+}
+
+/// The current k-th best served distance (∞ until the heap fills).
+fn kth_best(heap: &BinaryHeap<HeapItem>, k: usize) -> F {
+    if heap.len() < k {
+        F::INFINITY
+    } else {
+        heap.peek().map(|item| item.distance).unwrap_or(F::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::simplex::seeded_rng;
+
+    fn service(d: usize, n: usize, seed: u64, lambda: F) -> RetrievalService {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let entries: Vec<Histogram> =
+            (0..n).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let index = CorpusIndex::from_histograms(&m, entries, 4).unwrap();
+        let mut config = RetrievalConfig::serving(lambda);
+        config.workers = 2;
+        RetrievalService::new(index, config)
+    }
+
+    #[test]
+    fn top_k_matches_brute_force_on_a_small_corpus() {
+        let mut svc = service(10, 40, 0, 9.0);
+        let mut rng = seeded_rng(100);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let brute = svc.brute_force(&q, 5).unwrap();
+        let (got, report) = svc.top_k(&q, 5).unwrap();
+        assert_eq!(got.len(), 5);
+        assert_eq!(report.solved + report.pruned, 40);
+        for (a, b) in got.iter().zip(&brute) {
+            assert_eq!(a.entry, b.entry);
+            assert!((a.distance - b.distance).abs() < 1e-9 * (1.0 + b.distance));
+        }
+        // Ascending canonical order.
+        for w in got.windows(2) {
+            assert!(w[0].distance <= w[1].distance + 1e-15);
+        }
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let mut svc = service(8, 12, 1, 9.0);
+        let mut rng = seeded_rng(101);
+        let q = Histogram::sample_uniform(8, &mut rng);
+        let (empty, report) = svc.top_k(&q, 0).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(report.solved, 0);
+        // k beyond the corpus clamps and solves everything.
+        let (all, report) = svc.top_k(&q, 50).unwrap();
+        assert_eq!(all.len(), 12);
+        assert_eq!(report.k, 12);
+        assert_eq!(report.pruned, 0);
+        assert_eq!(report.solved, 12);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error() {
+        let mut svc = service(8, 4, 2, 9.0);
+        let q = Histogram::uniform(5);
+        assert!(matches!(
+            svc.top_k(&q, 2),
+            Err(RetrievalError::QueryDimensionMismatch { got: 5, want: 8 })
+        ));
+        assert!(svc.brute_force(&q, 2).is_err());
+    }
+
+    #[test]
+    fn warm_cache_seeds_repeat_queries() {
+        let mut svc = service(10, 16, 3, 9.0);
+        let mut rng = seeded_rng(103);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (_, cold) = svc.top_k(&q, 4).unwrap();
+        assert_eq!(cold.warm_seeded, 0);
+        let (hits_cold, _) = svc.top_k(&q, 4).unwrap();
+        let (_, warm) = svc.top_k(&q, 4).unwrap();
+        assert!(warm.warm_seeded > 0, "repeat query must hit the entry cache");
+        assert!(warm.iterations <= cold.iterations);
+        // Warm starts never change the answers.
+        let (hits_warm, _) = svc.top_k(&q, 4).unwrap();
+        for (a, b) in hits_warm.iter().zip(&hits_cold) {
+            assert_eq!(a.entry, b.entry);
+            assert!((a.distance - b.distance).abs() < 1e-7 * (1.0 + b.distance));
+        }
+    }
+
+    #[test]
+    fn squared_costs_stay_exact_without_the_projection_tier() {
+        // Squared-Euclidean ground costs disable every projection anchor
+        // (reverse triangle fails); pruning must stay exact on the
+        // surviving mass + centroid tiers.
+        use crate::metric::GridMetric;
+        let m = GridMetric::new(3, 3).squared_cost_matrix();
+        let mut rng = seeded_rng(50);
+        let entries: Vec<Histogram> =
+            (0..30).map(|_| Histogram::sample_uniform(9, &mut rng)).collect();
+        let index = CorpusIndex::from_histograms(&m, entries, 4).unwrap();
+        assert!(index.anchors().is_empty());
+        let mut config = RetrievalConfig::serving(5.0);
+        config.workers = 2;
+        config.sinkhorn.tolerance = 1e-12;
+        config.sinkhorn.max_iterations = 200_000;
+        let mut svc = RetrievalService::new(index, config);
+        let q = Histogram::sample_uniform(9, &mut rng);
+        let brute = svc.brute_force(&q, 5).unwrap();
+        let (got, report) = svc.top_k(&q, 5).unwrap();
+        assert_eq!(report.pruned_projection, 0, "tier is disabled");
+        for (a, b) in got.iter().zip(&brute) {
+            assert_eq!(a.entry, b.entry);
+            assert!((a.distance - b.distance).abs() < 1e-9 * (1.0 + b.distance));
+        }
+    }
+
+    #[test]
+    fn slack_floor_tracks_the_refine_tolerance() {
+        let mut rng = seeded_rng(51);
+        let m = crate::metric::RandomMetric::new(8).sample(&mut rng);
+        let entries: Vec<Histogram> =
+            (0..4).map(|_| Histogram::sample_uniform(8, &mut rng)).collect();
+        let index = CorpusIndex::from_histograms(&m, entries, 2).unwrap();
+        let mut config = RetrievalConfig::serving(9.0);
+        config.sinkhorn.tolerance = 1e-6; // coarse serving tolerance
+        config.workers = 1;
+        let svc = RetrievalService::new(index, config);
+        assert!(
+            svc.config().bound_slack >= 1e-5,
+            "slack {} must be floored at 10x the tolerance",
+            svc.config().bound_slack
+        );
+    }
+
+    #[test]
+    fn recall_probe_confirms_pruning() {
+        let mut svc = service(10, 24, 4, 9.0);
+        svc.config.probe_every = 1;
+        let mut rng = seeded_rng(104);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (_, report) = svc.top_k(&q, 3).unwrap();
+        let probe = report.probe.expect("probe_every=1 must probe");
+        assert_eq!(probe.matched, probe.k, "pruned top-k must equal brute force");
+    }
+}

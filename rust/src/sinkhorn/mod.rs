@@ -24,7 +24,7 @@ pub mod warm;
 pub use alpha::{AlphaConfig, AlphaOutput, AlphaSinkhorn};
 pub use batch::BatchSinkhorn;
 pub use engine::{SinkhornEngine, SinkhornOutput, SinkhornStats};
-pub use independence::{independence_distance, IndependenceKernel};
+pub use independence::{independence_distance, IndependenceKernel, PreparedHistogram};
 pub use warm::{fingerprint_pair, WarmCounters, WarmKey, WarmStartStore};
 
 use crate::linalg::{KernelOp, KernelPolicy};
