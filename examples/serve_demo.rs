@@ -39,8 +39,9 @@ fn main() {
     // CPU-served shape classes get convergence control: per-worker
     // warm-start stores (repeated query pairs re-converge in a couple of
     // iterations) and geometric ε-scaling for cold high-λ solves.
-    // Retrieval probes every 4th corpus query against brute force so the
-    // recall gauge is live.
+    // Retrieval runs on the dedicated runtime thread over a 3-shard
+    // corpus partition, probing every 4th query against the merged
+    // brute force so the recall gauge is live.
     let service = DistanceService::start(CoordinatorConfig {
         artifact_dir: artifacts.then_some(artifact_dir),
         batcher: BatcherConfig {
@@ -51,6 +52,7 @@ fn main() {
         warm_start: Some(WarmStartConfig::default()),
         anneal: LambdaSchedule::geometric(1.0),
         retrieval_probe_every: 4,
+        retrieval_shards: 3,
         ..Default::default()
     })
     .expect("service start");
@@ -149,14 +151,16 @@ fn main() {
     );
 
     // Retrieval: ingest a clustered corpus against the 100-dim metric
-    // and serve top-k queries through the pruned cascade.
+    // and serve top-k queries through the pruned cascade. The corpus is
+    // partitioned into 3 shards on the retrieval runtime thread, so the
+    // searches below never touch the engine thread's batching loop.
     let d = 100;
     let gen = ClusteredCorpus::new(d, 6, 25, 0.12);
     let (corpus, protos) = gen.generate(&mut rng);
     let indexed = service
         .register_corpus(CorpusId(0), MetricId(1), 9.0, corpus)
         .expect("corpus registration");
-    println!("\nindexed a {indexed}-entry clustered corpus (d={d}, λ=9)");
+    println!("\nindexed a {indexed}-entry clustered corpus (d={d}, λ=9, 3 shards)");
     for (qi, proto) in protos.iter().take(4).enumerate() {
         let q = gen.mixture_at(proto, 0.12, &mut rng);
         let out = service
@@ -186,5 +190,58 @@ fn main() {
         stats.recall(),
         stats.recall_probes,
     );
+
+    // Incremental index updates (PR 5): insert a duplicate of a live
+    // query, watch it win top-1, tombstone it, compact the shard — all
+    // without re-registering the corpus or stalling the engine thread.
+    let probe_q = gen.mixture_at(&protos[0], 0.12, &mut rng);
+    let inserted = service
+        .corpus_insert(CorpusId(0), probe_q.clone())
+        .expect("corpus insert");
+    let out = service
+        .retrieve(RetrievalQuery { corpus: CorpusId(0), r: probe_q.clone(), k: 5 })
+        .expect("post-insert retrieval");
+    println!(
+        "\ninserted entry {inserted} (a duplicate of the next query): top-1 is \
+         now entry {} at d^λ {:.4}",
+        out.hits[0].entry, out.hits[0].distance
+    );
+    let removed = service
+        .corpus_tombstone(CorpusId(0), inserted)
+        .expect("corpus tombstone");
+    let compacted = service.corpus_compact(CorpusId(0)).expect("corpus compact");
+    let out = service
+        .retrieve(RetrievalQuery { corpus: CorpusId(0), r: probe_q, k: 5 })
+        .expect("post-tombstone retrieval");
+    println!(
+        "tombstoned it (hit={removed}), compacted {compacted} shard(s); top-1 \
+         is entry {} again, corpus back to {} live entries",
+        out.hits[0].entry, out.report.corpus
+    );
+
+    // Per-shard retrieval gauges from the stats snapshot.
+    let stats = service.stats().unwrap();
+    println!(
+        "\nretrieval runtime: {} off-thread searches (walltime mean {} µs, \
+         max {} µs), queue depth {}",
+        stats.retrieval_offthread,
+        stats.retrieval_search_mean_us,
+        stats.retrieval_search_max_us,
+        stats.retrieval_queue_depth,
+    );
+    for g in &stats.retrieval_shards {
+        println!(
+            "  shard {}: {} live / {} slots (tombstone fraction {:.2}), \
+             {} insert(s), {} compaction(s), {} searches, last search {} µs",
+            g.shard,
+            g.live,
+            g.entries,
+            g.tombstone_fraction,
+            g.inserts,
+            g.compactions,
+            g.searches,
+            g.last_search_us,
+        );
+    }
     service.shutdown();
 }

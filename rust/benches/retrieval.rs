@@ -1,5 +1,9 @@
 //! Retrieval bench: pruned top-k vs brute-force panel solves (the PR 4
-//! claim; writes `BENCH_PR4.json` at the crate root).
+//! claim; writes `BENCH_PR4.json` at the crate root), plus the PR 5
+//! sharded-vs-monolithic panel (writes `BENCH_PR5.json`): the same
+//! clustered workload partitioned over {1, 2, 3, 7} shards, with the
+//! merged pruned top-k hard-asserted equivalent to the monolithic
+//! brute-force top-k and the per-shard-count walltime recorded.
 //!
 //! Workload: a clustered synthetic corpus (8 Dirichlet(0.3) prototypes,
 //! 32 mixture entries each, d = 64 median-normalized random metric) and
@@ -24,7 +28,9 @@
 use sinkhorn_rs::data::ClusteredCorpus;
 use sinkhorn_rs::linalg::KernelPolicy;
 use sinkhorn_rs::metric::RandomMetric;
-use sinkhorn_rs::retrieval::{CorpusIndex, RetrievalConfig, RetrievalService};
+use sinkhorn_rs::retrieval::{
+    CorpusIndex, RetrievalConfig, RetrievalService, ShardedCorpus, ShardingConfig,
+};
 use sinkhorn_rs::simplex::seeded_rng;
 use sinkhorn_rs::util::json::Json;
 use sinkhorn_rs::F;
@@ -143,5 +149,92 @@ fn main() {
     match std::fs::write("BENCH_PR4.json", &rendered) {
         Ok(()) => println!("  -> recorded BENCH_PR4.json"),
         Err(e) => eprintln!("  -> could not write BENCH_PR4.json: {e}"),
+    }
+
+    sharded_panel(&m, &corpus, &query);
+}
+
+/// PR 5 panel: the dense λ = 9 serving row over {1, 2, 3, 7} shards.
+/// The monolithic brute force is the oracle for every shard count
+/// (hard-asserted via the shared `topk_equivalent` contract at the
+/// bench's serving tolerance); per-shard-count walltime is recorded so
+/// the first real `cargo bench` run documents the merge overhead.
+fn sharded_panel(
+    m: &sinkhorn_rs::metric::CostMatrix,
+    corpus: &[sinkhorn_rs::simplex::Histogram],
+    query: &sinkhorn_rs::simplex::Histogram,
+) {
+    let n = corpus.len();
+    let mut doc = BTreeMap::new();
+    let mut set = |k: &str, v: Json| {
+        doc.insert(k.to_string(), v);
+    };
+    set("bench", Json::String("retrieval_sharded_vs_monolithic".into()));
+    set("status", Json::String("measured".into()));
+    set("d", Json::Number(D as f64));
+    set("corpus", Json::Number(n as f64));
+    set("k", Json::Number(K as f64));
+    set("lambda", Json::Number(9.0));
+
+    let mut config = RetrievalConfig::serving(9.0);
+    config.sinkhorn.kernel = KernelPolicy::Dense;
+    config.warm_start = false; // cold cascade on every row, like PR 4
+
+    let index = CorpusIndex::from_histograms(m, corpus.to_vec(), 4)
+        .expect("bench corpus indexes");
+    let mut mono = RetrievalService::new(index, config);
+    let t0 = Instant::now();
+    let brute = mono.brute_force(query, K).expect("monolithic brute force");
+    let mono_wall = t0.elapsed();
+    set("monolithic_brute_wall_ns", Json::Number(mono_wall.as_nanos() as f64));
+
+    for shards in [1usize, 2, 3, 7] {
+        let sharding = ShardingConfig { shards, ..Default::default() };
+        let mut sc =
+            ShardedCorpus::new(m, corpus.to_vec(), 4, config, sharding)
+                .expect("bench corpus shards");
+        let t0 = Instant::now();
+        let (hits, report) = sc.search(query, K).expect("sharded search");
+        let wall = t0.elapsed();
+        // --- exactness across the partition: merged top-k ≡ monolithic ---
+        if let Err(violation) =
+            sinkhorn_rs::retrieval::topk_equivalent(&hits, &brute, 1e-7)
+        {
+            panic!("shards={shards}: merged vs monolithic top-k diverged: {violation}");
+        }
+        println!(
+            "retrieval_sharded s={shards}  d={D} corpus={n} k={K}: solved {} / \
+             pruned {} ({:.1}%), {:.3}s (monolithic brute {:.3}s)",
+            report.solved,
+            report.pruned,
+            100.0 * report.pruned_fraction(),
+            wall.as_secs_f64(),
+            mono_wall.as_secs_f64(),
+        );
+        set(&format!("s{shards}_wall_ns"), Json::Number(wall.as_nanos() as f64));
+        set(&format!("s{shards}_solved"), Json::Number(report.solved as f64));
+        set(&format!("s{shards}_pruned"), Json::Number(report.pruned as f64));
+        set(
+            &format!("s{shards}_pruned_fraction"),
+            Json::Number(report.pruned_fraction()),
+        );
+        set(&format!("s{shards}_topk_match"), Json::Bool(true));
+    }
+    set(
+        "note",
+        Json::String(
+            "written by `cargo bench --bench retrieval`; sharded = \
+             ShardedCorpus::search (per-shard cascade + refine, associative \
+             heap merge) at shard counts {1,2,3,7}, oracle = monolithic \
+             RetrievalService::brute_force over the same corpus; topk_match \
+             is hard-asserted via retrieval::topk_equivalent at 1e-7"
+                .into(),
+        ),
+    );
+    drop(set);
+    let rendered = format!("{}\n", Json::Object(doc));
+    match std::fs::write("BENCH_PR5.json", &rendered) {
+        Ok(()) => println!("  -> recorded BENCH_PR5.json"),
+        Err(e) => eprintln!("  -> could not write BENCH_PR5.json: {e}"),
     }
 }

@@ -349,8 +349,9 @@ impl ShardedExecutor {
 }
 
 /// Contiguous near-equal shard ranges: the first n % shards shards take
-/// one extra query.
-fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+/// one extra query. Shared with the retrieval layer, which uses the
+/// same scheme to partition a corpus into [`crate::retrieval`] shards.
+pub(crate) fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
     let base = n / shards;
     let rem = n % shards;
     let mut ranges = Vec::with_capacity(shards);

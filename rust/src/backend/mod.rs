@@ -20,6 +20,7 @@
 mod executor;
 mod greenkhorn;
 
+pub(crate) use executor::shard_ranges;
 pub use executor::{ShardReport, ShardedExecutor, WorkerStats};
 pub use greenkhorn::GreenkhornBackend;
 

@@ -1,7 +1,7 @@
 //! Service observability: counters and latency aggregates.
 
 use crate::linalg::KernelStats;
-use crate::retrieval::RetrievalReport;
+use crate::retrieval::{RetrievalReport, RuntimeFeedback, ShardGauges};
 use std::time::Duration;
 
 /// Running statistics collected by the service thread.
@@ -42,6 +42,19 @@ pub struct Stats {
     pub recall_matched: u64,
     /// Entries the probes compared (Σ effective k).
     pub recall_expected: u64,
+    /// Off-engine-thread searches completed by the retrieval runtime.
+    pub retrieval_offthread: u64,
+    /// Accumulated pure search walltime on the runtime thread (µs,
+    /// excludes queue wait).
+    retrieval_search_us_sum: u128,
+    /// Worst single off-thread search walltime (µs).
+    retrieval_search_us_max: u64,
+    /// Jobs queued or running on the retrieval runtime (sampled by the
+    /// engine right before each snapshot).
+    pub retrieval_queue_depth: u64,
+    /// Per-shard gauges from the most recent runtime feedback push
+    /// (the most recently touched corpus).
+    retrieval_shards: Vec<ShardGauges>,
 }
 
 /// Throughput/occupancy counters for one executor worker.
@@ -98,6 +111,26 @@ impl Stats {
             frobenius_budget: worst_frob,
             ..stats
         });
+    }
+
+    /// Fold one runtime feedback push into the gauges: completed-search
+    /// reports accumulate like inline retrievals used to, failed jobs
+    /// count as errors, and the per-shard gauge table tracks the most
+    /// recently touched corpus.
+    pub fn record_runtime(&mut self, feedback: &RuntimeFeedback) {
+        if feedback.failed {
+            self.errors += 1;
+        }
+        if let Some(report) = &feedback.report {
+            self.record_retrieval(report);
+            self.retrieval_offthread += 1;
+            self.retrieval_search_us_sum += feedback.search_us as u128;
+            self.retrieval_search_us_max =
+                self.retrieval_search_us_max.max(feedback.search_us);
+        }
+        if !feedback.gauges.is_empty() {
+            self.retrieval_shards = feedback.gauges.clone();
+        }
     }
 
     /// Fold one retrieval query's report into the gauges.
@@ -165,6 +198,16 @@ impl Stats {
             recall_probes: self.recall_probes,
             recall_matched: self.recall_matched,
             recall_expected: self.recall_expected,
+            retrieval_offthread: self.retrieval_offthread,
+            retrieval_search_mean_us: if self.retrieval_offthread > 0 {
+                (self.retrieval_search_us_sum / self.retrieval_offthread as u128)
+                    as u64
+            } else {
+                0
+            },
+            retrieval_search_max_us: self.retrieval_search_us_max,
+            retrieval_queue_depth: self.retrieval_queue_depth,
+            retrieval_shards: self.retrieval_shards.clone(),
         }
     }
 
@@ -226,6 +269,21 @@ pub struct StatsSnapshot {
     pub recall_matched: u64,
     /// Entries the probes compared.
     pub recall_expected: u64,
+    /// Searches completed on the dedicated retrieval runtime thread
+    /// (every search since PR 5 — the engine thread no longer walks a
+    /// corpus).
+    pub retrieval_offthread: u64,
+    /// Mean pure search walltime on the runtime thread (µs, excludes
+    /// queue wait).
+    pub retrieval_search_mean_us: u64,
+    /// Worst single off-thread search walltime (µs).
+    pub retrieval_search_max_us: u64,
+    /// Retrieval jobs queued or running when the snapshot was taken.
+    pub retrieval_queue_depth: u64,
+    /// Per-shard gauges of the most recently touched corpus (entries,
+    /// live count, tombstone fraction, compactions, inserts, searches,
+    /// last per-shard search walltime).
+    pub retrieval_shards: Vec<ShardGauges>,
 }
 
 impl StatsSnapshot {
@@ -334,6 +392,34 @@ impl std::fmt::Display for StatsSnapshot {
                 self.recall_probes,
                 self.recall()
             )?;
+        }
+        if self.retrieval_offthread > 0 {
+            write!(
+                f,
+                " rsearch(offthread={}, queue={}, us(mean={}, max={}))",
+                self.retrieval_offthread,
+                self.retrieval_queue_depth,
+                self.retrieval_search_mean_us,
+                self.retrieval_search_max_us
+            )?;
+        }
+        if !self.retrieval_shards.is_empty() {
+            write!(f, " shards=[")?;
+            for (i, g) in self.retrieval_shards.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(
+                    f,
+                    "{}:live={}/{} ts={:.2} comp={}",
+                    g.shard,
+                    g.live,
+                    g.entries,
+                    g.tombstone_fraction,
+                    g.compactions
+                )?;
+            }
+            write!(f, "]")?;
         }
         Ok(())
     }
@@ -465,6 +551,80 @@ mod tests {
         let line = snap.to_string();
         assert!(line.contains("retrieval(queries=2"));
         assert!(line.contains("recall(probes=1"));
+    }
+
+    #[test]
+    fn runtime_feedback_feeds_offthread_and_shard_gauges() {
+        use crate::retrieval::{ProbeOutcome, RetrievalReport, RuntimeFeedback, ShardGauges};
+        let mut s = Stats::default();
+        let snap = s.snapshot();
+        assert_eq!(snap.retrieval_offthread, 0);
+        assert!(snap.retrieval_shards.is_empty());
+        assert!(!snap.to_string().contains("rsearch("));
+        assert!(!snap.to_string().contains("shards=["));
+
+        let report = RetrievalReport {
+            corpus: 100,
+            k: 5,
+            solved: 20,
+            pruned: 80,
+            panels: 2,
+            rescued: 0,
+            failed: 0,
+            warm_seeded: 0,
+            iterations: 500,
+            pruned_mass: 10,
+            pruned_centroid: 30,
+            pruned_projection: 40,
+            threshold: 0.4,
+            probe: Some(ProbeOutcome { matched: 5, k: 5 }),
+        };
+        let gauge = |shard: usize, live: usize| ShardGauges {
+            shard,
+            entries: live + 1,
+            live,
+            tombstone_fraction: 1.0 / (live + 1) as f64,
+            compactions: 1,
+            inserts: 2,
+            searches: 3,
+            last_search_us: 42,
+        };
+        s.record_runtime(&RuntimeFeedback {
+            corpus: 0,
+            report: Some(report),
+            search_us: 900,
+            failed: false,
+            gauges: vec![gauge(0, 50), gauge(1, 49)],
+        });
+        s.record_runtime(&RuntimeFeedback {
+            corpus: 0,
+            report: Some(report),
+            search_us: 100,
+            failed: false,
+            gauges: vec![gauge(0, 50), gauge(1, 48)],
+        });
+        // A failed mutation push: error counted, gauge table kept.
+        s.record_runtime(&RuntimeFeedback {
+            corpus: 1,
+            report: None,
+            search_us: 0,
+            failed: true,
+            gauges: Vec::new(),
+        });
+        s.retrieval_queue_depth = 3;
+        let snap = s.snapshot();
+        assert_eq!(snap.retrievals, 2, "search feedback folds into retrieval gauges");
+        assert_eq!(snap.recall_probes, 2);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.retrieval_offthread, 2);
+        assert_eq!(snap.retrieval_search_mean_us, 500);
+        assert_eq!(snap.retrieval_search_max_us, 900);
+        assert_eq!(snap.retrieval_queue_depth, 3);
+        assert_eq!(snap.retrieval_shards.len(), 2, "latest gauge table wins");
+        assert_eq!(snap.retrieval_shards[1].live, 48);
+        let line = snap.to_string();
+        assert!(line.contains("rsearch(offthread=2, queue=3"));
+        assert!(line.contains("shards=[0:live=50/51"));
     }
 
     #[test]

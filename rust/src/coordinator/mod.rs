@@ -15,9 +15,13 @@
 //! * [`service`] — the engine thread owning the PJRT runtime and the
 //!   CPU panel executors ([`crate::backend::ShardedExecutor`]: one
 //!   K/Kᵀ-bound solver instance per worker thread), the mpsc plumbing
-//!   and graceful shutdown;
+//!   and graceful shutdown; retrieval work (index builds, cascade
+//!   walks, recall probes, mutations) is handed off to the dedicated
+//!   [`crate::retrieval::RetrievalRuntime`] thread so a corpus search
+//!   never stalls a distance-query deadline flush;
 //! * [`metrics`] — counters/latency snapshots, including per-worker
-//!   executor occupancy.
+//!   executor occupancy, per-shard retrieval gauges and off-thread
+//!   search latency.
 //!
 //! Python never appears anywhere on this path: the engine executes
 //! AOT-compiled HLO through [`crate::runtime`].
@@ -177,15 +181,34 @@ pub struct CoordinatorConfig {
     /// additionally runs the brute-force search and compares, feeding
     /// the `recall_probes` / `recall_matched` gauges (0 = never; probes
     /// solve the whole corpus, so treat this as a sampled audit, not a
-    /// steady-state setting). The rest of the retrieval refine stage is
-    /// derived from the serving config it rides: `cpu_workers` executor
-    /// workers, `cpu_backend` pinning, the `kernel` policy, the `anneal`
-    /// schedule, the batcher's effective `max_batch` as the refine panel
-    /// width, and the warm-start tolerance/iteration cap when
-    /// `warm_start` is set (1e-9 / 10k otherwise — retrieval always
-    /// re-ranks in convergence-checked mode so the truncated-kernel
-    /// rescue contract stays total).
+    /// steady-state setting). Probes execute on the retrieval runtime
+    /// thread like every other search — a probe never stalls the engine
+    /// thread — and their brute-force oracle prices the *merged
+    /// multi-shard view*, so what is audited is the full
+    /// partition-and-merge contract, not one shard. The rest of the
+    /// retrieval refine stage is derived from the serving config it
+    /// rides: `cpu_workers` executor workers (divided across
+    /// concurrently searched shards), `cpu_backend` pinning, the
+    /// `kernel` policy, the `anneal` schedule, the batcher's effective
+    /// `max_batch` as the refine panel width, and the warm-start
+    /// tolerance/iteration cap when `warm_start` is set (1e-9 / 10k
+    /// otherwise — retrieval always re-ranks in convergence-checked
+    /// mode so the truncated-kernel rescue contract stays total).
     pub retrieval_probe_every: u64,
+    /// Shards each registered corpus is partitioned into (clamped to
+    /// `[1, corpus size]`). Every shard owns its own per-entry bound
+    /// tables, warm cache and refine executor, and the per-shard top-k
+    /// heaps merge associatively — pruned results are shard-count
+    /// invariant (tie-aware), locked by `rust/tests/retrieval_sharded.rs`.
+    /// Inserts route to the emptiest shard; tombstones trigger
+    /// per-shard compaction at 25% dead slots.
+    pub retrieval_shards: usize,
+    /// Shards one retrieval query walks concurrently on the runtime
+    /// thread's scoped pool (0 = available parallelism; clamped to the
+    /// shard count *and* to the refine worker budget). The refine
+    /// worker budget divides across them, so a sharded search does not
+    /// oversubscribe the machine.
+    pub retrieval_threads: usize,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -229,6 +252,8 @@ impl Default for CoordinatorConfig {
             anneal: LambdaSchedule::Fixed,
             batcher: BatcherConfig::default(),
             retrieval_probe_every: 0,
+            retrieval_shards: 1,
+            retrieval_threads: 0,
         }
     }
 }

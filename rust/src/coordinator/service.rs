@@ -22,7 +22,10 @@ use super::{
 };
 use crate::backend::ShardedExecutor;
 use crate::metric::CostMatrix;
-use crate::retrieval::{CorpusIndex, RetrievalConfig, RetrievalError, RetrievalService};
+use crate::retrieval::{
+    CorpusIndex, RegisterSpec, RetrievalConfig, RetrievalError, RetrievalRuntime,
+    RuntimeFeedback, SearchOutcome, ShardingConfig,
+};
 use crate::runtime::{RuntimeError, XlaRuntime};
 use crate::simplex::Histogram;
 use crate::sinkhorn::SinkhornConfig;
@@ -94,6 +97,24 @@ enum Message {
         query: RetrievalQuery,
         enqueued: Instant,
         respond: Sender<Result<RetrievalOutcome, ServiceError>>,
+    },
+    /// Append one entry to a registered corpus (acks its fresh id).
+    CorpusInsert {
+        id: CorpusId,
+        entry: Histogram,
+        ack: Sender<Result<usize, ServiceError>>,
+    },
+    /// Tombstone one corpus entry (acks whether a live entry was hit).
+    CorpusTombstone {
+        id: CorpusId,
+        entry: usize,
+        ack: Sender<Result<bool, ServiceError>>,
+    },
+    /// Compact every shard of the corpus holding tombstones (acks how
+    /// many shards rebuilt).
+    CorpusCompact {
+        id: CorpusId,
+        ack: Sender<Result<usize, ServiceError>>,
     },
     Stats(Sender<StatsSnapshot>),
     /// Warm the XLA executable cache (compile all variants now).
@@ -216,26 +237,37 @@ impl DistanceService {
     }
 
     /// Register (or replace) a retrieval corpus bound to a registered
-    /// metric at a fixed serving λ. The engine thread ingests, validates
-    /// and indexes `entries` (per-entry projection CDFs, centroid
-    /// coordinates, warm-scaling cache) and stands up a pruned top-k
-    /// [`crate::retrieval::RetrievalService`] whose refine stage shares
-    /// the service's CPU serving knobs (workers, backend pinning, kernel
-    /// policy, anneal schedule — see
+    /// metric at a fixed serving λ. The entries are ingested, validated
+    /// and indexed (per-entry projection CDFs, centroid coordinates,
+    /// warm-scaling caches) into a
+    /// [`crate::retrieval::ShardedCorpus`] of
+    /// [`CoordinatorConfig::retrieval_shards`] partitions whose refine
+    /// stages share the service's CPU serving knobs (workers, backend
+    /// pinning, kernel policy, anneal schedule — see
     /// [`CoordinatorConfig::retrieval_probe_every`] for the full
     /// derivation). Returns the indexed corpus size.
     ///
-    /// Re-registering the corpus's metric drops the corpus (its
-    /// precomputed statistics would silently describe the old metric).
+    /// Latency contract (non-blocking since PR 5): the engine thread
+    /// only validates the metric and λ and hands the build off to the
+    /// dedicated [`crate::retrieval::RetrievalRuntime`] thread — *this
+    /// caller* blocks until the index is built, but distance queries
+    /// and their batcher deadline flushes are unaffected, during both
+    /// registration and every subsequent [`Self::retrieve`] search or
+    /// recall probe. Retrieval jobs execute in submission order on the
+    /// runtime thread (shards of one search run concurrently), so a
+    /// search never observes a half-applied [`Self::corpus_insert`] /
+    /// [`Self::corpus_tombstone`] / [`Self::corpus_compact`].
     ///
-    /// Latency contract: corpus ingestion and every [`Self::retrieve`]
-    /// search execute *inline on the engine thread* (the index and its
-    /// executor are engine-owned state, like the distance executors).
-    /// While one runs, pending distance queries wait — their batcher
-    /// deadline can be overshot by the duration of the search (or of a
-    /// recall probe, which brute-forces the whole corpus). Bound corpus
-    /// sizes and probe rates accordingly; moving the search walk onto
-    /// its own thread is an open ROADMAP item.
+    /// Invalidation: re-registering the corpus's *metric* drops the
+    /// corpus (its precomputed statistics would silently describe the
+    /// old metric). A search already executing when the invalidation is
+    /// submitted completes against the snapshot it started with —
+    /// results in flight stay internally consistent; searches queued
+    /// behind the invalidation (or behind a corpus re-registration that
+    /// fails to build) fail with [`ServiceError::UnknownCorpus`]. The
+    /// same snapshot rule applies to tombstones: an in-flight search
+    /// that already dequeued keeps pricing the tombstoned entry; every
+    /// search submitted after the tombstone ack excludes it.
     pub fn register_corpus(
         &self,
         id: CorpusId,
@@ -246,6 +278,53 @@ impl DistanceService {
         let (ack_tx, ack_rx) = channel();
         self.tx
             .send(Message::RegisterCorpus { id, metric, lambda, entries, ack: ack_tx })
+            .map_err(|_| ServiceError::Stopped)?;
+        ack_rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// Append one histogram to a registered corpus; returns its fresh
+    /// corpus-global entry id (the id space `retrieve` hits report).
+    /// The insert lands on exactly one shard (per-entry statistics are
+    /// shard-local) on the retrieval runtime thread — the engine thread
+    /// never blocks — and the entry is searchable by every query
+    /// submitted after this call returns.
+    pub fn corpus_insert(
+        &self,
+        id: CorpusId,
+        entry: Histogram,
+    ) -> Result<usize, ServiceError> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(Message::CorpusInsert { id, entry, ack: ack_tx })
+            .map_err(|_| ServiceError::Stopped)?;
+        ack_rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// Tombstone one corpus entry id: it disappears from every search
+    /// submitted after this call returns (in-flight searches keep their
+    /// snapshot — see [`Self::register_corpus`]). Returns whether a
+    /// live entry was hit. When the owning shard's tombstone fraction
+    /// crosses the compaction threshold, that shard rebuilds itself
+    /// in place; ids never change.
+    pub fn corpus_tombstone(
+        &self,
+        id: CorpusId,
+        entry: usize,
+    ) -> Result<bool, ServiceError> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(Message::CorpusTombstone { id, entry, ack: ack_tx })
+            .map_err(|_| ServiceError::Stopped)?;
+        ack_rx.recv().map_err(|_| ServiceError::Stopped)?
+    }
+
+    /// Explicitly compact every shard of the corpus holding tombstones;
+    /// returns how many shards rebuilt. Runs on the retrieval runtime
+    /// thread like every other corpus job.
+    pub fn corpus_compact(&self, id: CorpusId) -> Result<usize, ServiceError> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(Message::CorpusCompact { id, ack: ack_tx })
             .map_err(|_| ServiceError::Stopped)?;
         ack_rx.recv().map_err(|_| ServiceError::Stopped)?
     }
@@ -357,9 +436,17 @@ struct EngineThread {
     /// One sharded panel executor per (metric, λ) shape class; each holds
     /// `config.cpu_workers` private K/Kᵀ-bound backend instances.
     executors: HashMap<(MetricId, u64), ShardedExecutor>,
-    /// One pruned-search service per registered corpus, remembering the
-    /// metric it indexed so metric replacement can invalidate it.
-    corpora: HashMap<CorpusId, (MetricId, RetrievalService)>,
+    /// The dedicated retrieval thread (spawned lazily on the first
+    /// corpus registration). The engine keeps only validation + promise
+    /// plumbing: corpus state, index builds, cascade walks and recall
+    /// probes all live on the runtime thread, so a long search can
+    /// never stall a batcher deadline flush.
+    retrieval: Option<RetrievalRuntime>,
+    /// Sender template handed to the runtime at spawn.
+    feedback_tx: Sender<RuntimeFeedback>,
+    /// Gauge/report pushes from the runtime, drained into `stats` on
+    /// every engine wakeup (and right before every stats snapshot).
+    feedback_rx: Receiver<RuntimeFeedback>,
     pending: PendingBatcher<Job>,
     stats: Stats,
 }
@@ -372,15 +459,34 @@ impl EngineThread {
     ) -> Self {
         let pending =
             PendingBatcher::new(config.batcher.effective(config.cpu_workers));
+        let (feedback_tx, feedback_rx) = channel();
         Self {
             config,
             runtime,
             rx,
             metrics: HashMap::new(),
             executors: HashMap::new(),
-            corpora: HashMap::new(),
+            retrieval: None,
+            feedback_tx,
+            feedback_rx,
             pending,
             stats: Stats::default(),
+        }
+    }
+
+    /// The retrieval runtime, spawning it on first use.
+    fn retrieval_runtime(&mut self) -> &RetrievalRuntime {
+        if self.retrieval.is_none() {
+            self.retrieval =
+                Some(RetrievalRuntime::start(self.feedback_tx.clone()));
+        }
+        self.retrieval.as_ref().expect("runtime just ensured")
+    }
+
+    /// Fold queued runtime feedback into the gauges (non-blocking).
+    fn drain_retrieval_feedback(&mut self) {
+        while let Ok(feedback) = self.feedback_rx.try_recv() {
+            self.stats.record_runtime(&feedback);
         }
     }
 
@@ -400,19 +506,95 @@ impl EngineThread {
                     // replaced metric (a corpus's precomputed statistics
                     // describe the metric they were built against).
                     self.executors.retain(|(mid, _), _| *mid != id);
-                    self.corpora.retain(|_, (mid, _)| *mid != id);
+                    if let Some(rt) = &self.retrieval {
+                        rt.drop_metric(id.0);
+                    }
                     if let Some(rt) = self.runtime.as_mut() {
                         rt.invalidate_metric(id.0 as u64);
                     }
                     let _ = ack.send(());
                 }
                 Ok(Message::RegisterCorpus { id, metric, lambda, entries, ack }) => {
-                    let _ = ack.send(self.register_corpus(id, metric, lambda, entries));
+                    self.register_corpus(id, metric, lambda, entries, ack);
                 }
                 Ok(Message::Retrieve { query, enqueued, respond }) => {
-                    let _ = respond.send(self.retrieve(query, enqueued));
+                    // No runtime thread yet means no corpus was ever
+                    // registered: answer here instead of spawning the
+                    // dedicated thread just to fail the lookup.
+                    if self.retrieval.is_none() {
+                        self.stats.errors += 1;
+                        let _ = respond
+                            .send(Err(ServiceError::UnknownCorpus(query.corpus)));
+                    } else {
+                        self.retrieval_runtime().search(
+                            query.corpus.0,
+                            query.r,
+                            query.k,
+                            enqueued,
+                            Box::new(move |res: Result<SearchOutcome, _>| {
+                                let _ = respond.send(
+                                    res.map(|o| RetrievalOutcome {
+                                        hits: o.hits,
+                                        report: o.report,
+                                        latency_us: o.latency_us,
+                                    })
+                                    .map_err(runtime_retrieval_error),
+                                );
+                            }),
+                        );
+                    }
+                }
+                Ok(Message::CorpusInsert { id, entry, ack }) => {
+                    if self.retrieval.is_none() {
+                        self.stats.errors += 1;
+                        let _ = ack.send(Err(ServiceError::UnknownCorpus(id)));
+                    } else {
+                        self.retrieval_runtime().insert(
+                            id.0,
+                            entry,
+                            Box::new(move |res| {
+                                let _ = ack
+                                    .send(res.map_err(runtime_retrieval_error));
+                            }),
+                        );
+                    }
+                }
+                Ok(Message::CorpusTombstone { id, entry, ack }) => {
+                    if self.retrieval.is_none() {
+                        self.stats.errors += 1;
+                        let _ = ack.send(Err(ServiceError::UnknownCorpus(id)));
+                    } else {
+                        self.retrieval_runtime().tombstone(
+                            id.0,
+                            entry,
+                            Box::new(move |res| {
+                                let _ = ack
+                                    .send(res.map_err(runtime_retrieval_error));
+                            }),
+                        );
+                    }
+                }
+                Ok(Message::CorpusCompact { id, ack }) => {
+                    if self.retrieval.is_none() {
+                        self.stats.errors += 1;
+                        let _ = ack.send(Err(ServiceError::UnknownCorpus(id)));
+                    } else {
+                        self.retrieval_runtime().compact(
+                            id.0,
+                            Box::new(move |res| {
+                                let _ = ack
+                                    .send(res.map_err(runtime_retrieval_error));
+                            }),
+                        );
+                    }
                 }
                 Ok(Message::Stats(tx)) => {
+                    self.drain_retrieval_feedback();
+                    self.stats.retrieval_queue_depth = self
+                        .retrieval
+                        .as_ref()
+                        .map(|rt| rt.queue_depth() as u64)
+                        .unwrap_or(0);
                     let _ = tx.send(self.stats.snapshot());
                 }
                 Ok(Message::Warmup(tx)) => {
@@ -426,13 +608,17 @@ impl EngineThread {
                 }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
-                    // Drain remaining work, then exit.
+                    // Drain remaining work, then exit. Dropping `self`
+                    // afterwards disconnects the retrieval runtime's job
+                    // channel; its drop drains queued retrieval jobs
+                    // (promised answers still get delivered) and joins.
                     for batch in self.pending.drain(Instant::now()) {
                         self.execute(batch);
                     }
                     return;
                 }
             }
+            self.drain_retrieval_feedback();
             for batch in self.pending.poll_expired(Instant::now()) {
                 self.execute(batch);
             }
@@ -461,60 +647,48 @@ impl EngineThread {
         rc
     }
 
-    /// Build and install one corpus index + search service.
+    /// Validate and hand one corpus registration off to the retrieval
+    /// runtime (the build runs there; the ack travels straight from the
+    /// runtime thread to the registering caller).
     fn register_corpus(
         &mut self,
         id: CorpusId,
         metric_id: MetricId,
         lambda: F,
         entries: Vec<Histogram>,
-    ) -> Result<usize, ServiceError> {
-        let metric = self
-            .metrics
-            .get(&metric_id)
-            .ok_or(ServiceError::UnknownMetric(metric_id))?;
+        ack: Sender<Result<usize, ServiceError>>,
+    ) {
+        let Some(metric) = self.metrics.get(&metric_id).cloned() else {
+            self.stats.errors += 1;
+            let _ = ack.send(Err(ServiceError::UnknownMetric(metric_id)));
+            return;
+        };
         if !(lambda > 0.0 && lambda.is_finite()) {
-            return Err(ServiceError::InvalidConfig(format!(
+            self.stats.errors += 1;
+            let _ = ack.send(Err(ServiceError::InvalidConfig(format!(
                 "corpus serving lambda must be positive and finite (got {lambda})"
-            )));
+            ))));
+            return;
         }
-        let index = CorpusIndex::from_histograms(
+        let spec = RegisterSpec {
+            corpus: id.0,
+            metric_key: metric_id.0,
             metric,
             entries,
-            CorpusIndex::DEFAULT_ANCHORS,
-        )
-        .map_err(retrieval_error)?;
-        let size = index.len();
-        let service = RetrievalService::new(index, self.retrieval_config(lambda));
-        self.corpora.insert(id, (metric_id, service));
-        Ok(size)
-    }
-
-    /// Run one pruned top-k search and fold its report into the gauges.
-    fn retrieve(
-        &mut self,
-        query: RetrievalQuery,
-        enqueued: Instant,
-    ) -> Result<RetrievalOutcome, ServiceError> {
-        let (_, service) = self
-            .corpora
-            .get_mut(&query.corpus)
-            .ok_or(ServiceError::UnknownCorpus(query.corpus))?;
-        match service.top_k(&query.r, query.k) {
-            Ok((hits, report)) => {
-                self.stats.record_retrieval(&report);
-                let latency = Instant::now().saturating_duration_since(enqueued);
-                Ok(RetrievalOutcome {
-                    hits,
-                    report,
-                    latency_us: latency.as_micros().min(u64::MAX as u128) as u64,
-                })
-            }
-            Err(e) => {
-                self.stats.errors += 1;
-                Err(retrieval_error(e))
-            }
-        }
+            anchors: CorpusIndex::DEFAULT_ANCHORS,
+            config: self.retrieval_config(lambda),
+            sharding: ShardingConfig {
+                shards: self.config.retrieval_shards.max(1),
+                threads: self.config.retrieval_threads,
+                ..ShardingConfig::default()
+            },
+        };
+        self.retrieval_runtime().register(
+            spec,
+            Box::new(move |res| {
+                let _ = ack.send(res.map_err(retrieval_error));
+            }),
+        );
     }
 
     /// Validate and enqueue one query (or answer immediately on error).
@@ -720,6 +894,16 @@ fn retrieval_error(e: RetrievalError) -> ServiceError {
             ServiceError::DimensionMismatch { got, want }
         }
         other => ServiceError::InvalidConfig(other.to_string()),
+    }
+}
+
+/// Map retrieval-runtime errors onto the client-facing error surface.
+fn runtime_retrieval_error(e: crate::retrieval::RuntimeError) -> ServiceError {
+    match e {
+        crate::retrieval::RuntimeError::UnknownCorpus(key) => {
+            ServiceError::UnknownCorpus(CorpusId(key))
+        }
+        crate::retrieval::RuntimeError::Index(e) => retrieval_error(e),
     }
 }
 

@@ -81,7 +81,8 @@ pub mod prelude {
     pub use crate::metric::{CostMatrix, GridMetric, RandomMetric};
     pub use crate::ot::{EmdSolver, TransportPlan};
     pub use crate::retrieval::{
-        BoundCascade, CorpusIndex, RetrievalConfig, RetrievalService,
+        BoundCascade, CorpusIndex, RetrievalConfig, RetrievalRuntime,
+        RetrievalService, ShardedCorpus, ShardingConfig,
     };
     pub use crate::rng::Rng;
     pub use crate::simplex::{seeded_rng, Histogram};

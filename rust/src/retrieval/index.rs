@@ -25,8 +25,15 @@
 //!
 //! Memory: per entry, `anchors`·(d−1) CDF values plus (when the
 //! embedding factors) d centroid coordinates — ~5·d·8 bytes at the
-//! default 4 anchors. Corpus sharding across executors for larger-than-
-//! RAM indexes is an open ROADMAP item.
+//! default 4 anchors.
+//!
+//! Every per-entry statistic is a function of the *metric* and that one
+//! entry alone (the anchor axes and the embedding factorization are
+//! metric-only), which is what makes the index incrementally mutable:
+//! [`CorpusIndex::push`] appends one entry in O(anchors·d) without
+//! touching any other entry, and the sharded runtime
+//! ([`super::ShardedCorpus`]) partitions a corpus into many independent
+//! indexes whose per-shard results merge associatively.
 
 use super::RetrievalError;
 use crate::metric::CostMatrix;
@@ -81,6 +88,10 @@ pub struct CorpusIndex {
     cdfs: Vec<Vec<F>>,
     centroid: Option<CentroidSpace>,
     warm: WarmStartStore,
+    /// The anchor budget the index was built with (compaction rebuilds
+    /// reuse it; the *surviving* anchor count after the admissibility
+    /// filter may be smaller).
+    anchors_requested: usize,
 }
 
 impl CorpusIndex {
@@ -132,7 +143,56 @@ impl CorpusIndex {
             cdfs,
             centroid,
             warm: WarmStartStore::new(capacity),
+            anchors_requested: anchors,
         })
+    }
+
+    /// Append one already-validated histogram, computing its per-entry
+    /// statistics in O(anchors·d): a CDF row against each fixed anchor
+    /// axis plus (when the metric embeds) its prepared barycenter
+    /// coordinates. The axes and the embedding are functions of the
+    /// *metric* alone, so they stay valid for every appended entry and
+    /// no existing entry is touched. Returns the new entry's slot.
+    pub fn push(&mut self, h: Histogram) -> Result<usize, RetrievalError> {
+        let d = self.dim();
+        if h.dim() != d {
+            return Err(RetrievalError::DimensionMismatch {
+                entry: self.entries.len(),
+                got: h.dim(),
+                want: d,
+            });
+        }
+        for (axis, table) in self.axes.iter().zip(&mut self.cdfs) {
+            push_sorted_cdf(table, h.values(), &axis.perm);
+        }
+        if let Some(space) = self.centroid.as_mut() {
+            let prepared = space.kernel.prepare(&h);
+            space.prepared.push(prepared);
+        }
+        self.entries.push(h);
+        // The warm cache tracks the corpus as it grows (resize only
+        // evicts on shrink), so append-only corpora don't thrash a
+        // build-time-sized LRU forever.
+        self.warm.resize(self.entries.len());
+        Ok(self.entries.len() - 1)
+    }
+
+    /// The anchor budget this index was built with (not the surviving
+    /// anchor count — see [`Self::anchors`]).
+    pub fn anchors_requested(&self) -> usize {
+        self.anchors_requested
+    }
+
+    /// Take over `from`'s warm cache (used by shard compaction: the
+    /// cache is keyed by caller-stable entry ids, so its contents stay
+    /// valid across an index rebuild; cached scalings of dropped
+    /// entries simply age out of the LRU). The adopted store is resized
+    /// to this index's entry count, so a rebuilt shard's cache capacity
+    /// tracks its live size — this is what makes the
+    /// [`Self::warm_deposit`] cache-pressure note temporary.
+    pub(crate) fn adopt_warm(&mut self, from: &mut CorpusIndex) {
+        std::mem::swap(&mut self.warm, &mut from.warm);
+        self.warm.resize(self.entries.len());
     }
 
     /// Ingest raw non-negative weight rows: each row is validated and
@@ -260,15 +320,21 @@ impl CorpusIndex {
         best
     }
 
-    /// Fetch the cached converged scalings for corpus entry `entry` at
-    /// the given λ (entry-keyed: a previous query's fixed point against
-    /// the same entry seeds the next solve).
+    /// Fetch the cached converged scalings for cache key `entry` at the
+    /// given λ. The key is any caller-stable id — a standalone service
+    /// passes the entry slot, the sharded path passes the corpus-global
+    /// entry id so cached scalings survive compaction (which renumbers
+    /// slots but not ids). A previous query's fixed point against the
+    /// same entry seeds the next solve.
     pub fn warm_init(&mut self, lambda: F, entry: usize) -> Option<ScalingInit> {
         self.warm.get(&entry_key(lambda, entry))
     }
 
     /// Deposit a refine-stage solve back into the per-entry cache (only
-    /// converged, finite solves are kept).
+    /// converged, finite solves are kept). `entry` follows the same
+    /// stable-id contract as [`Self::warm_init`]. The LRU capacity is
+    /// fixed at the build-time corpus size, so a heavily grown shard
+    /// sees cache pressure until its next compaction rebuild.
     pub fn warm_deposit(&mut self, lambda: F, entry: usize, out: &SinkhornOutput) {
         if out.stats.converged && out.value.is_finite() {
             self.warm.insert(entry_key(lambda, entry), ScalingInit::from_output(out));
@@ -536,6 +602,42 @@ mod tests {
         let plain = GridMetric::new(3, 3).cost_matrix();
         let index = CorpusIndex::from_histograms(&plain, entries, 4).unwrap();
         assert_eq!(index.anchors().len(), 4);
+    }
+
+    #[test]
+    fn pushed_entries_match_a_from_scratch_build() {
+        // Incremental push must produce bit-identical per-entry
+        // statistics to indexing the grown corpus from scratch: the
+        // axes and embedding are metric-only, so the appended CDF rows
+        // and prepared coordinates go through the exact same code path.
+        let (m, entries) = corpus(14, 10, 5);
+        let mut grown =
+            CorpusIndex::from_histograms(&m, entries[..6].to_vec(), 3).unwrap();
+        for h in &entries[6..] {
+            let slot = grown.push(h.clone()).unwrap();
+            assert_eq!(slot, grown.len() - 1);
+        }
+        let scratch = CorpusIndex::from_histograms(&m, entries.clone(), 3).unwrap();
+        assert_eq!(grown.len(), scratch.len());
+        assert_eq!(grown.anchors(), scratch.anchors());
+        assert_eq!(grown.anchors_requested(), 3);
+        let mut rng = seeded_rng(55);
+        let q = Histogram::sample_uniform(14, &mut rng);
+        let gp = grown.prepare(&q);
+        let sp = scratch.prepare(&q);
+        for e in 0..entries.len() {
+            assert_eq!(grown.entry(e).values(), scratch.entry(e).values());
+            assert_eq!(grown.projection_bound(&gp, e), scratch.projection_bound(&sp, e));
+            assert_eq!(grown.mass_bound(&q, e), scratch.mass_bound(&q, e));
+            assert_eq!(grown.centroid_bound(&gp, e), scratch.centroid_bound(&sp, e));
+        }
+        // Dimension mismatches are rejected without mutating the index.
+        let err = grown.push(Histogram::uniform(9)).unwrap_err();
+        assert!(matches!(
+            err,
+            RetrievalError::DimensionMismatch { entry: 10, got: 9, want: 14 }
+        ));
+        assert_eq!(grown.len(), 10);
     }
 
     #[test]

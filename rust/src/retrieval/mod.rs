@@ -27,19 +27,41 @@
 //! policies, including truncated kernels where the rescue gate fires, by
 //! `rust/tests/retrieval_exactness.rs`.
 //!
+//! PR 5 scales the pipeline past one index and off the serving thread:
+//!
+//! * [`ShardedCorpus`] partitions the corpus into [`CorpusShard`]s —
+//!   each owning its own entry range, CDF tables, centroid coordinates,
+//!   warm cache and refine executor — and merges the per-shard top-k
+//!   heaps associatively, so shard results are order-independent (the
+//!   precondition for future cross-machine placement);
+//! * [`RetrievalRuntime`] runs every cascade walk, refine panel, index
+//!   build and recall probe on a dedicated thread, turning the
+//!   coordinator's retrieval entry points into non-blocking handoffs;
+//! * the index is incrementally mutable: `insert` (one shard, O(d)),
+//!   `tombstone` (O(1)) and threshold-triggered per-shard `compact`,
+//!   with entry ids stable across the whole cycle.
+//!
 //! The coordinator exposes the whole pipeline as a service API
-//! (`DistanceService::register_corpus` / `retrieve`) with prune-fraction
-//! and recall gauges in its stats snapshot.
+//! (`DistanceService::register_corpus` / `retrieve` / `corpus_insert` /
+//! `corpus_tombstone` / `corpus_compact`) with prune-fraction, recall,
+//! per-shard and off-thread-latency gauges in its stats snapshot.
 
 mod bounds;
 mod index;
+mod runtime;
 mod search;
+mod shard;
 
 pub use bounds::{BoundCascade, BoundTier, BoundValue};
 pub use index::{CorpusIndex, QueryPrep};
+pub use runtime::{
+    CorpusKey, MetricKey, RegisterSpec, RetrievalRuntime, RuntimeError,
+    RuntimeFeedback, SearchOutcome,
+};
 pub use search::{
     Hit, ProbeOutcome, RetrievalConfig, RetrievalReport, RetrievalService,
 };
+pub use shard::{CorpusShard, ShardGauges, ShardedCorpus, ShardingConfig};
 
 use crate::simplex::HistogramError;
 use crate::F;

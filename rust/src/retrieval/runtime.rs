@@ -1,0 +1,586 @@
+//! The off-engine-thread retrieval runtime.
+//!
+//! PR 4 executed every cascade walk inline on the coordinator's engine
+//! thread, so a long corpus search (or a brute-force recall probe)
+//! stalled pending distance-query deadline flushes for its whole
+//! duration. This module moves retrieval onto its own thread:
+//!
+//! * [`RetrievalRuntime`] spawns one dedicated `sinkhorn-retrieval`
+//!   thread that owns every registered [`super::ShardedCorpus`] (index
+//!   builds included — registration is also expensive). The engine
+//!   thread keeps only validation and promise plumbing: every operation
+//!   is a non-blocking channel send carrying a completion callback, and
+//!   results travel straight to the caller's promise channel without
+//!   re-crossing the engine.
+//! * Jobs execute **in submission order** on the runtime thread, with
+//!   intra-search parallelism across shards (the
+//!   [`super::ShardingConfig::threads`] scoped pool) and across each
+//!   shard's refine executor workers. Serialized jobs are what make the
+//!   mutation API race-free without locks: a search never observes a
+//!   half-applied insert/tombstone/compact, and a corpus invalidation
+//!   (metric replacement) simply fails every search queued behind it
+//!   with "unknown corpus" while searches already dequeued complete
+//!   against the snapshot they started with.
+//! * Observability flows through a feedback channel
+//!   ([`RuntimeFeedback`]): after every job the runtime pushes the
+//!   search report, the pure off-thread search walltime and the
+//!   per-shard gauges; the coordinator drains it into its stats, and
+//!   [`RetrievalRuntime::queue_depth`] exposes how many jobs are
+//!   currently queued or running.
+//!
+//! Dropping the runtime handle disconnects the job channel; the thread
+//! drains everything already queued (callers still get their answers)
+//! and exits, and the drop joins it.
+
+use super::shard::{ShardGauges, ShardedCorpus, ShardingConfig};
+use super::{Hit, RetrievalConfig, RetrievalError, RetrievalReport};
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Raw corpus key (the coordinator maps its `CorpusId` onto this; the
+/// runtime is coordinator-agnostic).
+pub type CorpusKey = u32;
+/// Raw metric key, used only to invalidate dependent corpora.
+pub type MetricKey = u32;
+
+/// Everything needed to build and install one sharded corpus.
+pub struct RegisterSpec {
+    /// Corpus key (re-registering an existing key replaces it).
+    pub corpus: CorpusKey,
+    /// Metric namespace the corpus depends on;
+    /// [`RetrievalRuntime::drop_metric`] with this key invalidates the
+    /// corpus.
+    pub metric_key: MetricKey,
+    /// The ground metric (owned: the runtime outlives the caller's
+    /// borrow).
+    pub metric: CostMatrix,
+    /// Raw corpus entries; validated and indexed on the runtime thread.
+    pub entries: Vec<Histogram>,
+    /// Projection-anchor budget per shard index.
+    pub anchors: usize,
+    /// Search/refine configuration (shared by every shard).
+    pub config: RetrievalConfig,
+    /// Partitioning and search-concurrency knobs.
+    pub sharding: ShardingConfig,
+}
+
+/// A completed off-thread search.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Merged top-k in ascending `(distance, entry id)` order.
+    pub hits: Vec<Hit>,
+    /// Merged per-shard report.
+    pub report: RetrievalReport,
+    /// Queue wait + search walltime, µs (measured from the caller's
+    /// submission instant).
+    pub latency_us: u64,
+}
+
+/// Failures surfaced by runtime operations.
+#[derive(Debug, Clone)]
+pub enum RuntimeError {
+    /// The corpus key is not registered (never was, or its metric was
+    /// replaced and the corpus invalidated).
+    UnknownCorpus(CorpusKey),
+    /// The underlying index/search rejected the input.
+    Index(RetrievalError),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::UnknownCorpus(key) => {
+                write!(f, "retrieval corpus {key} is not registered")
+            }
+            RuntimeError::Index(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Index(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// One observability push from the runtime thread, emitted after every
+/// job that addressed a corpus (searches, mutations, registrations).
+#[derive(Debug, Clone)]
+pub struct RuntimeFeedback {
+    /// The corpus the job addressed.
+    pub corpus: CorpusKey,
+    /// The merged search report, for completed searches only.
+    pub report: Option<RetrievalReport>,
+    /// Pure search walltime on the runtime thread (µs, excludes queue
+    /// wait); 0 for non-search jobs.
+    pub search_us: u64,
+    /// Whether the job failed (unknown corpus or rejected input).
+    pub failed: bool,
+    /// Per-shard gauges after the job (empty when the corpus is gone).
+    pub gauges: Vec<ShardGauges>,
+}
+
+/// Completion callback carried by a job; invoked exactly once on the
+/// runtime thread with the job's outcome.
+type Callback<T> = Box<dyn FnOnce(T) + Send>;
+
+enum Job {
+    Register(Box<RegisterSpec>, Callback<Result<usize, RetrievalError>>),
+    Search {
+        corpus: CorpusKey,
+        query: Histogram,
+        k: usize,
+        enqueued: Instant,
+        respond: Callback<Result<SearchOutcome, RuntimeError>>,
+    },
+    Insert {
+        corpus: CorpusKey,
+        entry: Histogram,
+        respond: Callback<Result<usize, RuntimeError>>,
+    },
+    Tombstone {
+        corpus: CorpusKey,
+        entry: usize,
+        respond: Callback<Result<bool, RuntimeError>>,
+    },
+    Compact {
+        corpus: CorpusKey,
+        respond: Callback<Result<usize, RuntimeError>>,
+    },
+    DropMetric(MetricKey),
+}
+
+/// Handle to the dedicated retrieval thread. All methods are
+/// non-blocking sends; they return `false` only when the runtime thread
+/// is gone (the callback is then dropped uninvoked, which callers
+/// observe as a disconnected promise channel).
+pub struct RetrievalRuntime {
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl RetrievalRuntime {
+    /// Spawn the runtime thread. Gauge/report pushes go to `feedback`;
+    /// dropping the receiving end silently disables them.
+    pub fn start(feedback: Sender<RuntimeFeedback>) -> Self {
+        let (tx, rx) = channel();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let thread_depth = Arc::clone(&depth);
+        let handle = std::thread::Builder::new()
+            .name("sinkhorn-retrieval".into())
+            .spawn(move || {
+                RuntimeThread {
+                    corpora: HashMap::new(),
+                    feedback,
+                    depth: thread_depth,
+                }
+                .run(rx)
+            })
+            .expect("spawn retrieval runtime thread");
+        Self { tx: Some(tx), handle: Some(handle), depth }
+    }
+
+    /// Jobs accepted but not yet completed (queued + the one running).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn send(&self, job: Job) -> bool {
+        // Increment before the send so a completed job always finds the
+        // count it must decrement.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.as_ref().map(|tx| tx.send(job)) {
+            Some(Ok(())) => true,
+            _ => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Build + install a sharded corpus; `ack` receives the indexed
+    /// size (or the build error).
+    pub fn register(
+        &self,
+        spec: RegisterSpec,
+        ack: Callback<Result<usize, RetrievalError>>,
+    ) -> bool {
+        self.send(Job::Register(Box::new(spec), ack))
+    }
+
+    /// Merged pruned top-k against a registered corpus.
+    pub fn search(
+        &self,
+        corpus: CorpusKey,
+        query: Histogram,
+        k: usize,
+        enqueued: Instant,
+        respond: Callback<Result<SearchOutcome, RuntimeError>>,
+    ) -> bool {
+        self.send(Job::Search { corpus, query, k, enqueued, respond })
+    }
+
+    /// Append one entry; the callback receives its fresh global id.
+    pub fn insert(
+        &self,
+        corpus: CorpusKey,
+        entry: Histogram,
+        respond: Callback<Result<usize, RuntimeError>>,
+    ) -> bool {
+        self.send(Job::Insert { corpus, entry, respond })
+    }
+
+    /// Tombstone one entry id; the callback receives whether a live
+    /// entry was hit.
+    pub fn tombstone(
+        &self,
+        corpus: CorpusKey,
+        entry: usize,
+        respond: Callback<Result<bool, RuntimeError>>,
+    ) -> bool {
+        self.send(Job::Tombstone { corpus, entry, respond })
+    }
+
+    /// Compact every shard of the corpus holding tombstones; the
+    /// callback receives how many shards rebuilt.
+    pub fn compact(
+        &self,
+        corpus: CorpusKey,
+        respond: Callback<Result<usize, RuntimeError>>,
+    ) -> bool {
+        self.send(Job::Compact { corpus, respond })
+    }
+
+    /// Invalidate every corpus registered against `metric_key` (their
+    /// precomputed statistics describe the replaced metric). Searches
+    /// queued behind this job fail with unknown-corpus.
+    pub fn drop_metric(&self, metric_key: MetricKey) -> bool {
+        self.send(Job::DropMetric(metric_key))
+    }
+}
+
+impl Drop for RetrievalRuntime {
+    fn drop(&mut self) {
+        // Disconnect the job channel; the thread drains what is already
+        // queued (promised answers still get delivered) and exits.
+        drop(self.tx.take());
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// State owned by the runtime thread.
+struct RuntimeThread {
+    corpora: HashMap<CorpusKey, (MetricKey, ShardedCorpus)>,
+    feedback: Sender<RuntimeFeedback>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl RuntimeThread {
+    fn run(mut self, rx: Receiver<Job>) {
+        while let Ok(job) = rx.recv() {
+            self.handle(job);
+        }
+    }
+
+    /// Mark the current job complete *before* fulfilling its promise,
+    /// so a caller that has observed its result never reads a stale
+    /// non-zero queue depth for it.
+    fn finish<T>(&self, respond: Callback<T>, value: T) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        respond(value);
+    }
+
+    fn push_feedback(
+        &self,
+        corpus: CorpusKey,
+        report: Option<RetrievalReport>,
+        search_us: u64,
+        failed: bool,
+    ) {
+        let gauges = self
+            .corpora
+            .get(&corpus)
+            .map(|(_, c)| c.gauges())
+            .unwrap_or_default();
+        let _ = self.feedback.send(RuntimeFeedback {
+            corpus,
+            report,
+            search_us,
+            failed,
+            gauges,
+        });
+    }
+
+    fn handle(&mut self, job: Job) {
+        match job {
+            Job::Register(spec, ack) => {
+                let spec = *spec;
+                match ShardedCorpus::new(
+                    &spec.metric,
+                    spec.entries,
+                    spec.anchors,
+                    spec.config,
+                    spec.sharding,
+                ) {
+                    Ok(corpus) => {
+                        let size = corpus.len();
+                        self.corpora
+                            .insert(spec.corpus, (spec.metric_key, corpus));
+                        self.push_feedback(spec.corpus, None, 0, false);
+                        self.finish(ack, Ok(size));
+                    }
+                    Err(e) => {
+                        // A failed (re-)registration must not leave a
+                        // previous corpus under this key silently
+                        // serving: the documented contract is that
+                        // searches queued behind a failed rebuild get
+                        // unknown-corpus, not stale data.
+                        self.corpora.remove(&spec.corpus);
+                        self.push_feedback(spec.corpus, None, 0, true);
+                        self.finish(ack, Err(e));
+                    }
+                }
+            }
+            Job::Search { corpus, query, k, enqueued, respond } => {
+                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
+                    self.push_feedback(corpus, None, 0, true);
+                    self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
+                    return;
+                };
+                let t0 = Instant::now();
+                let outcome = sharded.search(&query, k);
+                let search_us =
+                    t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                match outcome {
+                    Ok((hits, report)) => {
+                        self.push_feedback(corpus, Some(report), search_us, false);
+                        let latency_us = enqueued
+                            .elapsed()
+                            .as_micros()
+                            .min(u64::MAX as u128)
+                            as u64;
+                        self.finish(
+                            respond,
+                            Ok(SearchOutcome { hits, report, latency_us }),
+                        );
+                    }
+                    Err(e) => {
+                        self.push_feedback(corpus, None, search_us, true);
+                        self.finish(respond, Err(RuntimeError::Index(e)));
+                    }
+                }
+            }
+            Job::Insert { corpus, entry, respond } => {
+                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
+                    self.push_feedback(corpus, None, 0, true);
+                    self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
+                    return;
+                };
+                let res = sharded.insert(entry);
+                let failed = res.is_err();
+                self.push_feedback(corpus, None, 0, failed);
+                self.finish(respond, res.map_err(RuntimeError::Index));
+            }
+            Job::Tombstone { corpus, entry, respond } => {
+                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
+                    self.push_feedback(corpus, None, 0, true);
+                    self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
+                    return;
+                };
+                let hit = sharded.tombstone(entry);
+                self.push_feedback(corpus, None, 0, false);
+                self.finish(respond, Ok(hit));
+            }
+            Job::Compact { corpus, respond } => {
+                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
+                    self.push_feedback(corpus, None, 0, true);
+                    self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
+                    return;
+                };
+                let rebuilt = sharded.compact();
+                self.push_feedback(corpus, None, 0, false);
+                self.finish(respond, Ok(rebuilt));
+            }
+            Job::DropMetric(metric_key) => {
+                self.corpora.retain(|_, (mk, _)| *mk != metric_key);
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::simplex::seeded_rng;
+    use std::sync::mpsc::channel;
+
+    fn spec(corpus: CorpusKey, seed: u64, shards: usize) -> (RegisterSpec, Histogram) {
+        let d = 10;
+        let mut rng = seeded_rng(seed);
+        let metric = RandomMetric::new(d).sample(&mut rng);
+        let entries: Vec<Histogram> =
+            (0..18).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let q = Histogram::sample_uniform(d, &mut rng);
+        let mut config = RetrievalConfig::serving(9.0);
+        config.workers = 2;
+        (
+            RegisterSpec {
+                corpus,
+                metric_key: 7,
+                metric,
+                entries,
+                anchors: 4,
+                config,
+                sharding: ShardingConfig { shards, threads: 2, ..Default::default() },
+            },
+            q,
+        )
+    }
+
+    fn ack<T: Send + 'static>() -> (Callback<T>, Receiver<T>) {
+        let (tx, rx) = channel();
+        (Box::new(move |v| drop(tx.send(v))), rx)
+    }
+
+    #[test]
+    fn register_search_mutate_and_feedback_round_trip() {
+        let (fb_tx, fb_rx) = channel();
+        let runtime = RetrievalRuntime::start(fb_tx);
+        let (spec, q) = spec(3, 0, 3);
+
+        let (cb, rx) = ack();
+        assert!(runtime.register(spec, cb));
+        assert_eq!(rx.recv().unwrap().unwrap(), 18);
+
+        let (cb, rx) = ack();
+        assert!(runtime.search(3, q.clone(), 5, Instant::now(), cb));
+        let outcome = rx.recv().unwrap().unwrap();
+        assert_eq!(outcome.hits.len(), 5);
+        assert_eq!(outcome.report.solved + outcome.report.pruned, 18);
+        // Latency covers queue wait + search; both are sane.
+        assert!(outcome.latency_us > 0);
+
+        // Mutations serialize behind the search in submission order.
+        let (cb, rx) = ack();
+        assert!(runtime.insert(3, q.clone(), cb));
+        let id = rx.recv().unwrap().unwrap();
+        assert_eq!(id, 18, "fresh corpus-global id");
+        let (cb, rx) = ack();
+        assert!(runtime.tombstone(3, id, cb));
+        assert!(rx.recv().unwrap().unwrap());
+        let (cb, rx) = ack();
+        assert!(runtime.compact(3, cb));
+        assert!(rx.recv().unwrap().unwrap() >= 1);
+
+        // Feedback: registration + search (with report) + 3 mutations.
+        let mut reports = 0;
+        let mut pushes = 0;
+        while let Ok(fb) = fb_rx.try_recv() {
+            pushes += 1;
+            assert_eq!(fb.corpus, 3);
+            assert!(!fb.failed);
+            if let Some(report) = fb.report {
+                reports += 1;
+                assert_eq!(report.k, 5);
+                assert!(fb.search_us > 0, "off-thread search walltime recorded");
+            }
+            assert_eq!(fb.gauges.len(), 3, "per-shard gauges ride every push");
+        }
+        assert_eq!((pushes, reports), (5, 1));
+        assert_eq!(runtime.queue_depth(), 0, "all jobs drained");
+    }
+
+    #[test]
+    fn unknown_corpus_and_metric_invalidation() {
+        let (fb_tx, fb_rx) = channel();
+        let runtime = RetrievalRuntime::start(fb_tx);
+        let (spec, q) = spec(1, 1, 2);
+        let metric_key = spec.metric_key;
+
+        let (cb, rx) = ack();
+        runtime.register(spec, cb);
+        rx.recv().unwrap().unwrap();
+
+        // A never-registered key fails cleanly.
+        let (cb, rx) = ack();
+        runtime.search(9, q.clone(), 2, Instant::now(), cb);
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(RuntimeError::UnknownCorpus(9))
+        ));
+
+        // Replacing the metric invalidates the dependent corpus: the
+        // search queued *behind* the invalidation fails, exactly as a
+        // coordinator caller observes it.
+        runtime.drop_metric(metric_key);
+        let (cb, rx) = ack();
+        runtime.search(1, q, 2, Instant::now(), cb);
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(RuntimeError::UnknownCorpus(1))
+        ));
+        // Failed jobs are flagged in the feedback stream.
+        let mut failures = 0;
+        while let Ok(fb) = fb_rx.try_recv() {
+            failures += usize::from(fb.failed);
+        }
+        assert_eq!(failures, 2);
+    }
+
+    #[test]
+    fn failed_reregistration_drops_the_stale_corpus() {
+        let (fb_tx, _fb_rx) = channel();
+        let runtime = RetrievalRuntime::start(fb_tx);
+        let (good, q) = spec(5, 3, 2);
+        let (cb, rx) = ack();
+        runtime.register(good, cb);
+        rx.recv().unwrap().unwrap();
+
+        // Re-register the same key with a corpus that fails to build:
+        // the caller sees the error AND the old corpus stops serving —
+        // a swap that failed must not silently keep the old data live.
+        let (mut bad, _) = spec(5, 3, 2);
+        bad.entries[4] = Histogram::uniform(3);
+        let (cb, rx) = ack();
+        runtime.register(bad, cb);
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(RetrievalError::DimensionMismatch { entry: 4, got: 3, want: 10 })
+        ));
+        let (cb, rx) = ack();
+        runtime.search(5, q, 2, Instant::now(), cb);
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(RuntimeError::UnknownCorpus(5))
+        ));
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs_before_joining() {
+        let (fb_tx, _fb_rx) = channel();
+        let runtime = RetrievalRuntime::start(fb_tx);
+        let (spec, q) = spec(0, 2, 1);
+        let (cb, reg_rx) = ack();
+        runtime.register(spec, cb);
+        let (cb, search_rx) = ack();
+        runtime.search(0, q, 3, Instant::now(), cb);
+        drop(runtime);
+        // Both promises were fulfilled during the drain.
+        assert_eq!(reg_rx.recv().unwrap().unwrap(), 18);
+        assert_eq!(search_rx.recv().unwrap().unwrap().hits.len(), 3);
+    }
+}

@@ -25,7 +25,7 @@ use crate::backend::{BackendKind, ShardedExecutor};
 use crate::simplex::Histogram;
 use crate::sinkhorn::{ScalingInit, SinkhornConfig, SinkhornOutput};
 use crate::F;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Refine/search knobs.
 #[derive(Debug, Clone, Copy)]
@@ -91,7 +91,9 @@ impl RetrievalConfig {
 /// One retrieved neighbor.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Hit {
-    /// Corpus entry index.
+    /// Stable corpus entry id (ingestion order for a standalone
+    /// service; the corpus-global id space under
+    /// [`super::ShardedCorpus`]). Ids survive tombstone/compact cycles.
     pub entry: usize,
     /// Served distance d_M^λ(query, entry).
     pub distance: F,
@@ -115,7 +117,8 @@ pub struct ProbeOutcome {
 /// What one query cost and what the cascade saved.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RetrievalReport {
-    /// Corpus size at query time.
+    /// Live corpus entries priced at query time (tombstoned slots are
+    /// invisible to the search).
     pub corpus: usize,
     /// Effective k (requested k clamped to the corpus size).
     pub k: usize,
@@ -146,8 +149,9 @@ pub struct RetrievalReport {
 }
 
 impl RetrievalReport {
-    /// An empty report for a corpus of `n` entries and effective `k`.
-    fn empty(corpus: usize, k: usize) -> Self {
+    /// An empty report for a corpus of `n` entries and effective `k`
+    /// (also the zero element of the sharded runtime's report merge).
+    pub(crate) fn empty(corpus: usize, k: usize) -> Self {
         Self {
             corpus,
             k,
@@ -202,12 +206,29 @@ impl PartialOrd for HeapItem {
 
 /// Pruned top-k retrieval over one corpus: the cascade prices, the
 /// executor refines.
+///
+/// Entries are addressed by *stable ids*: a standalone service numbers
+/// them `0..n` in ingestion order, while a shard inside
+/// [`super::ShardedCorpus`] speaks a disjoint slice of one global id
+/// space ([`Self::with_base`]). Ids survive [`Self::tombstone`] /
+/// [`Self::compact`] cycles — compaction renumbers internal index slots
+/// but never the ids results and mutations are keyed by.
 pub struct RetrievalService {
     index: CorpusIndex,
     cascade: BoundCascade,
     executor: ShardedExecutor,
     config: RetrievalConfig,
     queries: u64,
+    /// Caller-stable entry id per index slot.
+    globals: Vec<usize>,
+    /// Reverse map: stable id → index slot (tombstoned slots included
+    /// until compaction).
+    local_of: HashMap<usize, usize>,
+    /// Tombstone flag per index slot; tombstoned slots are skipped by
+    /// every search and reclaimed by [`Self::compact`].
+    tombstones: Vec<bool>,
+    /// Live (non-tombstoned) slot count.
+    live: usize,
 }
 
 impl RetrievalService {
@@ -215,6 +236,14 @@ impl RetrievalService {
     /// built from the config: `workers` private backend instances of
     /// the pinned kind, or the policy-aware auto route.
     pub fn new(index: CorpusIndex, config: RetrievalConfig) -> Self {
+        Self::with_base(index, config, 0)
+    }
+
+    /// Like [`Self::new`], but entry ids start at `base`: hits and the
+    /// mutation API speak ids `base..base + len`. The sharded runtime
+    /// uses this to give each shard a disjoint slice of one corpus-wide
+    /// id space, so per-shard top-k heaps merge without translation.
+    pub fn with_base(index: CorpusIndex, config: RetrievalConfig, base: usize) -> Self {
         let mut config = config;
         // Served distances carry convergence noise on the order of the
         // refine tolerance; a slack below it could prune a candidate
@@ -232,12 +261,116 @@ impl RetrievalService {
             }
             None => ShardedExecutor::auto(index.metric(), config.sinkhorn, workers),
         };
-        Self { index, cascade: BoundCascade::new(), executor, config, queries: 0 }
+        let n = index.len();
+        let globals: Vec<usize> = (base..base + n).collect();
+        let local_of = globals.iter().enumerate().map(|(l, &g)| (g, l)).collect();
+        Self {
+            index,
+            cascade: BoundCascade::new(),
+            executor,
+            config,
+            queries: 0,
+            globals,
+            local_of,
+            tombstones: vec![false; n],
+            live: n,
+        }
     }
 
     /// The indexed corpus.
     pub fn index(&self) -> &CorpusIndex {
         &self.index
+    }
+
+    /// Index slots, including tombstoned ones awaiting compaction.
+    pub fn len(&self) -> usize {
+        self.globals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.globals.is_empty()
+    }
+
+    /// Live (searchable) entries.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Fraction of index slots currently tombstoned.
+    pub fn tombstone_fraction(&self) -> f64 {
+        if self.globals.is_empty() {
+            return 0.0;
+        }
+        (self.globals.len() - self.live) as f64 / self.globals.len() as f64
+    }
+
+    /// Whether entry id `entry` is indexed and live.
+    pub fn contains(&self, entry: usize) -> bool {
+        self.local_of.get(&entry).is_some_and(|&l| !self.tombstones[l])
+    }
+
+    /// Append one histogram under the stable id `entry` (O(anchors·d):
+    /// per-entry statistics are independent, no other entry is touched).
+    /// The id must be fresh — reusing a live *or tombstoned* id would
+    /// alias warm-cache keys and merge bookkeeping, so it panics.
+    pub fn insert(&mut self, h: Histogram, entry: usize) -> Result<(), RetrievalError> {
+        assert!(
+            !self.local_of.contains_key(&entry),
+            "entry id {entry} is already indexed"
+        );
+        let local = self.index.push(h)?;
+        debug_assert_eq!(local, self.globals.len());
+        self.globals.push(entry);
+        self.local_of.insert(entry, local);
+        self.tombstones.push(false);
+        self.live += 1;
+        Ok(())
+    }
+
+    /// Tombstone entry id `entry`: it stops appearing in any search
+    /// immediately; its index slot is reclaimed by the next
+    /// [`Self::compact`]. Returns whether a live entry was hit.
+    pub fn tombstone(&mut self, entry: usize) -> bool {
+        match self.local_of.get(&entry) {
+            Some(&local) if !self.tombstones[local] => {
+                self.tombstones[local] = true;
+                self.live -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Rebuild the index over the live entries, dropping tombstoned
+    /// slots. Stable ids are preserved, and so is the warm cache (its
+    /// keys are the stable ids, not the renumbered slots). Returns
+    /// whether anything was reclaimed; a fully-tombstoned service keeps
+    /// its slots (an index cannot be empty) until an insert revives it.
+    pub fn compact(&mut self) -> bool {
+        if self.live == self.globals.len() || self.live == 0 {
+            return false;
+        }
+        let mut survivors = Vec::with_capacity(self.live);
+        let mut globals = Vec::with_capacity(self.live);
+        for (local, &global) in self.globals.iter().enumerate() {
+            if !self.tombstones[local] {
+                survivors.push(self.index.entry(local).clone());
+                globals.push(global);
+            }
+        }
+        let mut index = CorpusIndex::from_histograms(
+            self.index.metric(),
+            survivors,
+            self.index.anchors_requested(),
+        )
+        .expect("a non-empty survivor set of validated entries rebuilds");
+        index.adopt_warm(&mut self.index);
+        self.index = index;
+        self.local_of = globals.iter().enumerate().map(|(l, &g)| (g, l)).collect();
+        self.tombstones = vec![false; globals.len()];
+        self.live = globals.len();
+        self.globals = globals;
+        true
     }
 
     /// The active configuration.
@@ -274,21 +407,30 @@ impl RetrievalService {
             });
         }
         self.queries += 1;
-        let n = self.index.len();
+        // Candidates are the live slots; tombstoned ones are invisible.
+        let live: Vec<usize> =
+            (0..self.index.len()).filter(|&e| !self.tombstones[e]).collect();
+        let n = live.len();
         let k = k.min(n);
         let mut report = RetrievalReport::empty(n, k);
         if k == 0 {
             return Ok((Vec::new(), report));
         }
 
-        // Price every candidate and walk in ascending bound order.
+        // Price every candidate and walk in ascending bound order
+        // (positions index into `live`; ties break by stable id so the
+        // walk is identical under any slot renumbering).
         let prep = self.index.prepare(query);
-        let bounds: Vec<super::BoundValue> = (0..n)
-            .map(|e| self.cascade.evaluate(&self.index, &prep, query, e))
+        let bounds: Vec<super::BoundValue> = live
+            .iter()
+            .map(|&e| self.cascade.evaluate(&self.index, &prep, query, e))
             .collect();
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by(|&a, &b| {
-            bounds[a].value.total_cmp(&bounds[b].value).then(a.cmp(&b))
+            bounds[a]
+                .value
+                .total_cmp(&bounds[b].value)
+                .then(self.globals[live[a]].cmp(&self.globals[live[b]]))
         });
 
         let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
@@ -298,8 +440,9 @@ impl RetrievalService {
         let mut cursor = 0;
         while cursor < k {
             let take = (k - cursor).min(panel_width);
-            let batch = &order[cursor..cursor + take];
-            self.solve_into(query, batch, &mut heap, k, &mut report);
+            let batch: Vec<usize> =
+                order[cursor..cursor + take].iter().map(|&p| live[p]).collect();
+            self.solve_into(query, &batch, &mut heap, k, &mut report);
             cursor += take;
         }
         let mut tau = kth_best(&heap, k);
@@ -309,11 +452,11 @@ impl RetrievalService {
         let mut batch = Vec::with_capacity(panel_width);
         while cursor < n {
             let slack = self.config.bound_slack * (1.0 + tau.abs());
-            let e = order[cursor];
-            if bounds[e].value > tau + slack {
+            let p = order[cursor];
+            if bounds[p].value > tau + slack {
                 break;
             }
-            batch.push(e);
+            batch.push(live[p]);
             cursor += 1;
             if batch.len() == panel_width || cursor == n {
                 self.solve_into(query, &batch, &mut heap, k, &mut report);
@@ -325,9 +468,9 @@ impl RetrievalService {
             self.solve_into(query, &batch, &mut heap, k, &mut report);
             tau = kth_best(&heap, k);
         }
-        for &e in &order[cursor..] {
+        for &p in &order[cursor..] {
             report.pruned += 1;
-            match bounds[e].tier {
+            match bounds[p].tier {
                 BoundTier::Mass => report.pruned_mass += 1,
                 BoundTier::Centroid => report.pruned_centroid += 1,
                 BoundTier::Projection => report.pruned_projection += 1,
@@ -349,31 +492,7 @@ impl RetrievalService {
         if self.config.probe_every > 0 && self.queries % self.config.probe_every == 0
         {
             let brute = self.brute_force(query, k)?;
-            let brute_set: std::collections::HashSet<usize> =
-                brute.iter().map(|h| h.entry).collect();
-            let hit_set: std::collections::HashSet<usize> =
-                hits.iter().map(|h| h.entry).collect();
-            // Tie-aware matching, mirroring the exactness contract
-            // ("identical modulo ties", see [`super::topk_equivalent`]):
-            // a pruned-only hit also counts as confirmed when it ties —
-            // within the same slack that guards pruning — with a
-            // *brute-force-only* hit, so a k-th/(k+1)-th tie flipping
-            // between the two walks is not flagged as a recall miss,
-            // while a genuinely wrong entry (whose distance merely
-            // resembles some shared neighbor's) still is.
-            let matched = hits
-                .iter()
-                .filter(|h| {
-                    brute_set.contains(&h.entry)
-                        || brute.iter().any(|b| {
-                            !hit_set.contains(&b.entry)
-                                && (b.distance - h.distance).abs()
-                                    <= self.config.bound_slack
-                                        * (1.0 + b.distance.abs())
-                        })
-                })
-                .count();
-            report.probe = Some(ProbeOutcome { matched, k: hits.len() });
+            report.probe = Some(probe_outcome(&hits, &brute, self.config.bound_slack));
         }
         Ok((hits, report))
     }
@@ -391,7 +510,9 @@ impl RetrievalService {
                 want: self.index.dim(),
             });
         }
-        let n = self.index.len();
+        let live: Vec<usize> =
+            (0..self.index.len()).filter(|&e| !self.tombstones[e]).collect();
+        let n = live.len();
         let k = k.min(n);
         if k == 0 {
             return Ok(Vec::new());
@@ -399,8 +520,7 @@ impl RetrievalService {
         let mut report = RetrievalReport::empty(n, k);
         let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
         let panel_width = self.panel_width();
-        let all: Vec<usize> = (0..n).collect();
-        for batch in all.chunks(panel_width) {
+        for batch in live.chunks(panel_width) {
             self.solve_into(query, batch, &mut heap, k, &mut report);
         }
         let mut hits: Vec<Hit> = heap
@@ -430,8 +550,16 @@ impl RetrievalService {
             return;
         }
         let lambda = self.config.sinkhorn.lambda;
+        // Warm keys are the *stable ids*, not the index slots: cached
+        // scalings stay valid across compaction renumbering.
         let inits: Vec<Option<ScalingInit>> = if self.config.warm_start {
-            entries.iter().map(|&e| self.index.warm_init(lambda, e)).collect()
+            entries
+                .iter()
+                .map(|&e| {
+                    let global = self.globals[e];
+                    self.index.warm_init(lambda, global)
+                })
+                .collect()
         } else {
             vec![None; entries.len()]
         };
@@ -472,18 +600,46 @@ impl RetrievalService {
         if rescued {
             report.rescued += 1;
         }
+        let global = self.globals[entry];
         if self.config.warm_start {
-            self.index.warm_deposit(lambda, entry, out);
+            self.index.warm_deposit(lambda, global, out);
         }
         if !out.value.is_finite() {
             report.failed += 1;
             return;
         }
-        heap.push(HeapItem { distance: out.value, entry, rescued });
+        heap.push(HeapItem { distance: out.value, entry: global, rescued });
         if heap.len() > k {
             heap.pop();
         }
     }
+}
+
+/// Tie-aware probe scoring, mirroring the exactness contract
+/// ("identical modulo ties", see [`super::topk_equivalent`]): a
+/// pruned-only hit also counts as confirmed when it ties — within the
+/// same slack that guards pruning — with a *brute-force-only* hit, so a
+/// k-th/(k+1)-th tie flipping between the two walks is not flagged as a
+/// recall miss, while a genuinely wrong entry (whose distance merely
+/// resembles some shared neighbor's) still is. Shared by the standalone
+/// service and the sharded runtime's merged-view probes.
+pub(crate) fn probe_outcome(hits: &[Hit], brute: &[Hit], slack: F) -> ProbeOutcome {
+    let brute_set: std::collections::HashSet<usize> =
+        brute.iter().map(|h| h.entry).collect();
+    let hit_set: std::collections::HashSet<usize> =
+        hits.iter().map(|h| h.entry).collect();
+    let matched = hits
+        .iter()
+        .filter(|h| {
+            brute_set.contains(&h.entry)
+                || brute.iter().any(|b| {
+                    !hit_set.contains(&b.entry)
+                        && (b.distance - h.distance).abs()
+                            <= slack * (1.0 + b.distance.abs())
+                })
+        })
+        .count();
+    ProbeOutcome { matched, k: hits.len() }
 }
 
 /// The current k-th best served distance (∞ until the heap fills).
@@ -620,6 +776,103 @@ mod tests {
             "slack {} must be floored at 10x the tolerance",
             svc.config().bound_slack
         );
+    }
+
+    #[test]
+    fn mutation_cycle_keeps_search_exact_and_ids_stable() {
+        let mut svc = service(10, 20, 7, 9.0);
+        let mut rng = seeded_rng(107);
+        let q = Histogram::sample_uniform(10, &mut rng);
+
+        // Insert a duplicate of the query under a fresh id: it must be
+        // searchable immediately (per-entry stats are independent).
+        svc.insert(q.clone(), 20).unwrap();
+        assert_eq!((svc.len(), svc.live()), (21, 21));
+        assert!(svc.contains(20));
+        let (hits, _) = svc.top_k(&q, 3).unwrap();
+        assert!(
+            hits.iter().any(|h| h.entry == 20),
+            "an exact duplicate of the query must reach the top-3: {hits:?}"
+        );
+
+        // Tombstone it: gone from the very next search, id never reused.
+        assert!(svc.tombstone(20));
+        assert!(!svc.tombstone(20), "double tombstone is a no-op");
+        assert!(!svc.contains(20));
+        assert_eq!((svc.len(), svc.live()), (21, 20));
+        assert!((svc.tombstone_fraction() - 1.0 / 21.0).abs() < 1e-12);
+        let (hits, report) = svc.top_k(&q, 3).unwrap();
+        assert!(hits.iter().all(|h| h.entry != 20));
+        assert_eq!(report.corpus, 20, "tombstoned slots are not candidates");
+
+        // Tombstone a live original entry too, then compact: results
+        // must be identical before and after (ids are stable, only the
+        // internal slots renumber), and the brute oracle agrees.
+        assert!(svc.tombstone(3));
+        let (before, _) = svc.top_k(&q, 5).unwrap();
+        assert!(svc.compact());
+        assert!(!svc.compact(), "nothing left to reclaim");
+        assert_eq!((svc.len(), svc.live()), (19, 19));
+        let (after, _) = svc.top_k(&q, 5).unwrap();
+        if let Err(v) = super::super::topk_equivalent(&after, &before, 1e-7) {
+            panic!("compaction changed the answer: {v}");
+        }
+        let brute = svc.brute_force(&q, 5).unwrap();
+        if let Err(v) = super::super::topk_equivalent(&after, &brute, 1e-7) {
+            panic!("post-compaction pruning diverged from brute force: {v}");
+        }
+        assert!(brute.iter().all(|h| h.entry != 3 && h.entry != 20));
+
+        // The warm cache survives compaction: ids, not slots, key it.
+        let (_, warm) = svc.top_k(&q, 5).unwrap();
+        assert!(warm.warm_seeded > 0, "repeat query must hit the entry cache");
+
+        // Tombstoning an unknown id is a no-op; a duplicate insert id
+        // panics (defended in ShardedCorpus by monotone id assignment).
+        assert!(!svc.tombstone(999));
+    }
+
+    #[test]
+    fn fully_tombstoned_service_serves_empty_results() {
+        let mut svc = service(8, 3, 8, 9.0);
+        for e in 0..3 {
+            assert!(svc.tombstone(e));
+        }
+        assert_eq!(svc.live(), 0);
+        let mut rng = seeded_rng(108);
+        let q = Histogram::sample_uniform(8, &mut rng);
+        let (hits, report) = svc.top_k(&q, 2).unwrap();
+        assert!(hits.is_empty());
+        assert_eq!((report.corpus, report.k, report.solved), (0, 0, 0));
+        assert!(svc.brute_force(&q, 2).unwrap().is_empty());
+        // Compacting to empty is refused (an index cannot be empty);
+        // an insert under a fresh id revives the shard (tombstoned ids
+        // stay reserved — reusing one would alias warm-cache keys).
+        assert!(!svc.compact());
+        svc.insert(q.clone(), 7).unwrap();
+        let (hits, _) = svc.top_k(&q, 2).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].entry, 7);
+    }
+
+    #[test]
+    fn with_base_offsets_every_reported_id() {
+        let mut rng = seeded_rng(109);
+        let m = crate::metric::RandomMetric::new(8).sample(&mut rng);
+        let entries: Vec<Histogram> =
+            (0..6).map(|_| Histogram::sample_uniform(8, &mut rng)).collect();
+        let index = CorpusIndex::from_histograms(&m, entries, 2).unwrap();
+        let mut config = RetrievalConfig::serving(9.0);
+        config.workers = 1;
+        let mut svc = RetrievalService::with_base(index, config, 100);
+        let q = Histogram::sample_uniform(8, &mut rng);
+        let (hits, _) = svc.top_k(&q, 6).unwrap();
+        assert_eq!(hits.len(), 6);
+        let mut ids: Vec<usize> = hits.iter().map(|h| h.entry).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (100..106).collect::<Vec<_>>());
+        assert!(svc.contains(100) && !svc.contains(0));
+        assert!(svc.tombstone(101));
     }
 
     #[test]

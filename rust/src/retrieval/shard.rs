@@ -1,0 +1,750 @@
+//! Partitioned corpus shards and their associative top-k merge.
+//!
+//! A 10M-entry corpus does not fit one index, one refine executor or one
+//! machine — Peyré & Cuturi frame large-scale OT retrieval as a
+//! partition-and-merge problem, and this module is that partition:
+//!
+//! * [`CorpusShard`] — one contiguous slice of the corpus, owning its
+//!   own per-entry statistics (anchor CDF tables, centroid coordinates),
+//!   its own per-entry warm-start cache and its own
+//!   [`crate::backend::ShardedExecutor`] refine pool. Per-entry
+//!   statistics are functions of the metric and that entry alone, so a
+//!   shard is fully self-contained: inserts touch exactly one shard and
+//!   compactions rebuild one shard without a global pause.
+//! * [`ShardedCorpus`] — the partition-and-merge layer: it fans a query
+//!   out (the cascade walk *and* the refine panels run per shard, at
+//!   most [`ShardingConfig::threads`] shards concurrently), then merges
+//!   the per-shard top-k max-heaps by `(distance, entry id)`. The merge
+//!   is **associative and commutative**: each shard's pruned top-k
+//!   equals its own brute-force top-k (the per-shard τ is at least the
+//!   global τ, so per-shard pruning is strictly conservative), and
+//!   sorted-merge-truncate of per-shard heaps is order-independent —
+//!   which is exactly the property a future cross-machine placement
+//!   needs, since remote shards will answer in arbitrary order.
+//!
+//! Entry ids are corpus-global and stable: shard s of an n-entry corpus
+//! starts with the id slice `ranges[s]`, inserts draw fresh monotone ids
+//! from the corpus counter, and tombstone/compact never renumber ids
+//! (only internal slots). Shard-count invariance — the merged pruned
+//! top-k over 1, 2, 3 or 7 shards is equivalent (tie-aware) to the
+//! monolithic brute force, before and after mutation cycles — is locked
+//! down by `rust/tests/retrieval_sharded.rs`.
+
+use super::search::probe_outcome;
+use super::{
+    CorpusIndex, Hit, RetrievalConfig, RetrievalError, RetrievalReport,
+    RetrievalService,
+};
+use crate::backend::shard_ranges;
+use crate::metric::CostMatrix;
+use crate::simplex::Histogram;
+use crate::F;
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+/// How a corpus is partitioned and how much parallelism one search may
+/// use.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardingConfig {
+    /// Corpus shards (clamped to `[1, entries]` at build).
+    pub shards: usize,
+    /// Shards walked concurrently per query (0 = available
+    /// parallelism; clamped to the shard count and to the refine worker
+    /// budget). Each concurrent shard drives its own refine executor,
+    /// so the per-shard refine worker count is the configured worker
+    /// budget divided by this — the product never exceeds the budget.
+    pub threads: usize,
+    /// Tombstone fraction at which a shard compacts itself
+    /// automatically after a tombstone lands.
+    pub compact_threshold: f64,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        Self { shards: 1, threads: 0, compact_threshold: 0.25 }
+    }
+}
+
+/// Point-in-time observability for one shard (surfaced through the
+/// coordinator's `StatsSnapshot`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardGauges {
+    /// Shard index within its corpus.
+    pub shard: usize,
+    /// Index slots, including tombstoned ones awaiting compaction.
+    pub entries: usize,
+    /// Live (searchable) entries.
+    pub live: usize,
+    /// Fraction of slots tombstoned.
+    pub tombstone_fraction: f64,
+    /// Compaction rebuilds performed (threshold-triggered + explicit).
+    pub compactions: u64,
+    /// Entries inserted after the initial build.
+    pub inserts: u64,
+    /// Searches this shard served.
+    pub searches: u64,
+    /// Walltime of this shard's most recent search, µs.
+    pub last_search_us: u64,
+}
+
+/// One self-contained corpus partition: index + bounds + warm cache +
+/// refine executor, with shard-local mutation counters.
+pub struct CorpusShard {
+    id: usize,
+    service: RetrievalService,
+    compactions: u64,
+    inserts: u64,
+    searches: u64,
+    last_search_us: u64,
+}
+
+impl CorpusShard {
+    fn new(id: usize, index: CorpusIndex, config: RetrievalConfig, base: usize) -> Self {
+        Self {
+            id,
+            service: RetrievalService::with_base(index, config, base),
+            compactions: 0,
+            inserts: 0,
+            searches: 0,
+            last_search_us: 0,
+        }
+    }
+
+    /// Shard index within its corpus.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Live (searchable) entries.
+    pub fn live(&self) -> usize {
+        self.service.live()
+    }
+
+    /// Index slots, including tombstoned ones.
+    pub fn len(&self) -> usize {
+        self.service.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.service.is_empty()
+    }
+
+    /// Fraction of slots currently tombstoned.
+    pub fn tombstone_fraction(&self) -> f64 {
+        self.service.tombstone_fraction()
+    }
+
+    /// Whether this shard holds entry id `entry` live.
+    pub fn contains(&self, entry: usize) -> bool {
+        self.service.contains(entry)
+    }
+
+    /// Shard-local gauges.
+    pub fn gauges(&self) -> ShardGauges {
+        ShardGauges {
+            shard: self.id,
+            entries: self.len(),
+            live: self.live(),
+            tombstone_fraction: self.tombstone_fraction(),
+            compactions: self.compactions,
+            inserts: self.inserts,
+            searches: self.searches,
+            last_search_us: self.last_search_us,
+        }
+    }
+
+    fn search(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<(Vec<Hit>, RetrievalReport), RetrievalError> {
+        let t0 = Instant::now();
+        let out = self.service.top_k(query, k);
+        self.searches += 1;
+        self.last_search_us =
+            t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        out
+    }
+
+    fn brute(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<Vec<Hit>, RetrievalError> {
+        self.service.brute_force(query, k)
+    }
+
+    fn insert(&mut self, h: Histogram, entry: usize) -> Result<(), RetrievalError> {
+        self.service.insert(h, entry)?;
+        self.inserts += 1;
+        Ok(())
+    }
+
+    fn tombstone(&mut self, entry: usize) -> bool {
+        self.service.tombstone(entry)
+    }
+
+    fn compact(&mut self) -> bool {
+        let did = self.service.compact();
+        if did {
+            self.compactions += 1;
+        }
+        did
+    }
+}
+
+/// The partition-and-merge layer: a corpus split into [`CorpusShard`]s
+/// with a single global entry-id space, merged top-k search, merged
+/// recall probes and an incremental mutation API.
+pub struct ShardedCorpus {
+    shards: Vec<CorpusShard>,
+    /// Contiguous id ranges of the initial build (shard s owns
+    /// `build_ranges[s]`): ownership of a build-time id is recovered by
+    /// binary search instead of a per-entry map — at the 10M-entry
+    /// target a materialized id→shard table would cost hundreds of MB
+    /// for information the partition already encodes.
+    build_ranges: Vec<std::ops::Range<usize>>,
+    /// Ids at or past this are post-build inserts.
+    initial_total: usize,
+    /// Post-build inserts: fresh id → owning shard (only these need
+    /// dynamic tracking).
+    inserted: HashMap<usize, usize>,
+    /// Tombstoned build-time ids (tombstoned inserts just leave
+    /// `inserted`).
+    dead: HashSet<usize>,
+    /// Next fresh entry id (monotone; ids are never reused).
+    next_entry: usize,
+    /// Shards walked concurrently per query (resolved, ≥ 1).
+    threads: usize,
+    compact_threshold: f64,
+    /// Merged-view recall probing: every N-th search re-runs brute
+    /// force across all shards and compares (0 = never).
+    probe_every: u64,
+    /// Effective (floored) pruning slack, shared with the probes.
+    bound_slack: F,
+    queries: u64,
+    dim: usize,
+}
+
+impl ShardedCorpus {
+    /// Partition `entries` into contiguous shards and build each one.
+    /// Shard s of the initial corpus owns the entry ids of its range;
+    /// later inserts draw fresh ids from the corpus-wide counter.
+    ///
+    /// The per-shard refine worker budget is `config.workers` (0 =
+    /// available parallelism) divided by the number of concurrently
+    /// searched shards, so a sharded search does not oversubscribe the
+    /// machine relative to the monolithic one.
+    pub fn new(
+        metric: &CostMatrix,
+        entries: Vec<Histogram>,
+        anchors: usize,
+        config: RetrievalConfig,
+        sharding: ShardingConfig,
+    ) -> Result<Self, RetrievalError> {
+        if entries.is_empty() {
+            return Err(RetrievalError::EmptyCorpus);
+        }
+        let n = entries.len();
+        let shards = sharding.shards.clamp(1, n);
+        let available = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        let workers =
+            if config.workers == 0 { available } else { config.workers }.max(1);
+        // Concurrency never exceeds the refine worker budget: with
+        // threads > workers the division below would floor every shard
+        // at one worker and run `threads` of them — more solver threads
+        // than the budget, violating the no-oversubscription sizing.
+        let threads = if sharding.threads == 0 {
+            available
+        } else {
+            sharding.threads
+        }
+        .clamp(1, shards)
+        .min(workers);
+        let mut shard_config = config;
+        shard_config.workers = (workers / threads).max(1);
+        // Probes are orchestrated here against the *merged* view; a
+        // per-shard probe would brute-force one partition and audit
+        // nothing about the merge.
+        shard_config.probe_every = 0;
+
+        let ranges = shard_ranges(n, shards);
+        let mut built = Vec::with_capacity(shards);
+        let mut iter = entries.into_iter();
+        for (sid, range) in ranges.iter().enumerate() {
+            let chunk: Vec<Histogram> = iter.by_ref().take(range.len()).collect();
+            let index = CorpusIndex::from_histograms(metric, chunk, anchors)
+                .map_err(|e| offset_entry_error(e, range.start))?;
+            built.push(CorpusShard::new(sid, index, shard_config, range.start));
+        }
+        let bound_slack = built[0].service.config().bound_slack;
+        Ok(Self {
+            shards: built,
+            build_ranges: ranges,
+            initial_total: n,
+            inserted: HashMap::new(),
+            dead: HashSet::new(),
+            next_entry: n,
+            threads,
+            compact_threshold: sharding.compact_threshold,
+            probe_every: config.probe_every,
+            bound_slack,
+            queries: 0,
+            dim: metric.dim(),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Index slots across all shards (including tombstoned ones).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// Live (searchable) entries across all shards.
+    pub fn live(&self) -> usize {
+        self.shards.iter().map(|s| s.live()).sum()
+    }
+
+    /// The shard owning live entry id `entry` (None when unknown or
+    /// tombstoned): post-build inserts resolve through the dynamic map,
+    /// build-time ids by binary search over the contiguous ranges.
+    fn owner_of(&self, entry: usize) -> Option<usize> {
+        if entry >= self.initial_total {
+            return self.inserted.get(&entry).copied();
+        }
+        if self.dead.contains(&entry) {
+            return None;
+        }
+        let sid = self.build_ranges.partition_point(|r| r.end <= entry);
+        (sid < self.build_ranges.len() && self.build_ranges[sid].contains(&entry))
+            .then_some(sid)
+    }
+
+    /// Whether entry id `entry` is indexed and live.
+    pub fn contains(&self, entry: usize) -> bool {
+        self.owner_of(entry).is_some()
+    }
+
+    /// Per-shard gauges, in shard order.
+    pub fn gauges(&self) -> Vec<ShardGauges> {
+        self.shards.iter().map(|s| s.gauges()).collect()
+    }
+
+    /// Merged pruned top-k: every shard runs its own cascade walk +
+    /// refine (at most [`ShardingConfig::threads`] concurrently), and
+    /// the per-shard heaps merge by `(distance, entry id)`. Equivalent
+    /// to the monolithic search modulo ties; hits come back in
+    /// ascending canonical order.
+    pub fn search(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<(Vec<Hit>, RetrievalReport), RetrievalError> {
+        if query.dim() != self.dim {
+            return Err(RetrievalError::QueryDimensionMismatch {
+                got: query.dim(),
+                want: self.dim,
+            });
+        }
+        self.queries += 1;
+        let per_shard = self.run(&|shard| shard.search(query, k))?;
+        let (hits, mut report) = merge_results(per_shard, k);
+        if self.probe_every > 0 && self.queries % self.probe_every == 0 {
+            let brute = self.brute_force_merged(query, k)?;
+            report.probe = Some(probe_outcome(&hits, &brute, self.bound_slack));
+        }
+        Ok((hits, report))
+    }
+
+    /// Merged brute force: every shard solves every live entry, heaps
+    /// merged — the multi-shard oracle the pruned search (and every
+    /// recall probe) is held to.
+    pub fn brute_force(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<Vec<Hit>, RetrievalError> {
+        if query.dim() != self.dim {
+            return Err(RetrievalError::QueryDimensionMismatch {
+                got: query.dim(),
+                want: self.dim,
+            });
+        }
+        self.brute_force_merged(query, k)
+    }
+
+    fn brute_force_merged(
+        &mut self,
+        query: &Histogram,
+        k: usize,
+    ) -> Result<Vec<Hit>, RetrievalError> {
+        let per_shard = self.run(&|shard| shard.brute(query, k))?;
+        let mut hits: Vec<Hit> = per_shard.into_iter().flatten().collect();
+        sort_canonical(&mut hits);
+        let live = self.live();
+        hits.truncate(k.min(live));
+        Ok(hits)
+    }
+
+    /// Append one histogram; returns its fresh corpus-global entry id.
+    /// Routed to the emptiest shard (ties to the lowest shard index):
+    /// per-entry statistics are shard-local, so the insert touches
+    /// exactly that shard, and least-loaded routing keeps the partition
+    /// balanced as the corpus grows.
+    pub fn insert(&mut self, h: Histogram) -> Result<usize, RetrievalError> {
+        let sid = self
+            .shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.live(), *i))
+            .map(|(i, _)| i)
+            .expect("a sharded corpus always has at least one shard");
+        let entry = self.next_entry;
+        // Rejections speak the would-be global id, like every other
+        // error from this API (the shard reports its local slot, which
+        // aliases an unrelated live entry's id).
+        self.shards[sid].insert(h, entry).map_err(|e| match e {
+            RetrievalError::DimensionMismatch { got, want, .. } => {
+                RetrievalError::DimensionMismatch { entry, got, want }
+            }
+            other => other,
+        })?;
+        self.next_entry += 1;
+        self.inserted.insert(entry, sid);
+        Ok(entry)
+    }
+
+    /// Tombstone entry id `entry`. Returns whether a live entry was
+    /// hit. When the owning shard's tombstone fraction reaches
+    /// [`ShardingConfig::compact_threshold`] it compacts itself — one
+    /// shard rebuilds, the others keep serving untouched.
+    pub fn tombstone(&mut self, entry: usize) -> bool {
+        let Some(sid) = self.owner_of(entry) else {
+            return false;
+        };
+        let hit = self.shards[sid].tombstone(entry);
+        if hit {
+            if entry >= self.initial_total {
+                self.inserted.remove(&entry);
+            } else {
+                self.dead.insert(entry);
+            }
+            if self.shards[sid].tombstone_fraction() >= self.compact_threshold {
+                self.shards[sid].compact();
+            }
+        }
+        hit
+    }
+
+    /// Explicitly compact every shard holding tombstones; returns how
+    /// many shards rebuilt.
+    pub fn compact(&mut self) -> usize {
+        self.shards.iter_mut().map(|s| usize::from(s.compact())).sum()
+    }
+
+    /// Run `f` over every shard, at most `self.threads` concurrently,
+    /// returning the outcomes in shard order. Execution order is
+    /// irrelevant by design: the callers merge associatively.
+    fn run<T, F2>(&mut self, f: &F2) -> Result<Vec<T>, RetrievalError>
+    where
+        T: Send,
+        F2: Fn(&mut CorpusShard) -> Result<T, RetrievalError> + Sync,
+    {
+        let conc = self.threads.min(self.shards.len()).max(1);
+        if conc <= 1 || self.shards.len() <= 1 {
+            return self.shards.iter_mut().map(f).collect();
+        }
+        // Exactly `conc` contiguous near-equal shard groups (the same
+        // `shard_ranges` split the partition itself uses — a ceil-sized
+        // chunking could produce fewer groups than `conc` and leave
+        // part of the divided refine worker budget idle), one scoped
+        // worker each: spawn cost is orders of magnitude below a shard
+        // walk at serving sizes.
+        let ranges = shard_ranges(self.shards.len(), conc);
+        let groups: Vec<Result<Vec<T>, RetrievalError>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(conc);
+                let mut rest: &mut [CorpusShard] = &mut self.shards;
+                for range in &ranges {
+                    let (group, tail) = rest.split_at_mut(range.len());
+                    rest = tail;
+                    handles.push(scope.spawn(move || {
+                        group.iter_mut().map(f).collect::<Result<Vec<T>, _>>()
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            });
+        let mut out = Vec::with_capacity(self.shards.len());
+        for group in groups {
+            out.extend(group?);
+        }
+        Ok(out)
+    }
+}
+
+/// Ascending `(distance, entry)` — the canonical result order shared
+/// with the per-shard heaps, so merge output is deterministic.
+fn sort_canonical(hits: &mut [Hit]) {
+    hits.sort_by(|a, b| {
+        a.distance.total_cmp(&b.distance).then(a.entry.cmp(&b.entry))
+    });
+}
+
+/// Merge per-shard `(hits, report)` pairs: concatenate + canonical sort
+/// + truncate for the hits (associative, order-independent), field-wise
+/// sums for the report. The merged threshold is the k-th best merged
+/// distance — the value a global single-heap walk would have ended at.
+fn merge_results(
+    per_shard: Vec<(Vec<Hit>, RetrievalReport)>,
+    k: usize,
+) -> (Vec<Hit>, RetrievalReport) {
+    let mut hits: Vec<Hit> = Vec::new();
+    let mut corpus = 0;
+    let mut merged = RetrievalReport::empty(0, 0);
+    for (shard_hits, r) in per_shard {
+        hits.extend(shard_hits);
+        corpus += r.corpus;
+        merged.solved += r.solved;
+        merged.pruned += r.pruned;
+        merged.panels += r.panels;
+        merged.rescued += r.rescued;
+        merged.failed += r.failed;
+        merged.warm_seeded += r.warm_seeded;
+        merged.iterations += r.iterations;
+        merged.pruned_mass += r.pruned_mass;
+        merged.pruned_centroid += r.pruned_centroid;
+        merged.pruned_projection += r.pruned_projection;
+    }
+    sort_canonical(&mut hits);
+    let k = k.min(corpus);
+    hits.truncate(k);
+    merged.corpus = corpus;
+    merged.k = k;
+    merged.threshold =
+        hits.last().map(|h| h.distance).unwrap_or(F::INFINITY);
+    (hits, merged)
+}
+
+/// Shift the entry index of a build error from shard-local to
+/// corpus-global coordinates.
+fn offset_entry_error(e: RetrievalError, base: usize) -> RetrievalError {
+    match e {
+        RetrievalError::DimensionMismatch { entry, got, want } => {
+            RetrievalError::DimensionMismatch { entry: entry + base, got, want }
+        }
+        RetrievalError::BadEntry { entry, source } => {
+            RetrievalError::BadEntry { entry: entry + base, source }
+        }
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::RandomMetric;
+    use crate::simplex::seeded_rng;
+
+    fn config(lambda: F) -> RetrievalConfig {
+        let mut config = RetrievalConfig::serving(lambda);
+        config.workers = 2;
+        config
+    }
+
+    fn corpus(d: usize, n: usize, seed: u64) -> (CostMatrix, Vec<Histogram>) {
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let entries =
+            (0..n).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        (m, entries)
+    }
+
+    fn sharded(
+        d: usize,
+        n: usize,
+        seed: u64,
+        shards: usize,
+    ) -> (ShardedCorpus, CostMatrix, Vec<Histogram>) {
+        let (m, entries) = corpus(d, n, seed);
+        let sharding = ShardingConfig { shards, threads: 2, ..Default::default() };
+        let sc = ShardedCorpus::new(&m, entries.clone(), 4, config(9.0), sharding)
+            .unwrap();
+        (sc, m, entries)
+    }
+
+    #[test]
+    fn partitions_contiguously_and_merges_like_the_monolith() {
+        let (mut sc, m, entries) = sharded(10, 23, 0, 3);
+        assert_eq!(sc.shard_count(), 3);
+        assert_eq!(sc.len(), 23);
+        assert_eq!(sc.live(), 23);
+        // 23 over 3 shards: 8 + 8 + 7, contiguous id ranges.
+        let sizes: Vec<usize> = sc.gauges().iter().map(|g| g.live).collect();
+        assert_eq!(sizes, vec![8, 8, 7]);
+        assert!(sc.contains(0) && sc.contains(22) && !sc.contains(23));
+
+        let mut rng = seeded_rng(100);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let index = CorpusIndex::from_histograms(&m, entries, 4).unwrap();
+        let mut mono = RetrievalService::new(index, config(9.0));
+        let brute = mono.brute_force(&q, 6).unwrap();
+        let (hits, report) = sc.search(&q, 6).unwrap();
+        assert_eq!(report.solved + report.pruned, 23);
+        if let Err(v) = super::super::topk_equivalent(&hits, &brute, 1e-7) {
+            panic!("sharded merge diverged from the monolith: {v}");
+        }
+        let sharded_brute = sc.brute_force(&q, 6).unwrap();
+        if let Err(v) = super::super::topk_equivalent(&sharded_brute, &brute, 1e-7) {
+            panic!("merged brute force diverged from the monolith: {v}");
+        }
+        // Gauges recorded the pruned walk (brute-force oracle passes are
+        // not counted as searches).
+        let gauges = sc.gauges();
+        assert!(gauges.iter().all(|g| g.searches == 1), "{gauges:?}");
+        assert!(gauges.iter().all(|g| g.last_search_us > 0 || g.searches == 0));
+    }
+
+    #[test]
+    fn shard_count_clamps_and_degenerates() {
+        let (m, entries) = corpus(8, 4, 1);
+        let sharding = ShardingConfig { shards: 9, threads: 3, ..Default::default() };
+        let mut sc =
+            ShardedCorpus::new(&m, entries, 2, config(9.0), sharding).unwrap();
+        assert_eq!(sc.shard_count(), 4, "shards clamp to the corpus size");
+        let mut rng = seeded_rng(101);
+        let q = Histogram::sample_uniform(8, &mut rng);
+        let (hits, _) = sc.search(&q, 10).unwrap();
+        assert_eq!(hits.len(), 4);
+        // Dimension mismatches error at the merged entry points.
+        let bad = Histogram::uniform(5);
+        assert!(matches!(
+            sc.search(&bad, 1),
+            Err(RetrievalError::QueryDimensionMismatch { got: 5, want: 8 })
+        ));
+        assert!(sc.brute_force(&bad, 1).is_err());
+        // Empty corpora are rejected, mismatched entries are reported in
+        // global coordinates.
+        assert!(matches!(
+            ShardedCorpus::new(&m, Vec::new(), 2, config(9.0), ShardingConfig::default()),
+            Err(RetrievalError::EmptyCorpus)
+        ));
+        let (m2, mut entries2) = corpus(8, 6, 2);
+        entries2[4] = Histogram::uniform(3);
+        let err = ShardedCorpus::new(
+            &m2,
+            entries2,
+            2,
+            config(9.0),
+            ShardingConfig { shards: 3, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(matches!(
+            err,
+            RetrievalError::DimensionMismatch { entry: 4, got: 3, want: 8 }
+        ));
+    }
+
+    #[test]
+    fn inserts_route_to_the_emptiest_shard_with_fresh_ids() {
+        let (mut sc, _m, _entries) = sharded(8, 7, 3, 3);
+        // Partition is 3 + 2 + 2: the first insert goes to shard 1 (the
+        // lowest-index emptiest), the next to shard 2, and the third to
+        // shard 0 (a three-way tie breaks to the lowest index).
+        let mut rng = seeded_rng(102);
+        let a = sc.insert(Histogram::sample_uniform(8, &mut rng)).unwrap();
+        let b = sc.insert(Histogram::sample_uniform(8, &mut rng)).unwrap();
+        let c = sc.insert(Histogram::sample_uniform(8, &mut rng)).unwrap();
+        assert_eq!((a, b, c), (7, 8, 9), "ids are monotone corpus-global");
+        let gauges = sc.gauges();
+        assert_eq!(
+            gauges.iter().map(|g| g.live).collect::<Vec<_>>(),
+            vec![4, 3, 3],
+            "least-loaded routing balances the partition: {gauges:?}"
+        );
+        assert_eq!(gauges.iter().map(|g| g.inserts).sum::<u64>(), 3);
+        assert_eq!(sc.live(), 10);
+        assert!(sc.contains(a) && sc.contains(b) && sc.contains(c));
+    }
+
+    #[test]
+    fn tombstones_trigger_threshold_compaction_per_shard() {
+        let (mut sc, _m, _entries) = sharded(8, 12, 4, 3);
+        // Shard 0 owns ids 0..4. Tombstone one: 25% reaches the default
+        // threshold, so the shard compacts itself; the others are
+        // untouched.
+        assert!(sc.tombstone(0));
+        assert!(!sc.tombstone(0), "tombstoned ids stay dead");
+        assert!(!sc.tombstone(99), "unknown ids are a no-op");
+        let gauges = sc.gauges();
+        assert_eq!(gauges[0].compactions, 1, "threshold compaction fired");
+        assert_eq!(gauges[0].entries, 3, "slot reclaimed");
+        assert_eq!(gauges[0].tombstone_fraction, 0.0);
+        assert_eq!(gauges[1].compactions + gauges[2].compactions, 0);
+        assert_eq!(sc.live(), 11);
+        // A below-threshold tombstone waits for the explicit sweep.
+        let mut lazy = ShardingConfig { shards: 2, ..Default::default() };
+        lazy.compact_threshold = 0.9;
+        let (m, entries) = corpus(8, 12, 5);
+        let mut sc2 =
+            ShardedCorpus::new(&m, entries, 2, config(9.0), lazy).unwrap();
+        assert!(sc2.tombstone(1));
+        assert_eq!(sc2.gauges()[0].compactions, 0);
+        assert_eq!(sc2.compact(), 1, "exactly the dirty shard rebuilds");
+        assert_eq!(sc2.compact(), 0);
+        assert_eq!(sc2.gauges()[0].compactions, 1);
+    }
+
+    #[test]
+    fn merged_probe_audits_the_multi_shard_view() {
+        let (m, entries) = corpus(10, 18, 6);
+        let mut cfg = config(9.0);
+        cfg.probe_every = 2;
+        let sharding = ShardingConfig { shards: 3, threads: 2, ..Default::default() };
+        let mut sc = ShardedCorpus::new(&m, entries, 4, cfg, sharding).unwrap();
+        let mut rng = seeded_rng(103);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (_, first) = sc.search(&q, 4).unwrap();
+        assert!(first.probe.is_none(), "first query is not probed");
+        let (_, second) = sc.search(&q, 4).unwrap();
+        let probe = second.probe.expect("second query must probe");
+        assert_eq!(probe.k, 4, "probe compares the merged k, not one shard's");
+        assert_eq!(probe.matched, probe.k, "merged pruning must be exact");
+    }
+
+    #[test]
+    fn mutation_cycle_preserves_merge_exactness() {
+        let (mut sc, _m, _entries) = sharded(10, 20, 7, 3);
+        let mut rng = seeded_rng(104);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        // Insert a duplicate of the query: it must win the merged top-1.
+        let dup = sc.insert(q.clone()).unwrap();
+        let (hits, _) = sc.search(&q, 3).unwrap();
+        assert!(hits.iter().any(|h| h.entry == dup));
+        // Tombstone it and a few originals, compact, and the merged
+        // pruned result must still match the merged brute force.
+        assert!(sc.tombstone(dup));
+        assert!(sc.tombstone(2));
+        assert!(sc.tombstone(11));
+        sc.compact();
+        let brute = sc.brute_force(&q, 5).unwrap();
+        let (hits, report) = sc.search(&q, 5).unwrap();
+        assert_eq!(report.corpus, 18);
+        assert!(hits.iter().all(|h| h.entry != dup && h.entry != 2 && h.entry != 11));
+        if let Err(v) = super::super::topk_equivalent(&hits, &brute, 1e-7) {
+            panic!("post-mutation merge diverged: {v}");
+        }
+    }
+}

@@ -149,6 +149,23 @@ impl WarmStartStore {
         }
     }
 
+    /// Change the retention bound (clamped to ≥ 1), evicting
+    /// least-recently-used entries until the store fits. The retrieval
+    /// layer uses this so a compacted shard's per-entry cache capacity
+    /// tracks its rebuilt (live) entry count instead of staying frozen
+    /// at the original build size.
+    pub fn resize(&mut self, capacity: usize) {
+        self.capacity = capacity.max(1);
+        while self.entries.len() > self.capacity {
+            let Some((&stamp, &victim)) = self.order.iter().next() else {
+                break;
+            };
+            self.order.remove(&stamp);
+            self.entries.remove(&victim);
+            self.counters.evictions += 1;
+        }
+    }
+
     /// Insert (or refresh) a converged scaling pair, evicting the least
     /// recently used entry when full.
     pub fn insert(&mut self, key: WarmKey, init: ScalingInit) {
@@ -238,6 +255,28 @@ mod tests {
         assert!(store.get(&key(1)).is_none());
         assert!(store.get(&key(2)).is_some());
         assert!(store.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn resize_shrinks_by_recency_and_grows_in_place() {
+        let mut store = WarmStartStore::new(4);
+        for fp in 1..=4u64 {
+            store.insert(key(fp), init(fp as F, 2));
+        }
+        // Touch 1 and 3 so 2 is the coldest, then shrink to 2 slots:
+        // the two least-recently-used entries (2, then 4) are evicted.
+        assert!(store.get(&key(1)).is_some());
+        assert!(store.get(&key(3)).is_some());
+        store.resize(2);
+        assert_eq!((store.capacity(), store.len()), (2, 2));
+        assert!(store.get(&key(2)).is_none() && store.get(&key(4)).is_none());
+        assert!(store.get(&key(1)).is_some() && store.get(&key(3)).is_some());
+        assert_eq!(store.counters().evictions, 2);
+        // Growing never drops entries, and 0 clamps to 1.
+        store.resize(8);
+        assert_eq!((store.capacity(), store.len()), (8, 2));
+        store.resize(0);
+        assert_eq!((store.capacity(), store.len()), (1, 1));
     }
 
     #[test]

@@ -192,6 +192,11 @@ fn retrieval_path_serves_end_to_end_cpu_only() {
     let mut config = CoordinatorConfig::cpu_only();
     config.cpu_workers = 2;
     config.retrieval_probe_every = 2;
+    // Serve the corpus partitioned: global entry ids and results are
+    // shard-count invariant, so every assertion below is unchanged from
+    // the monolithic PR 4 version of this test.
+    config.retrieval_shards = 3;
+    config.retrieval_threads = 2;
     let svc = DistanceService::start(config).unwrap();
     let d = 20;
     let mut rng = seeded_rng(404);
@@ -236,6 +241,86 @@ fn retrieval_path_serves_end_to_end_cpu_only() {
         snap.retrieval_pruned > 0,
         "clustered corpus must prune something: {snap}"
     );
+    // PR 5 gauges: every search ran on the retrieval runtime thread,
+    // and the per-shard table shows the 3-way partition.
+    assert_eq!(snap.retrieval_offthread, 4);
+    assert!(snap.retrieval_search_max_us > 0);
+    assert_eq!(snap.retrieval_queue_depth, 0);
+    assert_eq!(snap.retrieval_shards.len(), 3, "{snap}");
+    assert_eq!(
+        snap.retrieval_shards.iter().map(|g| g.live).sum::<usize>(),
+        48
+    );
+    assert!(snap.to_string().contains("rsearch("));
+    svc.shutdown();
+}
+
+#[test]
+fn corpus_mutation_api_serves_incremental_updates_end_to_end() {
+    use sinkhorn_rs::coordinator::{CorpusId, RetrievalQuery, ServiceError};
+    use sinkhorn_rs::data::ClusteredCorpus;
+    let mut config = CoordinatorConfig::cpu_only();
+    config.cpu_workers = 2;
+    config.retrieval_shards = 2;
+    let svc = DistanceService::start(config).unwrap();
+    let d = 16;
+    let mut rng = seeded_rng(505);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), metric).unwrap();
+    let gen = ClusteredCorpus::new(d, 4, 8, 0.15);
+    let (corpus, protos) = gen.generate(&mut rng);
+    svc.register_corpus(CorpusId(0), MetricId(0), 9.0, corpus).unwrap();
+
+    // Mutations against unknown corpora fail cleanly.
+    let err = svc.corpus_insert(CorpusId(9), Histogram::uniform(d)).unwrap_err();
+    assert!(matches!(err, ServiceError::UnknownCorpus(CorpusId(9))));
+    assert!(svc.corpus_tombstone(CorpusId(9), 0).is_err());
+    assert!(svc.corpus_compact(CorpusId(9)).is_err());
+
+    // Insert an exact duplicate of the query: fresh corpus-global id,
+    // immediately searchable, and (being a duplicate) the top hit.
+    let q = gen.mixture_at(&protos[2], 0.15, &mut rng);
+    let id = svc.corpus_insert(CorpusId(0), q.clone()).unwrap();
+    assert_eq!(id, 32, "fresh id after the 32 seed entries");
+    let out = svc
+        .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q.clone(), k: 3 })
+        .unwrap();
+    assert_eq!(out.report.corpus, 33);
+    assert_eq!(out.hits[0].entry, id, "duplicate of the query must win top-1");
+
+    // Tombstone it: gone from the next search; compaction reclaims the
+    // slot and bumps the per-shard gauges.
+    assert!(svc.corpus_tombstone(CorpusId(0), id).unwrap());
+    assert!(!svc.corpus_tombstone(CorpusId(0), id).unwrap(), "already dead");
+    let out = svc
+        .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q.clone(), k: 3 })
+        .unwrap();
+    assert_eq!(out.report.corpus, 32);
+    assert!(out.hits.iter().all(|h| h.entry != id));
+    let rebuilt = svc.corpus_compact(CorpusId(0)).unwrap();
+    assert_eq!(rebuilt, 1, "exactly the insert's shard holds a tombstone");
+    assert_eq!(svc.corpus_compact(CorpusId(0)).unwrap(), 0);
+    let out = svc
+        .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q, k: 3 })
+        .unwrap();
+    assert_eq!(out.report.corpus, 32, "compaction does not change the view");
+
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.retrieval_shards.len(), 2, "{snap}");
+    assert_eq!(snap.retrieval_shards.iter().map(|g| g.live).sum::<usize>(), 32);
+    assert_eq!(
+        snap.retrieval_shards.iter().map(|g| g.compactions).sum::<u64>(),
+        1
+    );
+    assert_eq!(snap.retrieval_shards.iter().map(|g| g.inserts).sum::<u64>(), 1);
+    assert_eq!(snap.errors, 3, "the three unknown-corpus mutations");
+    assert!(snap.to_string().contains("shards=["));
+
+    // Metric replacement invalidates the corpus for subsequent jobs.
+    let m2 = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), m2).unwrap();
+    let err = svc.corpus_insert(CorpusId(0), Histogram::uniform(d)).unwrap_err();
+    assert!(matches!(err, ServiceError::UnknownCorpus(CorpusId(0))));
     svc.shutdown();
 }
 
