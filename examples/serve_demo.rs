@@ -22,7 +22,7 @@ use sinkhorn_rs::coordinator::{
     MetricId, Query, RetrievalQuery, WarmStartConfig,
 };
 use sinkhorn_rs::prelude::*;
-use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig};
+use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig, SolveBudget};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -87,7 +87,7 @@ fn main() {
                 let r = Histogram::sample_uniform(d, &mut rng);
                 let c = Histogram::sample_uniform(d, &mut rng);
                 let res = client
-                    .distance(Query { metric, lambda, r, c })
+                    .distance(Query::new(metric, lambda, r, c))
                     .expect("query");
                 match res.engine {
                     EngineKind::Xla => xla += 1,
@@ -116,15 +116,36 @@ fn main() {
     let r = Histogram::sample_uniform(64, &mut rng);
     let c = Histogram::sample_uniform(64, &mut rng);
     let served = service
-        .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: c.clone() })
+        .distance(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
         .unwrap();
     let direct = SinkhornEngine::with_config(&m64, SinkhornConfig::fixed(9.0, 20))
         .distance(&r, &c);
     println!(
         "\ncross-check: service {:.6} vs direct engine {:.6} (rel {:.2e})",
-        served.distance,
+        served.distance(),
         direct.value,
-        (served.distance - direct.value).abs() / direct.value
+        (served.distance() - direct.value).abs() / direct.value
+    );
+
+    // Anytime tier (PR 6): the same query under a wall-clock deadline
+    // comes back with a certified error interval — the exact d^λ is
+    // guaranteed to sit inside [lo, hi] no matter where the budget cut
+    // the iteration off.
+    let rushed = service
+        .distance(
+            Query::new(MetricId(0), 9.0, r.clone(), c.clone())
+                .with_budget(SolveBudget::deadline_in(Duration::from_micros(500))),
+        )
+        .unwrap();
+    let iv = rushed.outcome.interval;
+    println!(
+        "anytime: 500µs deadline -> estimate {:.6} certified in [{:.6}, {:.6}] \
+         (width {:.2e}) after {} iterations",
+        rushed.distance(),
+        iv.lo,
+        iv.hi,
+        iv.width(),
+        rushed.outcome.iterations,
     );
 
     // Warm-start demonstration: replay one CPU-served query (d=100 has no
@@ -133,12 +154,7 @@ fn main() {
     let c100 = Histogram::sample_uniform(100, &mut rng);
     for _ in 0..4 {
         service
-            .distance(Query {
-                metric: MetricId(1),
-                lambda: 9.0,
-                r: r100.clone(),
-                c: c100.clone(),
-            })
+            .distance(Query::new(MetricId(1), 9.0, r100.clone(), c100.clone()))
             .unwrap();
     }
     let stats = service.stats().unwrap();

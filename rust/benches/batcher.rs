@@ -68,16 +68,11 @@ fn main() {
         let rxs: Vec<_> = queries
             .iter()
             .map(|(r, c)| {
-                svc.submit(Query {
-                    metric: MetricId(0),
-                    lambda: 9.0,
-                    r: r.clone(),
-                    c: c.clone(),
-                })
+                svc.submit(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
                 .unwrap()
             })
             .collect();
-        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().distance).sum::<f64>()
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().distance()).sum::<f64>()
     });
     println!("  -> {:.1} us per query (submit->response, incl. batching)", t.median_us() / 256.0);
     svc.shutdown();
@@ -117,17 +112,12 @@ fn main() {
                     let rxs: Vec<_> = queries
                         .iter()
                         .map(|(r, c)| {
-                            svc.submit(Query {
-                                metric: MetricId(0),
-                                lambda: 9.0,
-                                r: r.clone(),
-                                c: c.clone(),
-                            })
+                            svc.submit(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
                             .unwrap()
                         })
                         .collect();
                     rxs.into_iter()
-                        .map(|rx| rx.recv().unwrap().unwrap().distance)
+                        .map(|rx| rx.recv().unwrap().unwrap().distance())
                         .sum::<f64>()
                 },
             );

@@ -11,6 +11,9 @@
 //! * dense vs truncated vs low-rank kernel operators at serving-scale λ
 //!   (the PR3 KernelOp claim; writes `BENCH_PR3.json` and hard-asserts
 //!   the truncated kernel streams under half the dense entries);
+//! * certified-interval width vs iteration budget at λ ∈ {9, 50} (the
+//!   PR6 anytime claim; writes `BENCH_PR6.json` and hard-asserts the
+//!   width is monotone nonincreasing in the budget);
 //! * Greenkhorn greedy updates vs full Sinkhorn sweeps;
 //! * independence-kernel fast path vs direct O(d²) evaluation;
 //! * the synthetic-digit renderer throughput.
@@ -25,7 +28,7 @@ use sinkhorn_rs::ot::EmdSolver;
 use sinkhorn_rs::simplex::{seeded_rng, Histogram};
 use sinkhorn_rs::sinkhorn::{
     independence_distance, log_domain, BatchSinkhorn, IndependenceKernel,
-    LambdaSchedule, SinkhornConfig, SinkhornEngine,
+    LambdaSchedule, ScalingInit, SinkhornConfig, SinkhornEngine, SolveBudget,
 };
 use sinkhorn_rs::util::bench::Bench;
 use sinkhorn_rs::util::json::Json;
@@ -428,6 +431,121 @@ fn main() {
         }
     }
 
+    // --- anytime deadline sweep: interval width vs budget (PR6 claim) ---
+    {
+        let d = 64;
+        let mut rng = seeded_rng(6006);
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        const BUDGETS: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+        let mut doc = BTreeMap::new();
+        let mut set = |k: &str, v: Json| {
+            doc.insert(k.to_string(), v);
+        };
+        set("bench", Json::String("anytime_interval_sweep".into()));
+        set("status", Json::String("measured".into()));
+        set("d", Json::Number(d as f64));
+        set("cert_stride", Json::Number(sinkhorn_rs::sinkhorn::CERT_STRIDE as f64));
+
+        for &lambda in &[9.0, 50.0] {
+            let cfg = SinkhornConfig {
+                lambda,
+                tolerance: 1e-9,
+                max_iterations: 200_000,
+                ..Default::default()
+            };
+            // Log-domain: exact at both λ points, so the sweep isolates
+            // the certificate narrowing from stabilization rescues.
+            let backend = BackendKind::LogDomain.build(&m, cfg);
+            let free = backend.solve_outcome(
+                &r,
+                &c,
+                &ScalingInit::Cold,
+                SolveBudget::Unbounded,
+            );
+            let tag = format!("lam{}", lambda as u64);
+            set(
+                &format!("converged_width_{tag}"),
+                Json::Number(free.interval.width()),
+            );
+            set(
+                &format!("converged_iterations_{tag}"),
+                Json::Number(free.iterations as f64),
+            );
+            let mut prev = f64::INFINITY;
+            println!(
+                "anytime_interval_sweep   d={d} lambda={lambda}: converged in \
+                 {} iters at width {:.3e}",
+                free.iterations,
+                free.interval.width()
+            );
+            for &budget in &BUDGETS {
+                let t = bench.report(
+                    "anytime_budgeted",
+                    &format!("d={d} lambda={lambda} cap={budget}"),
+                    || {
+                        backend
+                            .solve_outcome(
+                                &r,
+                                &c,
+                                &ScalingInit::Cold,
+                                SolveBudget::Iterations(budget),
+                            )
+                            .interval
+                            .width()
+                    },
+                );
+                let out = backend.solve_outcome(
+                    &r,
+                    &c,
+                    &ScalingInit::Cold,
+                    SolveBudget::Iterations(budget),
+                );
+                let width = out.interval.width();
+                println!(
+                    "  -> cap={budget}: width {width:.3e} after {} iters \
+                     ({:.1} us)",
+                    out.iterations,
+                    t.median_us()
+                );
+                // Deterministic anytime contract: more budget never
+                // widens the certificate.
+                assert!(
+                    width <= prev + 1e-12 * (1.0 + prev.min(1e300)),
+                    "lambda={lambda}: width grew from {prev:.3e} to \
+                     {width:.3e} at cap {budget}"
+                );
+                prev = width;
+                set(
+                    &format!("width_{tag}_cap{budget}"),
+                    Json::Number(width),
+                );
+                set(
+                    &format!("median_ns_{tag}_cap{budget}"),
+                    Json::Number(t.median_ns),
+                );
+            }
+        }
+        set(
+            "note",
+            Json::String(
+                "written by `cargo bench --bench solvers`; certified interval \
+                 width (hi - lo on the exact d^lambda) vs iteration budget on \
+                 the log-domain backend; widths are asserted monotone \
+                 nonincreasing in the budget"
+                    .into(),
+            ),
+        );
+        drop(set);
+        let rendered = format!("{}\n", Json::Object(doc));
+        match std::fs::write("BENCH_PR6.json", &rendered) {
+            Ok(()) => println!("  -> recorded BENCH_PR6.json"),
+            Err(e) => eprintln!("  -> could not write BENCH_PR6.json: {e}"),
+        }
+    }
+
     // --- Greenkhorn greedy updates vs full Sinkhorn sweeps ---
     {
         let d = 256;
@@ -448,7 +566,7 @@ fn main() {
         });
         let green = GreenkhornBackend::new(&m, cfg);
         let tg = bench.report("greenkhorn_tol1e4", "d=256 dirichlet(0.2)", || {
-            green.solve_pair(&r, &c).value
+            green.solve(&r, &c, &ScalingInit::Cold).value
         });
         println!(
             "  -> greenkhorn/dense wallclock ratio {:.2}x (lower is better)",

@@ -18,8 +18,8 @@ use crate::linalg::KernelStats;
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::sinkhorn::{
-    fingerprint_pair, ScalingInit, SinkhornConfig, SinkhornOutput, WarmKey,
-    WarmStartStore,
+    fingerprint_pair, ScalingInit, SinkhornConfig, SinkhornOutput, SolveBudget,
+    SolveOutcome, WarmKey, WarmStartStore,
 };
 use crate::F;
 use std::time::{Duration, Instant};
@@ -278,7 +278,7 @@ impl ShardedExecutor {
         &mut self,
         rs: &[&Histogram],
         cs: &[Histogram],
-        inits: &[Option<ScalingInit>],
+        inits: &[ScalingInit],
     ) -> (Vec<SinkhornOutput>, Vec<ShardReport>) {
         if inits.is_empty() {
             return self.solve_panel_paired(rs, cs);
@@ -290,7 +290,7 @@ impl ShardedExecutor {
         let shards = self.backends.len().min(n);
         if shards <= 1 {
             let t0 = Instant::now();
-            let out = self.backends[0].solve_panel_paired_init(rs, cs, inits);
+            let out = self.backends[0].solve_paired(rs, cs, inits);
             let report = ShardReport {
                 worker: 0,
                 queries: out.len(),
@@ -317,13 +317,93 @@ impl ShardedExecutor {
                 let inits_shard = &inits[range];
                 handles.push(scope.spawn(move || {
                     let t0 = Instant::now();
-                    let out =
-                        backend.solve_panel_paired_init(rs_shard, cs_shard, inits_shard);
+                    let out = backend.solve_paired(rs_shard, cs_shard, inits_shard);
                     (worker, out, t0.elapsed())
                 }));
             }
             // Joining in spawn order concatenates shards back into the
             // original panel order.
+            for handle in handles {
+                let (worker, out, busy) =
+                    handle.join().expect("executor worker panicked");
+                reports.push(ShardReport {
+                    worker,
+                    queries: out.len(),
+                    busy,
+                    warm_hits: 0,
+                    warm_misses: 0,
+                    kernel,
+                });
+                outputs.extend(out);
+            }
+        });
+        for report in &reports {
+            let slot = &mut self.stats[report.worker];
+            slot.panels += 1;
+            slot.queries += report.queries as u64;
+            slot.busy += report.busy;
+        }
+        (outputs, reports)
+    }
+
+    /// Anytime paired panel: per-column certified [`SolveOutcome`]s
+    /// under one shared `budget`, sharded like
+    /// [`Self::solve_panel_paired_init`]. Caller-managed seeding
+    /// (`inits[j]`, empty = all-cold) — the per-worker warm stores are
+    /// bypassed, matching the explicit-init contract. A deadline budget
+    /// is global: every worker races the same wall-clock instant.
+    pub fn solve_panel_outcomes(
+        &mut self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        budget: SolveBudget,
+    ) -> (Vec<SolveOutcome>, Vec<ShardReport>) {
+        let n = cs.len();
+        assert_eq!(rs.len(), n, "paired panel size mismatch");
+        if !inits.is_empty() {
+            assert_eq!(inits.len(), n, "warm-start slice size mismatch");
+        }
+        if n == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let kernel = self.kernel_stats();
+        let shards = self.backends.len().min(n);
+        if shards <= 1 {
+            let t0 = Instant::now();
+            let out = self.backends[0].solve_paired_outcomes(rs, cs, inits, budget);
+            let report = ShardReport {
+                worker: 0,
+                queries: out.len(),
+                busy: t0.elapsed(),
+                warm_hits: 0,
+                warm_misses: 0,
+                kernel,
+            };
+            self.stats[0].panels += 1;
+            self.stats[0].queries += report.queries as u64;
+            self.stats[0].busy += report.busy;
+            return (out, vec![report]);
+        }
+        let ranges = shard_ranges(n, shards);
+        let mut outputs = Vec::with_capacity(n);
+        let mut reports = Vec::with_capacity(shards);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards);
+            for (worker, (backend, range)) in
+                self.backends.iter_mut().zip(ranges).enumerate()
+            {
+                let rs_shard = &rs[range.clone()];
+                let cs_shard = &cs[range.clone()];
+                let inits_shard = if inits.is_empty() { &[] } else { &inits[range] };
+                handles.push(scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let out = backend.solve_paired_outcomes(
+                        rs_shard, cs_shard, inits_shard, budget,
+                    );
+                    (worker, out, t0.elapsed())
+                }));
+            }
             for handle in handles {
                 let (worker, out, busy) =
                     handle.join().expect("executor worker panicked");
@@ -375,7 +455,7 @@ fn run_shard(
 ) -> (Vec<SinkhornOutput>, usize, usize) {
     let (store, (metric_key, lambda_bits)) = match (store, key_ns) {
         (Some(store), Some(ns)) if backend.warm_startable() => (store, ns),
-        _ => return (backend.solve_panel_paired(rs, cs), 0, 0),
+        _ => return (backend.solve_paired(rs, cs, &[]), 0, 0),
     };
     let keys: Vec<WarmKey> = rs
         .iter()
@@ -386,10 +466,13 @@ fn run_shard(
             fingerprint: fingerprint_pair(r, c),
         })
         .collect();
-    let inits: Vec<Option<ScalingInit>> = keys.iter().map(|k| store.get(k)).collect();
-    let hits = inits.iter().filter(|i| i.is_some()).count();
+    let inits: Vec<ScalingInit> = keys
+        .iter()
+        .map(|k| store.get(k).unwrap_or_default())
+        .collect();
+    let hits = inits.iter().filter(|i| !i.is_cold()).count();
     let misses = inits.len() - hits;
-    let out = backend.solve_panel_paired_init(rs, cs, &inits);
+    let out = backend.solve_paired(rs, cs, &inits);
     for (key, o) in keys.into_iter().zip(&out) {
         if o.stats.converged && o.value.is_finite() {
             store.insert(key, ScalingInit::from_output(o));
@@ -596,8 +679,8 @@ mod tests {
         let mut ex = ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, 3)
             .with_warm_store(0, 9.0, 64);
         let rs: Vec<&Histogram> = cs.iter().map(|_| &r).collect();
-        // Cold pass through the explicit-init entry point (all None).
-        let inits: Vec<Option<ScalingInit>> = vec![None; cs.len()];
+        // Cold pass through the explicit-init entry point (all Cold).
+        let inits = vec![ScalingInit::Cold; cs.len()];
         let (cold, reports) = ex.solve_panel_paired_init(&rs, &cs, &inits);
         assert_eq!(cold.len(), cs.len());
         assert_eq!(reports.iter().map(|s| s.queries).sum::<usize>(), cs.len());
@@ -606,8 +689,8 @@ mod tests {
         assert_eq!(ex.warm_entries(), 0);
         // Seeding every pair with its own converged scalings re-converges
         // in strictly fewer iterations to the same values.
-        let seeds: Vec<Option<ScalingInit>> =
-            cold.iter().map(|o| Some(ScalingInit::from_output(o))).collect();
+        let seeds: Vec<ScalingInit> =
+            cold.iter().map(ScalingInit::from_output).collect();
         let (warm, _) = ex.solve_panel_paired_init(&rs, &cs, &seeds);
         let cold_iters: usize = cold.iter().map(|o| o.stats.iterations).sum();
         let warm_iters: usize = warm.iter().map(|o| o.stats.iterations).sum();
@@ -618,6 +701,52 @@ mod tests {
         // An empty init slice delegates to the store-managed path.
         let (_, delegated) = ex.solve_panel_paired_init(&rs, &cs, &[]);
         assert_eq!(delegated.iter().map(|s| s.warm_misses).sum::<usize>(), cs.len());
+    }
+
+    #[test]
+    fn budgeted_panel_brackets_and_matches_unbounded() {
+        let (m, r, cs) = panel(12, 7, 13);
+        let cfg = SinkhornConfig {
+            lambda: 9.0,
+            tolerance: 1e-9,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let rs: Vec<&Histogram> = cs.iter().map(|_| &r).collect();
+        for kind in [BackendKind::Interleaved, BackendKind::Dense] {
+            let mut ex = ShardedExecutor::new(&m, cfg, kind, 3);
+            let (plain, _) = ex.solve_panel_paired(&rs, &cs);
+            // Unbounded outcomes reproduce the plain panel exactly and
+            // attach a finite certificate around each estimate.
+            let (outcomes, reports) =
+                ex.solve_panel_outcomes(&rs, &cs, &[], SolveBudget::Unbounded);
+            assert_eq!(outcomes.len(), cs.len());
+            assert_eq!(reports.iter().map(|s| s.queries).sum::<usize>(), cs.len());
+            for (o, p) in outcomes.iter().zip(&plain) {
+                assert_eq!(o.estimate, p.value, "{kind}: unbounded outcome drifted");
+                assert!(o.converged);
+                assert!(o.interval.hi.is_finite(), "{kind}: vacuous certificate");
+                assert!(
+                    o.interval.lo - 1e-9 <= o.estimate
+                        && o.estimate <= o.interval.hi + 1e-9,
+                    "{kind}: estimate outside certificate"
+                );
+            }
+            // A tiny iteration budget still yields estimates + intervals,
+            // and a larger budget never widens any column's interval.
+            let (small, _) =
+                ex.solve_panel_outcomes(&rs, &cs, &[], SolveBudget::Iterations(8));
+            let (large, _) =
+                ex.solve_panel_outcomes(&rs, &cs, &[], SolveBudget::Iterations(32));
+            for (s, l) in small.iter().zip(&large) {
+                assert!(s.iterations <= 8, "{kind}: budget overrun");
+                assert!(s.estimate.is_finite());
+                assert!(
+                    l.interval.width() <= s.interval.width() + 1e-12,
+                    "{kind}: interval widened with budget"
+                );
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,8 @@ use super::{BackendKind, SolverBackend};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
 use crate::sinkhorn::{
-    log_domain, ScalingInit, SinkhornConfig, SinkhornOutput, SinkhornStats,
+    certify, log_domain, ErrorInterval, ScalingInit, SinkhornConfig, SinkhornOutput,
+    SinkhornStats,
 };
 use crate::F;
 
@@ -64,18 +65,24 @@ impl GreenkhornBackend {
         self.degenerate
     }
 
-    fn solve_greedy(&self, r: &[F], c: &[F], init: Option<&ScalingInit>) -> SinkhornOutput {
+    fn solve_greedy(
+        &self,
+        r: &[F],
+        c: &[F],
+        init: &ScalingInit,
+        cap: Option<usize>,
+    ) -> SinkhornOutput {
         let d = self.d;
         let cfg = &self.config;
 
         // Scalings: a warm start seeds both sides; a cold start runs the
         // ε-scaling prefix (in the dense scaling domain, like the engine)
         // and derives v from the carried u against the final kernel.
-        let (mut u, mut v, prefix) = match init {
-            Some(seed) => {
-                assert_eq!(seed.u.len(), d, "warm-start dimension mismatch");
-                assert_eq!(seed.v.len(), d, "warm-start dimension mismatch");
-                (seed.u.clone(), seed.v.clone(), 0)
+        let (mut u, mut v, prefix) = match init.scalings() {
+            Some((su, sv)) => {
+                assert_eq!(su.len(), d, "warm-start dimension mismatch");
+                assert_eq!(sv.len(), d, "warm-start dimension mismatch");
+                (su.to_vec(), sv.to_vec(), 0)
             }
             None => {
                 let mut u = vec![1.0 / d as F; d];
@@ -108,7 +115,9 @@ impl GreenkhornBackend {
             ktu[i] = row_dot(&self.kt, i, d, &u);
         }
 
-        let budget = cfg.max_iterations.saturating_mul(d);
+        // A budget slice caps the sweep count (one sweep = d greedy
+        // updates), keeping iteration units comparable across backends.
+        let budget = cap.unwrap_or(cfg.max_iterations).saturating_mul(d);
         let check = cfg.check_every != usize::MAX;
         let mut stats =
             SinkhornStats { last_delta: F::INFINITY, ..Default::default() };
@@ -214,16 +223,7 @@ impl SolverBackend for GreenkhornBackend {
         self.d
     }
 
-    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
-        self.solve_pair_init(r, c, None)
-    }
-
-    fn solve_pair_init(
-        &self,
-        r: &Histogram,
-        c: &Histogram,
-        init: Option<&ScalingInit>,
-    ) -> SinkhornOutput {
+    fn solve(&self, r: &Histogram, c: &Histogram, init: &ScalingInit) -> SinkhornOutput {
         assert_eq!(r.dim(), self.d, "source dimension mismatch");
         assert_eq!(c.dim(), self.d, "target dimension mismatch");
         if self.degenerate {
@@ -237,7 +237,40 @@ impl SolverBackend for GreenkhornBackend {
                 init,
             );
         }
-        self.solve_greedy(r.values(), c.values(), init)
+        self.solve_greedy(r.values(), c.values(), init, None)
+    }
+
+    fn solve_capped(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        cap: usize,
+    ) -> SinkhornOutput {
+        assert_eq!(r.dim(), self.d, "source dimension mismatch");
+        assert_eq!(c.dim(), self.d, "target dimension mismatch");
+        if self.degenerate {
+            return log_domain::solve_capped(
+                &self.m,
+                self.d,
+                self.config.lambda,
+                &self.config,
+                r.values(),
+                c.values(),
+                init,
+                cap,
+            );
+        }
+        self.solve_greedy(r.values(), c.values(), init, Some(cap))
+    }
+
+    fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        certify(&self.m, self.d, self.config.lambda, r.values(), c.values(), out)
     }
 }
 
@@ -287,7 +320,8 @@ mod tests {
             let r = Histogram::sample_uniform(d, &mut rng);
             let c = Histogram::sample_uniform(d, &mut rng);
             let dense = SinkhornEngine::with_config(&m, tight(8.0)).distance(&r, &c);
-            let greedy = GreenkhornBackend::new(&m, tight(8.0)).solve_pair(&r, &c);
+            let greedy =
+                GreenkhornBackend::new(&m, tight(8.0)).solve(&r, &c, &ScalingInit::Cold);
             assert!(greedy.stats.converged, "seed {seed}: did not converge");
             let rel = (greedy.value - dense.value).abs() / (1.0 + dense.value);
             assert!(
@@ -307,7 +341,7 @@ mod tests {
         let r = Histogram::sample_uniform(d, &mut rng);
         let c = Histogram::sample_uniform(d, &mut rng);
         let backend = GreenkhornBackend::new(&m, tight(6.0));
-        let out = backend.solve_pair(&r, &c);
+        let out = backend.solve(&r, &c, &ScalingInit::Cold);
         assert!(out.stats.converged);
         // Rebuild P = diag(u) K diag(v) and check both marginals.
         for i in 0..d {
@@ -333,7 +367,8 @@ mod tests {
         let m = RandomMetric::new(d).sample(&mut rng);
         let r = Histogram::from_weights(&[0.5, 0.5, 0., 0., 0., 0., 0., 0.]).unwrap();
         let c = Histogram::from_weights(&[0., 0., 0., 0., 0., 0., 0.5, 0.5]).unwrap();
-        let out = GreenkhornBackend::new(&m, tight(9.0)).solve_pair(&r, &c);
+        let out =
+            GreenkhornBackend::new(&m, tight(9.0)).solve(&r, &c, &ScalingInit::Cold);
         assert!(out.value.is_finite() && out.value > 0.0);
         assert_eq!(out.u[2], 0.0, "zero-mass row scaling must vanish");
     }
@@ -346,7 +381,7 @@ mod tests {
         let r = Histogram::sample_uniform(d, &mut rng);
         let c = Histogram::sample_uniform(d, &mut rng);
         let out = GreenkhornBackend::new(&m, SinkhornConfig::fixed(9.0, 15))
-            .solve_pair(&r, &c);
+            .solve(&r, &c, &ScalingInit::Cold);
         assert!(out.stats.iterations <= 15);
         assert!(out.value.is_finite());
     }
@@ -359,10 +394,10 @@ mod tests {
         let r = Histogram::sample_uniform(d, &mut rng);
         let c = Histogram::sample_uniform(d, &mut rng);
         let backend = GreenkhornBackend::new(&m, tight(7.0));
-        let cold = backend.solve_pair(&r, &c);
+        let cold = backend.solve(&r, &c, &ScalingInit::Cold);
         assert!(cold.stats.converged);
         let seed = ScalingInit::from_output(&cold);
-        let warm = backend.solve_pair_init(&r, &c, Some(&seed));
+        let warm = backend.solve(&r, &c, &seed);
         assert!(warm.stats.converged);
         assert!((warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value));
         assert!(warm.stats.iterations <= cold.stats.iterations);
@@ -376,10 +411,12 @@ mod tests {
         let m = RandomMetric::new(d).sample(&mut rng);
         let r = Histogram::sample_uniform(d, &mut rng);
         let c = Histogram::sample_uniform(d, &mut rng);
-        let cold = GreenkhornBackend::new(&m, tight(10.0)).solve_pair(&r, &c);
+        let cold =
+            GreenkhornBackend::new(&m, tight(10.0)).solve(&r, &c, &ScalingInit::Cold);
         let annealed_cfg =
             SinkhornConfig { schedule: LambdaSchedule::geometric(1.0), ..tight(10.0) };
-        let annealed = GreenkhornBackend::new(&m, annealed_cfg).solve_pair(&r, &c);
+        let annealed =
+            GreenkhornBackend::new(&m, annealed_cfg).solve(&r, &c, &ScalingInit::Cold);
         assert!(annealed.stats.converged);
         assert!(
             (annealed.value - cold.value).abs() < 1e-7 * (1.0 + cold.value),
@@ -398,8 +435,33 @@ mod tests {
         let c = Histogram::sample_uniform(d, &mut rng);
         let backend = GreenkhornBackend::new(&m, SinkhornConfig::converged(5_000.0));
         assert!(backend.is_stabilized());
-        let out = backend.solve_pair(&r, &c);
+        let out = backend.solve(&r, &c, &ScalingInit::Cold);
         assert!(out.stats.stabilized);
         assert!(out.value.is_finite());
+    }
+
+    #[test]
+    fn capped_slices_converge_to_the_same_fixed_point() {
+        let mut rng = seeded_rng(11);
+        let d = 10;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let backend = GreenkhornBackend::new(&m, tight(7.0));
+        let straight = backend.solve(&r, &c, &ScalingInit::Cold);
+        // Drive the same solve in small capped slices, warm-carrying the
+        // scalings; the greedy walk resumes from (u, v) so the sliced
+        // run reaches the same fixed point.
+        let mut carry = ScalingInit::Cold;
+        let mut out = backend.solve_capped(&r, &c, &carry, 4);
+        for _ in 0..200 {
+            if out.stats.converged {
+                break;
+            }
+            carry = ScalingInit::from_output(&out);
+            out = backend.solve_capped(&r, &c, &carry, 4);
+        }
+        assert!(out.stats.converged, "sliced run never converged");
+        assert!((out.value - straight.value).abs() < 1e-7 * (1.0 + straight.value));
     }
 }

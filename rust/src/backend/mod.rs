@@ -29,8 +29,9 @@ use crate::metric::CostMatrix;
 use crate::ot::EmdSolver;
 use crate::simplex::Histogram;
 use crate::sinkhorn::{
-    log_domain, BatchSinkhorn, ScalingInit, SinkhornConfig, SinkhornEngine,
-    SinkhornOutput, SinkhornStats,
+    certify, log_domain, outcome, BatchSinkhorn, ErrorInterval, ScalingInit,
+    SinkhornConfig, SinkhornEngine, SinkhornOutput, SinkhornStats, SolveBudget,
+    SolveOutcome,
 };
 use crate::F;
 
@@ -47,21 +48,74 @@ pub trait SolverBackend: Send {
     /// Histogram dimension d this backend is bound to.
     fn dim(&self) -> usize;
 
-    /// d_M^λ(r, c) for a single pair.
+    /// d_M^λ(r, c) for a single pair, seeded by `init`
+    /// ([`ScalingInit::Cold`] for a from-scratch solve; a warm seed only
+    /// accelerates convergence, never changes the fixed point).
     ///
     /// Implementations must not panic on recoverable solver failure
     /// (they run on [`ShardedExecutor`] worker threads, where a panic
     /// would take the whole coordinator engine down); report failure as
     /// a NaN `value` with `converged: false` instead. Shape mismatches
     /// remain programming errors and may assert.
-    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput;
+    fn solve(&self, r: &Histogram, c: &Histogram, init: &ScalingInit) -> SinkhornOutput;
+
+    /// One budget slice: [`Self::solve`] stopped after at most `cap`
+    /// fixed-point iterations, convergence checks still active. The
+    /// default ignores the cap — sound for backends whose solve is one
+    /// atomic unit (the exact simplex), since an early finish only
+    /// tightens the certificate.
+    fn solve_capped(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        cap: usize,
+    ) -> SinkhornOutput {
+        let _ = cap;
+        self.solve(r, c, init)
+    }
+
+    /// Certified bracket on the exact d^λ for a state this backend
+    /// produced. The default is the vacuous [`ErrorInterval::UNBOUNDED`];
+    /// backends holding the exact cost matrix override with the dual /
+    /// AWR-rounding certificate ([`certify`]).
+    fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        let _ = (r, c, out);
+        ErrorInterval::UNBOUNDED
+    }
+
+    /// Anytime solve under `budget`: iterate in [`crate::sinkhorn::CERT_STRIDE`]
+    /// slices, warm-carrying the scaling and intersecting per-slice
+    /// certificates. [`SolveBudget::Unbounded`] reproduces
+    /// [`Self::solve`] bit-identically and certifies the final state
+    /// once.
+    fn solve_outcome(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        budget: SolveBudget,
+    ) -> SolveOutcome {
+        outcome::drive_budgeted(
+            budget,
+            init,
+            |seed| self.solve(r, c, seed),
+            |seed, cap| self.solve_capped(r, c, seed, cap),
+            |out| self.certificate(r, c, out),
+        )
+    }
 
     /// Whether this strategy actually consumes initial scalings. The
     /// [`ShardedExecutor`] skips warm-store lookups and inserts entirely
     /// for backends that do not (e.g. the exact simplex, whose
-    /// `solve_pair_init` default discards the seed) — otherwise every
-    /// repeat query would pay fingerprint/clone/insert costs and report a
-    /// healthy hit rate with zero effect on iteration counts.
+    /// [`Self::solve`] discards the seed) — otherwise every repeat query
+    /// would pay fingerprint/clone/insert costs and report a healthy hit
+    /// rate with zero effect on iteration counts.
     fn warm_startable(&self) -> bool {
         true
     }
@@ -75,54 +129,106 @@ pub trait SolverBackend: Send {
         KernelStats::dense(self.dim())
     }
 
-    /// [`Self::solve_pair`] seeded with an initial scaling pair (a warm
-    /// start from a [`crate::sinkhorn::WarmStartStore`]). The default
-    /// ignores the seed — correct for any backend, since a warm start
-    /// only accelerates convergence, never changes the fixed point.
+    /// One source against a panel of targets C = [c_1 … c_N]
+    /// (Algorithm 1's vectorized form). Default: per-pair loop.
+    fn solve_panel(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
+        cs.iter().map(|c| self.solve(r, c, &ScalingInit::Cold)).collect()
+    }
+
+    /// Fully paired panel with per-query seeds: `inits[j]` seeds pair j;
+    /// an empty slice means all-cold.
+    fn solve_paired(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+    ) -> Vec<SinkhornOutput> {
+        assert_eq!(rs.len(), cs.len(), "paired panel size mismatch");
+        if inits.is_empty() {
+            return rs
+                .iter()
+                .zip(cs)
+                .map(|(r, c)| self.solve(r, c, &ScalingInit::Cold))
+                .collect();
+        }
+        assert_eq!(inits.len(), cs.len(), "warm-start slice size mismatch");
+        rs.iter()
+            .zip(cs)
+            .zip(inits)
+            .map(|((r, c), init)| self.solve(r, c, init))
+            .collect()
+    }
+
+    /// Anytime paired panel: per-column [`SolveOutcome`]s under one
+    /// shared `budget` (each column gets the full iteration allowance;
+    /// a deadline is global). Default: per-pair [`Self::solve_outcome`]
+    /// loop; the interleaved backend overrides with the genuinely
+    /// panel-sliced walk.
+    fn solve_paired_outcomes(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        budget: SolveBudget,
+    ) -> Vec<SolveOutcome> {
+        assert_eq!(rs.len(), cs.len(), "paired panel size mismatch");
+        if !inits.is_empty() {
+            assert_eq!(inits.len(), cs.len(), "warm-start slice size mismatch");
+        }
+        rs.iter()
+            .zip(cs)
+            .enumerate()
+            .map(|(j, (r, c))| {
+                let cold = ScalingInit::Cold;
+                let seed = inits.get(j).unwrap_or(&cold);
+                self.solve_outcome(r, c, seed, budget)
+            })
+            .collect()
+    }
+
+    /// Deprecated alias of [`Self::solve`] with a cold seed.
+    #[deprecated(since = "0.3.0", note = "use `solve` with `ScalingInit::Cold`")]
+    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
+        self.solve(r, c, &ScalingInit::Cold)
+    }
+
+    /// Deprecated alias of [`Self::solve`]; `None` maps to
+    /// [`ScalingInit::Cold`].
+    #[deprecated(since = "0.3.0", note = "use `solve`, which takes the seed directly")]
     fn solve_pair_init(
         &self,
         r: &Histogram,
         c: &Histogram,
         init: Option<&ScalingInit>,
     ) -> SinkhornOutput {
-        let _ = init;
-        self.solve_pair(r, c)
+        self.solve(r, c, init.unwrap_or(&ScalingInit::Cold))
     }
 
-    /// One source against a panel of targets C = [c_1 … c_N]
-    /// (Algorithm 1's vectorized form). Default: per-pair loop.
-    fn solve_panel(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
-        cs.iter().map(|c| self.solve_pair(r, c)).collect()
-    }
-
-    /// Fully paired panel: solve (r_j, c_j) for every j.
+    /// Deprecated alias of [`Self::solve_paired`] with no seeds.
+    #[deprecated(since = "0.3.0", note = "use `solve_paired` with an empty init slice")]
     fn solve_panel_paired(
         &self,
         rs: &[&Histogram],
         cs: &[Histogram],
     ) -> Vec<SinkhornOutput> {
-        assert_eq!(rs.len(), cs.len(), "paired panel size mismatch");
-        rs.iter().zip(cs).map(|(r, c)| self.solve_pair(r, c)).collect()
+        self.solve_paired(rs, cs, &[])
     }
 
-    /// [`Self::solve_panel_paired`] with per-query warm starts:
-    /// `inits[j]` seeds pair j (an empty slice means all-cold).
+    /// Deprecated alias of [`Self::solve_paired`]; `None` seeds map to
+    /// [`ScalingInit::Cold`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `solve_paired`, whose seeds are `ScalingInit` values (Cold replaces None)"
+    )]
     fn solve_panel_paired_init(
         &self,
         rs: &[&Histogram],
         cs: &[Histogram],
         inits: &[Option<ScalingInit>],
     ) -> Vec<SinkhornOutput> {
-        if inits.is_empty() {
-            return self.solve_panel_paired(rs, cs);
-        }
-        assert_eq!(rs.len(), cs.len(), "paired panel size mismatch");
-        assert_eq!(inits.len(), cs.len(), "warm-start slice size mismatch");
-        rs.iter()
-            .zip(cs)
-            .zip(inits)
-            .map(|((r, c), init)| self.solve_pair_init(r, c, init.as_ref()))
-            .collect()
+        let owned: Vec<ScalingInit> =
+            inits.iter().map(|i| i.clone().unwrap_or_default()).collect();
+        self.solve_paired(rs, cs, &owned)
     }
 }
 
@@ -277,17 +383,27 @@ impl SolverBackend for DenseBackend {
         self.engine.dim()
     }
 
-    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
-        self.engine.distance(r, c)
+    fn solve(&self, r: &Histogram, c: &Histogram, init: &ScalingInit) -> SinkhornOutput {
+        self.engine.distance_init(r, c, init)
     }
 
-    fn solve_pair_init(
+    fn solve_capped(
         &self,
         r: &Histogram,
         c: &Histogram,
-        init: Option<&ScalingInit>,
+        init: &ScalingInit,
+        cap: usize,
     ) -> SinkhornOutput {
-        self.engine.distance_init(r, c, init)
+        self.engine.distance_capped(r, c, init, cap)
+    }
+
+    fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        self.engine.certificate(r, c, out)
     }
 
     fn kernel_stats(&self) -> KernelStats {
@@ -319,16 +435,7 @@ impl SolverBackend for LogDomainBackend {
         self.d
     }
 
-    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
-        self.solve_pair_init(r, c, None)
-    }
-
-    fn solve_pair_init(
-        &self,
-        r: &Histogram,
-        c: &Histogram,
-        init: Option<&ScalingInit>,
-    ) -> SinkhornOutput {
+    fn solve(&self, r: &Histogram, c: &Histogram, init: &ScalingInit) -> SinkhornOutput {
         assert_eq!(r.dim(), self.d, "source dimension mismatch");
         assert_eq!(c.dim(), self.d, "target dimension mismatch");
         log_domain::solve_init(
@@ -340,6 +447,36 @@ impl SolverBackend for LogDomainBackend {
             c.values(),
             init,
         )
+    }
+
+    fn solve_capped(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        cap: usize,
+    ) -> SinkhornOutput {
+        assert_eq!(r.dim(), self.d, "source dimension mismatch");
+        assert_eq!(c.dim(), self.d, "target dimension mismatch");
+        log_domain::solve_capped(
+            &self.m,
+            self.d,
+            self.config.lambda,
+            &self.config,
+            r.values(),
+            c.values(),
+            init,
+            cap,
+        )
+    }
+
+    fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        certify(&self.m, self.d, self.config.lambda, r.values(), c.values(), out)
     }
 }
 
@@ -402,18 +539,8 @@ impl SolverBackend for InterleavedBackend {
         self.batch.dim()
     }
 
-    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
-        let mut out = self.batch.distances(r, std::slice::from_ref(c));
-        out.pop().expect("one output per target")
-    }
-
-    fn solve_pair_init(
-        &self,
-        r: &Histogram,
-        c: &Histogram,
-        init: Option<&ScalingInit>,
-    ) -> SinkhornOutput {
-        let inits = [init.cloned()];
+    fn solve(&self, r: &Histogram, c: &Histogram, init: &ScalingInit) -> SinkhornOutput {
+        let inits = [init.clone()];
         let mut out = self.batch.distances_paired_init(
             &[r],
             std::slice::from_ref(c),
@@ -422,25 +549,53 @@ impl SolverBackend for InterleavedBackend {
         out.pop().expect("one output per target")
     }
 
+    fn solve_capped(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        cap: usize,
+    ) -> SinkhornOutput {
+        let inits = [init.clone()];
+        let mut out = self.batch.distances_paired_capped(
+            &[r],
+            std::slice::from_ref(c),
+            &inits,
+            cap,
+        );
+        out.pop().expect("one output per target")
+    }
+
+    fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        self.batch.certificate(r, c, out)
+    }
+
     fn solve_panel(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
         self.batch.distances(r, cs)
     }
 
-    fn solve_panel_paired(
+    fn solve_paired(
         &self,
         rs: &[&Histogram],
         cs: &[Histogram],
-    ) -> Vec<SinkhornOutput> {
-        self.batch.distances_paired(rs, cs)
-    }
-
-    fn solve_panel_paired_init(
-        &self,
-        rs: &[&Histogram],
-        cs: &[Histogram],
-        inits: &[Option<ScalingInit>],
+        inits: &[ScalingInit],
     ) -> Vec<SinkhornOutput> {
         self.batch.distances_paired_init(rs, cs, inits)
+    }
+
+    fn solve_paired_outcomes(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        budget: SolveBudget,
+    ) -> Vec<SolveOutcome> {
+        self.batch.outcomes_paired(rs, cs, inits, budget)
     }
 
     fn kernel_stats(&self) -> KernelStats {
@@ -486,7 +641,9 @@ impl SolverBackend for ExactBackend {
         false
     }
 
-    fn solve_pair(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
+    fn solve(&self, r: &Histogram, c: &Histogram, init: &ScalingInit) -> SinkhornOutput {
+        // The simplex solves from scratch; scaling seeds mean nothing.
+        let _ = init;
         let mut solver = EmdSolver::new(&self.metric);
         if let Some(limit) = self.pivot_limit {
             solver = solver.with_pivot_limit(limit);
@@ -518,6 +675,23 @@ impl SolverBackend for ExactBackend {
                     },
                 }
             }
+        }
+    }
+
+    fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        // The network simplex is exact: a successful solve certifies
+        // itself as a zero-width interval at d_M(r, c). Budgets cannot
+        // slice a pivot sequence, so failure stays vacuous.
+        let _ = (r, c);
+        if out.value.is_finite() && out.stats.converged {
+            ErrorInterval::point(out.value)
+        } else {
+            ErrorInterval::UNBOUNDED
         }
     }
 }
@@ -568,7 +742,7 @@ mod tests {
             let backend = kind.build(&m, cfg);
             assert_eq!(backend.kind(), kind);
             assert_eq!(backend.dim(), 10);
-            let out = backend.solve_pair(&r, &c);
+            let out = backend.solve(&r, &c, &ScalingInit::Cold);
             assert!(
                 out.value.is_finite() && out.value > 0.0,
                 "{kind}: bad value {}",
@@ -578,6 +752,119 @@ mod tests {
             assert_eq!(stats.dim, 10, "{kind}: kernel stats dim");
             assert!(stats.nnz > 0 && stats.rank > 0, "{kind}: empty kernel stats");
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_new_surface() {
+        let (m, r, c) = workload(10, 21);
+        let cfg = SinkhornConfig::fixed(9.0, 40);
+        let mut rng = seeded_rng(34);
+        let r2 = Histogram::sample_uniform(10, &mut rng);
+        let c2 = Histogram::sample_uniform(10, &mut rng);
+        for kind in [BackendKind::Dense, BackendKind::Interleaved, BackendKind::Greenkhorn] {
+            let backend = kind.build(&m, cfg);
+            let new = backend.solve(&r, &c, &ScalingInit::Cold);
+            let old = backend.solve_pair(&r, &c);
+            assert_eq!(old.value, new.value, "{kind}: solve_pair shim drifted");
+            let seeded_old = backend.solve_pair_init(&r, &c, None);
+            assert_eq!(seeded_old.value, new.value, "{kind}: None seed != Cold");
+            let rs = [&r, &r2];
+            let cs = [c.clone(), c2.clone()];
+            let panel_old = backend.solve_panel_paired(&rs, &cs);
+            let panel_new = backend.solve_paired(&rs, &cs, &[]);
+            for (o, n) in panel_old.iter().zip(&panel_new) {
+                assert_eq!(o.value, n.value, "{kind}: paired shim drifted");
+            }
+            let inits = vec![None, None];
+            let seeded_panel = backend.solve_panel_paired_init(&rs, &cs, &inits);
+            for (o, n) in seeded_panel.iter().zip(&panel_new) {
+                assert_eq!(o.value, n.value, "{kind}: init shim drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn every_certified_backend_brackets_its_own_estimate() {
+        // A tight convergence run: the served value must land inside the
+        // backend's own certificate for every strategy that issues one.
+        let (m, r, c) = workload(10, 5);
+        let mut cfg = SinkhornConfig::converged(9.0);
+        cfg.tolerance = 1e-12;
+        for kind in [
+            BackendKind::Dense,
+            BackendKind::LogDomain,
+            BackendKind::Interleaved,
+            BackendKind::Greenkhorn,
+            BackendKind::Truncated,
+            BackendKind::LowRank,
+        ] {
+            let backend = kind.build(&m, cfg);
+            let outcome = backend.solve_outcome(
+                &r,
+                &c,
+                &ScalingInit::Cold,
+                SolveBudget::Unbounded,
+            );
+            assert!(
+                outcome.interval.hi.is_finite(),
+                "{kind}: no certificate on a converged solve"
+            );
+            // Truncated/low-rank estimates price the *approximate*
+            // kernel's plan, so compare against the exact-cost bracket
+            // with the kernel's own mass-loss as slack.
+            let slack = 1e-9 + backend.kernel_stats().mass_loss;
+            assert!(
+                outcome.estimate >= outcome.interval.lo - slack
+                    && outcome.estimate <= outcome.interval.hi + slack,
+                "{kind}: estimate {} outside [{}, {}]",
+                outcome.estimate,
+                outcome.interval.lo,
+                outcome.interval.hi,
+            );
+        }
+    }
+
+    #[test]
+    fn budgeted_outcomes_tighten_with_iterations() {
+        let (m, r, c) = workload(12, 6);
+        let cfg = SinkhornConfig::fixed(9.0, 400);
+        for kind in [BackendKind::Dense, BackendKind::LogDomain, BackendKind::Interleaved]
+        {
+            let backend = kind.build(&m, cfg);
+            let mut last_width = F::INFINITY;
+            for budget in [8usize, 16, 32, 64] {
+                let out = backend.solve_outcome(
+                    &r,
+                    &c,
+                    &ScalingInit::Cold,
+                    SolveBudget::Iterations(budget),
+                );
+                assert!(out.iterations <= budget, "{kind}: budget overrun");
+                let width = out.interval.width();
+                assert!(
+                    width <= last_width + 1e-12,
+                    "{kind}: width grew {last_width} -> {width} at budget {budget}"
+                );
+                last_width = width;
+            }
+            assert!(last_width.is_finite(), "{kind}: certificate never tightened");
+        }
+    }
+
+    #[test]
+    fn exact_backend_certifies_a_point() {
+        let (m, r, c) = workload(9, 7);
+        let backend = ExactBackend::new(&m);
+        let out = backend.solve_outcome(
+            &r,
+            &c,
+            &ScalingInit::Cold,
+            SolveBudget::Iterations(1),
+        );
+        assert!(out.converged);
+        assert_eq!(out.interval.width(), 0.0, "exact solve must self-certify");
+        assert_eq!(out.interval.lo, out.estimate);
     }
 
     #[test]
@@ -655,7 +942,7 @@ mod tests {
         let backend = BackendKind::Dense.build(&m, cfg);
         let panel = backend.solve_panel(&r, &cs);
         for (c, out) in cs.iter().zip(&panel) {
-            let single = backend.solve_pair(&r, c);
+            let single = backend.solve(&r, c, &ScalingInit::Cold);
             assert!((single.value - out.value).abs() < 1e-12);
         }
     }
@@ -665,7 +952,7 @@ mod tests {
         let (m, r, c) = workload(9, 4);
         let direct = EmdSolver::new(&m).solve(&r, &c).unwrap().cost;
         let backend = ExactBackend::new(&m);
-        let out = backend.solve_pair(&r, &c);
+        let out = backend.solve(&r, &c, &ScalingInit::Cold);
         assert!((out.value - direct).abs() < 1e-12);
         assert!(out.stats.converged);
     }
@@ -674,7 +961,7 @@ mod tests {
     fn exact_backend_reports_failure_as_nan_not_panic() {
         let (m, r, c) = workload(16, 8);
         let backend = ExactBackend::with_pivot_limit(&m, 0);
-        let out = backend.solve_pair(&r, &c);
+        let out = backend.solve(&r, &c, &ScalingInit::Cold);
         if out.value.is_nan() {
             // The expected path: the pivot limit tripped and the failure
             // surfaced as data, not a panic.

@@ -2,6 +2,8 @@
 
 use crate::linalg::KernelStats;
 use crate::retrieval::{RetrievalReport, RuntimeFeedback, ShardGauges};
+use crate::sinkhorn::SolveOutcome;
+use crate::F;
 use std::time::Duration;
 
 /// Running statistics collected by the service thread.
@@ -55,6 +57,22 @@ pub struct Stats {
     /// Per-shard gauges from the most recent runtime feedback push
     /// (the most recently touched corpus).
     retrieval_shards: Vec<ShardGauges>,
+    /// Candidates discarded because their whole certified interval
+    /// cleared the top-k threshold (budgeted retrieval only).
+    pub retrieval_pruned_interval: u64,
+    /// Budget-pass straddlers escalated to a full refine solve.
+    pub retrieval_refined: u64,
+    /// Anytime gauges: queries answered after their own deadline.
+    pub deadline_misses: u64,
+    /// Queries served under a load-shed iteration cap.
+    pub budget_sheds: u64,
+    /// Solves that came back with a finite certified interval.
+    certified: u64,
+    /// Log2 histogram of certified interval widths quantized to ppb
+    /// (1e-9 d^λ units): bucket i = [2^i, 2^{i+1}) ppb.
+    width_buckets: [u64; 32],
+    /// Widest certified interval observed.
+    width_max: F,
 }
 
 /// Throughput/occupancy counters for one executor worker.
@@ -140,11 +158,31 @@ impl Stats {
         self.retrieval_solved += report.solved as u64;
         self.retrieval_pruned += report.pruned as u64;
         self.retrieval_rescued += report.rescued as u64;
+        self.retrieval_pruned_interval += report.pruned_interval as u64;
+        self.retrieval_refined += report.refined as u64;
         if let Some(probe) = report.probe {
             self.recall_probes += 1;
             self.recall_matched += probe.matched as u64;
             self.recall_expected += probe.k as u64;
         }
+    }
+
+    /// Record one served anytime outcome. Only certified (finite-width)
+    /// intervals feed the width histogram; uncertified paths — XLA
+    /// artifacts and unbounded CPU serving — are skipped, so the gauge
+    /// reflects exactly the solves whose accuracy was being traded.
+    pub fn record_outcome(&mut self, outcome: &SolveOutcome) {
+        let width = outcome.interval.width();
+        if !width.is_finite() {
+            return;
+        }
+        self.certified += 1;
+        self.width_max = self.width_max.max(width);
+        // Quantize to ppb so the log2 bucketing has an integer to bite
+        // on; sub-ppb widths land in the bottom bucket.
+        let ppb = (width * 1e9).min(u64::MAX as F) as u64;
+        let bucket = (64 - ppb.max(1).leading_zeros() as usize - 1).min(31);
+        self.width_buckets[bucket] += 1;
     }
 
     pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
@@ -208,6 +246,14 @@ impl Stats {
             retrieval_search_max_us: self.retrieval_search_us_max,
             retrieval_queue_depth: self.retrieval_queue_depth,
             retrieval_shards: self.retrieval_shards.clone(),
+            retrieval_pruned_interval: self.retrieval_pruned_interval,
+            retrieval_refined: self.retrieval_refined,
+            deadline_misses: self.deadline_misses,
+            budget_sheds: self.budget_sheds,
+            certified_solves: self.certified,
+            interval_width_p50: self.width_quantile(0.50),
+            interval_width_p99: self.width_quantile(0.99),
+            interval_width_max: self.width_max,
         }
     }
 
@@ -226,6 +272,24 @@ impl Stats {
             }
         }
         self.lat_max_us
+    }
+
+    /// Approximate interval-width quantile (upper bucket edge, back in
+    /// absolute d^λ units).
+    fn width_quantile(&self, q: f64) -> F {
+        let total: u64 = self.width_buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &count) in self.width_buckets.iter().enumerate() {
+            seen += count;
+            if seen >= target {
+                return (1u64 << (i + 1)) as F * 1e-9;
+            }
+        }
+        self.width_max
     }
 }
 
@@ -284,6 +348,26 @@ pub struct StatsSnapshot {
     /// live count, tombstone fraction, compactions, inserts, searches,
     /// last per-shard search walltime).
     pub retrieval_shards: Vec<ShardGauges>,
+    /// Candidates discarded because their whole certified interval
+    /// cleared the top-k threshold (budgeted retrieval only).
+    pub retrieval_pruned_interval: u64,
+    /// Budget-pass straddlers escalated to a full refine solve.
+    pub retrieval_refined: u64,
+    /// Queries answered after their own [`crate::sinkhorn::SolveBudget`]
+    /// deadline had already passed.
+    pub deadline_misses: u64,
+    /// Queries served under a load-shed iteration cap (see
+    /// [`super::CoordinatorConfig::shed_iterations`]).
+    pub budget_sheds: u64,
+    /// Solves served with a finite certified error interval.
+    pub certified_solves: u64,
+    /// Approximate median certified interval width (log2-bucketed,
+    /// upper edge; 0.0 before any certified solve).
+    pub interval_width_p50: F,
+    /// Approximate 99th-percentile certified interval width.
+    pub interval_width_p99: F,
+    /// Widest certified interval served.
+    pub interval_width_max: F,
 }
 
 impl StatsSnapshot {
@@ -374,6 +458,22 @@ impl std::fmt::Display for StatsSnapshot {
                 k.mass_loss
             )?;
         }
+        if self.certified_solves > 0
+            || self.deadline_misses > 0
+            || self.budget_sheds > 0
+        {
+            write!(
+                f,
+                " anytime(certified={}, width(p50~{:.2e}, p99~{:.2e}, \
+                 max={:.2e}), deadline_miss={}, shed={})",
+                self.certified_solves,
+                self.interval_width_p50,
+                self.interval_width_p99,
+                self.interval_width_max,
+                self.deadline_misses,
+                self.budget_sheds
+            )?;
+        }
         if self.retrievals > 0 {
             write!(
                 f,
@@ -384,6 +484,13 @@ impl std::fmt::Display for StatsSnapshot {
                 self.retrieval_pruned_fraction(),
                 self.retrieval_rescued
             )?;
+            if self.retrieval_pruned_interval > 0 || self.retrieval_refined > 0 {
+                write!(
+                    f,
+                    " rinterval(pruned={}, refined={})",
+                    self.retrieval_pruned_interval, self.retrieval_refined
+                )?;
+            }
         }
         if self.recall_probes > 0 {
             write!(
@@ -534,6 +641,8 @@ mod tests {
             pruned_mass: 20,
             pruned_centroid: 40,
             pruned_projection: 100,
+            pruned_interval: 7,
+            refined: 5,
             threshold: 0.5,
             probe: Some(ProbeOutcome { matched: 10, k: 10 }),
         };
@@ -551,6 +660,50 @@ mod tests {
         let line = snap.to_string();
         assert!(line.contains("retrieval(queries=2"));
         assert!(line.contains("recall(probes=1"));
+        assert_eq!(snap.retrieval_pruned_interval, 14);
+        assert_eq!(snap.retrieval_refined, 10);
+        assert!(line.contains("rinterval(pruned=14, refined=10)"));
+    }
+
+    #[test]
+    fn anytime_gauges_accumulate_and_render() {
+        use crate::sinkhorn::{ErrorInterval, SolveOutcome};
+        let mut s = Stats::default();
+        let snap = s.snapshot();
+        assert_eq!(snap.certified_solves, 0);
+        assert_eq!(snap.interval_width_p50, 0.0);
+        assert!(!snap.to_string().contains("anytime("));
+        // Uncertified outcomes are skipped entirely.
+        s.record_outcome(&SolveOutcome::uncertified(1.0));
+        assert_eq!(s.snapshot().certified_solves, 0);
+        let certified = |width: F| SolveOutcome {
+            estimate: 1.0,
+            interval: ErrorInterval { lo: 1.0 - width / 2.0, hi: 1.0 + width / 2.0 },
+            iterations: 10,
+            stabilized: false,
+            converged: false,
+        };
+        for _ in 0..9 {
+            s.record_outcome(&certified(1e-6));
+        }
+        s.record_outcome(&certified(0.5));
+        s.deadline_misses = 2;
+        s.budget_sheds = 3;
+        let snap = s.snapshot();
+        assert_eq!(snap.certified_solves, 10);
+        assert!(
+            snap.interval_width_p50 <= snap.interval_width_p99,
+            "{} vs {}",
+            snap.interval_width_p50,
+            snap.interval_width_p99
+        );
+        assert!(snap.interval_width_p50 < 1e-4, "p50 near the 1e-6 mass");
+        assert!(snap.interval_width_p99 >= 0.25, "p99 sees the wide tail");
+        assert!((snap.interval_width_max - 0.5).abs() < 1e-12);
+        let line = snap.to_string();
+        assert!(line.contains("anytime(certified=10"));
+        assert!(line.contains("deadline_miss=2"));
+        assert!(line.contains("shed=3"));
     }
 
     #[test]
@@ -576,6 +729,8 @@ mod tests {
             pruned_mass: 10,
             pruned_centroid: 30,
             pruned_projection: 40,
+            pruned_interval: 0,
+            refined: 0,
             threshold: 0.4,
             probe: Some(ProbeOutcome { matched: 5, k: 5 }),
         };

@@ -35,7 +35,7 @@ pub use metrics::{StatsSnapshot, WorkerSnapshot};
 pub use service::{DistanceService, ServiceError};
 
 use crate::simplex::Histogram;
-use crate::sinkhorn::LambdaSchedule;
+use crate::sinkhorn::{LambdaSchedule, SolveBudget, SolveOutcome};
 use crate::F;
 
 /// Identifier of a registered ground metric.
@@ -88,19 +88,49 @@ pub struct Query {
     pub r: Histogram,
     /// Target histogram.
     pub c: Histogram,
+    /// Anytime budget for this query. [`SolveBudget::Unbounded`] (the
+    /// `Query::new` default) serves exactly as before; a deadline or
+    /// iteration cap turns the CPU solve into a certified anytime solve
+    /// whose [`QueryResult::outcome`] interval brackets the exact d^λ.
+    /// Queries sharing one batch share one budget: the batch runs under
+    /// the *tightest* member budget (earliest deadline wins).
+    pub budget: SolveBudget,
+}
+
+impl Query {
+    /// A query with the default unbounded budget (today's behavior).
+    pub fn new(metric: MetricId, lambda: F, r: Histogram, c: Histogram) -> Self {
+        Self { metric, lambda, r, c, budget: SolveBudget::Unbounded }
+    }
+
+    /// Attach an anytime budget (deadline or iteration cap).
+    pub fn with_budget(mut self, budget: SolveBudget) -> Self {
+        self.budget = budget;
+        self
+    }
 }
 
 /// Completed query result.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
-    /// The dual-Sinkhorn divergence d_M^λ(r, c).
-    pub distance: F,
+    /// The served solve: estimate, certified error interval and run
+    /// metadata (iterations, stabilization, convergence). Uncertified
+    /// paths (XLA artifacts) carry a vacuous interval.
+    pub outcome: SolveOutcome,
     /// Backend that served it.
     pub engine: EngineKind,
     /// How many queries shared the executed batch.
     pub batch_size: usize,
     /// Queue wait + execution, in microseconds.
     pub latency_us: u64,
+}
+
+impl QueryResult {
+    /// The dual-Sinkhorn divergence d_M^λ(r, c) (the estimate; callers
+    /// needing certified bounds read [`Self::outcome`] directly).
+    pub fn distance(&self) -> F {
+        self.outcome.estimate
+    }
 }
 
 /// Service configuration.
@@ -209,6 +239,21 @@ pub struct CoordinatorConfig {
     /// worker budget divides across them, so a sharded search does not
     /// oversubscribe the machine.
     pub retrieval_threads: usize,
+    /// Load shedding: when a batch reaches the engine already *late* —
+    /// its oldest query waited more than twice the batcher's
+    /// `max_delay`, i.e. the engine was backlogged past the flush
+    /// deadline it promised — cap the CPU solve at this many iterations
+    /// instead of letting the backlog compound. Shed solves come back
+    /// certified ([`QueryResult::outcome`] carries the interval), so
+    /// accuracy is traded visibly, not silently; the `budget_sheds`
+    /// gauge counts affected queries. `None` (the default) never sheds.
+    pub shed_iterations: Option<usize>,
+    /// Anytime budget for retrieval refine solves: bounded budgets turn
+    /// the refine stage into a certified cheap pass that prunes
+    /// candidates whose whole interval clears the top-k threshold and
+    /// fully re-solves only the straddlers. [`SolveBudget::Unbounded`]
+    /// (the default) reproduces the exact pipeline bit-identically.
+    pub retrieval_budget: SolveBudget,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -254,6 +299,8 @@ impl Default for CoordinatorConfig {
             retrieval_probe_every: 0,
             retrieval_shards: 1,
             retrieval_threads: 0,
+            shed_iterations: None,
+            retrieval_budget: SolveBudget::Unbounded,
         }
     }
 }
@@ -263,5 +310,322 @@ impl CoordinatorConfig {
     /// as the baseline in the batching ablation bench.
     pub fn cpu_only() -> Self {
         Self { artifact_dir: None, ..Default::default() }
+    }
+
+    /// A validating builder: every knob checked at construction, so a
+    /// malformed config fails fast with the offending knob named instead
+    /// of killing the engine thread at the first cold solve.
+    pub fn builder() -> CoordinatorConfigBuilder {
+        CoordinatorConfigBuilder { config: Self::default() }
+    }
+
+    /// Validate every knob. [`DistanceService::start`] calls this, so
+    /// struct-literal configs get the same fail-fast treatment as
+    /// builder-made ones; the builder merely moves the failure to
+    /// construction time.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cpu_iterations == 0 {
+            return Err("cpu_iterations must be at least 1".into());
+        }
+        if self.cpu_workers == 0 {
+            return Err("cpu_workers must be at least 1".into());
+        }
+        if self.batcher.max_batch == 0 {
+            return Err("batcher.max_batch must be at least 1".into());
+        }
+        if let Some(ws) = self.warm_start {
+            if ws.capacity == 0 {
+                return Err("warm_start.capacity must be at least 1".into());
+            }
+            if !(ws.tolerance > 0.0 && ws.tolerance.is_finite()) {
+                return Err(format!(
+                    "warm_start.tolerance must be positive and finite \
+                     (got {})",
+                    ws.tolerance
+                ));
+            }
+            if ws.max_iterations == 0 {
+                return Err("warm_start.max_iterations must be at least 1".into());
+            }
+        }
+        if self.shed_iterations == Some(0) {
+            return Err(
+                "shed_iterations must be at least 1 when set (shedding to \
+                 zero iterations would serve the cold initialization)"
+                    .into(),
+            );
+        }
+        // The anneal schedule is only consulted inside the engine thread
+        // at the first cold CPU solve, where its asserts would kill the
+        // thread (and every in-flight query) long after startup looked
+        // healthy.
+        if let LambdaSchedule::Geometric { lambda0, factor, .. } = self.anneal {
+            if lambda0 <= 0.0
+                || !lambda0.is_finite()
+                || factor <= 1.0
+                || !factor.is_finite()
+            {
+                return Err(format!(
+                    "anneal schedule needs lambda0 > 0 and factor > 1 \
+                     (got lambda0={lambda0}, factor={factor})"
+                ));
+            }
+        }
+        // Same fail-fast treatment for the kernel policy: its parameter
+        // asserts otherwise fire at KernelPolicy::build inside the
+        // engine thread.
+        match self.kernel {
+            crate::linalg::KernelPolicy::Truncated { threshold } => {
+                if !(threshold >= 0.0 && threshold < 1.0) {
+                    return Err(format!(
+                        "truncation threshold must be in [0, 1) (got {threshold})"
+                    ));
+                }
+            }
+            crate::linalg::KernelPolicy::LowRank { tolerance, .. } => {
+                if !(tolerance >= 0.0 && tolerance.is_finite()) {
+                    return Err(format!(
+                        "low-rank tolerance must be finite and >= 0 \
+                         (got {tolerance})"
+                    ));
+                }
+            }
+            crate::linalg::KernelPolicy::Dense
+            | crate::linalg::KernelPolicy::Auto => {}
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`CoordinatorConfig`] whose [`Self::build`] validates
+/// every knob (see [`CoordinatorConfig::validate`] for the rules).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfigBuilder {
+    config: CoordinatorConfig,
+}
+
+impl CoordinatorConfigBuilder {
+    /// Serve from AOT artifacts in `dir` (CPU fallback still applies).
+    pub fn artifact_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.config.artifact_dir = Some(dir.into());
+        self
+    }
+
+    /// CPU-only serving (no artifacts looked up).
+    pub fn cpu_only(mut self) -> Self {
+        self.config.artifact_dir = None;
+        self
+    }
+
+    pub fn flavor(mut self, flavor: crate::runtime::Flavor) -> Self {
+        self.config.flavor = flavor;
+        self
+    }
+
+    pub fn cpu_fallback(mut self, on: bool) -> Self {
+        self.config.cpu_fallback = on;
+        self
+    }
+
+    pub fn cpu_iterations(mut self, iterations: usize) -> Self {
+        self.config.cpu_iterations = iterations;
+        self
+    }
+
+    pub fn cpu_workers(mut self, workers: usize) -> Self {
+        self.config.cpu_workers = workers;
+        self
+    }
+
+    pub fn cpu_backend(mut self, kind: crate::backend::BackendKind) -> Self {
+        self.config.cpu_backend = Some(kind);
+        self
+    }
+
+    pub fn kernel(mut self, policy: crate::linalg::KernelPolicy) -> Self {
+        self.config.kernel = policy;
+        self
+    }
+
+    pub fn warm_start(mut self, warm: WarmStartConfig) -> Self {
+        self.config.warm_start = Some(warm);
+        self
+    }
+
+    pub fn anneal(mut self, schedule: LambdaSchedule) -> Self {
+        self.config.anneal = schedule;
+        self
+    }
+
+    pub fn batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.config.batcher = batcher;
+        self
+    }
+
+    pub fn retrieval_probe_every(mut self, every: u64) -> Self {
+        self.config.retrieval_probe_every = every;
+        self
+    }
+
+    pub fn retrieval_shards(mut self, shards: usize) -> Self {
+        self.config.retrieval_shards = shards;
+        self
+    }
+
+    pub fn retrieval_threads(mut self, threads: usize) -> Self {
+        self.config.retrieval_threads = threads;
+        self
+    }
+
+    /// See [`CoordinatorConfig::shed_iterations`].
+    pub fn shed_iterations(mut self, iterations: usize) -> Self {
+        self.config.shed_iterations = Some(iterations);
+        self
+    }
+
+    /// See [`CoordinatorConfig::retrieval_budget`].
+    pub fn retrieval_budget(mut self, budget: SolveBudget) -> Self {
+        self.config.retrieval_budget = budget;
+        self
+    }
+
+    /// Validate and produce the config; `Err` names the offending knob.
+    pub fn build(self) -> Result<CoordinatorConfig, String> {
+        self.config.validate()?;
+        Ok(self.config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        CoordinatorConfig::default().validate().unwrap();
+        CoordinatorConfig::cpu_only().validate().unwrap();
+    }
+
+    #[test]
+    fn builder_happy_path_carries_every_knob() {
+        let config = CoordinatorConfig::builder()
+            .cpu_only()
+            .cpu_iterations(100)
+            .cpu_workers(2)
+            .cpu_backend(crate::backend::BackendKind::Dense)
+            .kernel(crate::linalg::KernelPolicy::Dense)
+            .warm_start(WarmStartConfig::default())
+            .anneal(LambdaSchedule::geometric(1.0))
+            .retrieval_probe_every(3)
+            .retrieval_shards(2)
+            .retrieval_threads(1)
+            .shed_iterations(16)
+            .retrieval_budget(SolveBudget::Iterations(64))
+            .build()
+            .unwrap();
+        assert!(config.artifact_dir.is_none());
+        assert_eq!(config.cpu_iterations, 100);
+        assert_eq!(config.cpu_workers, 2);
+        assert_eq!(config.cpu_backend, Some(crate::backend::BackendKind::Dense));
+        assert!(config.warm_start.is_some());
+        assert_eq!(config.retrieval_probe_every, 3);
+        assert_eq!(config.retrieval_shards, 2);
+        assert_eq!(config.retrieval_threads, 1);
+        assert_eq!(config.shed_iterations, Some(16));
+        assert_eq!(config.retrieval_budget, SolveBudget::Iterations(64));
+    }
+
+    #[test]
+    fn zero_cpu_iterations_is_rejected() {
+        let err =
+            CoordinatorConfig::builder().cpu_iterations(0).build().unwrap_err();
+        assert!(err.contains("cpu_iterations"), "{err}");
+    }
+
+    #[test]
+    fn zero_cpu_workers_is_rejected() {
+        let err = CoordinatorConfig::builder().cpu_workers(0).build().unwrap_err();
+        assert!(err.contains("cpu_workers"), "{err}");
+    }
+
+    #[test]
+    fn zero_max_batch_is_rejected() {
+        let err = CoordinatorConfig::builder()
+            .batcher(BatcherConfig { max_batch: 0, ..BatcherConfig::default() })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("max_batch"), "{err}");
+    }
+
+    #[test]
+    fn bad_warm_start_knobs_are_rejected_individually() {
+        let base = WarmStartConfig::default();
+        for (ws, knob) in [
+            (WarmStartConfig { capacity: 0, ..base }, "capacity"),
+            (WarmStartConfig { tolerance: 0.0, ..base }, "tolerance"),
+            (WarmStartConfig { tolerance: F::NAN, ..base }, "tolerance"),
+            (WarmStartConfig { max_iterations: 0, ..base }, "max_iterations"),
+        ] {
+            let err =
+                CoordinatorConfig::builder().warm_start(ws).build().unwrap_err();
+            assert!(err.contains(knob), "expected {knob} in: {err}");
+        }
+    }
+
+    #[test]
+    fn zero_shed_iterations_is_rejected() {
+        let err =
+            CoordinatorConfig::builder().shed_iterations(0).build().unwrap_err();
+        assert!(err.contains("shed_iterations"), "{err}");
+    }
+
+    #[test]
+    fn malformed_anneal_is_rejected() {
+        for schedule in [
+            LambdaSchedule::Geometric {
+                lambda0: 0.0,
+                factor: 3.0,
+                stage_iterations: 30,
+            },
+            LambdaSchedule::Geometric {
+                lambda0: 1.0,
+                factor: 1.0,
+                stage_iterations: 30,
+            },
+        ] {
+            let err =
+                CoordinatorConfig::builder().anneal(schedule).build().unwrap_err();
+            assert!(err.contains("anneal"), "{err}");
+        }
+    }
+
+    #[test]
+    fn malformed_kernel_policy_is_rejected() {
+        use crate::linalg::KernelPolicy;
+        for policy in [
+            KernelPolicy::Truncated { threshold: 1.0 },
+            KernelPolicy::Truncated { threshold: -0.1 },
+            KernelPolicy::LowRank { max_rank: 0, tolerance: -1.0 },
+        ] {
+            let err =
+                CoordinatorConfig::builder().kernel(policy).build().unwrap_err();
+            assert!(
+                err.contains("threshold") || err.contains("tolerance"),
+                "{err}"
+            );
+        }
+    }
+
+    #[test]
+    fn query_builder_defaults_to_unbounded() {
+        let q = Query::new(
+            MetricId(0),
+            9.0,
+            Histogram::uniform(4),
+            Histogram::uniform(4),
+        );
+        assert!(q.budget.is_unbounded());
+        let q = q.with_budget(SolveBudget::Iterations(8));
+        assert_eq!(q.budget.iteration_cap(), Some(8));
     }
 }

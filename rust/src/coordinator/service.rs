@@ -28,7 +28,7 @@ use crate::retrieval::{
 };
 use crate::runtime::{RuntimeError, XlaRuntime};
 use crate::simplex::Histogram;
-use crate::sinkhorn::SinkhornConfig;
+use crate::sinkhorn::{SinkhornConfig, SolveBudget, SolveOutcome};
 use crate::F;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -149,42 +149,13 @@ impl DistanceService {
     /// *inside* the engine thread; the init outcome is reported back over
     /// a one-shot channel before this returns.
     pub fn start(config: CoordinatorConfig) -> Result<Self, ServiceError> {
-        // Fail fast on a malformed anneal schedule: the schedule is only
-        // consulted inside the engine thread at the first cold CPU solve,
-        // where its asserts would kill the thread (and with it every
-        // in-flight query) long after startup looked healthy.
-        if let crate::sinkhorn::LambdaSchedule::Geometric { lambda0, factor, .. } =
-            config.anneal
-        {
-            if lambda0 <= 0.0 || !lambda0.is_finite() || factor <= 1.0 || !factor.is_finite()
-            {
-                return Err(ServiceError::InvalidConfig(format!(
-                    "anneal schedule needs lambda0 > 0 and factor > 1 \
-                     (got lambda0={lambda0}, factor={factor})"
-                )));
-            }
-        }
-        // Same fail-fast treatment for the kernel policy: its parameter
-        // asserts otherwise fire inside the engine thread at the first
-        // cold CPU solve (KernelPolicy::build), killing every in-flight
-        // query long after startup looked healthy.
-        match config.kernel {
-            crate::linalg::KernelPolicy::Truncated { threshold } => {
-                if !(threshold >= 0.0 && threshold < 1.0) {
-                    return Err(ServiceError::InvalidConfig(format!(
-                        "truncation threshold must be in [0, 1) (got {threshold})"
-                    )));
-                }
-            }
-            crate::linalg::KernelPolicy::LowRank { tolerance, .. } => {
-                if !(tolerance >= 0.0 && tolerance.is_finite()) {
-                    return Err(ServiceError::InvalidConfig(format!(
-                        "low-rank tolerance must be finite and >= 0 (got {tolerance})"
-                    )));
-                }
-            }
-            crate::linalg::KernelPolicy::Dense | crate::linalg::KernelPolicy::Auto => {}
-        }
+        // One consolidated validation pass ([`CoordinatorConfig::validate`]):
+        // knobs whose asserts would otherwise fire inside the engine
+        // thread at the first cold solve — killing every in-flight query
+        // long after startup looked healthy — fail fast here instead.
+        // Builder-made configs already passed this; re-running it keeps
+        // struct-literal configs equally safe.
+        config.validate().map_err(ServiceError::InvalidConfig)?;
         let (tx, rx) = channel();
         let (init_tx, init_rx) = channel::<Result<(), ServiceError>>();
         let handle = std::thread::Builder::new()
@@ -638,6 +609,7 @@ impl EngineThread {
             .effective(self.config.cpu_workers)
             .max_batch;
         rc.probe_every = self.config.retrieval_probe_every;
+        rc.budget = self.config.retrieval_budget;
         rc.sinkhorn.kernel = self.config.kernel;
         rc.sinkhorn.schedule = self.config.anneal;
         if let Some(ws) = self.config.warm_start {
@@ -721,10 +693,28 @@ impl EngineThread {
     /// Execute one ready batch on the best available backend.
     fn execute(&mut self, batch: ReadyBatch<Job>) {
         let class = batch.class;
+        let oldest_wait = batch.oldest_wait;
         let jobs = batch.items;
         let size = jobs.len();
         let metric = self.metrics[&class.metric].clone();
         let lambda = class.lambda();
+
+        // Anytime budget: queries sharing the batch share one panel, so
+        // the batch runs under the *tightest* member budget. A flush
+        // that reached the engine backlogged additionally sheds to the
+        // configured iteration cap — accuracy gives way (visibly, via
+        // the certificate) instead of the flush deadline.
+        let mut budget = jobs
+            .iter()
+            .fold(SolveBudget::Unbounded, |acc, j| tightest(acc, j.query.budget));
+        if let Some(cap) = shed_cap(
+            self.config.shed_iterations,
+            oldest_wait,
+            self.config.batcher.max_delay,
+        ) {
+            budget = tightest(budget, SolveBudget::Iterations(cap));
+            self.stats.budget_sheds += size as u64;
+        }
 
         // Prefer the XLA runtime when it has an artifact for this d.
         let use_xla = self
@@ -737,7 +727,12 @@ impl EngineThread {
             match self.execute_xla(&metric, class.metric, lambda, &jobs) {
                 Ok(dists) => {
                     self.stats.record_batch(size, true);
-                    self.respond_all(jobs, dists, EngineKind::Xla, size);
+                    // The artifact's iteration count is baked at AOT
+                    // time: budgets don't apply and no certificate is
+                    // computed, so the outcome interval is vacuous.
+                    let outcomes: Vec<SolveOutcome> =
+                        dists.into_iter().map(SolveOutcome::uncertified).collect();
+                    self.respond_all(jobs, outcomes, EngineKind::Xla, size);
                     return;
                 }
                 Err(e) => {
@@ -805,8 +800,24 @@ impl EngineThread {
             jobs.iter().map(|j| &j.query.r).collect();
         let cs: Vec<crate::simplex::Histogram> =
             jobs.iter().map(|j| j.query.c.clone()).collect();
-        let (outputs, reports) = executor.solve_panel_paired(&rs, &cs);
-        let dists: Vec<F> = outputs.into_iter().map(|o| o.value).collect();
+        let (outcomes, reports) = if budget.is_unbounded() {
+            // Exactly the pre-anytime path (warm stores stay active);
+            // run metadata rides the outcome with a vacuous interval —
+            // certificates are only computed under a budget.
+            let (outputs, reports) = executor.solve_panel_paired(&rs, &cs);
+            let outcomes = outputs
+                .iter()
+                .map(|o| {
+                    SolveOutcome::from_output(
+                        o,
+                        crate::sinkhorn::ErrorInterval::UNBOUNDED,
+                    )
+                })
+                .collect();
+            (outcomes, reports)
+        } else {
+            executor.solve_panel_outcomes(&rs, &cs, &[], budget)
+        };
         // Kernel structure rides on the shard reports (identical across
         // a pool's workers — one record per batch is enough).
         if let Some(report) = reports.first() {
@@ -822,7 +833,7 @@ impl EngineThread {
             );
         }
         self.stats.record_batch(size, false);
-        self.respond_all(jobs, dists, EngineKind::Cpu, size);
+        self.respond_all(jobs, outcomes, EngineKind::Cpu, size);
     }
 
     fn execute_xla(
@@ -867,22 +878,60 @@ impl EngineThread {
     fn respond_all(
         &mut self,
         jobs: Vec<Job>,
-        dists: Vec<F>,
+        outcomes: Vec<SolveOutcome>,
         engine: EngineKind,
         batch_size: usize,
     ) {
-        debug_assert_eq!(jobs.len(), dists.len());
+        debug_assert_eq!(jobs.len(), outcomes.len());
         let now = Instant::now();
-        for (job, distance) in jobs.into_iter().zip(dists) {
+        for (job, outcome) in jobs.into_iter().zip(outcomes) {
             let latency = now.saturating_duration_since(job.enqueued);
             self.stats.record_query_latency(latency);
+            self.stats.record_outcome(&outcome);
+            if let SolveBudget::Deadline(t) = job.query.budget {
+                if now > t {
+                    self.stats.deadline_misses += 1;
+                }
+            }
             let _ = job.respond.send(Ok(QueryResult {
-                distance,
+                outcome,
                 engine,
                 batch_size,
                 latency_us: latency.as_micros().min(u64::MAX as u128) as u64,
             }));
         }
+    }
+}
+
+/// The tighter of two anytime budgets — the one admitting less work.
+/// A smaller cap or earlier deadline wins; in the mixed case the
+/// deadline wins (it is the hard realtime constraint, and the capped
+/// member still stops when the panel's deadline expires).
+fn tightest(a: SolveBudget, b: SolveBudget) -> SolveBudget {
+    use SolveBudget::*;
+    match (a, b) {
+        (Unbounded, x) | (x, Unbounded) => x,
+        (Iterations(m), Iterations(n)) => Iterations(m.min(n)),
+        (Deadline(s), Deadline(t)) => Deadline(s.min(t)),
+        (Deadline(t), Iterations(_)) | (Iterations(_), Deadline(t)) => Deadline(t),
+    }
+}
+
+/// Load-shed decision, kept pure for testability: a batch whose oldest
+/// member already waited more than *twice* the promised flush delay
+/// reached the engine backlogged — the previous batch blew through this
+/// one's deadline — so its solve sheds to the configured iteration cap
+/// and the backlog stops compounding.
+fn shed_cap(
+    shed_iterations: Option<usize>,
+    oldest_wait: Duration,
+    max_delay: Duration,
+) -> Option<usize> {
+    let cap = shed_iterations?;
+    if oldest_wait > max_delay.saturating_mul(2) {
+        Some(cap)
+    } else {
+        None
     }
 }
 
@@ -937,13 +986,13 @@ mod tests {
         let r = Histogram::sample_uniform(12, &mut rng);
         let c = Histogram::sample_uniform(12, &mut rng);
         let res = svc
-            .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: c.clone() })
+            .distance(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
             .unwrap();
         assert_eq!(res.engine, EngineKind::Cpu);
         let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 200))
             .distance(&r, &c)
             .value;
-        assert!((res.distance - want).abs() < 1e-12);
+        assert!((res.distance() - want).abs() < 1e-12);
         svc.shutdown();
     }
 
@@ -953,7 +1002,7 @@ mod tests {
         let mut rng = seeded_rng(2);
         let r = Histogram::sample_uniform(12, &mut rng);
         let err = svc
-            .distance(Query { metric: MetricId(9), lambda: 9.0, r: r.clone(), c: r })
+            .distance(Query::new(MetricId(9), 9.0, r.clone(), r))
             .unwrap_err();
         assert!(matches!(err, ServiceError::UnknownMetric(MetricId(9))));
         svc.shutdown();
@@ -965,7 +1014,7 @@ mod tests {
         let mut rng = seeded_rng(3);
         let r = Histogram::sample_uniform(5, &mut rng);
         let err = svc
-            .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: r })
+            .distance(Query::new(MetricId(0), 9.0, r.clone(), r))
             .unwrap_err();
         assert!(matches!(err, ServiceError::DimensionMismatch { got: 5, want: 12 }));
         svc.shutdown();
@@ -981,7 +1030,7 @@ mod tests {
             .map(|_| {
                 let r = Histogram::sample_uniform(12, &mut rng);
                 let c = Histogram::sample_uniform(12, &mut rng);
-                svc.submit(Query { metric: MetricId(0), lambda: 9.0, r, c }).unwrap()
+                svc.submit(Query::new(MetricId(0), 9.0, r, c)).unwrap()
             })
             .collect();
         let sizes: Vec<usize> = rxs
@@ -1003,7 +1052,7 @@ mod tests {
         let c = Histogram::sample_uniform(12, &mut rng);
         let t0 = Instant::now();
         let res = svc
-            .distance(Query { metric: MetricId(0), lambda: 9.0, r, c })
+            .distance(Query::new(MetricId(0), 9.0, r, c))
             .unwrap();
         // Must have waited for the deadline, not the (huge) size trigger.
         assert!(t0.elapsed() >= Duration::from_millis(5));
@@ -1019,7 +1068,7 @@ mod tests {
             .map(|_| {
                 let r = Histogram::sample_uniform(12, &mut rng);
                 let c = Histogram::sample_uniform(12, &mut rng);
-                svc.submit(Query { metric: MetricId(0), lambda: 3.0, r, c }).unwrap()
+                svc.submit(Query::new(MetricId(0), 3.0, r, c)).unwrap()
             })
             .collect();
         svc.shutdown(); // must flush the queue before joining
@@ -1043,9 +1092,9 @@ mod tests {
                     let c = Histogram::sample_uniform(d, &mut rng);
                     let lambda = if rng.bool(0.5) { 9.0 } else { 3.0 };
                     let res = client
-                        .distance(Query { metric: MetricId(0), lambda, r, c })
+                        .distance(Query::new(MetricId(0), lambda, r, c))
                         .unwrap();
-                    vals.push(res.distance);
+                    vals.push(res.distance());
                 }
                 vals
             }));
@@ -1072,7 +1121,7 @@ mod tests {
             .map(|_| {
                 let r = Histogram::sample_uniform(12, &mut rng);
                 let c = Histogram::sample_uniform(12, &mut rng);
-                svc.submit(Query { metric: MetricId(0), lambda: 9.0, r, c }).unwrap()
+                svc.submit(Query::new(MetricId(0), 9.0, r, c)).unwrap()
             })
             .collect();
         for rx in rxs {
@@ -1112,18 +1161,13 @@ mod tests {
             let rxs: Vec<_> = queries
                 .iter()
                 .map(|(r, c)| {
-                    svc.submit(Query {
-                        metric: MetricId(0),
-                        lambda: 9.0,
-                        r: r.clone(),
-                        c: c.clone(),
-                    })
-                    .unwrap()
+                    svc.submit(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
+                        .unwrap()
                 })
                 .collect();
             answers.push(
                 rxs.into_iter()
-                    .map(|rx| rx.recv().unwrap().unwrap().distance)
+                    .map(|rx| rx.recv().unwrap().unwrap().distance())
                     .collect(),
             );
             svc.shutdown();
@@ -1176,14 +1220,14 @@ mod tests {
         svc.register_metric(MetricId(0), m.clone()).unwrap();
         let r = Histogram::sample_uniform(12, &mut rng);
         let c = Histogram::sample_uniform(12, &mut rng);
-        let query = Query { metric: MetricId(0), lambda: 9.0, r, c };
+        let query = Query::new(MetricId(0), 9.0, r, c);
         // Sequential identical queries: the first misses and populates,
         // the repeats hit.
         let first = svc.distance(query.clone()).unwrap();
         let second = svc.distance(query.clone()).unwrap();
         let third = svc.distance(query).unwrap();
-        assert!((second.distance - first.distance).abs() < 1e-7 * (1.0 + first.distance));
-        assert!((third.distance - first.distance).abs() < 1e-7 * (1.0 + first.distance));
+        assert!((second.distance() - first.distance()).abs() < 1e-7 * (1.0 + first.distance()));
+        assert!((third.distance() - first.distance()).abs() < 1e-7 * (1.0 + first.distance()));
         let snap = svc.stats().unwrap();
         assert!(snap.warm_misses >= 1, "first query must miss: {snap}");
         assert!(snap.warm_hits >= 1, "repeats must hit: {snap}");
@@ -1322,16 +1366,16 @@ mod tests {
         // λ=30 puts plenty of kernel mass under the threshold without
         // approaching the underflow (log-domain) regime.
         let res = svc
-            .distance(Query { metric: MetricId(0), lambda: 30.0, r: r.clone(), c: c.clone() })
+            .distance(Query::new(MetricId(0), 30.0, r.clone(), c.clone()))
             .unwrap();
         assert_eq!(res.engine, EngineKind::Cpu);
         let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(30.0, 200))
             .distance(&r, &c)
             .value;
         assert!(
-            (res.distance - want).abs() < 1e-3 * (1.0 + want),
+            (res.distance() - want).abs() < 1e-3 * (1.0 + want),
             "truncated serving {} vs dense {want}",
-            res.distance
+            res.distance()
         );
         let snap = svc.stats().unwrap();
         let kernel = snap.kernel.expect("kernel gauge after a CPU batch");
@@ -1358,7 +1402,7 @@ mod tests {
         let r = Histogram::sample_uniform(10, &mut rng);
         let c = Histogram::sample_uniform(10, &mut rng);
         let res = svc
-            .distance(Query { metric: MetricId(0), lambda: 9.0, r: r.clone(), c: c.clone() })
+            .distance(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
             .unwrap();
         assert_eq!(res.engine, EngineKind::Cpu);
         // Greenkhorn at a generous budget lands on the same fixed point.
@@ -1366,10 +1410,122 @@ mod tests {
             .distance(&r, &c)
             .value;
         assert!(
-            (res.distance - want).abs() < 1e-4 * (1.0 + want),
+            (res.distance() - want).abs() < 1e-4 * (1.0 + want),
             "greenkhorn {} vs dense {want}",
-            res.distance
+            res.distance()
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn budgeted_query_returns_certified_interval() {
+        let (svc, m) = cpu_service(4, 1);
+        let mut rng = seeded_rng(21);
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        let res = svc
+            .distance(
+                Query::new(MetricId(0), 9.0, r.clone(), c.clone())
+                    .with_budget(SolveBudget::Iterations(64)),
+            )
+            .unwrap();
+        let out = &res.outcome;
+        assert!(out.iterations <= 64, "cap honored: {}", out.iterations);
+        assert!(out.interval.width().is_finite(), "budgeted solve certifies");
+        // The certificate must bracket the fully-converged reference.
+        let want = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 2000))
+            .distance(&r, &c)
+            .value;
+        assert!(
+            out.interval.contains(want),
+            "exact {want} outside [{}, {}]",
+            out.interval.lo,
+            out.interval.hi
+        );
+        let snap = svc.stats().unwrap();
+        assert!(snap.certified_solves >= 1);
+        assert!(snap.to_string().contains("anytime(certified="));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_counted_and_still_certified() {
+        let (svc, _m) = cpu_service(4, 1);
+        let mut rng = seeded_rng(22);
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        // A deadline already in the past: the solver still runs at least
+        // one certified slice, and the miss is recorded.
+        let past = Instant::now() - Duration::from_millis(5);
+        let res = svc
+            .distance(
+                Query::new(MetricId(0), 9.0, r, c)
+                    .with_budget(SolveBudget::Deadline(past)),
+            )
+            .unwrap();
+        assert!(res.outcome.interval.width().is_finite());
+        assert!(res.outcome.iterations <= 64, "expired deadline stops early");
+        let snap = svc.stats().unwrap();
+        assert_eq!(snap.deadline_misses, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tightest_budget_rules() {
+        use SolveBudget::*;
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(10);
+        assert!(tightest(Unbounded, Unbounded).is_unbounded());
+        assert!(matches!(tightest(Unbounded, Iterations(7)), Iterations(7)));
+        assert!(matches!(tightest(Iterations(3), Iterations(9)), Iterations(3)));
+        match tightest(Deadline(t1), Deadline(t0)) {
+            Deadline(t) => assert_eq!(t, t0),
+            other => panic!("expected earlier deadline, got {other:?}"),
+        }
+        // Mixed: the deadline is the hard constraint and wins.
+        match tightest(Iterations(3), Deadline(t1)) {
+            Deadline(t) => assert_eq!(t, t1),
+            other => panic!("expected deadline, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shed_cap_triggers_only_when_backlogged() {
+        let max_delay = Duration::from_millis(10);
+        // No shed configured: never sheds.
+        assert_eq!(shed_cap(None, Duration::from_secs(1), max_delay), None);
+        // Configured but the batch flushed on time: no shed.
+        assert_eq!(shed_cap(Some(32), Duration::from_millis(15), max_delay), None);
+        // Oldest member waited more than twice the promised delay: shed.
+        assert_eq!(shed_cap(Some(32), Duration::from_millis(25), max_delay), Some(32));
+    }
+
+    #[test]
+    fn backlogged_batch_sheds_to_iteration_cap() {
+        let mut config = CoordinatorConfig::cpu_only();
+        config.cpu_iterations = 500;
+        config.shed_iterations = Some(16);
+        // A long flush delay with max_batch 1 means the solo query waits
+        // out the full delay before flushing, tripping the 2x shed rule.
+        config.batcher = BatcherConfig {
+            max_batch: 1,
+            max_delay: Duration::from_micros(1),
+            ..BatcherConfig::default()
+        };
+        let svc = DistanceService::start(config).unwrap();
+        let mut rng = seeded_rng(23);
+        let m = RandomMetric::new(12).sample(&mut rng);
+        svc.register_metric(MetricId(0), m).unwrap();
+        let r = Histogram::sample_uniform(12, &mut rng);
+        let c = Histogram::sample_uniform(12, &mut rng);
+        // Prime the engine so a backlog can form, then measure.
+        for _ in 0..4 {
+            let _ = svc.distance(Query::new(MetricId(0), 9.0, r.clone(), c.clone()));
+        }
+        let snap = svc.stats().unwrap();
+        // With a 1us flush promise every batch arrives "late"; at least one
+        // solve must have shed to the 16-iteration cap.
+        assert!(snap.budget_sheds >= 1, "expected sheds, got {}", snap.budget_sheds);
         svc.shutdown();
     }
 }

@@ -72,8 +72,8 @@ pub type F = f64;
 pub mod prelude {
     pub use crate::backend::{BackendKind, ShardedExecutor, SolverBackend};
     pub use crate::coordinator::{
-        BatcherConfig, CoordinatorConfig, DistanceService, Query, QueryResult,
-        WarmStartConfig,
+        BatcherConfig, CoordinatorConfig, CoordinatorConfigBuilder, DistanceService,
+        Query, QueryResult, WarmStartConfig,
     };
     pub use crate::data::{ClusteredCorpus, DigitClass, SyntheticDigits};
     pub use crate::distances::{ClassicalDistance, KernelBuilder};
@@ -87,8 +87,9 @@ pub mod prelude {
     pub use crate::rng::Rng;
     pub use crate::simplex::{seeded_rng, Histogram};
     pub use crate::sinkhorn::{
-        independence_distance, IndependenceKernel, LambdaSchedule, ScalingInit,
-        SinkhornConfig, SinkhornEngine, WarmStartStore,
+        independence_distance, ErrorInterval, IndependenceKernel, LambdaSchedule,
+        ScalingInit, SinkhornConfig, SinkhornEngine, SolveBudget, SolveOutcome,
+        WarmStartStore,
     };
     pub use crate::svm::{MulticlassSvm, SvmConfig};
     pub use crate::F;

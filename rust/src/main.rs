@@ -265,14 +265,14 @@ fn cmd_serve(opts: &Opts) -> Result<(), String> {
             let r = Histogram::sample_uniform(d, &mut rng);
             let c = Histogram::sample_uniform(d, &mut rng);
             service
-                .submit(Query { metric: MetricId(0), lambda, r, c })
+                .submit(Query::new(MetricId(0), lambda, r, c))
                 .map_err(|e| e.to_string())
         })
         .collect::<Result<_, _>>()?;
     let mut sum = 0.0;
     for rx in rxs {
         let res = rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?;
-        sum += res.distance;
+        sum += res.distance();
     }
     let elapsed = t0.elapsed();
     let stats = service.stats().map_err(|e| e.to_string())?;

@@ -555,7 +555,9 @@ mod tests {
         };
         index.warm_deposit(9.0, 1, &out);
         let init = index.warm_init(9.0, 1).expect("cached");
-        assert_eq!(init.u, vec![1.0; 8]);
+        let (u, v) = init.scalings().expect("warm seed carries scalings");
+        assert_eq!(u, &[1.0; 8]);
+        assert_eq!(v, &[2.0; 8]);
         // Different λ or entry misses; unconverged solves are not kept.
         assert!(index.warm_init(3.0, 1).is_none());
         assert!(index.warm_init(9.0, 0).is_none());

@@ -23,7 +23,7 @@
 use super::{BoundCascade, BoundTier, CorpusIndex, RetrievalError};
 use crate::backend::{BackendKind, ShardedExecutor};
 use crate::simplex::Histogram;
-use crate::sinkhorn::{ScalingInit, SinkhornConfig, SinkhornOutput};
+use crate::sinkhorn::{ScalingInit, SinkhornConfig, SinkhornOutput, SolveBudget};
 use crate::F;
 use std::collections::{BinaryHeap, HashMap};
 
@@ -61,6 +61,14 @@ pub struct RetrievalConfig {
     /// Seed refine solves from the index's per-entry warm cache and
     /// deposit converged scalings back.
     pub warm_start: bool,
+    /// Anytime budget of the refine stage. [`SolveBudget::Unbounded`]
+    /// (the default) reproduces the exact pre-anytime pipeline
+    /// bit-identically. A bounded budget turns each refine panel into a
+    /// certified cheap pass: candidates whose whole error interval
+    /// clears the running τ are discarded without further work, and only
+    /// the straddlers — candidates whose interval still contains τ — get
+    /// a full solve.
+    pub budget: SolveBudget,
 }
 
 impl RetrievalConfig {
@@ -84,6 +92,7 @@ impl RetrievalConfig {
             bound_slack: 1e-9,
             probe_every: 0,
             warm_start: true,
+            budget: SolveBudget::Unbounded,
         }
     }
 }
@@ -136,6 +145,12 @@ pub struct RetrievalReport {
     pub warm_seeded: usize,
     /// Total refine fixed-point iterations.
     pub iterations: usize,
+    /// Budgeted candidates discarded because their whole certified
+    /// interval cleared τ (0 on the unbounded path).
+    pub pruned_interval: usize,
+    /// Budgeted straddlers escalated to a full solve (0 on the
+    /// unbounded path).
+    pub refined: usize,
     /// Pruned candidates whose deciding bound was the mass tier.
     pub pruned_mass: usize,
     /// … the centroid tier.
@@ -162,6 +177,8 @@ impl RetrievalReport {
             failed: 0,
             warm_seeded: 0,
             iterations: 0,
+            pruned_interval: 0,
+            refined: 0,
             pruned_mass: 0,
             pruned_centroid: 0,
             pruned_projection: 0,
@@ -552,18 +569,18 @@ impl RetrievalService {
         let lambda = self.config.sinkhorn.lambda;
         // Warm keys are the *stable ids*, not the index slots: cached
         // scalings stay valid across compaction renumbering.
-        let inits: Vec<Option<ScalingInit>> = if self.config.warm_start {
+        let inits: Vec<ScalingInit> = if self.config.warm_start {
             entries
                 .iter()
                 .map(|&e| {
                     let global = self.globals[e];
-                    self.index.warm_init(lambda, global)
+                    self.index.warm_init(lambda, global).unwrap_or_default()
                 })
                 .collect()
         } else {
-            vec![None; entries.len()]
+            vec![ScalingInit::Cold; entries.len()]
         };
-        report.warm_seeded += inits.iter().filter(|i| i.is_some()).count();
+        report.warm_seeded += inits.iter().filter(|i| !i.is_cold()).count();
         // The clone is the price of the SolverBackend panel signature
         // (`cs: &[Histogram]`, owned histograms, fixed since PR 1):
         // borrowing would ripple `&[&Histogram]` through every backend
@@ -572,12 +589,80 @@ impl RetrievalService {
         let cs: Vec<Histogram> =
             entries.iter().map(|&e| self.index.entry(e).clone()).collect();
         let rs: Vec<&Histogram> = entries.iter().map(|_| query).collect();
-        let (outputs, _reports) =
-            self.executor.solve_panel_paired_init(&rs, &cs, &inits);
+        if self.config.budget.is_unbounded() {
+            let (outputs, _reports) =
+                self.executor.solve_panel_paired_init(&rs, &cs, &inits);
+            report.panels += 1;
+            report.solved += outputs.len();
+            for (&e, out) in entries.iter().zip(&outputs) {
+                self.fold_output(e, out, heap, k, report, lambda);
+            }
+            return;
+        }
+        // Anytime refine: one cheap certified pass over the panel, then
+        // the intervals decide who is worth a full solve. A candidate
+        // that converged within the budget folds directly; one whose
+        // whole interval clears τ is discarded; only the straddlers —
+        // interval still containing τ — escalate.
+        let (outcomes, _reports) =
+            self.executor.solve_panel_outcomes(&rs, &cs, &inits, self.config.budget);
         report.panels += 1;
-        report.solved += outputs.len();
-        for (&e, out) in entries.iter().zip(&outputs) {
-            self.fold_output(e, out, heap, k, report, lambda);
+        report.solved += outcomes.len();
+        let mut pending: Vec<usize> = Vec::new();
+        for (pos, (&e, o)) in entries.iter().zip(&outcomes).enumerate() {
+            report.iterations += o.iterations;
+            if !o.estimate.is_finite() {
+                report.failed += 1;
+                continue;
+            }
+            if o.converged {
+                let rescued = o.stabilized
+                    && self.executor.kind() != BackendKind::LogDomain;
+                if rescued {
+                    report.rescued += 1;
+                }
+                heap.push(HeapItem {
+                    distance: o.estimate,
+                    entry: self.globals[e],
+                    rescued,
+                });
+                if heap.len() > k {
+                    heap.pop();
+                }
+                continue;
+            }
+            pending.push(pos);
+        }
+        if pending.is_empty() {
+            return;
+        }
+        let tau = kth_best(heap, k);
+        let slack = self.config.bound_slack * (1.0 + tau.abs());
+        let straddlers: Vec<usize> = pending
+            .into_iter()
+            .filter(|&pos| {
+                if outcomes[pos].interval.lo > tau + slack {
+                    report.pruned_interval += 1;
+                    false
+                } else {
+                    true
+                }
+            })
+            .collect();
+        if straddlers.is_empty() {
+            return;
+        }
+        report.refined += straddlers.len();
+        let sub_rs: Vec<&Histogram> = straddlers.iter().map(|_| query).collect();
+        let sub_cs: Vec<Histogram> =
+            straddlers.iter().map(|&p| cs[p].clone()).collect();
+        let sub_inits: Vec<ScalingInit> =
+            straddlers.iter().map(|&p| inits[p].clone()).collect();
+        let (outputs, _reports) =
+            self.executor.solve_panel_paired_init(&sub_rs, &sub_cs, &sub_inits);
+        report.panels += 1;
+        for (&p, out) in straddlers.iter().zip(&outputs) {
+            self.fold_output(entries[p], out, heap, k, report, lambda);
         }
     }
 
@@ -884,5 +969,63 @@ mod tests {
         let (_, report) = svc.top_k(&q, 3).unwrap();
         let probe = report.probe.expect("probe_every=1 must probe");
         assert_eq!(probe.matched, probe.k, "pruned top-k must equal brute force");
+    }
+
+    #[test]
+    fn generous_budget_matches_unbounded_top_k() {
+        // A budget large enough for every solve to converge must leave
+        // the served top-k identical (modulo ties) to the exact pipeline
+        // — the anytime cascade only ever prunes on *certified* bounds.
+        let mut exact_svc = service(10, 32, 5, 9.0);
+        let mut rng = seeded_rng(105);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (want, _) = exact_svc.top_k(&q, 5).unwrap();
+
+        let mut budgeted = service(10, 32, 5, 9.0);
+        budgeted.config.budget = SolveBudget::Iterations(10_000);
+        let (got, report) = budgeted.top_k(&q, 5).unwrap();
+        if let Err(v) = super::super::topk_equivalent(&got, &want, 1e-7) {
+            panic!("generous budget changed the answer: {v}");
+        }
+        // Everything converged under the generous cap, so the interval
+        // filter had no straddlers to escalate.
+        assert_eq!(report.refined, 0, "no refinement under a generous budget");
+    }
+
+    #[test]
+    fn tight_budget_prunes_on_intervals_and_stays_well_formed() {
+        let mut svc = service(10, 32, 6, 9.0);
+        svc.config.budget = SolveBudget::Iterations(8);
+        let mut rng = seeded_rng(106);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (hits, report) = svc.top_k(&q, 4).unwrap();
+        assert_eq!(hits.len(), 4);
+        for h in &hits {
+            assert!(h.distance.is_finite() && h.distance >= 0.0);
+        }
+        for w in hits.windows(2) {
+            assert!(w[0].distance <= w[1].distance + 1e-15);
+        }
+        // Every candidate is accounted for exactly once across the
+        // cascade tiers and the interval filter.
+        assert!(
+            report.pruned + report.solved == report.corpus,
+            "candidate accounting broke: {report:?}"
+        );
+        // Interval-pruned candidates never went through a full refine.
+        assert!(report.refined + report.pruned_interval <= report.corpus);
+        // The unbounded oracle's top-k distances lower-bound nothing
+        // here — but each served hit must at least match the brute-force
+        // entry set when re-solved exactly. (Smoke-level: the heap never
+        // serves an interval-pruned candidate.)
+        let brute = svc.brute_force(&q, 4).unwrap();
+        let brute_worst = brute.last().unwrap().distance;
+        for h in &hits {
+            assert!(
+                h.distance <= brute_worst + 0.5 * (1.0 + brute_worst),
+                "budgeted hit wildly above the exact top-k band: {} vs {brute_worst}",
+                h.distance
+            );
+        }
     }
 }

@@ -527,6 +527,8 @@ fn merge_results(
         merged.pruned_mass += r.pruned_mass;
         merged.pruned_centroid += r.pruned_centroid;
         merged.pruned_projection += r.pruned_projection;
+        merged.pruned_interval += r.pruned_interval;
+        merged.refined += r.refined;
     }
     sort_canonical(&mut hits);
     let k = k.min(corpus);

@@ -14,6 +14,7 @@
 //! Layout: U, V are (d, N) row-major panels so the inner loop runs
 //! contiguously over the batch dimension.
 
+use super::outcome::{certify, ErrorInterval, SolveBudget, SolveOutcome, CERT_STRIDE};
 use super::{
     op_panel_ratio, op_panel_ratio_transpose, ScalingInit, SinkhornConfig,
     SinkhornOutput, SinkhornStats,
@@ -67,17 +68,141 @@ impl BatchSinkhorn {
         self.distances_paired_init(rs, cs, &[])
     }
 
-    /// [`Self::distances_paired`] with a per-column warm start: `inits[j]`
-    /// seeds column j's scaling (None starts that column uniform). Pass an
-    /// empty slice for an all-cold panel. The ε-scaling prefix runs only
-    /// when every column is cold — warm columns are already (near) fixed
-    /// points at λ★ and annealing them would discard exactly the structure
-    /// the warm start carries.
+    /// [`Self::distances_paired`] with a per-column seed: `inits[j]`
+    /// seeds column j's scaling ([`ScalingInit::Cold`] starts that column
+    /// uniform). Pass an empty slice for an all-cold panel. The
+    /// ε-scaling prefix runs only when every column is cold — warm
+    /// columns are already (near) fixed points at λ★ and annealing them
+    /// would discard exactly the structure the warm start carries.
     pub fn distances_paired_init(
         &self,
         rs: &[&Histogram],
         cs: &[Histogram],
-        inits: &[Option<ScalingInit>],
+        inits: &[ScalingInit],
+    ) -> Vec<SinkhornOutput> {
+        self.paired_inner(rs, cs, inits, None)
+    }
+
+    /// One budget slice of [`Self::distances_paired_init`]: at most
+    /// `cap` panel iterations this call. A capped slice is legitimately
+    /// unconverged, so only diverged/poisoned columns rescue (through an
+    /// equally capped log-domain run); warm-carrying each column's
+    /// scalings into the next capped call continues the panel exactly.
+    pub fn distances_paired_capped(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        cap: usize,
+    ) -> Vec<SinkhornOutput> {
+        self.paired_inner(rs, cs, inits, Some(cap))
+    }
+
+    /// Certify one column's scaling state against this solver's exact
+    /// cost matrix (see [`certify`]) — sound under truncated/low-rank
+    /// kernel policies because the certificate never reads the
+    /// approximate operator.
+    pub fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        certify(&self.m, self.d, self.config.lambda, r.values(), c.values(), out)
+    }
+
+    /// Anytime panel solve: certified [`SolveOutcome`]s under `budget`.
+    /// [`SolveBudget::Unbounded`] runs [`Self::distances_paired_init`]
+    /// unchanged (bit-identical estimates) and certifies each column
+    /// once. Bounded budgets advance the whole panel in
+    /// [`CERT_STRIDE`]-iteration slices — keeping the one-pass-over-K
+    /// amortization — intersecting each column's per-slice certificates,
+    /// and stop when every column converged, the iteration budget is
+    /// spent, or the deadline passes (at least one slice always runs).
+    pub fn outcomes_paired(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        budget: SolveBudget,
+    ) -> Vec<SolveOutcome> {
+        let n = cs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let cap = match budget {
+            SolveBudget::Unbounded => {
+                let outs = self.distances_paired_init(rs, cs, inits);
+                return outs
+                    .iter()
+                    .zip(rs.iter().zip(cs))
+                    .map(|(o, (r, c))| {
+                        SolveOutcome::from_output(o, self.certificate(r, c, o))
+                    })
+                    .collect();
+            }
+            SolveBudget::Iterations(nmax) => Some(nmax.max(1)),
+            SolveBudget::Deadline(_) => None,
+        };
+        let mut carries: Vec<ScalingInit> = if inits.is_empty() {
+            vec![ScalingInit::Cold; n]
+        } else {
+            assert_eq!(inits.len(), n, "warm-start slice size mismatch");
+            inits.to_vec()
+        };
+        let mut intervals = vec![ErrorInterval::UNBOUNDED; n];
+        let mut iterations = vec![0usize; n];
+        let mut stabilized = vec![false; n];
+        let mut spent = 0usize;
+        loop {
+            let step = match cap {
+                Some(nmax) => CERT_STRIDE.min(nmax - spent).max(1),
+                None => CERT_STRIDE,
+            };
+            let outs = self.distances_paired_capped(rs, cs, &carries, step);
+            spent += step;
+            let mut all_done = true;
+            for (j, out) in outs.iter().enumerate() {
+                iterations[j] += out.stats.iterations;
+                stabilized[j] |= out.stats.stabilized;
+                intervals[j] =
+                    intervals[j].intersect(self.certificate(rs[j], &cs[j], out));
+                if !(out.stats.converged
+                    || !out.value.is_finite()
+                    || out.stats.iterations == 0)
+                {
+                    all_done = false;
+                }
+            }
+            let exhausted = match cap {
+                Some(nmax) => spent >= nmax,
+                None => budget.expired(),
+            };
+            if all_done || exhausted {
+                return outs
+                    .iter()
+                    .enumerate()
+                    .map(|(j, out)| SolveOutcome {
+                        estimate: out.value,
+                        interval: intervals[j],
+                        iterations: iterations[j],
+                        stabilized: stabilized[j],
+                        converged: out.stats.converged,
+                    })
+                    .collect();
+            }
+            for (carry, out) in carries.iter_mut().zip(&outs) {
+                *carry = ScalingInit::from_output(out);
+            }
+        }
+    }
+
+    fn paired_inner(
+        &self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        cap: Option<usize>,
     ) -> Vec<SinkhornOutput> {
         let d = self.d;
         let n = cs.len();
@@ -108,11 +233,11 @@ impl BatchSinkhorn {
         let mut u = vec![1.0 / d as F; d * n];
         let mut any_warm = false;
         for (j, seed) in inits.iter().enumerate() {
-            if let Some(seed) = seed {
-                assert_eq!(seed.u.len(), d, "pair {j}: warm-start dimension mismatch");
+            if let Some((su, _)) = seed.scalings() {
+                assert_eq!(su.len(), d, "pair {j}: warm-start dimension mismatch");
                 any_warm = true;
                 for i in 0..d {
-                    u[i * n + j] = seed.u[i];
+                    u[i * n + j] = su[i];
                 }
             }
         }
@@ -138,9 +263,10 @@ impl BatchSinkhorn {
         let approx =
             self.kernel.mass_loss() > 0.0 || self.kernel.frobenius_budget() > 0.0;
         let convergence_mode = cfg.check_every != usize::MAX;
+        let max_iterations = cap.unwrap_or(cfg.max_iterations);
         let mut iter = 0;
         let mut diverged = false;
-        while iter < cfg.max_iterations {
+        while iter < max_iterations {
             iter += 1;
             op_panel_ratio_transpose(&*self.kernel, &u, &c_panel, &mut v, n);
             std::mem::swap(&mut u, &mut u_prev);
@@ -208,8 +334,11 @@ impl BatchSinkhorn {
         // disconnected truncated support zeroes the cut-off bins and the
         // stalled state even passes the ‖Δu‖ check. Gated on
         // `auto_stabilize` like every other dense→log rescue.
+        // A capped slice is legitimately unconverged — only diverged
+        // panels and poisoned columns rescue there, under the same cap.
         let rescue_all = cfg.auto_stabilize
-            && (diverged || (approx && convergence_mode && !stats.converged));
+            && (diverged
+                || (cap.is_none() && approx && convergence_mode && !stats.converged));
         let column_bad = |j: usize, value: F| -> bool {
             if !value.is_finite() {
                 return true;
@@ -230,15 +359,16 @@ impl BatchSinkhorn {
         (0..n)
             .map(|j| {
                 if cfg.auto_stabilize && (rescue_all || column_bad(j, dist[j])) {
-                    let init = inits.get(j).and_then(|i| i.as_ref());
-                    return super::log_domain::solve_init(
+                    let init = inits.get(j).cloned().unwrap_or_default();
+                    return super::log_domain::solve_inner(
                         &self.m,
                         d,
                         self.config.lambda,
                         cfg,
                         rs[j].values(),
                         cs[j].values(),
-                        init,
+                        &init,
+                        cap,
                     );
                 }
                 SinkhornOutput {
@@ -353,8 +483,8 @@ mod tests {
         let r_refs: Vec<&Histogram> = (0..4).map(|_| &r).collect();
         let cold = batch.distances_paired(&r_refs, &cs);
         assert!(cold[0].stats.converged);
-        let inits: Vec<Option<crate::sinkhorn::ScalingInit>> =
-            cold.iter().map(|o| Some(crate::sinkhorn::ScalingInit::from_output(o))).collect();
+        let inits: Vec<crate::sinkhorn::ScalingInit> =
+            cold.iter().map(crate::sinkhorn::ScalingInit::from_output).collect();
         let warm = batch.distances_paired_init(&r_refs, &cs, &inits);
         assert!(warm[0].stats.converged);
         assert!(
@@ -395,6 +525,67 @@ mod tests {
                 a.value,
                 b.value
             );
+        }
+    }
+
+    #[test]
+    fn panel_outcomes_bracket_and_reproduce_unbounded() {
+        let mut rng = seeded_rng(23);
+        let d = 12;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let lam = 9.0;
+        let cfg = SinkhornConfig::fixed(lam, 40);
+        let batch = BatchSinkhorn::new(&m, cfg);
+        let rs: Vec<Histogram> =
+            (0..4).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let cs: Vec<Histogram> =
+            (0..4).map(|_| Histogram::sample_uniform(d, &mut rng)).collect();
+        let r_refs: Vec<&Histogram> = rs.iter().collect();
+        // References via the tight scalar engine.
+        let tight = SinkhornEngine::with_config(
+            &m,
+            SinkhornConfig {
+                lambda: lam,
+                tolerance: 1e-12,
+                max_iterations: 200_000,
+                ..Default::default()
+            },
+        );
+        let exact: Vec<F> =
+            (0..4).map(|j| tight.distance(&rs[j], &cs[j]).value).collect();
+        // Unbounded reproduces distances_paired bit-for-bit.
+        let plain = batch.distances_paired(&r_refs, &cs);
+        let outcomes =
+            batch.outcomes_paired(&r_refs, &cs, &[], SolveBudget::Unbounded);
+        for j in 0..4 {
+            assert_eq!(outcomes[j].estimate, plain[j].value);
+            assert!(
+                outcomes[j].interval.contains(exact[j]),
+                "pair {j}: exact {} outside {:?}",
+                exact[j],
+                outcomes[j].interval
+            );
+        }
+        // Budgeted: per-column widths shrink with the budget.
+        let narrow = batch.outcomes_paired(
+            &r_refs,
+            &cs,
+            &[],
+            SolveBudget::Iterations(32),
+        );
+        let wide =
+            batch.outcomes_paired(&r_refs, &cs, &[], SolveBudget::Iterations(8));
+        for j in 0..4 {
+            assert!(wide[j].interval.contains(exact[j]), "pair {j} at budget 8");
+            assert!(narrow[j].interval.contains(exact[j]), "pair {j} at budget 32");
+            assert!(
+                narrow[j].interval.width() <= wide[j].interval.width() + 1e-12,
+                "pair {j}: width grew {} -> {}",
+                wide[j].interval.width(),
+                narrow[j].interval.width()
+            );
+            assert_eq!(wide[j].iterations, 8);
+            assert_eq!(narrow[j].iterations, 32);
         }
     }
 

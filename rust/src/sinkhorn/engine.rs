@@ -13,6 +13,7 @@
 //!   iteration regardless of batch width (the vectorization the paper
 //!   credits for GPGPU speed, recreated in cache terms).
 
+use super::outcome::{certify, drive_budgeted, ErrorInterval, SolveBudget, SolveOutcome};
 use super::{op_ratio, op_ratio_transpose, ScalingInit, SinkhornConfig};
 use crate::linalg::{KernelOp, KernelStats};
 use crate::metric::CostMatrix;
@@ -123,19 +124,19 @@ impl SinkhornEngine {
 
     /// d_M^λ(r, c) for a single pair.
     pub fn distance(&self, r: &Histogram, c: &Histogram) -> SinkhornOutput {
-        self.distance_init(r, c, None)
+        self.distance_init(r, c, &ScalingInit::Cold)
     }
 
-    /// d_M^λ(r, c) seeded with an initial scaling pair (a warm start).
-    /// `None` starts cold: from the uniform scaling, through the
-    /// ε-scaling prefix when the config carries a
-    /// [`super::LambdaSchedule::Geometric`] schedule. A warm start skips
-    /// the anneal prefix — it is already (near) a fixed point at λ.
+    /// d_M^λ(r, c) seeded by `init`. [`ScalingInit::Cold`] starts from
+    /// the uniform scaling, through the ε-scaling prefix when the config
+    /// carries a [`super::LambdaSchedule::Geometric`] schedule. A
+    /// [`ScalingInit::Warm`] seed skips the anneal prefix — it is
+    /// already (near) a fixed point at λ.
     pub fn distance_init(
         &self,
         r: &Histogram,
         c: &Histogram,
-        init: Option<&ScalingInit>,
+        init: &ScalingInit,
     ) -> SinkhornOutput {
         assert_eq!(r.dim(), self.d, "source dimension mismatch");
         assert_eq!(c.dim(), self.d, "target dimension mismatch");
@@ -144,7 +145,66 @@ impl SinkhornEngine {
                 &self.m, self.d, self.lambda, &self.config, r.values(), c.values(), init,
             );
         }
-        self.solve_dense(r.values(), c.values(), init)
+        self.solve_dense(r.values(), c.values(), init, None)
+    }
+
+    /// One budget slice: at most `cap` fixed-point iterations from
+    /// `init`, replacing the config's iteration cap for this call. A
+    /// capped slice is legitimately unconverged, so the approximate-
+    /// kernel "unconverged ⇒ rescue" clause is suppressed (poisoned and
+    /// diverged states still rescue — through an equally capped
+    /// log-domain run). Slices nest: warm-carrying a capped solve's
+    /// scalings into the next capped solve reproduces one long run
+    /// bit-for-bit on the dense path.
+    pub fn distance_capped(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        cap: usize,
+    ) -> SinkhornOutput {
+        assert_eq!(r.dim(), self.d, "source dimension mismatch");
+        assert_eq!(c.dim(), self.d, "target dimension mismatch");
+        if self.degenerate {
+            return super::log_domain::solve_capped(
+                &self.m, self.d, self.lambda, &self.config, r.values(), c.values(), init,
+                cap,
+            );
+        }
+        self.solve_dense(r.values(), c.values(), init, Some(cap))
+    }
+
+    /// Certify a solve's scaling state against this engine's exact cost
+    /// matrix: a [two-sided bound](certify) on the exact d^λ, sound even
+    /// when the engine iterates a truncated or low-rank kernel.
+    pub fn certificate(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        out: &SinkhornOutput,
+    ) -> ErrorInterval {
+        certify(&self.m, self.d, self.lambda, r.values(), c.values(), out)
+    }
+
+    /// Anytime solve: the certified [`SolveOutcome`] under `budget`.
+    /// [`SolveBudget::Unbounded`] runs [`Self::distance_init`] unchanged
+    /// (bit-identical estimate) and certifies once; bounded budgets
+    /// iterate in certificate slices, intersecting the per-slice
+    /// intervals.
+    pub fn distance_outcome(
+        &self,
+        r: &Histogram,
+        c: &Histogram,
+        init: &ScalingInit,
+        budget: SolveBudget,
+    ) -> SolveOutcome {
+        drive_budgeted(
+            budget,
+            init,
+            |seed| self.distance_init(r, c, seed),
+            |seed, cap| self.distance_capped(r, c, seed, cap),
+            |out| self.certificate(r, c, out),
+        )
     }
 
     /// Batched d_M^λ(r, c_j) for a family of targets (Algorithm 1's
@@ -159,12 +219,12 @@ impl SinkhornEngine {
     /// [`Self::distance`].
     pub fn distances_batch(&self, r: &Histogram, cs: &[Histogram]) -> Vec<SinkhornOutput> {
         let reuse = self.config.check_every != usize::MAX;
-        let mut carry: Option<ScalingInit> = None;
+        let mut carry = ScalingInit::Cold;
         cs.iter()
             .map(|c| {
-                let out = self.distance_init(r, c, carry.as_ref());
+                let out = self.distance_init(r, c, &carry);
                 if reuse && out.stats.converged {
-                    carry = Some(ScalingInit::from_output(&out));
+                    carry = ScalingInit::from_output(&out);
                 }
                 out
             })
@@ -199,21 +259,27 @@ impl SinkhornEngine {
         (p, out)
     }
 
-    fn solve_dense(&self, r: &[F], c: &[F], init: Option<&ScalingInit>) -> SinkhornOutput {
+    fn solve_dense(
+        &self,
+        r: &[F],
+        c: &[F],
+        init: &ScalingInit,
+        cap: Option<usize>,
+    ) -> SinkhornOutput {
         let d = self.d;
         let cfg = &self.config;
         // x is the paper's iterate (x = 1./u); we track u directly and
         // measure the stopping criterion on u (equivalent up to scaling).
         // The column scaling v is recomputed from u at the top of every
         // iteration, so only u needs seeding.
-        let mut u = match init {
-            Some(seed) => {
-                assert_eq!(seed.u.len(), d, "warm-start dimension mismatch");
-                seed.u.clone()
+        let mut u = match init.scalings() {
+            Some((su, _)) => {
+                assert_eq!(su.len(), d, "warm-start dimension mismatch");
+                su.to_vec()
             }
             None => vec![1.0 / d as F; d],
         };
-        let prefix = if init.is_none() {
+        let prefix = if init.is_cold() {
             super::dense_anneal_prefix(
                 &self.m, d, self.lambda, &cfg.schedule, cfg.kernel, r, c, &mut u,
             )
@@ -227,8 +293,9 @@ impl SinkhornEngine {
         let approx = self.kernel.mass_loss() > 0.0
             || self.kernel.frobenius_budget() > 0.0;
         let convergence_mode = cfg.check_every != usize::MAX;
+        let max_iterations = cap.unwrap_or(cfg.max_iterations);
         let mut iter = 0;
-        while iter < cfg.max_iterations {
+        while iter < max_iterations {
             iter += 1;
             // v = c ./ (K' u)
             op_ratio_transpose(&*self.kernel, &u, c, &mut v);
@@ -261,10 +328,12 @@ impl SinkhornEngine {
                     // Blow-up: dense-kernel underflow, or an infeasible
                     // truncated support — retry in log domain (same
                     // auto_stabilize gate as the batch path; with the
-                    // gate off the diverged state is the caller's).
+                    // gate off the diverged state is the caller's). A
+                    // capped slice rescues under the same cap so the
+                    // budget stays honored.
                     if cfg.auto_stabilize {
-                        return super::log_domain::solve_init(
-                            &self.m, d, self.lambda, cfg, r, c, init,
+                        return super::log_domain::solve_inner(
+                            &self.m, d, self.lambda, cfg, r, c, init, cap,
                         );
                     }
                     break;
@@ -290,11 +359,14 @@ impl SinkhornEngine {
             || v.iter().any(|x| !x.is_finite())
             || u.iter().zip(r).any(|(&ui, &ri)| ui == 0.0 && ri > 0.0)
             || v.iter().zip(c).any(|(&vi, &ci)| vi == 0.0 && ci > 0.0);
+        // A capped slice is legitimately unconverged — only poisoned
+        // states rescue there, and under the same cap.
         if cfg.auto_stabilize
-            && (poisoned || (approx && convergence_mode && !stats.converged))
+            && (poisoned
+                || (cap.is_none() && approx && convergence_mode && !stats.converged))
         {
-            return super::log_domain::solve_init(
-                &self.m, d, self.lambda, cfg, r, c, init,
+            return super::log_domain::solve_inner(
+                &self.m, d, self.lambda, cfg, r, c, init, cap,
             );
         }
         SinkhornOutput { value, u, v, stats }
@@ -382,6 +454,77 @@ mod tests {
         assert_eq!(out.stats.iterations, 20);
         assert!(!out.stats.converged);
         assert!(out.value.is_finite());
+    }
+
+    #[test]
+    fn capped_slices_nest_bit_identically() {
+        // 3 slices of 8 warm-carried iterations == one fixed 24-iteration
+        // run, bit for bit (the property budgeted solves rely on).
+        let (m, r, c) = setup(12, 40);
+        let engine = SinkhornEngine::with_config(&m, SinkhornConfig::fixed(9.0, 24));
+        let straight = engine.distance(&r, &c);
+        let mut carry = ScalingInit::Cold;
+        let mut sliced = None;
+        for _ in 0..3 {
+            let out = engine.distance_capped(&r, &c, &carry, 8);
+            assert_eq!(out.stats.iterations, 8);
+            carry = ScalingInit::from_output(&out);
+            sliced = Some(out);
+        }
+        let sliced = sliced.unwrap();
+        assert_eq!(sliced.u, straight.u, "sliced u must equal the straight run's");
+        assert_eq!(sliced.v, straight.v);
+        assert_eq!(sliced.value, straight.value);
+    }
+
+    #[test]
+    fn outcome_brackets_and_reproduces_unbounded_solves() {
+        use crate::sinkhorn::SolveBudget;
+        let (m, r, c) = setup(14, 41);
+        let tight = SinkhornEngine::with_config(
+            &m,
+            SinkhornConfig {
+                lambda: 9.0,
+                tolerance: 1e-12,
+                max_iterations: 200_000,
+                ..Default::default()
+            },
+        );
+        let exact = tight.distance(&r, &c).value;
+        let engine = SinkhornEngine::new(&m, 9.0);
+        // Unbounded: bit-identical estimate, valid certificate.
+        let plain = engine.distance(&r, &c);
+        let outcome =
+            engine.distance_outcome(&r, &c, &ScalingInit::Cold, SolveBudget::Unbounded);
+        assert_eq!(outcome.estimate, plain.value);
+        assert_eq!(outcome.iterations, plain.stats.iterations);
+        assert!(
+            outcome.interval.contains(exact),
+            "exact {exact} outside {:?}",
+            outcome.interval
+        );
+        // Budgeted: interval brackets the exact value and narrows with
+        // budget on the stride lattice.
+        let mut prev_width = F::INFINITY;
+        for budget in [8, 16, 32, 64] {
+            let o = engine.distance_outcome(
+                &r,
+                &c,
+                &ScalingInit::Cold,
+                SolveBudget::Iterations(budget),
+            );
+            assert!(
+                o.interval.contains(exact),
+                "budget {budget}: exact {exact} outside {:?}",
+                o.interval
+            );
+            assert!(
+                o.interval.width() <= prev_width + 1e-12,
+                "budget {budget}: width {} above previous {prev_width}",
+                o.interval.width()
+            );
+            prev_width = o.interval.width();
+        }
     }
 
     #[test]
@@ -474,7 +617,7 @@ mod tests {
         );
         let cold = engine.distance(&r, &c);
         assert!(cold.stats.converged);
-        let warm = engine.distance_init(&r, &c, Some(&ScalingInit::from_output(&cold)));
+        let warm = engine.distance_init(&r, &c, &ScalingInit::from_output(&cold));
         assert!(warm.stats.converged);
         assert!((warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()));
         assert!(warm.stats.iterations <= cold.stats.iterations);

@@ -27,10 +27,10 @@ pub fn solve(
     r: &[F],
     c: &[F],
 ) -> SinkhornOutput {
-    solve_init(m, d, lambda, cfg, r, c, None)
+    solve_inner(m, d, lambda, cfg, r, c, &ScalingInit::Cold, None)
 }
 
-/// [`solve`] seeded with an initial scaling pair. A warm start enters as
+/// [`solve`] seeded by `init`. A [`ScalingInit::Warm`] seed enters as
 /// potentials f = log u (the g side is recomputed from f at the top of
 /// every iteration) and skips the ε-scaling prefix; a cold start runs the
 /// prefix when the config carries a [`LambdaSchedule::Geometric`].
@@ -41,7 +41,39 @@ pub fn solve_init(
     cfg: &SinkhornConfig,
     r: &[F],
     c: &[F],
-    init: Option<&ScalingInit>,
+    init: &ScalingInit,
+) -> SinkhornOutput {
+    solve_inner(m, d, lambda, cfg, r, c, init, None)
+}
+
+/// One budget slice of [`solve_init`]: at most `cap` iterations this
+/// call, replacing the config's iteration cap. Warm-carrying the
+/// returned scalings into the next capped call continues the iteration
+/// exactly (the g side is recomputed from f before it is read, so only
+/// the f potential needs to survive the round-trip through u = e^f).
+pub fn solve_capped(
+    m: &[F],
+    d: usize,
+    lambda: F,
+    cfg: &SinkhornConfig,
+    r: &[F],
+    c: &[F],
+    init: &ScalingInit,
+    cap: usize,
+) -> SinkhornOutput {
+    solve_inner(m, d, lambda, cfg, r, c, init, Some(cap))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn solve_inner(
+    m: &[F],
+    d: usize,
+    lambda: F,
+    cfg: &SinkhornConfig,
+    r: &[F],
+    c: &[F],
+    init: &ScalingInit,
+    cap: Option<usize>,
 ) -> SinkhornOutput {
     let neg = F::NEG_INFINITY;
     let log_r: Vec<F> = r.iter().map(|&x| if x > 0.0 { x.ln() } else { neg }).collect();
@@ -52,11 +84,10 @@ pub fn solve_init(
     // the top of every iteration before it is ever read.
     let mut f;
     let prefix;
-    match init {
-        Some(seed) => {
-            assert_eq!(seed.u.len(), d, "warm-start dimension mismatch");
-            f = seed
-                .u
+    match init.scalings() {
+        Some((su, _)) => {
+            assert_eq!(su.len(), d, "warm-start dimension mismatch");
+            f = su
                 .iter()
                 .map(|&x| if x > 0.0 { x.ln() } else { neg })
                 .collect();
@@ -78,8 +109,9 @@ pub fn solve_init(
         ..Default::default()
     };
 
+    let max_iterations = cap.unwrap_or(cfg.max_iterations);
     let mut iter = 0;
-    while iter < cfg.max_iterations {
+    while iter < max_iterations {
         iter += 1;
         update_g(m, d, lambda, &f, &log_c, &mut g, &mut buf);
         std::mem::swap(&mut f, &mut f_prev);
@@ -299,11 +331,40 @@ mod tests {
         let cold = solve(m.data(), d, 40.0, &cfg, r.values(), c.values());
         assert!(cold.stats.converged);
         let seed = ScalingInit::from_output(&cold);
-        let warm =
-            solve_init(m.data(), d, 40.0, &cfg, r.values(), c.values(), Some(&seed));
+        let warm = solve_init(m.data(), d, 40.0, &cfg, r.values(), c.values(), &seed);
         assert!(warm.stats.converged);
         assert!((warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value));
         assert!(warm.stats.iterations < cold.stats.iterations);
+    }
+
+    #[test]
+    fn capped_slices_continue_the_iteration() {
+        // Warm-carried 8-iteration slices track one straight fixed run.
+        // The carry round-trips f through u = e^f, so agreement is to
+        // exp/ln rounding, not bit-exact like the dense path.
+        let mut rng = seeded_rng(44);
+        let d = 10;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let cfg = SinkhornConfig::fixed(120.0, 24);
+        let straight = solve(m.data(), d, 120.0, &cfg, r.values(), c.values());
+        let mut carry = ScalingInit::Cold;
+        let mut sliced = None;
+        for _ in 0..3 {
+            let out =
+                solve_capped(m.data(), d, 120.0, &cfg, r.values(), c.values(), &carry, 8);
+            assert_eq!(out.stats.iterations, 8);
+            carry = ScalingInit::from_output(&out);
+            sliced = Some(out);
+        }
+        let sliced = sliced.unwrap();
+        assert!(
+            (sliced.value - straight.value).abs() < 1e-10 * (1.0 + straight.value),
+            "sliced {} vs straight {}",
+            sliced.value,
+            straight.value
+        );
     }
 
     #[test]

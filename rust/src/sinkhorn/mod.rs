@@ -19,12 +19,14 @@ pub mod batch;
 mod engine;
 pub mod independence;
 pub mod log_domain;
+pub mod outcome;
 pub mod warm;
 
 pub use alpha::{AlphaConfig, AlphaOutput, AlphaSinkhorn};
 pub use batch::BatchSinkhorn;
 pub use engine::{SinkhornEngine, SinkhornOutput, SinkhornStats};
 pub use independence::{independence_distance, IndependenceKernel, PreparedHistogram};
+pub use outcome::{certify, ErrorInterval, SolveBudget, SolveOutcome, CERT_STRIDE};
 pub use warm::{fingerprint_pair, WarmCounters, WarmKey, WarmStartStore};
 
 use crate::linalg::{KernelOp, KernelPolicy};
@@ -141,28 +143,58 @@ impl LambdaSchedule {
     }
 }
 
-/// An initial scaling pair (u, v) seeding a solve — typically a previous
-/// converged solution served from a [`WarmStartStore`]. Dense solvers use
-/// it directly; the log-domain path converts to potentials (f, g) =
+/// How a solve is seeded. [`ScalingInit::Cold`] (the default) starts
+/// from the uniform scaling and runs the ε-scaling prefix when the
+/// config carries one; [`ScalingInit::Warm`] resumes from a previous
+/// scaling pair — a converged solution served from a [`WarmStartStore`],
+/// or a budget slice's carry state. Dense solvers use the scalings
+/// directly; the log-domain path converts to potentials (f, g) =
 /// (log u, log v) with zero-mass bins mapping to −∞.
-#[derive(Debug, Clone, PartialEq)]
-pub struct ScalingInit {
-    /// Row scaling (support-aligned with r).
-    pub u: Vec<F>,
-    /// Column scaling (support-aligned with c).
-    pub v: Vec<F>,
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ScalingInit {
+    /// Start from scratch (uniform scaling + anneal prefix, if any).
+    #[default]
+    Cold,
+    /// Resume from a carried scaling pair.
+    Warm {
+        /// Row scaling (support-aligned with r).
+        u: Vec<F>,
+        /// Column scaling (support-aligned with c).
+        v: Vec<F>,
+    },
 }
 
 impl ScalingInit {
-    /// Capture a solve's converged scalings as a future warm start.
-    pub fn from_output(out: &SinkhornOutput) -> Self {
-        Self { u: out.u.clone(), v: out.v.clone() }
+    /// A warm seed from explicit scaling vectors.
+    pub fn warm(u: Vec<F>, v: Vec<F>) -> Self {
+        ScalingInit::Warm { u, v }
     }
 
-    /// Log-domain potentials (f, g) = (log u, log v); zeros map to −∞.
-    pub fn potentials(&self) -> (Vec<F>, Vec<F>) {
+    /// Capture a solve's converged scalings as a future warm start.
+    pub fn from_output(out: &SinkhornOutput) -> Self {
+        ScalingInit::Warm { u: out.u.clone(), v: out.v.clone() }
+    }
+
+    /// Whether this is the cold (from-scratch) seed.
+    pub fn is_cold(&self) -> bool {
+        matches!(self, ScalingInit::Cold)
+    }
+
+    /// The carried scaling pair, if warm.
+    pub fn scalings(&self) -> Option<(&[F], &[F])> {
+        match self {
+            ScalingInit::Cold => None,
+            ScalingInit::Warm { u, v } => Some((u, v)),
+        }
+    }
+
+    /// Log-domain potentials (f, g) = (log u, log v) of a warm seed;
+    /// zeros map to −∞. `None` when cold.
+    pub fn potentials(&self) -> Option<(Vec<F>, Vec<F>)> {
         let ln0 = |x: &F| if *x > 0.0 { x.ln() } else { F::NEG_INFINITY };
-        (self.u.iter().map(ln0).collect(), self.v.iter().map(ln0).collect())
+        self.scalings().map(|(u, v)| {
+            (u.iter().map(ln0).collect(), v.iter().map(ln0).collect())
+        })
     }
 }
 
@@ -367,6 +399,164 @@ impl SinkhornConfig {
     pub fn converged(lambda: F) -> Self {
         Self { lambda, ..Default::default() }
     }
+
+    /// A validating builder seeded with the defaults. Construction fails
+    /// fast — [`SinkhornConfigBuilder::build`] rejects malformed knobs
+    /// instead of letting an `assert!` fire mid-solve on a worker
+    /// thread.
+    pub fn builder() -> SinkhornConfigBuilder {
+        SinkhornConfigBuilder { cfg: Self::default() }
+    }
+
+    /// Check every knob. This is the single source of truth the
+    /// builders and `DistanceService::start` share; the messages are the
+    /// ones surfaced through `ServiceError::InvalidConfig`.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(self.lambda > 0.0 && self.lambda.is_finite()) {
+            return Err(ConfigError(format!(
+                "lambda must be positive and finite (got {})",
+                self.lambda
+            )));
+        }
+        if !(self.tolerance >= 0.0 && self.tolerance.is_finite()) {
+            return Err(ConfigError(format!(
+                "tolerance must be finite and >= 0 (got {})",
+                self.tolerance
+            )));
+        }
+        if self.max_iterations == 0 {
+            return Err(ConfigError("max_iterations must be at least 1".into()));
+        }
+        if self.check_every == 0 {
+            return Err(ConfigError(
+                "check_every must be at least 1 (usize::MAX = fixed budget)".into(),
+            ));
+        }
+        validate_schedule(&self.schedule)?;
+        validate_kernel(&self.kernel)
+    }
+}
+
+/// A rejected configuration knob (the message names the knob and the
+/// offending value).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Shared schedule validation (also consulted by the coordinator's
+/// builder for its `anneal` knob).
+pub(crate) fn validate_schedule(schedule: &LambdaSchedule) -> Result<(), ConfigError> {
+    if let LambdaSchedule::Geometric { lambda0, factor, stage_iterations } = *schedule {
+        if !(lambda0 > 0.0 && lambda0.is_finite()) || !(factor > 1.0 && factor.is_finite())
+        {
+            return Err(ConfigError(format!(
+                "anneal schedule needs lambda0 > 0 and factor > 1 \
+                 (got lambda0={lambda0}, factor={factor})"
+            )));
+        }
+        if stage_iterations == 0 {
+            return Err(ConfigError(
+                "anneal schedule stage_iterations must be at least 1".into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Shared kernel-policy validation (also consulted by the coordinator's
+/// builder for its `kernel` knob).
+pub(crate) fn validate_kernel(kernel: &KernelPolicy) -> Result<(), ConfigError> {
+    match *kernel {
+        KernelPolicy::Truncated { threshold } => {
+            if !(threshold >= 0.0 && threshold < 1.0) {
+                return Err(ConfigError(format!(
+                    "truncation threshold must be in [0, 1) (got {threshold})"
+                )));
+            }
+        }
+        KernelPolicy::LowRank { tolerance, .. } => {
+            if !(tolerance >= 0.0 && tolerance.is_finite()) {
+                return Err(ConfigError(format!(
+                    "low-rank tolerance must be finite and >= 0 (got {tolerance})"
+                )));
+            }
+        }
+        KernelPolicy::Dense | KernelPolicy::Auto => {}
+    }
+    Ok(())
+}
+
+/// Validating builder for [`SinkhornConfig`] (see
+/// [`SinkhornConfig::builder`]).
+#[derive(Debug, Clone)]
+pub struct SinkhornConfigBuilder {
+    cfg: SinkhornConfig,
+}
+
+impl SinkhornConfigBuilder {
+    /// Entropic weight λ of Equation (2).
+    pub fn lambda(mut self, lambda: F) -> Self {
+        self.cfg.lambda = lambda;
+        self
+    }
+
+    /// Convergence tolerance on ‖Δu‖₂.
+    pub fn tolerance(mut self, tolerance: F) -> Self {
+        self.cfg.tolerance = tolerance;
+        self
+    }
+
+    /// Hard iteration cap.
+    pub fn max_iterations(mut self, n: usize) -> Self {
+        self.cfg.max_iterations = n;
+        self
+    }
+
+    /// Convergence-check stride (`usize::MAX` = fixed budget).
+    pub fn check_every(mut self, stride: usize) -> Self {
+        self.cfg.check_every = stride;
+        self
+    }
+
+    /// Fixed-budget mode: exactly `n` iterations, no convergence checks
+    /// (the [`SinkhornConfig::fixed`] shape).
+    pub fn fixed_budget(mut self, n: usize) -> Self {
+        self.cfg.tolerance = 0.0;
+        self.cfg.max_iterations = n;
+        self.cfg.check_every = usize::MAX;
+        self
+    }
+
+    /// Toggle the log-domain auto-stabilization rescue.
+    pub fn auto_stabilize(mut self, on: bool) -> Self {
+        self.cfg.auto_stabilize = on;
+        self
+    }
+
+    /// ε-scaling schedule.
+    pub fn schedule(mut self, schedule: LambdaSchedule) -> Self {
+        self.cfg.schedule = schedule;
+        self
+    }
+
+    /// Kernel materialization policy.
+    pub fn kernel(mut self, kernel: KernelPolicy) -> Self {
+        self.cfg.kernel = kernel;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<SinkhornConfig, ConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
 }
 
 #[cfg(test)]
@@ -408,6 +598,79 @@ mod schedule_tests {
         assert!((p[2] - 0.25).abs() < 1e-15);
         assert_eq!(p[1], 0.0);
         assert!((p[3] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn builder_accepts_defaults_and_round_trips_knobs() {
+        let cfg = SinkhornConfig::builder().build().expect("defaults are valid");
+        assert_eq!(cfg.lambda, SinkhornConfig::default().lambda);
+        let cfg = SinkhornConfig::builder()
+            .lambda(50.0)
+            .tolerance(1e-9)
+            .max_iterations(777)
+            .check_every(3)
+            .auto_stabilize(false)
+            .schedule(LambdaSchedule::geometric(1.0))
+            .kernel(KernelPolicy::truncated_default())
+            .build()
+            .expect("valid knobs");
+        assert_eq!(cfg.lambda, 50.0);
+        assert_eq!(cfg.max_iterations, 777);
+        assert_eq!(cfg.check_every, 3);
+        assert!(!cfg.auto_stabilize);
+        let fixed = SinkhornConfig::builder().lambda(9.0).fixed_budget(20).build().unwrap();
+        assert_eq!(
+            (fixed.tolerance, fixed.max_iterations, fixed.check_every),
+            (0.0, 20, usize::MAX),
+            "fixed_budget must match SinkhornConfig::fixed"
+        );
+    }
+
+    #[test]
+    fn builder_rejects_each_invalid_knob() {
+        // One case per knob; every rejection names the offending value.
+        let bad = [
+            SinkhornConfig::builder().lambda(0.0).build(),
+            SinkhornConfig::builder().lambda(-3.0).build(),
+            SinkhornConfig::builder().lambda(F::NAN).build(),
+            SinkhornConfig::builder().tolerance(-1e-3).build(),
+            SinkhornConfig::builder().tolerance(F::INFINITY).build(),
+            SinkhornConfig::builder().max_iterations(0).build(),
+            SinkhornConfig::builder().check_every(0).build(),
+            SinkhornConfig::builder()
+                .schedule(LambdaSchedule::Geometric {
+                    lambda0: 0.0,
+                    factor: 3.0,
+                    stage_iterations: 30,
+                })
+                .build(),
+            SinkhornConfig::builder()
+                .schedule(LambdaSchedule::Geometric {
+                    lambda0: 1.0,
+                    factor: 1.0,
+                    stage_iterations: 30,
+                })
+                .build(),
+            SinkhornConfig::builder()
+                .schedule(LambdaSchedule::Geometric {
+                    lambda0: 1.0,
+                    factor: 3.0,
+                    stage_iterations: 0,
+                })
+                .build(),
+            SinkhornConfig::builder()
+                .kernel(KernelPolicy::Truncated { threshold: 1.0 })
+                .build(),
+            SinkhornConfig::builder()
+                .kernel(KernelPolicy::Truncated { threshold: -0.1 })
+                .build(),
+            SinkhornConfig::builder()
+                .kernel(KernelPolicy::LowRank { max_rank: 4, tolerance: -1.0 })
+                .build(),
+        ];
+        for (i, case) in bad.iter().enumerate() {
+            assert!(case.is_err(), "case {i} should have been rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,523 @@
+//! Certified anytime solves: error intervals, budgets and outcomes.
+//!
+//! Every Sinkhorn scaling state (u, v) prices the *exact* dual-Sinkhorn
+//! divergence d_M^λ(r, c) from both sides, no matter how the state was
+//! produced (dense, log-domain, greedy, or an approximate-kernel walk):
+//!
+//! * **lower bound** — the Lagrangian dual of the entropic program at
+//!   the potentials (f, g) = (log u, log v),
+//!   `lo = (rᵀf + cᵀg − Σᵢⱼ e^{fᵢ+gⱼ−λmᵢⱼ} + 1)/λ`.
+//!   Weak duality puts this below the optimal free energy, which sits
+//!   below d^λ because the plan entropy h(P★) is nonnegative. Each full
+//!   Sinkhorn iteration is exact block-coordinate *ascent* on this dual,
+//!   so the bound only improves as iterations accrue.
+//! * **upper bound** — round the primal read-off P = e^{f+g−λM} onto
+//!   the transport polytope U(r, c) with Altschuler–Weed–Rigollet's
+//!   Algorithm 2 (arXiv 1705.09634): shrink rows, then columns, then
+//!   patch the missing mass with a rank-one outer product. The rounded
+//!   plan P̂ is feasible, so its free energy dominates the optimum, and
+//!   entropy subadditivity h(P★) ≤ h(r) + h(c) turns that into
+//!   `hi = ⟨P̂, M⟩ + (h(r) + h(c) − h(P̂))/λ ≥ d^λ`.
+//!
+//! Both bounds are evaluated against the **exact** cost matrix, so they
+//! stay sound when the iterates came from a truncated or low-rank kernel
+//! — the certificate never inherits the approximation.
+//!
+//! Budgeted solves slice the iteration into [`CERT_STRIDE`]-sized runs,
+//! warm-carrying the scaling between slices (bit-identical to one long
+//! run on the dense path) and intersecting the per-slice certificates,
+//! so the returned interval width is monotone nonincreasing in the
+//! iteration budget on the stride lattice.
+
+use super::{ScalingInit, SinkhornOutput};
+use crate::F;
+use std::time::{Duration, Instant};
+
+/// Iterations per certificate slice of a budgeted solve. Slices nest —
+/// budget 16 replays budget 8's first slice exactly — which is what
+/// makes the intersected interval width monotone across budgets.
+pub const CERT_STRIDE: usize = 8;
+
+/// A certified two-sided bound on the exact d_M^λ(r, c).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorInterval {
+    /// Certified lower bound (≥ 0; d^λ is a nonnegative cost).
+    pub lo: F,
+    /// Certified upper bound (+∞ when no feasible rounding exists yet).
+    pub hi: F,
+}
+
+impl ErrorInterval {
+    /// The vacuous certificate [0, ∞) — what a solve knows before its
+    /// first certified slice.
+    pub const UNBOUNDED: Self = Self { lo: 0.0, hi: F::INFINITY };
+
+    /// A zero-width interval at an exactly-known value (the exact
+    /// simplex backend's certificate).
+    pub fn point(value: F) -> Self {
+        Self { lo: value, hi: value }
+    }
+
+    /// hi − lo (∞ while one side is still vacuous).
+    pub fn width(&self) -> F {
+        self.hi - self.lo
+    }
+
+    /// Whether `x` lies inside the closed interval.
+    pub fn contains(&self, x: F) -> bool {
+        self.lo <= x && x <= self.hi
+    }
+
+    /// Intersection of two certificates of the same quantity. Both
+    /// contain d^λ, so the intersection is mathematically nonempty;
+    /// floating-point jitter that crosses the sides collapses to the
+    /// midpoint rather than returning an inverted interval.
+    pub fn intersect(self, other: Self) -> Self {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi);
+        if lo > hi {
+            let mid = 0.5 * (lo + hi);
+            return Self { lo: mid, hi: mid };
+        }
+        Self { lo, hi }
+    }
+}
+
+/// How long a solve may run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SolveBudget {
+    /// Run the backend's own convergence/iteration policy unchanged; the
+    /// certificate is computed once on the final state. Results are
+    /// bit-identical to the pre-anytime entry points.
+    #[default]
+    Unbounded,
+    /// At most this many fixed-point iterations (anneal-prefix
+    /// iterations count), certified every [`CERT_STRIDE`].
+    Iterations(usize),
+    /// Iterate in [`CERT_STRIDE`] slices until the wall-clock deadline
+    /// passes; at least one slice always runs, so an expired deadline
+    /// still yields an estimate and a certificate.
+    Deadline(Instant),
+}
+
+impl SolveBudget {
+    /// A deadline `dur` from now.
+    pub fn deadline_in(dur: Duration) -> Self {
+        SolveBudget::Deadline(Instant::now() + dur)
+    }
+
+    /// Whether this is the exact-reproduction (no budget) mode.
+    pub fn is_unbounded(&self) -> bool {
+        matches!(self, SolveBudget::Unbounded)
+    }
+
+    /// Whether a wall-clock deadline has already passed (always false
+    /// for iteration budgets).
+    pub fn expired(&self) -> bool {
+        match self {
+            SolveBudget::Deadline(t) => Instant::now() >= *t,
+            _ => false,
+        }
+    }
+
+    /// The iteration cap, when one is set.
+    pub fn iteration_cap(&self) -> Option<usize> {
+        match self {
+            SolveBudget::Iterations(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// An iteration budget from the Altschuler–Weed–Rigollet analysis:
+    /// to serve d^λ within additive error ε on a d-bin problem with
+    /// costs bounded by `max_cost`, Sinkhorn needs at most
+    /// `2 + 4·ln d / ε′²` iterations at ε′ = ε / (8·max_cost) (their
+    /// Theorem 2 marginal-accuracy bound driving Algorithm 2's rounding
+    /// guarantee). Pessimistic in practice — the certificate interval is
+    /// the ground truth — but it gives deadline planning a principled
+    /// worst case.
+    pub fn for_error(d: usize, max_cost: F, eps: F) -> Self {
+        assert!(eps > 0.0 && eps.is_finite(), "target error must be positive");
+        assert!(max_cost > 0.0 && max_cost.is_finite(), "max cost must be positive");
+        let eps_prime = eps / (8.0 * max_cost);
+        let iters = 2.0 + 4.0 * (d.max(2) as F).ln() / (eps_prime * eps_prime);
+        SolveBudget::Iterations(iters.min(1e9).ceil() as usize)
+    }
+
+    /// The matching AWR entropic weight for target error ε:
+    /// λ = 4·ln d / ε. Together with [`Self::for_error`] this is the
+    /// (λ-schedule, budget) pair the anytime tier plans from.
+    pub fn lambda_for_error(d: usize, eps: F) -> F {
+        assert!(eps > 0.0 && eps.is_finite(), "target error must be positive");
+        4.0 * (d.max(2) as F).ln() / eps
+    }
+}
+
+/// What an anytime solve returns: the served estimate plus its
+/// certificate and run metadata — the interval/iteration/stabilized
+/// story that used to be side-channeled through per-shard reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolveOutcome {
+    /// The served d_M^λ estimate (the primal read-off of the final
+    /// state; inside `interval` up to solver-noise at convergence).
+    pub estimate: F,
+    /// Certified bracket on the exact d^λ.
+    pub interval: ErrorInterval,
+    /// Fixed-point iterations spent (anneal prefix included).
+    pub iterations: usize,
+    /// Whether any slice ran on the log-domain stabilized path.
+    pub stabilized: bool,
+    /// Whether the solve met its convergence criterion before the
+    /// budget expired.
+    pub converged: bool,
+}
+
+impl SolveOutcome {
+    /// Wrap a finished [`SinkhornOutput`] with its certificate.
+    pub fn from_output(out: &SinkhornOutput, interval: ErrorInterval) -> Self {
+        Self {
+            estimate: out.value,
+            interval,
+            iterations: out.stats.iterations,
+            stabilized: out.stats.stabilized,
+            converged: out.stats.converged,
+        }
+    }
+
+    /// The served value (accessor mirror for call sites migrating off
+    /// bare-`f64` returns).
+    pub fn distance(&self) -> F {
+        self.estimate
+    }
+
+    /// An estimate served without a certificate — paths that only hand
+    /// back a bare distance (e.g. a fixed-budget XLA artifact). The
+    /// interval is vacuous and `converged` stays false: nothing was
+    /// convergence-checked.
+    pub fn uncertified(estimate: F) -> Self {
+        Self {
+            estimate,
+            interval: ErrorInterval::UNBOUNDED,
+            iterations: 0,
+            stabilized: false,
+            converged: false,
+        }
+    }
+}
+
+/// Certify a scaling state against the exact cost matrix: lower bound
+/// from the dual objective, upper bound from the AWR-rounded primal.
+/// Sound for *any* (u, v) ≥ 0 — warm, mid-iteration, or produced by an
+/// approximate kernel — because neither bound assumes feasibility.
+pub fn certify(
+    m: &[F],
+    d: usize,
+    lambda: F,
+    r: &[F],
+    c: &[F],
+    out: &SinkhornOutput,
+) -> ErrorInterval {
+    debug_assert_eq!(m.len(), d * d);
+    debug_assert_eq!(out.u.len(), d);
+    debug_assert_eq!(out.v.len(), d);
+    let neg = F::NEG_INFINITY;
+    let ln0 = |x: F| if x > 0.0 { x.ln() } else { neg };
+    let f: Vec<F> = out.u.iter().map(|&x| ln0(x)).collect();
+    let g: Vec<F> = out.v.iter().map(|&x| ln0(x)).collect();
+
+    // P = e^{f + g − λM} against the exact costs; −∞ potentials (zero
+    // scalings) contribute zero mass.
+    let mut p = vec![0.0; d * d];
+    let mut mass = 0.0;
+    for i in 0..d {
+        if f[i] == neg {
+            continue;
+        }
+        let row = &m[i * d..(i + 1) * d];
+        let prow = &mut p[i * d..(i + 1) * d];
+        for j in 0..d {
+            if g[j] == neg {
+                continue;
+            }
+            let e = (f[i] + g[j] - lambda * row[j]).exp();
+            prow[j] = e;
+            mass += e;
+        }
+    }
+    if !mass.is_finite() {
+        // A diverged scaling prices nothing; the caller's running
+        // intersection keeps whatever earlier slices certified.
+        return ErrorInterval::UNBOUNDED;
+    }
+
+    // Lower: the dual objective at (f, g). Zero-mass bins are excluded
+    // (their potentials are −∞ but carry no mass, so they contribute 0).
+    let mut dual = 0.0;
+    for i in 0..d {
+        if r[i] > 0.0 {
+            dual += r[i] * f[i];
+        }
+    }
+    for j in 0..d {
+        if c[j] > 0.0 {
+            dual += c[j] * g[j];
+        }
+    }
+    let mut lo = (dual - mass + 1.0) / lambda;
+    if !lo.is_finite() {
+        lo = 0.0;
+    }
+    lo = lo.max(0.0);
+
+    // Upper: AWR Algorithm 2 rounding, in place on p.
+    // Shrink rows to their targets…
+    let mut row_sum = vec![0.0; d];
+    for i in 0..d {
+        row_sum[i] = p[i * d..(i + 1) * d].iter().sum();
+    }
+    for i in 0..d {
+        let x = if row_sum[i] > 0.0 { (r[i] / row_sum[i]).min(1.0) } else { 0.0 };
+        if x != 1.0 {
+            for e in &mut p[i * d..(i + 1) * d] {
+                *e *= x;
+            }
+        }
+    }
+    // …then columns…
+    let mut col_sum = vec![0.0; d];
+    for i in 0..d {
+        for (j, cs) in col_sum.iter_mut().enumerate() {
+            *cs += p[i * d + j];
+        }
+    }
+    let y: Vec<F> = col_sum
+        .iter()
+        .zip(c)
+        .map(|(&s, &cj)| if s > 0.0 { (cj / s).min(1.0) } else { 0.0 })
+        .collect();
+    for i in 0..d {
+        for (j, &yj) in y.iter().enumerate() {
+            p[i * d + j] *= yj;
+        }
+    }
+    // …and patch the shortfall with the rank-one correction.
+    let mut err_r = vec![0.0; d];
+    let mut err_c = vec![0.0; d];
+    for i in 0..d {
+        let s: F = p[i * d..(i + 1) * d].iter().sum();
+        err_r[i] = (r[i] - s).max(0.0);
+    }
+    for j in 0..d {
+        let s: F = (0..d).map(|i| p[i * d + j]).sum();
+        err_c[j] = (c[j] - s).max(0.0);
+    }
+    let shortfall: F = err_r.iter().sum();
+    if shortfall > 0.0 {
+        let ec_sum: F = err_c.iter().sum();
+        if ec_sum > 0.0 {
+            // Normalize by the column shortfall so P̂'s columns land
+            // exactly on c even under fp drift between the two sums.
+            for i in 0..d {
+                if err_r[i] == 0.0 {
+                    continue;
+                }
+                let scale = err_r[i] / ec_sum;
+                for (j, &ecj) in err_c.iter().enumerate() {
+                    p[i * d + j] += scale * ecj;
+                }
+            }
+        }
+    }
+    // hi = ⟨P̂, M⟩ + (h(r) + h(c) − h(P̂))/λ.
+    let mut cost = 0.0;
+    let mut h_plan = 0.0;
+    for (pe, &me) in p.iter().zip(m) {
+        let x = *pe;
+        if x > 0.0 {
+            cost += x * me;
+            h_plan -= x * x.ln();
+        }
+    }
+    let h_marginals = entropy(r) + entropy(c);
+    let mut hi = cost + (h_marginals - h_plan) / lambda;
+    if !hi.is_finite() {
+        hi = F::INFINITY;
+    }
+    if lo > hi {
+        // Solver-noise crossover at (near-)convergence: collapse to the
+        // certified upper side rather than inverting.
+        lo = hi;
+    }
+    ErrorInterval { lo, hi }
+}
+
+/// Shannon entropy h(p) = −Σ p ln p with 0·ln 0 = 0.
+pub(crate) fn entropy(p: &[F]) -> F {
+    p.iter().filter(|&&x| x > 0.0).map(|&x| -x * x.ln()).sum()
+}
+
+/// Drive a budgeted solve over closures: `full` is the backend's
+/// unbounded entry point (bit-identical reproduction), `capped(init,
+/// cap)` runs at most `cap` iterations from `init`, and `cert` prices a
+/// state. Shared by the [`crate::backend::SolverBackend`] default and
+/// the engine/batch convenience wrappers so the slicing policy lives in
+/// exactly one place.
+pub(crate) fn drive_budgeted(
+    budget: SolveBudget,
+    init: &ScalingInit,
+    full: impl FnOnce(&ScalingInit) -> SinkhornOutput,
+    capped: impl Fn(&ScalingInit, usize) -> SinkhornOutput,
+    cert: impl Fn(&SinkhornOutput) -> ErrorInterval,
+) -> SolveOutcome {
+    let cap = match budget {
+        SolveBudget::Unbounded => {
+            let out = full(init);
+            let interval = cert(&out);
+            return SolveOutcome::from_output(&out, interval);
+        }
+        SolveBudget::Iterations(n) => Some(n.max(1)),
+        SolveBudget::Deadline(_) => None,
+    };
+    let mut carry = init.clone();
+    let mut interval = ErrorInterval::UNBOUNDED;
+    let mut iterations = 0usize;
+    let mut stabilized = false;
+    loop {
+        let step = match cap {
+            Some(n) => CERT_STRIDE.min(n - iterations).max(1),
+            None => CERT_STRIDE,
+        };
+        let out = capped(&carry, step);
+        iterations += out.stats.iterations;
+        stabilized |= out.stats.stabilized;
+        interval = interval.intersect(cert(&out));
+        let exhausted = match cap {
+            Some(n) => iterations >= n,
+            None => budget.expired(),
+        };
+        // A zero-iteration slice means the backend has nothing left to
+        // do (e.g. a greedy solver at exact marginals in fixed-budget
+        // mode); continuing would spin forever.
+        if out.stats.converged
+            || exhausted
+            || !out.value.is_finite()
+            || out.stats.iterations == 0
+        {
+            return SolveOutcome {
+                estimate: out.value,
+                interval,
+                iterations,
+                stabilized,
+                converged: out.stats.converged,
+            };
+        }
+        carry = ScalingInit::from_output(&out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sinkhorn::SinkhornStats;
+
+    fn output(u: Vec<F>, v: Vec<F>, value: F) -> SinkhornOutput {
+        SinkhornOutput { value, u, v, stats: SinkhornStats::default() }
+    }
+
+    #[test]
+    fn interval_algebra() {
+        let a = ErrorInterval { lo: 1.0, hi: 3.0 };
+        let b = ErrorInterval { lo: 2.0, hi: 5.0 };
+        let i = a.intersect(b);
+        assert_eq!(i, ErrorInterval { lo: 2.0, hi: 3.0 });
+        assert!((i.width() - 1.0).abs() < 1e-15);
+        assert!(i.contains(2.5) && !i.contains(4.0));
+        // Disjoint-by-jitter collapses to a point instead of inverting.
+        let j = ErrorInterval { lo: 3.5, hi: 4.0 }.intersect(a);
+        assert!(j.lo == j.hi && j.width() == 0.0);
+        assert_eq!(ErrorInterval::point(2.0).width(), 0.0);
+        assert!(ErrorInterval::UNBOUNDED.contains(1e18));
+    }
+
+    #[test]
+    fn budget_modes() {
+        assert!(SolveBudget::default().is_unbounded());
+        assert_eq!(SolveBudget::Iterations(7).iteration_cap(), Some(7));
+        assert!(!SolveBudget::Iterations(7).expired());
+        let past = SolveBudget::Deadline(Instant::now() - Duration::from_millis(1));
+        assert!(past.expired());
+        let future = SolveBudget::deadline_in(Duration::from_secs(3600));
+        assert!(!future.expired());
+    }
+
+    #[test]
+    fn awr_planning_bounds_scale_with_error() {
+        let loose = SolveBudget::for_error(16, 1.0, 0.5);
+        let tight = SolveBudget::for_error(16, 1.0, 0.1);
+        let (Some(a), Some(b)) = (loose.iteration_cap(), tight.iteration_cap()) else {
+            panic!("for_error must produce iteration budgets");
+        };
+        assert!(b > a, "tighter error must buy more iterations: {a} vs {b}");
+        assert!(SolveBudget::lambda_for_error(16, 0.1) > SolveBudget::lambda_for_error(16, 0.5));
+    }
+
+    #[test]
+    fn certify_brackets_a_converged_two_bin_solve() {
+        // d = 2, m = [[0, 1], [1, 0]], uniform marginals: by symmetry the
+        // entropic plan is [[a, b], [b, a]] with a + b = 1/2 and
+        // b/a = e^{−λ}; d^λ = 2b.
+        let lambda = 3.0;
+        let m = vec![0.0, 1.0, 1.0, 0.0];
+        let r = [0.5, 0.5];
+        let c = [0.5, 0.5];
+        let b = 0.5 / (1.0 + (lambda as F).exp());
+        let a = 0.5 - b;
+        let exact = 2.0 * b;
+        // Scalings realizing that plan: u_i v_j e^{−λ m_ij} = P_ij with
+        // u = v = sqrt(a) works since a·(b/a) = b ⇔ e^{−λ} = b/a.
+        let s = a.sqrt();
+        let out = output(vec![s, s], vec![s, s], exact);
+        let iv = certify(&m, 2, lambda, &r, &c, &out);
+        assert!(
+            iv.lo <= exact + 1e-12 && exact <= iv.hi + 1e-12,
+            "exact {exact} outside [{}, {}]",
+            iv.lo,
+            iv.hi
+        );
+        // At convergence the width is (h(r) + h(c))/λ up to fp noise.
+        let want = (entropy(&r) + entropy(&c)) / lambda;
+        assert!((iv.width() - want).abs() < 1e-9, "width {} vs {want}", iv.width());
+    }
+
+    #[test]
+    fn certify_survives_degenerate_states() {
+        let m = vec![0.0, 1.0, 1.0, 0.0];
+        let r = [0.5, 0.5];
+        let c = [0.5, 0.5];
+        // All-zero scalings (poisoned): vacuous but well-formed.
+        let iv = certify(&m, 2, 9.0, &r, &c, &output(vec![0.0; 2], vec![0.0; 2], F::NAN));
+        assert_eq!(iv.lo, 0.0);
+        assert!(iv.hi.is_infinite());
+        // Diverged scalings (overflowing mass): vacuous, not NaN.
+        let iv = certify(
+            &m,
+            2,
+            9.0,
+            &r,
+            &c,
+            &output(vec![1e300; 2], vec![1e300; 2], F::INFINITY),
+        );
+        assert_eq!(iv, ErrorInterval::UNBOUNDED);
+        // Zero-mass bins are skipped, bounds stay finite.
+        let iv = certify(
+            &m,
+            2,
+            2.0,
+            &[1.0, 0.0],
+            &[0.0, 1.0],
+            &output(vec![1.0, 0.0], vec![0.0, 1.0], 1.0),
+        );
+        assert!(iv.lo.is_finite() && iv.hi.is_finite());
+        assert!(iv.contains(1.0), "dirac-to-dirac cost 1 outside {iv:?}");
+    }
+}

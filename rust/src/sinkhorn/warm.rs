@@ -197,7 +197,11 @@ mod tests {
     use crate::simplex::seeded_rng;
 
     fn init(tag: F, d: usize) -> ScalingInit {
-        ScalingInit { u: vec![tag; d], v: vec![tag + 0.5; d] }
+        ScalingInit::warm(vec![tag; d], vec![tag + 0.5; d])
+    }
+
+    fn cached_u(init: &ScalingInit) -> Vec<F> {
+        init.scalings().expect("stores only hold warm seeds").0.to_vec()
     }
 
     fn key(fp: u64) -> WarmKey {
@@ -221,7 +225,7 @@ mod tests {
         assert!(store.get(&key(1)).is_none());
         store.insert(key(1), init(1.0, 4));
         let got = store.get(&key(1)).expect("cached");
-        assert_eq!(got.u, vec![1.0; 4]);
+        assert_eq!(cached_u(&got), vec![1.0; 4]);
         let c = store.counters();
         assert_eq!((c.hits, c.misses, c.insertions, c.evictions), (1, 1, 1, 0));
     }
@@ -247,7 +251,7 @@ mod tests {
         store.insert(key(1), init(1.0, 2));
         store.insert(key(1), init(9.0, 2));
         assert_eq!(store.len(), 1);
-        assert_eq!(store.get(&key(1)).unwrap().u, vec![9.0; 2]);
+        assert_eq!(cached_u(&store.get(&key(1)).unwrap()), vec![9.0; 2]);
         store.insert(key(2), init(2.0, 2));
         store.insert(key(3), init(3.0, 2));
         // Recency order before the last insert was [1 (refreshed by the
@@ -290,10 +294,12 @@ mod tests {
 
     #[test]
     fn potentials_map_zeros_to_neg_infinity() {
-        let s = ScalingInit { u: vec![1.0, 0.0], v: vec![0.5, 2.0] };
-        let (f, g) = s.potentials();
+        let s = ScalingInit::warm(vec![1.0, 0.0], vec![0.5, 2.0]);
+        let (f, g) = s.potentials().expect("warm seeds have potentials");
         assert_eq!(f[0], 0.0);
         assert_eq!(f[1], F::NEG_INFINITY);
         assert!((g[1] - (2.0 as F).ln()).abs() < 1e-15);
+        assert!(ScalingInit::Cold.potentials().is_none());
+        assert!(ScalingInit::default().is_cold());
     }
 }

@@ -13,7 +13,7 @@ use sinkhorn_rs::backend::{
 use sinkhorn_rs::linalg::KernelPolicy;
 use sinkhorn_rs::metric::{CostMatrix, RandomMetric};
 use sinkhorn_rs::simplex::{seeded_rng, Histogram};
-use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig, SinkhornEngine};
+use sinkhorn_rs::sinkhorn::{LambdaSchedule, ScalingInit, SinkhornConfig, SinkhornEngine};
 use sinkhorn_rs::F;
 
 const TOL: F = 1e-9;
@@ -52,7 +52,7 @@ fn all_paths_agree_on_fixed_budget() {
                 ShardedExecutor::new(&m, cfg, BackendKind::Interleaved, 3);
 
             let r_refs: Vec<&Histogram> = rs.iter().collect();
-            let inter_panel = inter.solve_panel_paired(&r_refs, &cs);
+            let inter_panel = inter.solve_paired(&r_refs, &cs, &[]);
             let (pool_panel, reports) = pool.solve_panel_paired(&r_refs, &cs);
             assert_eq!(pool_panel.len(), cs.len());
             assert!(reports.len() > 1, "panel of 7 must shard across workers");
@@ -61,7 +61,7 @@ fn all_paths_agree_on_fixed_budget() {
                 let want = dense.distance(&rs[j], &cs[j]).value;
                 let ctx = format!("seed={seed} d={d} lambda={lambda} j={j}");
                 assert_close(
-                    log.solve_pair(&rs[j], &cs[j]).value,
+                    log.solve(&rs[j], &cs[j], &ScalingInit::Cold).value,
                     want,
                     &format!("log-domain vs dense ({ctx})"),
                 );
@@ -111,7 +111,7 @@ fn degenerate_lambda_paths_agree() {
             let out = dense.distance(&rs[j], &cs[j]);
             assert!(out.stats.stabilized, "dense path must have stabilized");
             assert_close(
-                log.solve_pair(&rs[j], &cs[j]).value,
+                log.solve(&rs[j], &cs[j], &ScalingInit::Cold).value,
                 want,
                 &format!("log-domain vs stabilized dense (seed={seed} j={j})"),
             );
@@ -138,7 +138,7 @@ fn executor_is_transparent_for_every_kind() {
         BackendKind::Greenkhorn,
         BackendKind::Exact,
     ] {
-        let sequential = kind.build(&m, cfg).solve_panel_paired(&r_refs, &cs);
+        let sequential = kind.build(&m, cfg).solve_paired(&r_refs, &cs, &[]);
         let mut pool = ShardedExecutor::new(&m, cfg, kind, 4);
         let (sharded, reports) = pool.solve_panel_paired(&r_refs, &cs);
         assert_eq!(sharded.len(), sequential.len(), "{kind}");
@@ -173,12 +173,12 @@ fn converged_paths_agree() {
         let green = GreenkhornBackend::new(&m, tight);
         for j in 0..cs.len() {
             let want = dense.distance(&rs[j], &cs[j]).value;
-            let lg = log.solve_pair(&rs[j], &cs[j]).value;
+            let lg = log.solve(&rs[j], &cs[j], &ScalingInit::Cold).value;
             assert!(
                 (lg - want).abs() <= 1e-8 * (1.0 + want),
                 "seed={seed} j={j}: log-domain {lg} vs dense {want}"
             );
-            let gk = green.solve_pair(&rs[j], &cs[j]).value;
+            let gk = green.solve(&rs[j], &cs[j], &ScalingInit::Cold).value;
             assert!(
                 (gk - want).abs() <= 1e-6 * (1.0 + want),
                 "seed={seed} j={j}: greenkhorn {gk} vs dense {want}"
@@ -214,9 +214,9 @@ fn zero_truncation_and_full_rank_reproduce_dense() {
             assert_eq!(lowrank.kernel_stats().rank, d, "PD kernel factors fully");
 
             let r_refs: Vec<&Histogram> = rs.iter().collect();
-            let want = dense.solve_panel_paired(&r_refs, &cs);
-            let got_t = trunc.solve_panel_paired(&r_refs, &cs);
-            let got_l = lowrank.solve_panel_paired(&r_refs, &cs);
+            let want = dense.solve_paired(&r_refs, &cs, &[]);
+            let got_t = trunc.solve_paired(&r_refs, &cs, &[]);
+            let got_l = lowrank.solve_paired(&r_refs, &cs, &[]);
             for j in 0..cs.len() {
                 let ctx = format!("seed={seed} d={d} lambda={lambda} j={j}");
                 assert!(
@@ -266,9 +266,9 @@ fn structured_parity_survives_geometric_schedule() {
         let lowrank = BackendKind::LowRank.build(&m, lr_cfg);
 
         let r_refs: Vec<&Histogram> = rs.iter().collect();
-        let want = dense.solve_panel_paired(&r_refs, &cs);
-        let got_t = trunc.solve_panel_paired(&r_refs, &cs);
-        let got_l = lowrank.solve_panel_paired(&r_refs, &cs);
+        let want = dense.solve_paired(&r_refs, &cs, &[]);
+        let got_t = trunc.solve_paired(&r_refs, &cs, &[]);
+        let got_l = lowrank.solve_paired(&r_refs, &cs, &[]);
         for j in 0..cs.len() {
             assert!(
                 (got_t[j].value - want[j].value).abs()
@@ -307,7 +307,7 @@ fn greenkhorn_parity_on_spiky_histograms() {
         let r = Histogram::sample_dirichlet(d, 0.3, &mut rng);
         let c = Histogram::sample_dirichlet(d, 0.3, &mut rng);
         let want = dense.distance(&r, &c).value;
-        let out = green.solve_pair(&r, &c);
+        let out = green.solve(&r, &c, &ScalingInit::Cold);
         assert!(out.stats.converged, "greenkhorn must converge");
         assert!(
             (out.value - want).abs() <= 1e-6 * (1.0 + want),

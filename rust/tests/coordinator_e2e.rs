@@ -60,12 +60,7 @@ fn xla_service_matches_cpu_engine() {
     let rxs: Vec<_> = queries
         .iter()
         .map(|(r, c)| {
-            svc.submit(Query {
-                metric: MetricId(0),
-                lambda: 9.0,
-                r: r.clone(),
-                c: c.clone(),
-            })
+            svc.submit(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
             .unwrap()
         })
         .collect();
@@ -73,9 +68,9 @@ fn xla_service_matches_cpu_engine() {
         let res = rx.recv().unwrap().unwrap();
         assert_eq!(res.engine, EngineKind::Xla, "expected the XLA backend");
         let want = engine.distance(r, c).value;
-        let rel = (res.distance - want).abs() / want.max(1e-12);
+        let rel = (res.distance() - want).abs() / want.max(1e-12);
         // f32 artifact vs f64 engine at 20 fixed iterations: ~1e-3 drift.
-        assert!(rel < 1e-2, "service {} vs engine {want}", res.distance);
+        assert!(rel < 1e-2, "service {} vs engine {want}", res.distance());
         assert!(res.batch_size >= 1);
     }
     let stats = svc.stats().unwrap();
@@ -97,13 +92,13 @@ fn unserved_dimension_falls_back_to_cpu() {
     let r = Histogram::sample_uniform(d, &mut rng);
     let c = Histogram::sample_uniform(d, &mut rng);
     let res = svc
-        .distance(Query { metric: MetricId(1), lambda: 9.0, r: r.clone(), c: c.clone() })
+        .distance(Query::new(MetricId(1), 9.0, r.clone(), c.clone()))
         .unwrap();
     assert_eq!(res.engine, EngineKind::Cpu);
     let want = SinkhornEngine::with_config(&metric, SinkhornConfig::fixed(9.0, 20))
         .distance(&r, &c)
         .value;
-    assert!((res.distance - want).abs() < 1e-12);
+    assert!((res.distance() - want).abs() < 1e-12);
     svc.shutdown();
 }
 
@@ -123,13 +118,13 @@ fn mixed_classes_route_correctly() {
         let lambda = if k % 3 == 0 { 9.0 } else { 4.0 };
         let r = Histogram::sample_uniform(d, &mut rng);
         let c = Histogram::sample_uniform(d, &mut rng);
-        rxs.push((id, svc.submit(Query { metric: id, lambda, r, c }).unwrap()));
+        rxs.push((id, svc.submit(Query::new(id, lambda, r, c)).unwrap()));
     }
     for (id, rx) in rxs {
         let res = rx.recv().unwrap().unwrap();
         let expect = if id == MetricId(0) { EngineKind::Xla } else { EngineKind::Cpu };
         assert_eq!(res.engine, expect, "metric {id:?}");
-        assert!(res.distance.is_finite() && res.distance > 0.0);
+        assert!(res.distance().is_finite() && res.distance() > 0.0);
     }
     let stats = svc.stats().unwrap();
     assert_eq!(stats.queries, 24);
@@ -175,10 +170,10 @@ fn bad_artifact_dir_falls_back_to_cpu_by_default() {
     let r = Histogram::sample_uniform(d, &mut rng);
     let c = Histogram::sample_uniform(d, &mut rng);
     let res = svc
-        .distance(Query { metric: MetricId(0), lambda: 9.0, r, c })
+        .distance(Query::new(MetricId(0), 9.0, r, c))
         .unwrap();
     assert_eq!(res.engine, EngineKind::Cpu);
-    assert!(res.distance.is_finite() && res.distance > 0.0);
+    assert!(res.distance().is_finite() && res.distance() > 0.0);
     svc.shutdown();
 }
 
@@ -352,12 +347,7 @@ fn throughput_improves_with_batching_on_xla() {
         let rxs: Vec<_> = queries
             .iter()
             .map(|(r, c)| {
-                svc.submit(Query {
-                    metric: MetricId(0),
-                    lambda: 9.0,
-                    r: r.clone(),
-                    c: c.clone(),
-                })
+                svc.submit(Query::new(MetricId(0), 9.0, r.clone(), c.clone()))
                 .unwrap()
             })
             .collect();

@@ -17,7 +17,7 @@ use sinkhorn_rs::backend::{BackendKind, SolverBackend};
 use sinkhorn_rs::linalg::KernelPolicy;
 use sinkhorn_rs::metric::CostMatrix;
 use sinkhorn_rs::simplex::Histogram;
-use sinkhorn_rs::sinkhorn::{log_domain, LambdaSchedule, SinkhornConfig, SinkhornEngine};
+use sinkhorn_rs::sinkhorn::{log_domain, LambdaSchedule, ScalingInit, SinkhornConfig, SinkhornEngine};
 use sinkhorn_rs::util::json::Json;
 use sinkhorn_rs::F;
 
@@ -195,7 +195,7 @@ fn truncated_backend_matches_python_oracle() {
         );
         let r = Histogram::from_weights(&case.r).unwrap();
         let c = Histogram::from_weights(&case.c).unwrap();
-        let out = backend.solve_pair(&r, &c);
+        let out = backend.solve(&r, &c, &ScalingInit::Cold);
         assert!(out.stats.converged, "{}: did not converge", case.name);
         assert!(
             !out.stats.stabilized,

@@ -31,7 +31,7 @@ use sinkhorn_rs::metric::{CostMatrix, RandomMetric};
 use sinkhorn_rs::ot::EmdSolver;
 use sinkhorn_rs::rng::Rng;
 use sinkhorn_rs::simplex::{seeded_rng, Histogram};
-use sinkhorn_rs::sinkhorn::{LambdaSchedule, ScalingInit, SinkhornConfig};
+use sinkhorn_rs::sinkhorn::{LambdaSchedule, ScalingInit, SinkhornConfig, SolveBudget};
 use sinkhorn_rs::F;
 
 #[cfg(not(debug_assertions))]
@@ -162,7 +162,7 @@ fn prop_feasibility_symmetry_nonnegativity() {
             .cost;
         for kind in SCALING_KINDS {
             let backend = kind.build(&case.m, tight(case.lambda));
-            let out = backend.solve_pair(&case.r, &case.c);
+            let out = backend.solve(&case.r, &case.c, &ScalingInit::Cold);
             assert!(out.stats.converged, "seed {seed} {kind}: did not converge");
             assert!(out.value.is_finite(), "seed {seed} {kind}: non-finite value");
             assert!(out.value >= -1e-12, "seed {seed} {kind}: negative {}", out.value);
@@ -192,7 +192,7 @@ fn prop_feasibility_symmetry_nonnegativity() {
             }
 
             // Symmetry: the metric is symmetric, so d(r, c) = d(c, r).
-            let flipped = backend.solve_pair(&case.c, &case.r);
+            let flipped = backend.solve(&case.c, &case.r, &ScalingInit::Cold);
             assert!(
                 (flipped.value - out.value).abs() < 1e-7 * (1.0 + out.value.abs()),
                 "seed {seed} {kind}: asymmetric {} vs {}",
@@ -204,8 +204,8 @@ fn prop_feasibility_symmetry_nonnegativity() {
         // The exact backend shares the symmetry/non-negativity contract
         // (its feasibility is checked on the simplex plan directly).
         let exact_backend = BackendKind::Exact.build(&case.m, tight(case.lambda));
-        let fwd = exact_backend.solve_pair(&case.r, &case.c);
-        let bwd = exact_backend.solve_pair(&case.c, &case.r);
+        let fwd = exact_backend.solve(&case.r, &case.c, &ScalingInit::Cold);
+        let bwd = exact_backend.solve(&case.c, &case.r, &ScalingInit::Cold);
         assert!(fwd.value >= -1e-12 && fwd.value.is_finite());
         assert!((fwd.value - bwd.value).abs() < 1e-7 * (1.0 + fwd.value.abs()));
         let plan = EmdSolver::new(&case.m).solve(&case.r, &case.c).unwrap();
@@ -224,13 +224,13 @@ fn prop_warm_and_annealed_agree_with_cold() {
         let case = sample_case(seed);
         for kind in SCALING_KINDS {
             let backend = kind.build(&case.m, tight(case.lambda));
-            let cold = backend.solve_pair(&case.r, &case.c);
+            let cold = backend.solve(&case.r, &case.c, &ScalingInit::Cold);
             assert!(cold.stats.converged, "seed {seed} {kind}: cold not converged");
 
             // Warm start from the cold fixed point: same value, and never
             // more iterations than the cold solve took.
             let seed_scaling = ScalingInit::from_output(&cold);
-            let warm = backend.solve_pair_init(&case.r, &case.c, Some(&seed_scaling));
+            let warm = backend.solve(&case.r, &case.c, &seed_scaling);
             assert!(warm.stats.converged, "seed {seed} {kind}: warm not converged");
             assert!(
                 (warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()),
@@ -252,7 +252,7 @@ fn prop_warm_and_annealed_agree_with_cold() {
             };
             let annealed = kind
                 .build(&case.m, annealed_cfg)
-                .solve_pair(&case.r, &case.c);
+                .solve(&case.r, &case.c, &ScalingInit::Cold);
             assert!(
                 annealed.stats.converged,
                 "seed {seed} {kind}: annealed not converged"
@@ -294,7 +294,7 @@ fn prop_structured_feasibility_symmetry_bounds() {
             let cfg = SinkhornConfig { kernel: policy, ..tight(case.lambda) };
             let backend = kind.build(&case.m, cfg);
             let stats = backend.kernel_stats();
-            let out = backend.solve_pair(&case.r, &case.c);
+            let out = backend.solve(&case.r, &case.c, &ScalingInit::Cold);
             // The rescue contract makes convergence total: either the
             // structured fixed point or the exact log-domain solution.
             assert!(out.stats.converged, "seed {seed} {kind}: did not converge");
@@ -343,7 +343,7 @@ fn prop_structured_feasibility_symmetry_bounds() {
 
             // Symmetry: K̃ inherits M's symmetry (symmetric truncation
             // pattern, L·Lᵀ factorization), so d(r, c) = d(c, r).
-            let flipped = backend.solve_pair(&case.c, &case.r);
+            let flipped = backend.solve(&case.c, &case.r, &ScalingInit::Cold);
             assert!(
                 (flipped.value - out.value).abs() < 1e-7 * (1.0 + out.value.abs()),
                 "seed {seed} {kind}: asymmetric {} vs {}",
@@ -363,11 +363,11 @@ fn prop_structured_warm_and_annealed_agree() {
         for (kind, policy) in STRUCTURED_KINDS {
             let cfg = SinkhornConfig { kernel: policy, ..tight(case.lambda) };
             let backend = kind.build(&case.m, cfg);
-            let cold = backend.solve_pair(&case.r, &case.c);
+            let cold = backend.solve(&case.r, &case.c, &ScalingInit::Cold);
             assert!(cold.stats.converged, "seed {seed} {kind}: cold not converged");
 
             let seed_scaling = ScalingInit::from_output(&cold);
-            let warm = backend.solve_pair_init(&case.r, &case.c, Some(&seed_scaling));
+            let warm = backend.solve(&case.r, &case.c, &seed_scaling);
             assert!(warm.stats.converged, "seed {seed} {kind}: warm not converged");
             assert!(
                 (warm.value - cold.value).abs() < 1e-7 * (1.0 + cold.value.abs()),
@@ -386,7 +386,7 @@ fn prop_structured_warm_and_annealed_agree() {
             };
             let annealed = kind
                 .build(&case.m, annealed_cfg)
-                .solve_pair(&case.r, &case.c);
+                .solve(&case.r, &case.c, &ScalingInit::Cold);
             assert!(
                 annealed.stats.converged,
                 "seed {seed} {kind}: annealed not converged"
@@ -443,7 +443,7 @@ fn truncated_kernel_sparse_and_sound_at_serving_lambda() {
         );
         let r = Histogram::sample_uniform(d, &mut rng);
         let c = Histogram::sample_uniform(d, &mut rng);
-        let out = backend.solve_pair(&r, &c);
+        let out = backend.solve(&r, &c, &ScalingInit::Cold);
         assert!(out.stats.converged, "lambda={lambda}: not converged");
         let k_eff = if out.stats.stabilized {
             KernelPolicy::Dense.build(m.data(), d, lambda).materialize()
@@ -469,6 +469,113 @@ fn truncated_kernel_sparse_and_sound_at_serving_lambda() {
     }
 }
 
+/// The anytime certificate contract (PR 6), across the scaling backends,
+/// both kernel-structured policies, and the exact simplex:
+///
+/// * **bracketing** — at every iteration budget, the certified interval
+///   [lo, hi] contains the exact d^λ (proxied by a tightly-converged
+///   log-domain solve, which is exact at any λ, within solver slack);
+///   for the structured kinds the certificate is priced against the
+///   *exact* cost matrix, so the same dense d^λ must land inside even
+///   though the estimate tracks the approximate kernel;
+/// * **monotone width** — budget slices nest on the CERT_STRIDE lattice
+///   and per-slice certificates are intersected, so the interval width
+///   never increases as the budget grows;
+/// * **unbounded transparency** — `SolveBudget::Unbounded` is
+///   bit-identical to the plain `solve` entry point (value, iteration
+///   count, convergence flag), with the certificate computed once on
+///   the final state.
+#[test]
+fn prop_interval_certificate_brackets_exact_value() {
+    const BUDGETS: [usize; 4] = [8, 16, 32, 64];
+    // The budget sweep re-solves each case several times per backend, so
+    // sample every 4th case like the other trajectory-probing property.
+    for seed in (0..CASES).step_by(4) {
+        let case = sample_case(seed);
+        // Exact d^λ proxy: the log-domain fixed point at tolerance 1e-9.
+        let reference = BackendKind::LogDomain
+            .build(&case.m, tight(case.lambda))
+            .solve(&case.r, &case.c, &ScalingInit::Cold)
+            .value;
+        let slack = 1e-6 * (1.0 + reference.abs());
+
+        let mut matrix: Vec<(BackendKind, KernelPolicy)> = SCALING_KINDS
+            .iter()
+            .map(|&k| (k, KernelPolicy::Dense))
+            .collect();
+        matrix.extend(STRUCTURED_KINDS);
+        for (kind, policy) in matrix {
+            let cfg = SinkhornConfig { kernel: policy, ..tight(case.lambda) };
+            let backend = kind.build(&case.m, cfg);
+
+            // Unbounded reproduces the plain solve bit-for-bit.
+            let plain = backend.solve(&case.r, &case.c, &ScalingInit::Cold);
+            let free = backend.solve_outcome(
+                &case.r,
+                &case.c,
+                &ScalingInit::Cold,
+                SolveBudget::Unbounded,
+            );
+            assert_eq!(
+                free.estimate, plain.value,
+                "seed {seed} {kind}: unbounded outcome diverges from solve"
+            );
+            assert_eq!(free.iterations, plain.stats.iterations, "seed {seed} {kind}");
+            assert_eq!(free.converged, plain.stats.converged, "seed {seed} {kind}");
+            assert!(
+                free.interval.lo <= reference + slack
+                    && reference <= free.interval.hi + slack,
+                "seed {seed} {kind}: exact {reference} outside converged \
+                 [{}, {}]",
+                free.interval.lo,
+                free.interval.hi
+            );
+
+            // Budget sweep: bracketing at every cut, width monotone.
+            let mut prev_width = F::INFINITY;
+            for &budget in &BUDGETS {
+                let out = backend.solve_outcome(
+                    &case.r,
+                    &case.c,
+                    &ScalingInit::Cold,
+                    SolveBudget::Iterations(budget),
+                );
+                assert!(
+                    out.interval.lo <= reference + slack
+                        && reference <= out.interval.hi + slack,
+                    "seed {seed} {kind} budget {budget}: exact {reference} \
+                     outside [{}, {}]",
+                    out.interval.lo,
+                    out.interval.hi
+                );
+                let width = out.interval.width();
+                assert!(
+                    width <= prev_width + 1e-12 * (1.0 + prev_width.min(1e300)),
+                    "seed {seed} {kind}: width grew from {prev_width} to \
+                     {width} at budget {budget}"
+                );
+                prev_width = width;
+            }
+        }
+
+        // The exact simplex certifies a zero-width interval at its own
+        // answer, which also brackets the entropic value from below.
+        let exact_backend = BackendKind::Exact.build(&case.m, tight(case.lambda));
+        let out = exact_backend.solve_outcome(
+            &case.r,
+            &case.c,
+            &ScalingInit::Cold,
+            SolveBudget::Iterations(8),
+        );
+        assert_eq!(out.interval.width(), 0.0, "seed {seed}: exact not a point");
+        assert!(
+            out.interval.lo <= reference + slack,
+            "seed {seed}: exact EMD {} above entropic {reference}",
+            out.interval.lo
+        );
+    }
+}
+
 #[test]
 fn prop_dual_objective_monotone_across_iterations() {
     // Trajectory probing re-solves at growing fixed budgets (deterministic
@@ -481,7 +588,7 @@ fn prop_dual_objective_monotone_across_iterations() {
             for &budget in &BUDGETS {
                 let backend =
                     kind.build(&case.m, SinkhornConfig::fixed(case.lambda, budget));
-                let out = backend.solve_pair(&case.r, &case.c);
+                let out = backend.solve(&case.r, &case.c, &ScalingInit::Cold);
                 let phi = dual_descent_objective(&case, &out.u, &out.v);
                 assert!(phi.is_finite(), "seed {seed} {kind}: Φ not finite");
                 if let Some(prev_phi) = prev {

@@ -281,7 +281,7 @@ fn retrieval_never_stalls_engine_thread_deadline_flushes() {
             Err(std::sync::mpsc::TryRecvError::Empty) => {
                 let r = Histogram::sample_uniform(d, &mut rng);
                 let c = Histogram::sample_uniform(d, &mut rng);
-                svc.distance(Query { metric: MetricId(0), lambda: 9.0, r, c })
+                svc.distance(Query::new(MetricId(0), 9.0, r, c))
                     .unwrap();
                 interleaved += 1;
             }
