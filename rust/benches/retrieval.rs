@@ -3,7 +3,11 @@
 //! sharded-vs-monolithic panel (writes `BENCH_PR5.json`): the same
 //! clustered workload partitioned over {1, 2, 3, 7} shards, with the
 //! merged pruned top-k hard-asserted equivalent to the monolithic
-//! brute-force top-k and the per-shard-count walltime recorded.
+//! brute-force top-k and the per-shard-count walltime recorded; plus
+//! the PR 7 ANN-routing panel (writes `BENCH_PR7.json`): a 100k-entry
+//! clustered corpus where the k-means router's shortlist is
+//! hard-asserted to reach probed recall ≥ 0.95 at a shortlist fraction
+//! under 0.1 against the exact routing-disabled oracle.
 //!
 //! Workload: a clustered synthetic corpus (8 Dirichlet(0.3) prototypes,
 //! 32 mixture entries each, d = 64 median-normalized random metric) and
@@ -29,7 +33,8 @@ use sinkhorn_rs::data::ClusteredCorpus;
 use sinkhorn_rs::linalg::KernelPolicy;
 use sinkhorn_rs::metric::RandomMetric;
 use sinkhorn_rs::retrieval::{
-    CorpusIndex, RetrievalConfig, RetrievalService, ShardedCorpus, ShardingConfig,
+    CorpusIndex, RetrievalConfig, RetrievalService, RoutingConfig, ShardedCorpus,
+    ShardingConfig,
 };
 use sinkhorn_rs::simplex::seeded_rng;
 use sinkhorn_rs::util::json::Json;
@@ -152,6 +157,7 @@ fn main() {
     }
 
     sharded_panel(&m, &corpus, &query);
+    routing_panel();
 }
 
 /// PR 5 panel: the dense λ = 9 serving row over {1, 2, 3, 7} shards.
@@ -236,5 +242,140 @@ fn sharded_panel(
     match std::fs::write("BENCH_PR5.json", &rendered) {
         Ok(()) => println!("  -> recorded BENCH_PR5.json"),
         Err(e) => eprintln!("  -> could not write BENCH_PR5.json: {e}"),
+    }
+}
+
+/// PR 7 panel: ANN routing over a ≥100k-entry clustered corpus at a
+/// retrieval-friendly d = 16 (writes `BENCH_PR7.json`). The oracle is
+/// the *exact* routing-disabled sharded search over the same corpus —
+/// itself locked to the brute-force top-k by the exactness suites — so
+/// the recall measured here is the recall of the one deliberately
+/// inexact stage. Hard asserts, aggregated over every query:
+///
+/// * probed recall ≥ 0.95 (tie-aware, via `retrieval::probe_outcome`);
+/// * shortlist fraction < 0.1 — the router must hand the exact cascade
+///   under a tenth of the corpus.
+fn routing_panel() {
+    const RD: usize = 16;
+    const RCLUSTERS: usize = 8;
+    const RPER: usize = 12_500;
+    const RK: usize = 10;
+    const QUERIES: usize = 5;
+    const RMIX: F = 0.1;
+
+    let mut rng = seeded_rng(7070);
+    let m = RandomMetric::new(RD).sample(&mut rng);
+    let gen = ClusteredCorpus::new(RD, RCLUSTERS, RPER, RMIX);
+    let (corpus, protos) = gen.generate(&mut rng);
+    let n = corpus.len();
+    assert!(n >= 100_000, "routing panel needs >= 100k entries (got {n})");
+    let queries: Vec<_> = (0..QUERIES)
+        .map(|q| gen.mixture_at(&protos[q % RCLUSTERS], RMIX, &mut rng))
+        .collect();
+
+    let mut config = RetrievalConfig::serving(9.0);
+    config.sinkhorn.kernel = KernelPolicy::Dense;
+    config.warm_start = false;
+    let routing =
+        RoutingConfig { centroids: 128, probes: 10, min_shortlist: 64, iterations: 8 };
+
+    let exact_sharding = ShardingConfig { shards: 2, ..Default::default() };
+    let routed_sharding = ShardingConfig {
+        shards: 2,
+        routing: Some(routing),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut exact =
+        ShardedCorpus::new(&m, corpus.clone(), 4, config, exact_sharding)
+            .expect("routing panel corpus shards");
+    let exact_build = t0.elapsed();
+    let t0 = Instant::now();
+    let mut routed = ShardedCorpus::new(&m, corpus, 4, config, routed_sharding)
+        .expect("routing panel corpus shards (routed)");
+    let routed_build = t0.elapsed();
+
+    let (mut matched, mut expected) = (0usize, 0usize);
+    let (mut shortlisted, mut candidates) = (0u64, 0u64);
+    let mut exact_wall = std::time::Duration::ZERO;
+    let mut routed_wall = std::time::Duration::ZERO;
+    for (qi, query) in queries.iter().enumerate() {
+        let t0 = Instant::now();
+        let (oracle, _) = exact.search(query, RK).expect("exact search");
+        exact_wall += t0.elapsed();
+        let t0 = Instant::now();
+        let (hits, report) = routed.search(query, RK).expect("routed search");
+        routed_wall += t0.elapsed();
+        assert!(report.routed, "query {qi}: the router must engage");
+        let probe = sinkhorn_rs::retrieval::probe_outcome(&hits, &oracle, 1e-7);
+        matched += probe.matched;
+        expected += probe.k;
+        shortlisted += report.shortlist as u64;
+        candidates += report.corpus as u64;
+    }
+    let recall = matched as f64 / expected.max(1) as f64;
+    let fraction = shortlisted as f64 / candidates.max(1) as f64;
+    // --- the PR 7 acceptance contract, hard-asserted ---
+    assert!(
+        recall >= 0.95,
+        "routing recall {recall:.3} must reach 0.95 ({matched}/{expected})"
+    );
+    assert!(
+        fraction < 0.1,
+        "shortlist fraction {fraction:.3} must stay under 0.1 \
+         ({shortlisted}/{candidates})"
+    );
+    let speedup =
+        exact_wall.as_secs_f64() / routed_wall.as_secs_f64().max(1e-12);
+    println!(
+        "retrieval_routing  d={RD} corpus={n} k={RK} queries={QUERIES}: \
+         recall {recall:.3}, shortlist fraction {fraction:.4}, exact {:.2}s \
+         vs routed {:.2}s ({speedup:.2}x)",
+        exact_wall.as_secs_f64(),
+        routed_wall.as_secs_f64(),
+    );
+
+    let mut doc = BTreeMap::new();
+    let mut set = |k: &str, v: Json| {
+        doc.insert(k.to_string(), v);
+    };
+    set("bench", Json::String("retrieval_ann_routing".into()));
+    set("status", Json::String("measured".into()));
+    set("d", Json::Number(RD as f64));
+    set("corpus", Json::Number(n as f64));
+    set("clusters", Json::Number(RCLUSTERS as f64));
+    set("k", Json::Number(RK as f64));
+    set("queries", Json::Number(QUERIES as f64));
+    set("lambda", Json::Number(9.0));
+    set("shards", Json::Number(2.0));
+    set("centroids", Json::Number(routing.centroids as f64));
+    set("probes", Json::Number(routing.probes as f64));
+    set("min_shortlist", Json::Number(routing.min_shortlist as f64));
+    set("recall", Json::Number(recall));
+    set("shortlist_fraction", Json::Number(fraction));
+    set("matched", Json::Number(matched as f64));
+    set("expected", Json::Number(expected as f64));
+    set("exact_build_wall_ns", Json::Number(exact_build.as_nanos() as f64));
+    set("routed_build_wall_ns", Json::Number(routed_build.as_nanos() as f64));
+    set("exact_search_wall_ns", Json::Number(exact_wall.as_nanos() as f64));
+    set("routed_search_wall_ns", Json::Number(routed_wall.as_nanos() as f64));
+    set("speedup", Json::Number(speedup));
+    set(
+        "note",
+        Json::String(
+            "written by `cargo bench --bench retrieval`; routed = \
+             ShardedCorpus::search with per-shard k-means ANN routing \
+             (RoutingConfig on ShardingConfig), oracle = the exact \
+             routing-disabled search over the same 100k-entry clustered \
+             corpus; recall >= 0.95 and shortlist_fraction < 0.1 are \
+             hard-asserted via retrieval::probe_outcome at 1e-7"
+                .into(),
+        ),
+    );
+    drop(set);
+    let rendered = format!("{}\n", Json::Object(doc));
+    match std::fs::write("BENCH_PR7.json", &rendered) {
+        Ok(()) => println!("  -> recorded BENCH_PR7.json"),
+        Err(e) => eprintln!("  -> could not write BENCH_PR7.json: {e}"),
     }
 }

@@ -38,6 +38,15 @@ pub struct Stats {
     pub retrieval_pruned: u64,
     /// Refine solves rescued through the exact log-domain path.
     pub retrieval_rescued: u64,
+    /// Retrievals answered from an ANN-router shortlist (PR 7).
+    pub retrieval_routed: u64,
+    /// Candidates admitted to routed shortlists (Σ over routed queries
+    /// only — unrouted queries price the whole corpus and are excluded
+    /// so the fraction gauges the router, not the traffic mix).
+    pub retrieval_shortlisted: u64,
+    /// Corpus candidates considered by routed queries (denominator of
+    /// the shortlist fraction).
+    pub retrieval_routed_candidates: u64,
     /// Brute-force recall probes executed.
     pub recall_probes: u64,
     /// Pruned-top-k entries the probes confirmed.
@@ -160,6 +169,11 @@ impl Stats {
         self.retrieval_rescued += report.rescued as u64;
         self.retrieval_pruned_interval += report.pruned_interval as u64;
         self.retrieval_refined += report.refined as u64;
+        if report.routed {
+            self.retrieval_routed += 1;
+            self.retrieval_shortlisted += report.shortlist as u64;
+            self.retrieval_routed_candidates += report.corpus as u64;
+        }
         if let Some(probe) = report.probe {
             self.recall_probes += 1;
             self.recall_matched += probe.matched as u64;
@@ -233,6 +247,9 @@ impl Stats {
             retrieval_solved: self.retrieval_solved,
             retrieval_pruned: self.retrieval_pruned,
             retrieval_rescued: self.retrieval_rescued,
+            retrieval_routed: self.retrieval_routed,
+            retrieval_shortlisted: self.retrieval_shortlisted,
+            retrieval_routed_candidates: self.retrieval_routed_candidates,
             recall_probes: self.recall_probes,
             recall_matched: self.recall_matched,
             recall_expected: self.recall_expected,
@@ -257,7 +274,13 @@ impl Stats {
         }
     }
 
-    /// Approximate quantile from the log2 histogram (upper bucket edge).
+    /// Approximate quantile from the log2 histogram: the upper edge of
+    /// the bucket holding the target rank, clamped to the observed
+    /// maximum. The raw edge overstates the quantile by up to one full
+    /// bucket (2×) whenever the true maximum sits low in its bucket —
+    /// with every sample at 100 µs the p99 used to read 128 µs. The
+    /// clamp makes single-bucket distributions exact and caps the
+    /// quantization error at the observed range.
     fn quantile_us(&self, q: f64) -> u64 {
         let total: u64 = self.lat_buckets.iter().sum();
         if total == 0 {
@@ -268,14 +291,15 @@ impl Stats {
         for (i, &count) in self.lat_buckets.iter().enumerate() {
             seen += count;
             if seen >= target {
-                return 1u64 << (i + 1);
+                return (1u64 << (i + 1)).min(self.lat_max_us);
             }
         }
         self.lat_max_us
     }
 
     /// Approximate interval-width quantile (upper bucket edge, back in
-    /// absolute d^λ units).
+    /// absolute d^λ units), clamped to the observed maximum exactly
+    /// like [`Self::quantile_us`].
     fn width_quantile(&self, q: f64) -> F {
         let total: u64 = self.width_buckets.iter().sum();
         if total == 0 {
@@ -286,7 +310,7 @@ impl Stats {
         for (i, &count) in self.width_buckets.iter().enumerate() {
             seen += count;
             if seen >= target {
-                return (1u64 << (i + 1)) as F * 1e-9;
+                return ((1u64 << (i + 1)) as F * 1e-9).min(self.width_max);
             }
         }
         self.width_max
@@ -304,7 +328,12 @@ pub struct StatsSnapshot {
     pub mean_batch_size: f64,
     pub mean_latency_us: u64,
     pub max_latency_us: u64,
+    /// Approximate median latency: log2-bucketed upper edge clamped to
+    /// `max_latency_us`, so the value is within ±1 bucket (at most 2×)
+    /// of the true quantile and never exceeds the observed maximum.
     pub p50_latency_us: u64,
+    /// Approximate 99th-percentile latency, same ±1-bucket quantization
+    /// and observed-max clamp as `p50_latency_us`.
     pub p99_latency_us: u64,
     /// Total warm-start store hits across workers (0 unless warm-start
     /// serving is on).
@@ -327,6 +356,15 @@ pub struct StatsSnapshot {
     pub retrieval_pruned: u64,
     /// Refine solves rescued through the exact log-domain path.
     pub retrieval_rescued: u64,
+    /// Retrievals answered from an ANN-router shortlist (PR 7). Zero
+    /// with routing disabled — the default, exact configuration.
+    pub retrieval_routed: u64,
+    /// Candidates admitted to routed shortlists (Σ over routed
+    /// queries only).
+    pub retrieval_shortlisted: u64,
+    /// Corpus candidates considered by routed queries (denominator of
+    /// [`Self::retrieval_shortlist_fraction`]).
+    pub retrieval_routed_candidates: u64,
     /// Brute-force recall probes executed.
     pub recall_probes: u64,
     /// Pruned-top-k entries the probes confirmed.
@@ -361,10 +399,13 @@ pub struct StatsSnapshot {
     pub budget_sheds: u64,
     /// Solves served with a finite certified error interval.
     pub certified_solves: u64,
-    /// Approximate median certified interval width (log2-bucketed,
-    /// upper edge; 0.0 before any certified solve).
+    /// Approximate median certified interval width (log2-bucketed
+    /// upper edge clamped to `interval_width_max` — ±1-bucket
+    /// quantization, at most 2× the true quantile; 0.0 before any
+    /// certified solve).
     pub interval_width_p50: F,
-    /// Approximate 99th-percentile certified interval width.
+    /// Approximate 99th-percentile certified interval width, same
+    /// ±1-bucket quantization and observed-max clamp.
     pub interval_width_p99: F,
     /// Widest certified interval served.
     pub interval_width_max: F,
@@ -378,6 +419,18 @@ impl StatsSnapshot {
             return 0.0;
         }
         self.retrieval_pruned as f64 / self.retrieval_candidates as f64
+    }
+
+    /// Mean fraction of the corpus the ANN router admitted to pricing,
+    /// over routed queries only (1.0 before any routed retrieval —
+    /// with routing off the exact walk prices everything). The bench
+    /// contract pairs this with [`Self::recall`]: small fraction,
+    /// probe-audited recall.
+    pub fn retrieval_shortlist_fraction(&self) -> f64 {
+        if self.retrieval_routed_candidates == 0 {
+            return 1.0;
+        }
+        self.retrieval_shortlisted as f64 / self.retrieval_routed_candidates as f64
     }
 
     /// Probed recall of the pruned search in [0, 1] (vacuously 1.0
@@ -491,6 +544,14 @@ impl std::fmt::Display for StatsSnapshot {
                     self.retrieval_pruned_interval, self.retrieval_refined
                 )?;
             }
+            if self.retrieval_routed > 0 {
+                write!(
+                    f,
+                    " routing(routed={}, shortlist_fraction={:.3})",
+                    self.retrieval_routed,
+                    self.retrieval_shortlist_fraction()
+                )?;
+            }
         }
         if self.recall_probes > 0 {
             write!(
@@ -561,6 +622,102 @@ mod tests {
         assert!(snap.p99_latency_us <= snap.max_latency_us * 2);
         assert_eq!(snap.queries, 60);
         assert!(snap.mean_latency_us > 0);
+    }
+
+    #[test]
+    fn single_bucket_quantiles_clamp_to_the_observed_max() {
+        use crate::sinkhorn::{ErrorInterval, SolveOutcome};
+        let mut s = Stats::default();
+        for _ in 0..10 {
+            s.record_query_latency(Duration::from_micros(100));
+        }
+        let snap = s.snapshot();
+        // The raw upper bucket edge would read 128 µs — a 28%
+        // overstatement; the observed-max clamp makes a single-bucket
+        // distribution exact.
+        assert_eq!(snap.p50_latency_us, 100);
+        assert_eq!(snap.p99_latency_us, 100);
+        for _ in 0..10 {
+            s.record_outcome(&SolveOutcome {
+                estimate: 1.0,
+                interval: ErrorInterval { lo: 0.0, hi: 1e-7 },
+                iterations: 10,
+                stabilized: false,
+                converged: false,
+            });
+        }
+        let snap = s.snapshot();
+        assert!((snap.interval_width_p50 - 1e-7).abs() < 1e-12);
+        assert!((snap.interval_width_p99 - 1e-7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_bucket_quantiles_stay_within_the_observed_range() {
+        use crate::sinkhorn::{ErrorInterval, SolveOutcome};
+        let mut s = Stats::default();
+        for _ in 0..10 {
+            s.record_query_latency(Duration::from_micros(100));
+        }
+        s.record_query_latency(Duration::from_micros(1000));
+        let snap = s.snapshot();
+        // p50 lands in the low bucket: its upper edge (128 µs) is
+        // within one bucket of the true 100 µs median.
+        assert_eq!(snap.p50_latency_us, 128);
+        // p99 lands in the high bucket, where the raw 1024 µs edge
+        // clamps to the observed 1000 µs maximum.
+        assert_eq!(snap.p99_latency_us, 1000);
+        assert_eq!(snap.max_latency_us, 1000);
+        let certified = |width: F| SolveOutcome {
+            estimate: 1.0,
+            interval: ErrorInterval { lo: 0.0, hi: width },
+            iterations: 10,
+            stabilized: false,
+            converged: false,
+        };
+        for _ in 0..10 {
+            s.record_outcome(&certified(1e-7));
+        }
+        s.record_outcome(&certified(0.5));
+        let snap = s.snapshot();
+        assert!(
+            (snap.interval_width_p50 - 1.28e-7).abs() < 1e-12,
+            "{}",
+            snap.interval_width_p50
+        );
+        assert!((snap.interval_width_p99 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routing_gauges_track_shortlist_fraction() {
+        use crate::retrieval::RetrievalReport;
+        let mut s = Stats::default();
+        let snap = s.snapshot();
+        assert_eq!(snap.retrieval_routed, 0);
+        assert_eq!(
+            snap.retrieval_shortlist_fraction(),
+            1.0,
+            "vacuous fraction before any routed query"
+        );
+        assert!(!snap.to_string().contains("routing("));
+        // An unrouted (exact) query leaves the routing gauges alone.
+        let mut exact = RetrievalReport::empty(100, 5);
+        exact.shortlist = 100;
+        s.record_retrieval(&exact);
+        // Two routed queries shortlist 8 and 12 of 100 candidates.
+        let mut routed = RetrievalReport::empty(100, 5);
+        routed.routed = true;
+        routed.shortlist = 8;
+        s.record_retrieval(&routed);
+        routed.shortlist = 12;
+        s.record_retrieval(&routed);
+        let snap = s.snapshot();
+        assert_eq!(snap.retrievals, 3);
+        assert_eq!(snap.retrieval_routed, 2);
+        assert_eq!(snap.retrieval_shortlisted, 20);
+        assert_eq!(snap.retrieval_routed_candidates, 200);
+        assert!((snap.retrieval_shortlist_fraction() - 0.1).abs() < 1e-12);
+        let line = snap.to_string();
+        assert!(line.contains("routing(routed=2, shortlist_fraction=0.100)"));
     }
 
     #[test]
@@ -644,6 +801,8 @@ mod tests {
             pruned_interval: 7,
             refined: 5,
             threshold: 0.5,
+            routed: false,
+            shortlist: 200,
             probe: Some(ProbeOutcome { matched: 10, k: 10 }),
         };
         s.record_retrieval(&report);
@@ -732,6 +891,8 @@ mod tests {
             pruned_interval: 0,
             refined: 0,
             threshold: 0.4,
+            routed: false,
+            shortlist: 100,
             probe: Some(ProbeOutcome { matched: 5, k: 5 }),
         };
         let gauge = |shard: usize, live: usize| ShardGauges {

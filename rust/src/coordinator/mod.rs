@@ -230,8 +230,11 @@ pub struct CoordinatorConfig {
     /// tables, warm cache and refine executor, and the per-shard top-k
     /// heaps merge associatively — pruned results are shard-count
     /// invariant (tie-aware), locked by `rust/tests/retrieval_sharded.rs`.
-    /// Inserts route to the emptiest shard; tombstones trigger
-    /// per-shard compaction at 25% dead slots.
+    /// Inserts route to the shard with the fewest *occupied* slots —
+    /// live plus tombstoned, because tombstoned slots keep their memory
+    /// until compaction and a live-only count would funnel every insert
+    /// into whichever shard was just tombstone-heavy; tombstones
+    /// trigger per-shard compaction at 25% dead slots.
     pub retrieval_shards: usize,
     /// Shards one retrieval query walks concurrently on the runtime
     /// thread's scoped pool (0 = available parallelism; clamped to the
@@ -254,6 +257,19 @@ pub struct CoordinatorConfig {
     /// fully re-solves only the straddlers. [`SolveBudget::Unbounded`]
     /// (the default) reproduces the exact pipeline bit-identically.
     pub retrieval_budget: SolveBudget,
+    /// Opt-in ANN routing for registered corpora
+    /// ([`crate::retrieval::RoutingConfig`], threaded onto every
+    /// corpus's [`crate::retrieval::ShardingConfig`]): each shard
+    /// k-means-clusters its cached embedded-barycenter coordinates and
+    /// the exact cascade + refine re-rank only the router's shortlist.
+    /// This is the pipeline's first deliberately *inexact* stage —
+    /// recall is audited by the same `retrieval_probe_every` probes and
+    /// surfaced through the snapshot's `retrieval_routed` /
+    /// `retrieval_shortlist_fraction` gauges. `None` (the default)
+    /// keeps the exact every-live-entry walk bit-for-bit. Routing
+    /// silently stays off for corpora whose ground metric does not
+    /// embed (no centroid coordinates to cluster).
+    pub retrieval_routing: Option<crate::retrieval::RoutingConfig>,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -301,6 +317,7 @@ impl Default for CoordinatorConfig {
             retrieval_threads: 0,
             shed_iterations: None,
             retrieval_budget: SolveBudget::Unbounded,
+            retrieval_routing: None,
         }
     }
 }
@@ -347,6 +364,11 @@ impl CoordinatorConfig {
             if ws.max_iterations == 0 {
                 return Err("warm_start.max_iterations must be at least 1".into());
             }
+        }
+        if let Some(routing) = &self.retrieval_routing {
+            routing
+                .validate()
+                .map_err(|e| format!("retrieval_routing: {e}"))?;
         }
         if self.shed_iterations == Some(0) {
             return Err(
@@ -489,6 +511,15 @@ impl CoordinatorConfigBuilder {
         self
     }
 
+    /// See [`CoordinatorConfig::retrieval_routing`].
+    pub fn retrieval_routing(
+        mut self,
+        routing: crate::retrieval::RoutingConfig,
+    ) -> Self {
+        self.config.retrieval_routing = Some(routing);
+        self
+    }
+
     /// Validate and produce the config; `Err` names the offending knob.
     pub fn build(self) -> Result<CoordinatorConfig, String> {
         self.config.validate()?;
@@ -521,6 +552,7 @@ mod tests {
             .retrieval_threads(1)
             .shed_iterations(16)
             .retrieval_budget(SolveBudget::Iterations(64))
+            .retrieval_routing(crate::retrieval::RoutingConfig::default())
             .build()
             .unwrap();
         assert!(config.artifact_dir.is_none());
@@ -533,6 +565,23 @@ mod tests {
         assert_eq!(config.retrieval_threads, 1);
         assert_eq!(config.shed_iterations, Some(16));
         assert_eq!(config.retrieval_budget, SolveBudget::Iterations(64));
+        assert_eq!(
+            config.retrieval_routing,
+            Some(crate::retrieval::RoutingConfig::default())
+        );
+    }
+
+    #[test]
+    fn malformed_routing_is_rejected() {
+        let routing = crate::retrieval::RoutingConfig {
+            centroids: 0,
+            ..Default::default()
+        };
+        let err = CoordinatorConfig::builder()
+            .retrieval_routing(routing)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("retrieval_routing"), "{err}");
     }
 
     #[test]

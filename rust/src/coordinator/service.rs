@@ -652,6 +652,7 @@ impl EngineThread {
             sharding: ShardingConfig {
                 shards: self.config.retrieval_shards.max(1),
                 threads: self.config.retrieval_threads,
+                routing: self.config.retrieval_routing,
                 ..ShardingConfig::default()
             },
         };

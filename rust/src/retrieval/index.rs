@@ -75,6 +75,14 @@ pub struct QueryPrep {
     prepared: Option<PreparedHistogram>,
 }
 
+impl QueryPrep {
+    /// The query's embedded-barycenter coordinates Lᵀq, when the metric
+    /// factors — what the ANN router ranks centroids against.
+    pub(crate) fn coordinates(&self) -> Option<&[F]> {
+        self.prepared.as_ref().map(|p| p.coordinates())
+    }
+}
+
 /// A validated, normalized histogram corpus bound to one ground metric,
 /// with the per-entry statistics the bound cascade prices candidates
 /// from and a per-entry warm-start cache for the refine stage.
@@ -256,6 +264,13 @@ impl CorpusIndex {
     /// for this metric.
     pub fn has_centroid_space(&self) -> bool {
         self.centroid.is_some()
+    }
+
+    /// The cached embedded-barycenter coordinates Lᵀc of entry slot
+    /// `entry` — the feature space the ANN router clusters in. `None`
+    /// when the metric did not factor (no centroid space).
+    pub(crate) fn entry_coordinates(&self, entry: usize) -> Option<&[F]> {
+        self.centroid.as_ref().map(|space| space.prepared[entry].coordinates())
     }
 
     /// Precompute the query-side statistics shared across all candidate

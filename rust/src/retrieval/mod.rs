@@ -41,6 +41,13 @@
 //!   `tombstone` (O(1)) and threshold-triggered per-shard `compact`,
 //!   with entry ids stable across the whole cycle.
 //!
+//! PR 7 adds the first deliberately *inexact* stage: an opt-in
+//! per-shard ANN router ([`RoutingConfig`] on [`ShardingConfig`]) that
+//! k-means-clusters the cached embedded-barycenter coordinates and
+//! hands the exact cascade + refine only its shortlist to re-rank.
+//! Recall is audited by the same merged-view probes; with routing
+//! disabled (the default) the exact path is preserved bit-for-bit.
+//!
 //! The coordinator exposes the whole pipeline as a service API
 //! (`DistanceService::register_corpus` / `retrieve` / `corpus_insert` /
 //! `corpus_tombstone` / `corpus_compact`) with prune-fraction, recall,
@@ -48,18 +55,21 @@
 
 mod bounds;
 mod index;
+mod routing;
 mod runtime;
 mod search;
 mod shard;
 
 pub use bounds::{BoundCascade, BoundTier, BoundValue};
 pub use index::{CorpusIndex, QueryPrep};
+pub use routing::RoutingConfig;
 pub use runtime::{
     CorpusKey, MetricKey, RegisterSpec, RetrievalRuntime, RuntimeError,
     RuntimeFeedback, SearchOutcome,
 };
 pub use search::{
-    Hit, ProbeOutcome, RetrievalConfig, RetrievalReport, RetrievalService,
+    probe_outcome, Hit, ProbeOutcome, RetrievalConfig, RetrievalReport,
+    RetrievalService,
 };
 pub use shard::{CorpusShard, ShardGauges, ShardedCorpus, ShardingConfig};
 
@@ -132,6 +142,11 @@ pub enum RetrievalError {
     BadEntry { entry: usize, source: HistogramError },
     /// The query histogram does not live on the metric's simplex.
     QueryDimensionMismatch { got: usize, want: usize },
+    /// A worker panicked inside shard `shard`'s cascade/refine. The
+    /// panic is caught at the shard boundary and fails only the request
+    /// that triggered it — the runtime thread owning every registered
+    /// corpus keeps serving.
+    ShardPanicked { shard: usize },
 }
 
 impl std::fmt::Display for RetrievalError {
@@ -150,6 +165,10 @@ impl std::fmt::Display for RetrievalError {
             RetrievalError::QueryDimensionMismatch { got, want } => write!(
                 f,
                 "query histogram has dimension {got}, corpus expects {want}"
+            ),
+            RetrievalError::ShardPanicked { shard } => write!(
+                f,
+                "retrieval shard {shard} panicked serving this request"
             ),
         }
     }

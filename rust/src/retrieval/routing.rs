@@ -1,0 +1,303 @@
+//! ANN routing: k-means candidate generation over embedded-barycenter
+//! coordinates.
+//!
+//! The bound cascade is exact but prices every live entry — O(n·d) per
+//! query, linear per shard. This module adds the first deliberately
+//! *inexact* stage in the stack: a small k-means router over the
+//! `Lᵀr` coordinates each [`super::CorpusIndex`] already caches for the
+//! centroid bound (the embedded barycenter of Cuturi §4's independence
+//! kernel). At query time the router ranks centroids by squared
+//! Euclidean distance to the query's own coordinates and unions the
+//! member lists of the nearest few into a shortlist; the exact cascade
+//! + panel refine then re-rank only that shortlist.
+//!
+//! Contract: the shortlist is approximate (entries outside it are never
+//! priced), the re-rank is exact, and recall is audited end-to-end by
+//! the existing `probe_every` recall probes, which price against the
+//! *merged multi-shard* view. With routing disabled (the default) the
+//! exact path is preserved bit-for-bit.
+//!
+//! Lifecycle: inserts are assigned to their nearest centroid
+//! incrementally (O(centroids·anchors) per insert, no rebuild);
+//! tombstones are honored at shortlist time (dead slots are filtered
+//! and never count toward the shortlist floor); compaction rebuilds the
+//! router from scratch over the surviving entries.
+
+use crate::F;
+
+/// Knobs for the per-shard ANN routing tier. Opt-in via
+/// [`super::ShardingConfig::routing`] (or
+/// [`super::RetrievalService::enable_routing`] on a monolithic
+/// service); `None` keeps the exact every-live-entry walk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoutingConfig {
+    /// Number of k-means centroids per shard (clamped to the entry
+    /// count at build).
+    pub centroids: usize,
+    /// How many nearest centroids seed the shortlist before the floor
+    /// kicks in.
+    pub probes: usize,
+    /// Minimum live candidates in a shortlist: probing keeps expanding
+    /// to further centroids until the union holds at least
+    /// `max(k, min_shortlist)` live entries or every centroid has been
+    /// consumed. Guards recall when clusters are small or heavily
+    /// tombstoned.
+    pub min_shortlist: usize,
+    /// Lloyd iterations at build/rebuild time.
+    pub iterations: usize,
+}
+
+impl Default for RoutingConfig {
+    fn default() -> Self {
+        Self { centroids: 16, probes: 2, min_shortlist: 32, iterations: 8 }
+    }
+}
+
+impl RoutingConfig {
+    /// Basic sanity: every knob must be at least 1.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.centroids == 0 {
+            return Err("routing.centroids must be >= 1".into());
+        }
+        if self.probes == 0 {
+            return Err("routing.probes must be >= 1".into());
+        }
+        if self.iterations == 0 {
+            return Err("routing.iterations must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Squared Euclidean distance between two coordinate vectors.
+fn dist2(a: &[F], b: &[F]) -> F {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// K-means router over per-entry coordinate vectors. Slots are the
+/// service's local entry slots; the caller maps them to global ids and
+/// filters tombstones through the `dead` predicate at shortlist time.
+#[derive(Debug, Clone)]
+pub(crate) struct Router {
+    config: RoutingConfig,
+    /// Coordinate dimensionality (the index's anchor count).
+    dim: usize,
+    /// `k · dim` row-major centroid matrix, `k ≤ config.centroids`.
+    centroids: Vec<F>,
+    /// Slot → centroid assignment (parallel to the index's slots).
+    assign: Vec<usize>,
+    /// Centroid → member slots, in ascending slot order.
+    members: Vec<Vec<usize>>,
+}
+
+impl Router {
+    /// Build a router over `points[slot]` coordinate rows. Returns
+    /// `None` on an empty corpus or zero-dimensional coordinates
+    /// (nothing to route on). Deterministic: evenly spaced seeds, then
+    /// `config.iterations` Lloyd rounds (an emptied cluster keeps its
+    /// previous centroid).
+    pub(crate) fn build(config: RoutingConfig, points: &[Vec<F>]) -> Option<Self> {
+        let n = points.len();
+        if n == 0 {
+            return None;
+        }
+        let dim = points[0].len();
+        if dim == 0 {
+            return None;
+        }
+        let k = config.centroids.min(n).max(1);
+        // Evenly spaced seeds over the slot range — deterministic and,
+        // for cluster-major corpora, already close to one seed per
+        // cluster.
+        let mut centroids = vec![0.0; k * dim];
+        for c in 0..k {
+            let seed = c * n / k;
+            centroids[c * dim..(c + 1) * dim].copy_from_slice(&points[seed]);
+        }
+        let mut assign = vec![0usize; n];
+        for _ in 0..config.iterations {
+            for (slot, p) in points.iter().enumerate() {
+                assign[slot] = nearest(&centroids, dim, p);
+            }
+            let mut sums = vec![0.0; k * dim];
+            let mut counts = vec![0usize; k];
+            for (slot, p) in points.iter().enumerate() {
+                let c = assign[slot];
+                counts[c] += 1;
+                for (s, &x) in sums[c * dim..(c + 1) * dim].iter_mut().zip(p) {
+                    *s += x;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    continue; // emptied cluster keeps its centroid
+                }
+                let inv = 1.0 / counts[c] as F;
+                for (out, &s) in centroids[c * dim..(c + 1) * dim]
+                    .iter_mut()
+                    .zip(&sums[c * dim..(c + 1) * dim])
+                {
+                    *out = s * inv;
+                }
+            }
+        }
+        // Final assignment against the settled centroids.
+        let mut members = vec![Vec::new(); k];
+        for (slot, p) in points.iter().enumerate() {
+            let c = nearest(&centroids, dim, p);
+            assign[slot] = c;
+            members[c].push(slot);
+        }
+        Some(Self { config, dim, centroids, assign, members })
+    }
+
+    /// Assign a freshly inserted slot to its nearest centroid. Slots
+    /// must arrive in order (`slot == self.assign.len()`), matching the
+    /// index's append-only slot allocation.
+    pub(crate) fn insert(&mut self, slot: usize, point: &[F]) {
+        debug_assert_eq!(slot, self.assign.len(), "router slots are append-only");
+        debug_assert_eq!(point.len(), self.dim);
+        let c = nearest(&self.centroids, self.dim, point);
+        self.assign.push(c);
+        self.members[c].push(slot);
+    }
+
+    /// Candidate shortlist for a query at `point`: the union of the
+    /// member lists of the nearest centroids, tombstone-filtered via
+    /// `dead`, expanded one centroid at a time past `config.probes`
+    /// until at least `max(k, config.min_shortlist)` live candidates
+    /// are gathered or every centroid is consumed. Returned in
+    /// ascending slot order — the same order the exact path walks.
+    pub(crate) fn shortlist(
+        &self,
+        point: &[F],
+        k: usize,
+        dead: impl Fn(usize) -> bool,
+    ) -> Vec<usize> {
+        let want = k.max(self.config.min_shortlist);
+        let mut order: Vec<usize> = (0..self.members.len()).collect();
+        order.sort_by(|&a, &b| {
+            let da = dist2(&self.centroids[a * self.dim..(a + 1) * self.dim], point);
+            let db = dist2(&self.centroids[b * self.dim..(b + 1) * self.dim], point);
+            da.total_cmp(&db).then(a.cmp(&b))
+        });
+        let mut out = Vec::new();
+        for (rank, &c) in order.iter().enumerate() {
+            if rank >= self.config.probes && out.len() >= want {
+                break;
+            }
+            out.extend(self.members[c].iter().copied().filter(|&s| !dead(s)));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Number of centroids actually in use (≤ `config.centroids`).
+    #[cfg(test)]
+    pub(crate) fn centroid_count(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Index of the centroid nearest to `p` (ties to the lowest index).
+fn nearest(centroids: &[F], dim: usize, p: &[F]) -> usize {
+    let k = centroids.len() / dim;
+    let mut best = 0;
+    let mut best_d = F::INFINITY;
+    for c in 0..k {
+        let d = dist2(&centroids[c * dim..(c + 1) * dim], p);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two tight 2-D clusters around (0,0) and (10,10).
+    fn two_clusters() -> Vec<Vec<F>> {
+        let mut pts = Vec::new();
+        for i in 0..8 {
+            let eps = i as F * 0.01;
+            pts.push(vec![eps, -eps]);
+        }
+        for i in 0..8 {
+            let eps = i as F * 0.01;
+            pts.push(vec![10.0 + eps, 10.0 - eps]);
+        }
+        pts
+    }
+
+    fn config(centroids: usize, probes: usize, min_shortlist: usize) -> RoutingConfig {
+        RoutingConfig { centroids, probes, min_shortlist, iterations: 8 }
+    }
+
+    #[test]
+    fn build_recovers_separated_clusters() {
+        let pts = two_clusters();
+        let r = Router::build(config(2, 1, 1), &pts).expect("router builds");
+        assert_eq!(r.centroid_count(), 2);
+        // Every point in cluster 0 shares one assignment, cluster 1 the
+        // other, and they differ.
+        let a0 = r.assign[0];
+        assert!(r.assign[..8].iter().all(|&c| c == a0));
+        let a1 = r.assign[8];
+        assert!(r.assign[8..].iter().all(|&c| c == a1));
+        assert_ne!(a0, a1);
+    }
+
+    #[test]
+    fn shortlist_probes_nearest_cluster_and_skips_dead_slots() {
+        let pts = two_clusters();
+        let r = Router::build(config(2, 1, 1), &pts).expect("router builds");
+        let near_origin = r.shortlist(&[0.5, 0.5], 1, |_| false);
+        assert_eq!(near_origin, (0..8).collect::<Vec<_>>());
+        let dead = [0usize, 3];
+        let filtered = r.shortlist(&[0.5, 0.5], 1, |s| dead.contains(&s));
+        assert_eq!(filtered, vec![1, 2, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn shortlist_expands_past_probes_to_meet_the_floor() {
+        let pts = two_clusters();
+        // probes=1 but the floor (12) exceeds one cluster's 8 members:
+        // the second centroid must be consumed too.
+        let r = Router::build(config(2, 1, 12), &pts).expect("router builds");
+        let all = r.shortlist(&[0.0, 0.0], 1, |_| false);
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+        // With the floor satisfied by one cluster, the far cluster is
+        // never touched.
+        let r = Router::build(config(2, 1, 4), &pts).expect("router builds");
+        let near = r.shortlist(&[0.0, 0.0], 1, |_| false);
+        assert_eq!(near, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn insert_assigns_to_the_nearest_centroid_incrementally() {
+        let pts = two_clusters();
+        let mut r = Router::build(config(2, 1, 1), &pts).expect("router builds");
+        let far_cluster = r.assign[8];
+        r.insert(16, &[9.7, 10.2]);
+        assert_eq!(r.assign[16], far_cluster);
+        let near_far = r.shortlist(&[10.0, 10.0], 1, |_| false);
+        assert!(near_far.contains(&16));
+    }
+
+    #[test]
+    fn empty_or_zero_dim_coordinates_disable_routing() {
+        assert!(Router::build(RoutingConfig::default(), &[]).is_none());
+        assert!(Router::build(RoutingConfig::default(), &[vec![], vec![]]).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_zero_knobs() {
+        assert!(RoutingConfig::default().validate().is_ok());
+        assert!(RoutingConfig { centroids: 0, ..Default::default() }.validate().is_err());
+        assert!(RoutingConfig { probes: 0, ..Default::default() }.validate().is_err());
+        assert!(RoutingConfig { iterations: 0, ..Default::default() }.validate().is_err());
+    }
+}

@@ -157,6 +157,15 @@ enum Job {
         respond: Callback<Result<usize, RuntimeError>>,
     },
     DropMetric(MetricKey),
+    /// Test-only: arm the one-shot panic hook on one shard of a corpus
+    /// (the shard's next search panics), exercising the containment
+    /// contract end-to-end on the runtime thread.
+    #[cfg(test)]
+    Poison {
+        corpus: CorpusKey,
+        shard: usize,
+        respond: Callback<bool>,
+    },
 }
 
 /// Handle to the dedicated retrieval thread. All methods are
@@ -266,6 +275,13 @@ impl RetrievalRuntime {
     /// queued behind this job fail with unknown-corpus.
     pub fn drop_metric(&self, metric_key: MetricKey) -> bool {
         self.send(Job::DropMetric(metric_key))
+    }
+
+    /// Test-only: arm the one-shot panic hook on `shard` of `corpus`.
+    /// The callback receives whether the corpus was found.
+    #[cfg(test)]
+    fn poison(&self, corpus: CorpusKey, shard: usize, respond: Callback<bool>) -> bool {
+        self.send(Job::Poison { corpus, shard, respond })
     }
 }
 
@@ -417,6 +433,17 @@ impl RuntimeThread {
                 self.corpora.retain(|_, (mk, _)| *mk != metric_key);
                 self.depth.fetch_sub(1, Ordering::Relaxed);
             }
+            #[cfg(test)]
+            Job::Poison { corpus, shard, respond } => {
+                let armed = match self.corpora.get_mut(&corpus) {
+                    Some((_, sharded)) => {
+                        sharded.poison_shard(shard);
+                        true
+                    }
+                    None => false,
+                };
+                self.finish(respond, armed);
+            }
         }
     }
 }
@@ -567,6 +594,49 @@ mod tests {
             rx.recv().unwrap(),
             Err(RuntimeError::UnknownCorpus(5))
         ));
+    }
+
+    #[test]
+    fn shard_panic_fails_one_request_not_the_runtime() {
+        let (fb_tx, fb_rx) = channel();
+        let runtime = RetrievalRuntime::start(fb_tx);
+        let (spec_a, qa) = spec(1, 4, 3);
+        let (spec_b, qb) = spec(2, 5, 2);
+        let (cb, rx) = ack();
+        runtime.register(spec_a, cb);
+        rx.recv().unwrap().unwrap();
+        let (cb, rx) = ack();
+        runtime.register(spec_b, cb);
+        rx.recv().unwrap().unwrap();
+
+        // Poison one shard of corpus 1: the next search against it must
+        // fail with the shard attributed — not unwind the runtime
+        // thread that owns both tenants.
+        let (cb, rx) = ack();
+        assert!(runtime.poison(1, 1, cb));
+        assert!(rx.recv().unwrap(), "corpus 1 must be found and armed");
+        let (cb, rx) = ack();
+        runtime.search(1, qa.clone(), 4, Instant::now(), cb);
+        assert!(matches!(
+            rx.recv().unwrap(),
+            Err(RuntimeError::Index(RetrievalError::ShardPanicked { shard: 1 }))
+        ));
+
+        // The other tenant never noticed…
+        let (cb, rx) = ack();
+        runtime.search(2, qb, 3, Instant::now(), cb);
+        assert_eq!(rx.recv().unwrap().unwrap().hits.len(), 3);
+        // …and the poisoned corpus itself recovers on its next request.
+        let (cb, rx) = ack();
+        runtime.search(1, qa, 4, Instant::now(), cb);
+        assert_eq!(rx.recv().unwrap().unwrap().hits.len(), 4);
+        assert_eq!(runtime.queue_depth(), 0, "all jobs drained");
+        // The failed search was flagged in the feedback stream.
+        let mut failures = 0;
+        while let Ok(fb) = fb_rx.try_recv() {
+            failures += usize::from(fb.failed);
+        }
+        assert_eq!(failures, 1);
     }
 
     #[test]

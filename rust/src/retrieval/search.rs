@@ -20,7 +20,8 @@
 //! deposited into the index's per-entry warm cache to seed future
 //! queries.
 
-use super::{BoundCascade, BoundTier, CorpusIndex, RetrievalError};
+use super::routing::Router;
+use super::{BoundCascade, BoundTier, CorpusIndex, RetrievalError, RoutingConfig};
 use crate::backend::{BackendKind, ShardedExecutor};
 use crate::simplex::Histogram;
 use crate::sinkhorn::{ScalingInit, SinkhornConfig, SinkhornOutput, SolveBudget};
@@ -159,6 +160,14 @@ pub struct RetrievalReport {
     pub pruned_projection: usize,
     /// Final pruning threshold τ (the k-th best served distance).
     pub threshold: F,
+    /// Whether the ANN router produced this query's candidate set (the
+    /// exact every-live-entry walk was skipped).
+    pub routed: bool,
+    /// Candidates admitted to the priced shortlist. Equals `corpus`
+    /// when routing is off; with routing on,
+    /// `solved + pruned == shortlist` and `corpus - shortlist` entries
+    /// were never priced at all.
+    pub shortlist: usize,
     /// Recall-probe outcome, when one ran.
     pub probe: Option<ProbeOutcome>,
 }
@@ -183,6 +192,8 @@ impl RetrievalReport {
             pruned_centroid: 0,
             pruned_projection: 0,
             threshold: F::INFINITY,
+            routed: false,
+            shortlist: 0,
             probe: None,
         }
     }
@@ -193,6 +204,15 @@ impl RetrievalReport {
             return 0.0;
         }
         self.pruned as f64 / self.corpus as f64
+    }
+
+    /// Fraction of the live corpus admitted to the priced shortlist
+    /// (1.0 on an unrouted or empty search).
+    pub fn shortlist_fraction(&self) -> f64 {
+        if self.corpus == 0 || !self.routed {
+            return 1.0;
+        }
+        self.shortlist as f64 / self.corpus as f64
     }
 }
 
@@ -246,6 +266,15 @@ pub struct RetrievalService {
     tombstones: Vec<bool>,
     /// Live (non-tombstoned) slot count.
     live: usize,
+    /// Requested ANN routing knobs (`None` = exact path, the default).
+    routing: Option<RoutingConfig>,
+    /// The built k-means router; `None` whenever routing is disabled
+    /// *or* the metric does not factor (no centroid coordinate space).
+    router: Option<Router>,
+    /// One-shot test hook: the next [`Self::top_k`] panics instead of
+    /// searching, exercising the sharded runtime's panic containment.
+    #[cfg(any(test, debug_assertions))]
+    poison_next_search: bool,
 }
 
 impl RetrievalService {
@@ -291,7 +320,51 @@ impl RetrievalService {
             local_of,
             tombstones: vec![false; n],
             live: n,
+            routing: None,
+            router: None,
+            #[cfg(any(test, debug_assertions))]
+            poison_next_search: false,
         }
+    }
+
+    /// Enable the ANN routing tier: build a k-means router over the
+    /// index's cached embedded-barycenter coordinates. Returns whether
+    /// a router actually came up — `false` when the metric does not
+    /// factor (no coordinate space), in which case searches keep the
+    /// exact every-live-entry walk. Tombstoned slots are indexed but
+    /// filtered at shortlist time; [`Self::compact`] rebuilds routing
+    /// over the survivors.
+    pub fn enable_routing(&mut self, config: RoutingConfig) -> bool {
+        self.routing = Some(config);
+        self.rebuild_router();
+        self.router.is_some()
+    }
+
+    /// Whether an ANN router is active on this service.
+    pub fn routing_active(&self) -> bool {
+        self.router.is_some()
+    }
+
+    /// (Re)build the router from the current index slots, honoring the
+    /// stored routing config. No-op when routing was never enabled.
+    fn rebuild_router(&mut self) {
+        let Some(cfg) = self.routing else {
+            self.router = None;
+            return;
+        };
+        let points: Option<Vec<Vec<F>>> = (0..self.index.len())
+            .map(|e| self.index.entry_coordinates(e).map(|c| c.to_vec()))
+            .collect();
+        self.router = points.and_then(|pts| Router::build(cfg, &pts));
+    }
+
+    /// Arm the one-shot panic hook: the next search on this service
+    /// panics mid-flight. Test-only plumbing for the sharded runtime's
+    /// panic-containment contract.
+    #[cfg(any(test, debug_assertions))]
+    #[doc(hidden)]
+    pub fn poison_next_search(&mut self) {
+        self.poison_next_search = true;
     }
 
     /// The indexed corpus.
@@ -341,6 +414,13 @@ impl RetrievalService {
         self.local_of.insert(entry, local);
         self.tombstones.push(false);
         self.live += 1;
+        // Incremental routing: the new slot joins its nearest centroid
+        // (no rebuild — O(centroids·anchors)).
+        if let Some(router) = self.router.as_mut() {
+            if let Some(coords) = self.index.entry_coordinates(local) {
+                router.insert(local, coords);
+            }
+        }
         Ok(())
     }
 
@@ -387,6 +467,9 @@ impl RetrievalService {
         self.tombstones = vec![false; globals.len()];
         self.live = globals.len();
         self.globals = globals;
+        // Routing state is slot-addressed: rebuild it over the
+        // renumbered survivors.
+        self.rebuild_router();
         true
     }
 
@@ -424,20 +507,36 @@ impl RetrievalService {
             });
         }
         self.queries += 1;
-        // Candidates are the live slots; tombstoned ones are invisible.
-        let live: Vec<usize> =
-            (0..self.index.len()).filter(|&e| !self.tombstones[e]).collect();
-        let n = live.len();
-        let k = k.min(n);
-        let mut report = RetrievalReport::empty(n, k);
+        #[cfg(any(test, debug_assertions))]
+        if self.poison_next_search {
+            self.poison_next_search = false;
+            panic!("poisoned search (test hook)");
+        }
+        let k = k.min(self.live);
+        let mut report = RetrievalReport::empty(self.live, k);
         if k == 0 {
             return Ok((Vec::new(), report));
         }
 
+        let prep = self.index.prepare(query);
+        // Candidates are the live slots — or, with the ANN router
+        // active, its tombstone-filtered shortlist. The exact walk is
+        // byte-identical to the pre-routing path when no router is set.
+        let live: Vec<usize> = match (&self.router, prep.coordinates()) {
+            (Some(router), Some(coords)) => {
+                report.routed = true;
+                router.shortlist(coords, k, |s| self.tombstones[s])
+            }
+            _ => (0..self.index.len()).filter(|&e| !self.tombstones[e]).collect(),
+        };
+        let n = live.len();
+        report.shortlist = n;
+        let k = k.min(n);
+        report.k = k;
+
         // Price every candidate and walk in ascending bound order
         // (positions index into `live`; ties break by stable id so the
         // walk is identical under any slot renumbering).
-        let prep = self.index.prepare(query);
         let bounds: Vec<super::BoundValue> = live
             .iter()
             .map(|&e| self.cascade.evaluate(&self.index, &prep, query, e))
@@ -707,8 +806,9 @@ impl RetrievalService {
 /// k-th/(k+1)-th tie flipping between the two walks is not flagged as a
 /// recall miss, while a genuinely wrong entry (whose distance merely
 /// resembles some shared neighbor's) still is. Shared by the standalone
-/// service and the sharded runtime's merged-view probes.
-pub(crate) fn probe_outcome(hits: &[Hit], brute: &[Hit], slack: F) -> ProbeOutcome {
+/// service, the sharded runtime's merged-view probes, and the routing
+/// bench's recall hard-assert.
+pub fn probe_outcome(hits: &[Hit], brute: &[Hit], slack: F) -> ProbeOutcome {
     let brute_set: std::collections::HashSet<usize> =
         brute.iter().map(|h| h.entry).collect();
     let hit_set: std::collections::HashSet<usize> =
@@ -1027,5 +1127,93 @@ mod tests {
                 h.distance
             );
         }
+    }
+
+    /// A clustered service with an active ANN router.
+    fn routed_service(seed: u64) -> (RetrievalService, Vec<Histogram>) {
+        use crate::data::ClusteredCorpus;
+        let mut rng = seeded_rng(seed);
+        let m = RandomMetric::new(12).sample(&mut rng);
+        let spec = ClusteredCorpus::new(12, 4, 16, 0.1);
+        let (entries, protos) = spec.generate(&mut rng);
+        let index = CorpusIndex::from_histograms(&m, entries, 4).unwrap();
+        let mut config = RetrievalConfig::serving(9.0);
+        config.workers = 2;
+        let mut svc = RetrievalService::new(index, config);
+        let enabled = svc.enable_routing(RoutingConfig {
+            centroids: 8,
+            probes: 2,
+            min_shortlist: 16,
+            iterations: 8,
+        });
+        assert!(enabled, "a factoring random metric must yield a coordinate space");
+        (svc, protos)
+    }
+
+    #[test]
+    fn routing_shortlists_sublinearly_with_high_recall() {
+        let (mut svc, protos) = routed_service(60);
+        assert!(svc.routing_active());
+        let q = protos[0].clone();
+        let brute = svc.brute_force(&q, 5).unwrap();
+        let (hits, report) = svc.top_k(&q, 5).unwrap();
+        assert!(report.routed, "router must own candidate generation");
+        assert_eq!(report.corpus, 64);
+        assert!(
+            report.shortlist < report.corpus,
+            "shortlist {} must be sublinear in the corpus",
+            report.shortlist
+        );
+        assert_eq!(
+            report.solved + report.pruned,
+            report.shortlist,
+            "every shortlisted candidate is priced exactly once: {report:?}"
+        );
+        assert!(report.shortlist_fraction() < 1.0);
+        let probe = probe_outcome(&hits, &brute, svc.config().bound_slack);
+        assert!(
+            probe.matched + 1 >= probe.k,
+            "routed recall collapsed: {} of {}",
+            probe.matched,
+            probe.k
+        );
+    }
+
+    #[test]
+    fn routing_rides_the_mutation_lifecycle() {
+        let (mut svc, protos) = routed_service(61);
+        let q = protos[1].clone();
+        // An inserted duplicate of the query routes to the query's own
+        // nearest centroid, so it is shortlisted immediately.
+        svc.insert(q.clone(), 64).unwrap();
+        let (hits, report) = svc.top_k(&q, 3).unwrap();
+        assert!(report.routed);
+        assert!(
+            hits.iter().any(|h| h.entry == 64),
+            "inserted duplicate must be routed into the shortlist: {hits:?}"
+        );
+        // Tombstones are honored at shortlist time.
+        assert!(svc.tombstone(64));
+        let (hits, _) = svc.top_k(&q, 3).unwrap();
+        assert!(hits.iter().all(|h| h.entry != 64));
+        // Compaction rebuilds the router over the renumbered survivors.
+        assert!(svc.tombstone(0));
+        assert!(svc.compact());
+        assert!(svc.routing_active(), "compaction must rebuild the router");
+        let (hits, report) = svc.top_k(&q, 3).unwrap();
+        assert!(report.routed);
+        assert_eq!(report.corpus, 63);
+        assert!(hits.iter().all(|h| h.entry != 0 && h.entry != 64));
+    }
+
+    #[test]
+    fn disabled_routing_reports_full_shortlist() {
+        let mut svc = service(10, 20, 9, 9.0);
+        let mut rng = seeded_rng(110);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (_, report) = svc.top_k(&q, 4).unwrap();
+        assert!(!report.routed);
+        assert_eq!(report.shortlist, report.corpus);
+        assert_eq!(report.shortlist_fraction(), 1.0);
     }
 }

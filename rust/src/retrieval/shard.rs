@@ -33,7 +33,7 @@
 use super::search::probe_outcome;
 use super::{
     CorpusIndex, Hit, RetrievalConfig, RetrievalError, RetrievalReport,
-    RetrievalService,
+    RetrievalService, RoutingConfig,
 };
 use crate::backend::shard_ranges;
 use crate::metric::CostMatrix;
@@ -57,11 +57,17 @@ pub struct ShardingConfig {
     /// Tombstone fraction at which a shard compacts itself
     /// automatically after a tombstone lands.
     pub compact_threshold: f64,
+    /// Opt-in per-shard ANN routing (see [`super::RoutingConfig`]):
+    /// each shard clusters its cached embedded-barycenter coordinates
+    /// and prices only the router's shortlist, with the exact cascade +
+    /// refine demoted to re-ranking. `None` (the default) keeps the
+    /// exact every-live-entry walk bit-for-bit.
+    pub routing: Option<RoutingConfig>,
 }
 
 impl Default for ShardingConfig {
     fn default() -> Self {
-        Self { shards: 1, threads: 0, compact_threshold: 0.25 }
+        Self { shards: 1, threads: 0, compact_threshold: 0.25, routing: None }
     }
 }
 
@@ -99,10 +105,23 @@ pub struct CorpusShard {
 }
 
 impl CorpusShard {
-    fn new(id: usize, index: CorpusIndex, config: RetrievalConfig, base: usize) -> Self {
+    fn new(
+        id: usize,
+        index: CorpusIndex,
+        config: RetrievalConfig,
+        base: usize,
+        routing: Option<RoutingConfig>,
+    ) -> Self {
+        let mut service = RetrievalService::with_base(index, config, base);
+        if let Some(r) = routing {
+            // A non-factoring metric leaves the router unbuilt and this
+            // shard on the exact path — routing is an accelerator, never
+            // a prerequisite.
+            service.enable_routing(r);
+        }
         Self {
             id,
-            service: RetrievalService::with_base(index, config, base),
+            service,
             compactions: 0,
             inserts: 0,
             searches: 0,
@@ -277,7 +296,13 @@ impl ShardedCorpus {
             let chunk: Vec<Histogram> = iter.by_ref().take(range.len()).collect();
             let index = CorpusIndex::from_histograms(metric, chunk, anchors)
                 .map_err(|e| offset_entry_error(e, range.start))?;
-            built.push(CorpusShard::new(sid, index, shard_config, range.start));
+            built.push(CorpusShard::new(
+                sid,
+                index,
+                shard_config,
+                range.start,
+                sharding.routing,
+            ));
         }
         let bound_slack = built[0].service.config().bound_slack;
         Ok(Self {
@@ -397,16 +422,18 @@ impl ShardedCorpus {
     }
 
     /// Append one histogram; returns its fresh corpus-global entry id.
-    /// Routed to the emptiest shard (ties to the lowest shard index):
-    /// per-entry statistics are shard-local, so the insert touches
-    /// exactly that shard, and least-loaded routing keeps the partition
-    /// balanced as the corpus grows.
+    /// Routed to the shard with the fewest *occupied slots* — live plus
+    /// tombstoned, ties to the lowest shard index. Counting tombstoned
+    /// slots matters: a heavily tombstoned shard still pays for those
+    /// slots at its next compaction, and routing by live count alone
+    /// would funnel every insert into exactly the shard about to
+    /// rebuild (and leave the partition skewed once it does).
     pub fn insert(&mut self, h: Histogram) -> Result<usize, RetrievalError> {
         let sid = self
             .shards
             .iter()
             .enumerate()
-            .min_by_key(|(i, s)| (s.live(), *i))
+            .min_by_key(|(i, s)| (s.len(), *i))
             .map(|(i, _)| i)
             .expect("a sharded corpus always has at least one shard");
         let entry = self.next_entry;
@@ -462,7 +489,12 @@ impl ShardedCorpus {
     {
         let conc = self.threads.min(self.shards.len()).max(1);
         if conc <= 1 || self.shards.len() <= 1 {
-            return self.shards.iter_mut().map(f).collect();
+            return self
+                .shards
+                .iter_mut()
+                .enumerate()
+                .map(|(sid, shard)| contained(sid, shard, f))
+                .collect();
         }
         // Exactly `conc` contiguous near-equal shard groups (the same
         // `shard_ranges` split the partition itself uses — a ceil-sized
@@ -478,13 +510,29 @@ impl ShardedCorpus {
                 for range in &ranges {
                     let (group, tail) = rest.split_at_mut(range.len());
                     rest = tail;
+                    let start = range.start;
                     handles.push(scope.spawn(move || {
-                        group.iter_mut().map(f).collect::<Result<Vec<T>, _>>()
+                        group
+                            .iter_mut()
+                            .enumerate()
+                            .map(|(off, shard)| contained(start + off, shard, f))
+                            .collect::<Result<Vec<T>, _>>()
                     }));
                 }
+                // Every per-shard panic is already caught inside the
+                // worker; a join error means the worker glue itself
+                // died, so it degrades to the same per-request error
+                // (attributed to the group's first shard) instead of
+                // unwinding into — and killing — the runtime thread
+                // that owns every registered corpus.
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("shard worker panicked"))
+                    .zip(&ranges)
+                    .map(|(h, range)| {
+                        h.join().unwrap_or(Err(RetrievalError::ShardPanicked {
+                            shard: range.start,
+                        }))
+                    })
                     .collect()
             });
         let mut out = Vec::with_capacity(self.shards.len());
@@ -493,6 +541,33 @@ impl ShardedCorpus {
         }
         Ok(out)
     }
+
+    /// Arm the one-shot panic hook on shard `shard`: its next search
+    /// panics mid-flight. Test-only plumbing for the panic-containment
+    /// contract.
+    #[cfg(any(test, debug_assertions))]
+    #[doc(hidden)]
+    pub fn poison_shard(&mut self, shard: usize) {
+        self.shards[shard].service.poison_next_search();
+    }
+}
+
+/// Run `f` on one shard with the panic boundary every shard op crosses:
+/// a panicking cascade/refine is caught here and converted into a
+/// per-request [`RetrievalError::ShardPanicked`], so one poisoned query
+/// fails alone instead of unwinding into whatever thread drives the
+/// corpus — in production that is the dedicated `sinkhorn-retrieval`
+/// runtime thread owning *every* registered corpus.
+fn contained<T, F2>(
+    sid: usize,
+    shard: &mut CorpusShard,
+    f: &F2,
+) -> Result<T, RetrievalError>
+where
+    F2: Fn(&mut CorpusShard) -> Result<T, RetrievalError>,
+{
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(shard)))
+        .unwrap_or(Err(RetrievalError::ShardPanicked { shard: sid }))
 }
 
 /// Ascending `(distance, entry)` — the canonical result order shared
@@ -529,6 +604,8 @@ fn merge_results(
         merged.pruned_projection += r.pruned_projection;
         merged.pruned_interval += r.pruned_interval;
         merged.refined += r.refined;
+        merged.routed |= r.routed;
+        merged.shortlist += r.shortlist;
     }
     sort_canonical(&mut hits);
     let k = k.min(corpus);
@@ -748,5 +825,76 @@ mod tests {
         if let Err(v) = super::super::topk_equivalent(&hits, &brute, 1e-7) {
             panic!("post-mutation merge diverged: {v}");
         }
+    }
+
+    #[test]
+    fn inserts_spread_by_occupied_slots_not_live_count() {
+        // Regression: routing inserts by live count funneled every
+        // insert into a heavily tombstoned shard sitting just under the
+        // compact threshold — it absorbed the whole write load and then
+        // compacted while hottest. Occupied slots (live + tombstoned)
+        // must drive the routing instead.
+        let (m, entries) = corpus(8, 12, 9);
+        let sharding = ShardingConfig {
+            shards: 3,
+            compact_threshold: 0.9, // keep tombstones resident
+            ..Default::default()
+        };
+        let mut sc =
+            ShardedCorpus::new(&m, entries, 2, config(9.0), sharding).unwrap();
+        // Shard 0 owns ids 0..4; tombstone three of them. Live is now
+        // [1, 4, 4] but every shard still occupies 4 slots.
+        for id in 0..3 {
+            assert!(sc.tombstone(id));
+        }
+        let mut rng = seeded_rng(109);
+        for _ in 0..6 {
+            sc.insert(Histogram::sample_uniform(8, &mut rng)).unwrap();
+        }
+        let gauges = sc.gauges();
+        assert_eq!(
+            gauges.iter().map(|g| g.inserts).collect::<Vec<_>>(),
+            vec![2, 2, 2],
+            "tombstoned slots must count toward the routing load: {gauges:?}"
+        );
+        // After the deferred compaction the partition reflects the even
+        // insert spread — no shard hoarded the write load.
+        sc.compact();
+        assert_eq!(
+            sc.gauges().iter().map(|g| g.entries).collect::<Vec<_>>(),
+            vec![3, 6, 6]
+        );
+    }
+
+    #[test]
+    fn shard_panic_is_contained_to_the_request() {
+        // Scoped-worker path (threads = 2 over 3 shards).
+        let (mut sc, _m, _entries) = sharded(10, 18, 10, 3);
+        let mut rng = seeded_rng(110);
+        let q = Histogram::sample_uniform(10, &mut rng);
+        let (want, _) = sc.search(&q, 4).unwrap();
+        sc.poison_shard(1);
+        assert_eq!(
+            sc.search(&q, 4).unwrap_err(),
+            RetrievalError::ShardPanicked { shard: 1 },
+            "the poisoned request must fail with the shard attributed"
+        );
+        // The corpus keeps serving — and serving correctly — afterward.
+        let (got, _) = sc.search(&q, 4).unwrap();
+        if let Err(v) = super::super::topk_equivalent(&got, &want, 1e-7) {
+            panic!("post-panic search diverged: {v}");
+        }
+
+        // Serial path (threads = 1) crosses the same boundary.
+        let (m, entries) = corpus(10, 12, 11);
+        let sharding = ShardingConfig { shards: 2, threads: 1, ..Default::default() };
+        let mut serial =
+            ShardedCorpus::new(&m, entries, 4, config(9.0), sharding).unwrap();
+        serial.poison_shard(0);
+        assert_eq!(
+            serial.search(&q, 3).unwrap_err(),
+            RetrievalError::ShardPanicked { shard: 0 }
+        );
+        assert!(serial.search(&q, 3).is_ok());
     }
 }

@@ -490,6 +490,56 @@ mod tests {
     }
 
     #[test]
+    fn deadline_budget_terminates_on_a_zero_iteration_slice() {
+        use crate::backend::{GreenkhornBackend, SolverBackend};
+        use crate::metric::RandomMetric;
+        use crate::simplex::{seeded_rng, Histogram};
+        use crate::sinkhorn::SinkhornConfig;
+
+        let mut rng = seeded_rng(17);
+        let d = 10;
+        let m = RandomMetric::new(d).sample(&mut rng);
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let backend = GreenkhornBackend::new(
+            &m,
+            SinkhornConfig {
+                lambda: 6.0,
+                tolerance: 1e-10,
+                max_iterations: 200_000,
+                ..Default::default()
+            },
+        );
+        // Converge once, then re-solve warm-seeded at the already-exact
+        // marginals: every deadline slice now runs zero greedy updates.
+        // Without the zero-iteration-slice break in `drive_budgeted`
+        // this would spin until the far-future deadline — the budget
+        // never expires and the slices never progress.
+        let cold = backend.solve(&r, &c, &ScalingInit::Cold);
+        assert!(cold.stats.converged, "cold solve must converge");
+        let warm = ScalingInit::from_output(&cold);
+        let budget = SolveBudget::deadline_in(Duration::from_secs(3600));
+        let outcome = backend.solve_outcome(&r, &c, &warm, budget);
+        assert!(outcome.converged, "warm re-solve at exact marginals");
+        assert_eq!(outcome.iterations, 0, "the slice ran no greedy updates");
+        assert!(
+            outcome.interval.lo <= outcome.interval.hi,
+            "interval inverted: [{}, {}]",
+            outcome.interval.lo,
+            outcome.interval.hi
+        );
+        assert!(outcome.interval.hi.is_finite());
+        assert!(
+            outcome.interval.lo <= outcome.estimate + 1e-9
+                && outcome.estimate <= outcome.interval.hi + 1e-9,
+            "estimate {} outside certified [{}, {}]",
+            outcome.estimate,
+            outcome.interval.lo,
+            outcome.interval.hi
+        );
+    }
+
+    #[test]
     fn certify_survives_degenerate_states() {
         let m = vec![0.0, 1.0, 1.0, 0.0];
         let r = [0.5, 0.5];

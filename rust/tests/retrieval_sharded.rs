@@ -229,6 +229,100 @@ fn sharded_topk_matches_brute_force_across_backends() {
     }
 }
 
+/// PR 7: the opt-in ANN router over the merged sharded view. The exact
+/// routing-disabled search is the oracle; the routed search must engage
+/// the router, shortlist sublinearly, recall the oracle's top-k
+/// (tie-aware, one-entry slack on this small clustered corpus), and
+/// ride the insert/tombstone/compact lifecycle with routing still
+/// active afterwards.
+#[test]
+fn routed_sharded_search_recalls_the_exact_oracle() {
+    use sinkhorn_rs::retrieval::{probe_outcome, RoutingConfig};
+
+    let d = 16;
+    let per = release_else(24, 8); // 8 clusters
+    let mut rng = seeded_rng(9100);
+    let m = RandomMetric::new(d).sample(&mut rng);
+    let gen = ClusteredCorpus::new(d, 8, per, 0.1);
+    let (corpus, protos) = gen.generate(&mut rng);
+    let n = corpus.len();
+    let q = gen.mixture_at(&protos[0], 0.1, &mut rng);
+    let config = refine_config(9.0, KernelPolicy::Dense, None);
+
+    // The exact oracle: default (routing-disabled) sharding.
+    let mut exact =
+        ShardedCorpus::new(&m, corpus.clone(), 4, config, sharding(2)).unwrap();
+    let (oracle, exact_report) = exact.search(&q, K).unwrap();
+    assert!(!exact_report.routed, "default sharding must stay exact");
+    assert_eq!(
+        exact_report.shortlist, n,
+        "disabled routing prices every live entry"
+    );
+
+    let routing = RoutingConfig {
+        centroids: 16,
+        probes: 4,
+        min_shortlist: 2 * K,
+        iterations: 8,
+    };
+    let mut sc = ShardedCorpus::new(
+        &m,
+        corpus.clone(),
+        4,
+        config,
+        ShardingConfig { routing: Some(routing), ..sharding(2) },
+    )
+    .unwrap();
+    let (hits, report) = sc.search(&q, K).unwrap();
+    assert!(report.routed, "router must engage on an embeddable metric");
+    assert!(
+        report.shortlist < n,
+        "shortlist must be sublinear: {} vs corpus {n}",
+        report.shortlist
+    );
+    assert_eq!(
+        report.solved + report.pruned,
+        report.shortlist,
+        "with routing on, the cascade prices exactly the shortlist"
+    );
+    let probe = probe_outcome(&hits, &oracle, DIST_TOL);
+    assert!(
+        probe.matched + 1 >= K,
+        "routed recall too low: {}/{K} vs exact oracle",
+        probe.matched
+    );
+
+    // Mutation lifecycle under routing: an inserted duplicate of the
+    // query is assigned to its nearest centroid incrementally and must
+    // surface; tombstoning hides it at shortlist time; compaction
+    // rebuilds the router from the surviving entries.
+    let dup = sc.insert(q.clone()).unwrap();
+    assert_eq!(dup, n, "fresh corpus-global id");
+    let (post_hits, post_report) = sc.search(&q, K).unwrap();
+    assert!(post_report.routed);
+    assert!(
+        post_hits.iter().any(|h| h.entry == dup),
+        "inserted duplicate of the query missing from the routed top-k"
+    );
+    assert!(sc.tombstone(dup), "inserted duplicate must be live");
+    let (hidden_hits, _) = sc.search(&q, K).unwrap();
+    assert!(
+        hidden_hits.iter().all(|h| h.entry != dup),
+        "tombstoned entry resurfaced through the router"
+    );
+    sc.compact();
+    let (final_hits, final_report) = sc.search(&q, K).unwrap();
+    assert!(final_report.routed, "compaction must rebuild the router");
+    assert_eq!(final_report.corpus, n);
+    let final_oracle = sc.brute_force(&q, K).unwrap();
+    let probe = probe_outcome(&final_hits, &final_oracle, DIST_TOL);
+    assert!(
+        probe.matched + 1 >= K,
+        "post-compaction routed recall too low: {}/{K}",
+        probe.matched
+    );
+}
+
 /// The off-engine-thread contract: a large corpus search (with a
 /// brute-force recall probe riding on it) runs concurrently with
 /// deadline-batched distance queries, and the distance flush latency
