@@ -235,29 +235,39 @@ fn main() {
         out.hits[0].entry, out.report.corpus
     );
 
-    // Per-shard retrieval gauges from the stats snapshot.
+    // Per-corpus (PR 8) and per-shard retrieval gauges from the stats
+    // snapshot.
     let stats = service.stats().unwrap();
     println!(
         "\nretrieval runtime: {} off-thread searches (walltime mean {} µs, \
-         max {} µs), queue depth {}",
+         max {} µs), queue depth {}, head-of-line wait {} µs, fairness {:.2}",
         stats.retrieval_offthread,
         stats.retrieval_search_mean_us,
         stats.retrieval_search_max_us,
         stats.retrieval_queue_depth,
+        stats.retrieval_hol_blocked_us,
+        stats.retrieval_fairness(),
     );
-    for g in &stats.retrieval_shards {
+    for c in &stats.retrieval_shards {
         println!(
-            "  shard {}: {} live / {} slots (tombstone fraction {:.2}), \
-             {} insert(s), {} compaction(s), {} searches, last search {} µs",
-            g.shard,
-            g.live,
-            g.entries,
-            g.tombstone_fraction,
-            g.inserts,
-            g.compactions,
-            g.searches,
-            g.last_search_us,
+            "  corpus {}: queue depth {}, {} searches, {} µs waited in its \
+             mailbox",
+            c.corpus, c.queue_depth, c.searches, c.hol_blocked_us,
         );
+        for g in &c.shards {
+            println!(
+                "    shard {}: {} live / {} slots (tombstone fraction {:.2}), \
+                 {} insert(s), {} compaction(s), {} searches, last search {} µs",
+                g.shard,
+                g.live,
+                g.entries,
+                g.tombstone_fraction,
+                g.inserts,
+                g.compactions,
+                g.searches,
+                g.last_search_us,
+            );
+        }
     }
     service.shutdown();
 }

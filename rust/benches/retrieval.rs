@@ -7,7 +7,12 @@
 //! the PR 7 ANN-routing panel (writes `BENCH_PR7.json`): a 100k-entry
 //! clustered corpus where the k-means router's shortlist is
 //! hard-asserted to reach probed recall ≥ 0.95 at a shortlist fraction
-//! under 0.1 against the exact routing-disabled oracle.
+//! under 0.1 against the exact routing-disabled oracle; plus the PR 8
+//! cross-tenant isolation panel (writes `BENCH_PR8.json`): corpus B's
+//! worst blocking search latency while corpus A undergoes a forced
+//! full compaction, measured on the mailbox-per-corpus dispatcher (2
+//! dispatchers) vs the serialized single-dispatcher baseline, with the
+//! concurrent p99 hard-asserted under 25% of the serialized one.
 //!
 //! Workload: a clustered synthetic corpus (8 Dirichlet(0.3) prototypes,
 //! 32 mixture entries each, d = 64 median-normalized random metric) and
@@ -158,6 +163,7 @@ fn main() {
 
     sharded_panel(&m, &corpus, &query);
     routing_panel();
+    tenant_isolation_panel();
 }
 
 /// PR 5 panel: the dense λ = 9 serving row over {1, 2, 3, 7} shards.
@@ -377,5 +383,199 @@ fn routing_panel() {
     match std::fs::write("BENCH_PR7.json", &rendered) {
         Ok(()) => println!("  -> recorded BENCH_PR7.json"),
         Err(e) => eprintln!("  -> could not write BENCH_PR7.json: {e}"),
+    }
+}
+
+/// PR 8 panel: cross-tenant head-of-line blocking under a forced
+/// compaction (writes `BENCH_PR8.json`). Two tenants share one
+/// `RetrievalRuntime`: corpus A is large (24k entries, d = 64, one
+/// shard, auto-compaction disabled) with ~20% of its entries
+/// tombstoned, corpus B is tiny (24 entries, d = 8) so its searches
+/// return in well under a millisecond. Each run submits A's full-shard
+/// compaction, sleeps until it is *in flight* (not merely queued — lane
+/// priority would trivially fix the queued case), then measures B's
+/// blocking search latencies. Hard assert: with 2 dispatchers
+/// (mailbox-per-corpus isolation) B's worst latency stays under 25% of
+/// the single-dispatcher serialized baseline's, where every B search
+/// waits out A's compaction.
+fn tenant_isolation_panel() {
+    use sinkhorn_rs::retrieval::{RegisterSpec, RetrievalRuntime};
+    use sinkhorn_rs::simplex::Histogram;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    const AD: usize = 64;
+    const AN: usize = 24_000;
+    const BD: usize = 8;
+    const BN: usize = 24;
+    const BK: usize = 2;
+    const BQ: usize = 5;
+
+    let mut rng = seeded_rng(8080);
+    let ma = RandomMetric::new(AD).sample(&mut rng);
+    let corpus_a: Vec<Histogram> =
+        (0..AN).map(|_| Histogram::sample_uniform(AD, &mut rng)).collect();
+    let mb = RandomMetric::new(BD).sample(&mut rng);
+    let corpus_b: Vec<Histogram> =
+        (0..BN).map(|_| Histogram::sample_uniform(BD, &mut rng)).collect();
+    let qb = Histogram::sample_uniform(BD, &mut rng);
+
+    // One run: register both tenants, tombstone ~20% of A, force A's
+    // compaction, measure B's blocking search latencies (µs, queue wait
+    // included) while it runs. Returns (latencies, compaction wall µs).
+    let run = |dispatchers: usize| -> (Vec<u64>, u64) {
+        let (fb_tx, _fb_rx) = channel();
+        let rt = RetrievalRuntime::with_dispatchers(fb_tx, dispatchers);
+
+        let mut config_a = RetrievalConfig::serving(9.0);
+        config_a.warm_start = false;
+        let (tx, rx) = channel();
+        rt.register(
+            RegisterSpec {
+                corpus: 0,
+                metric_key: 0,
+                metric: ma.clone(),
+                entries: corpus_a.clone(),
+                anchors: 4,
+                config: config_a,
+                sharding: ShardingConfig {
+                    shards: 1,
+                    threads: 1,
+                    // Tombstones must pile up without triggering the
+                    // threshold: the panel times one explicit, full
+                    // compaction.
+                    compact_threshold: 2.0,
+                    routing: None,
+                },
+            },
+            Box::new(move |v| drop(tx.send(v))),
+        );
+        assert_eq!(rx.recv().unwrap().expect("corpus A registers"), AN);
+
+        let mut config_b = RetrievalConfig::serving(9.0);
+        config_b.warm_start = false;
+        config_b.workers = 1;
+        let (tx, rx) = channel();
+        rt.register(
+            RegisterSpec {
+                corpus: 1,
+                metric_key: 1,
+                metric: mb.clone(),
+                entries: corpus_b.clone(),
+                anchors: 4,
+                config: config_b,
+                sharding: ShardingConfig { shards: 1, threads: 1, ..Default::default() },
+            },
+            Box::new(move |v| drop(tx.send(v))),
+        );
+        assert_eq!(rx.recv().unwrap().expect("corpus B registers"), BN);
+
+        let search_b = || -> u64 {
+            let (tx, rx) = channel();
+            rt.search(
+                1,
+                qb.clone(),
+                BK,
+                Instant::now(),
+                Box::new(move |v| drop(tx.send(v))),
+            );
+            rx.recv().unwrap().expect("corpus B search").latency_us
+        };
+        // Warm B once so executor spin-up stays outside the window.
+        search_b();
+
+        // Tombstone every 5th entry of A, acks drained before the
+        // compaction is submitted (its mailbox must be empty so the
+        // compaction is the in-flight job, not the tail of a queue).
+        let (tx, rx) = channel();
+        for e in 0..AN / 5 {
+            let tx = tx.clone();
+            rt.tombstone(0, e * 5, Box::new(move |v| drop(tx.send(v))));
+        }
+        drop(tx);
+        let mut hit = 0usize;
+        while let Ok(res) = rx.recv() {
+            hit += usize::from(res.expect("tombstone"));
+        }
+        assert_eq!(hit, AN / 5);
+
+        let (tx, rx) = channel();
+        let compact_t0 = Instant::now();
+        rt.compact(0, Box::new(move |v| drop(tx.send(v))));
+        // Let the compaction get dequeued and *running* before B's
+        // searches fire; with one dispatcher they now measure true
+        // head-of-line blocking behind an in-flight bulk job.
+        std::thread::sleep(Duration::from_millis(20));
+        let lats: Vec<u64> = (0..BQ).map(|_| search_b()).collect();
+        let rebuilt = rx.recv().unwrap().expect("compact");
+        let compact_wall_us = compact_t0.elapsed().as_micros() as u64;
+        assert!(rebuilt >= 1, "forced compaction must rebuild the shard");
+        (lats, compact_wall_us)
+    };
+
+    let (ser_lats, ser_compact_us) = run(1);
+    let (iso_lats, iso_compact_us) = run(2);
+    let p99_ser = *ser_lats.iter().max().expect("serialized latencies");
+    let p99_iso = *iso_lats.iter().max().expect("concurrent latencies");
+    let ratio = p99_iso as f64 / p99_ser.max(1) as f64;
+    println!(
+        "retrieval_tenant_isolation  A={AN}x{AD}d (compact {:.0} ms \
+         serialized, {:.0} ms concurrent), B={BN}x{BD}d k={BK}: B p99 \
+         {p99_ser} µs serialized vs {p99_iso} µs concurrent ({ratio:.4}x)",
+        ser_compact_us as f64 / 1e3,
+        iso_compact_us as f64 / 1e3,
+    );
+    // --- the PR 8 acceptance contract, hard-asserted ---
+    assert!(
+        ratio < 0.25,
+        "tenant isolation regressed: corpus B p99 {p99_iso} µs under \
+         concurrent compaction must stay below 25% of the serialized \
+         baseline's {p99_ser} µs"
+    );
+
+    let mut doc = BTreeMap::new();
+    let mut set = |k: &str, v: Json| {
+        doc.insert(k.to_string(), v);
+    };
+    set("bench", Json::String("retrieval_tenant_isolation".into()));
+    set("status", Json::String("measured".into()));
+    set("a_corpus", Json::Number(AN as f64));
+    set("a_d", Json::Number(AD as f64));
+    set("a_tombstoned", Json::Number((AN / 5) as f64));
+    set("b_corpus", Json::Number(BN as f64));
+    set("b_d", Json::Number(BD as f64));
+    set("b_k", Json::Number(BK as f64));
+    set("b_searches", Json::Number(BQ as f64));
+    set("serialized_compact_wall_us", Json::Number(ser_compact_us as f64));
+    set("concurrent_compact_wall_us", Json::Number(iso_compact_us as f64));
+    set(
+        "serialized_latencies_us",
+        Json::Array(ser_lats.iter().map(|&l| Json::Number(l as f64)).collect()),
+    );
+    set(
+        "concurrent_latencies_us",
+        Json::Array(iso_lats.iter().map(|&l| Json::Number(l as f64)).collect()),
+    );
+    set("serialized_p99_us", Json::Number(p99_ser as f64));
+    set("concurrent_p99_us", Json::Number(p99_iso as f64));
+    set("p99_ratio", Json::Number(ratio));
+    set(
+        "note",
+        Json::String(
+            "written by `cargo bench --bench retrieval`; serialized = \
+             RetrievalRuntime::with_dispatchers(.., 1) (the PR 5 one-loop \
+             behavior), concurrent = with_dispatchers(.., 2) \
+             (mailbox-per-corpus + priority lanes); latencies are corpus \
+             B's blocking search round trips fired 20 ms after corpus A's \
+             forced full-shard compaction was submitted; p99 = max over \
+             the 5 searches; p99_ratio < 0.25 is hard-asserted"
+                .into(),
+        ),
+    );
+    drop(set);
+    let rendered = format!("{}\n", Json::Object(doc));
+    match std::fs::write("BENCH_PR8.json", &rendered) {
+        Ok(()) => println!("  -> recorded BENCH_PR8.json"),
+        Err(e) => eprintln!("  -> could not write BENCH_PR8.json: {e}"),
     }
 }

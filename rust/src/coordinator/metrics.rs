@@ -1,9 +1,11 @@
 //! Service observability: counters and latency aggregates.
 
 use crate::linalg::KernelStats;
-use crate::retrieval::{RetrievalReport, RuntimeFeedback, ShardGauges};
+use crate::retrieval::{CorpusKey, RetrievalReport, RuntimeFeedback, ShardGauges};
 use crate::sinkhorn::SolveOutcome;
+use crate::util::saturating_micros;
 use crate::F;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Running statistics collected by the service thread.
@@ -63,9 +65,17 @@ pub struct Stats {
     /// Jobs queued or running on the retrieval runtime (sampled by the
     /// engine right before each snapshot).
     pub retrieval_queue_depth: u64,
-    /// Per-shard gauges from the most recent runtime feedback push
-    /// (the most recently touched corpus).
-    retrieval_shards: Vec<ShardGauges>,
+    /// Σ µs searches spent waiting in their corpus mailbox before
+    /// dispatch — the head-of-line blocking measure (PR 8). With
+    /// per-corpus mailboxes this wait comes from a tenant's own queued
+    /// jobs plus dispatcher contention, never from another tenant's
+    /// serialized bulk work.
+    pub retrieval_hol_blocked_us: u64,
+    /// Per-tenant retrieval gauges, keyed by corpus. Every registered
+    /// corpus keeps its row (PR 8 fixed the clobbering where each
+    /// feedback push overwrote the whole table); invalidation feedback
+    /// purges a dropped corpus's row instead of serving it forever.
+    retrieval_corpora: BTreeMap<CorpusKey, CorpusGauges>,
     /// Candidates discarded because their whole certified interval
     /// cleared the top-k threshold (budgeted retrieval only).
     pub retrieval_pruned_interval: u64,
@@ -82,6 +92,27 @@ pub struct Stats {
     width_buckets: [u64; 32],
     /// Widest certified interval observed.
     width_max: F,
+}
+
+/// Per-tenant retrieval gauges: one row per registered corpus, keyed
+/// by [`CorpusKey`] in [`StatsSnapshot::retrieval_shards`]. Rows appear
+/// on registration, update on every feedback push from that corpus's
+/// mailbox, and vanish when the corpus is invalidated.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct CorpusGauges {
+    /// The corpus this row describes.
+    pub corpus: CorpusKey,
+    /// Jobs queued on this corpus's mailbox (sampled by the engine
+    /// right before each snapshot; excludes the job being executed).
+    pub queue_depth: u64,
+    /// Off-thread searches completed for this corpus.
+    pub searches: u64,
+    /// Σ µs this corpus's searches waited in its mailbox before
+    /// dispatch (the per-tenant slice of
+    /// [`StatsSnapshot::retrieval_hol_blocked_us`]).
+    pub hol_blocked_us: u64,
+    /// Per-shard gauges from the corpus's latest feedback push.
+    pub shards: Vec<ShardGauges>,
 }
 
 /// Throughput/occupancy counters for one executor worker.
@@ -115,7 +146,7 @@ impl Stats {
         let slot = &mut self.workers[worker];
         slot.panels += 1;
         slot.queries += queries as u64;
-        slot.busy_us += busy.as_micros().min(u64::MAX as u128) as u64;
+        slot.busy_us += saturating_micros(busy);
         slot.warm_hits += warm_hits as u64;
         slot.warm_misses += warm_misses as u64;
     }
@@ -142,12 +173,17 @@ impl Stats {
 
     /// Fold one runtime feedback push into the gauges: completed-search
     /// reports accumulate like inline retrievals used to, failed jobs
-    /// count as errors, and the per-shard gauge table tracks the most
-    /// recently touched corpus.
+    /// count as errors, and the per-tenant gauge table upserts the
+    /// pushing corpus's row (never another tenant's — PR 8 fixed the
+    /// clobbering where `retrieval_shards = gauges.clone()` let every
+    /// push overwrite the whole table). Invalidation pushes purge the
+    /// corpus's row.
     pub fn record_runtime(&mut self, feedback: &RuntimeFeedback) {
         if feedback.failed {
             self.errors += 1;
         }
+        self.retrieval_hol_blocked_us =
+            self.retrieval_hol_blocked_us.saturating_add(feedback.queued_us);
         if let Some(report) = &feedback.report {
             self.record_retrieval(report);
             self.retrieval_offthread += 1;
@@ -155,8 +191,32 @@ impl Stats {
             self.retrieval_search_us_max =
                 self.retrieval_search_us_max.max(feedback.search_us);
         }
+        if feedback.invalidated {
+            self.retrieval_corpora.remove(&feedback.corpus);
+            return;
+        }
         if !feedback.gauges.is_empty() {
-            self.retrieval_shards = feedback.gauges.clone();
+            let row = self.retrieval_corpora.entry(feedback.corpus).or_default();
+            row.corpus = feedback.corpus;
+            row.shards = feedback.gauges.clone();
+            row.hol_blocked_us = row.hol_blocked_us.saturating_add(feedback.queued_us);
+            if feedback.report.is_some() {
+                row.searches += 1;
+            }
+        }
+    }
+
+    /// Refresh the sampled per-corpus mailbox backlogs (from
+    /// [`crate::retrieval::RetrievalRuntime::corpus_depths`]); corpora
+    /// absent from `depths` read zero.
+    pub fn set_corpus_queue_depths(&mut self, depths: &[(CorpusKey, u64)]) {
+        for row in self.retrieval_corpora.values_mut() {
+            row.queue_depth = 0;
+        }
+        for &(corpus, depth) in depths {
+            if let Some(row) = self.retrieval_corpora.get_mut(&corpus) {
+                row.queue_depth = depth;
+            }
         }
     }
 
@@ -211,7 +271,7 @@ impl Stats {
 
     pub fn record_query_latency(&mut self, latency: Duration) {
         self.queries += 1;
-        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        let us = saturating_micros(latency);
         self.lat_sum_us += us as u128;
         self.lat_max_us = self.lat_max_us.max(us);
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
@@ -262,7 +322,8 @@ impl Stats {
             },
             retrieval_search_max_us: self.retrieval_search_us_max,
             retrieval_queue_depth: self.retrieval_queue_depth,
-            retrieval_shards: self.retrieval_shards.clone(),
+            retrieval_hol_blocked_us: self.retrieval_hol_blocked_us,
+            retrieval_shards: self.retrieval_corpora.values().cloned().collect(),
             retrieval_pruned_interval: self.retrieval_pruned_interval,
             retrieval_refined: self.retrieval_refined,
             deadline_misses: self.deadline_misses,
@@ -382,10 +443,16 @@ pub struct StatsSnapshot {
     pub retrieval_search_max_us: u64,
     /// Retrieval jobs queued or running when the snapshot was taken.
     pub retrieval_queue_depth: u64,
-    /// Per-shard gauges of the most recently touched corpus (entries,
-    /// live count, tombstone fraction, compactions, inserts, searches,
-    /// last per-shard search walltime).
-    pub retrieval_shards: Vec<ShardGauges>,
+    /// Σ µs searches waited in their corpus mailbox before dispatch —
+    /// the head-of-line blocking counter (PR 8).
+    pub retrieval_hol_blocked_us: u64,
+    /// Per-tenant retrieval gauges, one row per registered corpus in
+    /// ascending corpus-key order: sampled mailbox backlog, served
+    /// searches, per-tenant head-of-line wait, and the per-shard gauges
+    /// (entries, live count, tombstone fraction, compactions, inserts,
+    /// searches, last per-shard search walltime) from the corpus's
+    /// latest feedback push. Rows vanish when a corpus is invalidated.
+    pub retrieval_shards: Vec<CorpusGauges>,
     /// Candidates discarded because their whole certified interval
     /// cleared the top-k threshold (budgeted retrieval only).
     pub retrieval_pruned_interval: u64,
@@ -441,6 +508,28 @@ impl StatsSnapshot {
             return 1.0;
         }
         self.recall_matched as f64 / self.recall_expected as f64
+    }
+
+    /// Cross-tenant serving fairness: min/max completed off-thread
+    /// search counts over corpora that served at least one search
+    /// (1.0 = perfectly even — or fewer than two active tenants, where
+    /// fairness is vacuous). A value near 0 means one tenant's
+    /// searches are being starved relative to another's.
+    pub fn retrieval_fairness(&self) -> f64 {
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        let mut active = 0usize;
+        for row in &self.retrieval_shards {
+            if row.searches > 0 {
+                active += 1;
+                min = min.min(row.searches);
+                max = max.max(row.searches);
+            }
+        }
+        if active < 2 {
+            return 1.0;
+        }
+        min as f64 / max as f64
     }
 
     /// Warm-start hit rate in [0, 1]; 0.0 before any lookup happened.
@@ -564,30 +653,44 @@ impl std::fmt::Display for StatsSnapshot {
         if self.retrieval_offthread > 0 {
             write!(
                 f,
-                " rsearch(offthread={}, queue={}, us(mean={}, max={}))",
+                " rsearch(offthread={}, queue={}, hol_us={}, us(mean={}, max={}))",
                 self.retrieval_offthread,
                 self.retrieval_queue_depth,
+                self.retrieval_hol_blocked_us,
                 self.retrieval_search_mean_us,
                 self.retrieval_search_max_us
             )?;
         }
         if !self.retrieval_shards.is_empty() {
-            write!(f, " shards=[")?;
-            for (i, g) in self.retrieval_shards.iter().enumerate() {
+            // One block per tenant: every registered corpus renders,
+            // not just the most recently touched one.
+            write!(f, " corpora={{")?;
+            for (i, c) in self.retrieval_shards.iter().enumerate() {
                 if i > 0 {
                     write!(f, ", ")?;
                 }
                 write!(
                     f,
-                    "{}:live={}/{} ts={:.2} comp={}",
-                    g.shard,
-                    g.live,
-                    g.entries,
-                    g.tombstone_fraction,
-                    g.compactions
+                    "c{}(q={} s={} hol_us={})[",
+                    c.corpus, c.queue_depth, c.searches, c.hol_blocked_us
                 )?;
+                for (j, g) in c.shards.iter().enumerate() {
+                    if j > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(
+                        f,
+                        "{}:live={}/{} ts={:.2} comp={}",
+                        g.shard,
+                        g.live,
+                        g.entries,
+                        g.tombstone_fraction,
+                        g.compactions
+                    )?;
+                }
+                write!(f, "]")?;
             }
-            write!(f, "]")?;
+            write!(f, "}} fairness={:.2}", self.retrieval_fairness())?;
         }
         Ok(())
     }
@@ -909,38 +1012,108 @@ mod tests {
             corpus: 0,
             report: Some(report),
             search_us: 900,
+            queued_us: 40,
             failed: false,
+            invalidated: false,
             gauges: vec![gauge(0, 50), gauge(1, 49)],
         });
         s.record_runtime(&RuntimeFeedback {
             corpus: 0,
             report: Some(report),
             search_us: 100,
+            queued_us: 10,
             failed: false,
+            invalidated: false,
             gauges: vec![gauge(0, 50), gauge(1, 48)],
         });
-        // A failed mutation push: error counted, gauge table kept.
+        // A second tenant pushes its own gauges: both rows must stay
+        // visible in one snapshot (PR 8 regression — the table used to
+        // be clobbered by whichever corpus pushed last).
+        s.record_runtime(&RuntimeFeedback {
+            corpus: 3,
+            report: Some(report),
+            search_us: 300,
+            queued_us: 0,
+            failed: false,
+            invalidated: false,
+            gauges: vec![gauge(0, 9)],
+        });
+        // A failed push without gauges: error counted, table untouched.
         s.record_runtime(&RuntimeFeedback {
             corpus: 1,
             report: None,
             search_us: 0,
+            queued_us: 0,
             failed: true,
+            invalidated: false,
             gauges: Vec::new(),
         });
         s.retrieval_queue_depth = 3;
+        s.set_corpus_queue_depths(&[(0, 2), (3, 1)]);
         let snap = s.snapshot();
-        assert_eq!(snap.retrievals, 2, "search feedback folds into retrieval gauges");
-        assert_eq!(snap.recall_probes, 2);
+        assert_eq!(snap.retrievals, 3, "search feedback folds into retrieval gauges");
+        assert_eq!(snap.recall_probes, 3);
         assert_eq!(snap.errors, 1);
-        assert_eq!(snap.retrieval_offthread, 2);
-        assert_eq!(snap.retrieval_search_mean_us, 500);
+        assert_eq!(snap.retrieval_offthread, 3);
         assert_eq!(snap.retrieval_search_max_us, 900);
         assert_eq!(snap.retrieval_queue_depth, 3);
-        assert_eq!(snap.retrieval_shards.len(), 2, "latest gauge table wins");
-        assert_eq!(snap.retrieval_shards[1].live, 48);
+        assert_eq!(snap.retrieval_hol_blocked_us, 50);
+        assert_eq!(snap.retrieval_shards.len(), 2, "both tenants visible, keyed");
+        let c0 = &snap.retrieval_shards[0];
+        assert_eq!((c0.corpus, c0.searches, c0.hol_blocked_us, c0.queue_depth), (0, 2, 50, 2));
+        assert_eq!(c0.shards.len(), 2, "latest push per tenant wins");
+        assert_eq!(c0.shards[1].live, 48);
+        let c3 = &snap.retrieval_shards[1];
+        assert_eq!((c3.corpus, c3.searches, c3.queue_depth), (3, 1, 1));
+        assert!((snap.retrieval_fairness() - 0.5).abs() < 1e-12, "2 vs 1 searches");
         let line = snap.to_string();
-        assert!(line.contains("rsearch(offthread=2, queue=3"));
-        assert!(line.contains("shards=[0:live=50/51"));
+        assert!(line.contains("rsearch(offthread=3, queue=3, hol_us=50"));
+        assert!(line.contains("corpora={c0(q=2 s=2 hol_us=50)[0:live=50/51"));
+        assert!(line.contains("c3(q=1 s=1 hol_us=0)[0:live=9/10"));
+        assert!(line.contains("fairness=0.50"));
+    }
+
+    #[test]
+    fn invalidation_feedback_purges_a_tenants_gauge_rows() {
+        use crate::retrieval::{RuntimeFeedback, ShardGauges};
+        let mut s = Stats::default();
+        let push = |corpus: CorpusKey| RuntimeFeedback {
+            corpus,
+            report: None,
+            search_us: 0,
+            queued_us: 0,
+            failed: false,
+            invalidated: false,
+            gauges: vec![ShardGauges {
+                shard: 0,
+                entries: 4,
+                live: 4,
+                tombstone_fraction: 0.0,
+                compactions: 0,
+                inserts: 0,
+                searches: 0,
+                last_search_us: 0,
+            }],
+        };
+        s.record_runtime(&push(2));
+        s.record_runtime(&push(5));
+        assert_eq!(s.snapshot().retrieval_shards.len(), 2);
+        // The invalidation tombstone removes exactly that tenant's row
+        // (PR 8 regression: DropMetric used to push nothing, and the
+        // dropped corpus's last stats were served forever).
+        s.record_runtime(&RuntimeFeedback {
+            corpus: 2,
+            report: None,
+            search_us: 0,
+            queued_us: 0,
+            failed: false,
+            invalidated: true,
+            gauges: Vec::new(),
+        });
+        let snap = s.snapshot();
+        assert_eq!(snap.retrieval_shards.len(), 1);
+        assert_eq!(snap.retrieval_shards[0].corpus, 5);
+        assert_eq!(snap.errors, 0, "a clean invalidation is not an error");
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //!   CPU panel executors ([`crate::backend::ShardedExecutor`]: one
 //!   K/Kᵀ-bound solver instance per worker thread), the mpsc plumbing
 //!   and graceful shutdown; retrieval work (index builds, cascade
-//!   walks, recall probes, mutations) is handed off to the dedicated
-//!   [`crate::retrieval::RetrievalRuntime`] thread so a corpus search
-//!   never stalls a distance-query deadline flush;
+//!   walks, recall probes, mutations) is handed off to the
+//!   [`crate::retrieval::RetrievalRuntime`] mailbox-per-corpus
+//!   dispatcher so a corpus search never stalls a distance-query
+//!   deadline flush — and one tenant's compaction never stalls
+//!   another tenant's searches;
 //! * [`metrics`] — counters/latency snapshots, including per-worker
 //!   executor occupancy, per-shard retrieval gauges and off-thread
 //!   search latency.
@@ -31,7 +33,7 @@ pub mod metrics;
 mod service;
 
 pub use batcher::{BatcherConfig, PendingBatcher, ShapeClass};
-pub use metrics::{StatsSnapshot, WorkerSnapshot};
+pub use metrics::{CorpusGauges, StatsSnapshot, WorkerSnapshot};
 pub use service::{DistanceService, ServiceError};
 
 use crate::simplex::Histogram;
@@ -270,6 +272,16 @@ pub struct CoordinatorConfig {
     /// silently stays off for corpora whose ground metric does not
     /// embed (no centroid coordinates to cluster).
     pub retrieval_routing: Option<crate::retrieval::RoutingConfig>,
+    /// Dispatcher threads executing retrieval mailboxes (PR 8). Each
+    /// registered corpus owns a FIFO mailbox run by at most one
+    /// dispatcher at a time — jobs within a corpus stay strictly
+    /// serialized — while searches ride a fast lane that overtakes
+    /// other tenants' queued registrations/compactions. `0` (the
+    /// default) sizes to available parallelism clamped to `[2, 4]`;
+    /// `1` reproduces the PR 5 fully serialized runtime (plus lane
+    /// priority among queued jobs). Counts beyond the number of
+    /// concurrently active corpora buy nothing.
+    pub retrieval_dispatchers: usize,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -318,6 +330,7 @@ impl Default for CoordinatorConfig {
             shed_iterations: None,
             retrieval_budget: SolveBudget::Unbounded,
             retrieval_routing: None,
+            retrieval_dispatchers: 0,
         }
     }
 }
@@ -499,6 +512,12 @@ impl CoordinatorConfigBuilder {
         self
     }
 
+    /// See [`CoordinatorConfig::retrieval_dispatchers`].
+    pub fn retrieval_dispatchers(mut self, dispatchers: usize) -> Self {
+        self.config.retrieval_dispatchers = dispatchers;
+        self
+    }
+
     /// See [`CoordinatorConfig::shed_iterations`].
     pub fn shed_iterations(mut self, iterations: usize) -> Self {
         self.config.shed_iterations = Some(iterations);
@@ -550,6 +569,7 @@ mod tests {
             .retrieval_probe_every(3)
             .retrieval_shards(2)
             .retrieval_threads(1)
+            .retrieval_dispatchers(2)
             .shed_iterations(16)
             .retrieval_budget(SolveBudget::Iterations(64))
             .retrieval_routing(crate::retrieval::RoutingConfig::default())
@@ -563,6 +583,7 @@ mod tests {
         assert_eq!(config.retrieval_probe_every, 3);
         assert_eq!(config.retrieval_shards, 2);
         assert_eq!(config.retrieval_threads, 1);
+        assert_eq!(config.retrieval_dispatchers, 2);
         assert_eq!(config.shed_iterations, Some(16));
         assert_eq!(config.retrieval_budget, SolveBudget::Iterations(64));
         assert_eq!(

@@ -220,14 +220,18 @@ impl DistanceService {
     ///
     /// Latency contract (non-blocking since PR 5): the engine thread
     /// only validates the metric and λ and hands the build off to the
-    /// dedicated [`crate::retrieval::RetrievalRuntime`] thread — *this
+    /// [`crate::retrieval::RetrievalRuntime`] dispatcher — *this
     /// caller* blocks until the index is built, but distance queries
     /// and their batcher deadline flushes are unaffected, during both
     /// registration and every subsequent [`Self::retrieve`] search or
-    /// recall probe. Retrieval jobs execute in submission order on the
-    /// runtime thread (shards of one search run concurrently), so a
-    /// search never observes a half-applied [`Self::corpus_insert`] /
-    /// [`Self::corpus_tombstone`] / [`Self::corpus_compact`].
+    /// recall probe. Ordering is **per corpus** (PR 8): each corpus
+    /// owns a FIFO mailbox, so its jobs execute in submission order
+    /// (shards of one search run concurrently) and a search never
+    /// observes a half-applied [`Self::corpus_insert`] /
+    /// [`Self::corpus_tombstone`] / [`Self::corpus_compact`] — while
+    /// jobs of *different* corpora run concurrently on the dispatcher
+    /// pool, so this registration never delays another tenant's
+    /// searches.
     ///
     /// Invalidation: re-registering the corpus's *metric* drops the
     /// corpus (its precomputed statistics would silently describe the
@@ -407,11 +411,12 @@ struct EngineThread {
     /// One sharded panel executor per (metric, λ) shape class; each holds
     /// `config.cpu_workers` private K/Kᵀ-bound backend instances.
     executors: HashMap<(MetricId, u64), ShardedExecutor>,
-    /// The dedicated retrieval thread (spawned lazily on the first
+    /// The retrieval dispatcher pool (spawned lazily on the first
     /// corpus registration). The engine keeps only validation + promise
     /// plumbing: corpus state, index builds, cascade walks and recall
-    /// probes all live on the runtime thread, so a long search can
-    /// never stall a batcher deadline flush.
+    /// probes all live in per-corpus mailbox actors, so a long search
+    /// can never stall a batcher deadline flush — and one tenant's
+    /// bulk work never stalls another's searches (PR 8).
     retrieval: Option<RetrievalRuntime>,
     /// Sender template handed to the runtime at spawn.
     feedback_tx: Sender<RuntimeFeedback>,
@@ -448,8 +453,10 @@ impl EngineThread {
     /// The retrieval runtime, spawning it on first use.
     fn retrieval_runtime(&mut self) -> &RetrievalRuntime {
         if self.retrieval.is_none() {
-            self.retrieval =
-                Some(RetrievalRuntime::start(self.feedback_tx.clone()));
+            self.retrieval = Some(RetrievalRuntime::with_dispatchers(
+                self.feedback_tx.clone(),
+                self.config.retrieval_dispatchers,
+            ));
         }
         self.retrieval.as_ref().expect("runtime just ensured")
     }
@@ -489,9 +496,9 @@ impl EngineThread {
                     self.register_corpus(id, metric, lambda, entries, ack);
                 }
                 Ok(Message::Retrieve { query, enqueued, respond }) => {
-                    // No runtime thread yet means no corpus was ever
+                    // No dispatcher pool yet means no corpus was ever
                     // registered: answer here instead of spawning the
-                    // dedicated thread just to fail the lookup.
+                    // pool just to fail the lookup.
                     if self.retrieval.is_none() {
                         self.stats.errors += 1;
                         let _ = respond
@@ -566,6 +573,12 @@ impl EngineThread {
                         .as_ref()
                         .map(|rt| rt.queue_depth() as u64)
                         .unwrap_or(0);
+                    let corpus_depths = self
+                        .retrieval
+                        .as_ref()
+                        .map(|rt| rt.corpus_depths())
+                        .unwrap_or_default();
+                    self.stats.set_corpus_queue_depths(&corpus_depths);
                     let _ = tx.send(self.stats.snapshot());
                 }
                 Ok(Message::Warmup(tx)) => {
@@ -898,7 +911,7 @@ impl EngineThread {
                 outcome,
                 engine,
                 batch_size,
-                latency_us: latency.as_micros().min(u64::MAX as u128) as u64,
+                latency_us: crate::util::saturating_micros(latency),
             }));
         }
     }

@@ -1,0 +1,537 @@
+//! Mailbox-per-key dispatch: the scheduling layer under the retrieval
+//! runtime (PR 8).
+//!
+//! The PR 5 runtime funnelled every registered corpus through one
+//! `sinkhorn-retrieval` thread. That made mutations trivially race-free
+//! — and made a compaction of corpus A stall every search of corpus B
+//! for its full duration: cross-tenant head-of-line blocking. This
+//! module keeps the part of that design that matters (strict FIFO *per
+//! corpus*) and discards the part that doesn't (strict FIFO *across*
+//! corpora).
+//!
+//! Mechanics, after the mailbox-per-actor model in fraktor-rs's
+//! dispatcher (SNIPPETS.md Snippet 2):
+//!
+//! - Every key (corpus) owns a [`Mailbox`]: a FIFO queue of jobs plus
+//!   the per-key actor state `S`. A mailbox is executed by **at most
+//!   one** dispatcher thread at a time (`active` flag), so jobs within
+//!   one corpus stay strictly serialized and never observe
+//!   half-applied mutations — the PR 5 ordering contract, verbatim.
+//! - A fixed pool of dispatcher threads (`sinkhorn-retrieval-{i}`)
+//!   pulls *runnable mailboxes* (not jobs) from two shared run queues:
+//!   a **fast lane** and a **bulk lane**, chosen by the lane of the job
+//!   at the head of the mailbox's queue. Fast-lane mailboxes are
+//!   always drained first, so a search of corpus B overtakes a queued
+//!   compaction/registration of corpus A — but never reorders against
+//!   anything in B's own mailbox.
+//! - After running **one** job the worker re-evaluates the mailbox: if
+//!   more jobs are queued it goes back to the lane matching its new
+//!   head (tail-chaining would let one hot corpus starve the pool);
+//!   otherwise it parks until the next submit.
+//! - A panicking job is contained: the worker catches the unwind,
+//!   drops the key's state (the corpus degrades to unregistered — no
+//!   half-mutated index can be observed), reports through the panic
+//!   hook, and keeps serving. The mailbox itself is never poisoned.
+//!
+//! Shutdown is drain-first: dropping the pool lets every queued job
+//! run (promises made to callers are kept) before the workers exit.
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Mailbox key. The retrieval runtime uses the corpus id.
+pub(crate) type Key = u32;
+
+/// Which run queue a mailbox joins while its head job waits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Lane {
+    /// Latency-sensitive (searches): drained before any bulk work.
+    Fast,
+    /// Throughput work (registration, mutation, compaction).
+    Bulk,
+}
+
+/// A job that knows its scheduling lane.
+pub(crate) trait MailboxJob: Send + 'static {
+    fn lane(&self) -> Lane;
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// The dispatcher contains job panics itself (dropping the actor
+/// state), so data behind a poisoned lock is still consistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+struct MailboxInner<J, S> {
+    queue: VecDeque<J>,
+    /// Actor state; `None` until the first state-creating job runs (or
+    /// after invalidation / panic containment).
+    state: Option<S>,
+    /// True while the mailbox sits in a run queue **or** is being
+    /// executed — at most one of the two, never both.
+    active: bool,
+}
+
+/// One key's FIFO queue plus its actor state.
+pub(crate) struct Mailbox<J, S> {
+    key: Key,
+    inner: Mutex<MailboxInner<J, S>>,
+}
+
+struct RunQueues<J, S> {
+    fast: VecDeque<Arc<Mailbox<J, S>>>,
+    bulk: VecDeque<Arc<Mailbox<J, S>>>,
+}
+
+type Runner<J, S> = Arc<dyn Fn(Key, &mut Option<S>, J) + Send + Sync>;
+type PanicHook = Arc<dyn Fn(Key) + Send + Sync>;
+
+struct Shared<J, S> {
+    ready: Mutex<RunQueues<J, S>>,
+    available: Condvar,
+    /// Every mailbox ever created. Tombstoned (state-less, empty)
+    /// mailboxes stay registered — they are a few hundred bytes and
+    /// keeping them makes submit/invalidate races impossible.
+    registry: Mutex<HashMap<Key, Arc<Mailbox<J, S>>>>,
+    shutdown: AtomicBool,
+    /// Jobs accepted but not yet responded to, shared with the caller
+    /// for queue-depth gauges. Incremented on enqueue; the runner is
+    /// responsible for decrementing exactly once per job (the panic
+    /// hook covers the unwound case).
+    depth: Arc<AtomicUsize>,
+    runner: Runner<J, S>,
+    panicked: PanicHook,
+}
+
+/// Fixed pool of dispatcher threads executing mailboxes. Dropping the
+/// pool drains every queued job, then joins the workers.
+pub(crate) struct DispatcherPool<J: MailboxJob, S: Send + 'static> {
+    shared: Arc<Shared<J, S>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<J: MailboxJob, S: Send + 'static> DispatcherPool<J, S> {
+    /// Spawn `workers` dispatcher threads (clamped to ≥ 1). `runner`
+    /// executes one job against its key's state; `panicked` is called
+    /// with the key after a contained job panic (the state has already
+    /// been dropped) and must settle the job's promise/accounting.
+    pub(crate) fn new(
+        workers: usize,
+        depth: Arc<AtomicUsize>,
+        runner: Runner<J, S>,
+        panicked: PanicHook,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            ready: Mutex::new(RunQueues { fast: VecDeque::new(), bulk: VecDeque::new() }),
+            available: Condvar::new(),
+            registry: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            depth,
+            runner,
+            panicked,
+        });
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sinkhorn-retrieval-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn retrieval dispatcher")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Enqueue `job` on `key`'s mailbox, creating the mailbox first
+    /// when `create` is set. Without `create`, a key that has never
+    /// been registered gets the job handed back (`Err`) so the caller
+    /// can fail its promise inline — a key that *exists* but has no
+    /// state accepts the job and lets the runner answer in FIFO order
+    /// behind whatever registration or invalidation is queued ahead.
+    pub(crate) fn submit(&self, key: Key, job: J, create: bool) -> Result<(), J> {
+        let mailbox = {
+            let mut registry = lock(&self.shared.registry);
+            match registry.get(&key) {
+                Some(mb) => Arc::clone(mb),
+                None if create => {
+                    let mb = Arc::new(Mailbox {
+                        key,
+                        inner: Mutex::new(MailboxInner {
+                            queue: VecDeque::new(),
+                            state: None,
+                            active: false,
+                        }),
+                    });
+                    registry.insert(key, Arc::clone(&mb));
+                    mb
+                }
+                None => return Err(job),
+            }
+        };
+        self.enqueue(&mailbox, job);
+        Ok(())
+    }
+
+    /// Enqueue one job per existing mailbox (`make(key)`), in FIFO
+    /// position behind whatever each mailbox already holds. Used for
+    /// metric invalidation, where the per-corpus ordering contract
+    /// requires queued-behind searches to fail *after* the drop, not
+    /// before. Returns the number of mailboxes reached.
+    pub(crate) fn broadcast(&self, make: impl Fn(Key) -> J) -> usize {
+        let mailboxes: Vec<Arc<Mailbox<J, S>>> =
+            lock(&self.shared.registry).values().map(Arc::clone).collect();
+        for mb in &mailboxes {
+            self.enqueue(mb, make(mb.key));
+        }
+        mailboxes.len()
+    }
+
+    /// Per-key queue depth and whether the key currently holds actor
+    /// state, sorted by key. Depth counts queued jobs only (not the
+    /// one being executed).
+    pub(crate) fn depths(&self) -> Vec<(Key, usize, bool)> {
+        let mailboxes: Vec<Arc<Mailbox<J, S>>> =
+            lock(&self.shared.registry).values().map(Arc::clone).collect();
+        let mut out: Vec<(Key, usize, bool)> = mailboxes
+            .iter()
+            .map(|mb| {
+                let inner = lock(&mb.inner);
+                (mb.key, inner.queue.len(), inner.state.is_some())
+            })
+            .collect();
+        out.sort_unstable_by_key(|&(k, _, _)| k);
+        out
+    }
+
+    fn enqueue(&self, mailbox: &Arc<Mailbox<J, S>>, job: J) {
+        self.shared.depth.fetch_add(1, Ordering::Relaxed);
+        let schedule = {
+            let mut inner = lock(&mailbox.inner);
+            inner.queue.push_back(job);
+            if inner.active {
+                // Already in a lane or being executed; the owning
+                // worker re-evaluates the queue when it finishes.
+                None
+            } else {
+                inner.active = true;
+                Some(inner.queue[0].lane())
+            }
+        };
+        if let Some(lane) = schedule {
+            push_ready(&self.shared, Arc::clone(mailbox), lane);
+        }
+    }
+}
+
+fn push_ready<J: MailboxJob, S>(shared: &Shared<J, S>, mailbox: Arc<Mailbox<J, S>>, lane: Lane) {
+    {
+        let mut ready = lock(&shared.ready);
+        match lane {
+            Lane::Fast => ready.fast.push_back(mailbox),
+            Lane::Bulk => ready.bulk.push_back(mailbox),
+        }
+    }
+    shared.available.notify_one();
+}
+
+fn worker_loop<J: MailboxJob, S>(shared: &Shared<J, S>) {
+    loop {
+        let mailbox = {
+            let mut ready = lock(&shared.ready);
+            loop {
+                if let Some(mb) = ready.fast.pop_front().or_else(|| ready.bulk.pop_front()) {
+                    break mb;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    // Both lanes are empty. Any mailbox not in a lane
+                    // is either empty or owned by a live worker that
+                    // will re-queue it, so there is nothing left for
+                    // this worker to drain.
+                    return;
+                }
+                ready = shared
+                    .available
+                    .wait(ready)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        run_one(shared, &mailbox);
+    }
+}
+
+/// Execute exactly one job from `mailbox`, then hand the mailbox back
+/// to the lane matching its new head (or park it if empty).
+fn run_one<J: MailboxJob, S>(shared: &Shared<J, S>, mailbox: &Arc<Mailbox<J, S>>) {
+    // Take the job *and the state* out under the lock, run unlocked:
+    // executing under the mailbox lock would block the engine thread's
+    // non-blocking submits for the whole job. `active` stays set, so
+    // no other worker can touch this mailbox meanwhile.
+    let (job, mut state) = {
+        let mut inner = lock(&mailbox.inner);
+        debug_assert!(inner.active, "executing a mailbox that was never scheduled");
+        match inner.queue.pop_front() {
+            Some(job) => (job, inner.state.take()),
+            None => {
+                inner.active = false;
+                return;
+            }
+        }
+    };
+
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        (shared.runner)(mailbox.key, &mut state, job);
+    }));
+    if outcome.is_err() {
+        // Containment: the job's unwind must not take down the worker
+        // or wedge the mailbox. The state may be half-mutated, so it
+        // is dropped — the corpus degrades to unregistered — and the
+        // hook settles the in-flight promise + depth accounting.
+        state = None;
+        (shared.panicked)(mailbox.key);
+    }
+
+    let next = {
+        let mut inner = lock(&mailbox.inner);
+        inner.state = state;
+        match inner.queue.front() {
+            Some(head) => Some(head.lane()),
+            None => {
+                inner.active = false;
+                None
+            }
+        }
+    };
+    if let Some(lane) = next {
+        push_ready(shared, Arc::clone(mailbox), lane);
+    }
+}
+
+impl<J: MailboxJob, S: Send + 'static> Drop for DispatcherPool<J, S> {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::time::Duration;
+
+    /// Toy job interpreted by [`toy_pool`]'s runner; state is a `u32`.
+    enum Toy {
+        /// Append `(key, tag)` to the shared log, then ack `tag`.
+        Log { tag: u32, lane: Lane, log: Arc<Mutex<Vec<(Key, u32)>>>, ack: Sender<u32> },
+        /// Signal `entered`, then block until `gate` drops/fires.
+        Block { lane: Lane, entered: Sender<()>, gate: Receiver<()> },
+        /// Install `value` as the mailbox's state.
+        SetState(u32),
+        /// Report the current state.
+        Report(Sender<Option<u32>>),
+        Panic,
+    }
+
+    impl MailboxJob for Toy {
+        fn lane(&self) -> Lane {
+            match self {
+                Toy::Log { lane, .. } | Toy::Block { lane, .. } => *lane,
+                Toy::SetState(_) | Toy::Report(_) | Toy::Panic => Lane::Bulk,
+            }
+        }
+    }
+
+    fn toy_pool(
+        workers: usize,
+    ) -> (DispatcherPool<Toy, u32>, Arc<AtomicUsize>, Arc<Mutex<Vec<Key>>>) {
+        let depth = Arc::new(AtomicUsize::new(0));
+        let panics: Arc<Mutex<Vec<Key>>> = Arc::new(Mutex::new(Vec::new()));
+        let runner_depth = Arc::clone(&depth);
+        let hook_depth = Arc::clone(&depth);
+        let hook_panics = Arc::clone(&panics);
+        let pool = DispatcherPool::new(
+            workers,
+            Arc::clone(&depth),
+            Arc::new(move |key, state: &mut Option<u32>, job: Toy| {
+                // Mirrors the real runtime's accounting: the runner
+                // decrements once per completed job; a panicking job
+                // never reaches its decrement and the hook covers it.
+                if let Toy::Panic = job {
+                    panic!("toy job panic");
+                }
+                runner_depth.fetch_sub(1, Ordering::Relaxed);
+                match job {
+                    Toy::Log { tag, log, ack, .. } => {
+                        lock(&log).push((key, tag));
+                        let _ = ack.send(tag);
+                    }
+                    Toy::Block { entered, gate, .. } => {
+                        let _ = entered.send(());
+                        let _ = gate.recv();
+                    }
+                    Toy::SetState(value) => *state = Some(value),
+                    Toy::Report(tx) => {
+                        let _ = tx.send(*state);
+                    }
+                    Toy::Panic => unreachable!(),
+                }
+            }),
+            Arc::new(move |key| {
+                hook_depth.fetch_sub(1, Ordering::Relaxed);
+                lock(&hook_panics).push(key);
+            }),
+        );
+        (pool, depth, panics)
+    }
+
+    fn log_job(tag: u32, lane: Lane, log: &Arc<Mutex<Vec<(Key, u32)>>>, ack: &Sender<u32>) -> Toy {
+        Toy::Log { tag, lane, log: Arc::clone(log), ack: ack.clone() }
+    }
+
+    #[test]
+    fn per_mailbox_fifo_and_cross_mailbox_concurrency() {
+        let (pool, depth, _) = toy_pool(2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (ack_tx, ack_rx) = channel();
+        let (entered_tx, entered_rx) = channel();
+        let (gate_tx, gate_rx) = channel();
+
+        // Occupy mailbox 0 with a blocking job, queue two more behind it.
+        pool.submit(0, Toy::Block { lane: Lane::Bulk, entered: entered_tx, gate: gate_rx }, true)
+            .unwrap_or_else(|_| panic!("submit"));
+        entered_rx.recv().expect("block job started");
+        for tag in [1, 2] {
+            pool.submit(0, log_job(tag, Lane::Bulk, &log, &ack_tx), true)
+                .unwrap_or_else(|_| panic!("submit"));
+        }
+        // Mailbox 7 must complete while mailbox 0 is still blocked:
+        // that is exactly the cross-tenant isolation the pool exists for.
+        pool.submit(7, log_job(70, Lane::Bulk, &log, &ack_tx), true)
+            .unwrap_or_else(|_| panic!("submit"));
+        assert_eq!(
+            ack_rx.recv_timeout(Duration::from_secs(10)),
+            Ok(70),
+            "tenant 7 blocked behind tenant 0's in-flight job"
+        );
+
+        gate_tx.send(()).expect("release gate");
+        assert_eq!(ack_rx.recv_timeout(Duration::from_secs(10)), Ok(1));
+        assert_eq!(ack_rx.recv_timeout(Duration::from_secs(10)), Ok(2));
+        let order: Vec<u32> =
+            lock(&log).iter().filter(|(k, _)| *k == 0).map(|&(_, t)| t).collect();
+        assert_eq!(order, vec![1, 2], "per-mailbox FIFO violated");
+        drop(pool);
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fast_lane_overtakes_queued_bulk_work() {
+        // One worker ⇒ scheduling order is fully deterministic once
+        // the worker is pinned by the blocking job.
+        let (pool, _, _) = toy_pool(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (ack_tx, ack_rx) = channel();
+        let (entered_tx, entered_rx) = channel();
+        let (gate_tx, gate_rx) = channel();
+
+        pool.submit(0, Toy::Block { lane: Lane::Bulk, entered: entered_tx, gate: gate_rx }, true)
+            .unwrap_or_else(|_| panic!("submit"));
+        entered_rx.recv().expect("block job started");
+        // Bulk to tenant 1 first, then fast to tenant 2. With a single
+        // serialized queue tag 1 would run first; lanes flip it.
+        pool.submit(1, log_job(1, Lane::Bulk, &log, &ack_tx), true)
+            .unwrap_or_else(|_| panic!("submit"));
+        pool.submit(2, log_job(2, Lane::Fast, &log, &ack_tx), true)
+            .unwrap_or_else(|_| panic!("submit"));
+        gate_tx.send(()).expect("release gate");
+
+        assert_eq!(ack_rx.recv_timeout(Duration::from_secs(10)), Ok(2), "fast lane did not overtake");
+        assert_eq!(ack_rx.recv_timeout(Duration::from_secs(10)), Ok(1));
+    }
+
+    #[test]
+    fn submit_without_create_rejects_unknown_keys() {
+        let (pool, depth, _) = toy_pool(1);
+        let (tx, _rx) = channel();
+        let rejected = pool.submit(42, Toy::Report(tx), false);
+        assert!(rejected.is_err(), "unknown key must hand the job back");
+        assert_eq!(depth.load(Ordering::Relaxed), 0, "rejected job leaked depth");
+    }
+
+    #[test]
+    fn panic_drops_state_but_not_the_worker_or_mailbox() {
+        let (pool, depth, panics) = toy_pool(1);
+        let (tx, rx) = channel();
+
+        pool.submit(5, Toy::SetState(11), true).unwrap_or_else(|_| panic!("submit"));
+        pool.submit(5, Toy::Report(tx.clone()), true).unwrap_or_else(|_| panic!("submit"));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)), Ok(Some(11)));
+
+        pool.submit(5, Toy::Panic, true).unwrap_or_else(|_| panic!("submit"));
+        // The same mailbox (and the single worker) must keep serving;
+        // the state was dropped by containment.
+        pool.submit(5, Toy::Report(tx), true).unwrap_or_else(|_| panic!("submit"));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)), Ok(None), "state survived a panic");
+        assert_eq!(lock(&panics).as_slice(), &[5]);
+        drop(pool);
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs_and_broadcast_reaches_every_mailbox() {
+        let (pool, depth, _) = toy_pool(2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (ack_tx, ack_rx) = channel();
+        for key in 0..4u32 {
+            for tag in 0..3u32 {
+                pool.submit(key, log_job(key * 10 + tag, Lane::Bulk, &log, &ack_tx), true)
+                    .unwrap_or_else(|_| panic!("submit"));
+            }
+        }
+        let (state_tx, state_rx) = channel();
+        assert_eq!(pool.broadcast(|_| Toy::Report(state_tx.clone())), 4);
+        drop(state_tx);
+        drop(pool); // must drain all 12 logs + 4 reports before joining
+        assert_eq!(ack_rx.try_iter().count(), 12, "drop lost queued jobs");
+        assert_eq!(state_rx.try_iter().count(), 4, "broadcast missed a mailbox");
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+        assert_eq!(lock(&log).len(), 12);
+    }
+
+    #[test]
+    fn depths_reports_per_key_queue_and_state() {
+        let (pool, _, _) = toy_pool(1);
+        let (entered_tx, entered_rx) = channel();
+        let (gate_tx, gate_rx) = channel();
+        pool.submit(3, Toy::SetState(1), true).unwrap_or_else(|_| panic!("submit"));
+        pool.submit(3, Toy::Block { lane: Lane::Bulk, entered: entered_tx, gate: gate_rx }, true)
+            .unwrap_or_else(|_| panic!("submit"));
+        entered_rx.recv().expect("block job started");
+        // Worker pinned on key 3; these queue up unexecuted.
+        pool.submit(3, Toy::SetState(2), true).unwrap_or_else(|_| panic!("submit"));
+        pool.submit(9, Toy::SetState(3), true).unwrap_or_else(|_| panic!("submit"));
+        let depths = pool.depths();
+        assert_eq!(depths.len(), 2);
+        // Key 3's state rides *with* the in-flight block job (taken out
+        // of the mailbox for the run), so it reads state-less here.
+        assert_eq!(depths[0], (3, 1, false), "key 3: one queued job, state in flight");
+        assert_eq!(depths[1].0, 9);
+        assert_eq!(depths[1].1, 1, "key 9: one queued job");
+        gate_tx.send(()).expect("release gate");
+
+        // Once everything settles (sync through a Report round trip),
+        // both keys hold state and no jobs are queued.
+        let (tx, rx) = channel();
+        pool.submit(3, Toy::Report(tx), true).unwrap_or_else(|_| panic!("submit"));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)), Ok(Some(2)));
+        let depths = pool.depths();
+        assert_eq!(depths, vec![(3, 0, true), (9, 0, true)]);
+    }
+}

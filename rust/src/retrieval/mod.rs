@@ -35,7 +35,7 @@
 //!   heaps associatively, so shard results are order-independent (the
 //!   precondition for future cross-machine placement);
 //! * [`RetrievalRuntime`] runs every cascade walk, refine panel, index
-//!   build and recall probe on a dedicated thread, turning the
+//!   build and recall probe off the engine thread, turning the
 //!   coordinator's retrieval entry points into non-blocking handoffs;
 //! * the index is incrementally mutable: `insert` (one shard, O(d)),
 //!   `tombstone` (O(1)) and threshold-triggered per-shard `compact`,
@@ -48,12 +48,22 @@
 //! Recall is audited by the same merged-view probes; with routing
 //! disabled (the default) the exact path is preserved bit-for-bit.
 //!
+//! PR 8 fixes the runtime's cross-tenant head-of-line blocking: instead
+//! of one thread serializing *all* corpora, each corpus owns a FIFO
+//! mailbox (the actor state is its [`ShardedCorpus`]) executed by a
+//! small dispatcher pool (the private `dispatch` module) with two
+//! priority lanes, so a
+//! compaction or index build of corpus A no longer stalls searches of
+//! corpus B while jobs within one corpus stay strictly serialized —
+//! the per-corpus ordering contract is unchanged.
+//!
 //! The coordinator exposes the whole pipeline as a service API
 //! (`DistanceService::register_corpus` / `retrieve` / `corpus_insert` /
 //! `corpus_tombstone` / `corpus_compact`) with prune-fraction, recall,
 //! per-shard and off-thread-latency gauges in its stats snapshot.
 
 mod bounds;
+mod dispatch;
 mod index;
 mod routing;
 mod runtime;
@@ -144,8 +154,8 @@ pub enum RetrievalError {
     QueryDimensionMismatch { got: usize, want: usize },
     /// A worker panicked inside shard `shard`'s cascade/refine. The
     /// panic is caught at the shard boundary and fails only the request
-    /// that triggered it — the runtime thread owning every registered
-    /// corpus keeps serving.
+    /// that triggered it — the dispatcher thread executing the corpus's
+    /// mailbox keeps serving, and no other tenant notices.
     ShardPanicked { shard: usize },
 }
 

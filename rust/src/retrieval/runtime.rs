@@ -1,50 +1,65 @@
 //! The off-engine-thread retrieval runtime.
 //!
 //! PR 4 executed every cascade walk inline on the coordinator's engine
-//! thread, so a long corpus search (or a brute-force recall probe)
-//! stalled pending distance-query deadline flushes for its whole
-//! duration. This module moves retrieval onto its own thread:
+//! thread, so a long corpus search stalled pending distance-query
+//! deadline flushes. PR 5 moved retrieval onto one dedicated thread —
+//! which traded the engine stall for a *cross-tenant* stall: a
+//! compaction or index build of corpus A blocked every search of
+//! corpus B for its full duration. PR 8 removes that head-of-line
+//! blocking while keeping the ordering contract that makes the
+//! mutation API race-free:
 //!
-//! * [`RetrievalRuntime`] spawns one dedicated `sinkhorn-retrieval`
-//!   thread that owns every registered [`super::ShardedCorpus`] (index
-//!   builds included — registration is also expensive). The engine
-//!   thread keeps only validation and promise plumbing: every operation
-//!   is a non-blocking channel send carrying a completion callback, and
-//!   results travel straight to the caller's promise channel without
-//!   re-crossing the engine.
-//! * Jobs execute **in submission order** on the runtime thread, with
-//!   intra-search parallelism across shards (the
-//!   [`super::ShardingConfig::threads`] scoped pool) and across each
-//!   shard's refine executor workers. Serialized jobs are what make the
-//!   mutation API race-free without locks: a search never observes a
-//!   half-applied insert/tombstone/compact, and a corpus invalidation
-//!   (metric replacement) simply fails every search queued behind it
-//!   with "unknown corpus" while searches already dequeued complete
-//!   against the snapshot they started with.
+//! * Each registered corpus owns a **FIFO mailbox** holding its
+//!   [`super::ShardedCorpus`] as actor state, executed by at most one
+//!   dispatcher thread at a time (see [`super::dispatch`]). Jobs
+//!   within one corpus therefore run **strictly in submission order**:
+//!   a search never observes a half-applied insert/tombstone/compact,
+//!   and a corpus invalidation (metric replacement) still fails every
+//!   search queued behind it with "unknown corpus" while searches
+//!   already dequeued complete against the snapshot they started with.
+//! * A small pool of `sinkhorn-retrieval-{i}` dispatcher threads
+//!   executes runnable mailboxes through two priority lanes: searches
+//!   ride the fast lane and overtake registrations, mutations and
+//!   compactions *of other corpora* — but never reorder against
+//!   anything in their own corpus's mailbox. Intra-search parallelism
+//!   (the [`super::ShardingConfig::threads`] scoped pool and each
+//!   shard's refine executor workers) is unchanged.
+//! * The engine thread keeps only validation and promise plumbing:
+//!   every operation is a non-blocking submit carrying a completion
+//!   callback, and results travel straight to the caller's promise
+//!   channel without re-crossing the engine.
 //! * Observability flows through a feedback channel
 //!   ([`RuntimeFeedback`]): after every job the runtime pushes the
-//!   search report, the pure off-thread search walltime and the
-//!   per-shard gauges; the coordinator drains it into its stats, and
-//!   [`RetrievalRuntime::queue_depth`] exposes how many jobs are
-//!   currently queued or running.
+//!   search report, the pure off-thread search walltime, the dispatch
+//!   queue wait (`queued_us` — the head-of-line blocking measure) and
+//!   the per-shard gauges; invalidations push a tombstone feedback so
+//!   the coordinator can purge the tenant's gauge rows.
+//!   [`RetrievalRuntime::queue_depth`] exposes the total in-flight job
+//!   count and [`RetrievalRuntime::corpus_depths`] the per-tenant
+//!   backlog.
+//! * A shard panic is contained twice over: the shard-level
+//!   `catch_unwind` fails the triggering request with
+//!   [`RetrievalError::ShardPanicked`], and the dispatcher's own
+//!   safety net (a panic escaping the actor logic) drops that one
+//!   corpus's state without poisoning its mailbox or taking down a
+//!   dispatcher thread.
 //!
-//! Dropping the runtime handle disconnects the job channel; the thread
-//! drains everything already queued (callers still get their answers)
-//! and exits, and the drop joins it.
+//! Dropping the runtime drains every queued job (callers still get
+//! their answers), then joins the dispatcher pool.
 
+use super::dispatch::{DispatcherPool, Lane, MailboxJob};
 use super::shard::{ShardGauges, ShardedCorpus, ShardingConfig};
 use super::{Hit, RetrievalConfig, RetrievalError, RetrievalReport};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
-use std::collections::HashMap;
+use crate::util::saturating_micros;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Raw corpus key (the coordinator maps its `CorpusId` onto this; the
-/// runtime is coordinator-agnostic).
+/// runtime is coordinator-agnostic). Also the mailbox key.
 pub type CorpusKey = u32;
 /// Raw metric key, used only to invalidate dependent corpora.
 pub type MetricKey = u32;
@@ -60,7 +75,7 @@ pub struct RegisterSpec {
     /// The ground metric (owned: the runtime outlives the caller's
     /// borrow).
     pub metric: CostMatrix,
-    /// Raw corpus entries; validated and indexed on the runtime thread.
+    /// Raw corpus entries; validated and indexed on a dispatcher thread.
     pub entries: Vec<Histogram>,
     /// Projection-anchor budget per shard index.
     pub anchors: usize,
@@ -112,25 +127,37 @@ impl std::error::Error for RuntimeError {
     }
 }
 
-/// One observability push from the runtime thread, emitted after every
-/// job that addressed a corpus (searches, mutations, registrations).
+/// One observability push from the runtime, emitted after every job
+/// that addressed a corpus (searches, mutations, registrations,
+/// invalidations).
 #[derive(Debug, Clone)]
 pub struct RuntimeFeedback {
     /// The corpus the job addressed.
     pub corpus: CorpusKey,
     /// The merged search report, for completed searches only.
     pub report: Option<RetrievalReport>,
-    /// Pure search walltime on the runtime thread (µs, excludes queue
-    /// wait); 0 for non-search jobs.
+    /// Pure search walltime on the dispatcher thread (µs, excludes
+    /// queue wait); 0 for non-search jobs.
     pub search_us: u64,
+    /// How long a search waited in its mailbox before dispatch (µs, 0
+    /// for non-search jobs) — the head-of-line blocking measure. With
+    /// per-corpus mailboxes this wait comes from the corpus's *own*
+    /// queued jobs plus dispatcher contention, never from another
+    /// tenant's serialized bulk work.
+    pub queued_us: u64,
     /// Whether the job failed (unknown corpus or rejected input).
     pub failed: bool,
+    /// The corpus stopped existing as a result of this job (metric
+    /// invalidation, failed re-registration, or panic containment):
+    /// consumers must purge the tenant's gauge rows instead of serving
+    /// the last push forever.
+    pub invalidated: bool,
     /// Per-shard gauges after the job (empty when the corpus is gone).
     pub gauges: Vec<ShardGauges>,
 }
 
-/// Completion callback carried by a job; invoked exactly once on the
-/// runtime thread with the job's outcome.
+/// Completion callback carried by a job; invoked exactly once with the
+/// job's outcome.
 type Callback<T> = Box<dyn FnOnce(T) + Send>;
 
 enum Job {
@@ -156,75 +183,139 @@ enum Job {
         corpus: CorpusKey,
         respond: Callback<Result<usize, RuntimeError>>,
     },
+    /// Broadcast into every mailbox so the invalidation lands in FIFO
+    /// position: searches queued behind it fail, searches ahead of it
+    /// complete against the old metric's snapshot.
     DropMetric(MetricKey),
     /// Test-only: arm the one-shot panic hook on one shard of a corpus
     /// (the shard's next search panics), exercising the containment
-    /// contract end-to-end on the runtime thread.
+    /// contract end-to-end on a dispatcher thread.
     #[cfg(test)]
     Poison {
         corpus: CorpusKey,
         shard: usize,
         respond: Callback<bool>,
     },
+    /// Test-only: occupy the mailbox — signal `entered`, then block
+    /// until `gate` fires/drops. Lets tests pin one tenant's mailbox
+    /// deterministically while asserting other tenants keep serving.
+    #[cfg(test)]
+    Hold {
+        entered: Sender<()>,
+        gate: std::sync::mpsc::Receiver<()>,
+        respond: Callback<()>,
+    },
 }
 
-/// Handle to the dedicated retrieval thread. All methods are
-/// non-blocking sends; they return `false` only when the runtime thread
-/// is gone (the callback is then dropped uninvoked, which callers
-/// observe as a disconnected promise channel).
+impl MailboxJob for Job {
+    fn lane(&self) -> Lane {
+        match self {
+            Job::Search { .. } => Lane::Fast,
+            #[cfg(test)]
+            Job::Poison { .. } => Lane::Fast,
+            _ => Lane::Bulk,
+        }
+    }
+}
+
+/// Per-mailbox actor state: one tenant's sharded corpus plus the
+/// metric namespace it depends on.
+struct CorpusActor {
+    metric_key: MetricKey,
+    corpus: ShardedCorpus,
+}
+
+/// Handle to the mailbox-per-corpus dispatcher pool. All methods are
+/// non-blocking submits; the `bool` return is kept for API continuity
+/// and is always `true` while the handle lives (jobs cannot be lost —
+/// drop drains before joining).
 pub struct RetrievalRuntime {
-    tx: Option<Sender<Job>>,
-    handle: Option<JoinHandle<()>>,
+    pool: DispatcherPool<Job, CorpusActor>,
     depth: Arc<AtomicUsize>,
+    feedback: Sender<RuntimeFeedback>,
 }
 
 impl RetrievalRuntime {
-    /// Spawn the runtime thread. Gauge/report pushes go to `feedback`;
-    /// dropping the receiving end silently disables them.
+    /// Spawn the runtime with an automatically sized dispatcher pool.
+    /// Gauge/report pushes go to `feedback`; dropping the receiving end
+    /// silently disables them.
     pub fn start(feedback: Sender<RuntimeFeedback>) -> Self {
-        let (tx, rx) = channel();
-        let depth = Arc::new(AtomicUsize::new(0));
-        let thread_depth = Arc::clone(&depth);
-        let handle = std::thread::Builder::new()
-            .name("sinkhorn-retrieval".into())
-            .spawn(move || {
-                RuntimeThread {
-                    corpora: HashMap::new(),
-                    feedback,
-                    depth: thread_depth,
-                }
-                .run(rx)
-            })
-            .expect("spawn retrieval runtime thread");
-        Self { tx: Some(tx), handle: Some(handle), depth }
+        Self::with_dispatchers(feedback, 0)
     }
 
-    /// Jobs accepted but not yet completed (queued + the one running).
+    /// Spawn the runtime with an explicit dispatcher-pool size.
+    /// `dispatchers == 0` sizes to available parallelism clamped to
+    /// `[2, 4]` — at least two threads, so one tenant's bulk job can
+    /// never monopolize retrieval; `1` reproduces the PR 5 fully
+    /// serialized behavior (modulo lane priority among *queued* jobs).
+    pub fn with_dispatchers(feedback: Sender<RuntimeFeedback>, dispatchers: usize) -> Self {
+        let dispatchers = if dispatchers == 0 {
+            std::thread::available_parallelism().map_or(2, |n| n.get()).clamp(2, 4)
+        } else {
+            dispatchers
+        };
+        let depth = Arc::new(AtomicUsize::new(0));
+        let ctx = RunnerCtx { feedback: feedback.clone(), depth: Arc::clone(&depth) };
+        let hook_ctx = ctx.clone();
+        let pool = DispatcherPool::new(
+            dispatchers,
+            Arc::clone(&depth),
+            Arc::new(move |key, state, job| ctx.execute(key, state, job)),
+            Arc::new(move |key| hook_ctx.contain_panic(key)),
+        );
+        Self { pool, depth, feedback }
+    }
+
+    /// Jobs accepted but not yet completed (queued + running), summed
+    /// over every mailbox.
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
     }
 
-    fn send(&self, job: Job) -> bool {
-        // Increment before the send so a completed job always finds the
-        // count it must decrement.
-        self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.as_ref().map(|tx| tx.send(job)) {
-            Some(Ok(())) => true,
-            _ => {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
-                false
-            }
+    /// Per-corpus queued-job backlog, sorted by corpus key. Includes
+    /// tenants whose registration is still queued; excludes idle
+    /// tombstoned mailboxes.
+    pub fn corpus_depths(&self) -> Vec<(CorpusKey, u64)> {
+        self.pool
+            .depths()
+            .into_iter()
+            .filter(|&(_, queued, registered)| registered || queued > 0)
+            .map(|(key, queued, _)| (key, queued as u64))
+            .collect()
+    }
+
+    /// Route a corpus-addressed job to its mailbox, failing the
+    /// promise inline when no mailbox was ever created for the key
+    /// (nothing is queued there, so the unknown-corpus answer is
+    /// already in FIFO position).
+    fn submit(&self, corpus: CorpusKey, job: Job) -> bool {
+        if let Err(job) = self.pool.submit(corpus, job, false) {
+            let _ = self.feedback.send(RuntimeFeedback {
+                corpus,
+                report: None,
+                search_us: 0,
+                queued_us: 0,
+                failed: true,
+                invalidated: false,
+                gauges: Vec::new(),
+            });
+            reject_unknown(corpus, job);
         }
+        true
     }
 
     /// Build + install a sharded corpus; `ack` receives the indexed
-    /// size (or the build error).
+    /// size (or the build error). Creates the corpus's mailbox.
     pub fn register(
         &self,
         spec: RegisterSpec,
         ack: Callback<Result<usize, RetrievalError>>,
     ) -> bool {
-        self.send(Job::Register(Box::new(spec), ack))
+        let corpus = spec.corpus;
+        self.pool
+            .submit(corpus, Job::Register(Box::new(spec), ack), true)
+            .unwrap_or_else(|_| unreachable!("submit with create cannot be rejected"));
+        true
     }
 
     /// Merged pruned top-k against a registered corpus.
@@ -236,7 +327,7 @@ impl RetrievalRuntime {
         enqueued: Instant,
         respond: Callback<Result<SearchOutcome, RuntimeError>>,
     ) -> bool {
-        self.send(Job::Search { corpus, query, k, enqueued, respond })
+        self.submit(corpus, Job::Search { corpus, query, k, enqueued, respond })
     }
 
     /// Append one entry; the callback receives its fresh global id.
@@ -246,7 +337,7 @@ impl RetrievalRuntime {
         entry: Histogram,
         respond: Callback<Result<usize, RuntimeError>>,
     ) -> bool {
-        self.send(Job::Insert { corpus, entry, respond })
+        self.submit(corpus, Job::Insert { corpus, entry, respond })
     }
 
     /// Tombstone one entry id; the callback receives whether a live
@@ -257,7 +348,7 @@ impl RetrievalRuntime {
         entry: usize,
         respond: Callback<Result<bool, RuntimeError>>,
     ) -> bool {
-        self.send(Job::Tombstone { corpus, entry, respond })
+        self.submit(corpus, Job::Tombstone { corpus, entry, respond })
     }
 
     /// Compact every shard of the corpus holding tombstones; the
@@ -267,49 +358,79 @@ impl RetrievalRuntime {
         corpus: CorpusKey,
         respond: Callback<Result<usize, RuntimeError>>,
     ) -> bool {
-        self.send(Job::Compact { corpus, respond })
+        self.submit(corpus, Job::Compact { corpus, respond })
     }
 
     /// Invalidate every corpus registered against `metric_key` (their
-    /// precomputed statistics describe the replaced metric). Searches
-    /// queued behind this job fail with unknown-corpus.
+    /// precomputed statistics describe the replaced metric). The drop
+    /// is broadcast into every mailbox, so per-corpus FIFO order is
+    /// preserved: searches queued behind it fail with unknown-corpus.
     pub fn drop_metric(&self, metric_key: MetricKey) -> bool {
-        self.send(Job::DropMetric(metric_key))
+        self.pool.broadcast(|_| Job::DropMetric(metric_key));
+        true
     }
 
     /// Test-only: arm the one-shot panic hook on `shard` of `corpus`.
     /// The callback receives whether the corpus was found.
     #[cfg(test)]
     fn poison(&self, corpus: CorpusKey, shard: usize, respond: Callback<bool>) -> bool {
-        self.send(Job::Poison { corpus, shard, respond })
+        self.submit(corpus, Job::Poison { corpus, shard, respond })
+    }
+
+    /// Test-only: pin `corpus`'s mailbox with a blocking bulk job.
+    /// Returns `(entered, gate, done)`: `entered` fires when the hold
+    /// starts executing, dropping/sending `gate` releases it, `done`
+    /// fires when it finishes.
+    #[cfg(test)]
+    fn hold(
+        &self,
+        corpus: CorpusKey,
+    ) -> (
+        std::sync::mpsc::Receiver<()>,
+        Sender<()>,
+        std::sync::mpsc::Receiver<()>,
+    ) {
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel();
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        self.submit(
+            corpus,
+            Job::Hold {
+                entered: entered_tx,
+                gate: gate_rx,
+                respond: Box::new(move |()| drop(done_tx.send(()))),
+            },
+        );
+        (entered_rx, gate_tx, done_rx)
     }
 }
 
-impl Drop for RetrievalRuntime {
-    fn drop(&mut self) {
-        // Disconnect the job channel; the thread drains what is already
-        // queued (promised answers still get delivered) and exits.
-        drop(self.tx.take());
-        if let Some(handle) = self.handle.take() {
-            let _ = handle.join();
+/// Settle a job whose corpus key has no mailbox: fail its promise with
+/// unknown-corpus on the caller's thread.
+fn reject_unknown(corpus: CorpusKey, job: Job) {
+    match job {
+        Job::Search { respond, .. } => respond(Err(RuntimeError::UnknownCorpus(corpus))),
+        Job::Insert { respond, .. } => respond(Err(RuntimeError::UnknownCorpus(corpus))),
+        Job::Tombstone { respond, .. } => respond(Err(RuntimeError::UnknownCorpus(corpus))),
+        Job::Compact { respond, .. } => respond(Err(RuntimeError::UnknownCorpus(corpus))),
+        Job::Register(..) | Job::DropMetric(_) => {
+            unreachable!("register creates its mailbox; drop-metric is broadcast")
         }
+        #[cfg(test)]
+        Job::Poison { respond, .. } => respond(false),
+        #[cfg(test)]
+        Job::Hold { respond, .. } => respond(()),
     }
 }
 
-/// State owned by the runtime thread.
-struct RuntimeThread {
-    corpora: HashMap<CorpusKey, (MetricKey, ShardedCorpus)>,
+/// The per-job actor logic, shared by every dispatcher thread.
+#[derive(Clone)]
+struct RunnerCtx {
     feedback: Sender<RuntimeFeedback>,
     depth: Arc<AtomicUsize>,
 }
 
-impl RuntimeThread {
-    fn run(mut self, rx: Receiver<Job>) {
-        while let Ok(job) = rx.recv() {
-            self.handle(job);
-        }
-    }
-
+impl RunnerCtx {
     /// Mark the current job complete *before* fulfilling its promise,
     /// so a caller that has observed its result never reads a stale
     /// non-zero queue depth for it.
@@ -318,31 +439,53 @@ impl RuntimeThread {
         respond(value);
     }
 
-    fn push_feedback(
+    #[allow(clippy::too_many_arguments)]
+    fn push(
         &self,
         corpus: CorpusKey,
+        state: &Option<CorpusActor>,
         report: Option<RetrievalReport>,
         search_us: u64,
+        queued_us: u64,
         failed: bool,
+        invalidated: bool,
     ) {
-        let gauges = self
-            .corpora
-            .get(&corpus)
-            .map(|(_, c)| c.gauges())
-            .unwrap_or_default();
+        let gauges = state.as_ref().map(|a| a.corpus.gauges()).unwrap_or_default();
         let _ = self.feedback.send(RuntimeFeedback {
             corpus,
             report,
             search_us,
+            queued_us,
             failed,
+            invalidated,
             gauges,
         });
     }
 
-    fn handle(&mut self, job: Job) {
+    /// Dispatcher safety net: a job's unwind escaped the shard-level
+    /// containment. The mailbox's state has already been dropped (the
+    /// corpus degrades to unregistered); settle the accounting and
+    /// tell the metrics layer to purge the tenant. The in-flight
+    /// promise callback was consumed by the unwind — callers observe a
+    /// disconnected promise channel, exactly as on shutdown.
+    fn contain_panic(&self, corpus: CorpusKey) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = self.feedback.send(RuntimeFeedback {
+            corpus,
+            report: None,
+            search_us: 0,
+            queued_us: 0,
+            failed: true,
+            invalidated: true,
+            gauges: Vec::new(),
+        });
+    }
+
+    fn execute(&self, key: CorpusKey, state: &mut Option<CorpusActor>, job: Job) {
         match job {
             Job::Register(spec, ack) => {
                 let spec = *spec;
+                debug_assert_eq!(spec.corpus, key, "register routed to the wrong mailbox");
                 match ShardedCorpus::new(
                     &spec.metric,
                     spec.entries,
@@ -352,9 +495,8 @@ impl RuntimeThread {
                 ) {
                     Ok(corpus) => {
                         let size = corpus.len();
-                        self.corpora
-                            .insert(spec.corpus, (spec.metric_key, corpus));
-                        self.push_feedback(spec.corpus, None, 0, false);
+                        *state = Some(CorpusActor { metric_key: spec.metric_key, corpus });
+                        self.push(key, state, None, 0, 0, false, false);
                         self.finish(ack, Ok(size));
                     }
                     Err(e) => {
@@ -363,86 +505,91 @@ impl RuntimeThread {
                         // serving: the documented contract is that
                         // searches queued behind a failed rebuild get
                         // unknown-corpus, not stale data.
-                        self.corpora.remove(&spec.corpus);
-                        self.push_feedback(spec.corpus, None, 0, true);
+                        let invalidated = state.take().is_some();
+                        self.push(key, state, None, 0, 0, true, invalidated);
                         self.finish(ack, Err(e));
                     }
                 }
             }
             Job::Search { corpus, query, k, enqueued, respond } => {
-                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
-                    self.push_feedback(corpus, None, 0, true);
+                let queued_us = saturating_micros(enqueued.elapsed());
+                let Some(actor) = state.as_mut() else {
+                    self.push(corpus, state, None, 0, queued_us, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
                 let t0 = Instant::now();
-                let outcome = sharded.search(&query, k);
-                let search_us =
-                    t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                let outcome = actor.corpus.search(&query, k);
+                let search_us = saturating_micros(t0.elapsed());
                 match outcome {
                     Ok((hits, report)) => {
-                        self.push_feedback(corpus, Some(report), search_us, false);
-                        let latency_us = enqueued
-                            .elapsed()
-                            .as_micros()
-                            .min(u64::MAX as u128)
-                            as u64;
-                        self.finish(
-                            respond,
-                            Ok(SearchOutcome { hits, report, latency_us }),
-                        );
+                        self.push(corpus, state, Some(report), search_us, queued_us, false, false);
+                        let latency_us = saturating_micros(enqueued.elapsed());
+                        self.finish(respond, Ok(SearchOutcome { hits, report, latency_us }));
                     }
                     Err(e) => {
-                        self.push_feedback(corpus, None, search_us, true);
+                        self.push(corpus, state, None, search_us, queued_us, true, false);
                         self.finish(respond, Err(RuntimeError::Index(e)));
                     }
                 }
             }
             Job::Insert { corpus, entry, respond } => {
-                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
-                    self.push_feedback(corpus, None, 0, true);
+                let Some(actor) = state.as_mut() else {
+                    self.push(corpus, state, None, 0, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
-                let res = sharded.insert(entry);
+                let res = actor.corpus.insert(entry);
                 let failed = res.is_err();
-                self.push_feedback(corpus, None, 0, failed);
+                self.push(corpus, state, None, 0, 0, failed, false);
                 self.finish(respond, res.map_err(RuntimeError::Index));
             }
             Job::Tombstone { corpus, entry, respond } => {
-                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
-                    self.push_feedback(corpus, None, 0, true);
+                let Some(actor) = state.as_mut() else {
+                    self.push(corpus, state, None, 0, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
-                let hit = sharded.tombstone(entry);
-                self.push_feedback(corpus, None, 0, false);
+                let hit = actor.corpus.tombstone(entry);
+                self.push(corpus, state, None, 0, 0, false, false);
                 self.finish(respond, Ok(hit));
             }
             Job::Compact { corpus, respond } => {
-                let Some((_, sharded)) = self.corpora.get_mut(&corpus) else {
-                    self.push_feedback(corpus, None, 0, true);
+                let Some(actor) = state.as_mut() else {
+                    self.push(corpus, state, None, 0, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
-                let rebuilt = sharded.compact();
-                self.push_feedback(corpus, None, 0, false);
+                let rebuilt = actor.corpus.compact();
+                self.push(corpus, state, None, 0, 0, false, false);
                 self.finish(respond, Ok(rebuilt));
             }
             Job::DropMetric(metric_key) => {
-                self.corpora.retain(|_, (mk, _)| *mk != metric_key);
                 self.depth.fetch_sub(1, Ordering::Relaxed);
+                if state.as_ref().is_some_and(|a| a.metric_key == metric_key) {
+                    *state = None;
+                    // Tombstone push: the metrics layer purges this
+                    // tenant's gauge rows instead of serving the last
+                    // snapshot forever.
+                    self.push(key, state, None, 0, 0, false, true);
+                }
             }
             #[cfg(test)]
-            Job::Poison { corpus, shard, respond } => {
-                let armed = match self.corpora.get_mut(&corpus) {
-                    Some((_, sharded)) => {
-                        sharded.poison_shard(shard);
+            Job::Poison { shard, respond, .. } => {
+                let armed = match state.as_mut() {
+                    Some(actor) => {
+                        actor.corpus.poison_shard(shard);
                         true
                     }
                     None => false,
                 };
                 self.finish(respond, armed);
+            }
+            #[cfg(test)]
+            Job::Hold { entered, gate, respond } => {
+                let _ = entered.send(());
+                let _ = gate.recv();
+                self.finish(respond, ());
             }
         }
     }
@@ -453,7 +600,8 @@ mod tests {
     use super::*;
     use crate::metric::RandomMetric;
     use crate::simplex::seeded_rng;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, Receiver};
+    use std::time::Duration;
 
     fn spec(corpus: CorpusKey, seed: u64, shards: usize) -> (RegisterSpec, Histogram) {
         let d = 10;
@@ -498,8 +646,6 @@ mod tests {
         let outcome = rx.recv().unwrap().unwrap();
         assert_eq!(outcome.hits.len(), 5);
         assert_eq!(outcome.report.solved + outcome.report.pruned, 18);
-        // Latency covers queue wait + search; both are sane.
-        assert!(outcome.latency_us > 0);
 
         // Mutations serialize behind the search in submission order.
         let (cb, rx) = ack();
@@ -520,10 +666,18 @@ mod tests {
             pushes += 1;
             assert_eq!(fb.corpus, 3);
             assert!(!fb.failed);
+            assert!(!fb.invalidated);
             if let Some(report) = fb.report {
                 reports += 1;
                 assert_eq!(report.k, 5);
-                assert!(fb.search_us > 0, "off-thread search walltime recorded");
+                // Well-formedness, not wall-clock positivity: a
+                // sub-microsecond search on a coarse clock is legal,
+                // but the caller-observed latency always covers the
+                // queue wait plus the search itself.
+                assert!(outcome.latency_us >= fb.search_us);
+                assert!(outcome.latency_us >= fb.queued_us);
+            } else {
+                assert_eq!(fb.queued_us, 0, "queue wait is search-only");
             }
             assert_eq!(fb.gauges.len(), 3, "per-shard gauges ride every push");
         }
@@ -560,17 +714,25 @@ mod tests {
             rx.recv().unwrap(),
             Err(RuntimeError::UnknownCorpus(1))
         ));
-        // Failed jobs are flagged in the feedback stream.
+        // Failed jobs are flagged in the feedback stream, and the
+        // invalidation pushed a tombstone so the metrics layer can
+        // purge corpus 1's gauge rows (PR 8 satellite fix).
         let mut failures = 0;
+        let mut invalidations = Vec::new();
         while let Ok(fb) = fb_rx.try_recv() {
             failures += usize::from(fb.failed);
+            if fb.invalidated {
+                invalidations.push(fb.corpus);
+                assert!(fb.gauges.is_empty(), "a dropped corpus has no gauges");
+            }
         }
         assert_eq!(failures, 2);
+        assert_eq!(invalidations, vec![1], "drop_metric must announce the purge");
     }
 
     #[test]
     fn failed_reregistration_drops_the_stale_corpus() {
-        let (fb_tx, _fb_rx) = channel();
+        let (fb_tx, fb_rx) = channel();
         let runtime = RetrievalRuntime::start(fb_tx);
         let (good, q) = spec(5, 3, 2);
         let (cb, rx) = ack();
@@ -594,6 +756,10 @@ mod tests {
             rx.recv().unwrap(),
             Err(RuntimeError::UnknownCorpus(5))
         ));
+        // The failed swap announced the invalidation.
+        let invalidated: Vec<CorpusKey> =
+            fb_rx.try_iter().filter(|fb| fb.invalidated).map(|fb| fb.corpus).collect();
+        assert_eq!(invalidated, vec![5]);
     }
 
     #[test]
@@ -610,8 +776,9 @@ mod tests {
         rx.recv().unwrap().unwrap();
 
         // Poison one shard of corpus 1: the next search against it must
-        // fail with the shard attributed — not unwind the runtime
-        // thread that owns both tenants.
+        // fail with the shard attributed — not unwind the dispatcher
+        // thread serving both tenants, and not wedge corpus 1's
+        // mailbox.
         let (cb, rx) = ack();
         assert!(runtime.poison(1, 1, cb));
         assert!(rx.recv().unwrap(), "corpus 1 must be found and armed");
@@ -637,6 +804,53 @@ mod tests {
             failures += usize::from(fb.failed);
         }
         assert_eq!(failures, 1);
+    }
+
+    #[test]
+    fn searches_overtake_another_tenants_inflight_bulk_job() {
+        // Deterministic tenant isolation: pin corpus A's mailbox with a
+        // blocking bulk job, then prove corpus B's search completes
+        // while A is still held — the exact head-of-line blocking PR 8
+        // removes — and that A's own queued search stays strictly
+        // behind the hold (per-corpus FIFO).
+        let (fb_tx, _fb_rx) = channel();
+        let runtime = RetrievalRuntime::with_dispatchers(fb_tx, 2);
+        let (spec_a, qa) = spec(1, 6, 2);
+        let (spec_b, qb) = spec(2, 7, 2);
+        let (cb, rx) = ack();
+        runtime.register(spec_a, cb);
+        rx.recv().unwrap().unwrap();
+        let (cb, rx) = ack();
+        runtime.register(spec_b, cb);
+        rx.recv().unwrap().unwrap();
+
+        let (entered, gate, done) = runtime.hold(1);
+        entered.recv().expect("hold job started");
+        // A search queued behind A's hold must NOT complete yet; B's
+        // search must, on the free dispatcher.
+        let (cb, a_rx) = ack();
+        runtime.search(1, qa, 3, Instant::now(), cb);
+        let (cb, b_rx) = ack();
+        runtime.search(2, qb, 3, Instant::now(), cb);
+        let b = b_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("tenant B blocked behind tenant A's in-flight bulk job")
+            .unwrap();
+        assert_eq!(b.hits.len(), 3);
+        assert!(
+            a_rx.try_recv().is_err(),
+            "tenant A's search overtook its own queued bulk job"
+        );
+        let depths = runtime.corpus_depths();
+        assert_eq!(depths.iter().find(|&&(k, _)| k == 1).map(|&(_, d)| d), Some(1));
+
+        gate.send(()).expect("release hold");
+        done.recv_timeout(Duration::from_secs(30)).expect("hold finished");
+        assert_eq!(
+            a_rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap().hits.len(),
+            3
+        );
+        assert_eq!(runtime.queue_depth(), 0, "all jobs drained");
     }
 
     #[test]

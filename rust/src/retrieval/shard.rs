@@ -180,8 +180,7 @@ impl CorpusShard {
         let t0 = Instant::now();
         let out = self.service.top_k(query, k);
         self.searches += 1;
-        self.last_search_us =
-            t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        self.last_search_us = crate::util::saturating_micros(t0.elapsed());
         out
     }
 
@@ -523,8 +522,8 @@ impl ShardedCorpus {
                 // worker; a join error means the worker glue itself
                 // died, so it degrades to the same per-request error
                 // (attributed to the group's first shard) instead of
-                // unwinding into — and killing — the runtime thread
-                // that owns every registered corpus.
+                // unwinding into — and poisoning — the dispatcher
+                // thread executing this corpus's mailbox.
                 handles
                     .into_iter()
                     .zip(&ranges)
@@ -556,8 +555,9 @@ impl ShardedCorpus {
 /// a panicking cascade/refine is caught here and converted into a
 /// per-request [`RetrievalError::ShardPanicked`], so one poisoned query
 /// fails alone instead of unwinding into whatever thread drives the
-/// corpus — in production that is the dedicated `sinkhorn-retrieval`
-/// runtime thread owning *every* registered corpus.
+/// corpus — in production that is one of the `sinkhorn-retrieval-{i}`
+/// dispatcher threads executing this corpus's mailbox (PR 8), which
+/// must keep serving every other tenant.
 fn contained<T, F2>(
     sid: usize,
     shard: &mut CorpusShard,
@@ -692,8 +692,9 @@ mod tests {
         // Gauges recorded the pruned walk (brute-force oracle passes are
         // not counted as searches).
         let gauges = sc.gauges();
+        // (`last_search_us` is deliberately not asserted positive — a
+        // sub-microsecond shard walk on a coarse clock is legal.)
         assert!(gauges.iter().all(|g| g.searches == 1), "{gauges:?}");
-        assert!(gauges.iter().all(|g| g.last_search_us > 0 || g.searches == 0));
     }
 
     #[test]

@@ -4,3 +4,10 @@
 
 pub mod bench;
 pub mod json;
+
+/// A duration in whole microseconds, saturating at `u64::MAX` — the one
+/// clamp every latency/walltime gauge in the crate shares, so the
+/// saturation semantics cannot drift per call site.
+pub fn saturating_micros(d: std::time::Duration) -> u64 {
+    d.as_micros().min(u64::MAX as u128) as u64
+}

@@ -236,16 +236,18 @@ fn retrieval_path_serves_end_to_end_cpu_only() {
         snap.retrieval_pruned > 0,
         "clustered corpus must prune something: {snap}"
     );
-    // PR 5 gauges: every search ran on the retrieval runtime thread,
-    // and the per-shard table shows the 3-way partition.
+    // PR 5 gauges: every search ran off the engine thread, and since
+    // PR 8 the table is keyed per corpus — one row whose per-shard
+    // gauges show the 3-way partition.
     assert_eq!(snap.retrieval_offthread, 4);
     assert!(snap.retrieval_search_max_us > 0);
     assert_eq!(snap.retrieval_queue_depth, 0);
-    assert_eq!(snap.retrieval_shards.len(), 3, "{snap}");
-    assert_eq!(
-        snap.retrieval_shards.iter().map(|g| g.live).sum::<usize>(),
-        48
-    );
+    assert_eq!(snap.retrieval_shards.len(), 1, "{snap}");
+    let row = &snap.retrieval_shards[0];
+    assert_eq!(row.corpus, 0, "{snap}");
+    assert_eq!(row.searches, 4, "{snap}");
+    assert_eq!(row.shards.len(), 3, "{snap}");
+    assert_eq!(row.shards.iter().map(|g| g.live).sum::<usize>(), 48);
     assert!(snap.to_string().contains("rsearch("));
     svc.shutdown();
 }
@@ -301,15 +303,15 @@ fn corpus_mutation_api_serves_incremental_updates_end_to_end() {
     assert_eq!(out.report.corpus, 32, "compaction does not change the view");
 
     let snap = svc.stats().unwrap();
-    assert_eq!(snap.retrieval_shards.len(), 2, "{snap}");
-    assert_eq!(snap.retrieval_shards.iter().map(|g| g.live).sum::<usize>(), 32);
-    assert_eq!(
-        snap.retrieval_shards.iter().map(|g| g.compactions).sum::<u64>(),
-        1
-    );
-    assert_eq!(snap.retrieval_shards.iter().map(|g| g.inserts).sum::<u64>(), 1);
+    assert_eq!(snap.retrieval_shards.len(), 1, "{snap}");
+    let row = &snap.retrieval_shards[0];
+    assert_eq!(row.corpus, 0, "{snap}");
+    assert_eq!(row.shards.len(), 2, "{snap}");
+    assert_eq!(row.shards.iter().map(|g| g.live).sum::<usize>(), 32);
+    assert_eq!(row.shards.iter().map(|g| g.compactions).sum::<u64>(), 1);
+    assert_eq!(row.shards.iter().map(|g| g.inserts).sum::<u64>(), 1);
     assert_eq!(snap.errors, 3, "the three unknown-corpus mutations");
-    assert!(snap.to_string().contains("shards=["));
+    assert!(snap.to_string().contains("corpora={"));
 
     // Metric replacement invalidates the corpus for subsequent jobs.
     let m2 = RandomMetric::new(d).sample(&mut rng);

@@ -14,6 +14,12 @@
 //!   deadline-batched distance queries must leave the distance-latency
 //!   gauge far below the search walltime.
 //!
+//! PR 8 adds the cross-tenant isolation bar: with the mailbox-per-corpus
+//! dispatcher, one tenant's searches must keep completing *inside*
+//! another tenant's long bulk job (index build), per-corpus submission
+//! order must survive the refactor, and the stats snapshot must key
+//! gauge rows per corpus.
+//!
 //! Like `retrieval_exactness`, the sample self-trims under
 //! debug_assertions (and swaps λ = 50 → 30 on the truncated rows: the
 //! radius-floored cut keeps the identical sparse support while the
@@ -392,7 +398,11 @@ fn retrieval_never_stalls_engine_thread_deadline_flushes() {
     assert_eq!(snap.retrieval_offthread, 1);
     assert!(snap.retrieval_search_max_us > 0);
     assert_eq!(snap.retrieval_queue_depth, 0);
-    assert_eq!(snap.retrieval_shards.len(), 2, "{snap}");
+    // PR 8: shard gauges are keyed per corpus — one tenant registered,
+    // whose row carries both shards.
+    assert_eq!(snap.retrieval_shards.len(), 1, "{snap}");
+    assert_eq!(snap.retrieval_shards[0].corpus, 0, "{snap}");
+    assert_eq!(snap.retrieval_shards[0].shards.len(), 2, "{snap}");
     assert_eq!(snap.recall_probes, 1);
     assert!((snap.recall() - 1.0).abs() < 1e-12);
 
@@ -419,5 +429,136 @@ fn retrieval_never_stalls_engine_thread_deadline_flushes() {
     } else {
         eprintln!("search finished too quickly to overlap; stall assertion skipped");
     }
+    svc.shutdown();
+}
+
+/// PR 8 tenant isolation: with two retrieval dispatchers, searches of a
+/// small corpus B must keep completing *while* a large corpus A is being
+/// registered (index build = the heaviest bulk job), because the two
+/// corpora own separate mailboxes. Under the PR 5 single-loop design
+/// every B search submitted behind A's registration waited out the whole
+/// build. Afterwards, a blocking insert → search → tombstone → search
+/// sequence on B checks that per-corpus submission order survived the
+/// dispatcher refactor, and the stats snapshot must key both tenants.
+#[test]
+fn tenant_b_searches_complete_during_tenant_a_registration() {
+    use sinkhorn_rs::coordinator::{
+        CoordinatorConfig, CorpusId, DistanceService, MetricId, RetrievalQuery,
+    };
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    let mut config = CoordinatorConfig::cpu_only();
+    config.cpu_workers = 2;
+    config.retrieval_shards = 1;
+    config.retrieval_threads = 1;
+    config.retrieval_dispatchers = 2;
+    let svc = DistanceService::start(config).unwrap();
+    let mut rng = seeded_rng(8800);
+
+    // Tenant B: tiny corpus, searches return in well under a millisecond.
+    let db = 8;
+    let mb = RandomMetric::new(db).sample(&mut rng);
+    svc.register_metric(MetricId(1), mb).unwrap();
+    let corpus_b: Vec<Histogram> =
+        (0..64).map(|_| Histogram::sample_uniform(db, &mut rng)).collect();
+    svc.register_corpus(CorpusId(1), MetricId(1), 9.0, corpus_b).unwrap();
+    let qb = Histogram::sample_uniform(db, &mut rng);
+    let search_b = |k: usize| {
+        svc.retrieve(RetrievalQuery { corpus: CorpusId(1), r: qb.clone(), k })
+            .unwrap()
+    };
+    // Warm B once so executor spin-up is not part of the timed window.
+    assert_eq!(search_b(3).hits.len(), 3);
+
+    // Tenant A: large enough that the index build takes observable time.
+    let da = 32;
+    let na = release_else(6000, 400);
+    let ma = RandomMetric::new(da).sample(&mut rng);
+    svc.register_metric(MetricId(0), ma).unwrap();
+    let corpus_a: Vec<Histogram> =
+        (0..na).map(|_| Histogram::sample_uniform(da, &mut rng)).collect();
+
+    let done = AtomicBool::new(false);
+    let (started_tx, started_rx) = channel::<()>();
+    let (during, wall) = std::thread::scope(|scope| {
+        let svc = &svc;
+        let done = &done;
+        let handle = scope.spawn(move || {
+            let t0 = Instant::now();
+            started_tx.send(()).unwrap();
+            let indexed = svc
+                .register_corpus(CorpusId(0), MetricId(0), 9.0, corpus_a)
+                .unwrap();
+            done.store(true, Ordering::SeqCst);
+            (indexed, t0.elapsed())
+        });
+        // Only count B round trips that start after A's registration was
+        // handed off and finish before its ack lands: completions
+        // strictly inside A's registration window.
+        started_rx.recv().unwrap();
+        let mut during = 0u64;
+        while !done.load(Ordering::SeqCst) {
+            assert_eq!(search_b(3).hits.len(), 3);
+            if !done.load(Ordering::SeqCst) {
+                during += 1;
+            }
+        }
+        let (indexed, wall) = handle.join().unwrap();
+        assert_eq!(indexed, na);
+        (during, wall)
+    });
+    eprintln!(
+        "corpus A registration {} us, {during} corpus-B searches completed inside it",
+        wall.as_micros()
+    );
+    // Timing-guarded like the stall test above: on a machine that builds
+    // A's index faster than a couple of B round trips there is nothing
+    // to measure. `during >= 2` rules out the one search that can race
+    // ahead of the registration message.
+    if wall.as_millis() > 50 {
+        assert!(
+            during >= 2,
+            "corpus B starved during corpus A's registration: only {during} \
+             searches completed in {} ms",
+            wall.as_millis()
+        );
+    } else {
+        eprintln!("registration finished too quickly to overlap; isolation assertion skipped");
+    }
+
+    // Per-corpus submission order: each blocking call below acks through
+    // B's mailbox, so the next observes exactly the previous one's
+    // effect — an interleaved dispatcher that reordered within a corpus
+    // would surface the duplicate late or resurrect the tombstone.
+    let dup = svc.corpus_insert(CorpusId(1), qb.clone()).unwrap();
+    assert_eq!(dup, 64, "fresh corpus-global id");
+    let top = search_b(1);
+    assert_eq!(top.hits[0].entry, dup, "inserted duplicate must rank first");
+    assert!(svc.corpus_tombstone(CorpusId(1), dup).unwrap());
+    let hidden = search_b(3);
+    assert!(
+        hidden.hits.iter().all(|h| h.entry != dup),
+        "tombstoned entry resurfaced: {:?}",
+        hidden.hits
+    );
+
+    // Both tenants keyed in one snapshot (satellite of the gauge-
+    // clobbering fix): corpus 0 and corpus 1 rows coexist, and B's row
+    // carries the searches we just ran.
+    let snap = svc.stats().unwrap();
+    let keys: Vec<u32> = snap.retrieval_shards.iter().map(|c| c.corpus).collect();
+    assert_eq!(keys, vec![0, 1], "{snap}");
+    // Warm search + the counted window searches + the two ordering
+    // searches, at minimum (the window's last uncounted round trip may
+    // add one more).
+    let row_b = &snap.retrieval_shards[1];
+    assert!(
+        row_b.searches >= during + 3,
+        "corpus B searches under-counted: {} vs at least {}",
+        row_b.searches,
+        during + 3
+    );
     svc.shutdown();
 }
