@@ -9,7 +9,10 @@
 //! cross-checks a sample of results against the CPU engine, and finishes
 //! with the retrieval path: a clustered corpus is ingested
 //! (`register_corpus`) and served top-k queries through the pruned
-//! bound-then-refine cascade, with prune/recall statistics.
+//! bound-then-refine cascade, with prune/recall statistics. Tracing is
+//! on for every query (PR 9): the demo prints the per-stage latency
+//! breakdown and exports the last retrieval's span tree to
+//! `trace_demo.json` for Perfetto.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo
@@ -23,6 +26,7 @@ use sinkhorn_rs::coordinator::{
 };
 use sinkhorn_rs::prelude::*;
 use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig, SolveBudget};
+use sinkhorn_rs::trace::{chrome_trace, Stage};
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -53,6 +57,10 @@ fn main() {
         anneal: LambdaSchedule::geometric(1.0),
         retrieval_probe_every: 4,
         retrieval_shards: 3,
+        // PR 9: trace every query (a demo wants a full picture; serving
+        // defaults sample 1/64) so the stage table below is dense and
+        // the exported flame graph always exists.
+        trace: Some(TraceConfig { sample_every: 1, ring_capacity: 4096 }),
         ..Default::default()
     })
     .expect("service start");
@@ -267,6 +275,37 @@ fn main() {
                 g.searches,
                 g.last_search_us,
             );
+        }
+    }
+
+    // End-to-end tracing (PR 9): every query above was sampled. The
+    // snapshot's stage table decomposes latency per pipeline stage and
+    // tenant; the last retrieval's full span tree is exported as Chrome
+    // trace-event JSON — load trace_demo.json at https://ui.perfetto.dev
+    // (or chrome://tracing) to see one query as a flame graph.
+    println!("\nstage breakdown (per-stage span-duration quantiles, µs):");
+    for row in &stats.stages {
+        println!(
+            "  {:>8}[{}]: n={} p50~{} p99~{} max={}",
+            row.stage, row.tenant, row.count, row.p50_us, row.p99_us, row.max_us,
+        );
+    }
+    println!(
+        "traces: {} sampled, {} spans collected, {} dropped",
+        stats.traces_sampled, stats.trace_spans, stats.trace_spans_dropped,
+    );
+    let sink = service.trace_sink().expect("tracing is on in this demo");
+    let spans = sink.sampled_spans();
+    if let Some(root) = spans.iter().rev().find(|s| s.stage == Stage::Retrieve) {
+        let tree: Vec<_> =
+            spans.iter().copied().filter(|s| s.trace == root.trace).collect();
+        let doc = chrome_trace(&tree);
+        match std::fs::write("trace_demo.json", format!("{doc}\n")) {
+            Ok(()) => println!(
+                "exported the last retrieval's {} spans to trace_demo.json",
+                tree.len(),
+            ),
+            Err(e) => eprintln!("could not write trace_demo.json: {e}"),
         }
     }
     service.shutdown();

@@ -21,6 +21,7 @@ use crate::sinkhorn::{
     fingerprint_pair, ScalingInit, SinkhornConfig, SinkhornOutput, SolveBudget,
     SolveOutcome, WarmKey, WarmStartStore,
 };
+use crate::trace::{ctx, PanelTrace};
 use crate::F;
 use std::time::{Duration, Instant};
 
@@ -359,10 +360,29 @@ impl ShardedExecutor {
         inits: &[ScalingInit],
         budget: SolveBudget,
     ) -> (Vec<SolveOutcome>, Vec<ShardReport>) {
+        self.solve_panel_outcomes_traced(rs, cs, inits, budget, None)
+    }
+
+    /// [`Self::solve_panel_outcomes`] with optional PR 9 trace
+    /// attribution: `trace.traces[j]` (if any) owns panel column `j`, and
+    /// each shard worker gets its sub-slice installed as the thread-local
+    /// panel context so the budgeted drivers can emit per-slice spans.
+    /// `trace: None` is byte-for-byte the untraced path.
+    pub fn solve_panel_outcomes_traced(
+        &mut self,
+        rs: &[&Histogram],
+        cs: &[Histogram],
+        inits: &[ScalingInit],
+        budget: SolveBudget,
+        trace: Option<PanelTrace>,
+    ) -> (Vec<SolveOutcome>, Vec<ShardReport>) {
         let n = cs.len();
         assert_eq!(rs.len(), n, "paired panel size mismatch");
         if !inits.is_empty() {
             assert_eq!(inits.len(), n, "warm-start slice size mismatch");
+        }
+        if let Some(t) = &trace {
+            assert_eq!(t.traces.len(), n, "panel trace size mismatch");
         }
         if n == 0 {
             return (Vec::new(), Vec::new());
@@ -370,6 +390,7 @@ impl ShardedExecutor {
         let kernel = self.kernel_stats();
         let shards = self.backends.len().min(n);
         if shards <= 1 {
+            let _trace_guard = trace.map(|t| ctx::set_panel(t.sink, t.tenant, t.traces));
             let t0 = Instant::now();
             let out = self.backends[0].solve_paired_outcomes(rs, cs, inits, budget);
             let report = ShardReport {
@@ -395,8 +416,19 @@ impl ShardedExecutor {
             {
                 let rs_shard = &rs[range.clone()];
                 let cs_shard = &cs[range.clone()];
+                // Thread-locals don't cross scoped spawns: hand each
+                // worker its column window to re-install as panel ctx.
+                let trace_shard = trace.as_ref().map(|t| {
+                    (
+                        std::sync::Arc::clone(&t.sink),
+                        t.tenant,
+                        t.traces[range.clone()].to_vec(),
+                    )
+                });
                 let inits_shard = if inits.is_empty() { &[] } else { &inits[range] };
                 handles.push(scope.spawn(move || {
+                    let _trace_guard = trace_shard
+                        .map(|(sink, tenant, cols)| ctx::set_panel(sink, tenant, cols));
                     let t0 = Instant::now();
                     let out = backend.solve_paired_outcomes(
                         rs_shard, cs_shard, inits_shard, budget,

@@ -94,6 +94,12 @@ pub struct ReadyBatch<T> {
     pub items: Vec<T>,
     /// Queue latency of the oldest member at flush time.
     pub oldest_wait: Duration,
+    /// True when the *size trigger* released this batch (the class filled
+    /// to `max_batch`); false for deadline flushes and shutdown drains.
+    /// Carried into the PR 9 batcher span payload so a flame graph shows
+    /// whether a query waited for a full batch or timed out into a
+    /// partial one.
+    pub full: bool,
 }
 
 /// Per-class pending queues with size/deadline flush triggers.
@@ -131,13 +137,18 @@ impl<T> PendingBatcher<T> {
         queue.push(Entry { item, enqueued: now });
         self.len += 1;
         if queue.len() >= self.config.max_batch {
-            return self.take(class, now);
+            return self.take(class, now, true);
         }
         None
     }
 
     /// Remove and return the batch for one class (None if empty).
-    fn take(&mut self, class: ShapeClass, now: Instant) -> Option<ReadyBatch<T>> {
+    fn take(
+        &mut self,
+        class: ShapeClass,
+        now: Instant,
+        full: bool,
+    ) -> Option<ReadyBatch<T>> {
         let entries = self.queues.remove(&class)?;
         if entries.is_empty() {
             return None;
@@ -148,6 +159,7 @@ impl<T> PendingBatcher<T> {
             class,
             items: entries.into_iter().map(|e| e.item).collect(),
             oldest_wait: now.saturating_duration_since(oldest),
+            full,
         })
     }
 
@@ -165,7 +177,7 @@ impl<T> PendingBatcher<T> {
             .collect();
         expired
             .into_iter()
-            .filter_map(|k| self.take(k, now))
+            .filter_map(|k| self.take(k, now, false))
             .collect()
     }
 
@@ -182,7 +194,9 @@ impl<T> PendingBatcher<T> {
     /// Drain everything (shutdown path).
     pub fn drain(&mut self, now: Instant) -> Vec<ReadyBatch<T>> {
         let keys: Vec<ShapeClass> = self.queues.keys().copied().collect();
-        keys.into_iter().filter_map(|k| self.take(k, now)).collect()
+        keys.into_iter()
+            .filter_map(|k| self.take(k, now, false))
+            .collect()
     }
 }
 
@@ -221,6 +235,7 @@ mod tests {
         assert!(b.push(class(0, 16, 9.0), 2, t).is_none());
         let ready = b.push(class(0, 16, 9.0), 3, t).expect("third fills");
         assert_eq!(ready.items, vec![1, 2, 3]);
+        assert!(ready.full, "size trigger marks the batch full");
         assert!(b.is_empty());
     }
 
@@ -250,6 +265,7 @@ mod tests {
         let ready = b.poll_expired(t0 + Duration::from_millis(6));
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].items, vec![1]);
+        assert!(!ready[0].full, "deadline flush is not a full batch");
         assert!(ready[0].oldest_wait >= Duration::from_millis(5));
         // At +9ms the second follows.
         let ready = b.poll_expired(t0 + Duration::from_millis(9));

@@ -3,6 +3,8 @@
 use crate::linalg::KernelStats;
 use crate::retrieval::{CorpusKey, RetrievalReport, RuntimeFeedback, ShardGauges};
 use crate::sinkhorn::SolveOutcome;
+use crate::trace::StageRow;
+use crate::util::histogram::Log2Histogram;
 use crate::util::saturating_micros;
 use crate::F;
 use std::collections::BTreeMap;
@@ -20,9 +22,9 @@ pub struct Stats {
     pub batched_queries: u64,
     /// Latency accumulators (microseconds).
     lat_sum_us: u128,
-    lat_max_us: u64,
-    /// Simple log2 histogram of latency in µs: bucket i = [2^i, 2^{i+1}).
-    lat_buckets: [u64; 32],
+    /// Log2 histogram of latency in µs (shared [`Log2Histogram`] since
+    /// PR 9 — it also tracks the observed max the quantiles clamp to).
+    lat: Log2Histogram,
     /// Per-worker occupancy of the CPU panel executor (index = worker).
     workers: Vec<WorkerSnapshot>,
     /// Kernel structure of the most recently used CPU executor, with
@@ -89,8 +91,10 @@ pub struct Stats {
     certified: u64,
     /// Log2 histogram of certified interval widths quantized to ppb
     /// (1e-9 d^λ units): bucket i = [2^i, 2^{i+1}) ppb.
-    width_buckets: [u64; 32],
-    /// Widest certified interval observed.
+    width: Log2Histogram,
+    /// Widest certified interval observed, kept in exact `F` units (the
+    /// histogram's own max lives in the quantized ppb domain and would
+    /// round the clamp).
     width_max: F,
 }
 
@@ -111,6 +115,11 @@ pub struct CorpusGauges {
     /// dispatch (the per-tenant slice of
     /// [`StatsSnapshot::retrieval_hol_blocked_us`]).
     pub hol_blocked_us: u64,
+    /// Σ µs spent building/rebuilding this corpus's sharded index inside
+    /// `register_corpus` (PR 9). `queued_us` measures mailbox *wait*;
+    /// this measures the bulk-lane *work* that caused it, so one tenant's
+    /// registration pressure is attributable from the same row.
+    pub build_us: u64,
     /// Per-shard gauges from the corpus's latest feedback push.
     pub shards: Vec<ShardGauges>,
 }
@@ -200,6 +209,7 @@ impl Stats {
             row.corpus = feedback.corpus;
             row.shards = feedback.gauges.clone();
             row.hol_blocked_us = row.hol_blocked_us.saturating_add(feedback.queued_us);
+            row.build_us = row.build_us.saturating_add(feedback.build_us);
             if feedback.report.is_some() {
                 row.searches += 1;
             }
@@ -255,8 +265,7 @@ impl Stats {
         // Quantize to ppb so the log2 bucketing has an integer to bite
         // on; sub-ppb widths land in the bottom bucket.
         let ppb = (width * 1e9).min(u64::MAX as F) as u64;
-        let bucket = (64 - ppb.max(1).leading_zeros() as usize - 1).min(31);
-        self.width_buckets[bucket] += 1;
+        self.width.record(ppb);
     }
 
     pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
@@ -273,9 +282,7 @@ impl Stats {
         self.queries += 1;
         let us = saturating_micros(latency);
         self.lat_sum_us += us as u128;
-        self.lat_max_us = self.lat_max_us.max(us);
-        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
-        self.lat_buckets[bucket] += 1;
+        self.lat.record(us);
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -295,9 +302,9 @@ impl Stats {
             } else {
                 0
             },
-            max_latency_us: self.lat_max_us,
-            p99_latency_us: self.quantile_us(0.99),
-            p50_latency_us: self.quantile_us(0.50),
+            max_latency_us: self.lat.observed_max(),
+            p99_latency_us: self.lat.quantile(0.99),
+            p50_latency_us: self.lat.quantile(0.50),
             warm_hits: self.workers.iter().map(|w| w.warm_hits).sum(),
             warm_misses: self.workers.iter().map(|w| w.warm_misses).sum(),
             workers: self.workers.clone(),
@@ -332,53 +339,49 @@ impl Stats {
             interval_width_p50: self.width_quantile(0.50),
             interval_width_p99: self.width_quantile(0.99),
             interval_width_max: self.width_max,
+            stages: Vec::new(),
+            traces_sampled: 0,
+            trace_spans: 0,
+            trace_spans_dropped: 0,
         }
     }
 
-    /// Approximate quantile from the log2 histogram: the upper edge of
-    /// the bucket holding the target rank, clamped to the observed
-    /// maximum. The raw edge overstates the quantile by up to one full
-    /// bucket (2×) whenever the true maximum sits low in its bucket —
-    /// with every sample at 100 µs the p99 used to read 128 µs. The
-    /// clamp makes single-bucket distributions exact and caps the
-    /// quantization error at the observed range.
-    fn quantile_us(&self, q: f64) -> u64 {
-        let total: u64 = self.lat_buckets.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &count) in self.lat_buckets.iter().enumerate() {
-            seen += count;
-            if seen >= target {
-                return (1u64 << (i + 1)).min(self.lat_max_us);
-            }
-        }
-        self.lat_max_us
-    }
-
-    /// Approximate interval-width quantile (upper bucket edge, back in
-    /// absolute d^λ units), clamped to the observed maximum exactly
-    /// like [`Self::quantile_us`].
+    /// Approximate interval-width quantile: the upper bucket edge mapped
+    /// back from ppb into absolute d^λ units, clamped to the *exact*
+    /// observed maximum (`width_max` is kept in `F`, not the quantized
+    /// domain, so single-bucket distributions stay exact — the same PR 7
+    /// clamp [`Log2Histogram::quantile`] applies in the integer domain).
     fn width_quantile(&self, q: f64) -> F {
-        let total: u64 = self.width_buckets.iter().sum();
-        if total == 0 {
+        if self.width.is_empty() {
             return 0.0;
         }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &count) in self.width_buckets.iter().enumerate() {
-            seen += count;
-            if seen >= target {
-                return ((1u64 << (i + 1)) as F * 1e-9).min(self.width_max);
-            }
+        match self.width.quantile_bucket(q) {
+            Some(i) => ((1u64 << (i + 1)) as F * 1e-9).min(self.width_max),
+            None => self.width_max,
         }
-        self.width_max
     }
 }
 
 /// Immutable snapshot returned to callers.
+///
+/// The `Display` rendering is one line of space-separated sections, each
+/// printed only when it has something to say:
+///
+/// * the always-present header — `queries= batches= (xla=, cpu=) errors=
+///   mean_batch= lat_us(mean=, p50~, p99~, max=)`;
+/// * `workers=[..] balance=` — per-worker executor occupancy;
+/// * `warm(hits=, misses=, rate=)` — warm-start store traffic;
+/// * `kernel(nnz=, density=, rank=, mass_loss=)` — kernel structure;
+/// * `anytime(certified=, width(p50~, p99~, max=), deadline_miss=,
+///   shed=)` — certified-interval gauges;
+/// * `retrieval(..)`, `rinterval(..)`, `routing(..)`, `recall(..)`,
+///   `rsearch(..)` — retrieval pipeline gauges;
+/// * `corpora={..} fairness=` — per-tenant rows (with ` build=`µs after
+///   `hol_us=` once a tenant has accumulated index-build time);
+/// * `stages={stage[tenant]: n= p50~ p99~ ..} traces(sampled=, spans=,
+///   dropped=)` — the PR 9 `stage_breakdown` section, present once
+///   tracing is enabled and at least one span was collected: clamped
+///   log2-histogram p50/p99 of span duration per (stage, tenant).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsSnapshot {
     pub queries: u64,
@@ -476,6 +479,18 @@ pub struct StatsSnapshot {
     pub interval_width_p99: F,
     /// Widest certified interval served.
     pub interval_width_max: F,
+    /// PR 9 `stage_breakdown`: per-(stage, tenant) span-duration
+    /// quantiles from the tracing collector, in ascending (stage,
+    /// tenant) order. Empty when tracing is off (`CoordinatorConfig::
+    /// trace` unset) or no span has been collected yet.
+    pub stages: Vec<StageRow>,
+    /// Queries/retrievals that passed the trace sampling gate.
+    pub traces_sampled: u64,
+    /// Spans folded by the trace collector.
+    pub trace_spans: u64,
+    /// Spans lost to ring overflow or recording contention — nonzero
+    /// means `TraceConfig::ring_capacity` is too small for the traffic.
+    pub trace_spans_dropped: u64,
 }
 
 impl StatsSnapshot {
@@ -671,9 +686,13 @@ impl std::fmt::Display for StatsSnapshot {
                 }
                 write!(
                     f,
-                    "c{}(q={} s={} hol_us={})[",
+                    "c{}(q={} s={} hol_us={}",
                     c.corpus, c.queue_depth, c.searches, c.hol_blocked_us
                 )?;
+                if c.build_us > 0 {
+                    write!(f, " build_us={}", c.build_us)?;
+                }
+                write!(f, ")[")?;
                 for (j, g) in c.shards.iter().enumerate() {
                     if j > 0 {
                         write!(f, ", ")?;
@@ -691,6 +710,24 @@ impl std::fmt::Display for StatsSnapshot {
                 write!(f, "]")?;
             }
             write!(f, "}} fairness={:.2}", self.retrieval_fairness())?;
+        }
+        if !self.stages.is_empty() {
+            write!(f, " stages={{")?;
+            for (i, row) in self.stages.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(
+                    f,
+                    "{}[{}](n={} p50~{} p99~{} max={})",
+                    row.stage, row.tenant, row.count, row.p50_us, row.p99_us, row.max_us
+                )?;
+            }
+            write!(
+                f,
+                "}} traces(sampled={}, spans={}, dropped={})",
+                self.traces_sampled, self.trace_spans, self.trace_spans_dropped
+            )?;
         }
         Ok(())
     }
@@ -1013,6 +1050,7 @@ mod tests {
             report: Some(report),
             search_us: 900,
             queued_us: 40,
+            build_us: 0,
             failed: false,
             invalidated: false,
             gauges: vec![gauge(0, 50), gauge(1, 49)],
@@ -1022,6 +1060,7 @@ mod tests {
             report: Some(report),
             search_us: 100,
             queued_us: 10,
+            build_us: 0,
             failed: false,
             invalidated: false,
             gauges: vec![gauge(0, 50), gauge(1, 48)],
@@ -1034,6 +1073,7 @@ mod tests {
             report: Some(report),
             search_us: 300,
             queued_us: 0,
+            build_us: 0,
             failed: false,
             invalidated: false,
             gauges: vec![gauge(0, 9)],
@@ -1044,6 +1084,7 @@ mod tests {
             report: None,
             search_us: 0,
             queued_us: 0,
+            build_us: 0,
             failed: true,
             invalidated: false,
             gauges: Vec::new(),
@@ -1082,6 +1123,7 @@ mod tests {
             report: None,
             search_us: 0,
             queued_us: 0,
+            build_us: 0,
             failed: false,
             invalidated: false,
             gauges: vec![ShardGauges {
@@ -1106,6 +1148,7 @@ mod tests {
             report: None,
             search_us: 0,
             queued_us: 0,
+            build_us: 0,
             failed: false,
             invalidated: true,
             gauges: Vec::new(),
@@ -1114,6 +1157,66 @@ mod tests {
         assert_eq!(snap.retrieval_shards.len(), 1);
         assert_eq!(snap.retrieval_shards[0].corpus, 5);
         assert_eq!(snap.errors, 0, "a clean invalidation is not an error");
+    }
+
+    #[test]
+    fn build_feedback_accumulates_and_renders_once_nonzero() {
+        use crate::retrieval::{RuntimeFeedback, ShardGauges};
+        let mut s = Stats::default();
+        let push = |build_us: u64| RuntimeFeedback {
+            corpus: 7,
+            report: None,
+            search_us: 0,
+            queued_us: 0,
+            build_us,
+            failed: false,
+            invalidated: false,
+            gauges: vec![ShardGauges {
+                shard: 0,
+                entries: 4,
+                live: 4,
+                tombstone_fraction: 0.0,
+                compactions: 0,
+                inserts: 4,
+                searches: 0,
+                last_search_us: 0,
+            }],
+        };
+        s.record_runtime(&push(0));
+        let snap = s.snapshot();
+        assert_eq!(snap.retrieval_shards[0].build_us, 0);
+        assert!(
+            !snap.to_string().contains("build_us="),
+            "zero build time stays out of the corpora row"
+        );
+        // Registration then a later re-shard: build time accumulates.
+        s.record_runtime(&push(1200));
+        s.record_runtime(&push(300));
+        let snap = s.snapshot();
+        assert_eq!(snap.retrieval_shards[0].build_us, 1500);
+        assert!(snap.to_string().contains("c7(q=0 s=0 hol_us=0 build_us=1500)["));
+    }
+
+    #[test]
+    fn stage_breakdown_renders_only_when_traced() {
+        let s = Stats::default();
+        let mut snap = s.snapshot();
+        assert!(snap.stages.is_empty());
+        assert!(!snap.to_string().contains("stages={"));
+        snap.stages = vec![StageRow {
+            stage: "batcher",
+            tenant: "m0".to_string(),
+            count: 5,
+            p50_us: 128,
+            p99_us: 1000,
+            max_us: 1000,
+        }];
+        snap.traces_sampled = 2;
+        snap.trace_spans = 5;
+        snap.trace_spans_dropped = 0;
+        let line = snap.to_string();
+        assert!(line.contains("stages={batcher[m0](n=5 p50~128 p99~1000 max=1000)}"));
+        assert!(line.contains("traces(sampled=2, spans=5, dropped=0)"));
     }
 
     #[test]

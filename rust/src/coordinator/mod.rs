@@ -282,6 +282,17 @@ pub struct CoordinatorConfig {
     /// priority among queued jobs). Counts beyond the number of
     /// concurrently active corpora buy nothing.
     pub retrieval_dispatchers: usize,
+    /// End-to-end query tracing (PR 9): every `sample_every`-th
+    /// query/retrieval mints a [`crate::trace::TraceId`] and records
+    /// typed spans across batcher, solve slices, dispatcher mailboxes
+    /// and shard walks, surfaced as the snapshot's `stage_breakdown`
+    /// rows and exportable as Chrome trace-event JSON
+    /// ([`DistanceService::trace_sink`] +
+    /// [`crate::trace::chrome_trace`]). `None` (the default) keeps
+    /// tracing compiled out of the hot path behind `Option` branches:
+    /// no timestamp reads, no allocation, all PR 1–8 bit-identity and
+    /// latency contracts untouched.
+    pub trace: Option<crate::trace::TraceConfig>,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -331,6 +342,7 @@ impl Default for CoordinatorConfig {
             retrieval_budget: SolveBudget::Unbounded,
             retrieval_routing: None,
             retrieval_dispatchers: 0,
+            trace: None,
         }
     }
 }
@@ -382,6 +394,9 @@ impl CoordinatorConfig {
             routing
                 .validate()
                 .map_err(|e| format!("retrieval_routing: {e}"))?;
+        }
+        if let Some(trace) = &self.trace {
+            trace.validate()?;
         }
         if self.shed_iterations == Some(0) {
             return Err(
@@ -539,6 +554,12 @@ impl CoordinatorConfigBuilder {
         self
     }
 
+    /// See [`CoordinatorConfig::trace`].
+    pub fn trace(mut self, trace: crate::trace::TraceConfig) -> Self {
+        self.config.trace = Some(trace);
+        self
+    }
+
     /// Validate and produce the config; `Err` names the offending knob.
     pub fn build(self) -> Result<CoordinatorConfig, String> {
         self.config.validate()?;
@@ -573,6 +594,10 @@ mod tests {
             .shed_iterations(16)
             .retrieval_budget(SolveBudget::Iterations(64))
             .retrieval_routing(crate::retrieval::RoutingConfig::default())
+            .trace(crate::trace::TraceConfig {
+                sample_every: 8,
+                ring_capacity: 512,
+            })
             .build()
             .unwrap();
         assert!(config.artifact_dir.is_none());
@@ -590,6 +615,33 @@ mod tests {
             config.retrieval_routing,
             Some(crate::retrieval::RoutingConfig::default())
         );
+        assert_eq!(
+            config.trace,
+            Some(crate::trace::TraceConfig {
+                sample_every: 8,
+                ring_capacity: 512,
+            })
+        );
+    }
+
+    #[test]
+    fn malformed_trace_config_is_rejected() {
+        let err = CoordinatorConfig::builder()
+            .trace(crate::trace::TraceConfig {
+                sample_every: 0,
+                ring_capacity: 512,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("sample_every"), "{err}");
+        let err = CoordinatorConfig::builder()
+            .trace(crate::trace::TraceConfig {
+                sample_every: 1,
+                ring_capacity: 0,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("ring_capacity"), "{err}");
     }
 
     #[test]

@@ -29,9 +29,11 @@ use crate::retrieval::{
 use crate::runtime::{RuntimeError, XlaRuntime};
 use crate::simplex::Histogram;
 use crate::sinkhorn::{SinkhornConfig, SolveBudget, SolveOutcome};
+use crate::trace::{ctx, PanelTrace, Span, SpanData, Stage, Tenant, TraceId, TraceSink};
 use crate::F;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -77,6 +79,10 @@ impl std::error::Error for ServiceError {}
 struct Job {
     query: Query,
     enqueued: Instant,
+    /// PR 9: minted at accept time for every `sample_every`-th accepted
+    /// query when tracing is on; rides through the batcher so the solve
+    /// panel can attribute per-slice spans back to this query.
+    trace: Option<TraceId>,
     respond: Sender<Result<QueryResult, ServiceError>>,
 }
 
@@ -128,6 +134,9 @@ enum Message {
 pub struct DistanceService {
     tx: Sender<Message>,
     handle: Option<JoinHandle<()>>,
+    /// The tracing sink shared with the engine thread (None unless
+    /// [`CoordinatorConfig::trace`] is set).
+    trace: Option<Arc<TraceSink>>,
 }
 
 /// Cheap cloneable submission handle.
@@ -156,6 +165,11 @@ impl DistanceService {
         // Builder-made configs already passed this; re-running it keeps
         // struct-literal configs equally safe.
         config.validate().map_err(ServiceError::InvalidConfig)?;
+        // The trace sink is shared: the engine thread (and everything
+        // it fans out to) records into it, the handle exposes it for
+        // export. `None` keeps every hot path on the untraced branch.
+        let sink = config.trace.map(TraceSink::new);
+        let engine_sink = sink.clone();
         let (tx, rx) = channel();
         let (init_tx, init_rx) = channel::<Result<(), ServiceError>>();
         let handle = std::thread::Builder::new()
@@ -180,11 +194,11 @@ impl DistanceService {
                     None => None,
                 };
                 let _ = init_tx.send(Ok(()));
-                EngineThread::new(config, runtime, rx).run()
+                EngineThread::new(config, runtime, rx, engine_sink).run()
             })
             .expect("spawn engine thread");
         match init_rx.recv() {
-            Ok(Ok(())) => Ok(Self { tx, handle: Some(handle) }),
+            Ok(Ok(())) => Ok(Self { tx, handle: Some(handle), trace: sink }),
             Ok(Err(e)) => {
                 let _ = handle.join();
                 Err(e)
@@ -343,6 +357,14 @@ impl DistanceService {
         rx.recv().map_err(|_| ServiceError::Stopped)
     }
 
+    /// The tracing sink, when [`CoordinatorConfig::trace`] is set: read
+    /// sampled spans ([`TraceSink::sampled_spans`] /
+    /// [`TraceSink::trace_spans`]) or feed them to
+    /// [`crate::trace::chrome_trace`] for a Perfetto-loadable export.
+    pub fn trace_sink(&self) -> Option<Arc<TraceSink>> {
+        self.trace.clone()
+    }
+
     /// Graceful shutdown: drains pending work, then joins the thread.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -372,7 +394,7 @@ impl ServiceClient {
     /// Async submit: returns a receiver for this query's result.
     pub fn submit(&self, query: Query) -> Result<Receiver<Result<QueryResult, ServiceError>>, ServiceError> {
         let (tx, rx) = channel();
-        let job = Job { query, enqueued: Instant::now(), respond: tx };
+        let job = Job { query, enqueued: Instant::now(), trace: None, respond: tx };
         self.tx.send(Message::Query(job)).map_err(|_| ServiceError::Stopped)?;
         Ok(rx)
     }
@@ -425,6 +447,9 @@ struct EngineThread {
     feedback_rx: Receiver<RuntimeFeedback>,
     pending: PendingBatcher<Job>,
     stats: Stats,
+    /// PR 9 tracing sink (None = tracing off; every record site
+    /// branches on this Option and costs nothing when unset).
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl EngineThread {
@@ -432,6 +457,7 @@ impl EngineThread {
         config: CoordinatorConfig,
         runtime: Option<XlaRuntime>,
         rx: Receiver<Message>,
+        trace: Option<Arc<TraceSink>>,
     ) -> Self {
         let pending =
             PendingBatcher::new(config.batcher.effective(config.cpu_workers));
@@ -447,6 +473,7 @@ impl EngineThread {
             feedback_rx,
             pending,
             stats: Stats::default(),
+            trace,
         }
     }
 
@@ -504,11 +531,22 @@ impl EngineThread {
                         let _ = respond
                             .send(Err(ServiceError::UnknownCorpus(query.corpus)));
                     } else {
-                        self.retrieval_runtime().search(
+                        // Mint the retrieval's trace here (the sampling
+                        // gate lives with the sink); it crosses the
+                        // mailbox inside the job.
+                        let trace = self.trace.as_ref().and_then(|sink| {
+                            sink.sample().map(|id| ctx::ActiveTrace {
+                                sink: Arc::clone(sink),
+                                trace: id,
+                                tenant: Tenant::Corpus(query.corpus.0),
+                            })
+                        });
+                        self.retrieval_runtime().search_traced(
                             query.corpus.0,
                             query.r,
                             query.k,
                             enqueued,
+                            trace,
                             Box::new(move |res: Result<SearchOutcome, _>| {
                                 let _ = respond.send(
                                     res.map(|o| RetrievalOutcome {
@@ -579,7 +617,14 @@ impl EngineThread {
                         .map(|rt| rt.corpus_depths())
                         .unwrap_or_default();
                     self.stats.set_corpus_queue_depths(&corpus_depths);
-                    let _ = tx.send(self.stats.snapshot());
+                    let mut snap = self.stats.snapshot();
+                    if let Some(sink) = &self.trace {
+                        snap.stages = sink.stage_rows();
+                        snap.traces_sampled = sink.sampled();
+                        snap.trace_spans = sink.span_count();
+                        snap.trace_spans_dropped = sink.dropped();
+                    }
+                    let _ = tx.send(snap);
                 }
                 Ok(Message::Warmup(tx)) => {
                     let res = match self.runtime.as_mut() {
@@ -678,7 +723,7 @@ impl EngineThread {
     }
 
     /// Validate and enqueue one query (or answer immediately on error).
-    fn accept(&mut self, job: Job) {
+    fn accept(&mut self, mut job: Job) {
         let metric = match self.metrics.get(&job.query.metric) {
             Some(m) => m,
             None => {
@@ -698,6 +743,9 @@ impl EngineThread {
                 .send(Err(ServiceError::DimensionMismatch { got, want: d }));
             return;
         }
+        // Sampling counts *accepted* queries, so rejects can't skew the
+        // 1-in-N cadence.
+        job.trace = self.trace.as_ref().and_then(|sink| sink.sample());
         let class = ShapeClass::new(job.query.metric, d, job.query.lambda);
         if let Some(ready) = self.pending.push(class, job, Instant::now()) {
             self.execute(ready);
@@ -708,10 +756,18 @@ impl EngineThread {
     fn execute(&mut self, batch: ReadyBatch<Job>) {
         let class = batch.class;
         let oldest_wait = batch.oldest_wait;
+        let full = batch.full;
         let jobs = batch.items;
         let size = jobs.len();
         let metric = self.metrics[&class.metric].clone();
         let lambda = class.lambda();
+        // Trace only when some member was sampled: an all-untraced
+        // batch (the common case) takes no timestamps at all.
+        let tsink = if jobs.iter().any(|j| j.trace.is_some()) {
+            self.trace.clone()
+        } else {
+            None
+        };
 
         // Anytime budget: queries sharing the batch share one panel, so
         // the batch runs under the *tightest* member budget. A flush
@@ -721,6 +777,7 @@ impl EngineThread {
         let mut budget = jobs
             .iter()
             .fold(SolveBudget::Unbounded, |acc, j| tightest(acc, j.query.budget));
+        let mut shed = false;
         if let Some(cap) = shed_cap(
             self.config.shed_iterations,
             oldest_wait,
@@ -728,7 +785,9 @@ impl EngineThread {
         ) {
             budget = tightest(budget, SolveBudget::Iterations(cap));
             self.stats.budget_sheds += size as u64;
+            shed = true;
         }
+        let solve_start = tsink.as_ref().map(|s| s.now_us());
 
         // Prefer the XLA runtime when it has an artifact for this d.
         let use_xla = self
@@ -746,7 +805,16 @@ impl EngineThread {
                     // computed, so the outcome interval is vacuous.
                     let outcomes: Vec<SolveOutcome> =
                         dists.into_iter().map(SolveOutcome::uncertified).collect();
-                    self.respond_all(jobs, outcomes, EngineKind::Xla, size);
+                    let trace = tsink.map(|sink| BatchTrace {
+                        solve_start: solve_start.unwrap_or(0),
+                        solve_end: sink.now_us(),
+                        sink,
+                        full,
+                        shed,
+                        warm_hits: 0,
+                        warm_misses: 0,
+                    });
+                    self.respond_all(jobs, outcomes, EngineKind::Xla, size, trace);
                     return;
                 }
                 Err(e) => {
@@ -830,7 +898,15 @@ impl EngineThread {
                 .collect();
             (outcomes, reports)
         } else {
-            executor.solve_panel_outcomes(&rs, &cs, &[], budget)
+            // Tag each panel column with its job's trace (None for
+            // untraced members) so `drive_budgeted` / the interleaved
+            // panel walk can emit per-slice interval spans.
+            let panel_trace = tsink.as_ref().map(|sink| PanelTrace {
+                sink: Arc::clone(sink),
+                tenant: Tenant::Metric(class.metric.0),
+                traces: jobs.iter().map(|j| j.trace).collect(),
+            });
+            executor.solve_panel_outcomes_traced(&rs, &cs, &[], budget, panel_trace)
         };
         // Kernel structure rides on the shard reports (identical across
         // a pool's workers — one record per batch is enough).
@@ -847,7 +923,16 @@ impl EngineThread {
             );
         }
         self.stats.record_batch(size, false);
-        self.respond_all(jobs, outcomes, EngineKind::Cpu, size);
+        let trace = tsink.map(|sink| BatchTrace {
+            solve_start: solve_start.unwrap_or(0),
+            solve_end: sink.now_us(),
+            sink,
+            full,
+            shed,
+            warm_hits: reports.iter().map(|r| r.warm_hits).sum(),
+            warm_misses: reports.iter().map(|r| r.warm_misses).sum(),
+        });
+        self.respond_all(jobs, outcomes, EngineKind::Cpu, size, trace);
     }
 
     fn execute_xla(
@@ -895,6 +980,7 @@ impl EngineThread {
         outcomes: Vec<SolveOutcome>,
         engine: EngineKind,
         batch_size: usize,
+        trace: Option<BatchTrace>,
     ) {
         debug_assert_eq!(jobs.len(), outcomes.len());
         let now = Instant::now();
@@ -907,6 +993,44 @@ impl EngineThread {
                     self.stats.deadline_misses += 1;
                 }
             }
+            // Three spans per traced member: batcher wait, the shared
+            // panel solve, and the whole-query root they nest under.
+            if let (Some(bt), Some(id)) = (&trace, job.trace) {
+                let tenant = Tenant::Metric(job.query.metric.0);
+                let enqueued_us = bt.sink.instant_us(job.enqueued);
+                bt.sink.record(Span {
+                    trace: id,
+                    stage: Stage::Batcher,
+                    tenant,
+                    start_us: enqueued_us,
+                    end_us: bt.solve_start,
+                    tid: 0,
+                    data: SpanData::Batch { size: batch_size, full: bt.full },
+                });
+                bt.sink.record(Span {
+                    trace: id,
+                    stage: Stage::Solve,
+                    tenant,
+                    start_us: bt.solve_start,
+                    end_us: bt.solve_end,
+                    tid: 0,
+                    data: SpanData::Solve {
+                        batch: batch_size,
+                        warm_hits: bt.warm_hits,
+                        warm_misses: bt.warm_misses,
+                        shed: bt.shed,
+                    },
+                });
+                bt.sink.record(Span {
+                    trace: id,
+                    stage: Stage::Query,
+                    tenant,
+                    start_us: enqueued_us,
+                    end_us: bt.sink.now_us(),
+                    tid: 0,
+                    data: SpanData::None,
+                });
+            }
             let _ = job.respond.send(Ok(QueryResult {
                 outcome,
                 engine,
@@ -915,6 +1039,23 @@ impl EngineThread {
             }));
         }
     }
+}
+
+/// Batch-level timing shared by every traced member of one flush,
+/// captured in [`EngineThread::execute`] and unpacked into per-query
+/// spans in [`EngineThread::respond_all`].
+struct BatchTrace {
+    sink: Arc<TraceSink>,
+    /// Sink-epoch µs at which the batch left the batcher for its solve.
+    solve_start: u64,
+    /// Sink-epoch µs at which the solve (XLA or CPU panel) returned.
+    solve_end: u64,
+    /// Whether the size trigger (vs a deadline/drain flush) released it.
+    full: bool,
+    /// Whether the backlog shed rule capped this batch's budget.
+    shed: bool,
+    warm_hits: usize,
+    warm_misses: usize,
 }
 
 /// The tighter of two anytime budgets — the one admitting less work.

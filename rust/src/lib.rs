@@ -60,6 +60,7 @@ pub mod retrieval;
 pub mod rng;
 pub mod runtime;
 pub mod simplex;
+pub mod trace;
 pub mod util;
 pub mod sinkhorn;
 pub mod svm;
@@ -92,5 +93,6 @@ pub mod prelude {
         WarmStartStore,
     };
     pub use crate::svm::{MulticlassSvm, SvmConfig};
+    pub use crate::trace::{TraceConfig, TraceSink};
     pub use crate::F;
 }

@@ -52,6 +52,8 @@ use super::shard::{ShardGauges, ShardedCorpus, ShardingConfig};
 use super::{Hit, RetrievalConfig, RetrievalError, RetrievalReport};
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
+use crate::trace::ctx::ActiveTrace;
+use crate::trace::{Span, SpanData, Stage};
 use crate::util::saturating_micros;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
@@ -145,6 +147,12 @@ pub struct RuntimeFeedback {
     /// queued jobs plus dispatcher contention, never from another
     /// tenant's serialized bulk work.
     pub queued_us: u64,
+    /// Time spent building the sharded index inside a registration (µs,
+    /// 0 for every other job). PR 9 closes the timing gap where index
+    /// builds — the dominant bulk-lane occupant — were invisible: the
+    /// coordinator accumulates this into
+    /// [`crate::coordinator::CorpusGauges::build_us`].
+    pub build_us: u64,
     /// Whether the job failed (unknown corpus or rejected input).
     pub failed: bool,
     /// The corpus stopped existing as a result of this job (metric
@@ -167,6 +175,9 @@ enum Job {
         query: Histogram,
         k: usize,
         enqueued: Instant,
+        /// PR 9: sampled queries carry their trace across the mailbox
+        /// hop (thread-locals don't cross the dispatcher boundary).
+        trace: Option<ActiveTrace>,
         respond: Callback<Result<SearchOutcome, RuntimeError>>,
     },
     Insert {
@@ -295,6 +306,7 @@ impl RetrievalRuntime {
                 report: None,
                 search_us: 0,
                 queued_us: 0,
+                build_us: 0,
                 failed: true,
                 invalidated: false,
                 gauges: Vec::new(),
@@ -327,7 +339,22 @@ impl RetrievalRuntime {
         enqueued: Instant,
         respond: Callback<Result<SearchOutcome, RuntimeError>>,
     ) -> bool {
-        self.submit(corpus, Job::Search { corpus, query, k, enqueued, respond })
+        self.search_traced(corpus, query, k, enqueued, None, respond)
+    }
+
+    /// [`Self::search`] carrying an optional trace context for the
+    /// sampled query; the dispatcher re-installs it on its own thread
+    /// and emits mailbox/search/retrieve spans around the walk.
+    pub(crate) fn search_traced(
+        &self,
+        corpus: CorpusKey,
+        query: Histogram,
+        k: usize,
+        enqueued: Instant,
+        trace: Option<ActiveTrace>,
+        respond: Callback<Result<SearchOutcome, RuntimeError>>,
+    ) -> bool {
+        self.submit(corpus, Job::Search { corpus, query, k, enqueued, trace, respond })
     }
 
     /// Append one entry; the callback receives its fresh global id.
@@ -447,6 +474,7 @@ impl RunnerCtx {
         report: Option<RetrievalReport>,
         search_us: u64,
         queued_us: u64,
+        build_us: u64,
         failed: bool,
         invalidated: bool,
     ) {
@@ -456,6 +484,7 @@ impl RunnerCtx {
             report,
             search_us,
             queued_us,
+            build_us,
             failed,
             invalidated,
             gauges,
@@ -475,6 +504,7 @@ impl RunnerCtx {
             report: None,
             search_us: 0,
             queued_us: 0,
+            build_us: 0,
             failed: true,
             invalidated: true,
             gauges: Vec::new(),
@@ -486,17 +516,20 @@ impl RunnerCtx {
             Job::Register(spec, ack) => {
                 let spec = *spec;
                 debug_assert_eq!(spec.corpus, key, "register routed to the wrong mailbox");
-                match ShardedCorpus::new(
+                let t0 = Instant::now();
+                let built = ShardedCorpus::new(
                     &spec.metric,
                     spec.entries,
                     spec.anchors,
                     spec.config,
                     spec.sharding,
-                ) {
+                );
+                let build_us = saturating_micros(t0.elapsed());
+                match built {
                     Ok(corpus) => {
                         let size = corpus.len();
                         *state = Some(CorpusActor { metric_key: spec.metric_key, corpus });
-                        self.push(key, state, None, 0, 0, false, false);
+                        self.push(key, state, None, 0, 0, build_us, false, false);
                         self.finish(ack, Ok(size));
                     }
                     Err(e) => {
@@ -506,62 +539,111 @@ impl RunnerCtx {
                         // searches queued behind a failed rebuild get
                         // unknown-corpus, not stale data.
                         let invalidated = state.take().is_some();
-                        self.push(key, state, None, 0, 0, true, invalidated);
+                        self.push(key, state, None, 0, 0, build_us, true, invalidated);
                         self.finish(ack, Err(e));
                     }
                 }
             }
-            Job::Search { corpus, query, k, enqueued, respond } => {
+            Job::Search { corpus, query, k, enqueued, trace, respond } => {
                 let queued_us = saturating_micros(enqueued.elapsed());
+                // Mailbox wait is real whether or not the corpus still
+                // exists, so its span lands before the lookup.
+                let dequeue_us = trace.as_ref().map(|t| {
+                    let dequeue = t.sink.now_us();
+                    t.sink.record(Span {
+                        trace: t.trace,
+                        stage: Stage::Mailbox,
+                        tenant: t.tenant,
+                        start_us: t.sink.instant_us(enqueued),
+                        end_us: dequeue,
+                        tid: 0,
+                        data: SpanData::Mailbox { queued_us },
+                    });
+                    dequeue
+                });
                 let Some(actor) = state.as_mut() else {
-                    self.push(corpus, state, None, 0, queued_us, true, false);
+                    self.push(corpus, state, None, 0, queued_us, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
                 let t0 = Instant::now();
+                // Re-install the trace on this dispatcher thread so the
+                // cascade/refine/shard layers below can see it.
+                let guard =
+                    trace.as_ref().map(|t| crate::trace::ctx::set_active(t.clone()));
                 let outcome = actor.corpus.search(&query, k);
+                drop(guard);
                 let search_us = saturating_micros(t0.elapsed());
                 match outcome {
                     Ok((hits, report)) => {
-                        self.push(corpus, state, Some(report), search_us, queued_us, false, false);
+                        if let (Some(t), Some(dequeue)) = (&trace, dequeue_us) {
+                            let end = t.sink.now_us();
+                            t.sink.record(Span {
+                                trace: t.trace,
+                                stage: Stage::Search,
+                                tenant: t.tenant,
+                                start_us: dequeue,
+                                end_us: end,
+                                tid: 0,
+                                data: SpanData::Search {
+                                    hits: hits.len(),
+                                    routed: report.routed,
+                                    rescued: report.rescued,
+                                },
+                            });
+                            // Root span: the whole client-observed
+                            // retrieval, queue wait included.
+                            t.sink.record(Span {
+                                trace: t.trace,
+                                stage: Stage::Retrieve,
+                                tenant: t.tenant,
+                                start_us: t.sink.instant_us(enqueued),
+                                end_us: end,
+                                tid: 0,
+                                data: SpanData::None,
+                            });
+                        }
+                        self.push(
+                            corpus, state, Some(report), search_us, queued_us, 0, false, false,
+                        );
                         let latency_us = saturating_micros(enqueued.elapsed());
                         self.finish(respond, Ok(SearchOutcome { hits, report, latency_us }));
                     }
                     Err(e) => {
-                        self.push(corpus, state, None, search_us, queued_us, true, false);
+                        self.push(corpus, state, None, search_us, queued_us, 0, true, false);
                         self.finish(respond, Err(RuntimeError::Index(e)));
                     }
                 }
             }
             Job::Insert { corpus, entry, respond } => {
                 let Some(actor) = state.as_mut() else {
-                    self.push(corpus, state, None, 0, 0, true, false);
+                    self.push(corpus, state, None, 0, 0, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
                 let res = actor.corpus.insert(entry);
                 let failed = res.is_err();
-                self.push(corpus, state, None, 0, 0, failed, false);
+                self.push(corpus, state, None, 0, 0, 0, failed, false);
                 self.finish(respond, res.map_err(RuntimeError::Index));
             }
             Job::Tombstone { corpus, entry, respond } => {
                 let Some(actor) = state.as_mut() else {
-                    self.push(corpus, state, None, 0, 0, true, false);
+                    self.push(corpus, state, None, 0, 0, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
                 let hit = actor.corpus.tombstone(entry);
-                self.push(corpus, state, None, 0, 0, false, false);
+                self.push(corpus, state, None, 0, 0, 0, false, false);
                 self.finish(respond, Ok(hit));
             }
             Job::Compact { corpus, respond } => {
                 let Some(actor) = state.as_mut() else {
-                    self.push(corpus, state, None, 0, 0, true, false);
+                    self.push(corpus, state, None, 0, 0, 0, true, false);
                     self.finish(respond, Err(RuntimeError::UnknownCorpus(corpus)));
                     return;
                 };
                 let rebuilt = actor.corpus.compact();
-                self.push(corpus, state, None, 0, 0, false, false);
+                self.push(corpus, state, None, 0, 0, 0, false, false);
                 self.finish(respond, Ok(rebuilt));
             }
             Job::DropMetric(metric_key) => {
@@ -571,7 +653,7 @@ impl RunnerCtx {
                     // Tombstone push: the metrics layer purges this
                     // tenant's gauge rows instead of serving the last
                     // snapshot forever.
-                    self.push(key, state, None, 0, 0, false, true);
+                    self.push(key, state, None, 0, 0, 0, false, true);
                 }
             }
             #[cfg(test)]
@@ -670,6 +752,7 @@ mod tests {
             if let Some(report) = fb.report {
                 reports += 1;
                 assert_eq!(report.k, 5);
+                assert_eq!(fb.build_us, 0, "build time is registration-only");
                 // Well-formedness, not wall-clock positivity: a
                 // sub-microsecond search on a coarse clock is legal,
                 // but the caller-observed latency always covers the

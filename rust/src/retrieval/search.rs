@@ -25,8 +25,10 @@ use super::{BoundCascade, BoundTier, CorpusIndex, RetrievalError, RoutingConfig}
 use crate::backend::{BackendKind, ShardedExecutor};
 use crate::simplex::Histogram;
 use crate::sinkhorn::{ScalingInit, SinkhornConfig, SinkhornOutput, SolveBudget};
+use crate::trace::{ctx, PanelTrace, Span, SpanData, Stage};
 use crate::F;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 /// Refine/search knobs.
 #[derive(Debug, Clone, Copy)]
@@ -518,6 +520,8 @@ impl RetrievalService {
             return Ok((Vec::new(), report));
         }
 
+        let trace = ctx::active();
+        let cascade_start = trace.as_ref().map(|t| t.sink.now_us());
         let prep = self.index.prepare(query);
         // Candidates are the live slots — or, with the ANN router
         // active, its tombstone-filtered shortlist. The exact walk is
@@ -548,6 +552,27 @@ impl RetrievalService {
                 .total_cmp(&bounds[b].value)
                 .then(self.globals[live[a]].cmp(&self.globals[live[b]]))
         });
+        if let (Some(t), Some(start_us)) = (&trace, cascade_start) {
+            let deepest = bounds
+                .iter()
+                .map(|b| match b.tier {
+                    BoundTier::Mass => 0u8,
+                    BoundTier::Centroid => 1,
+                    BoundTier::Projection => 2,
+                })
+                .max()
+                .unwrap_or(0);
+            t.sink.record(Span {
+                trace: t.trace,
+                stage: Stage::Cascade,
+                tenant: t.tenant,
+                start_us,
+                end_us: t.sink.now_us(),
+                tid: 0,
+                data: SpanData::Cascade { tier: deepest, priced: n, shortlist: n },
+            });
+        }
+        let refine_start = trace.as_ref().map(|t| t.sink.now_us());
 
         let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
         let panel_width = self.panel_width();
@@ -593,6 +618,21 @@ impl RetrievalService {
             }
         }
         report.threshold = tau;
+        if let (Some(t), Some(start_us)) = (&trace, refine_start) {
+            t.sink.record(Span {
+                trace: t.trace,
+                stage: Stage::Refine,
+                tenant: t.tenant,
+                start_us,
+                end_us: t.sink.now_us(),
+                tid: 0,
+                data: SpanData::Refine {
+                    panels: report.panels,
+                    warm_seeded: report.warm_seeded,
+                    rescued: report.rescued,
+                },
+            });
+        }
 
         let mut hits: Vec<Hit> = heap
             .into_sorted_vec()
@@ -702,9 +742,21 @@ impl RetrievalService {
         // the intervals decide who is worth a full solve. A candidate
         // that converged within the budget folds directly; one whose
         // whole interval clears τ is discarded; only the straddlers —
-        // interval still containing τ — escalate.
-        let (outcomes, _reports) =
-            self.executor.solve_panel_outcomes(&rs, &cs, &inits, self.config.budget);
+        // interval still containing τ — escalate. A traced query tags
+        // every panel column with its id so the budgeted solve's
+        // per-slice interval spans attribute back to it.
+        let panel_trace = ctx::active().map(|t| PanelTrace {
+            sink: Arc::clone(&t.sink),
+            tenant: t.tenant,
+            traces: vec![Some(t.trace); cs.len()],
+        });
+        let (outcomes, _reports) = self.executor.solve_panel_outcomes_traced(
+            &rs,
+            &cs,
+            &inits,
+            self.config.budget,
+            panel_trace,
+        );
         report.panels += 1;
         report.solved += outcomes.len();
         let mut pending: Vec<usize> = Vec::new();

@@ -38,6 +38,7 @@ use super::{
 use crate::backend::shard_ranges;
 use crate::metric::CostMatrix;
 use crate::simplex::Histogram;
+use crate::trace::{ctx, Span, SpanData, Stage};
 use crate::F;
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
@@ -177,10 +178,27 @@ impl CorpusShard {
         query: &Histogram,
         k: usize,
     ) -> Result<(Vec<Hit>, RetrievalReport), RetrievalError> {
+        let trace = ctx::active();
+        let start_us = trace.as_ref().map(|t| t.sink.now_us());
         let t0 = Instant::now();
         let out = self.service.top_k(query, k);
         self.searches += 1;
         self.last_search_us = crate::util::saturating_micros(t0.elapsed());
+        if let (Some(t), Some(start_us), Ok((_, report))) = (&trace, start_us, &out) {
+            t.sink.record(Span {
+                trace: t.trace,
+                stage: Stage::Shard,
+                tenant: t.tenant,
+                start_us,
+                end_us: t.sink.now_us(),
+                tid: 0,
+                data: SpanData::Shard {
+                    shard: self.id,
+                    solved: report.solved,
+                    pruned: report.pruned,
+                },
+            });
+        }
         out
     }
 
@@ -502,6 +520,9 @@ impl ShardedCorpus {
         // worker each: spawn cost is orders of magnitude below a shard
         // walk at serving sizes.
         let ranges = shard_ranges(self.shards.len(), conc);
+        // A traced walk must survive the scoped-spawn hop: thread-locals
+        // don't cross threads, so each worker re-installs the context.
+        let active = ctx::active();
         let groups: Vec<Result<Vec<T>, RetrievalError>> =
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(conc);
@@ -510,7 +531,9 @@ impl ShardedCorpus {
                     let (group, tail) = rest.split_at_mut(range.len());
                     rest = tail;
                     let start = range.start;
+                    let active = active.clone();
                     handles.push(scope.spawn(move || {
+                        let _guard = active.map(ctx::set_active);
                         group
                             .iter_mut()
                             .enumerate()

@@ -130,6 +130,10 @@ impl BatchSinkhorn {
         if n == 0 {
             return Vec::new();
         }
+        // PR 9: this panel-sliced loop bypasses `drive_budgeted`, so it
+        // consumes all n column attributions itself (unconditionally, to
+        // keep any enclosing panel cursor aligned).
+        let trace = crate::trace::ctx::take_columns(n);
         let cap = match budget {
             SolveBudget::Unbounded => {
                 let outs = self.distances_paired_init(rs, cs, inits);
@@ -154,11 +158,13 @@ impl BatchSinkhorn {
         let mut iterations = vec![0usize; n];
         let mut stabilized = vec![false; n];
         let mut spent = 0usize;
+        let mut slice_index = 0usize;
         loop {
             let step = match cap {
                 Some(nmax) => CERT_STRIDE.min(nmax - spent).max(1),
                 None => CERT_STRIDE,
             };
+            let slice_start = trace.as_ref().map(|(sink, _, _)| sink.now_us());
             let outs = self.distances_paired_capped(rs, cs, &carries, step);
             spent += step;
             let mut all_done = true;
@@ -174,6 +180,27 @@ impl BatchSinkhorn {
                     all_done = false;
                 }
             }
+            if let (Some((sink, tenant, cols)), Some(start_us)) = (&trace, slice_start) {
+                let end_us = sink.now_us();
+                for (j, col) in cols.iter().enumerate() {
+                    if let Some(id) = col {
+                        sink.record(crate::trace::Span {
+                            trace: *id,
+                            stage: crate::trace::Stage::Slice,
+                            tenant: *tenant,
+                            start_us,
+                            end_us,
+                            tid: 0,
+                            data: crate::trace::SpanData::Slice {
+                                index: slice_index,
+                                iterations: outs[j].stats.iterations,
+                                width: intervals[j].width(),
+                            },
+                        });
+                    }
+                }
+            }
+            slice_index += 1;
             let exhausted = match cap {
                 Some(nmax) => spent >= nmax,
                 None => budget.expired(),

@@ -369,6 +369,10 @@ pub(crate) fn drive_budgeted(
     capped: impl Fn(&ScalingInit, usize) -> SinkhornOutput,
     cert: impl Fn(&SinkhornOutput) -> ErrorInterval,
 ) -> SolveOutcome {
+    // PR 9: consume this column's trace attribution unconditionally (even
+    // on the unbounded early return) so a panel's column cursor stays
+    // aligned with the caller's per-pair loop.
+    let trace = crate::trace::ctx::next_column();
     let cap = match budget {
         SolveBudget::Unbounded => {
             let out = full(init);
@@ -382,15 +386,33 @@ pub(crate) fn drive_budgeted(
     let mut interval = ErrorInterval::UNBOUNDED;
     let mut iterations = 0usize;
     let mut stabilized = false;
+    let mut slice_index = 0usize;
     loop {
         let step = match cap {
             Some(n) => CERT_STRIDE.min(n - iterations).max(1),
             None => CERT_STRIDE,
         };
+        let slice_start = trace.as_ref().map(|t| t.sink.now_us());
         let out = capped(&carry, step);
         iterations += out.stats.iterations;
         stabilized |= out.stats.stabilized;
         interval = interval.intersect(cert(&out));
+        if let (Some(t), Some(start_us)) = (&trace, slice_start) {
+            t.sink.record(crate::trace::Span {
+                trace: t.trace,
+                stage: crate::trace::Stage::Slice,
+                tenant: t.tenant,
+                start_us,
+                end_us: t.sink.now_us(),
+                tid: 0,
+                data: crate::trace::SpanData::Slice {
+                    index: slice_index,
+                    iterations: out.stats.iterations,
+                    width: interval.width(),
+                },
+            });
+        }
+        slice_index += 1;
         let exhausted = match cap {
             Some(n) => iterations >= n,
             None => budget.expired(),

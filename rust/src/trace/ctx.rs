@@ -1,0 +1,245 @@
+//! Thread-local trace propagation.
+//!
+//! Two contexts, both scoped by RAII guards that restore the previous
+//! value on drop (so nested executors / re-entrant searches compose):
+//!
+//! - **Active**: "everything this thread does right now belongs to trace
+//!   T". Set around a dispatcher's corpus search and re-set inside each
+//!   `ShardedCorpus::run` worker (thread-locals do not cross scoped-thread
+//!   spawns, so the seam is plumbed explicitly there).
+//! - **Panel**: "this thread is solving an n-column panel whose columns
+//!   belong to these (optional) traces". Set by
+//!   `ShardedExecutor::solve_panel_outcomes_traced` on each worker with
+//!   that worker's sub-slice of the batch. The budgeted drivers consume
+//!   columns in order: `drive_budgeted` takes one per call (the per-pair
+//!   default backend loop), `BatchSinkhorn::outcomes_paired` takes all n
+//!   at once (the interleaved backend slices the whole panel together).
+//!
+//! When no panel is set, the budgeted drivers fall back to the active
+//! context — that is how a retrieval refine's slice spans attribute to the
+//! retrieval trace on the single-shard executor path.
+//!
+//! Everything here is `pub(crate)`: propagation is an implementation seam,
+//! not API. The disabled-tracing path reads one thread-local `Option` and
+//! branches — no timestamps, no allocation.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use super::{Tenant, TraceId, TraceSink};
+
+/// A (sink, trace, tenant) bundle: everything a deep call site needs to
+/// record a span against the query that reached it.
+#[derive(Clone)]
+pub(crate) struct ActiveTrace {
+    pub(crate) sink: Arc<TraceSink>,
+    pub(crate) trace: TraceId,
+    pub(crate) tenant: Tenant,
+}
+
+struct PanelCtx {
+    sink: Arc<TraceSink>,
+    tenant: Tenant,
+    traces: Vec<Option<TraceId>>,
+    cursor: usize,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<ActiveTrace>> = const { RefCell::new(None) };
+    static PANEL: RefCell<Option<PanelCtx>> = const { RefCell::new(None) };
+}
+
+/// Guard restoring the previous active context on drop.
+pub(crate) struct ActiveGuard {
+    prev: Option<ActiveTrace>,
+}
+
+/// Mark everything this thread does until the guard drops as belonging to
+/// `ctx`'s trace.
+pub(crate) fn set_active(ctx: ActiveTrace) -> ActiveGuard {
+    let prev = ACTIVE.with(|c| c.borrow_mut().replace(ctx));
+    ActiveGuard { prev }
+}
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        ACTIVE.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// The current thread's active trace, if any.
+pub(crate) fn active() -> Option<ActiveTrace> {
+    ACTIVE.with(|c| c.borrow().clone())
+}
+
+/// Guard restoring the previous panel context on drop.
+pub(crate) struct PanelGuard {
+    prev: Option<PanelCtx>,
+}
+
+/// Install per-column trace attribution for an n-column panel solve on
+/// this thread. `traces[j]` is the trace (if sampled) owning column `j`.
+pub(crate) fn set_panel(
+    sink: Arc<TraceSink>,
+    tenant: Tenant,
+    traces: Vec<Option<TraceId>>,
+) -> PanelGuard {
+    let prev = PANEL.with(|c| {
+        c.borrow_mut().replace(PanelCtx {
+            sink,
+            tenant,
+            traces,
+            cursor: 0,
+        })
+    });
+    PanelGuard { prev }
+}
+
+impl Drop for PanelGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        PANEL.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Consume the next panel column's attribution (for `drive_budgeted`,
+/// which solves one column per call). With a panel installed the column's
+/// entry is authoritative — even when `None` (untraced column in a traced
+/// batch). Without one, falls back to the thread's active trace.
+pub(crate) fn next_column() -> Option<ActiveTrace> {
+    let from_panel = PANEL.with(|c| {
+        let mut b = c.borrow_mut();
+        b.as_mut().map(|p| {
+            let col = p.traces.get(p.cursor).copied().flatten();
+            p.cursor += 1;
+            col.map(|trace| ActiveTrace {
+                sink: Arc::clone(&p.sink),
+                trace,
+                tenant: p.tenant,
+            })
+        })
+    });
+    match from_panel {
+        Some(col) => col,
+        None => active(),
+    }
+}
+
+/// Consume `n` panel columns at once (for `BatchSinkhorn::outcomes_paired`,
+/// which slices a whole panel together). Returns `None` when nothing in
+/// the window is traced. Without a panel, falls back to the active trace
+/// applied to all `n` columns.
+#[allow(clippy::type_complexity)]
+pub(crate) fn take_columns(n: usize) -> Option<(Arc<TraceSink>, Tenant, Vec<Option<TraceId>>)> {
+    let from_panel = PANEL.with(|c| {
+        let mut b = c.borrow_mut();
+        b.as_mut().map(|p| {
+            let cols: Vec<Option<TraceId>> = (0..n)
+                .map(|i| p.traces.get(p.cursor + i).copied().flatten())
+                .collect();
+            p.cursor += n;
+            (Arc::clone(&p.sink), p.tenant, cols)
+        })
+    });
+    match from_panel {
+        Some((sink, tenant, cols)) => cols
+            .iter()
+            .any(|c| c.is_some())
+            .then_some((sink, tenant, cols)),
+        None => active().map(|a| (a.sink, a.tenant, vec![Some(a.trace); n])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceConfig;
+
+    fn sink() -> Arc<TraceSink> {
+        TraceSink::new(TraceConfig {
+            sample_every: 1,
+            ring_capacity: 16,
+        })
+    }
+
+    #[test]
+    fn active_guard_restores_previous_context() {
+        assert!(active().is_none());
+        let s = sink();
+        {
+            let _outer = set_active(ActiveTrace {
+                sink: Arc::clone(&s),
+                trace: TraceId(1),
+                tenant: Tenant::Corpus(0),
+            });
+            assert_eq!(active().unwrap().trace, TraceId(1));
+            {
+                let _inner = set_active(ActiveTrace {
+                    sink: Arc::clone(&s),
+                    trace: TraceId(2),
+                    tenant: Tenant::Corpus(0),
+                });
+                assert_eq!(active().unwrap().trace, TraceId(2));
+            }
+            assert_eq!(active().unwrap().trace, TraceId(1));
+        }
+        assert!(active().is_none());
+    }
+
+    #[test]
+    fn next_column_walks_the_panel_in_order() {
+        let s = sink();
+        let _g = set_panel(
+            Arc::clone(&s),
+            Tenant::Metric(3),
+            vec![Some(TraceId(10)), None, Some(TraceId(12))],
+        );
+        assert_eq!(next_column().unwrap().trace, TraceId(10));
+        assert!(next_column().is_none()); // untraced column, NOT a fallback
+        assert_eq!(next_column().unwrap().trace, TraceId(12));
+        assert!(next_column().is_none()); // past the end
+    }
+
+    #[test]
+    fn take_columns_consumes_a_window() {
+        let s = sink();
+        let _g = set_panel(
+            Arc::clone(&s),
+            Tenant::Metric(0),
+            vec![Some(TraceId(1)), None, None, Some(TraceId(4))],
+        );
+        let (_, _, first) = take_columns(2).unwrap();
+        assert_eq!(first, vec![Some(TraceId(1)), None]);
+        // Second window holds only an untraced column + one traced.
+        let (_, _, second) = take_columns(2).unwrap();
+        assert_eq!(second, vec![None, Some(TraceId(4))]);
+        assert!(take_columns(2).is_none());
+    }
+
+    #[test]
+    fn budgeted_drivers_fall_back_to_active_without_a_panel() {
+        let s = sink();
+        let _g = set_active(ActiveTrace {
+            sink: Arc::clone(&s),
+            trace: TraceId(7),
+            tenant: Tenant::Corpus(1),
+        });
+        assert_eq!(next_column().unwrap().trace, TraceId(7));
+        let (_, tenant, cols) = take_columns(3).unwrap();
+        assert_eq!(tenant, Tenant::Corpus(1));
+        assert_eq!(cols, vec![Some(TraceId(7)); 3]);
+    }
+
+    #[test]
+    fn panel_overrides_active_even_for_untraced_columns() {
+        let s = sink();
+        let _a = set_active(ActiveTrace {
+            sink: Arc::clone(&s),
+            trace: TraceId(9),
+            tenant: Tenant::Corpus(0),
+        });
+        let _p = set_panel(Arc::clone(&s), Tenant::Metric(0), vec![None]);
+        assert!(next_column().is_none());
+    }
+}

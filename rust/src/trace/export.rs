@@ -1,0 +1,202 @@
+//! Chrome trace-event export.
+//!
+//! Renders spans as the Chrome trace-event JSON array format ("X" complete
+//! events), loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`: each span becomes one slice on its recording
+//! thread's track, with the typed payload flattened into `args`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{Span, SpanData};
+
+fn num(x: f64) -> Json {
+    // util::json renders f64 via Display; keep the output parseable when a
+    // payload carries an unbounded interval width (±inf).
+    Json::Number(if x.is_finite() { x } else { -1.0 })
+}
+
+fn args(span: &Span) -> Json {
+    let mut m = BTreeMap::new();
+    let mut set = |k: &str, v: Json| {
+        m.insert(k.to_string(), v);
+    };
+    set("trace", num(span.trace.0 as f64));
+    set("tenant", Json::String(span.tenant.label()));
+    match span.data {
+        SpanData::None => {}
+        SpanData::Batch { size, full } => {
+            set("batch_size", num(size as f64));
+            set("full", Json::Bool(full));
+        }
+        SpanData::Solve {
+            batch,
+            warm_hits,
+            warm_misses,
+            shed,
+        } => {
+            set("batch_size", num(batch as f64));
+            set("warm_hits", num(warm_hits as f64));
+            set("warm_misses", num(warm_misses as f64));
+            set("shed", Json::Bool(shed));
+        }
+        SpanData::Mailbox { queued_us } => {
+            set("queued_us", num(queued_us as f64));
+        }
+        SpanData::Search {
+            hits,
+            routed,
+            rescued,
+        } => {
+            set("hits", num(hits as f64));
+            set("routed", Json::Bool(routed));
+            set("rescued", num(rescued as f64));
+        }
+        SpanData::Shard {
+            shard,
+            solved,
+            pruned,
+        } => {
+            set("shard", num(shard as f64));
+            set("solved", num(solved as f64));
+            set("pruned", num(pruned as f64));
+        }
+        SpanData::Cascade {
+            tier,
+            priced,
+            shortlist,
+        } => {
+            set("tier", num(tier as f64));
+            set("priced", num(priced as f64));
+            set("shortlist", num(shortlist as f64));
+        }
+        SpanData::Refine {
+            panels,
+            warm_seeded,
+            rescued,
+        } => {
+            set("panels", num(panels as f64));
+            set("warm_seeded", num(warm_seeded as f64));
+            set("rescued", num(rescued as f64));
+        }
+        SpanData::Slice {
+            index,
+            iterations,
+            width,
+        } => {
+            set("slice", num(index as f64));
+            set("iterations", num(iterations as f64));
+            set("interval_width", num(width));
+        }
+    }
+    Json::Object(m)
+}
+
+/// Render spans as a Chrome trace-event JSON array ("X" complete events,
+/// microsecond timestamps). `pid` carries the `TraceId` so multiple traces
+/// exported together group into separate process tracks; `tid` is the
+/// recording thread's per-sink ordinal.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let events = spans
+        .iter()
+        .map(|span| {
+            let mut e = BTreeMap::new();
+            let mut set = |k: &str, v: Json| {
+                e.insert(k.to_string(), v);
+            };
+            set("name", Json::String(span.stage.name().to_string()));
+            set("ph", Json::String("X".to_string()));
+            set("ts", num(span.start_us as f64));
+            set("dur", num(span.duration_us() as f64));
+            set("pid", num(span.trace.0 as f64));
+            set("tid", num(span.tid as f64));
+            set("args", args(span));
+            Json::Object(e)
+        })
+        .collect();
+    Json::Array(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Stage, Tenant, TraceId};
+
+    #[test]
+    fn spans_render_as_complete_events() {
+        let spans = vec![
+            Span {
+                trace: TraceId(4),
+                stage: Stage::Solve,
+                tenant: Tenant::Metric(1),
+                start_us: 100,
+                end_us: 350,
+                tid: 2,
+                data: SpanData::Solve {
+                    batch: 8,
+                    warm_hits: 3,
+                    warm_misses: 5,
+                    shed: false,
+                },
+            },
+            Span {
+                trace: TraceId(4),
+                stage: Stage::Slice,
+                tenant: Tenant::Metric(1),
+                start_us: 120,
+                end_us: 180,
+                tid: 2,
+                data: SpanData::Slice {
+                    index: 0,
+                    iterations: 8,
+                    width: 1.5e-7,
+                },
+            },
+        ];
+        let doc = chrome_trace(&spans);
+        let events = doc.as_array().expect("array document");
+        assert_eq!(events.len(), 2);
+        let solve = &events[0];
+        assert_eq!(solve.get("name").and_then(Json::as_str), Some("solve"));
+        assert_eq!(solve.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(solve.get("ts").and_then(Json::as_f64), Some(100.0));
+        assert_eq!(solve.get("dur").and_then(Json::as_f64), Some(250.0));
+        assert_eq!(solve.get("pid").and_then(Json::as_f64), Some(4.0));
+        let args = solve.get("args").expect("args object");
+        assert_eq!(args.get("warm_hits").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(args.get("tenant").and_then(Json::as_str), Some("m1"));
+
+        // Round-trips through the crate's own parser (valid JSON).
+        let text = format!("{doc}");
+        let parsed = Json::parse(&text).expect("self-parseable");
+        assert_eq!(parsed.as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn non_finite_widths_are_sanitized() {
+        let spans = vec![Span {
+            trace: TraceId(0),
+            stage: Stage::Slice,
+            tenant: Tenant::None,
+            start_us: 0,
+            end_us: 1,
+            tid: 0,
+            data: SpanData::Slice {
+                index: 0,
+                iterations: 1,
+                width: f64::INFINITY,
+            },
+        }];
+        let doc = chrome_trace(&spans);
+        let text = format!("{doc}");
+        assert!(Json::parse(&text).is_ok());
+        let width = doc.as_array().unwrap()[0]
+            .get("args")
+            .unwrap()
+            .get("interval_width")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert_eq!(width, -1.0);
+    }
+}

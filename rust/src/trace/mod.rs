@@ -1,0 +1,548 @@
+//! End-to-end query tracing (PR 9): span-structured latency decomposition.
+//!
+//! The serving stack hands a query across five asynchronous seams —
+//! batcher → engine → executor shard workers → dispatcher mailboxes →
+//! per-shard cascade + refine — and until now `StatsSnapshot` only exposed
+//! marginal aggregates. This module mints a [`TraceId`] per sampled
+//! query/retrieval, threads it through every seam, and records typed
+//! [`Span`]s (batch size, mailbox wait, cascade tier, per-`CERT_STRIDE`
+//! interval width, warm hits, rescues) into bounded per-thread ring
+//! buffers. A collector folds the spans into per-stage log2 histograms
+//! (the `stage_breakdown` section of `StatsSnapshot`) and retains sampled
+//! full traces for export as Chrome trace-event JSON
+//! ([`chrome_trace`]) — one query renders as a flame graph in Perfetto.
+//!
+//! ## Zero-overhead contract
+//!
+//! Tracing is **off by default**. Every instrumentation site branches on an
+//! `Option`-typed handle (`Option<Arc<TraceSink>>` at the coordinator,
+//! `Option<TraceId>` per job, thread-local contexts further down): with
+//! `TraceConfig` unset there are no timestamp reads and no allocations on
+//! the hot path, so all PR 1–8 bit-identity and latency contracts are
+//! untouched. Recording never blocks a worker: rings are pushed via
+//! `try_lock` with drop-oldest overflow and a [`TraceSink::dropped`]
+//! counter.
+//!
+//! ## Span taxonomy
+//!
+//! Distance path: `query` (root, enqueue → respond) ⊃ `batcher` (enqueue →
+//! solve start, payload batch size / full-trigger) + `solve` (panel solve,
+//! payload warm hits/misses, shed) ⊃ `slice` (one per budgeted
+//! `CERT_STRIDE` slice, payload iterations + certified interval width).
+//!
+//! Retrieval path: `retrieve` (root) ⊃ `mailbox` (dispatcher queue wait) +
+//! `search` (corpus walk) ⊃ `shard` (per-shard walk) ⊃ `cascade` (bound
+//! pricing, payload tier reached) + `refine` (panel re-rank, payload warm
+//! seeds / rescues) ⊃ `slice`.
+
+pub(crate) mod ctx;
+mod export;
+mod ring;
+
+pub use export::chrome_trace;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use crate::util::histogram::Log2Histogram;
+use crate::util::saturating_micros;
+use ring::ThreadRing;
+
+/// How many collected spans the sink retains for export (drop-oldest).
+const RETAINED_SPANS: usize = 8192;
+
+/// Sampling + buffering knobs, set via
+/// `CoordinatorConfigBuilder::trace(..)`. Default **off** (the config field
+/// is an `Option`); `TraceConfig::default()` samples every 64th query with
+/// 4096-span per-thread rings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Mint a `TraceId` for every `sample_every`-th query (1 = every
+    /// query). Must be ≥ 1.
+    pub sample_every: u64,
+    /// Capacity of each per-thread span ring buffer. Must be ≥ 1.
+    pub ring_capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            sample_every: 64,
+            ring_capacity: 4096,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Validate the knobs; mirrors `CoordinatorConfig::validate` style.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sample_every == 0 {
+            return Err("trace.sample_every must be >= 1".into());
+        }
+        if self.ring_capacity == 0 {
+            return Err("trace.ring_capacity must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Identity of one sampled query, stable across every span it produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+/// Which pipeline stage a span covers. `name()` is the stable label used
+/// in `stage_breakdown` rows and Chrome trace events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Root span of a distance query: enqueue → response.
+    Query,
+    /// Time spent waiting in the `PendingBatcher` before the panel solved.
+    Batcher,
+    /// The panel solve itself (executor dispatch included).
+    Solve,
+    /// One budgeted `CERT_STRIDE` slice inside a solve/refine.
+    Slice,
+    /// Root span of a retrieval: enqueue → callback.
+    Retrieve,
+    /// Dispatcher mailbox wait (PR 8 queue).
+    Mailbox,
+    /// The corpus search walk (all shards).
+    Search,
+    /// One shard's cascade + refine walk.
+    Shard,
+    /// Bound-cascade pricing within a shard.
+    Cascade,
+    /// Panel re-ranking of straddlers within a shard.
+    Refine,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Query => "query",
+            Stage::Batcher => "batcher",
+            Stage::Solve => "solve",
+            Stage::Slice => "slice",
+            Stage::Retrieve => "retrieve",
+            Stage::Mailbox => "mailbox",
+            Stage::Search => "search",
+            Stage::Shard => "shard",
+            Stage::Cascade => "cascade",
+            Stage::Refine => "refine",
+        }
+    }
+}
+
+/// Which tenant a span is attributed to: the metric id for distance
+/// queries, the corpus id for retrieval. Keys the per-tenant
+/// `stage_breakdown` rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tenant {
+    None,
+    Metric(u32),
+    Corpus(u32),
+}
+
+impl Tenant {
+    pub fn label(self) -> String {
+        match self {
+            Tenant::None => "-".into(),
+            Tenant::Metric(m) => format!("m{m}"),
+            Tenant::Corpus(c) => format!("c{c}"),
+        }
+    }
+}
+
+/// Typed span payload — the "why was this slow" detail next to the timing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpanData {
+    None,
+    /// Batcher exit: how big the batch was and whether the size trigger
+    /// (rather than the deadline/drain path) released it.
+    Batch { size: usize, full: bool },
+    /// Panel solve: warm-start hits/misses across shard workers, and
+    /// whether load shedding capped the budget.
+    Solve {
+        batch: usize,
+        warm_hits: usize,
+        warm_misses: usize,
+        shed: bool,
+    },
+    /// Dispatcher mailbox wait as measured by the PR 8 feedback channel.
+    Mailbox { queued_us: u64 },
+    /// Whole-corpus search: result count and whether the ANN router
+    /// shortlisted (vs exact full walk).
+    Search {
+        hits: usize,
+        routed: bool,
+        rescued: usize,
+    },
+    /// One shard's walk: panel columns solved and cascade-pruned count.
+    Shard {
+        shard: usize,
+        solved: usize,
+        pruned: usize,
+    },
+    /// Cascade pricing: deepest bound tier consulted and candidates priced.
+    Cascade {
+        tier: u8,
+        priced: usize,
+        shortlist: usize,
+    },
+    /// Refine: straddler panel size, warm-seeded columns, rescue count.
+    Refine {
+        panels: usize,
+        warm_seeded: usize,
+        rescued: usize,
+    },
+    /// One budgeted `CERT_STRIDE` slice: slice ordinal, Sinkhorn iterations
+    /// it ran, and the certified `ErrorInterval` width after intersecting
+    /// its certificate.
+    Slice {
+        index: usize,
+        iterations: usize,
+        width: f64,
+    },
+}
+
+/// One recorded interval. Timestamps are microseconds since the sink's
+/// epoch (monotonic, via `Instant`); `tid` is a small per-sink thread
+/// ordinal assigned at first record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub trace: TraceId,
+    pub stage: Stage,
+    pub tenant: Tenant,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub tid: u64,
+    pub data: SpanData,
+}
+
+impl Span {
+    pub fn duration_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// One row of the `stage_breakdown` section: clamped log2-histogram
+/// quantiles of span duration, keyed by (stage, tenant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageRow {
+    pub stage: &'static str,
+    pub tenant: String,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// Per-column trace attribution for an anytime panel solve, handed to
+/// `ShardedExecutor::solve_panel_outcomes_traced`: `traces[j]` owns panel
+/// column `j` (untraced columns are `None`). The executor re-installs the
+/// matching sub-slice as the panel context on each shard worker, because
+/// thread-locals do not cross scoped-thread spawns.
+pub struct PanelTrace {
+    pub sink: Arc<TraceSink>,
+    pub tenant: Tenant,
+    pub traces: Vec<Option<TraceId>>,
+}
+
+#[derive(Default)]
+struct Collected {
+    stages: BTreeMap<(Stage, Tenant), Log2Histogram>,
+    spans: VecDeque<Span>,
+    span_total: u64,
+}
+
+/// The shared tracing sink: mints sampled `TraceId`s, owns the per-thread
+/// rings, and folds drained spans into stage histograms + a bounded export
+/// buffer. One sink per `DistanceService`; every handle is an
+/// `Arc<TraceSink>` and the disabled path is simply `None`.
+pub struct TraceSink {
+    id: u64,
+    epoch: Instant,
+    sample_every: u64,
+    ring_capacity: usize,
+    minted: AtomicU64,
+    sampled: AtomicU64,
+    dropped: AtomicU64,
+    next_tid: AtomicU64,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    collected: Mutex<Collected>,
+}
+
+/// Distinguishes sinks in the per-thread ring cache (a service restart in
+/// the same process must not reuse another sink's rings).
+static NEXT_SINK_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Per-thread cache of (sink id → ring). Weak so a dropped sink frees
+    /// its rings even while worker threads live on.
+    static THREAD_RINGS: std::cell::RefCell<Vec<(u64, Weak<ThreadRing>)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl TraceSink {
+    pub fn new(config: TraceConfig) -> Arc<Self> {
+        Arc::new(Self {
+            id: NEXT_SINK_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            sample_every: config.sample_every.max(1),
+            ring_capacity: config.ring_capacity.max(1),
+            minted: AtomicU64::new(0),
+            sampled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            next_tid: AtomicU64::new(0),
+            rings: Mutex::new(Vec::new()),
+            collected: Mutex::new(Collected::default()),
+        })
+    }
+
+    /// Sampling decision for the next query: every `sample_every`-th call
+    /// mints a `TraceId` (so `sample_every == 1` traces everything).
+    pub fn sample(&self) -> Option<TraceId> {
+        let n = self.minted.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample_every == 0 {
+            self.sampled.fetch_add(1, Ordering::Relaxed);
+            Some(TraceId(n))
+        } else {
+            None
+        }
+    }
+
+    /// Microseconds since the sink's epoch, read now.
+    pub fn now_us(&self) -> u64 {
+        saturating_micros(self.epoch.elapsed())
+    }
+
+    /// Microseconds since the sink's epoch for an `Instant` captured
+    /// earlier (saturates to 0 for instants predating the sink).
+    pub fn instant_us(&self, t: Instant) -> u64 {
+        saturating_micros(t.saturating_duration_since(self.epoch))
+    }
+
+    /// Record a span into this thread's ring. Never blocks: lock
+    /// contention or ring overflow drop spans and bump the counter. The
+    /// span's `tid` is overwritten with the recording thread's ordinal.
+    pub fn record(&self, mut span: Span) {
+        let dropped = THREAD_RINGS.with(|cell| {
+            let mut cache = cell.borrow_mut();
+            let ring = match cache
+                .iter()
+                .find(|(id, _)| *id == self.id)
+                .and_then(|(_, w)| w.upgrade())
+            {
+                Some(r) => r,
+                None => {
+                    let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
+                    let ring = Arc::new(ThreadRing::new(tid, self.ring_capacity));
+                    self.rings
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .push(Arc::clone(&ring));
+                    cache.retain(|(id, w)| *id != self.id && w.strong_count() > 0);
+                    cache.push((self.id, Arc::downgrade(&ring)));
+                    ring
+                }
+            };
+            span.tid = ring.tid();
+            ring.push(span)
+        });
+        if dropped > 0 {
+            self.dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
+    }
+
+    /// Drain every thread ring and fold the spans into the stage
+    /// histograms + the bounded export buffer. Called by the readers
+    /// (`stage_rows`, `sampled_spans`); safe from any thread.
+    pub fn collect(&self) {
+        let rings: Vec<Arc<ThreadRing>> = self
+            .rings
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
+        let mut c = self.collected.lock().unwrap_or_else(|p| p.into_inner());
+        for ring in rings {
+            for span in ring.drain() {
+                c.stages
+                    .entry((span.stage, span.tenant))
+                    .or_default()
+                    .record(span.duration_us());
+                if c.spans.len() >= RETAINED_SPANS {
+                    c.spans.pop_front();
+                }
+                c.spans.push_back(span);
+                c.span_total += 1;
+            }
+        }
+    }
+
+    /// The `stage_breakdown` rows: per (stage, tenant) clamped p50/p99/max
+    /// of span duration, sorted by stage then tenant.
+    pub fn stage_rows(&self) -> Vec<StageRow> {
+        self.collect();
+        let c = self.collected.lock().unwrap_or_else(|p| p.into_inner());
+        c.stages
+            .iter()
+            .map(|((stage, tenant), h)| StageRow {
+                stage: stage.name(),
+                tenant: tenant.label(),
+                count: h.count(),
+                p50_us: h.quantile(0.5),
+                p99_us: h.quantile(0.99),
+                max_us: h.observed_max(),
+            })
+            .collect()
+    }
+
+    /// All retained sampled spans (most recent `RETAINED_SPANS`), oldest
+    /// first. Feed a per-trace subset to [`chrome_trace`] for Perfetto.
+    pub fn sampled_spans(&self) -> Vec<Span> {
+        self.collect();
+        let c = self.collected.lock().unwrap_or_else(|p| p.into_inner());
+        c.spans.iter().copied().collect()
+    }
+
+    /// Retained spans belonging to one trace, oldest first.
+    pub fn trace_spans(&self, trace: TraceId) -> Vec<Span> {
+        self.sampled_spans()
+            .into_iter()
+            .filter(|s| s.trace == trace)
+            .collect()
+    }
+
+    /// Total queries that passed the sampling gate.
+    pub fn sampled(&self) -> u64 {
+        self.sampled.load(Ordering::Relaxed)
+    }
+
+    /// Total spans folded by the collector (including ones since evicted
+    /// from the bounded export buffer).
+    pub fn span_count(&self) -> u64 {
+        self.collect();
+        self.collected
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .span_total
+    }
+
+    /// Spans lost to ring overflow or worker-side lock contention.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(sink: &TraceSink, trace: u64, stage: Stage, start: u64, end: u64) -> Span {
+        let _ = sink; // spans are plain data; the sink stamps tid on record
+        Span {
+            trace: TraceId(trace),
+            stage,
+            tenant: Tenant::Metric(0),
+            start_us: start,
+            end_us: end,
+            tid: 0,
+            data: SpanData::None,
+        }
+    }
+
+    #[test]
+    fn sampling_mints_every_nth() {
+        let sink = TraceSink::new(TraceConfig {
+            sample_every: 3,
+            ring_capacity: 16,
+        });
+        let minted: Vec<Option<TraceId>> = (0..7).map(|_| sink.sample()).collect();
+        assert_eq!(
+            minted,
+            vec![
+                Some(TraceId(0)),
+                None,
+                None,
+                Some(TraceId(3)),
+                None,
+                None,
+                Some(TraceId(6)),
+            ]
+        );
+        assert_eq!(sink.sampled(), 3);
+    }
+
+    #[test]
+    fn recorded_spans_fold_into_stage_rows() {
+        let sink = TraceSink::new(TraceConfig {
+            sample_every: 1,
+            ring_capacity: 64,
+        });
+        sink.record(span(&sink, 0, Stage::Solve, 10, 110));
+        sink.record(span(&sink, 0, Stage::Solve, 10, 1010));
+        sink.record(span(&sink, 0, Stage::Batcher, 0, 10));
+        let rows = sink.stage_rows();
+        assert_eq!(rows.len(), 2);
+        let solve = rows.iter().find(|r| r.stage == "solve").unwrap();
+        assert_eq!(solve.count, 2);
+        assert_eq!(solve.tenant, "m0");
+        assert_eq!(solve.max_us, 1000);
+        // Clamped quantiles: p50 bucket edge 128, p99 clamped to max 1000.
+        assert_eq!(solve.p50_us, 128);
+        assert_eq!(solve.p99_us, 1000);
+        assert_eq!(sink.span_count(), 3);
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_counts_dropped_spans() {
+        let sink = TraceSink::new(TraceConfig {
+            sample_every: 1,
+            ring_capacity: 2,
+        });
+        for i in 0..5 {
+            sink.record(span(&sink, 0, Stage::Slice, i, i + 1));
+        }
+        assert_eq!(sink.dropped(), 3);
+        assert_eq!(sink.sampled_spans().len(), 2);
+    }
+
+    #[test]
+    fn spans_from_worker_threads_get_distinct_tids() {
+        let sink = TraceSink::new(TraceConfig {
+            sample_every: 1,
+            ring_capacity: 64,
+        });
+        sink.record(span(&sink, 0, Stage::Query, 0, 5));
+        std::thread::scope(|scope| {
+            scope.spawn(|| sink.record(span(&sink, 0, Stage::Shard, 1, 2)));
+            scope.spawn(|| sink.record(span(&sink, 0, Stage::Shard, 2, 3)));
+        });
+        let spans = sink.sampled_spans();
+        assert_eq!(spans.len(), 3);
+        let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), 3);
+    }
+
+    #[test]
+    fn trace_config_validation() {
+        assert!(TraceConfig::default().validate().is_ok());
+        assert!(TraceConfig {
+            sample_every: 0,
+            ring_capacity: 8
+        }
+        .validate()
+        .is_err());
+        assert!(TraceConfig {
+            sample_every: 1,
+            ring_capacity: 0
+        }
+        .validate()
+        .is_err());
+    }
+}

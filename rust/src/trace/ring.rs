@@ -1,0 +1,102 @@
+//! Bounded per-thread span ring buffers.
+//!
+//! Each worker thread that records spans into a [`TraceSink`] gets its own
+//! ring: a `Mutex<VecDeque<Span>>` that the *owner thread* only ever
+//! touches through `try_lock`. The only other party is the collector, which
+//! drains with a blocking lock. A worker therefore never blocks on
+//! recording: if the collector happens to hold the lock, the span is
+//! dropped and counted; if the ring is full, the oldest span is dropped and
+//! counted. Poisoned locks are recovered via `into_inner` — a panicking
+//! worker must not wedge observability for everyone else.
+//!
+//! [`TraceSink`]: super::TraceSink
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, TryLockError};
+
+use super::Span;
+
+pub(crate) struct ThreadRing {
+    tid: u64,
+    capacity: usize,
+    buf: Mutex<VecDeque<Span>>,
+}
+
+impl ThreadRing {
+    pub(crate) fn new(tid: u64, capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            tid,
+            capacity,
+            buf: Mutex::new(VecDeque::with_capacity(capacity)),
+        }
+    }
+
+    /// Stable per-sink thread label, stamped into every span's `tid`.
+    pub(crate) fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    /// Push a span without ever blocking. Returns the number of spans
+    /// dropped by this call: 0 on a clean push, 1 when the ring was full
+    /// (oldest evicted) or the collector held the lock (this span lost).
+    pub(crate) fn push(&self, span: Span) -> u64 {
+        let mut q = match self.buf.try_lock() {
+            Ok(q) => q,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => return 1,
+        };
+        let mut dropped = 0;
+        if q.len() >= self.capacity {
+            q.pop_front();
+            dropped = 1;
+        }
+        q.push_back(span);
+        dropped
+    }
+
+    /// Collector side: drain everything, blocking until the owner thread's
+    /// in-flight `try_lock` (if any) releases.
+    pub(crate) fn drain(&self) -> Vec<Span> {
+        let mut q = self.buf.lock().unwrap_or_else(|p| p.into_inner());
+        q.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{SpanData, Stage, Tenant, TraceId};
+
+    fn span(start: u64) -> Span {
+        Span {
+            trace: TraceId(0),
+            stage: Stage::Solve,
+            tenant: Tenant::None,
+            start_us: start,
+            end_us: start + 1,
+            tid: 0,
+            data: SpanData::None,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_when_full() {
+        let ring = ThreadRing::new(7, 3);
+        let mut dropped = 0;
+        for i in 0..5 {
+            dropped += ring.push(span(i));
+        }
+        assert_eq!(dropped, 2);
+        let kept: Vec<u64> = ring.drain().iter().map(|s| s.start_us).collect();
+        assert_eq!(kept, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn drain_empties_the_ring() {
+        let ring = ThreadRing::new(0, 8);
+        assert_eq!(ring.push(span(1)), 0);
+        assert_eq!(ring.drain().len(), 1);
+        assert!(ring.drain().is_empty());
+    }
+}

@@ -1,0 +1,170 @@
+//! Shared 32-bucket log2 latency histogram (PR 9).
+//!
+//! `coordinator/metrics.rs` grew three hand-rolled copies of the same
+//! structure (query latency, certified interval width, and the PR 9 stage
+//! histograms); this module dedupes them behind one unit-tested type with
+//! the PR 7 *clamped* quantile semantics: a quantile answer is the upper
+//! edge of the selected bucket, clamped to the largest value actually
+//! observed, so a histogram fed a single 100µs sample reports p99 = 100µs
+//! rather than the 128µs bucket edge.
+//!
+//! Bucket `i` covers values `v` with `floor(log2(max(v, 1))) == i`, with
+//! everything at or above `2^31` clamped into the last bucket. Recording is
+//! O(1) and allocation-free; the struct is plain-old-data and `Clone`.
+
+/// Fixed 32-bucket log2 histogram over `u64` samples.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Log2Histogram {
+    buckets: [u64; 32],
+    count: u64,
+    max: u64,
+}
+
+impl Log2Histogram {
+    /// Empty histogram. Identical to `Default::default()`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a sample: `floor(log2(max(v, 1)))`, clamped to 31.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.max(1).leading_zeros() as usize - 1).min(31)
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.max = self.max.max(v);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest sample seen (0 when empty). Quantiles clamp to this.
+    pub fn observed_max(&self) -> u64 {
+        self.max
+    }
+
+    /// Raw bucket counts (for callers that fold histograms into reports).
+    pub fn buckets(&self) -> &[u64; 32] {
+        &self.buckets
+    }
+
+    /// Index of the bucket holding the `q`-quantile sample, or `None` when
+    /// the histogram is empty or `q` exceeds 1.0 past the last bucket.
+    ///
+    /// The target rank is `ceil(q * count)`, matching the PR 7 walk: the
+    /// first bucket whose cumulative count reaches the rank wins.
+    pub fn quantile_bucket(&self, q: f64) -> Option<usize> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Clamped `q`-quantile in the sample's own units: the upper edge of
+    /// the selected bucket (`2^(i+1)`), clamped to the observed maximum.
+    /// Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        match self.quantile_bucket(q) {
+            Some(i) => (1u64 << (i + 1)).min(self.max),
+            None => self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_placement_is_floor_log2() {
+        assert_eq!(Log2Histogram::bucket_of(0), 0);
+        assert_eq!(Log2Histogram::bucket_of(1), 0);
+        assert_eq!(Log2Histogram::bucket_of(2), 1);
+        assert_eq!(Log2Histogram::bucket_of(3), 1);
+        assert_eq!(Log2Histogram::bucket_of(4), 2);
+        assert_eq!(Log2Histogram::bucket_of(1023), 9);
+        assert_eq!(Log2Histogram::bucket_of(1024), 10);
+        assert_eq!(Log2Histogram::bucket_of(u64::MAX), 31);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Log2Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.observed_max(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile_bucket(0.5), None);
+    }
+
+    #[test]
+    fn single_sample_quantile_clamps_to_observed_max() {
+        // PR 7 semantics: one 100µs sample must report 100, not the 128
+        // bucket edge.
+        let mut h = Log2Histogram::new();
+        h.record(100);
+        assert_eq!(h.quantile(0.5), 100);
+        assert_eq!(h.quantile(0.99), 100);
+    }
+
+    #[test]
+    fn quantile_walks_cumulative_counts() {
+        let mut h = Log2Histogram::new();
+        // 90 samples at 100µs (bucket 6), 10 at 1000µs (bucket 9).
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        // p50 lands in bucket 6: edge 128, observed max 1000 -> 128.
+        assert_eq!(h.quantile(0.5), 128);
+        // p99 lands in bucket 9: edge 1024, clamped to max 1000.
+        assert_eq!(h.quantile(0.99), 1000);
+        assert_eq!(h.observed_max(), 1000);
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn quantile_bucket_exposes_raw_index_for_unit_mapping() {
+        // metrics.rs maps width buckets back into seconds through the ppb
+        // encoding; it needs the raw bucket index, not the u64 edge.
+        let mut h = Log2Histogram::new();
+        h.record(100); // ppb value, bucket 6
+        assert_eq!(h.quantile_bucket(0.5), Some(6));
+    }
+
+    #[test]
+    fn max_tracks_largest_sample_across_buckets() {
+        let mut h = Log2Histogram::new();
+        h.record(3);
+        h.record(300);
+        h.record(7);
+        assert_eq!(h.observed_max(), 300);
+        // q=1.0 rank == count: last occupied bucket, clamped to max.
+        assert_eq!(h.quantile(1.0), 300);
+    }
+}

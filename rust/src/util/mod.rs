@@ -1,8 +1,10 @@
 //! Small self-contained utilities (offline-build substitutes for common
-//! ecosystem crates): a JSON parser for the artifact manifest and a
-//! micro-benchmark timing harness used by the `benches/` targets.
+//! ecosystem crates): a JSON parser for the artifact manifest, a
+//! micro-benchmark timing harness used by the `benches/` targets, and the
+//! shared log2 latency histogram behind every quantile gauge.
 
 pub mod bench;
+pub mod histogram;
 pub mod json;
 
 /// A duration in whole microseconds, saturating at `u64::MAX` — the one

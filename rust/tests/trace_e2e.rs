@@ -1,0 +1,384 @@
+//! Integration: PR 9 end-to-end tracing. Sampled queries must produce
+//! *well-formed trace trees* — every span's exit is at or after its
+//! entry, children nest inside their parents, and sequential children's
+//! durations sum to no more than the parent wall time — across both
+//! service paths: an iteration-budgeted distance solve (query ⊃ batcher +
+//! solve ⊃ slice) and a routed, budgeted retrieval over a 3-shard corpus
+//! (retrieve ⊃ mailbox + search ⊃ shard ⊃ cascade + refine ⊃ slice).
+//! The exported Chrome trace must round-trip through the crate's own
+//! JSON parser.
+//!
+//! All timestamps come from one sink epoch via monotonic reads, so
+//! containment is asserted exactly; only *sums* of child durations get
+//! slack (floor-truncation to µs can inflate each child by <1µs).
+
+use std::time::Duration;
+
+use sinkhorn_rs::coordinator::{
+    BatcherConfig, CoordinatorConfig, CorpusId, DistanceService, MetricId, Query,
+    RetrievalQuery,
+};
+use sinkhorn_rs::data::ClusteredCorpus;
+use sinkhorn_rs::metric::RandomMetric;
+use sinkhorn_rs::retrieval::RoutingConfig;
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::SolveBudget;
+use sinkhorn_rs::trace::{chrome_trace, Span, SpanData, Stage, TraceConfig, TraceId};
+use sinkhorn_rs::util::json::Json;
+
+/// Per-child slack (µs) for duration-sum assertions: each child span's
+/// floor-truncated duration can exceed its real duration by <1µs.
+const SUM_SLACK_US: u64 = 2;
+
+fn assert_well_formed(span: &Span) {
+    assert!(
+        span.end_us >= span.start_us,
+        "span exit precedes entry: {span:?}"
+    );
+}
+
+fn contained(child: &Span, parent: &Span) -> bool {
+    child.start_us >= parent.start_us && child.end_us <= parent.end_us
+}
+
+fn assert_contained(child: &Span, parent: &Span) {
+    assert!(
+        contained(child, parent),
+        "child span escapes its parent:\n  child  {child:?}\n  parent {parent:?}"
+    );
+}
+
+fn of_stage(spans: &[Span], stage: Stage) -> Vec<Span> {
+    spans.iter().copied().filter(|s| s.stage == stage).collect()
+}
+
+fn sum_us(spans: &[Span]) -> u64 {
+    spans.iter().map(Span::duration_us).sum()
+}
+
+/// Group retained spans by trace id, keeping only traces that recorded
+/// the given root stage, ordered by trace id.
+fn traces_with_root(spans: &[Span], root: Stage) -> Vec<(TraceId, Vec<Span>)> {
+    let mut ids: Vec<TraceId> = spans
+        .iter()
+        .filter(|s| s.stage == root)
+        .map(|s| s.trace)
+        .collect();
+    ids.sort();
+    ids.dedup();
+    ids.into_iter()
+        .map(|id| {
+            (
+                id,
+                spans.iter().copied().filter(|s| s.trace == id).collect(),
+            )
+        })
+        .collect()
+}
+
+/// The exported Chrome trace document must be valid JSON under the
+/// crate's own parser, with one "X" event per span carrying µs
+/// timestamps on the trace's process track.
+fn assert_chrome_roundtrip(spans: &[Span]) {
+    let doc = chrome_trace(spans);
+    let text = format!("{doc}");
+    let parsed = Json::parse(&text).expect("chrome trace must be self-parseable");
+    let events = parsed.as_array().expect("array document");
+    assert_eq!(events.len(), spans.len());
+    for (event, span) in events.iter().zip(spans) {
+        assert_eq!(event.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(
+            event.get("name").and_then(Json::as_str),
+            Some(span.stage.name())
+        );
+        assert_eq!(
+            event.get("ts").and_then(Json::as_f64),
+            Some(span.start_us as f64)
+        );
+        assert_eq!(
+            event.get("pid").and_then(Json::as_f64),
+            Some(span.trace.0 as f64)
+        );
+    }
+}
+
+#[test]
+fn budgeted_distance_traces_form_a_tree() {
+    let mut config = CoordinatorConfig::cpu_only();
+    config.cpu_workers = 2;
+    config.batcher = BatcherConfig {
+        max_batch: 4,
+        max_delay: Duration::from_millis(2),
+        ..BatcherConfig::default()
+    };
+    config.trace = Some(TraceConfig { sample_every: 1, ring_capacity: 4096 });
+    let svc = DistanceService::start(config).unwrap();
+    let d = 16;
+    let mut rng = seeded_rng(909);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), metric).unwrap();
+
+    // An iteration budget routes through the certified slice driver and
+    // terminates deterministically (a deadline budget in fixed-iteration
+    // mode would slice until the wall clock actually expires): 48
+    // iterations = 6 CERT_STRIDE slices per query.
+    let queries = 6;
+    for _ in 0..queries {
+        let r = Histogram::sample_uniform(d, &mut rng);
+        let c = Histogram::sample_uniform(d, &mut rng);
+        let out = svc
+            .distance(
+                Query::new(MetricId(0), 9.0, r, c)
+                    .with_budget(SolveBudget::Iterations(48)),
+            )
+            .unwrap();
+        assert!(out.distance().is_finite());
+    }
+
+    let sink = svc.trace_sink().expect("tracing configured");
+    let spans = sink.sampled_spans();
+    for span in &spans {
+        assert_well_formed(span);
+    }
+    let traces = traces_with_root(&spans, Stage::Query);
+    assert_eq!(traces.len(), queries, "sample_every=1 traces every query");
+
+    for (id, spans) in &traces {
+        let roots = of_stage(spans, Stage::Query);
+        assert_eq!(roots.len(), 1, "trace {id:?}: exactly one root");
+        let root = roots[0];
+        let batcher = of_stage(spans, Stage::Batcher);
+        let solve = of_stage(spans, Stage::Solve);
+        let slices = of_stage(spans, Stage::Slice);
+        assert_eq!(batcher.len(), 1, "trace {id:?}");
+        assert_eq!(solve.len(), 1, "trace {id:?}");
+        assert!(!slices.is_empty(), "a budgeted solve must record slices");
+
+        // Nesting: batcher wait and the panel solve partition the root.
+        assert_contained(&batcher[0], &root);
+        assert_contained(&solve[0], &root);
+        assert!(batcher[0].end_us <= solve[0].start_us, "wait precedes solve");
+        for slice in &slices {
+            assert_contained(slice, &solve[0]);
+            match slice.data {
+                SpanData::Slice { iterations, width, .. } => {
+                    assert!(iterations >= 1, "an executed slice iterated");
+                    assert!(
+                        width >= 0.0,
+                        "certified interval width is non-negative: {width}"
+                    );
+                }
+                other => panic!("slice span carries slice payload, got {other:?}"),
+            }
+        }
+        // Sequential children: wait + solve can't exceed the query wall.
+        assert!(
+            sum_us(&batcher) + sum_us(&solve)
+                <= root.duration_us() + 2 * SUM_SLACK_US,
+            "batcher {}us + solve {}us > query {}us",
+            sum_us(&batcher),
+            sum_us(&solve),
+            root.duration_us()
+        );
+    }
+
+    assert_eq!(sink.dropped(), 0, "rings were sized generously");
+    assert_chrome_roundtrip(&traces[0].1);
+
+    // The snapshot folds the same spans into per-stage quantile rows.
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.traces_sampled, queries as u64);
+    assert!(snap.trace_spans >= 3 * queries as u64);
+    assert_eq!(snap.trace_spans_dropped, 0);
+    let stages: Vec<&str> = snap.stages.iter().map(|r| r.stage).collect();
+    for want in ["query", "batcher", "solve", "slice"] {
+        assert!(stages.contains(&want), "missing stage row {want}: {stages:?}");
+    }
+    for row in &snap.stages {
+        assert!(row.count >= 1);
+        assert!(row.p50_us <= row.p99_us, "{row:?}");
+        assert_eq!(row.tenant, "m0");
+    }
+    let rendered = snap.to_string();
+    assert!(rendered.contains("stages={"), "{rendered}");
+    assert!(rendered.contains("traces(sampled=6"), "{rendered}");
+    svc.shutdown();
+}
+
+#[test]
+fn routed_budgeted_retrieval_traces_form_a_tree() {
+    let mut config = CoordinatorConfig::cpu_only();
+    config.cpu_workers = 2;
+    config.retrieval_shards = 3;
+    // One walker thread: the per-shard walks are sequential, so shard
+    // durations must additionally *sum* below the search wall.
+    config.retrieval_threads = 1;
+    config.retrieval_budget = SolveBudget::Iterations(24);
+    config.retrieval_routing = Some(RoutingConfig {
+        centroids: 4,
+        probes: 2,
+        min_shortlist: 8,
+        iterations: 8,
+    });
+    config.trace = Some(TraceConfig { sample_every: 1, ring_capacity: 4096 });
+    let svc = DistanceService::start(config).unwrap();
+    let d = 12;
+    let mut rng = seeded_rng(910);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), metric).unwrap();
+    let gen = ClusteredCorpus::new(d, 4, 12, 0.12);
+    let (corpus, protos) = gen.generate(&mut rng);
+    let indexed = svc
+        .register_corpus(CorpusId(0), MetricId(0), 9.0, corpus)
+        .unwrap();
+    assert_eq!(indexed, 48);
+
+    for proto in &protos {
+        let q = gen.mixture_at(proto, 0.12, &mut rng);
+        let out = svc
+            .retrieve(RetrievalQuery { corpus: CorpusId(0), r: q, k: 3 })
+            .unwrap();
+        assert_eq!(out.hits.len(), 3);
+        assert!(out.report.routed, "ANN router must own candidate generation");
+    }
+
+    let sink = svc.trace_sink().expect("tracing configured");
+    let spans = sink.sampled_spans();
+    for span in &spans {
+        assert_well_formed(span);
+    }
+    let traces = traces_with_root(&spans, Stage::Retrieve);
+    assert_eq!(traces.len(), protos.len(), "every retrieval is traced");
+
+    for (id, spans) in &traces {
+        let roots = of_stage(spans, Stage::Retrieve);
+        assert_eq!(roots.len(), 1, "trace {id:?}: exactly one root");
+        let root = roots[0];
+        let mailbox = of_stage(spans, Stage::Mailbox);
+        let search = of_stage(spans, Stage::Search);
+        let shards = of_stage(spans, Stage::Shard);
+        let cascades = of_stage(spans, Stage::Cascade);
+        let refines = of_stage(spans, Stage::Refine);
+        let slices = of_stage(spans, Stage::Slice);
+        assert_eq!(mailbox.len(), 1, "trace {id:?}");
+        assert_eq!(search.len(), 1, "trace {id:?}");
+        assert_eq!(shards.len(), 3, "one span per corpus shard");
+        assert_eq!(cascades.len(), 3, "one cascade per shard walk");
+        assert_eq!(refines.len(), 3, "one refine per shard walk");
+        assert!(
+            !slices.is_empty(),
+            "budgeted refine must record certified slices"
+        );
+
+        // Nesting, layer by layer.
+        assert_contained(&mailbox[0], &root);
+        assert_contained(&search[0], &root);
+        assert!(
+            mailbox[0].end_us <= search[0].start_us,
+            "queue wait precedes the walk"
+        );
+        for shard in &shards {
+            assert_contained(shard, &search[0]);
+        }
+        for inner in cascades.iter().chain(&refines) {
+            assert!(
+                shards.iter().any(|s| contained(inner, s)),
+                "cascade/refine span outside every shard walk: {inner:?}"
+            );
+        }
+        for slice in &slices {
+            assert!(
+                refines.iter().any(|r| contained(slice, r)),
+                "slice span outside every refine: {slice:?}"
+            );
+        }
+
+        // Sequential children sum below their parent's wall time.
+        assert!(
+            sum_us(&mailbox) + sum_us(&search)
+                <= root.duration_us() + 2 * SUM_SLACK_US,
+            "mailbox {}us + search {}us > retrieve {}us",
+            sum_us(&mailbox),
+            sum_us(&search),
+            root.duration_us()
+        );
+        assert!(
+            sum_us(&shards) <= search[0].duration_us() + 3 * SUM_SLACK_US,
+            "serial shard walks {}us > search {}us",
+            sum_us(&shards),
+            search[0].duration_us()
+        );
+
+        // Typed payloads carried the cascade/refine detail.
+        match search[0].data {
+            SpanData::Search { hits, routed, .. } => {
+                assert_eq!(hits, 3);
+                assert!(routed);
+            }
+            other => panic!("search span carries search payload, got {other:?}"),
+        }
+        let mut priced = 0;
+        for cascade in &cascades {
+            match cascade.data {
+                SpanData::Cascade { priced: p, shortlist, .. } => {
+                    assert_eq!(p, shortlist);
+                    priced += p;
+                }
+                other => panic!("cascade payload mismatch: {other:?}"),
+            }
+        }
+        assert!(priced >= 3, "the shortlists covered at least top-k");
+        assert!(
+            priced < 48,
+            "min_shortlist=8 over 3x16 entries must shortlist sublinearly"
+        );
+    }
+
+    assert_eq!(sink.dropped(), 0, "rings were sized generously");
+    assert_chrome_roundtrip(&traces[0].1);
+
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.traces_sampled, protos.len() as u64);
+    assert_eq!(snap.trace_spans_dropped, 0);
+    let stages: Vec<&str> = snap.stages.iter().map(|r| r.stage).collect();
+    for want in ["retrieve", "mailbox", "search", "shard", "cascade", "refine", "slice"] {
+        assert!(stages.contains(&want), "missing stage row {want}: {stages:?}");
+    }
+    for row in &snap.stages {
+        assert_eq!(row.tenant, "c0");
+    }
+    // Satellite: index-build time from registration surfaced per corpus.
+    assert_eq!(snap.retrieval_shards.len(), 1);
+    assert!(
+        snap.retrieval_shards[0].build_us > 0,
+        "48-entry sharded index build takes measurable time"
+    );
+    let rendered = snap.to_string();
+    assert!(rendered.contains("build_us="), "{rendered}");
+    assert!(rendered.contains("stages={"), "{rendered}");
+    svc.shutdown();
+}
+
+#[test]
+fn untraced_service_records_nothing_and_renders_no_stage_section() {
+    let mut config = CoordinatorConfig::cpu_only();
+    config.cpu_workers = 2;
+    let svc = DistanceService::start(config).unwrap();
+    assert!(svc.trace_sink().is_none(), "tracing defaults off");
+    let d = 8;
+    let mut rng = seeded_rng(911);
+    let metric = RandomMetric::new(d).sample(&mut rng);
+    svc.register_metric(MetricId(0), metric).unwrap();
+    let r = Histogram::sample_uniform(d, &mut rng);
+    let c = Histogram::sample_uniform(d, &mut rng);
+    svc.distance(
+        Query::new(MetricId(0), 9.0, r, c).with_budget(SolveBudget::Iterations(16)),
+    )
+    .unwrap();
+    let snap = svc.stats().unwrap();
+    assert!(snap.stages.is_empty());
+    assert_eq!(snap.traces_sampled, 0);
+    assert_eq!(snap.trace_spans, 0);
+    assert!(!snap.to_string().contains("stages={"));
+    svc.shutdown();
+}
