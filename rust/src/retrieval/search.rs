@@ -569,7 +569,7 @@ impl RetrievalService {
                 start_us,
                 end_us: t.sink.now_us(),
                 tid: 0,
-                data: SpanData::Cascade { tier: deepest, priced: n, shortlist: n },
+                data: SpanData::Cascade { tier: deepest, priced: n },
             });
         }
         let refine_start = trace.as_ref().map(|t| t.sink.now_us());

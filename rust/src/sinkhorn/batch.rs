@@ -183,6 +183,13 @@ impl BatchSinkhorn {
             if let (Some((sink, tenant, cols)), Some(start_us)) = (&trace, slice_start) {
                 let end_us = sink.now_us();
                 for (j, col) in cols.iter().enumerate() {
+                    // Columns that converged in an earlier slice run zero
+                    // iterations here; recording them would emit one
+                    // no-op span per column per remaining slice and bloat
+                    // ring/drop pressure on large panels.
+                    if outs[j].stats.iterations == 0 {
+                        continue;
+                    }
                     if let Some(id) = col {
                         sink.record(crate::trace::Span {
                             trace: *id,

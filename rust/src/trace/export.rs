@@ -62,14 +62,9 @@ fn args(span: &Span) -> Json {
             set("solved", num(solved as f64));
             set("pruned", num(pruned as f64));
         }
-        SpanData::Cascade {
-            tier,
-            priced,
-            shortlist,
-        } => {
+        SpanData::Cascade { tier, priced } => {
             set("tier", num(tier as f64));
             set("priced", num(priced as f64));
-            set("shortlist", num(shortlist as f64));
         }
         SpanData::Refine {
             panels,

@@ -43,7 +43,7 @@ pub use export::chrome_trace;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::histogram::Log2Histogram;
@@ -185,12 +185,11 @@ pub enum SpanData {
         solved: usize,
         pruned: usize,
     },
-    /// Cascade pricing: deepest bound tier consulted and candidates priced.
-    Cascade {
-        tier: u8,
-        priced: usize,
-        shortlist: usize,
-    },
+    /// Cascade pricing: deepest bound tier consulted and candidates
+    /// priced. The candidate set *is* the router shortlist when routed
+    /// (the `Search` span's `routed` flag says which), so there is no
+    /// separate shortlist count to carry.
+    Cascade { tier: u8, priced: usize },
     /// Refine: straddler panel size, warm-seeded columns, rescue count.
     Refine {
         panels: usize,
@@ -278,10 +277,27 @@ pub struct TraceSink {
 /// the same process must not reuse another sink's rings).
 static NEXT_SINK_ID: AtomicU64 = AtomicU64::new(1);
 
+/// One thread-local cache entry: the owning thread's ring for one sink.
+/// Dropping the entry — thread exit or cache eviction — retires the ring,
+/// which licenses the sink's collector to drain the remaining spans and
+/// free it. Without this, every short-lived scoped worker (shard/panel
+/// threads are fresh per solve) would pin a ring in the sink forever.
+struct CachedRing {
+    sink_id: u64,
+    ring: Arc<ThreadRing>,
+}
+
+impl Drop for CachedRing {
+    fn drop(&mut self) {
+        self.ring.retire();
+    }
+}
+
 thread_local! {
-    /// Per-thread cache of (sink id → ring). Weak so a dropped sink frees
-    /// its rings even while worker threads live on.
-    static THREAD_RINGS: std::cell::RefCell<Vec<(u64, Weak<ThreadRing>)>> =
+    /// Per-thread cache of (sink id → ring). Entries are retire-on-drop
+    /// guards: thread exit hands the ring back to the sink for a final
+    /// drain + prune (see [`TraceSink::collect`]).
+    static THREAD_RINGS: std::cell::RefCell<Vec<CachedRing>> =
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
@@ -330,12 +346,8 @@ impl TraceSink {
     pub fn record(&self, mut span: Span) {
         let dropped = THREAD_RINGS.with(|cell| {
             let mut cache = cell.borrow_mut();
-            let ring = match cache
-                .iter()
-                .find(|(id, _)| *id == self.id)
-                .and_then(|(_, w)| w.upgrade())
-            {
-                Some(r) => r,
+            let ring = match cache.iter().find(|c| c.sink_id == self.id) {
+                Some(c) => Arc::clone(&c.ring),
                 None => {
                     let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
                     let ring = Arc::new(ThreadRing::new(tid, self.ring_capacity));
@@ -343,8 +355,14 @@ impl TraceSink {
                         .lock()
                         .unwrap_or_else(|p| p.into_inner())
                         .push(Arc::clone(&ring));
-                    cache.retain(|(id, w)| *id != self.id && w.strong_count() > 0);
-                    cache.push((self.id, Arc::downgrade(&ring)));
+                    // Evict entries whose sink died (only this thread's
+                    // guard still holds the ring): dropping them retires
+                    // the orphaned ring so it frees immediately.
+                    cache.retain(|c| Arc::strong_count(&c.ring) > 1);
+                    cache.push(CachedRing {
+                        sink_id: self.id,
+                        ring: Arc::clone(&ring),
+                    });
                     ring
                 }
             };
@@ -357,28 +375,54 @@ impl TraceSink {
     }
 
     /// Drain every thread ring and fold the spans into the stage
-    /// histograms + the bounded export buffer. Called by the readers
-    /// (`stage_rows`, `sampled_spans`); safe from any thread.
+    /// histograms + the bounded export buffer; rings whose owner thread
+    /// has exited are dropped after their final drain, so ring memory is
+    /// bounded by *live* recording threads, not by every worker thread
+    /// ever spawned. Called by the readers (`stage_rows`,
+    /// `sampled_spans`); safe from any thread.
     pub fn collect(&self) {
         let rings: Vec<Arc<ThreadRing>> = self
             .rings
             .lock()
             .unwrap_or_else(|p| p.into_inner())
             .clone();
-        let mut c = self.collected.lock().unwrap_or_else(|p| p.into_inner());
-        for ring in rings {
-            for span in ring.drain() {
-                c.stages
-                    .entry((span.stage, span.tenant))
-                    .or_default()
-                    .record(span.duration_us());
-                if c.spans.len() >= RETAINED_SPANS {
-                    c.spans.pop_front();
+        let mut dead: Vec<u64> = Vec::new();
+        {
+            let mut c = self.collected.lock().unwrap_or_else(|p| p.into_inner());
+            for ring in rings {
+                // Order matters: only a ring observed retired *before* its
+                // drain may be pruned — retirement happens-after the
+                // owner's last push, so the drain captured everything.
+                let retired = ring.is_retired();
+                for span in ring.drain() {
+                    c.stages
+                        .entry((span.stage, span.tenant))
+                        .or_default()
+                        .record(span.duration_us());
+                    if c.spans.len() >= RETAINED_SPANS {
+                        c.spans.pop_front();
+                    }
+                    c.spans.push_back(span);
+                    c.span_total += 1;
                 }
-                c.spans.push_back(span);
-                c.span_total += 1;
+                if retired {
+                    dead.push(ring.tid());
+                }
             }
         }
+        if !dead.is_empty() {
+            self.rings
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .retain(|r| !dead.contains(&r.tid()));
+        }
+    }
+
+    /// Rings currently held by the sink (live threads + retired rings not
+    /// yet swept by [`Self::collect`]).
+    #[cfg(test)]
+    fn ring_count(&self) -> usize {
+        self.rings.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 
     /// The `stage_breakdown` rows: per (stage, tenant) clamped p50/p99/max
@@ -527,6 +571,36 @@ mod tests {
         tids.sort_unstable();
         tids.dedup();
         assert_eq!(tids.len(), 3);
+    }
+
+    #[test]
+    fn dead_thread_rings_are_flushed_then_pruned() {
+        let sink = TraceSink::new(TraceConfig {
+            sample_every: 1,
+            ring_capacity: 64,
+        });
+        // Fresh scoped workers per solve is the serving-stack shape that
+        // used to leak one ring per thread forever.
+        for round in 0..3 {
+            std::thread::scope(|scope| {
+                for w in 0..4 {
+                    let sink = &sink;
+                    scope.spawn(move || {
+                        sink.record(span(sink, 0, Stage::Shard, round, round + w + 1));
+                    });
+                }
+            });
+        }
+        // The 12 worker threads are gone; their spans must survive the
+        // exit (flushed on the next collect), and their rings must not.
+        assert_eq!(sink.sampled_spans().len(), 12);
+        assert_eq!(sink.ring_count(), 0);
+        assert_eq!(sink.dropped(), 0);
+        // A live thread's ring stays resident across collects.
+        sink.record(span(&sink, 0, Stage::Query, 0, 5));
+        sink.collect();
+        assert_eq!(sink.ring_count(), 1);
+        assert_eq!(sink.span_count(), 13);
     }
 
     #[test]

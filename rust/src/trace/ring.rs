@@ -9,9 +9,21 @@
 //! counted. Poisoned locks are recovered via `into_inner` — a panicking
 //! worker must not wedge observability for everyone else.
 //!
+//! The buffer grows on demand up to `capacity` rather than being
+//! preallocated: shard/panel workers are fresh scoped threads per solve,
+//! and a ring that only ever holds a handful of spans must not pin
+//! `capacity * size_of::<Span>()` (~300 KB at the default 4096).
+//!
+//! When its owner thread exits, the thread-local cache guard marks the
+//! ring [`retired`](ThreadRing::retire); the collector drains any
+//! remaining spans and then drops the ring, so long-running services with
+//! short-lived worker threads hold only as many rings as there are *live*
+//! recording threads.
+//!
 //! [`TraceSink`]: super::TraceSink
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, TryLockError};
 
 use super::Span;
@@ -19,6 +31,7 @@ use super::Span;
 pub(crate) struct ThreadRing {
     tid: u64,
     capacity: usize,
+    retired: AtomicBool,
     buf: Mutex<VecDeque<Span>>,
 }
 
@@ -28,13 +41,29 @@ impl ThreadRing {
         Self {
             tid,
             capacity,
-            buf: Mutex::new(VecDeque::with_capacity(capacity)),
+            retired: AtomicBool::new(false),
+            // Lazy: grows geometrically under push up to `capacity`.
+            buf: Mutex::new(VecDeque::new()),
         }
     }
 
     /// Stable per-sink thread label, stamped into every span's `tid`.
     pub(crate) fn tid(&self) -> u64 {
         self.tid
+    }
+
+    /// Owner-thread exit: no further pushes will ever happen. Release
+    /// pairs with the Acquire in [`Self::is_retired`] so a collector that
+    /// observes the flag also observes every prior push.
+    pub(crate) fn retire(&self) {
+        self.retired.store(true, Ordering::Release);
+    }
+
+    /// True once the owner thread has exited. A collector that reads
+    /// `true` *before* draining may free the ring afterwards: the drain is
+    /// guaranteed to capture every span the owner ever pushed.
+    pub(crate) fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
     }
 
     /// Push a span without ever blocking. Returns the number of spans
@@ -98,5 +127,17 @@ mod tests {
         assert_eq!(ring.push(span(1)), 0);
         assert_eq!(ring.drain().len(), 1);
         assert!(ring.drain().is_empty());
+    }
+
+    #[test]
+    fn retirement_is_sticky_and_pushes_still_drain() {
+        let ring = ThreadRing::new(1, 8);
+        assert!(!ring.is_retired());
+        ring.push(span(1));
+        ring.retire();
+        assert!(ring.is_retired());
+        // Spans pushed before retirement survive until a drain.
+        assert_eq!(ring.drain().len(), 1);
+        assert!(ring.is_retired());
     }
 }
