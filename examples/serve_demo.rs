@@ -12,7 +12,10 @@
 //! bound-then-refine cascade, with prune/recall statistics. Tracing is
 //! on for every query (PR 9): the demo prints the per-stage latency
 //! breakdown and exports the last retrieval's span tree to
-//! `trace_demo.json` for Perfetto.
+//! `trace_demo.json` for Perfetto. Telemetry is on too (PR 10): the
+//! demo binds the Prometheus scrape server on an ephemeral localhost
+//! port, prints the URL, self-scrapes `/metrics` at the end and prints
+//! the windowed per-tenant SLO report.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_demo
@@ -26,6 +29,7 @@ use sinkhorn_rs::coordinator::{
 };
 use sinkhorn_rs::prelude::*;
 use sinkhorn_rs::sinkhorn::{LambdaSchedule, SinkhornConfig, SolveBudget};
+use sinkhorn_rs::telemetry::http_get;
 use sinkhorn_rs::trace::{chrome_trace, Stage};
 use std::time::{Duration, Instant};
 
@@ -61,9 +65,25 @@ fn main() {
         // defaults sample 1/64) so the stage table below is dense and
         // the exported flame graph always exists.
         trace: Some(TraceConfig { sample_every: 1, ring_capacity: 4096 }),
+        // PR 10: bind the Prometheus exporter on an ephemeral localhost
+        // port with 6 x 10s rollup windows and a lenient latency SLO —
+        // the demo's point is the live report, not actual shedding.
+        telemetry: Some(TelemetryConfig {
+            bind: "127.0.0.1:0".into(),
+            window: Duration::from_secs(10),
+            windows: 6,
+            slo: Some(SloPolicy {
+                p99_latency: Duration::from_millis(250),
+                ..SloPolicy::default()
+            }),
+        }),
         ..Default::default()
     })
     .expect("service start");
+    let scrape = service.scrape_addr().expect("telemetry exporter bound");
+    println!(
+        "telemetry: scrape http://{scrape}/metrics (also /healthz, /snapshot, /slo)"
+    );
 
     // Two ground metrics: a 64-dim random metric (served by XLA) and a
     // 100-dim one (no artifact -> CPU fallback), demonstrating routing.
@@ -308,5 +328,41 @@ fn main() {
             Err(e) => eprintln!("could not write trace_demo.json: {e}"),
         }
     }
+
+    // Telemetry (PR 10): self-scrape the live exporter. /metrics serves
+    // the cumulative registry in Prometheus text exposition v0.0.4 —
+    // point a real Prometheus at the URL printed above to chart these.
+    println!("\ntelemetry scrape http://{scrape}/metrics:");
+    match http_get(scrape, "/metrics", Duration::from_secs(5)) {
+        Ok((200, body)) => {
+            let mut shown = 0usize;
+            for line in body.lines() {
+                let keep = line.starts_with("sinkhorn_queries_total")
+                    || line.starts_with("sinkhorn_retrievals_total")
+                    || line.starts_with("sinkhorn_errors_total")
+                    || line.starts_with("sinkhorn_deadline_misses_total")
+                    || line.starts_with("sinkhorn_budget_sheds_total")
+                    || line.starts_with("sinkhorn_tenant_queries_total")
+                    || line.starts_with("sinkhorn_tenant_searches_total");
+                if keep {
+                    println!("  {line}");
+                    shown += 1;
+                }
+            }
+            let total = body.lines().filter(|l| !l.starts_with('#')).count();
+            println!("  ... ({shown} of {total} series shown)");
+        }
+        Ok((code, _)) => eprintln!("  /metrics returned HTTP {code}"),
+        Err(e) => eprintln!("  /metrics scrape failed: {e}"),
+    }
+
+    // The windowed SLO report: per-tenant sliding-window miss rates,
+    // latency quantiles, and burn-rate gauges over the rollup ring.
+    match http_get(scrape, "/slo", Duration::from_secs(5)) {
+        Ok((200, body)) => println!("\nwindowed SLO report:\n  {}", body.trim_end()),
+        Ok((code, _)) => eprintln!("/slo returned HTTP {code}"),
+        Err(e) => eprintln!("/slo scrape failed: {e}"),
+    }
+
     service.shutdown();
 }

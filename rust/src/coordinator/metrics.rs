@@ -1,30 +1,206 @@
-//! Service observability: counters and latency aggregates.
+//! Service observability: registry-backed counters and latency
+//! aggregates.
+//!
+//! Since PR 10 every plain counter/gauge/histogram lives in a
+//! [`crate::telemetry::Registry`] instrument with a stable
+//! `sinkhorn_`-prefixed name — that is what `/metrics` exposes — and
+//! `Stats` keeps only the structured extras (per-worker occupancy,
+//! kernel structure, per-corpus gauge rows) as fields. The snapshot API
+//! and its `Display` are unchanged; mutation happens through the record
+//! methods below instead of raw field writes.
 
 use crate::linalg::KernelStats;
 use crate::retrieval::{CorpusKey, RetrievalReport, RuntimeFeedback, ShardGauges};
 use crate::sinkhorn::SolveOutcome;
-use crate::trace::StageRow;
+use crate::telemetry::{
+    CounterId, GaugeId, HistogramId, Labels, PromFamily, PromKind, PromSample,
+    PromValue, Registry, SloMonitor, TelemetryConfig, TelemetryReport,
+};
+use crate::trace::{StageRow, Tenant};
 use crate::util::histogram::Log2Histogram;
 use crate::util::saturating_micros;
 use crate::F;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+/// Handles to every statically-registered instrument. Registered once at
+/// [`Stats`] construction; updates are O(1) dense-vector folds.
+#[derive(Debug, Clone, Copy)]
+struct Handles {
+    queries: CounterId,
+    xla_batches: CounterId,
+    cpu_batches: CounterId,
+    errors: CounterId,
+    batched_queries: CounterId,
+    lat: HistogramId,
+    retrievals: CounterId,
+    retrieval_candidates: CounterId,
+    retrieval_solved: CounterId,
+    retrieval_pruned: CounterId,
+    retrieval_rescued: CounterId,
+    retrieval_routed: CounterId,
+    retrieval_shortlisted: CounterId,
+    retrieval_routed_candidates: CounterId,
+    recall_probes: CounterId,
+    recall_matched: CounterId,
+    recall_expected: CounterId,
+    retrieval_offthread: CounterId,
+    search: HistogramId,
+    retrieval_queue_depth: GaugeId,
+    retrieval_hol_blocked_us: CounterId,
+    retrieval_pruned_interval: CounterId,
+    retrieval_refined: CounterId,
+    deadline_misses: CounterId,
+    budget_sheds: CounterId,
+    certified: CounterId,
+    width: HistogramId,
+}
+
+impl Handles {
+    fn register(reg: &mut Registry) -> Self {
+        let n = Labels::none;
+        Self {
+            queries: reg.counter("sinkhorn_queries_total", "Distance queries served", n()),
+            xla_batches: reg.counter(
+                "sinkhorn_batches_total",
+                "Executed batches, by backend",
+                Labels::backend("xla"),
+            ),
+            cpu_batches: reg.counter(
+                "sinkhorn_batches_total",
+                "Executed batches, by backend",
+                Labels::backend("cpu"),
+            ),
+            errors: reg.counter("sinkhorn_errors_total", "Failed queries and retrieval jobs", n()),
+            batched_queries: reg.counter(
+                "sinkhorn_batched_queries_total",
+                "Sum of executed batch sizes (mean occupancy numerator)",
+                n(),
+            ),
+            lat: reg.histogram(
+                "sinkhorn_query_latency_us",
+                "Distance query latency (queue wait + execution), microseconds",
+                n(),
+            ),
+            retrievals: reg.counter("sinkhorn_retrievals_total", "Retrieval queries served", n()),
+            retrieval_candidates: reg.counter(
+                "sinkhorn_retrieval_candidates_total",
+                "Corpus candidates considered across retrievals",
+                n(),
+            ),
+            retrieval_solved: reg.counter(
+                "sinkhorn_retrieval_solved_total",
+                "Candidates solved by the refine stage",
+                n(),
+            ),
+            retrieval_pruned: reg.counter(
+                "sinkhorn_retrieval_pruned_total",
+                "Candidates discarded on their lower bound alone",
+                n(),
+            ),
+            retrieval_rescued: reg.counter(
+                "sinkhorn_retrieval_rescued_total",
+                "Refine solves rescued through the exact log-domain path",
+                n(),
+            ),
+            retrieval_routed: reg.counter(
+                "sinkhorn_retrieval_routed_total",
+                "Retrievals answered from an ANN-router shortlist",
+                n(),
+            ),
+            retrieval_shortlisted: reg.counter(
+                "sinkhorn_retrieval_shortlisted_total",
+                "Candidates admitted to routed shortlists",
+                n(),
+            ),
+            retrieval_routed_candidates: reg.counter(
+                "sinkhorn_retrieval_routed_candidates_total",
+                "Corpus candidates considered by routed queries",
+                n(),
+            ),
+            recall_probes: reg.counter(
+                "sinkhorn_recall_probes_total",
+                "Brute-force recall probes executed",
+                n(),
+            ),
+            recall_matched: reg.counter(
+                "sinkhorn_recall_matched_total",
+                "Pruned-top-k entries the probes confirmed",
+                n(),
+            ),
+            recall_expected: reg.counter(
+                "sinkhorn_recall_expected_total",
+                "Entries the probes compared",
+                n(),
+            ),
+            retrieval_offthread: reg.counter(
+                "sinkhorn_retrieval_offthread_total",
+                "Searches completed on the retrieval runtime",
+                n(),
+            ),
+            search: reg.histogram(
+                "sinkhorn_retrieval_search_us",
+                "Pure off-thread search walltime (excludes queue wait), microseconds",
+                n(),
+            ),
+            retrieval_queue_depth: reg.gauge(
+                "sinkhorn_retrieval_queue_depth",
+                "Retrieval jobs queued or running (sampled)",
+                n(),
+            ),
+            retrieval_hol_blocked_us: reg.counter(
+                "sinkhorn_retrieval_hol_blocked_us_total",
+                "Microseconds searches waited in their corpus mailbox",
+                n(),
+            ),
+            retrieval_pruned_interval: reg.counter(
+                "sinkhorn_retrieval_pruned_interval_total",
+                "Candidates pruned because their whole certified interval cleared top-k",
+                n(),
+            ),
+            retrieval_refined: reg.counter(
+                "sinkhorn_retrieval_refined_total",
+                "Budget-pass straddlers escalated to a full refine solve",
+                n(),
+            ),
+            deadline_misses: reg.counter(
+                "sinkhorn_deadline_misses_total",
+                "Queries answered after their own deadline",
+                n(),
+            ),
+            budget_sheds: reg.counter(
+                "sinkhorn_budget_sheds_total",
+                "Queries served under a load-shed iteration cap",
+                n(),
+            ),
+            certified: reg.counter(
+                "sinkhorn_certified_solves_total",
+                "Solves served with a finite certified error interval",
+                n(),
+            ),
+            width: reg.histogram(
+                "sinkhorn_interval_width_ppb",
+                "Certified interval width quantized to parts-per-billion",
+                n(),
+            ),
+        }
+    }
+}
+
 /// Running statistics collected by the service thread.
-#[derive(Debug, Default, Clone)]
+///
+/// Plain counters/gauges/histograms are registry instruments (see
+/// [`Handles`]); only structured data stays as fields. Constructed via
+/// [`Stats::new`] — `Default` is the telemetry-off construction.
+#[derive(Debug, Clone)]
 pub struct Stats {
-    pub queries: u64,
-    pub batches: u64,
-    pub xla_batches: u64,
-    pub cpu_batches: u64,
-    pub errors: u64,
-    /// Sum of batch sizes (for mean batch occupancy).
-    pub batched_queries: u64,
-    /// Latency accumulators (microseconds).
-    lat_sum_us: u128,
-    /// Log2 histogram of latency in µs (shared [`Log2Histogram`] since
-    /// PR 9 — it also tracks the observed max the quantiles clamp to).
-    lat: Log2Histogram,
+    /// The instrument registry (windowed iff telemetry is configured).
+    reg: Registry,
+    /// Static instrument handles.
+    h: Handles,
+    /// Per-tenant windowed instruments + SLO evaluation; `Some` exactly
+    /// when telemetry is on.
+    slo: Option<SloMonitor>,
     /// Per-worker occupancy of the CPU panel executor (index = worker).
     workers: Vec<WorkerSnapshot>,
     /// Kernel structure of the most recently used CPU executor, with
@@ -32,70 +208,21 @@ pub struct Stats {
     /// classes can differ; the gauge reports the latest structure and
     /// the worst accuracy concession).
     kernel: Option<KernelStats>,
-    /// Retrieval gauges: cumulative over every `retrieve` call.
-    pub retrievals: u64,
-    /// Corpus candidates considered across retrievals.
-    pub retrieval_candidates: u64,
-    /// Candidates actually solved by the refine stage.
-    pub retrieval_solved: u64,
-    /// Candidates discarded on their lower bound alone.
-    pub retrieval_pruned: u64,
-    /// Refine solves rescued through the exact log-domain path.
-    pub retrieval_rescued: u64,
-    /// Retrievals answered from an ANN-router shortlist (PR 7).
-    pub retrieval_routed: u64,
-    /// Candidates admitted to routed shortlists (Σ over routed queries
-    /// only — unrouted queries price the whole corpus and are excluded
-    /// so the fraction gauges the router, not the traffic mix).
-    pub retrieval_shortlisted: u64,
-    /// Corpus candidates considered by routed queries (denominator of
-    /// the shortlist fraction).
-    pub retrieval_routed_candidates: u64,
-    /// Brute-force recall probes executed.
-    pub recall_probes: u64,
-    /// Pruned-top-k entries the probes confirmed.
-    pub recall_matched: u64,
-    /// Entries the probes compared (Σ effective k).
-    pub recall_expected: u64,
-    /// Off-engine-thread searches completed by the retrieval runtime.
-    pub retrieval_offthread: u64,
-    /// Accumulated pure search walltime on the runtime thread (µs,
-    /// excludes queue wait).
-    retrieval_search_us_sum: u128,
-    /// Worst single off-thread search walltime (µs).
-    retrieval_search_us_max: u64,
-    /// Jobs queued or running on the retrieval runtime (sampled by the
-    /// engine right before each snapshot).
-    pub retrieval_queue_depth: u64,
-    /// Σ µs searches spent waiting in their corpus mailbox before
-    /// dispatch — the head-of-line blocking measure (PR 8). With
-    /// per-corpus mailboxes this wait comes from a tenant's own queued
-    /// jobs plus dispatcher contention, never from another tenant's
-    /// serialized bulk work.
-    pub retrieval_hol_blocked_us: u64,
     /// Per-tenant retrieval gauges, keyed by corpus. Every registered
     /// corpus keeps its row (PR 8 fixed the clobbering where each
     /// feedback push overwrote the whole table); invalidation feedback
     /// purges a dropped corpus's row instead of serving it forever.
     retrieval_corpora: BTreeMap<CorpusKey, CorpusGauges>,
-    /// Candidates discarded because their whole certified interval
-    /// cleared the top-k threshold (budgeted retrieval only).
-    pub retrieval_pruned_interval: u64,
-    /// Budget-pass straddlers escalated to a full refine solve.
-    pub retrieval_refined: u64,
-    /// Anytime gauges: queries answered after their own deadline.
-    pub deadline_misses: u64,
-    /// Queries served under a load-shed iteration cap.
-    pub budget_sheds: u64,
-    /// Solves that came back with a finite certified interval.
-    certified: u64,
-    /// Log2 histogram of certified interval widths quantized to ppb
-    /// (1e-9 d^λ units): bucket i = [2^i, 2^{i+1}) ppb.
-    width: Log2Histogram,
     /// Widest certified interval observed, kept in exact `F` units (the
-    /// histogram's own max lives in the quantized ppb domain and would
-    /// round the clamp).
+    /// width histogram's own max lives in the quantized ppb domain and
+    /// would round the clamp).
     width_max: F,
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Self::new(None)
+    }
 }
 
 /// Per-tenant retrieval gauges: one row per registered corpus, keyed
@@ -140,6 +267,70 @@ pub struct WorkerSnapshot {
 }
 
 impl Stats {
+    /// Construct the stats surface. With `telemetry` set, the registry
+    /// is windowed (a ring of `windows` × `window` slots) and the
+    /// per-tenant SLO monitor exists; with `None` every instrument is a
+    /// plain cumulative fold and recording never reads the clock — the
+    /// zero-overhead contract of [`crate::telemetry`].
+    pub fn new(telemetry: Option<&TelemetryConfig>) -> Self {
+        let mut reg = Registry::new(telemetry.map(|t| (t.window, t.windows)));
+        let h = Handles::register(&mut reg);
+        let slo = telemetry.map(|t| SloMonitor::new(t.slo));
+        Self {
+            reg,
+            h,
+            slo,
+            workers: Vec::new(),
+            kernel: None,
+            retrieval_corpora: BTreeMap::new(),
+            width_max: 0.0,
+        }
+    }
+
+    /// The instrument registry. Engine-thread-owned; the scrape server
+    /// reads it by round-tripping a message through the engine loop,
+    /// never by sharing memory.
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// Count one failed query or retrieval job.
+    pub fn inc_errors(&mut self) {
+        self.reg.add(self.h.errors, 1);
+    }
+
+    /// Count `n` queries served under a load-shed iteration cap.
+    pub fn add_budget_sheds(&mut self, n: u64) {
+        self.reg.add(self.h.budget_sheds, n);
+    }
+
+    /// Refresh the sampled retrieval queue-depth gauge.
+    pub fn set_retrieval_queue_depth(&mut self, depth: u64) {
+        self.reg.set(self.h.retrieval_queue_depth, depth as f64);
+    }
+
+    /// Refresh the SLO burn-rate gauges and the armed set. No-op when
+    /// telemetry is off or the config carries no policy; cheap enough to
+    /// call once per engine-loop turn.
+    pub fn evaluate_slo(&mut self) {
+        if let Some(slo) = &mut self.slo {
+            slo.evaluate(&mut self.reg);
+        }
+    }
+
+    /// Iteration cap for an SLO-armed tenant's batch; `None` when the
+    /// tenant is compliant, the policy is alert-only, or telemetry is
+    /// off.
+    pub fn slo_shed_cap(&self, tenant: u32) -> Option<usize> {
+        self.slo.as_ref()?.shed_cap(tenant)
+    }
+
+    /// The windowed per-tenant SLO report (`None` when telemetry is
+    /// off).
+    pub fn telemetry_report(&self) -> Option<TelemetryReport> {
+        self.slo.as_ref().map(|slo| slo.report(&self.reg))
+    }
+
     /// Record one shard executed by `worker` (resizes the table to fit).
     pub fn record_worker(
         &mut self,
@@ -189,16 +380,21 @@ impl Stats {
     /// corpus's row.
     pub fn record_runtime(&mut self, feedback: &RuntimeFeedback) {
         if feedback.failed {
-            self.errors += 1;
+            self.reg.add(self.h.errors, 1);
         }
-        self.retrieval_hol_blocked_us =
-            self.retrieval_hol_blocked_us.saturating_add(feedback.queued_us);
+        self.reg.add(self.h.retrieval_hol_blocked_us, feedback.queued_us);
         if let Some(report) = &feedback.report {
             self.record_retrieval(report);
-            self.retrieval_offthread += 1;
-            self.retrieval_search_us_sum += feedback.search_us as u128;
-            self.retrieval_search_us_max =
-                self.retrieval_search_us_max.max(feedback.search_us);
+            self.reg.add(self.h.retrieval_offthread, 1);
+            self.reg.observe(self.h.search, feedback.search_us);
+            if let Some(slo) = &mut self.slo {
+                slo.on_search(
+                    &mut self.reg,
+                    feedback.corpus,
+                    feedback.search_us,
+                    report.probe.map(|p| (p.matched as u64, p.k as u64)),
+                );
+            }
         }
         if feedback.invalidated {
             self.retrieval_corpora.remove(&feedback.corpus);
@@ -232,110 +428,138 @@ impl Stats {
 
     /// Fold one retrieval query's report into the gauges.
     pub fn record_retrieval(&mut self, report: &RetrievalReport) {
-        self.retrievals += 1;
-        self.retrieval_candidates += report.corpus as u64;
-        self.retrieval_solved += report.solved as u64;
-        self.retrieval_pruned += report.pruned as u64;
-        self.retrieval_rescued += report.rescued as u64;
-        self.retrieval_pruned_interval += report.pruned_interval as u64;
-        self.retrieval_refined += report.refined as u64;
+        self.reg.add(self.h.retrievals, 1);
+        self.reg.add(self.h.retrieval_candidates, report.corpus as u64);
+        self.reg.add(self.h.retrieval_solved, report.solved as u64);
+        self.reg.add(self.h.retrieval_pruned, report.pruned as u64);
+        self.reg.add(self.h.retrieval_rescued, report.rescued as u64);
+        self.reg.add(self.h.retrieval_pruned_interval, report.pruned_interval as u64);
+        self.reg.add(self.h.retrieval_refined, report.refined as u64);
         if report.routed {
-            self.retrieval_routed += 1;
-            self.retrieval_shortlisted += report.shortlist as u64;
-            self.retrieval_routed_candidates += report.corpus as u64;
+            self.reg.add(self.h.retrieval_routed, 1);
+            self.reg.add(self.h.retrieval_shortlisted, report.shortlist as u64);
+            self.reg.add(self.h.retrieval_routed_candidates, report.corpus as u64);
         }
         if let Some(probe) = report.probe {
-            self.recall_probes += 1;
-            self.recall_matched += probe.matched as u64;
-            self.recall_expected += probe.k as u64;
+            self.reg.add(self.h.recall_probes, 1);
+            self.reg.add(self.h.recall_matched, probe.matched as u64);
+            self.reg.add(self.h.recall_expected, probe.k as u64);
         }
     }
 
-    /// Record one served anytime outcome. Only certified (finite-width)
-    /// intervals feed the width histogram; uncertified paths — XLA
-    /// artifacts and unbounded CPU serving — are skipped, so the gauge
-    /// reflects exactly the solves whose accuracy was being traded.
-    pub fn record_outcome(&mut self, outcome: &SolveOutcome) {
+    /// Record one served anytime outcome for `tenant` (its `MetricId`).
+    /// Only certified (finite-width) intervals feed the width histogram;
+    /// uncertified paths — XLA artifacts and unbounded CPU serving — are
+    /// skipped, so the gauge reflects exactly the solves whose accuracy
+    /// was being traded.
+    pub fn record_outcome(&mut self, tenant: u32, outcome: &SolveOutcome) {
         let width = outcome.interval.width();
         if !width.is_finite() {
             return;
         }
-        self.certified += 1;
+        self.reg.add(self.h.certified, 1);
         self.width_max = self.width_max.max(width);
         // Quantize to ppb so the log2 bucketing has an integer to bite
         // on; sub-ppb widths land in the bottom bucket.
         let ppb = (width * 1e9).min(u64::MAX as F) as u64;
-        self.width.record(ppb);
-    }
-
-    pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
-        self.batches += 1;
-        self.batched_queries += size as u64;
-        if engine_is_xla {
-            self.xla_batches += 1;
-        } else {
-            self.cpu_batches += 1;
+        self.reg.observe(self.h.width, ppb);
+        if let Some(slo) = &mut self.slo {
+            slo.on_outcome(&mut self.reg, tenant, ppb);
         }
     }
 
-    pub fn record_query_latency(&mut self, latency: Duration) {
-        self.queries += 1;
+    pub fn record_batch(&mut self, size: usize, engine_is_xla: bool) {
+        self.reg.add(self.h.batched_queries, size as u64);
+        let backend =
+            if engine_is_xla { self.h.xla_batches } else { self.h.cpu_batches };
+        self.reg.add(backend, 1);
+    }
+
+    /// Record one served query for `tenant` (its `MetricId`): the global
+    /// latency and deadline-miss instruments, plus the per-tenant
+    /// windowed instruments when telemetry is on. `missed` marks a query
+    /// answered after its own [`crate::sinkhorn::SolveBudget`] deadline.
+    pub fn record_query_served(&mut self, tenant: u32, latency: Duration, missed: bool) {
         let us = saturating_micros(latency);
-        self.lat_sum_us += us as u128;
-        self.lat.record(us);
+        self.reg.add(self.h.queries, 1);
+        self.reg.observe(self.h.lat, us);
+        if missed {
+            self.reg.add(self.h.deadline_misses, 1);
+        }
+        if let Some(slo) = &mut self.slo {
+            slo.on_query(&mut self.reg, tenant, us, missed);
+        }
+    }
+
+    /// Tenant-less latency fold for call sites without a query attached.
+    pub fn record_query_latency(&mut self, latency: Duration) {
+        self.record_query_served(0, latency, false);
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
+        let h = &self.h;
+        let queries = self.reg.counter_value(h.queries);
+        let xla_batches = self.reg.counter_value(h.xla_batches);
+        let cpu_batches = self.reg.counter_value(h.cpu_batches);
+        let batches = xla_batches + cpu_batches;
+        let (lat, lat_sum) = self.reg.histogram_cum(h.lat);
+        let (search, search_sum) = self.reg.histogram_cum(h.search);
+        let offthread = self.reg.counter_value(h.retrieval_offthread);
         StatsSnapshot {
-            queries: self.queries,
-            batches: self.batches,
-            xla_batches: self.xla_batches,
-            cpu_batches: self.cpu_batches,
-            errors: self.errors,
-            mean_batch_size: if self.batches > 0 {
-                self.batched_queries as f64 / self.batches as f64
+            queries,
+            batches,
+            xla_batches,
+            cpu_batches,
+            errors: self.reg.counter_value(h.errors),
+            mean_batch_size: if batches > 0 {
+                self.reg.counter_value(h.batched_queries) as f64 / batches as f64
             } else {
                 0.0
             },
-            mean_latency_us: if self.queries > 0 {
-                (self.lat_sum_us / self.queries as u128) as u64
+            mean_latency_us: if queries > 0 {
+                (lat_sum / queries as u128) as u64
             } else {
                 0
             },
-            max_latency_us: self.lat.observed_max(),
-            p99_latency_us: self.lat.quantile(0.99),
-            p50_latency_us: self.lat.quantile(0.50),
+            max_latency_us: lat.observed_max(),
+            p99_latency_us: lat.quantile(0.99),
+            p50_latency_us: lat.quantile(0.50),
             warm_hits: self.workers.iter().map(|w| w.warm_hits).sum(),
             warm_misses: self.workers.iter().map(|w| w.warm_misses).sum(),
             workers: self.workers.clone(),
             kernel: self.kernel,
-            retrievals: self.retrievals,
-            retrieval_candidates: self.retrieval_candidates,
-            retrieval_solved: self.retrieval_solved,
-            retrieval_pruned: self.retrieval_pruned,
-            retrieval_rescued: self.retrieval_rescued,
-            retrieval_routed: self.retrieval_routed,
-            retrieval_shortlisted: self.retrieval_shortlisted,
-            retrieval_routed_candidates: self.retrieval_routed_candidates,
-            recall_probes: self.recall_probes,
-            recall_matched: self.recall_matched,
-            recall_expected: self.recall_expected,
-            retrieval_offthread: self.retrieval_offthread,
-            retrieval_search_mean_us: if self.retrieval_offthread > 0 {
-                (self.retrieval_search_us_sum / self.retrieval_offthread as u128)
-                    as u64
+            retrievals: self.reg.counter_value(h.retrievals),
+            retrieval_candidates: self.reg.counter_value(h.retrieval_candidates),
+            retrieval_solved: self.reg.counter_value(h.retrieval_solved),
+            retrieval_pruned: self.reg.counter_value(h.retrieval_pruned),
+            retrieval_rescued: self.reg.counter_value(h.retrieval_rescued),
+            retrieval_routed: self.reg.counter_value(h.retrieval_routed),
+            retrieval_shortlisted: self.reg.counter_value(h.retrieval_shortlisted),
+            retrieval_routed_candidates: self
+                .reg
+                .counter_value(h.retrieval_routed_candidates),
+            recall_probes: self.reg.counter_value(h.recall_probes),
+            recall_matched: self.reg.counter_value(h.recall_matched),
+            recall_expected: self.reg.counter_value(h.recall_expected),
+            retrieval_offthread: offthread,
+            retrieval_search_mean_us: if offthread > 0 {
+                (search_sum / offthread as u128) as u64
             } else {
                 0
             },
-            retrieval_search_max_us: self.retrieval_search_us_max,
-            retrieval_queue_depth: self.retrieval_queue_depth,
-            retrieval_hol_blocked_us: self.retrieval_hol_blocked_us,
+            retrieval_search_max_us: search.observed_max(),
+            retrieval_queue_depth: self.reg.gauge_value(h.retrieval_queue_depth) as u64,
+            retrieval_hol_blocked_us: self
+                .reg
+                .counter_value(h.retrieval_hol_blocked_us),
             retrieval_shards: self.retrieval_corpora.values().cloned().collect(),
-            retrieval_pruned_interval: self.retrieval_pruned_interval,
-            retrieval_refined: self.retrieval_refined,
-            deadline_misses: self.deadline_misses,
-            budget_sheds: self.budget_sheds,
-            certified_solves: self.certified,
+            retrieval_pruned_interval: self
+                .reg
+                .counter_value(h.retrieval_pruned_interval),
+            retrieval_refined: self.reg.counter_value(h.retrieval_refined),
+            deadline_misses: self.reg.counter_value(h.deadline_misses),
+            budget_sheds: self.reg.counter_value(h.budget_sheds),
+            certified_solves: self.reg.counter_value(h.certified),
             interval_width_p50: self.width_quantile(0.50),
             interval_width_p99: self.width_quantile(0.99),
             interval_width_max: self.width_max,
@@ -352,17 +576,176 @@ impl Stats {
     /// domain, so single-bucket distributions stay exact — the same PR 7
     /// clamp [`Log2Histogram::quantile`] applies in the integer domain).
     fn width_quantile(&self, q: f64) -> F {
-        if self.width.is_empty() {
+        let (width, _) = self.reg.histogram_cum(self.h.width);
+        if width.is_empty() {
             return 0.0;
         }
-        match self.width.quantile_bucket(q) {
+        match width.quantile_bucket(q) {
             Some(i) => ((1u64 << (i + 1)) as F * 1e-9).min(self.width_max),
             None => self.width_max,
         }
     }
+
+    /// Render the full `/metrics` exposition: every registry instrument,
+    /// plus hand-composed families for the structured gauges the
+    /// registry cannot hold — per-corpus rows keyed by dynamic tenant,
+    /// warm-start totals summed over workers, and the PR 9 collector's
+    /// per-(stage, tenant) span histograms and trace counters.
+    pub fn prometheus(
+        &self,
+        stages: &[((&'static str, Tenant), Log2Histogram)],
+        trace: Option<(u64, u64, u64)>,
+    ) -> String {
+        let mut fams = self.reg.families();
+        if !self.retrieval_corpora.is_empty() {
+            let mut depth = Vec::new();
+            let mut searches = Vec::new();
+            let mut hol = Vec::new();
+            let mut build = Vec::new();
+            for row in self.retrieval_corpora.values() {
+                let labels = vec![("tenant", Tenant::Corpus(row.corpus).label())];
+                depth.push(PromSample {
+                    labels: labels.clone(),
+                    value: PromValue::Gauge(row.queue_depth as f64),
+                });
+                searches.push(PromSample {
+                    labels: labels.clone(),
+                    value: PromValue::Counter(row.searches),
+                });
+                hol.push(PromSample {
+                    labels: labels.clone(),
+                    value: PromValue::Counter(row.hol_blocked_us),
+                });
+                build.push(PromSample {
+                    labels,
+                    value: PromValue::Counter(row.build_us),
+                });
+            }
+            fams.push(PromFamily {
+                name: "sinkhorn_corpus_queue_depth",
+                help: "Sampled mailbox backlog, per corpus tenant",
+                kind: PromKind::Gauge,
+                samples: depth,
+            });
+            fams.push(PromFamily {
+                name: "sinkhorn_corpus_searches_total",
+                help: "Off-thread searches served, per corpus tenant",
+                kind: PromKind::Counter,
+                samples: searches,
+            });
+            fams.push(PromFamily {
+                name: "sinkhorn_corpus_hol_blocked_us_total",
+                help: "Microseconds waited in the corpus mailbox before dispatch",
+                kind: PromKind::Counter,
+                samples: hol,
+            });
+            fams.push(PromFamily {
+                name: "sinkhorn_corpus_build_us_total",
+                help: "Microseconds spent building the corpus's sharded index",
+                kind: PromKind::Counter,
+                samples: build,
+            });
+        }
+        for (name, help, v) in [
+            (
+                "sinkhorn_warm_hits_total",
+                "Warm-start store hits across workers",
+                self.workers.iter().map(|w| w.warm_hits).sum::<u64>(),
+            ),
+            (
+                "sinkhorn_warm_misses_total",
+                "Warm-start store misses across workers",
+                self.workers.iter().map(|w| w.warm_misses).sum::<u64>(),
+            ),
+        ] {
+            fams.push(PromFamily {
+                name,
+                help,
+                kind: PromKind::Counter,
+                samples: vec![PromSample {
+                    labels: Vec::new(),
+                    value: PromValue::Counter(v),
+                }],
+            });
+        }
+        if !stages.is_empty() {
+            fams.push(PromFamily {
+                name: "sinkhorn_stage_duration_us",
+                help: "Span duration per (stage, tenant); _sum is approximated \
+                       from log2 bucket lower edges (within 2x of the true sum)",
+                kind: PromKind::Histogram,
+                samples: stages
+                    .iter()
+                    .map(|((stage, tenant), hist)| PromSample {
+                        labels: vec![
+                            ("stage", stage.to_string()),
+                            ("tenant", tenant.label()),
+                        ],
+                        value: PromValue::histogram(hist, log2_lower_edge_sum(hist)),
+                    })
+                    .collect(),
+            });
+        }
+        if let Some((sampled, spans, dropped)) = trace {
+            for (name, help, v) in [
+                (
+                    "sinkhorn_traces_sampled_total",
+                    "Queries/retrievals that passed the trace sampling gate",
+                    sampled,
+                ),
+                (
+                    "sinkhorn_trace_spans_total",
+                    "Spans folded by the trace collector",
+                    spans,
+                ),
+                (
+                    "sinkhorn_trace_spans_dropped_total",
+                    "Spans lost to ring overflow or recording contention",
+                    dropped,
+                ),
+            ] {
+                fams.push(PromFamily {
+                    name,
+                    help,
+                    kind: PromKind::Counter,
+                    samples: vec![PromSample {
+                        labels: Vec::new(),
+                        value: PromValue::Counter(v),
+                    }],
+                });
+            }
+        }
+        fams.sort_by(|a, b| a.name.cmp(b.name));
+        crate::telemetry::render_prometheus(&fams)
+    }
+}
+
+/// Lower-edge sum approximation for histograms whose exact sample sum
+/// was never tracked (the trace collector folds log2 buckets only):
+/// `Σ count_i · 2^i` understates the true sum by at most 2×.
+fn log2_lower_edge_sum(h: &Log2Histogram) -> u128 {
+    h.buckets()
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| n as u128 * (1u128 << i))
+        .sum()
 }
 
 /// Immutable snapshot returned to callers.
+///
+/// ## Counter monotonicity
+///
+/// Every plain counter field — `queries`, `batches`, `errors`,
+/// `deadline_misses`, `budget_sheds`, `retrieval_hol_blocked_us`,
+/// `warm_hits`/`warm_misses`, the `retrieval_*` and `recall_*` totals,
+/// `certified_solves`, and the trace counters — is cumulative since
+/// service start and **never decreases** across successive snapshots of
+/// one service (windowed telemetry views decay; these do not). Gauges
+/// (`retrieval_queue_depth`, per-corpus `queue_depth`) and derived
+/// means/quantiles may move in either direction. The property is
+/// enforced by the `snapshot_counters_are_monotone_under_live_traffic`
+/// test in `tests/telemetry_e2e.rs`, which drives real traffic and
+/// diffs consecutive snapshots.
 ///
 /// The `Display` rendering is one line of space-separated sections, each
 /// printed only when it has something to say:
@@ -566,6 +949,137 @@ impl StatsSnapshot {
         }
         let sum: u64 = self.workers.iter().map(|w| w.busy_us).sum();
         sum as f64 / (max as f64 * self.workers.len() as f64)
+    }
+
+    /// The snapshot as a [`crate::util::json::Json`] object — the body
+    /// the scrape server's `/snapshot` endpoint serves. Counters render
+    /// as numbers (f64 holds every counter this process can plausibly
+    /// accumulate exactly up to 2^53); structured rows nest as arrays.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        fn n(v: u64) -> Json {
+            Json::Number(v as f64)
+        }
+        let mut o = BTreeMap::new();
+        o.insert("queries".into(), n(self.queries));
+        o.insert("batches".into(), n(self.batches));
+        o.insert("xla_batches".into(), n(self.xla_batches));
+        o.insert("cpu_batches".into(), n(self.cpu_batches));
+        o.insert("errors".into(), n(self.errors));
+        o.insert("mean_batch_size".into(), Json::Number(self.mean_batch_size));
+        o.insert("mean_latency_us".into(), n(self.mean_latency_us));
+        o.insert("p50_latency_us".into(), n(self.p50_latency_us));
+        o.insert("p99_latency_us".into(), n(self.p99_latency_us));
+        o.insert("max_latency_us".into(), n(self.max_latency_us));
+        o.insert("warm_hits".into(), n(self.warm_hits));
+        o.insert("warm_misses".into(), n(self.warm_misses));
+        o.insert(
+            "workers".into(),
+            Json::Array(
+                self.workers
+                    .iter()
+                    .map(|w| {
+                        let mut row = BTreeMap::new();
+                        row.insert("panels".into(), n(w.panels));
+                        row.insert("queries".into(), n(w.queries));
+                        row.insert("busy_us".into(), n(w.busy_us));
+                        row.insert("warm_hits".into(), n(w.warm_hits));
+                        row.insert("warm_misses".into(), n(w.warm_misses));
+                        Json::Object(row)
+                    })
+                    .collect(),
+            ),
+        );
+        if let Some(k) = self.kernel {
+            let mut row = BTreeMap::new();
+            row.insert("dim".into(), n(k.dim as u64));
+            row.insert("nnz".into(), n(k.nnz as u64));
+            row.insert("rank".into(), n(k.rank as u64));
+            row.insert("mass_loss".into(), Json::Number(k.mass_loss));
+            row.insert(
+                "frobenius_budget".into(),
+                Json::Number(k.frobenius_budget),
+            );
+            o.insert("kernel".into(), Json::Object(row));
+        }
+        o.insert("retrievals".into(), n(self.retrievals));
+        o.insert("retrieval_candidates".into(), n(self.retrieval_candidates));
+        o.insert("retrieval_solved".into(), n(self.retrieval_solved));
+        o.insert("retrieval_pruned".into(), n(self.retrieval_pruned));
+        o.insert("retrieval_rescued".into(), n(self.retrieval_rescued));
+        o.insert("retrieval_routed".into(), n(self.retrieval_routed));
+        o.insert("retrieval_shortlisted".into(), n(self.retrieval_shortlisted));
+        o.insert("recall_probes".into(), n(self.recall_probes));
+        o.insert("recall".into(), Json::Number(self.recall()));
+        o.insert("retrieval_offthread".into(), n(self.retrieval_offthread));
+        o.insert(
+            "retrieval_search_mean_us".into(),
+            n(self.retrieval_search_mean_us),
+        );
+        o.insert(
+            "retrieval_search_max_us".into(),
+            n(self.retrieval_search_max_us),
+        );
+        o.insert("retrieval_queue_depth".into(), n(self.retrieval_queue_depth));
+        o.insert(
+            "retrieval_hol_blocked_us".into(),
+            n(self.retrieval_hol_blocked_us),
+        );
+        o.insert(
+            "corpora".into(),
+            Json::Array(
+                self.retrieval_shards
+                    .iter()
+                    .map(|row| {
+                        let mut r = BTreeMap::new();
+                        r.insert("corpus".into(), n(row.corpus as u64));
+                        r.insert("queue_depth".into(), n(row.queue_depth));
+                        r.insert("searches".into(), n(row.searches));
+                        r.insert("hol_blocked_us".into(), n(row.hol_blocked_us));
+                        r.insert("build_us".into(), n(row.build_us));
+                        r.insert("shards".into(), n(row.shards.len() as u64));
+                        Json::Object(r)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("deadline_misses".into(), n(self.deadline_misses));
+        o.insert("budget_sheds".into(), n(self.budget_sheds));
+        o.insert("certified_solves".into(), n(self.certified_solves));
+        o.insert(
+            "interval_width_p50".into(),
+            Json::Number(self.interval_width_p50),
+        );
+        o.insert(
+            "interval_width_p99".into(),
+            Json::Number(self.interval_width_p99),
+        );
+        o.insert(
+            "interval_width_max".into(),
+            Json::Number(self.interval_width_max),
+        );
+        o.insert(
+            "stages".into(),
+            Json::Array(
+                self.stages
+                    .iter()
+                    .map(|s| {
+                        let mut r = BTreeMap::new();
+                        r.insert("stage".into(), Json::String(s.stage.into()));
+                        r.insert("tenant".into(), Json::String(s.tenant.clone()));
+                        r.insert("count".into(), n(s.count));
+                        r.insert("p50_us".into(), n(s.p50_us));
+                        r.insert("p99_us".into(), n(s.p99_us));
+                        r.insert("max_us".into(), n(s.max_us));
+                        Json::Object(r)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert("traces_sampled".into(), n(self.traces_sampled));
+        o.insert("trace_spans".into(), n(self.trace_spans));
+        o.insert("trace_spans_dropped".into(), n(self.trace_spans_dropped));
+        Json::Object(o)
     }
 }
 
@@ -778,7 +1292,7 @@ mod tests {
         assert_eq!(snap.p50_latency_us, 100);
         assert_eq!(snap.p99_latency_us, 100);
         for _ in 0..10 {
-            s.record_outcome(&SolveOutcome {
+            s.record_outcome(0, &SolveOutcome {
                 estimate: 1.0,
                 interval: ErrorInterval { lo: 0.0, hi: 1e-7 },
                 iterations: 10,
@@ -815,9 +1329,9 @@ mod tests {
             converged: false,
         };
         for _ in 0..10 {
-            s.record_outcome(&certified(1e-7));
+            s.record_outcome(0, &certified(1e-7));
         }
-        s.record_outcome(&certified(0.5));
+        s.record_outcome(0, &certified(0.5));
         let snap = s.snapshot();
         assert!(
             (snap.interval_width_p50 - 1.28e-7).abs() < 1e-12,
@@ -973,7 +1487,7 @@ mod tests {
         assert_eq!(snap.interval_width_p50, 0.0);
         assert!(!snap.to_string().contains("anytime("));
         // Uncertified outcomes are skipped entirely.
-        s.record_outcome(&SolveOutcome::uncertified(1.0));
+        s.record_outcome(0, &SolveOutcome::uncertified(1.0));
         assert_eq!(s.snapshot().certified_solves, 0);
         let certified = |width: F| SolveOutcome {
             estimate: 1.0,
@@ -983,11 +1497,12 @@ mod tests {
             converged: false,
         };
         for _ in 0..9 {
-            s.record_outcome(&certified(1e-6));
+            s.record_outcome(0, &certified(1e-6));
         }
-        s.record_outcome(&certified(0.5));
-        s.deadline_misses = 2;
-        s.budget_sheds = 3;
+        s.record_outcome(0, &certified(0.5));
+        s.record_query_served(0, Duration::from_micros(100), true);
+        s.record_query_served(0, Duration::from_micros(100), true);
+        s.add_budget_sheds(3);
         let snap = s.snapshot();
         assert_eq!(snap.certified_solves, 10);
         assert!(
@@ -1089,7 +1604,7 @@ mod tests {
             invalidated: false,
             gauges: Vec::new(),
         });
-        s.retrieval_queue_depth = 3;
+        s.set_retrieval_queue_depth(3);
         s.set_corpus_queue_depths(&[(0, 2), (3, 1)]);
         let snap = s.snapshot();
         assert_eq!(snap.retrievals, 3, "search feedback folds into retrieval gauges");

@@ -293,6 +293,18 @@ pub struct CoordinatorConfig {
     /// no timestamp reads, no allocation, all PR 1–8 bit-identity and
     /// latency contracts untouched.
     pub trace: Option<crate::trace::TraceConfig>,
+    /// Telemetry exporter + per-tenant SLO monitor (PR 10): with a
+    /// [`crate::telemetry::TelemetryConfig`] set, every `Stats`
+    /// instrument additionally folds into a sliding-window ring, a
+    /// std-`TcpListener` scrape server serves `/metrics` (Prometheus
+    /// text exposition), `/healthz` and `/snapshot` on
+    /// [`DistanceService::scrape_addr`], and an optional
+    /// [`crate::telemetry::SloPolicy`] arms policy-driven load shedding
+    /// for tenants whose latency SLO burns. `None` (the default) keeps
+    /// all of it off: no server thread, no window rings, no clock reads
+    /// on the hot path — PR 1–9 bit-identity and latency contracts
+    /// untouched.
+    pub telemetry: Option<crate::telemetry::TelemetryConfig>,
 }
 
 /// Warm-start serving knobs (see [`CoordinatorConfig::warm_start`]).
@@ -343,6 +355,7 @@ impl Default for CoordinatorConfig {
             retrieval_routing: None,
             retrieval_dispatchers: 0,
             trace: None,
+            telemetry: None,
         }
     }
 }
@@ -397,6 +410,9 @@ impl CoordinatorConfig {
         }
         if let Some(trace) = &self.trace {
             trace.validate()?;
+        }
+        if let Some(telemetry) = &self.telemetry {
+            telemetry.validate()?;
         }
         if self.shed_iterations == Some(0) {
             return Err(
@@ -560,6 +576,12 @@ impl CoordinatorConfigBuilder {
         self
     }
 
+    /// See [`CoordinatorConfig::telemetry`].
+    pub fn telemetry(mut self, telemetry: crate::telemetry::TelemetryConfig) -> Self {
+        self.config.telemetry = Some(telemetry);
+        self
+    }
+
     /// Validate and produce the config; `Err` names the offending knob.
     pub fn build(self) -> Result<CoordinatorConfig, String> {
         self.config.validate()?;
@@ -598,6 +620,7 @@ mod tests {
                 sample_every: 8,
                 ring_capacity: 512,
             })
+            .telemetry(crate::telemetry::TelemetryConfig::default())
             .build()
             .unwrap();
         assert!(config.artifact_dir.is_none());
@@ -622,6 +645,30 @@ mod tests {
                 ring_capacity: 512,
             })
         );
+        assert_eq!(config.telemetry, Some(crate::telemetry::TelemetryConfig::default()));
+    }
+
+    #[test]
+    fn malformed_telemetry_config_is_rejected() {
+        let err = CoordinatorConfig::builder()
+            .telemetry(crate::telemetry::TelemetryConfig {
+                windows: 1,
+                ..Default::default()
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("windows"), "{err}");
+        let err = CoordinatorConfig::builder()
+            .telemetry(crate::telemetry::TelemetryConfig {
+                slo: Some(crate::telemetry::SloPolicy {
+                    deadline_miss_budget: 0.0,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("deadline_miss_budget"), "{err}");
     }
 
     #[test]

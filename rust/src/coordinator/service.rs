@@ -29,6 +29,9 @@ use crate::retrieval::{
 use crate::runtime::{RuntimeError, XlaRuntime};
 use crate::simplex::Histogram;
 use crate::sinkhorn::{SinkhornConfig, SolveBudget, SolveOutcome};
+use crate::telemetry::{
+    ScrapeBody, ScrapeKind, TelemetryServer, PROMETHEUS_CONTENT_TYPE,
+};
 use crate::trace::{ctx, PanelTrace, Span, SpanData, Stage, Tenant, TraceId, TraceSink};
 use crate::F;
 use std::collections::HashMap;
@@ -123,6 +126,13 @@ enum Message {
         ack: Sender<Result<usize, ServiceError>>,
     },
     Stats(Sender<StatsSnapshot>),
+    /// One scrape-server request (PR 10): the server thread round-trips
+    /// the render through the engine so instrument reads need no locks —
+    /// the engine owns the registry exclusively.
+    Scrape {
+        kind: ScrapeKind,
+        respond: Sender<ScrapeBody>,
+    },
     /// Warm the XLA executable cache (compile all variants now).
     Warmup(Sender<Result<usize, ServiceError>>),
 }
@@ -137,6 +147,11 @@ pub struct DistanceService {
     /// The tracing sink shared with the engine thread (None unless
     /// [`CoordinatorConfig::trace`] is set).
     trace: Option<Arc<TraceSink>>,
+    /// PR 10 scrape server (None unless [`CoordinatorConfig::telemetry`]
+    /// is set and the bind succeeded). Must drop *before* `tx` during
+    /// shutdown: its handler closure holds a sender clone, so the engine
+    /// loop can't see Disconnected while the server lives.
+    telemetry: Option<TelemetryServer>,
 }
 
 /// Cheap cloneable submission handle.
@@ -170,6 +185,8 @@ impl DistanceService {
         // export. `None` keeps every hot path on the untraced branch.
         let sink = config.trace.map(TraceSink::new);
         let engine_sink = sink.clone();
+        // Captured before `config` moves into the engine thread.
+        let telemetry_cfg = config.telemetry.clone();
         let (tx, rx) = channel();
         let (init_tx, init_rx) = channel::<Result<(), ServiceError>>();
         let handle = std::thread::Builder::new()
@@ -198,13 +215,46 @@ impl DistanceService {
             })
             .expect("spawn engine thread");
         match init_rx.recv() {
-            Ok(Ok(())) => Ok(Self { tx, handle: Some(handle), trace: sink }),
+            Ok(Ok(())) => {
+                // The scrape server binds only after the engine is up;
+                // every request round-trips through the engine mailbox
+                // (the engine owns the registry, so reads are lock-free).
+                // A bind failure degrades to "no exporter" — the serving
+                // path must not die because a metrics port is taken.
+                let telemetry = telemetry_cfg.and_then(|cfg| {
+                    let scrape_tx = tx.clone();
+                    match TelemetryServer::start(&cfg.bind, move |kind| {
+                        let (btx, brx) = channel();
+                        scrape_tx
+                            .send(Message::Scrape { kind, respond: btx })
+                            .ok()?;
+                        brx.recv_timeout(Duration::from_secs(2)).ok()
+                    }) {
+                        Ok(server) => Some(server),
+                        Err(e) => {
+                            eprintln!(
+                                "sinkhorn-engine: telemetry exporter bind \
+                                 failed ({e}); serving without /metrics"
+                            );
+                            None
+                        }
+                    }
+                });
+                Ok(Self { tx, handle: Some(handle), trace: sink, telemetry })
+            }
             Ok(Err(e)) => {
                 let _ = handle.join();
                 Err(e)
             }
             Err(_) => Err(ServiceError::Stopped),
         }
+    }
+
+    /// The bound scrape-server address, when
+    /// [`CoordinatorConfig::telemetry`] is set and the bind succeeded.
+    /// With a `:0` bind this reports the resolved ephemeral port.
+    pub fn scrape_addr(&self) -> Option<std::net::SocketAddr> {
+        self.telemetry.as_ref().map(|s| s.addr())
     }
 
     /// A cloneable submitter for concurrent client threads.
@@ -371,6 +421,10 @@ impl DistanceService {
     }
 
     fn shutdown_inner(&mut self) {
+        // The scrape server's handler closure owns a sender clone, so it
+        // must go first — otherwise the engine never sees Disconnected
+        // and the join below deadlocks.
+        self.telemetry = None;
         // Dropping the sender disconnects the channel; the engine thread
         // drains and exits.
         let (tx, _rx) = channel();
@@ -462,6 +516,7 @@ impl EngineThread {
         let pending =
             PendingBatcher::new(config.batcher.effective(config.cpu_workers));
         let (feedback_tx, feedback_rx) = channel();
+        let stats = Stats::new(config.telemetry.as_ref());
         Self {
             config,
             runtime,
@@ -472,7 +527,7 @@ impl EngineThread {
             feedback_tx,
             feedback_rx,
             pending,
-            stats: Stats::default(),
+            stats,
             trace,
         }
     }
@@ -527,7 +582,7 @@ impl EngineThread {
                     // registered: answer here instead of spawning the
                     // pool just to fail the lookup.
                     if self.retrieval.is_none() {
-                        self.stats.errors += 1;
+                        self.stats.inc_errors();
                         let _ = respond
                             .send(Err(ServiceError::UnknownCorpus(query.corpus)));
                     } else {
@@ -562,7 +617,7 @@ impl EngineThread {
                 }
                 Ok(Message::CorpusInsert { id, entry, ack }) => {
                     if self.retrieval.is_none() {
-                        self.stats.errors += 1;
+                        self.stats.inc_errors();
                         let _ = ack.send(Err(ServiceError::UnknownCorpus(id)));
                     } else {
                         self.retrieval_runtime().insert(
@@ -577,7 +632,7 @@ impl EngineThread {
                 }
                 Ok(Message::CorpusTombstone { id, entry, ack }) => {
                     if self.retrieval.is_none() {
-                        self.stats.errors += 1;
+                        self.stats.inc_errors();
                         let _ = ack.send(Err(ServiceError::UnknownCorpus(id)));
                     } else {
                         self.retrieval_runtime().tombstone(
@@ -592,7 +647,7 @@ impl EngineThread {
                 }
                 Ok(Message::CorpusCompact { id, ack }) => {
                     if self.retrieval.is_none() {
-                        self.stats.errors += 1;
+                        self.stats.inc_errors();
                         let _ = ack.send(Err(ServiceError::UnknownCorpus(id)));
                     } else {
                         self.retrieval_runtime().compact(
@@ -606,25 +661,11 @@ impl EngineThread {
                 }
                 Ok(Message::Stats(tx)) => {
                     self.drain_retrieval_feedback();
-                    self.stats.retrieval_queue_depth = self
-                        .retrieval
-                        .as_ref()
-                        .map(|rt| rt.queue_depth() as u64)
-                        .unwrap_or(0);
-                    let corpus_depths = self
-                        .retrieval
-                        .as_ref()
-                        .map(|rt| rt.corpus_depths())
-                        .unwrap_or_default();
-                    self.stats.set_corpus_queue_depths(&corpus_depths);
-                    let mut snap = self.stats.snapshot();
-                    if let Some(sink) = &self.trace {
-                        snap.stages = sink.stage_rows();
-                        snap.traces_sampled = sink.sampled();
-                        snap.trace_spans = sink.span_count();
-                        snap.trace_spans_dropped = sink.dropped();
-                    }
-                    let _ = tx.send(snap);
+                    self.sample_queue_depths();
+                    let _ = tx.send(self.snapshot_with_stages());
+                }
+                Ok(Message::Scrape { kind, respond }) => {
+                    let _ = respond.send(self.scrape(kind));
                 }
                 Ok(Message::Warmup(tx)) => {
                     let res = match self.runtime.as_mut() {
@@ -648,10 +689,136 @@ impl EngineThread {
                 }
             }
             self.drain_retrieval_feedback();
+            // Re-evaluate per-tenant burn rates each turn: arming (and
+            // disarming) must track the window ring as it slides, not
+            // wait for the next scrape. A no-op without telemetry.
+            self.stats.evaluate_slo();
             for batch in self.pending.poll_expired(Instant::now()) {
                 self.execute(batch);
             }
         }
+    }
+
+    /// Sample the retrieval-queue gauges (total + per-corpus) into the
+    /// stats; shared by the snapshot path and the scrape path.
+    fn sample_queue_depths(&mut self) {
+        let depth = self
+            .retrieval
+            .as_ref()
+            .map(|rt| rt.queue_depth() as u64)
+            .unwrap_or(0);
+        self.stats.set_retrieval_queue_depth(depth);
+        let corpus_depths = self
+            .retrieval
+            .as_ref()
+            .map(|rt| rt.corpus_depths())
+            .unwrap_or_default();
+        self.stats.set_corpus_queue_depths(&corpus_depths);
+    }
+
+    /// Snapshot with the PR 9 trace-collector rows grafted on.
+    fn snapshot_with_stages(&self) -> StatsSnapshot {
+        let mut snap = self.stats.snapshot();
+        if let Some(sink) = &self.trace {
+            snap.stages = sink.stage_rows();
+            snap.traces_sampled = sink.sampled();
+            snap.trace_spans = sink.span_count();
+            snap.trace_spans_dropped = sink.dropped();
+        }
+        snap
+    }
+
+    /// Answer one scrape-server request on the engine thread. Every
+    /// endpoint refreshes gauges + SLO state first, so a scrape never
+    /// serves numbers staler than the request itself.
+    fn scrape(&mut self, kind: ScrapeKind) -> ScrapeBody {
+        self.drain_retrieval_feedback();
+        self.sample_queue_depths();
+        self.stats.evaluate_slo();
+        match kind {
+            ScrapeKind::Metrics => {
+                let stages = self
+                    .trace
+                    .as_ref()
+                    .map(|sink| sink.stage_histograms())
+                    .unwrap_or_default();
+                let trace = self
+                    .trace
+                    .as_ref()
+                    .map(|sink| (sink.sampled(), sink.span_count(), sink.dropped()));
+                ScrapeBody {
+                    content_type: PROMETHEUS_CONTENT_TYPE,
+                    body: self.stats.prometheus(&stages, trace),
+                }
+            }
+            ScrapeKind::Healthz => ScrapeBody {
+                content_type: "application/json",
+                body: self.healthz().to_string(),
+            },
+            ScrapeKind::Snapshot => ScrapeBody {
+                content_type: "application/json",
+                body: self.snapshot_with_stages().to_json().to_string(),
+            },
+            ScrapeKind::SloReport => ScrapeBody {
+                content_type: "text/plain; charset=utf-8",
+                body: match self.stats.telemetry_report() {
+                    Some(report) => format!("{report}\n"),
+                    None => "telemetry windows are off\n".into(),
+                },
+            },
+        }
+    }
+
+    /// Liveness body: engine mode plus the retrieval pool's structural
+    /// gauges (the numbers a load balancer or operator checks first).
+    fn healthz(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("status".into(), Json::String("ok".into()));
+        root.insert(
+            "engine".into(),
+            Json::String(
+                if self.runtime.is_some() { "xla+cpu" } else { "cpu" }.into(),
+            ),
+        );
+        let mut retrieval = std::collections::BTreeMap::new();
+        retrieval.insert(
+            "spawned".into(),
+            Json::Bool(self.retrieval.is_some()),
+        );
+        if let Some(rt) = &self.retrieval {
+            let (fast, bulk) = rt.lane_depths();
+            retrieval.insert(
+                "queue_depth".into(),
+                Json::Number(rt.queue_depth() as f64),
+            );
+            retrieval
+                .insert("dispatchers".into(), Json::Number(rt.dispatchers() as f64));
+            retrieval.insert("fast_lane".into(), Json::Number(fast as f64));
+            retrieval.insert("bulk_lane".into(), Json::Number(bulk as f64));
+            retrieval.insert(
+                "corpora".into(),
+                Json::Array(
+                    rt.corpus_depths()
+                        .into_iter()
+                        .map(|(corpus, depth)| {
+                            let mut row = std::collections::BTreeMap::new();
+                            row.insert(
+                                "corpus".into(),
+                                Json::Number(corpus as f64),
+                            );
+                            row.insert(
+                                "queue_depth".into(),
+                                Json::Number(depth as f64),
+                            );
+                            Json::Object(row)
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        root.insert("retrieval".into(), Json::Object(retrieval));
+        Json::Object(root)
     }
 
     /// The refine-stage configuration a corpus search runs with, derived
@@ -689,12 +856,12 @@ impl EngineThread {
         ack: Sender<Result<usize, ServiceError>>,
     ) {
         let Some(metric) = self.metrics.get(&metric_id).cloned() else {
-            self.stats.errors += 1;
+            self.stats.inc_errors();
             let _ = ack.send(Err(ServiceError::UnknownMetric(metric_id)));
             return;
         };
         if !(lambda > 0.0 && lambda.is_finite()) {
-            self.stats.errors += 1;
+            self.stats.inc_errors();
             let _ = ack.send(Err(ServiceError::InvalidConfig(format!(
                 "corpus serving lambda must be positive and finite (got {lambda})"
             ))));
@@ -727,7 +894,7 @@ impl EngineThread {
         let metric = match self.metrics.get(&job.query.metric) {
             Some(m) => m,
             None => {
-                self.stats.errors += 1;
+                self.stats.inc_errors();
                 let _ = job
                     .respond
                     .send(Err(ServiceError::UnknownMetric(job.query.metric)));
@@ -736,7 +903,7 @@ impl EngineThread {
         };
         let d = metric.dim();
         if job.query.r.dim() != d || job.query.c.dim() != d {
-            self.stats.errors += 1;
+            self.stats.inc_errors();
             let got = if job.query.r.dim() != d { job.query.r.dim() } else { job.query.c.dim() };
             let _ = job
                 .respond
@@ -784,8 +951,19 @@ impl EngineThread {
             self.config.batcher.max_delay,
         ) {
             budget = tightest(budget, SolveBudget::Iterations(cap));
-            self.stats.budget_sheds += size as u64;
+            self.stats.add_budget_sheds(size as u64);
             shed = true;
+        }
+        // PR 10: a tenant whose latency SLO is burning gets its batches
+        // shed to the policy's iteration cap until the burn clears. The
+        // cap composes through `tightest`, so Deadline-budgeted queries
+        // keep their (tighter) wall-clock bound.
+        if let Some(cap) = self.stats.slo_shed_cap(class.metric.0) {
+            budget = tightest(budget, SolveBudget::Iterations(cap));
+            if !shed {
+                self.stats.add_budget_sheds(size as u64);
+                shed = true;
+            }
         }
         let solve_start = tsink.as_ref().map(|s| s.now_us());
 
@@ -818,7 +996,7 @@ impl EngineThread {
                     return;
                 }
                 Err(e) => {
-                    self.stats.errors += 1;
+                    self.stats.inc_errors();
                     if !self.config.cpu_fallback {
                         let msg = e.to_string();
                         for job in jobs {
@@ -986,13 +1164,11 @@ impl EngineThread {
         let now = Instant::now();
         for (job, outcome) in jobs.into_iter().zip(outcomes) {
             let latency = now.saturating_duration_since(job.enqueued);
-            self.stats.record_query_latency(latency);
-            self.stats.record_outcome(&outcome);
-            if let SolveBudget::Deadline(t) = job.query.budget {
-                if now > t {
-                    self.stats.deadline_misses += 1;
-                }
-            }
+            let tenant = job.query.metric.0;
+            let missed =
+                matches!(job.query.budget, SolveBudget::Deadline(t) if now > t);
+            self.stats.record_query_served(tenant, latency, missed);
+            self.stats.record_outcome(tenant, &outcome);
             // Three spans per traced member: batcher wait, the shared
             // panel solve, and the whole-query root they nest under.
             if let (Some(bt), Some(id)) = (&trace, job.trace) {

@@ -60,6 +60,7 @@ pub mod retrieval;
 pub mod rng;
 pub mod runtime;
 pub mod simplex;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod sinkhorn;
@@ -93,6 +94,7 @@ pub mod prelude {
         WarmStartStore,
     };
     pub use crate::svm::{MulticlassSvm, SvmConfig};
+    pub use crate::telemetry::{SloPolicy, TelemetryConfig, TelemetryReport};
     pub use crate::trace::{TraceConfig, TraceSink};
     pub use crate::F;
 }

@@ -207,6 +207,18 @@ impl<J: MailboxJob, S: Send + 'static> DispatcherPool<J, S> {
         out
     }
 
+    /// Ready-lane backlogs `(fast, bulk)` — mailboxes runnable but not
+    /// yet claimed by a dispatcher. Exposed for the health endpoint.
+    pub(crate) fn lane_depths(&self) -> (usize, usize) {
+        let ready = lock(&self.shared.ready);
+        (ready.fast.len(), ready.bulk.len())
+    }
+
+    /// Number of dispatcher threads in the pool.
+    pub(crate) fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
     fn enqueue(&self, mailbox: &Arc<Mailbox<J, S>>, job: J) {
         self.shared.depth.fetch_add(1, Ordering::Relaxed);
         let schedule = {

@@ -295,6 +295,19 @@ impl RetrievalRuntime {
             .collect()
     }
 
+    /// Ready-lane backlogs `(fast, bulk)`: mailboxes whose head job is
+    /// runnable but not yet claimed by a dispatcher thread. A sustained
+    /// nonzero fast-lane depth means searches are waiting on dispatcher
+    /// capacity, not on their own corpus's serialized work.
+    pub fn lane_depths(&self) -> (usize, usize) {
+        self.pool.lane_depths()
+    }
+
+    /// Number of dispatcher threads serving the mailbox pool.
+    pub fn dispatchers(&self) -> usize {
+        self.pool.workers()
+    }
+
     /// Route a corpus-addressed job to its mailbox, failing the
     /// promise inline when no mailbox was ever created for the key
     /// (nothing is queued there, so the unknown-corpus answer is

@@ -1,0 +1,596 @@
+//! Prometheus text-exposition (v0.0.4) rendering — and a hand-written
+//! line parser used by the round-trip tests.
+//!
+//! Families render as `# HELP` / `# TYPE` headers followed by one sample
+//! line per (labels, value). Counters and gauges are single lines;
+//! histograms render the cumulative `_bucket{le="..."}` series (one line
+//! per occupied log2 bucket prefix, then `+Inf`), `_sum` and `_count`.
+//!
+//! Log2 buckets map to exact integer upper bounds: bucket `i` holds
+//! samples in `[2^i, 2^{i+1})`, so `le = 2^{i+1} - 1` is inclusive-exact
+//! for integer samples. Bucket 31 is the clamp bucket (everything
+//! ≥ 2^31, unbounded above), so it folds into `+Inf` rather than lying
+//! with a finite bound.
+
+use crate::util::histogram::Log2Histogram;
+
+/// Prometheus metric kind, as rendered into `# TYPE`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl PromKind {
+    fn name(self) -> &'static str {
+        match self {
+            PromKind::Counter => "counter",
+            PromKind::Gauge => "gauge",
+            PromKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One sample value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PromValue {
+    Counter(u64),
+    Gauge(f64),
+    /// Cumulative-bucket histogram: `(upper_bound, cumulative_count)`
+    /// pairs in ascending bound order (the `+Inf` bucket is implicit —
+    /// it always equals `count`).
+    Histogram {
+        buckets: Vec<(u64, u64)>,
+        sum: u128,
+        count: u64,
+    },
+}
+
+impl PromValue {
+    /// Convert a [`Log2Histogram`] into cumulative `le` buckets. Emits
+    /// one bucket per index up to the highest occupied finite bucket
+    /// (bucket 31, the clamp bucket, folds into `+Inf`).
+    pub fn histogram(h: &Log2Histogram, sum: u128) -> Self {
+        let mut buckets = Vec::new();
+        let top = h
+            .buckets()
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, &n)| n > 0)
+            .map(|(i, _)| i.min(30))
+            .unwrap_or(0);
+        let mut cum = 0u64;
+        if !h.is_empty() {
+            for (i, &n) in h.buckets().iter().enumerate().take(top + 1) {
+                cum += n;
+                buckets.push(((1u64 << (i + 1)) - 1, cum));
+            }
+        }
+        PromValue::Histogram { buckets, sum, count: h.count() }
+    }
+}
+
+/// One sample: resolved label pairs plus the value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromSample {
+    pub labels: Vec<(&'static str, String)>,
+    pub value: PromValue,
+}
+
+/// One family: a named group of samples sharing help text and kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromFamily {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: PromKind,
+    pub samples: Vec<PromSample>,
+}
+
+/// The Content-Type the scrape server answers `/metrics` with.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Escape a label value per the exposition format (`\\`, `\"`, `\n`).
+fn escape_label(v: &str, out: &mut String) {
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Escape help text (`\\` and `\n` only — quotes are legal there).
+fn escape_help(v: &str, out: &mut String) {
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn render_labels(out: &mut String, labels: &[(&'static str, String)], extra: Option<(&str, &str)>) {
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label(v, out);
+        out.push('"');
+    }
+    if let Some((k, v)) = extra {
+        if !first {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label(v, out);
+        out.push('"');
+    }
+    out.push('}');
+}
+
+fn render_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render families into the v0.0.4 text exposition format. Families are
+/// emitted in the order given (the registry already sorts by name); each
+/// gets exactly one `# HELP` + `# TYPE` header.
+pub fn render_prometheus(families: &[PromFamily]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        out.push_str("# HELP ");
+        out.push_str(fam.name);
+        out.push(' ');
+        escape_help(fam.help, &mut out);
+        out.push('\n');
+        out.push_str("# TYPE ");
+        out.push_str(fam.name);
+        out.push(' ');
+        out.push_str(fam.kind.name());
+        out.push('\n');
+        for sample in &fam.samples {
+            match &sample.value {
+                PromValue::Counter(v) => {
+                    out.push_str(fam.name);
+                    render_labels(&mut out, &sample.labels, None);
+                    out.push(' ');
+                    out.push_str(&v.to_string());
+                    out.push('\n');
+                }
+                PromValue::Gauge(v) => {
+                    out.push_str(fam.name);
+                    render_labels(&mut out, &sample.labels, None);
+                    out.push(' ');
+                    out.push_str(&render_f64(*v));
+                    out.push('\n');
+                }
+                PromValue::Histogram { buckets, sum, count } => {
+                    for (le, cum) in buckets {
+                        out.push_str(fam.name);
+                        out.push_str("_bucket");
+                        render_labels(&mut out, &sample.labels, Some(("le", &le.to_string())));
+                        out.push(' ');
+                        out.push_str(&cum.to_string());
+                        out.push('\n');
+                    }
+                    out.push_str(fam.name);
+                    out.push_str("_bucket");
+                    render_labels(&mut out, &sample.labels, Some(("le", "+Inf")));
+                    out.push(' ');
+                    out.push_str(&count.to_string());
+                    out.push('\n');
+                    out.push_str(fam.name);
+                    out.push_str("_sum");
+                    render_labels(&mut out, &sample.labels, None);
+                    out.push(' ');
+                    out.push_str(&sum.to_string());
+                    out.push('\n');
+                    out.push_str(fam.name);
+                    out.push_str("_count");
+                    render_labels(&mut out, &sample.labels, None);
+                    out.push(' ');
+                    out.push_str(&count.to_string());
+                    out.push('\n');
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One parsed exposition line (see [`parse_exposition`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PromLine {
+    Help { name: String, help: String },
+    Type { name: String, kind: String },
+    /// `name{labels} value` — labels unescaped, in file order.
+    Sample { name: String, labels: Vec<(String, String)>, value: f64 },
+}
+
+/// Hand-written parser for the v0.0.4 text format — the round-trip
+/// oracle for [`render_prometheus`] and the assertion helper the e2e
+/// scrape tests use. Returns `Err` with the offending line on any
+/// malformed input.
+pub fn parse_exposition(text: &str) -> Result<Vec<PromLine>, String> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest
+                .split_once(' ')
+                .ok_or_else(|| format!("malformed HELP line: {line}"))?;
+            out.push(PromLine::Help {
+                name: name.to_string(),
+                help: unescape(help, false)?,
+            });
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .ok_or_else(|| format!("malformed TYPE line: {line}"))?;
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("unknown TYPE kind: {line}"));
+            }
+            out.push(PromLine::Type { name: name.to_string(), kind: kind.to_string() });
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // comment
+        }
+        out.push(parse_sample(line)?);
+    }
+    Ok(out)
+}
+
+fn parse_sample(line: &str) -> Result<PromLine, String> {
+    let bytes = line.as_bytes();
+    let name_end = bytes
+        .iter()
+        .position(|&b| b == b'{' || b == b' ')
+        .ok_or_else(|| format!("sample line without value: {line}"))?;
+    let name = &line[..name_end];
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+    {
+        return Err(format!("invalid metric name in: {line}"));
+    }
+    let mut labels = Vec::new();
+    let mut pos = name_end;
+    if bytes[pos] == b'{' {
+        pos += 1;
+        loop {
+            if pos >= bytes.len() {
+                return Err(format!("unterminated label set: {line}"));
+            }
+            if bytes[pos] == b'}' {
+                pos += 1;
+                break;
+            }
+            let key_end = line[pos..]
+                .find('=')
+                .ok_or_else(|| format!("label without '=': {line}"))?
+                + pos;
+            let key = line[pos..key_end].to_string();
+            if key.is_empty() {
+                return Err(format!("empty label key: {line}"));
+            }
+            if bytes.get(key_end + 1) != Some(&b'"') {
+                return Err(format!("label value not quoted: {line}"));
+            }
+            let mut value = String::new();
+            let mut i = key_end + 2;
+            loop {
+                match bytes.get(i) {
+                    None => return Err(format!("unterminated label value: {line}")),
+                    Some(b'"') => break,
+                    Some(b'\\') => {
+                        match bytes.get(i + 1) {
+                            Some(b'\\') => value.push('\\'),
+                            Some(b'"') => value.push('"'),
+                            Some(b'n') => value.push('\n'),
+                            _ => return Err(format!("bad escape in label value: {line}")),
+                        }
+                        i += 2;
+                    }
+                    Some(_) => {
+                        // Multi-byte UTF-8 is passed through unharmed:
+                        // walk to the next char boundary.
+                        let mut j = i + 1;
+                        while j < bytes.len() && !line.is_char_boundary(j) {
+                            j += 1;
+                        }
+                        value.push_str(&line[i..j]);
+                        i = j;
+                    }
+                }
+            }
+            labels.push((key, value));
+            pos = i + 1;
+            if bytes.get(pos) == Some(&b',') {
+                pos += 1;
+            }
+        }
+    }
+    let rest = line[pos..].trim_start();
+    let value_str = rest.split_whitespace().next().unwrap_or("");
+    let value = match value_str {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        s => s
+            .parse::<f64>()
+            .map_err(|_| format!("unparseable sample value: {line}"))?,
+    };
+    Ok(PromLine::Sample { name: name.to_string(), labels, value })
+}
+
+fn unescape(v: &str, label: bool) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = v.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('"') if label => out.push('"'),
+                other => return Err(format!("bad escape \\{other:?} in: {v}")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_families() -> Vec<PromFamily> {
+        let mut h = Log2Histogram::new();
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        vec![
+            PromFamily {
+                name: "sinkhorn_queries_total",
+                help: "Distance queries served",
+                kind: PromKind::Counter,
+                samples: vec![
+                    PromSample {
+                        labels: vec![("tenant", "m0".into())],
+                        value: PromValue::Counter(42),
+                    },
+                    PromSample {
+                        labels: vec![("tenant", "m1".into())],
+                        value: PromValue::Counter(7),
+                    },
+                ],
+            },
+            PromFamily {
+                name: "sinkhorn_retrieval_queue_depth",
+                help: "Jobs queued or running",
+                kind: PromKind::Gauge,
+                samples: vec![PromSample { labels: vec![], value: PromValue::Gauge(3.5) }],
+            },
+            PromFamily {
+                name: "sinkhorn_query_latency_us",
+                help: "Query latency \\ \"quoted\"\nsecond line",
+                kind: PromKind::Histogram,
+                samples: vec![PromSample {
+                    labels: vec![("tenant", "m\"0\\\n".into())],
+                    value: PromValue::histogram(&h, 19_000),
+                }],
+            },
+        ]
+    }
+
+    #[test]
+    fn render_round_trips_through_the_parser() {
+        let families = sample_families();
+        let text = render_prometheus(&families);
+        let lines = parse_exposition(&text).expect("parse back what we rendered");
+
+        // Header pairs in order, one per family.
+        let helps: Vec<&PromLine> =
+            lines.iter().filter(|l| matches!(l, PromLine::Help { .. })).collect();
+        assert_eq!(helps.len(), 3);
+        match helps[2] {
+            PromLine::Help { name, help } => {
+                assert_eq!(name, "sinkhorn_query_latency_us");
+                assert_eq!(help, "Query latency \\ \"quoted\"\nsecond line", "help escaping round-trips");
+            }
+            _ => unreachable!(),
+        }
+        match &lines[1] {
+            PromLine::Type { name, kind } => {
+                assert_eq!(name, "sinkhorn_queries_total");
+                assert_eq!(kind, "counter");
+            }
+            other => panic!("expected TYPE after HELP, got {other:?}"),
+        }
+
+        // Counter samples keep per-tenant labels and values.
+        let samples: Vec<&PromLine> =
+            lines.iter().filter(|l| matches!(l, PromLine::Sample { .. })).collect();
+        match samples[0] {
+            PromLine::Sample { name, labels, value } => {
+                assert_eq!(name, "sinkhorn_queries_total");
+                assert_eq!(labels, &[("tenant".to_string(), "m0".to_string())]);
+                assert_eq!(*value, 42.0);
+            }
+            _ => unreachable!(),
+        }
+
+        // Histogram series: ascending le, cumulative counts, +Inf=count.
+        let buckets: Vec<(f64, f64)> = lines
+            .iter()
+            .filter_map(|l| match l {
+                PromLine::Sample { name, labels, value }
+                    if name == "sinkhorn_query_latency_us_bucket" =>
+                {
+                    let le = labels.iter().find(|(k, _)| k == "le").expect("le label");
+                    let le = match le.1.as_str() {
+                        "+Inf" => f64::INFINITY,
+                        s => s.parse().unwrap(),
+                    };
+                    Some((le, *value))
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(!buckets.is_empty());
+        for pair in buckets.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "le strictly ascending");
+            assert!(pair[0].1 <= pair[1].1, "counts cumulative");
+        }
+        // 100 lands in bucket 6 (le=127), 1000 in bucket 9 (le=1023).
+        assert!(buckets.contains(&(127.0, 90.0)));
+        assert_eq!(buckets.last().unwrap(), &(f64::INFINITY, 100.0));
+        let sum = lines.iter().find_map(|l| match l {
+            PromLine::Sample { name, value, .. }
+                if name == "sinkhorn_query_latency_us_sum" =>
+            {
+                Some(*value)
+            }
+            _ => None,
+        });
+        assert_eq!(sum, Some(19_000.0));
+        let count = lines.iter().find_map(|l| match l {
+            PromLine::Sample { name, value, .. }
+                if name == "sinkhorn_query_latency_us_count" =>
+            {
+                Some(*value)
+            }
+            _ => None,
+        });
+        assert_eq!(count, Some(100.0));
+
+        // The escaped label value survives the round trip.
+        let escaped = lines.iter().find_map(|l| match l {
+            PromLine::Sample { name, labels, .. }
+                if name == "sinkhorn_query_latency_us_count" =>
+            {
+                labels.iter().find(|(k, _)| k == "tenant").map(|(_, v)| v.clone())
+            }
+            _ => None,
+        });
+        assert_eq!(escaped.as_deref(), Some("m\"0\\\n"));
+    }
+
+    #[test]
+    fn golden_exposition_snapshot() {
+        // A hand-checked golden rendering: header order, label quoting,
+        // cumulative buckets, +Inf, _sum/_count. Guards accidental
+        // format drift (Prometheus is strict about this grammar).
+        let mut h = Log2Histogram::new();
+        h.record(3);
+        h.record(5);
+        let families = vec![
+            PromFamily {
+                name: "sinkhorn_errors_total",
+                help: "Failed queries",
+                kind: PromKind::Counter,
+                samples: vec![PromSample { labels: vec![], value: PromValue::Counter(0) }],
+            },
+            PromFamily {
+                name: "sinkhorn_w_us",
+                help: "w",
+                kind: PromKind::Histogram,
+                samples: vec![PromSample {
+                    labels: vec![("tenant", "c2".into())],
+                    value: PromValue::histogram(&h, 8),
+                }],
+            },
+        ];
+        let expected = "\
+# HELP sinkhorn_errors_total Failed queries
+# TYPE sinkhorn_errors_total counter
+sinkhorn_errors_total 0
+# HELP sinkhorn_w_us w
+# TYPE sinkhorn_w_us histogram
+sinkhorn_w_us_bucket{tenant=\"c2\",le=\"1\"} 0
+sinkhorn_w_us_bucket{tenant=\"c2\",le=\"3\"} 1
+sinkhorn_w_us_bucket{tenant=\"c2\",le=\"7\"} 2
+sinkhorn_w_us_bucket{tenant=\"c2\",le=\"+Inf\"} 2
+sinkhorn_w_us_sum{tenant=\"c2\"} 8
+sinkhorn_w_us_count{tenant=\"c2\"} 2
+";
+        assert_eq!(render_prometheus(&families), expected);
+        parse_exposition(expected).expect("golden text parses");
+    }
+
+    #[test]
+    fn empty_histogram_renders_inf_bucket_only() {
+        let h = Log2Histogram::new();
+        let fam = PromFamily {
+            name: "sinkhorn_empty_us",
+            help: "e",
+            kind: PromKind::Histogram,
+            samples: vec![PromSample { labels: vec![], value: PromValue::histogram(&h, 0) }],
+        };
+        let text = render_prometheus(&[fam]);
+        assert!(text.contains("sinkhorn_empty_us_bucket{le=\"+Inf\"} 0\n"));
+        assert!(text.contains("sinkhorn_empty_us_count 0\n"));
+        assert!(!text.contains("le=\"1\""));
+    }
+
+    #[test]
+    fn clamp_bucket_folds_into_inf() {
+        let mut h = Log2Histogram::new();
+        h.record(u64::MAX); // bucket 31: unbounded above, must not claim a finite le
+        let v = PromValue::histogram(&h, 1);
+        match v {
+            PromValue::Histogram { buckets, count, .. } => {
+                assert_eq!(count, 1);
+                // Finite buckets stop at bucket 30's bound; the clamp
+                // bucket's mass appears only at +Inf (count).
+                let max_le = buckets.last().map(|(le, _)| *le).unwrap_or(0);
+                assert!(max_le <= (1u64 << 31) - 1);
+                let max_cum = buckets.last().map(|(_, c)| *c).unwrap_or(0);
+                assert_eq!(max_cum, 0, "clamped sample only counted at +Inf");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_exposition("sinkhorn_x{tenant=\"m0\" 3").is_err(), "unterminated labels");
+        assert!(parse_exposition("sinkhorn_x{tenant=m0} 3").is_err(), "unquoted value");
+        assert!(parse_exposition("sinkhorn_x abc").is_err(), "non-numeric value");
+        assert!(parse_exposition("9sinkhorn_x 1").is_err(), "digit-leading name");
+        assert!(parse_exposition("# TYPE sinkhorn_x flavor").is_err(), "unknown kind");
+    }
+}

@@ -1,0 +1,132 @@
+//! Telemetry (PR 10): metrics registry, sliding-window rollups,
+//! Prometheus exposition and the per-tenant SLO monitor.
+//!
+//! Four pieces, layered:
+//!
+//! * [`registry`] — a zero-dependency instrument registry: typed
+//!   `Counter` / `Gauge` / `Histogram` handles with stable names and
+//!   label sets (`tenant`, `backend`, `stage`). The coordinator's
+//!   [`crate::coordinator::metrics::Stats`] is built on it, so every
+//!   serving gauge is a registered instrument instead of an ad-hoc
+//!   struct field.
+//! * **Windows** — with a [`TelemetryConfig`] set, each counter and
+//!   histogram additionally folds into a ring of `windows` fixed-width
+//!   slots (default 12 × 10 s), so p50/p99 latency, deadline-miss rate,
+//!   warm-hit rate, recall and certified-interval-width quantiles are
+//!   answerable "over the last minute", per tenant — not just since
+//!   process start. Histogram slots fold via
+//!   [`crate::util::histogram::Log2Histogram::merge`].
+//! * [`exporter`] — `render_prometheus()` (text exposition v0.0.4) and
+//!   the minimal scrape [`server`] bound from the engine: `/metrics`,
+//!   `/healthz`, `/snapshot` (JSON) and `/slo` (windowed report).
+//! * [`slo`] — declarative [`SloPolicy`] evaluated per window with
+//!   fast/slow burn-rate gauges; a tenant whose latency SLO burns is
+//!   **armed** and its batches are shed to the policy's iteration cap
+//!   through the PR 6 `shed_cap` path.
+//!
+//! ## Zero-overhead contract
+//!
+//! Telemetry is **off by default** (`CoordinatorConfig::telemetry:
+//! Option<TelemetryConfig>` = `None`). Off means: no scrape server
+//! thread, no window rings, no per-tenant instruments, no clock reads on
+//! the hot path — instrument updates degrade to the same plain integer
+//! folds `Stats` always did, and all PR 1–9 bit-identity and latency
+//! contracts are untouched.
+
+pub mod exporter;
+pub mod registry;
+pub mod server;
+pub mod slo;
+
+pub use exporter::{
+    parse_exposition, render_prometheus, PromFamily, PromKind, PromLine, PromSample,
+    PromValue, PROMETHEUS_CONTENT_TYPE,
+};
+pub use registry::{CounterId, GaugeId, HistogramId, Labels, Registry};
+pub use server::{http_get, ScrapeBody, ScrapeKind, TelemetryServer};
+pub use slo::{CorpusSlo, SloMonitor, SloPolicy, TelemetryReport, TenantSlo};
+
+use std::time::Duration;
+
+/// Telemetry knobs, set via `CoordinatorConfigBuilder::telemetry(..)`.
+/// Default **off** (the config field is an `Option`);
+/// `TelemetryConfig::default()` binds an ephemeral localhost port with
+/// a 12 × 10 s window ring and no SLO policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Scrape server bind address, e.g. `"127.0.0.1:9464"`; `":0"` ports
+    /// resolve at bind time ([`crate::coordinator::DistanceService::
+    /// scrape_addr`] reports the result).
+    pub bind: String,
+    /// Width of one rollup window.
+    pub window: Duration,
+    /// Number of windows in the ring (the "over the last minute" span is
+    /// `window × windows`). Must be ≥ 2 — burn-rate alerting needs a
+    /// current and a previous window.
+    pub windows: usize,
+    /// Optional per-tenant SLO policy (alerting + policy-driven
+    /// shedding). `None` serves windowed rollups without alerting.
+    pub slo: Option<SloPolicy>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self {
+            bind: "127.0.0.1:0".into(),
+            window: Duration::from_secs(10),
+            windows: 12,
+            slo: None,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Validate the knobs; mirrors `CoordinatorConfig::validate` style.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bind.is_empty() {
+            return Err("telemetry.bind must be a host:port address".into());
+        }
+        if self.window.is_zero() {
+            return Err("telemetry.window must be nonzero".into());
+        }
+        if self.windows < 2 {
+            return Err(
+                "telemetry.windows must be >= 2 (burn rates need a current and \
+                 a previous window)"
+                    .into(),
+            );
+        }
+        if let Some(slo) = &self.slo {
+            slo.validate()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn telemetry_config_validation() {
+        TelemetryConfig::default().validate().unwrap();
+        let base = TelemetryConfig::default();
+        let err = TelemetryConfig { bind: String::new(), ..base.clone() }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("bind"), "{err}");
+        let err = TelemetryConfig { window: Duration::ZERO, ..base.clone() }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("window"), "{err}");
+        let err = TelemetryConfig { windows: 1, ..base.clone() }.validate().unwrap_err();
+        assert!(err.contains("windows"), "{err}");
+        let err = TelemetryConfig {
+            slo: Some(SloPolicy { fast_burn: -1.0, ..SloPolicy::default() }),
+            ..base
+        }
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("fast_burn"), "{err}");
+    }
+}

@@ -1,0 +1,486 @@
+//! Zero-dependency metrics registry with optional sliding-window rollups.
+//!
+//! Instruments are registered once — `counter` / `gauge` / `histogram`
+//! return small `Copy` index handles into dense cell vectors — and every
+//! subsequent operation is an O(1) vector index plus a plain integer
+//! fold: no atomics, no maps, no locks. The registry is single-threaded
+//! by design; it lives inside the engine thread's
+//! [`crate::coordinator::metrics::Stats`] and is only ever read through
+//! the engine's message loop (the scrape server round-trips a
+//! `Message::Scrape` instead of sharing memory).
+//!
+//! ## Windows
+//!
+//! Constructed with a window spec, each counter and histogram cell
+//! additionally owns a [`Ring`] of `windows` fixed-width slots keyed by
+//! the *window ordinal* `now_us / width_us + 1` (ordinal 0 is the empty
+//! sentinel). Recording lazily resets a slot whose ordinal went stale, so
+//! there is no background ticker; reads fold the slots whose ordinals lie
+//! in `(current - windows, current]`. With no window spec (telemetry
+//! off) the rings are `None` and recording never reads the clock.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::trace::Tenant;
+use crate::util::histogram::Log2Histogram;
+use crate::util::saturating_micros;
+
+/// The label set an instrument is registered under. All three keys are
+/// optional; instruments sharing a name but differing labels form one
+/// Prometheus family. Ordered so rendering is deterministic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Labels {
+    /// Which tenant the series describes (`m<id>` metric / `c<id>` corpus).
+    pub tenant: Option<Tenant>,
+    /// Which backend served (`"xla"` / `"cpu"`).
+    pub backend: Option<&'static str>,
+    /// Which pipeline stage a span histogram covers.
+    pub stage: Option<&'static str>,
+}
+
+impl Labels {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn tenant(tenant: Tenant) -> Self {
+        Self { tenant: Some(tenant), ..Self::default() }
+    }
+
+    pub fn backend(backend: &'static str) -> Self {
+        Self { backend: Some(backend), ..Self::default() }
+    }
+
+    pub fn stage_tenant(stage: &'static str, tenant: Tenant) -> Self {
+        Self { tenant: Some(tenant), stage: Some(stage), backend: None }
+    }
+
+    /// Rendered `key=value` pairs in fixed (alphabetical) key order.
+    pub fn pairs(&self) -> Vec<(&'static str, String)> {
+        let mut out = Vec::new();
+        if let Some(b) = self.backend {
+            out.push(("backend", b.to_string()));
+        }
+        if let Some(s) = self.stage {
+            out.push(("stage", s.to_string()));
+        }
+        if let Some(t) = self.tenant {
+            out.push(("tenant", t.label()));
+        }
+        out
+    }
+}
+
+/// Handle to a registered counter. Plain index — `Copy`, cheap to store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a registered histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramId(usize);
+
+/// Ring of `n` fixed-width windows. Slot `ord % n` holds the fold for
+/// window ordinal `ord`; a slot is lazily reset when a newer ordinal
+/// lands on it, and excluded on read when its ordinal fell out of the
+/// live range.
+#[derive(Debug, Clone)]
+pub struct Ring<T> {
+    width_us: u64,
+    slots: Vec<(u64, T)>,
+}
+
+impl<T: Default + Clone> Ring<T> {
+    fn new(width: Duration, windows: usize) -> Self {
+        Self {
+            width_us: saturating_micros(width).max(1),
+            slots: vec![(0, T::default()); windows.max(2)],
+        }
+    }
+
+    /// Ordinal of the window containing `now_us` (always ≥ 1, so 0 can
+    /// mark an empty slot).
+    fn ordinal(&self, now_us: u64) -> u64 {
+        now_us / self.width_us + 1
+    }
+
+    /// The slot for `now_us`, reset if it last held an older window.
+    fn slot_mut(&mut self, now_us: u64) -> &mut T {
+        let ord = self.ordinal(now_us);
+        let n = self.slots.len() as u64;
+        let slot = &mut self.slots[(ord % n) as usize];
+        if slot.0 != ord {
+            *slot = (ord, T::default());
+        }
+        &mut slot.1
+    }
+
+    /// Fold over the slots whose ordinal lies in `(cur - back, cur]` —
+    /// `back = slots.len()` reads the whole live ring.
+    fn fold_recent<A>(&self, now_us: u64, back: usize, mut acc: A, f: impl Fn(&mut A, &T)) -> A {
+        let cur = self.ordinal(now_us);
+        let back = (back.min(self.slots.len())) as u64;
+        for (ord, value) in &self.slots {
+            if *ord != 0 && *ord <= cur && *ord + back > cur {
+                f(&mut acc, value);
+            }
+        }
+        acc
+    }
+}
+
+/// Windowed histogram slot: the distribution plus its exact sum (the
+/// log2 buckets alone cannot answer `_sum`).
+#[derive(Debug, Clone, Default)]
+struct HistoSlot {
+    h: Log2Histogram,
+    sum: u128,
+}
+
+#[derive(Debug, Clone)]
+struct Meta {
+    name: &'static str,
+    help: &'static str,
+    labels: Labels,
+}
+
+#[derive(Debug, Clone)]
+struct CounterCell {
+    meta: Meta,
+    total: u64,
+    ring: Option<Ring<u64>>,
+}
+
+#[derive(Debug, Clone)]
+struct GaugeCell {
+    meta: Meta,
+    value: f64,
+}
+
+#[derive(Debug, Clone)]
+struct HistoCell {
+    meta: Meta,
+    cum: Log2Histogram,
+    sum: u128,
+    ring: Option<Ring<HistoSlot>>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// The registry. See the module docs for the design contract.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    epoch: Instant,
+    window: Option<(Duration, usize)>,
+    counters: Vec<CounterCell>,
+    gauges: Vec<GaugeCell>,
+    histos: Vec<HistoCell>,
+    index: BTreeMap<(&'static str, Labels), (Kind, usize)>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new(None)
+    }
+}
+
+impl Registry {
+    /// `window = Some((width, n))` arms sliding-window rollups on every
+    /// counter and histogram; `None` (telemetry off) keeps cells
+    /// ring-free and recording clock-free.
+    pub fn new(window: Option<(Duration, usize)>) -> Self {
+        Self {
+            epoch: Instant::now(),
+            window,
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            histos: Vec::new(),
+            index: BTreeMap::new(),
+        }
+    }
+
+    /// Whether windowed rollups are armed.
+    pub fn windowed(&self) -> bool {
+        self.window.is_some()
+    }
+
+    /// Number of window slots (0 when windows are off).
+    pub fn window_count(&self) -> usize {
+        self.window.map(|(_, n)| n.max(2)).unwrap_or(0)
+    }
+
+    /// Microseconds since the registry's epoch (only read on windowed
+    /// operations).
+    fn now_us(&self) -> u64 {
+        saturating_micros(self.epoch.elapsed())
+    }
+
+    /// Current window ordinal, 0 when windows are off.
+    pub fn window_ordinal(&self) -> u64 {
+        match self.window {
+            Some((width, _)) => {
+                self.now_us() / saturating_micros(width).max(1) + 1
+            }
+            None => 0,
+        }
+    }
+
+    /// Register (or look up) a counter. Idempotent per (name, labels).
+    pub fn counter(&mut self, name: &'static str, help: &'static str, labels: Labels) -> CounterId {
+        if let Some(&(kind, i)) = self.index.get(&(name, labels)) {
+            debug_assert_eq!(kind, Kind::Counter, "{name} re-registered as a different kind");
+            return CounterId(i);
+        }
+        let i = self.counters.len();
+        self.counters.push(CounterCell {
+            meta: Meta { name, help, labels },
+            total: 0,
+            ring: self.window.map(|(w, n)| Ring::new(w, n)),
+        });
+        self.index.insert((name, labels), (Kind::Counter, i));
+        CounterId(i)
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&mut self, name: &'static str, help: &'static str, labels: Labels) -> GaugeId {
+        if let Some(&(kind, i)) = self.index.get(&(name, labels)) {
+            debug_assert_eq!(kind, Kind::Gauge, "{name} re-registered as a different kind");
+            return GaugeId(i);
+        }
+        let i = self.gauges.len();
+        self.gauges.push(GaugeCell { meta: Meta { name, help, labels }, value: 0.0 });
+        self.index.insert((name, labels), (Kind::Gauge, i));
+        GaugeId(i)
+    }
+
+    /// Register (or look up) a histogram.
+    pub fn histogram(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        labels: Labels,
+    ) -> HistogramId {
+        if let Some(&(kind, i)) = self.index.get(&(name, labels)) {
+            debug_assert_eq!(kind, Kind::Histogram, "{name} re-registered as a different kind");
+            return HistogramId(i);
+        }
+        let i = self.histos.len();
+        self.histos.push(HistoCell {
+            meta: Meta { name, help, labels },
+            cum: Log2Histogram::new(),
+            sum: 0,
+            ring: self.window.map(|(w, n)| Ring::new(w, n)),
+        });
+        self.index.insert((name, labels), (Kind::Histogram, i));
+        HistogramId(i)
+    }
+
+    /// Increment a counter.
+    #[inline]
+    pub fn add(&mut self, id: CounterId, n: u64) {
+        let now = self.counters[id.0].ring.as_ref().map(|_| self.now_us());
+        let cell = &mut self.counters[id.0];
+        cell.total = cell.total.saturating_add(n);
+        if let (Some(ring), Some(now)) = (cell.ring.as_mut(), now) {
+            let slot = ring.slot_mut(now);
+            *slot = slot.saturating_add(n);
+        }
+    }
+
+    /// Set a gauge.
+    #[inline]
+    pub fn set(&mut self, id: GaugeId, v: f64) {
+        self.gauges[id.0].value = v;
+    }
+
+    /// Record a histogram sample.
+    #[inline]
+    pub fn observe(&mut self, id: HistogramId, v: u64) {
+        let now = self.histos[id.0].ring.as_ref().map(|_| self.now_us());
+        let cell = &mut self.histos[id.0];
+        cell.cum.record(v);
+        cell.sum += v as u128;
+        if let (Some(ring), Some(now)) = (cell.ring.as_mut(), now) {
+            let slot = ring.slot_mut(now);
+            slot.h.record(v);
+            slot.sum += v as u128;
+        }
+    }
+
+    /// Cumulative counter value.
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].total
+    }
+
+    /// Counter folded over the last `back` windows (`usize::MAX` = the
+    /// whole live ring). 0 when windows are off.
+    pub fn counter_recent(&self, id: CounterId, back: usize) -> u64 {
+        match &self.counters[id.0].ring {
+            Some(ring) => {
+                ring.fold_recent(self.now_us(), back, 0u64, |acc, v| *acc = acc.saturating_add(*v))
+            }
+            None => 0,
+        }
+    }
+
+    /// Counter folded over the whole live ring.
+    pub fn counter_windowed(&self, id: CounterId) -> u64 {
+        self.counter_recent(id, usize::MAX)
+    }
+
+    /// Gauge value.
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0].value
+    }
+
+    /// Cumulative histogram (and its exact sample sum).
+    pub fn histogram_cum(&self, id: HistogramId) -> (&Log2Histogram, u128) {
+        let cell = &self.histos[id.0];
+        (&cell.cum, cell.sum)
+    }
+
+    /// Histogram merged over the last `back` windows. Empty when windows
+    /// are off.
+    pub fn histogram_recent(&self, id: HistogramId, back: usize) -> Log2Histogram {
+        match &self.histos[id.0].ring {
+            Some(ring) => ring.fold_recent(
+                self.now_us(),
+                back,
+                Log2Histogram::new(),
+                |acc, slot| acc.merge(&slot.h),
+            ),
+            None => Log2Histogram::new(),
+        }
+    }
+
+    /// Histogram merged over the whole live ring.
+    pub fn histogram_windowed(&self, id: HistogramId) -> Log2Histogram {
+        self.histogram_recent(id, usize::MAX)
+    }
+
+    /// Every registered instrument as Prometheus families, grouped by
+    /// name in ascending (name, labels) order.
+    pub fn families(&self) -> Vec<super::exporter::PromFamily> {
+        use super::exporter::{PromFamily, PromKind, PromSample, PromValue};
+        let mut out: Vec<PromFamily> = Vec::new();
+        for ((name, _), (kind, i)) in &self.index {
+            let (meta, value) = match kind {
+                Kind::Counter => {
+                    let c = &self.counters[*i];
+                    (&c.meta, PromValue::Counter(c.total))
+                }
+                Kind::Gauge => {
+                    let g = &self.gauges[*i];
+                    (&g.meta, PromValue::Gauge(g.value))
+                }
+                Kind::Histogram => {
+                    let h = &self.histos[*i];
+                    (&h.meta, PromValue::histogram(&h.cum, h.sum))
+                }
+            };
+            let prom_kind = match kind {
+                Kind::Counter => PromKind::Counter,
+                Kind::Gauge => PromKind::Gauge,
+                Kind::Histogram => PromKind::Histogram,
+            };
+            let sample = PromSample { labels: meta.labels.pairs(), value };
+            match out.last_mut() {
+                Some(fam) if fam.name == *name => fam.samples.push(sample),
+                _ => out.push(PromFamily {
+                    name,
+                    help: meta.help,
+                    kind: prom_kind,
+                    samples: vec![sample],
+                }),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwindowed_registry_counts_without_clock_state() {
+        let mut reg = Registry::new(None);
+        let c = reg.counter("sinkhorn_test_total", "test", Labels::none());
+        reg.add(c, 3);
+        reg.add(c, 2);
+        assert_eq!(reg.counter_value(c), 5);
+        assert_eq!(reg.counter_windowed(c), 0, "no ring when windows off");
+        assert!(!reg.windowed());
+        assert_eq!(reg.window_ordinal(), 0);
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_name_and_labels() {
+        let mut reg = Registry::new(None);
+        let a = reg.counter("sinkhorn_x_total", "x", Labels::none());
+        let b = reg.counter("sinkhorn_x_total", "x", Labels::none());
+        assert_eq!(a, b);
+        let c = reg.counter("sinkhorn_x_total", "x", Labels::tenant(Tenant::Metric(1)));
+        assert_ne!(a, c, "distinct labels → distinct instrument");
+        reg.add(a, 1);
+        reg.add(c, 7);
+        assert_eq!(reg.counter_value(b), 1);
+        assert_eq!(reg.counter_value(c), 7);
+    }
+
+    #[test]
+    fn windowed_counter_decays_after_the_ring_slides() {
+        let mut reg = Registry::new(Some((Duration::from_millis(20), 3)));
+        let c = reg.counter("sinkhorn_miss_total", "miss", Labels::none());
+        reg.add(c, 4);
+        assert_eq!(reg.counter_value(c), 4);
+        assert_eq!(reg.counter_windowed(c), 4);
+        // Sleep past the whole ring: the cumulative value must hold while
+        // the windowed view decays to zero.
+        std::thread::sleep(Duration::from_millis(90));
+        assert_eq!(reg.counter_value(c), 4);
+        assert_eq!(reg.counter_windowed(c), 0);
+    }
+
+    #[test]
+    fn windowed_histogram_merges_live_slots() {
+        let mut reg = Registry::new(Some((Duration::from_secs(60), 4)));
+        let h = reg.histogram("sinkhorn_lat_us", "lat", Labels::none());
+        reg.observe(h, 100);
+        reg.observe(h, 1000);
+        let (cum, sum) = reg.histogram_cum(h);
+        assert_eq!(cum.count(), 2);
+        assert_eq!(sum, 1100);
+        let win = reg.histogram_windowed(h);
+        assert_eq!(win.count(), 2, "wide windows: both samples live");
+        assert_eq!(win.observed_max(), 1000);
+    }
+
+    #[test]
+    fn recent_counter_reads_a_sub_ring() {
+        let mut reg = Registry::new(Some((Duration::from_secs(60), 12)));
+        let c = reg.counter("sinkhorn_q_total", "q", Labels::none());
+        reg.add(c, 9);
+        // back=2 (current + previous window) sees the current slot.
+        assert_eq!(reg.counter_recent(c, 2), 9);
+        assert_eq!(reg.counter_recent(c, 1), 9);
+    }
+
+    #[test]
+    fn ring_reset_reclaims_stale_slots() {
+        let mut ring: Ring<u64> = Ring::new(Duration::from_micros(10), 2);
+        *ring.slot_mut(0) += 5; // ordinal 1
+        *ring.slot_mut(25) += 7; // ordinal 3 → same slot index as 1, reset
+        let total = ring.fold_recent(25, usize::MAX, 0u64, |a, v| *a += v);
+        assert_eq!(total, 7, "ordinal-1 slot was reclaimed by ordinal 3");
+    }
+}

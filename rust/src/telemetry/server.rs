@@ -1,0 +1,239 @@
+//! Minimal std-`TcpListener` scrape server.
+//!
+//! One background thread accepts connections (non-blocking listener +
+//! short sleep poll so shutdown is prompt), parses just the request line
+//! of an HTTP/1.x GET, and answers `/metrics`, `/healthz` and
+//! `/snapshot` by round-tripping a scrape request through the engine
+//! thread's message loop — the server never touches the registry
+//! directly, so the registry stays single-threaded and lock-free.
+//!
+//! This is deliberately not a general HTTP server: no keep-alive, no
+//! chunking, no TLS — exactly enough for a Prometheus scraper and a
+//! curl-ing operator.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Which endpoint a scrape request wants. Routed by the engine thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScrapeKind {
+    /// `/metrics` — Prometheus text exposition.
+    Metrics,
+    /// `/healthz` — JSON liveness: engine + retrieval runtime + queue depths.
+    Healthz,
+    /// `/snapshot` — the full `StatsSnapshot` as JSON.
+    Snapshot,
+    /// Programmatic windowed SLO report (also used by `serve_demo`).
+    SloReport,
+}
+
+/// A rendered scrape response body.
+#[derive(Debug, Clone)]
+pub struct ScrapeBody {
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+/// Handle to the running scrape server; dropping (or `stop`) joins the
+/// accept thread.
+pub struct TelemetryServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for TelemetryServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetryServer").field("addr", &self.addr).finish()
+    }
+}
+
+impl TelemetryServer {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve scrapes through `handler`. The handler runs on the server
+    /// thread and is expected to round-trip the engine's message loop;
+    /// `None` means the engine is gone and renders as 503.
+    pub fn start(
+        bind: &str,
+        handler: impl Fn(ScrapeKind) -> Option<ScrapeBody> + Send + 'static,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("sinkhorn-telemetry".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => serve_one(stream, &handler),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+            })?;
+        Ok(Self { addr, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound address (port resolved when `bind` asked for `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal and join the accept thread.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_one(mut stream: TcpStream, handler: &impl Fn(ScrapeKind) -> Option<ScrapeBody>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_nonblocking(false);
+    // Read until the end of headers (or a small cap — scrapes are tiny).
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let mut parts = request.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let path = path.split('?').next().unwrap_or(path);
+    if method != "GET" {
+        respond(&mut stream, 405, "text/plain; charset=utf-8", "method not allowed\n");
+        return;
+    }
+    let kind = match path {
+        "/metrics" => ScrapeKind::Metrics,
+        "/healthz" => ScrapeKind::Healthz,
+        "/snapshot" => ScrapeKind::Snapshot,
+        "/slo" => ScrapeKind::SloReport,
+        _ => {
+            respond(&mut stream, 404, "text/plain; charset=utf-8", "not found\n");
+            return;
+        }
+    };
+    match handler(kind) {
+        Some(body) => respond(&mut stream, 200, body.content_type, &body.body),
+        None => respond(
+            &mut stream,
+            503,
+            "text/plain; charset=utf-8",
+            "engine unavailable\n",
+        ),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Service Unavailable",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Tiny test/demo-side HTTP GET against the scrape server: returns
+/// `(status, body)`. Lives here so the e2e tests, bench and `serve_demo`
+/// don't each hand-roll a client.
+pub fn http_get(addr: SocketAddr, path: &str, timeout: Duration) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let status = response
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "malformed status line")
+        })?;
+    let body = match response.split_once("\r\n\r\n") {
+        Some((_, body)) => body.to_string(),
+        None => String::new(),
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_routes_and_shuts_down() {
+        let mut server = TelemetryServer::start("127.0.0.1:0", |kind| match kind {
+            ScrapeKind::Metrics => Some(ScrapeBody {
+                content_type: super::super::exporter::PROMETHEUS_CONTENT_TYPE,
+                body: "sinkhorn_queries_total 1\n".into(),
+            }),
+            ScrapeKind::Healthz => Some(ScrapeBody {
+                content_type: "application/json",
+                body: "{\"status\":\"ok\"}".into(),
+            }),
+            _ => None,
+        })
+        .expect("bind ephemeral port");
+        let addr = server.addr();
+
+        let (status, body) =
+            http_get(addr, "/metrics", Duration::from_secs(2)).expect("scrape");
+        assert_eq!(status, 200);
+        assert!(body.contains("sinkhorn_queries_total 1"));
+
+        let (status, body) =
+            http_get(addr, "/healthz", Duration::from_secs(2)).expect("healthz");
+        assert_eq!(status, 200);
+        assert!(body.contains("\"ok\""));
+
+        let (status, _) =
+            http_get(addr, "/snapshot", Duration::from_secs(2)).expect("snapshot");
+        assert_eq!(status, 503, "handler returning None renders 503");
+
+        let (status, _) =
+            http_get(addr, "/nope", Duration::from_secs(2)).expect("404 path");
+        assert_eq!(status, 404);
+
+        server.stop();
+        // After stop the port no longer accepts (listener dropped).
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(200)).is_err());
+    }
+}

@@ -1,0 +1,577 @@
+//! Per-tenant sliding-window rollups and the SLO burn-rate monitor.
+//!
+//! When telemetry is on, every served query/retrieval additionally feeds
+//! per-tenant windowed instruments (latency, deadline misses, certified
+//! widths, search time, recall). An optional [`SloPolicy`] layers
+//! machine-checkable objectives on top: per evaluation the monitor
+//! computes a **fast burn rate** (bad-event rate over the current +
+//! previous window, normalized by the policy's error budget) and a
+//! **slow burn rate** (over the whole ring), exports both as gauges, and
+//! **arms** a tenant whose burn crosses the thresholds — armed tenants'
+//! batches are shed to the policy's iteration cap by the engine (the
+//! PR 6 `shed_cap` path, now policy-driven instead of backlog-age-only).
+//!
+//! Burn-rate semantics follow the standard SRE construction: a burn of
+//! 1.0 means the tenant is consuming its error budget exactly as fast as
+//! the policy allows; the default fast threshold 8 catches "budget gone
+//! within the ring", the slow threshold 2 catches sustained slow leaks.
+//! Recall-floor and interval-width breaches export as gauges but never
+//! arm shedding — shedding *widens* intervals and cannot help either.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::time::Duration;
+
+use super::registry::{CounterId, GaugeId, HistogramId, Labels, Registry};
+use crate::trace::Tenant;
+use crate::F;
+
+/// Declarative per-tenant service-level objectives. One policy applies
+/// to every tenant (per-tenant policies would just be a map here).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPolicy {
+    /// Latency objective: a query slower than this is a *bad event* even
+    /// if it carried no deadline.
+    pub p99_latency: Duration,
+    /// Error budget: the fraction of a tenant's queries allowed to be
+    /// bad (deadline-missed or over `p99_latency`) per window. Burn rate
+    /// = bad_fraction / budget.
+    pub deadline_miss_budget: f64,
+    /// Windowed probed recall below this floor raises the recall-breach
+    /// gauge for the corpus tenant (never arms shedding).
+    pub recall_floor: f64,
+    /// Windowed p99 certified interval width above this ceiling raises
+    /// the width-breach gauge (never arms shedding). `F::INFINITY`
+    /// disables the check.
+    pub interval_width_ceiling: F,
+    /// Fast-burn alarm threshold over the current + previous window.
+    pub fast_burn: f64,
+    /// Slow-burn alarm threshold over the whole ring.
+    pub slow_burn: f64,
+    /// Iteration cap applied to an armed tenant's batches. `None` makes
+    /// the monitor alert-only.
+    pub shed_iterations: Option<usize>,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        Self {
+            p99_latency: Duration::from_millis(50),
+            deadline_miss_budget: 0.01,
+            recall_floor: 0.0,
+            interval_width_ceiling: F::INFINITY,
+            fast_burn: 8.0,
+            slow_burn: 2.0,
+            shed_iterations: Some(32),
+        }
+    }
+}
+
+impl SloPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p99_latency.is_zero() {
+            return Err("slo.p99_latency must be nonzero".into());
+        }
+        if !(self.deadline_miss_budget > 0.0 && self.deadline_miss_budget <= 1.0) {
+            return Err(format!(
+                "slo.deadline_miss_budget must be in (0, 1] (got {})",
+                self.deadline_miss_budget
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.recall_floor) {
+            return Err(format!(
+                "slo.recall_floor must be in [0, 1] (got {})",
+                self.recall_floor
+            ));
+        }
+        if !(self.interval_width_ceiling > 0.0) {
+            return Err(format!(
+                "slo.interval_width_ceiling must be positive (got {})",
+                self.interval_width_ceiling
+            ));
+        }
+        if !(self.fast_burn > 0.0 && self.fast_burn.is_finite()) {
+            return Err(format!("slo.fast_burn must be positive and finite (got {})", self.fast_burn));
+        }
+        if !(self.slow_burn > 0.0 && self.slow_burn.is_finite()) {
+            return Err(format!("slo.slow_burn must be positive and finite (got {})", self.slow_burn));
+        }
+        if self.shed_iterations == Some(0) {
+            return Err("slo.shed_iterations must be >= 1 when set".into());
+        }
+        Ok(())
+    }
+}
+
+/// Windowed instruments for one metric (distance-query) tenant.
+#[derive(Debug, Clone, Copy)]
+struct MetricTenant {
+    queries: CounterId,
+    misses: CounterId,
+    bad: CounterId,
+    latency: HistogramId,
+    width: HistogramId,
+    fast_gauge: GaugeId,
+    slow_gauge: GaugeId,
+    armed_gauge: GaugeId,
+    width_breach: GaugeId,
+    armed: bool,
+}
+
+/// Windowed instruments for one corpus (retrieval) tenant.
+#[derive(Debug, Clone, Copy)]
+struct CorpusTenant {
+    searches: CounterId,
+    search_us: HistogramId,
+    recall_matched: CounterId,
+    recall_expected: CounterId,
+    recall_breach: GaugeId,
+}
+
+/// The monitor: exists exactly when telemetry is on; the policy inside
+/// is optional (instruments + report without alerting).
+#[derive(Debug, Clone)]
+pub struct SloMonitor {
+    policy: Option<SloPolicy>,
+    metrics: BTreeMap<u32, MetricTenant>,
+    corpora: BTreeMap<u32, CorpusTenant>,
+}
+
+impl SloMonitor {
+    pub fn new(policy: Option<SloPolicy>) -> Self {
+        Self { policy, metrics: BTreeMap::new(), corpora: BTreeMap::new() }
+    }
+
+    pub fn policy(&self) -> Option<&SloPolicy> {
+        self.policy.as_ref()
+    }
+
+    fn metric_tenant(&mut self, reg: &mut Registry, tenant: u32) -> MetricTenant {
+        if let Some(t) = self.metrics.get(&tenant) {
+            return *t;
+        }
+        let labels = Labels::tenant(Tenant::Metric(tenant));
+        let t = MetricTenant {
+            queries: reg.counter(
+                "sinkhorn_tenant_queries_total",
+                "Distance queries served, per metric tenant",
+                labels,
+            ),
+            misses: reg.counter(
+                "sinkhorn_tenant_deadline_misses_total",
+                "Queries answered after their own deadline, per metric tenant",
+                labels,
+            ),
+            bad: reg.counter(
+                "sinkhorn_tenant_slo_bad_total",
+                "SLO bad events (deadline miss or latency over objective), per metric tenant",
+                labels,
+            ),
+            latency: reg.histogram(
+                "sinkhorn_tenant_latency_us",
+                "Query latency in microseconds, per metric tenant",
+                labels,
+            ),
+            width: reg.histogram(
+                "sinkhorn_tenant_interval_width_ppb",
+                "Certified interval width in parts-per-billion, per metric tenant",
+                labels,
+            ),
+            fast_gauge: reg.gauge(
+                "sinkhorn_slo_fast_burn",
+                "Fast burn rate (bad rate over current+previous window / error budget)",
+                labels,
+            ),
+            slow_gauge: reg.gauge(
+                "sinkhorn_slo_slow_burn",
+                "Slow burn rate (bad rate over the whole window ring / error budget)",
+                labels,
+            ),
+            armed_gauge: reg.gauge(
+                "sinkhorn_slo_armed",
+                "1 when the tenant's latency SLO burn has armed policy-driven shedding",
+                labels,
+            ),
+            width_breach: reg.gauge(
+                "sinkhorn_slo_width_breach",
+                "1 when the tenant's windowed p99 certified interval width exceeds the ceiling",
+                labels,
+            ),
+            armed: false,
+        };
+        self.metrics.insert(tenant, t);
+        t
+    }
+
+    fn corpus_tenant(&mut self, reg: &mut Registry, corpus: u32) -> CorpusTenant {
+        if let Some(t) = self.corpora.get(&corpus) {
+            return *t;
+        }
+        let labels = Labels::tenant(Tenant::Corpus(corpus));
+        let t = CorpusTenant {
+            searches: reg.counter(
+                "sinkhorn_tenant_searches_total",
+                "Off-thread searches completed, per corpus tenant",
+                labels,
+            ),
+            search_us: reg.histogram(
+                "sinkhorn_tenant_search_us",
+                "Pure search walltime in microseconds, per corpus tenant",
+                labels,
+            ),
+            recall_matched: reg.counter(
+                "sinkhorn_tenant_recall_matched_total",
+                "Probe-confirmed top-k entries, per corpus tenant",
+                labels,
+            ),
+            recall_expected: reg.counter(
+                "sinkhorn_tenant_recall_expected_total",
+                "Probe-compared top-k entries, per corpus tenant",
+                labels,
+            ),
+            recall_breach: reg.gauge(
+                "sinkhorn_slo_recall_breach",
+                "1 when the tenant's windowed probed recall is below the policy floor",
+                labels,
+            ),
+        };
+        self.corpora.insert(corpus, t);
+        t
+    }
+
+    /// Record one served query. Returns nothing; the bad-event decision
+    /// (missed deadline OR latency over the policy objective) happens
+    /// here so it is counted in the same window the query landed in.
+    pub fn on_query(&mut self, reg: &mut Registry, tenant: u32, latency_us: u64, missed: bool) {
+        let t = self.metric_tenant(reg, tenant);
+        reg.add(t.queries, 1);
+        reg.observe(t.latency, latency_us);
+        if missed {
+            reg.add(t.misses, 1);
+        }
+        let over = match self.policy {
+            Some(p) => latency_us as u128 > p.p99_latency.as_micros(),
+            None => false,
+        };
+        if missed || over {
+            reg.add(t.bad, 1);
+        }
+    }
+
+    /// Record one certified outcome's interval width (ppb-quantized).
+    pub fn on_outcome(&mut self, reg: &mut Registry, tenant: u32, width_ppb: u64) {
+        let t = self.metric_tenant(reg, tenant);
+        reg.observe(t.width, width_ppb);
+    }
+
+    /// Record one completed off-thread search (and its optional recall
+    /// probe) for a corpus tenant.
+    pub fn on_search(
+        &mut self,
+        reg: &mut Registry,
+        corpus: u32,
+        search_us: u64,
+        probe: Option<(u64, u64)>,
+    ) {
+        let t = self.corpus_tenant(reg, corpus);
+        reg.add(t.searches, 1);
+        reg.observe(t.search_us, search_us);
+        if let Some((matched, expected)) = probe {
+            reg.add(t.recall_matched, matched);
+            reg.add(t.recall_expected, expected);
+        }
+    }
+
+    /// Evaluate every tenant against the policy: refresh the burn-rate
+    /// and breach gauges and the armed set. Cheap — O(tenants × ring) —
+    /// and idempotent; the engine calls it once per message-loop turn.
+    pub fn evaluate(&mut self, reg: &mut Registry) {
+        let Some(policy) = self.policy else { return };
+        for t in self.metrics.values_mut() {
+            let fast_bad = reg.counter_recent(t.bad, 2);
+            let fast_total = reg.counter_recent(t.queries, 2);
+            let slow_bad = reg.counter_windowed(t.bad);
+            let slow_total = reg.counter_windowed(t.queries);
+            let fast = burn_rate(fast_bad, fast_total, policy.deadline_miss_budget);
+            let slow = burn_rate(slow_bad, slow_total, policy.deadline_miss_budget);
+            t.armed = fast >= policy.fast_burn || slow >= policy.slow_burn;
+            reg.set(t.fast_gauge, fast);
+            reg.set(t.slow_gauge, slow);
+            reg.set(t.armed_gauge, if t.armed { 1.0 } else { 0.0 });
+            let width_p99 = reg.histogram_windowed(t.width).quantile(0.99) as F * 1e-9;
+            let breach = policy.interval_width_ceiling.is_finite()
+                && width_p99 > policy.interval_width_ceiling;
+            reg.set(t.width_breach, if breach { 1.0 } else { 0.0 });
+        }
+        for t in self.corpora.values() {
+            let matched = reg.counter_windowed(t.recall_matched);
+            let expected = reg.counter_windowed(t.recall_expected);
+            let breach = expected > 0 && (matched as f64 / expected as f64) < policy.recall_floor;
+            reg.set(t.recall_breach, if breach { 1.0 } else { 0.0 });
+        }
+    }
+
+    /// The iteration cap to shed an armed tenant's batch to, or `None`
+    /// when the tenant is compliant (or the monitor is alert-only).
+    pub fn shed_cap(&self, tenant: u32) -> Option<usize> {
+        let policy = self.policy.as_ref()?;
+        let cap = policy.shed_iterations?;
+        self.metrics.get(&tenant).filter(|t| t.armed).map(|_| cap)
+    }
+
+    /// Build the windowed per-tenant report.
+    pub fn report(&self, reg: &Registry) -> TelemetryReport {
+        let policy = self.policy;
+        let tenants = self
+            .metrics
+            .iter()
+            .map(|(&id, t)| {
+                let queries = reg.counter_windowed(t.queries);
+                let misses = reg.counter_windowed(t.misses);
+                let bad = reg.counter_windowed(t.bad);
+                let lat = reg.histogram_windowed(t.latency);
+                let width = reg.histogram_windowed(t.width);
+                TenantSlo {
+                    tenant: Tenant::Metric(id).label(),
+                    queries,
+                    deadline_misses: misses,
+                    miss_rate: rate(misses, queries),
+                    bad_rate: rate(bad, queries),
+                    p50_latency_us: lat.quantile(0.5),
+                    p99_latency_us: lat.quantile(0.99),
+                    interval_width_p99: width.quantile(0.99) as F * 1e-9,
+                    fast_burn: reg.gauge_value(t.fast_gauge),
+                    slow_burn: reg.gauge_value(t.slow_gauge),
+                    armed: t.armed,
+                }
+            })
+            .collect();
+        let corpora = self
+            .corpora
+            .iter()
+            .map(|(&id, t)| {
+                let searches = reg.counter_windowed(t.searches);
+                let matched = reg.counter_windowed(t.recall_matched);
+                let expected = reg.counter_windowed(t.recall_expected);
+                CorpusSlo {
+                    tenant: Tenant::Corpus(id).label(),
+                    searches,
+                    p99_search_us: reg.histogram_windowed(t.search_us).quantile(0.99),
+                    recall: if expected == 0 { 1.0 } else { matched as f64 / expected as f64 },
+                    recall_breach: reg.gauge_value(t.recall_breach) > 0.5,
+                }
+            })
+            .collect();
+        TelemetryReport { windows: reg.window_count(), policy, tenants, corpora }
+    }
+}
+
+fn rate(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+fn burn_rate(bad: u64, total: u64, budget: f64) -> f64 {
+    if total == 0 || budget <= 0.0 {
+        0.0
+    } else {
+        (bad as f64 / total as f64) / budget
+    }
+}
+
+/// One metric tenant's windowed SLO status.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSlo {
+    pub tenant: String,
+    pub queries: u64,
+    pub deadline_misses: u64,
+    pub miss_rate: f64,
+    pub bad_rate: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub interval_width_p99: F,
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    pub armed: bool,
+}
+
+/// One corpus tenant's windowed retrieval status.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorpusSlo {
+    pub tenant: String,
+    pub searches: u64,
+    pub p99_search_us: u64,
+    pub recall: f64,
+    pub recall_breach: bool,
+}
+
+/// The windowed per-tenant SLO report ("over the last minute" view).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryReport {
+    /// Ring size the rollups cover.
+    pub windows: usize,
+    /// The active policy (None = instruments only, no alerting).
+    pub policy: Option<SloPolicy>,
+    pub tenants: Vec<TenantSlo>,
+    pub corpora: Vec<CorpusSlo>,
+}
+
+impl fmt::Display for TelemetryReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "slo_window(n={})", self.windows)?;
+        for t in &self.tenants {
+            write!(
+                f,
+                " {}(q={} miss={} miss_rate={:.3} lat_us(p50~{}, p99~{}) \
+                 burn(fast={:.2}, slow={:.2}){})",
+                t.tenant,
+                t.queries,
+                t.deadline_misses,
+                t.miss_rate,
+                t.p50_latency_us,
+                t.p99_latency_us,
+                t.fast_burn,
+                t.slow_burn,
+                if t.armed { " ARMED" } else { "" },
+            )?;
+        }
+        for c in &self.corpora {
+            write!(
+                f,
+                " {}(s={} search_p99_us~{} recall={:.3}{})",
+                c.tenant,
+                c.searches,
+                c.p99_search_us,
+                c.recall,
+                if c.recall_breach { " BREACH" } else { "" },
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn windowed_registry() -> Registry {
+        Registry::new(Some((Duration::from_secs(60), 4)))
+    }
+
+    #[test]
+    fn policy_validation_names_the_knob() {
+        SloPolicy::default().validate().unwrap();
+        let base = SloPolicy::default();
+        for (policy, knob) in [
+            (SloPolicy { p99_latency: Duration::ZERO, ..base }, "p99_latency"),
+            (SloPolicy { deadline_miss_budget: 0.0, ..base }, "deadline_miss_budget"),
+            (SloPolicy { deadline_miss_budget: 1.5, ..base }, "deadline_miss_budget"),
+            (SloPolicy { recall_floor: -0.1, ..base }, "recall_floor"),
+            (SloPolicy { interval_width_ceiling: 0.0, ..base }, "interval_width_ceiling"),
+            (SloPolicy { fast_burn: 0.0, ..base }, "fast_burn"),
+            (SloPolicy { slow_burn: f64::NAN, ..base }, "slow_burn"),
+            (SloPolicy { shed_iterations: Some(0), ..base }, "shed_iterations"),
+        ] {
+            let err = policy.validate().unwrap_err();
+            assert!(err.contains(knob), "expected {knob} in: {err}");
+        }
+    }
+
+    #[test]
+    fn breaching_tenant_arms_while_compliant_tenant_stays_clear() {
+        let mut reg = windowed_registry();
+        let mut mon = SloMonitor::new(Some(SloPolicy {
+            p99_latency: Duration::from_millis(10),
+            deadline_miss_budget: 0.01,
+            ..SloPolicy::default()
+        }));
+        // Tenant 0 misses every deadline; tenant 1 is fast and clean.
+        for _ in 0..20 {
+            mon.on_query(&mut reg, 0, 50_000, true);
+            mon.on_query(&mut reg, 1, 100, false);
+        }
+        mon.evaluate(&mut reg);
+        assert_eq!(mon.shed_cap(0), Some(SloPolicy::default().shed_iterations.unwrap()));
+        assert_eq!(mon.shed_cap(1), None);
+        let report = mon.report(&reg);
+        let t0 = report.tenants.iter().find(|t| t.tenant == "m0").unwrap();
+        let t1 = report.tenants.iter().find(|t| t.tenant == "m1").unwrap();
+        assert!(t0.armed && t0.fast_burn >= 8.0, "{t0:?}");
+        assert!((t0.miss_rate - 1.0).abs() < 1e-12);
+        assert!(!t1.armed && t1.fast_burn == 0.0, "{t1:?}");
+        assert!(report.to_string().contains("ARMED"));
+    }
+
+    #[test]
+    fn slow_latency_without_deadlines_still_burns() {
+        // Bad events are not just deadline misses: sustained latency over
+        // the objective burns the budget too.
+        let mut reg = windowed_registry();
+        let mut mon = SloMonitor::new(Some(SloPolicy {
+            p99_latency: Duration::from_micros(100),
+            ..SloPolicy::default()
+        }));
+        for _ in 0..10 {
+            mon.on_query(&mut reg, 3, 10_000, false);
+        }
+        mon.evaluate(&mut reg);
+        assert!(mon.shed_cap(3).is_some());
+    }
+
+    #[test]
+    fn alert_only_policy_never_sheds() {
+        let mut reg = windowed_registry();
+        let mut mon = SloMonitor::new(Some(SloPolicy {
+            p99_latency: Duration::from_micros(1),
+            shed_iterations: None,
+            ..SloPolicy::default()
+        }));
+        for _ in 0..10 {
+            mon.on_query(&mut reg, 0, 1000, true);
+        }
+        mon.evaluate(&mut reg);
+        assert_eq!(mon.shed_cap(0), None);
+        let report = mon.report(&reg);
+        assert!(report.tenants[0].armed, "still alerts");
+    }
+
+    #[test]
+    fn disarm_after_the_window_slides_clean() {
+        let mut reg = Registry::new(Some((Duration::from_millis(20), 3)));
+        let mut mon = SloMonitor::new(Some(SloPolicy {
+            p99_latency: Duration::from_micros(10),
+            ..SloPolicy::default()
+        }));
+        for _ in 0..10 {
+            mon.on_query(&mut reg, 0, 1000, true);
+        }
+        mon.evaluate(&mut reg);
+        assert!(mon.shed_cap(0).is_some(), "armed under load");
+        std::thread::sleep(Duration::from_millis(90));
+        mon.evaluate(&mut reg);
+        assert_eq!(mon.shed_cap(0), None, "bad events aged out of the ring");
+        let report = mon.report(&reg);
+        assert_eq!(report.tenants[0].queries, 0, "windowed view decayed");
+        assert_eq!(report.tenants[0].deadline_misses, 0);
+    }
+
+    #[test]
+    fn recall_floor_breach_is_gauge_only() {
+        let mut reg = windowed_registry();
+        let mut mon = SloMonitor::new(Some(SloPolicy {
+            recall_floor: 0.9,
+            ..SloPolicy::default()
+        }));
+        mon.on_search(&mut reg, 2, 500, Some((4, 10)));
+        mon.evaluate(&mut reg);
+        let report = mon.report(&reg);
+        let c = report.corpora.iter().find(|c| c.tenant == "c2").unwrap();
+        assert!((c.recall - 0.4).abs() < 1e-12);
+        assert!(c.recall_breach);
+        assert_eq!(mon.shed_cap(2), None, "recall breaches never arm shedding");
+        assert!(report.to_string().contains("BREACH"));
+    }
+}

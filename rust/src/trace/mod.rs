@@ -443,6 +443,19 @@ impl TraceSink {
             .collect()
     }
 
+    /// Full per-(stage, tenant) duration histograms, sorted by stage then
+    /// tenant. The PR 10 telemetry exporter renders these as cumulative
+    /// `le`-bucketed Prometheus series, which needs the raw buckets, not
+    /// the pre-digested [`StageRow`] quantiles.
+    pub fn stage_histograms(&self) -> Vec<((&'static str, Tenant), Log2Histogram)> {
+        self.collect();
+        let c = self.collected.lock().unwrap_or_else(|p| p.into_inner());
+        c.stages
+            .iter()
+            .map(|((stage, tenant), h)| ((stage.name(), *tenant), h.clone()))
+            .collect()
+    }
+
     /// All retained sampled spans (most recent `RETAINED_SPANS`), oldest
     /// first. Feed a per-trace subset to [`chrome_trace`] for Perfetto.
     pub fn sampled_spans(&self) -> Vec<Span> {

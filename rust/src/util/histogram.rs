@@ -63,13 +63,18 @@ impl Log2Histogram {
     /// Index of the bucket holding the `q`-quantile sample, or `None` when
     /// the histogram is empty or `q` exceeds 1.0 past the last bucket.
     ///
-    /// The target rank is `ceil(q * count)`, matching the PR 7 walk: the
-    /// first bucket whose cumulative count reaches the rank wins.
+    /// The target rank is `ceil(q * count)`, floored at rank 1, matching
+    /// the PR 7 walk: the first bucket whose cumulative count reaches the
+    /// rank wins. The rank-1 floor keeps `q = 0.0` honest: without it the
+    /// target rank is 0 and the very first bucket satisfies `seen >= 0`
+    /// even when bucket 0 is empty, so `quantile(0.0)` would report bucket
+    /// 0's edge rather than the bucket actually holding the smallest
+    /// sample.
     pub fn quantile_bucket(&self, q: f64) -> Option<usize> {
         if self.count == 0 {
             return None;
         }
-        let target = (q * self.count as f64).ceil() as u64;
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
@@ -78,6 +83,18 @@ impl Log2Histogram {
             }
         }
         None
+    }
+
+    /// Fold another histogram into this one: bucket-wise count add, total
+    /// count sum, max of observed maxima. Used by the sliding-window
+    /// rollups (PR 10) to answer "over the last minute" from a ring of
+    /// per-window histograms, and by the stage-row fold in `trace`.
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (dst, src) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *dst += *src;
+        }
+        self.count += other.count;
+        self.max = self.max.max(other.max);
     }
 
     /// Clamped `q`-quantile in the sample's own units: the upper edge of
@@ -155,6 +172,63 @@ mod tests {
         let mut h = Log2Histogram::new();
         h.record(100); // ppb value, bucket 6
         assert_eq!(h.quantile_bucket(0.5), Some(6));
+    }
+
+    #[test]
+    fn quantile_zero_reports_smallest_occupied_bucket() {
+        // Regression: rank ceil(0.0 * count) == 0 used to let the empty
+        // bucket 0 satisfy `seen >= target`, reporting edge 2 for a
+        // histogram whose smallest sample lives in bucket 6.
+        let mut h = Log2Histogram::new();
+        h.record(100); // bucket 6
+        h.record(1000); // bucket 9
+        assert_eq!(h.quantile_bucket(0.0), Some(6));
+        assert_eq!(h.quantile(0.0), 128);
+        // Still None when empty.
+        assert_eq!(Log2Histogram::new().quantile_bucket(0.0), None);
+    }
+
+    #[test]
+    fn merge_adds_buckets_counts_and_maxes() {
+        let mut a = Log2Histogram::new();
+        a.record(100);
+        a.record(3);
+        let mut b = Log2Histogram::new();
+        b.record(1000);
+        b.record(100);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.observed_max(), 1000);
+        assert_eq!(a.buckets()[Log2Histogram::bucket_of(100)], 2);
+        assert_eq!(a.buckets()[Log2Histogram::bucket_of(3)], 1);
+        assert_eq!(a.buckets()[Log2Histogram::bucket_of(1000)], 1);
+        // Quantiles answer over the merged population.
+        assert_eq!(a.quantile(1.0), 1000);
+    }
+
+    #[test]
+    fn merge_empty_into_empty_stays_empty() {
+        let mut a = Log2Histogram::new();
+        a.merge(&Log2Histogram::new());
+        assert!(a.is_empty());
+        assert_eq!(a.observed_max(), 0);
+        assert_eq!(a.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_preserves_bucket_31_clamp() {
+        let mut a = Log2Histogram::new();
+        a.record(u64::MAX); // clamped into bucket 31
+        let mut b = Log2Histogram::new();
+        b.record(u64::MAX - 1); // also bucket 31
+        a.merge(&b);
+        assert_eq!(a.buckets()[31], 2);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.observed_max(), u64::MAX);
+        // Bucket 31's nominal edge is 1<<32; with samples above it the
+        // min-with-max clamp keeps the edge (PR 7 semantics preserved
+        // across merge).
+        assert_eq!(a.quantile(1.0), 1u64 << 32);
     }
 
     #[test]

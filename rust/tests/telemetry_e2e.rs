@@ -1,0 +1,305 @@
+//! Integration: the PR 10 telemetry stack end-to-end — live Prometheus
+//! scrapes over a real workload, windowed rollup decay, counter
+//! monotonicity under concurrent traffic, and burn-rate-driven shedding
+//! arming for a breaching tenant while a compliant tenant stays unshed.
+
+use sinkhorn_rs::coordinator::{
+    BatcherConfig, CoordinatorConfig, CorpusId, DistanceService, MetricId, Query,
+    RetrievalQuery,
+};
+use sinkhorn_rs::metric::RandomMetric;
+use sinkhorn_rs::simplex::{seeded_rng, Histogram};
+use sinkhorn_rs::sinkhorn::SolveBudget;
+use sinkhorn_rs::telemetry::{http_get, parse_exposition, SloPolicy, TelemetryConfig};
+use sinkhorn_rs::util::json::Json;
+use std::time::{Duration, Instant};
+
+const D: usize = 12;
+const SCRAPE_TIMEOUT: Duration = Duration::from_secs(5);
+
+fn telemetry_service(
+    max_batch: usize,
+    window: Duration,
+    windows: usize,
+    slo: Option<SloPolicy>,
+) -> DistanceService {
+    let mut config = CoordinatorConfig::cpu_only();
+    config.batcher = BatcherConfig {
+        max_batch,
+        max_delay: Duration::from_millis(1),
+        ..BatcherConfig::default()
+    };
+    config.cpu_iterations = 60;
+    config.telemetry = Some(TelemetryConfig {
+        bind: "127.0.0.1:0".into(),
+        window,
+        windows,
+        slo,
+    });
+    DistanceService::start(config).unwrap()
+}
+
+fn register_metric(svc: &DistanceService, id: u32, seed: u64) {
+    let mut rng = seeded_rng(seed);
+    let m = RandomMetric::new(D).sample(&mut rng);
+    svc.register_metric(MetricId(id), m).unwrap();
+}
+
+fn pair(rng: &mut sinkhorn_rs::rng::Rng) -> (Histogram, Histogram) {
+    (Histogram::sample_uniform(D, rng), Histogram::sample_uniform(D, rng))
+}
+
+#[test]
+fn telemetry_off_by_default_serves_without_a_scrape_server() {
+    let mut config = CoordinatorConfig::cpu_only();
+    config.batcher = BatcherConfig {
+        max_batch: 4,
+        max_delay: Duration::from_millis(1),
+        ..BatcherConfig::default()
+    };
+    let svc = DistanceService::start(config).unwrap();
+    assert!(svc.scrape_addr().is_none(), "no telemetry config, no server");
+    register_metric(&svc, 0, 1);
+    let mut rng = seeded_rng(2);
+    for _ in 0..4 {
+        let (r, c) = pair(&mut rng);
+        svc.distance(Query::new(MetricId(0), 9.0, r, c)).unwrap();
+    }
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.queries, 4);
+    assert_eq!(snap.errors, 0);
+    svc.shutdown();
+}
+
+/// The monotonicity contract documented on `StatsSnapshot`: every plain
+/// counter field is nondecreasing across successive snapshots taken
+/// while client threads are actively submitting.
+#[test]
+fn snapshot_counters_are_monotone_under_live_traffic() {
+    let svc = telemetry_service(4, Duration::from_millis(50), 4, None);
+    register_metric(&svc, 0, 3);
+    let mut handles = Vec::new();
+    for t in 0..3u64 {
+        let client = svc.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = seeded_rng(10 + t);
+            for _ in 0..30 {
+                let (r, c) = pair(&mut rng);
+                client.distance(Query::new(MetricId(0), 9.0, r, c)).unwrap();
+            }
+        }));
+    }
+    let mut prev: Option<Vec<u64>> = None;
+    for _ in 0..40 {
+        let s = svc.stats().unwrap();
+        let counters = vec![
+            s.queries,
+            s.batches,
+            s.xla_batches,
+            s.cpu_batches,
+            s.errors,
+            s.warm_hits,
+            s.warm_misses,
+            s.retrievals,
+            s.deadline_misses,
+            s.budget_sheds,
+            s.certified_solves,
+        ];
+        if let Some(prev) = &prev {
+            for (i, (a, b)) in prev.iter().zip(&counters).enumerate() {
+                assert!(b >= a, "counter #{i} regressed: {a} -> {b}");
+            }
+        }
+        prev = Some(counters);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.queries, 90);
+    assert_eq!(snap.errors, 0);
+    svc.shutdown();
+}
+
+/// Satellite 4's live half: after a two-corpus workload, a real HTTP
+/// scrape of `/metrics` parses as Prometheus v0.0.4 and carries the
+/// per-tenant series; `/healthz` and `/snapshot` serve valid JSON;
+/// `/slo` serves the windowed report.
+#[test]
+fn live_metrics_scrape_serves_per_tenant_series() {
+    let svc = telemetry_service(2, Duration::from_secs(10), 4, None);
+    let addr = svc.scrape_addr().expect("telemetry on binds a scrape server");
+    register_metric(&svc, 0, 4);
+    register_metric(&svc, 1, 5);
+    let mut rng = seeded_rng(6);
+    for id in [0u32, 1] {
+        let entries: Vec<Histogram> =
+            (0..24).map(|_| Histogram::sample_uniform(D, &mut rng)).collect();
+        svc.register_corpus(CorpusId(id), MetricId(id), 9.0, entries).unwrap();
+    }
+    for id in [0u32, 1] {
+        for _ in 0..4 {
+            let (r, c) = pair(&mut rng);
+            svc.distance(Query::new(MetricId(id), 9.0, r, c)).unwrap();
+        }
+        for _ in 0..3 {
+            let q = Histogram::sample_uniform(D, &mut rng);
+            let out = svc
+                .retrieve(RetrievalQuery { corpus: CorpusId(id), r: q, k: 4 })
+                .unwrap();
+            assert_eq!(out.hits.len(), 4);
+        }
+    }
+
+    let (status, body) = http_get(addr, "/metrics", SCRAPE_TIMEOUT).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let lines = parse_exposition(&body).unwrap();
+    assert!(!lines.is_empty());
+    for needle in [
+        "sinkhorn_queries_total 8",
+        "sinkhorn_tenant_queries_total{tenant=\"m0\"} 4",
+        "sinkhorn_tenant_queries_total{tenant=\"m1\"} 4",
+        "sinkhorn_tenant_searches_total{tenant=\"c0\"} 3",
+        "sinkhorn_tenant_searches_total{tenant=\"c1\"} 3",
+        "sinkhorn_corpus_searches_total{tenant=\"c0\"} 3",
+        "sinkhorn_corpus_searches_total{tenant=\"c1\"} 3",
+        "sinkhorn_tenant_latency_us_bucket{tenant=\"m0\",le=\"+Inf\"} 4",
+        "sinkhorn_retrievals_total 6",
+    ] {
+        assert!(body.contains(needle), "missing `{needle}` in:\n{body}");
+    }
+
+    let (status, health) = http_get(addr, "/healthz", SCRAPE_TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    let health = Json::parse(&health).unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    let retrieval = health.get("retrieval").expect("retrieval block");
+    assert_eq!(retrieval.get("spawned").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        retrieval.get("corpora").and_then(Json::as_array).map(|a| a.len()),
+        Some(2)
+    );
+
+    let (status, snap) = http_get(addr, "/snapshot", SCRAPE_TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    let snap = Json::parse(&snap).unwrap();
+    assert_eq!(snap.get("queries").and_then(Json::as_f64), Some(8.0));
+    assert_eq!(snap.get("retrievals").and_then(Json::as_f64), Some(6.0));
+
+    let (status, slo) = http_get(addr, "/slo", SCRAPE_TIMEOUT).unwrap();
+    assert_eq!(status, 200);
+    assert!(slo.contains("slo_window(n=4)"), "{slo}");
+    assert!(slo.contains("m0(q=4"), "{slo}");
+    assert!(slo.contains("c1(s=3"), "{slo}");
+
+    let (status, _) = http_get(addr, "/nope", SCRAPE_TIMEOUT).unwrap();
+    assert_eq!(status, 404);
+    svc.shutdown();
+}
+
+/// Acceptance criterion: the windowed deadline-miss rate demonstrably
+/// decays to zero within N windows after the misses stop.
+#[test]
+fn windowed_miss_rate_decays_after_load_stops() {
+    let svc = telemetry_service(
+        1,
+        Duration::from_millis(60),
+        3,
+        Some(SloPolicy::default()),
+    );
+    let addr = svc.scrape_addr().unwrap();
+    register_metric(&svc, 0, 7);
+    let mut rng = seeded_rng(8);
+    for _ in 0..10 {
+        let (r, c) = pair(&mut rng);
+        svc.distance(
+            Query::new(MetricId(0), 9.0, r, c)
+                .with_budget(SolveBudget::Deadline(Instant::now())),
+        )
+        .unwrap();
+    }
+    let (_, before) = http_get(addr, "/slo", SCRAPE_TIMEOUT).unwrap();
+    assert!(
+        before.contains("miss_rate=1.000"),
+        "expected a saturated windowed miss rate, got: {before}"
+    );
+    // Let every ring slot age out (3 windows x 60ms, plus slack), then
+    // the same windowed view must read clean — cumulative totals keep
+    // the misses, the rollups forget them.
+    std::thread::sleep(Duration::from_millis(400));
+    let (_, after) = http_get(addr, "/slo", SCRAPE_TIMEOUT).unwrap();
+    assert!(
+        after.contains("m0(q=0 miss=0 miss_rate=0.000"),
+        "windowed miss rate should decay to 0, got: {after}"
+    );
+    let snap = svc.stats().unwrap();
+    assert_eq!(snap.deadline_misses, 10, "cumulative counters never decay");
+    svc.shutdown();
+}
+
+/// Acceptance criterion: a tenant breaching its latency SLO trips the
+/// burn-rate gauges and arms policy-driven shedding — its next batches
+/// run under the policy's iteration cap — while a compliant tenant on
+/// the same service keeps its full iteration budget.
+#[test]
+fn breaching_tenant_is_shed_while_compliant_tenant_is_not() {
+    const CAP: usize = 8;
+    // The latency objective is deliberately generous: the breaching
+    // tenant's bad events come from its expired deadlines alone, so a
+    // slow CI machine can never accidentally arm the compliant tenant.
+    let policy = SloPolicy {
+        p99_latency: Duration::from_secs(1),
+        shed_iterations: Some(CAP),
+        ..SloPolicy::default()
+    };
+    let svc =
+        telemetry_service(1, Duration::from_millis(200), 4, Some(policy));
+    let addr = svc.scrape_addr().unwrap();
+    register_metric(&svc, 0, 9);
+    register_metric(&svc, 1, 10);
+    let mut rng = seeded_rng(11);
+
+    // Tenant m0 burns its error budget: every query carries an already
+    // expired deadline, so each served answer is a bad event.
+    for _ in 0..10 {
+        let (r, c) = pair(&mut rng);
+        svc.distance(
+            Query::new(MetricId(0), 9.0, r, c)
+                .with_budget(SolveBudget::Deadline(Instant::now())),
+        )
+        .unwrap();
+    }
+
+    // m0's next unbounded query is shed to the policy cap...
+    let (r, c) = pair(&mut rng);
+    let shed = svc.distance(Query::new(MetricId(0), 9.0, r, c)).unwrap();
+    assert!(
+        shed.outcome.iterations <= CAP,
+        "armed tenant should run under the {CAP}-iteration cap, ran {}",
+        shed.outcome.iterations
+    );
+    // ...while the compliant tenant m1 keeps the full budget.
+    let (r, c) = pair(&mut rng);
+    let clean = svc.distance(Query::new(MetricId(1), 9.0, r, c)).unwrap();
+    assert!(
+        clean.outcome.iterations > CAP,
+        "compliant tenant must not be shed, ran {}",
+        clean.outcome.iterations
+    );
+
+    let (_, metrics) = http_get(addr, "/metrics", SCRAPE_TIMEOUT).unwrap();
+    assert!(
+        metrics.contains("sinkhorn_slo_armed{tenant=\"m0\"} 1"),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("sinkhorn_slo_armed{tenant=\"m1\"} 0"),
+        "{metrics}"
+    );
+    let (_, report) = http_get(addr, "/slo", SCRAPE_TIMEOUT).unwrap();
+    assert!(report.contains("ARMED"), "{report}");
+    let snap = svc.stats().unwrap();
+    assert!(snap.budget_sheds >= 1, "shed batches are counted");
+    svc.shutdown();
+}
